@@ -1,0 +1,101 @@
+//! Elastic serving under a bursty load pattern — the paper's deployment
+//! story (§1): one anchor checkpoint, precision chosen *per batch* from the
+//! current queue depth.
+//!
+//! The workload alternates calm phases (trickle of requests) with load
+//! spikes; the report shows the precision ladder engaging during spikes and
+//! the latency/throughput profile per phase.
+//!
+//! Run: `cargo run --release --example elastic_serving`
+
+use mfqat::coordinator::ElasticEngine;
+use mfqat::data::{Corpus, CorpusConfig};
+use mfqat::formats::ElementFormat;
+use mfqat::model::ParamSet;
+use mfqat::runtime::{ArtifactSet, Runtime};
+use mfqat::server::{Policy, Server, ServerConfig};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    mfqat::util::logging::init();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let arts_dir = root.join("artifacts/tiny");
+    let manifest = mfqat::runtime::Manifest::load(&arts_dir)?;
+    let width = manifest.seq_len + 1;
+
+    // Aggressive ladder so the tiny demo visibly degrades under bursts.
+    let ladder = Policy::Ladder(vec![
+        (2, ElementFormat::int(8)),
+        (12, ElementFormat::int(6)),
+        (usize::MAX, ElementFormat::int(4)),
+    ]);
+    let (server, client) = Server::start(
+        width,
+        move || {
+            let rt = Runtime::cpu()?;
+            let arts = ArtifactSet::open(&arts_dir)?;
+            let params = ParamSet::init(&arts.manifest, 7);
+            let ck = params.to_anchor_checkpoint(&arts.manifest, ElementFormat::int(8))?;
+            Ok(ElasticEngine::from_parts(rt, arts, ck, ElementFormat::int(8), 128 << 20))
+        },
+        ServerConfig {
+            policy: ladder,
+            gather_window: Duration::from_millis(2),
+        },
+    )?;
+
+    let corpus = Corpus::generate(CorpusConfig {
+        width,
+        pretrain_sequences: 8,
+        qat_sequences: 8,
+        val_sequences: 64,
+        ..Default::default()
+    });
+
+    // Phased workload: calm → spike → calm → bigger spike.
+    let phases: &[(&str, usize, Duration)] = &[
+        ("calm", 8, Duration::from_millis(30)),
+        ("spike", 48, Duration::from_millis(0)),
+        ("calm", 8, Duration::from_millis(30)),
+        ("surge", 96, Duration::from_millis(0)),
+    ];
+    println!("{:<8} {:>6} {:>9} {:>9} {:>16}", "phase", "reqs", "p50 lat", "p95 lat", "precision mix");
+    for (name, n, pacing) in phases {
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..*n {
+            rxs.push(client.submit(&corpus.val[i % corpus.val.len()], None)?);
+            if !pacing.is_zero() {
+                std::thread::sleep(*pacing);
+            }
+        }
+        let mut lats: Vec<f64> = Vec::new();
+        let mut mix = std::collections::BTreeMap::<String, usize>::new();
+        for rx in rxs {
+            let resp = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+            lats.push(resp.latency.as_secs_f64());
+            *mix.entry(resp.format.name()).or_insert(0) += 1;
+        }
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = lats[lats.len() / 2];
+        let p95 = lats[(lats.len() as f64 * 0.95) as usize];
+        let mix_s: Vec<String> = mix.iter().map(|(f, c)| format!("{f}:{c}")).collect();
+        println!(
+            "{:<8} {:>6} {:>7.1}ms {:>7.1}ms {:>16}   ({:.1} req/s)",
+            name,
+            n,
+            p50 * 1e3,
+            p95 * 1e3,
+            mix_s.join(" "),
+            *n as f64 / t0.elapsed().as_secs_f64(),
+        );
+    }
+
+    let metrics = server.metrics.lock().unwrap().clone();
+    println!("\nserver totals: {}", metrics.summary());
+    println!("anchor→target conversions: {} (cache does the rest)", metrics.conversions);
+    drop(client);
+    server.shutdown();
+    Ok(())
+}

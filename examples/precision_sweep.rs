@@ -1,0 +1,90 @@
+//! Precision sweep: storage / accuracy / conversion-cost trade-off table
+//! for a single anchor checkpoint — the capacity-planning view an operator
+//! of an elastic fleet would want.
+//!
+//! For every MXINT and MXFP target derivable from the corresponding 8-bit
+//! anchor, reports: packed weight bytes, bits/element, SS conversion time,
+//! dequant time, and validation perplexity.
+//!
+//! Run: `cargo run --release --example precision_sweep`
+
+use mfqat::data::{Corpus, CorpusConfig};
+use mfqat::eval::{perplexity, ParamLiterals};
+use mfqat::formats::{ElementFormat, MxFormat};
+use mfqat::model::ParamSet;
+use mfqat::runtime::{ArtifactSet, Runtime};
+use mfqat::tensor::MxTensor;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    mfqat::util::logging::init();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let rt = Runtime::cpu()?;
+    let arts = ArtifactSet::open(&root.join("artifacts/tiny"))?;
+    let m = arts.manifest.clone();
+    let corpus = Corpus::generate(CorpusConfig {
+        width: m.seq_len + 1,
+        ..Default::default()
+    });
+    let params = ParamSet::init(&m, 99);
+
+    println!(
+        "{:<14} {:>12} {:>10} {:>12} {:>12} {:>10}",
+        "format", "weights(KB)", "bits/elem", "SS convert", "dequant", "val ppl"
+    );
+    for (anchor, targets) in [
+        (ElementFormat::int(8), ElementFormat::all_int()),
+        (ElementFormat::fp_from_bits(8), ElementFormat::all_fp()),
+    ] {
+        // Quantize the decoder linears once into the anchor format.
+        let quant_idx = m.quant_indices();
+        let anchored: Vec<MxTensor> = quant_idx
+            .iter()
+            .map(|&i| {
+                let t = &params.tensors[i];
+                MxTensor::quantize(&t.data, &t.shape, MxFormat::new(anchor, m.block_size))
+            })
+            .collect::<anyhow::Result<_>>()?;
+
+        for target in targets.iter().rev() {
+            // SS conversion cost (anchor -> target, all decoder weights).
+            let t_conv = std::time::Instant::now();
+            let converted: Vec<MxTensor> = anchored
+                .iter()
+                .map(|a| {
+                    if *target == anchor {
+                        Ok(a.clone())
+                    } else {
+                        a.slice_and_scale(*target)
+                    }
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let conv_ms = t_conv.elapsed().as_secs_f64() * 1e3;
+
+            // Dequant cost + serving params.
+            let t_deq = std::time::Instant::now();
+            let mut served = params.clone();
+            for (&i, q) in quant_idx.iter().zip(&converted) {
+                served.tensors[i] =
+                    mfqat::tensor::Tensor::new(&q.shape.clone(), q.dequantize())?;
+            }
+            let deq_ms = t_deq.elapsed().as_secs_f64() * 1e3;
+
+            let bytes: usize = converted.iter().map(|q| q.storage_bytes()).sum();
+            let elems: usize = converted.iter().map(|q| q.len()).sum();
+            let ppl = perplexity(&rt, &arts, &ParamLiterals::build(&served)?, &corpus.val)?;
+            println!(
+                "{:<14} {:>12} {:>10.2} {:>9.1}ms {:>9.1}ms {:>10.3}",
+                target.long_name(),
+                bytes / 1024,
+                bytes as f64 * 8.0 / elems as f64,
+                conv_ms,
+                deq_ms,
+                ppl
+            );
+        }
+        println!();
+    }
+    println!("(one {}-anchor on disk serves every row above it)", ElementFormat::int(8));
+    Ok(())
+}

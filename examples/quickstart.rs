@@ -1,0 +1,73 @@
+//! Quickstart: the elastic-inference workflow in ~60 lines.
+//!
+//! 1. Load the AOT artifacts (built once by `make artifacts`).
+//! 2. Build a model, store it as ONE MXINT8 anchor checkpoint.
+//! 3. Derive MXINT{6,4,3,2} serving weights at runtime via Slice-and-Scale —
+//!    no FP32 weights, no retraining — and score a batch at each precision.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mfqat::coordinator::ElasticEngine;
+use mfqat::data::{Corpus, CorpusConfig};
+use mfqat::formats::ElementFormat;
+use mfqat::model::ParamSet;
+use mfqat::runtime::{ArtifactSet, Runtime};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    mfqat::util::logging::init();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let rt = Runtime::cpu()?;
+    let arts = ArtifactSet::open(&root.join("artifacts/tiny"))?;
+    let m = arts.manifest.clone();
+    println!(
+        "model '{}': {} params, seq {}, MX block {}",
+        m.config_name, m.n_params, m.seq_len, m.block_size
+    );
+
+    // A model to serve. (Use `mfqat train --plan mf_int` for a QAT-trained
+    // one; random init keeps the quickstart self-contained.)
+    let params = ParamSet::init(&m, 42);
+
+    // ONE anchor checkpoint instead of one model per precision.
+    let ck = params.to_anchor_checkpoint(&m, ElementFormat::int(8))?;
+    let fp32_mb = params.n_params() as f64 * 4.0 / 1e6;
+    let anchor_mb = ck.storage_bytes() as f64 / 1e6;
+    println!("anchor checkpoint: {anchor_mb:.2} MB (fp32 would be {fp32_mb:.2} MB)");
+
+    let engine = ElasticEngine::from_parts(rt, arts, ck, ElementFormat::int(8), 128 << 20);
+
+    // A batch of real corpus text to score.
+    let corpus = Corpus::generate(CorpusConfig {
+        width: m.seq_len + 1,
+        pretrain_sequences: 8,
+        qat_sequences: 8,
+        val_sequences: 8,
+        ..Default::default()
+    });
+    let mut batch = Vec::new();
+    for r in 0..m.train_batch {
+        batch.extend_from_slice(&corpus.val[r]);
+    }
+
+    // Elastic precision selection: same checkpoint, any format, on demand.
+    println!("\n{:<12} {:>10} {:>14}", "format", "mean NLL", "derive+score");
+    for bits in [8u8, 6, 4, 3, 2] {
+        let fmt = ElementFormat::int(bits);
+        let t = std::time::Instant::now();
+        let nll = engine.score_b8(&batch, fmt)?;
+        let mean: f32 = nll.iter().sum::<f32>() / nll.len() as f32;
+        println!(
+            "{:<12} {:>10.4} {:>11.1} ms",
+            fmt.long_name(),
+            mean,
+            t.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    println!(
+        "\nconversions performed: {} (then cached: {} formats resident)",
+        engine.conversions(),
+        engine.cached_formats()
+    );
+    Ok(())
+}

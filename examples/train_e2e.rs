@@ -1,0 +1,118 @@
+//! End-to-end training driver — the full-system validation run.
+//!
+//! All three layers compose here, with Python nowhere at runtime:
+//!   1. **Pretrain** a transformer LM on the synthetic corpus via the
+//!      AOT-compiled `train_pretrain` HLO (L2 graph + L1 Pallas kernels),
+//!      logging the loss curve.
+//!   2. **Multi-format QAT** (paper §3.2): one epoch per MXINT format in
+//!      increasing bit order over the 128-example finetune split.
+//!   3. **Anchor storage** (paper §3.5): save ONE MXINT8 checkpoint.
+//!   4. **Elastic evaluation**: derive every MXINT format 2–8 from the
+//!      anchor via Slice-and-Scale and report validation perplexity.
+//!
+//! Run: `cargo run --release --example train_e2e`
+//!      (`MFQAT_E2E_STEPS=64 MFQAT_E2E_CONFIG=tiny` to resize)
+
+use mfqat::coordinator::ElasticEngine;
+use mfqat::data::{Corpus, CorpusConfig};
+use mfqat::eval::{perplexity, ParamLiterals};
+use mfqat::formats::ElementFormat;
+use mfqat::model::ParamSet;
+use mfqat::runtime::{ArtifactSet, Runtime};
+use mfqat::train::{TrainPlan, Trainer};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    mfqat::util::logging::init();
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let config = std::env::var("MFQAT_E2E_CONFIG").unwrap_or_else(|_| "tiny".into());
+    let pretrain_steps: usize = std::env::var("MFQAT_E2E_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128);
+
+    let rt = Runtime::cpu()?;
+    let arts = ArtifactSet::open(&root.join("artifacts").join(&config))?;
+    let m = arts.manifest.clone();
+    println!(
+        "=== e2e: {} ({:.2}M params), {} pretrain steps ===",
+        m.config_name,
+        m.n_params as f64 / 1e6,
+        pretrain_steps
+    );
+
+    let corpus = Corpus::generate(CorpusConfig {
+        width: m.seq_len + 1,
+        ..Default::default()
+    });
+
+    // ---- 1. pretraining, loss curve logged every epoch-chunk ----
+    let params = ParamSet::init(&m, 20260710);
+    let mut trainer = Trainer::new(&rt, &arts, params);
+    let chunk = 16usize; // batches per log line
+    let mut done = 0usize;
+    while done < pretrain_steps {
+        let n = chunk.min(pretrain_steps - done);
+        let rows: Vec<Vec<i32>> = (0..n * m.train_batch)
+            .map(|i| corpus.pretrain[(done * m.train_batch + i) % corpus.pretrain.len()].clone())
+            .collect();
+        let stats = trainer.train_epoch("pretrain", &rows, 1e-3)?;
+        done += n;
+        println!(
+            "pretrain step {:>4}/{}  loss {:.4} -> {:.4}",
+            done, pretrain_steps, stats.first_loss, stats.last_loss
+        );
+    }
+    let base_lits = ParamLiterals::build(&trainer.params)?;
+    let base_ppl = perplexity(&rt, &arts, &base_lits, &corpus.val)?;
+    println!("pretrained val ppl: {base_ppl:.3}");
+
+    // ---- 2. multi-format QAT (2 -> 4 -> 6 -> 8) ----
+    trainer.reset_opt();
+    let plan = TrainPlan::multi_int();
+    println!("\n=== multi-format QAT: {:?} ===", plan.phases.iter().map(|p| &p.variant).collect::<Vec<_>>());
+    for phase in &plan.phases {
+        let stats = trainer.train_epoch(&phase.variant, &corpus.qat, 1e-4)?;
+        println!(
+            "qat epoch [{}] loss {:.4} -> {:.4}",
+            phase.variant, stats.first_loss, stats.last_loss
+        );
+    }
+
+    // ---- 3. anchor checkpoint (the ONLY stored serving artifact) ----
+    let ck = trainer.params.to_anchor_checkpoint(&m, ElementFormat::int(8))?;
+    let ck_path = std::env::temp_dir().join("mfqat_e2e_anchor.mfq");
+    ck.save(&ck_path)?;
+    println!(
+        "\nanchor checkpoint: {} ({:.2} MB vs {:.2} MB fp32)",
+        ck_path.display(),
+        ck.storage_bytes() as f64 / 1e6,
+        trainer.params.n_params() as f64 * 4.0 / 1e6
+    );
+
+    // ---- 4. elastic precision sweep via Slice-and-Scale ----
+    println!("\n=== elastic sweep: anchor -> SSMXINT -> val perplexity ===");
+    println!("{:<10} {:>10} {:>12}", "format", "val ppl", "vs direct");
+    let master = trainer.params.clone();
+    for bits in (2..=8).rev() {
+        let fmt = ElementFormat::int(bits);
+        // Serving path: anchor + SS.
+        let served = ParamSet::from_checkpoint(&m, &ck, Some(fmt))?;
+        let ppl = perplexity(&rt, &arts, &ParamLiterals::build(&served)?, &corpus.val)?;
+        // Reference path: direct PTQ from the fp32 master.
+        let direct = master.ptq(&m, fmt)?;
+        let dppl = perplexity(&rt, &arts, &ParamLiterals::build(&direct)?, &corpus.val)?;
+        println!("{:<10} {:>10.3} {:>11.3}", fmt.long_name(), ppl, dppl);
+    }
+    println!("\n(SS column ≈ direct column: the paper's Fig. 2/4 claim, end to end)");
+
+    // Engine smoke: the serving stack consumes the same checkpoint.
+    let engine = ElasticEngine::open(&root.join("artifacts").join(&config), &ck_path, 128 << 20)?;
+    let mut batch = Vec::new();
+    for r in 0..m.train_batch {
+        batch.extend_from_slice(&corpus.val[r]);
+    }
+    let nll = engine.score_b8(&batch, ElementFormat::int(4))?;
+    println!("engine MXINT4 batch NLL: {:?}", &nll[..3.min(nll.len())]);
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 kernels, L2 model, AOT lowering.
+
+Never imported at runtime — the rust binary consumes only the emitted
+artifacts (HLO text + manifest).
+"""

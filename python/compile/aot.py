@@ -1,0 +1,225 @@
+"""AOT lowering: JAX -> HLO text artifacts + manifest + golden vectors.
+
+Run once at build time (``make artifacts``); the rust runtime loads the HLO
+text via ``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU
+client. HLO **text** (not ``.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example/README).
+
+Emitted per model config:
+  forward_b{1,8}.hlo.txt   (tokens i32[B,T], *params)            -> (logits,)
+  nll_b8.hlo.txt           (tokens i32[8,T+1], *params)          -> (loss,)
+  train_<variant>.hlo.txt  (lr f32[], step i32[], tokens, *train,
+                            *frozen, *m, *v) -> (loss, *train', *m', *v')
+  manifest.json            param table + artifact table
+  golden/*.json            oracle vectors for rust bit-parity tests
+
+Usage: python -m compile.aot --config tiny --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import formats as F
+from . import model as M
+from . import train as T
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def param_arg_specs(cfg):
+    return [spec(s.shape) for s in M.param_specs(cfg)]
+
+
+def lower_forward(cfg, batch):
+    fn = M.forward_flat(cfg)
+    args = [spec((batch, cfg.seq_len), jnp.int32)] + param_arg_specs(cfg)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_nll(cfg, batch):
+    fn = M.nll_flat(cfg)
+    args = [spec((batch, cfg.seq_len + 1), jnp.int32)] + param_arg_specs(cfg)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_train(cfg, variant, batch):
+    step_fn, t_idx, f_idx = T.make_train_step(cfg, variant)
+    specs = M.param_specs(cfg)
+    t_specs = [spec(specs[i].shape) for i in t_idx]
+    f_specs = [spec(specs[i].shape) for i in f_idx]
+    args = (
+        [spec((), jnp.float32), spec((), jnp.int32),
+         spec((batch, cfg.seq_len + 1), jnp.int32)]
+        + t_specs + f_specs + t_specs + t_specs  # train, frozen, m, v
+    )
+    return to_hlo_text(jax.jit(step_fn).lower(*args))
+
+
+# --------------------------------------------------------------------------
+# golden vectors (rust <-> python bit parity)
+# --------------------------------------------------------------------------
+
+def write_goldens(out_dir: str, seed: int = 20260710):
+    """Oracle vectors: fake-quant and SS outputs on wild-valued inputs.
+
+    The rust test ``rust/tests/golden_parity.rs`` loads these and requires
+    exact f32 bit equality against its native implementation.
+    """
+    rng = np.random.default_rng(seed)
+    n = 256
+    bs = 32
+    base = rng.normal(size=n).astype(np.float32)
+    # Inject edge cases: zeros, powers of two, tiny, big, negatives.
+    base[::17] = 0.0
+    base[5] = 2.0 ** -20
+    base[6] = -(2.0 ** 15)
+    base[7] = 6.0
+    base[8] = -448.0
+    base[9] = 1e-38
+    base[10] = 3.4e38 / 4
+    cases = {"input": base.tolist(), "block_size": bs, "fq": {}, "ss": {}}
+
+    all_fmts = F.ALL_INT + F.ALL_FP
+    for fmt in all_fmts:
+        fq = np.asarray(ref.fake_quantize(base.reshape(1, n), fmt, bs)).reshape(-1)
+        cases["fq"][fmt.name] = fq.tolist()
+
+    for anchor, targets in ((F.mxint(8), F.ALL_INT[:-1]), (F.mxfp(8), F.ALL_FP[:-1])):
+        v_anchor = np.asarray(ref.fake_quantize(base.reshape(1, n), anchor, bs))
+        for t in targets:
+            ss = np.asarray(
+                ref.ss_fake_quantize(v_anchor, anchor, t, bs)
+            ).reshape(-1)
+            cases["ss"][f"{anchor.name}->{t.name}"] = ss.tolist()
+
+    # Code/scale planes for one format (checks the packed representation).
+    se, p = ref.quantize_blocks(base.reshape(1, n), F.mxint(8), bs)
+    cases["int8_scales"] = np.asarray(se).reshape(-1).astype(int).tolist()
+    cases["int8_codes"] = np.asarray(p).reshape(-1).astype(int).tolist()
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "quant_golden.json"), "w") as f:
+        json.dump(cases, f)
+    print(f"  golden/quant_golden.json ({len(all_fmts)} formats)")
+
+
+def write_forward_golden(out_dir: str, cfg, seed: int = 7):
+    """A tiny end-to-end forward fixture: params + tokens + expected logits
+    (used by the rust runtime integration test)."""
+    os.makedirs(out_dir, exist_ok=True)
+    params = M.init_params(cfg, seed=seed)
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, cfg.vocab, size=(1, cfg.seq_len)).astype(np.int32)
+    logits = np.asarray(M.forward_jit(params, jnp.asarray(tokens), cfg))
+    flat = M.flat_from_params(cfg, params)
+    fixture = {
+        "config": cfg.name,
+        "tokens": tokens.reshape(-1).tolist(),
+        # Logits for the first 4 positions only (file size); full-precision
+        # comparison happens at 1e-4 tolerance (XLA CPU fusion reordering).
+        "logits_prefix": logits[0, :4].reshape(-1).tolist(),
+        "param_checksums": [float(np.asarray(a, np.float64).sum()) for a in flat],
+        "seed": seed,
+    }
+    with open(os.path.join(out_dir, f"forward_{cfg.name}.json"), "w") as f:
+        json.dump(fixture, f)
+    # The params themselves, raw f32 little-endian, for the runtime test.
+    with open(os.path.join(out_dir, f"params_{cfg.name}.bin"), "wb") as f:
+        for a in flat:
+            f.write(np.asarray(a, np.float32).tobytes())
+    print(f"  golden/forward_{cfg.name}.json + params_{cfg.name}.bin")
+
+
+# --------------------------------------------------------------------------
+# main
+# --------------------------------------------------------------------------
+
+def build(cfg_name: str, out: str, train_variants=None, batches=(1, 8)):
+    cfg = M.CONFIGS[cfg_name]
+    out_dir = os.path.join(out, cfg_name)
+    os.makedirs(out_dir, exist_ok=True)
+    specs = M.param_specs(cfg)
+    artifacts = {}
+
+    def emit(name, text):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {"file": f"{name}.hlo.txt", "bytes": len(text)}
+        print(f"  {name}.hlo.txt ({len(text) / 1e6:.2f} MB)")
+
+    for b in batches:
+        emit(f"forward_b{b}", lower_forward(cfg, b))
+    emit("nll_b8", lower_nll(cfg, 8))
+
+    variants = train_variants if train_variants is not None else T.all_variants()
+    for v in variants:
+        t_idx = T.variant_trainable(cfg, v)
+        emit(f"train_{v}", lower_train(cfg, v, 8))
+        artifacts[f"train_{v}"]["trainable"] = t_idx
+
+    manifest = {
+        "config": cfg.to_json(),
+        "n_params": M.n_params(cfg),
+        "params": [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "quantized": s.quantized,
+                "init": s.init,
+            }
+            for s in specs
+        ],
+        "train_batch": 8,
+        "artifacts": artifacts,
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  manifest.json ({len(specs)} params, {M.n_params(cfg)/1e6:.2f}M)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="tiny", help="comma-separated configs")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variants", default=None,
+                    help="comma-separated train variants (default: all)")
+    ap.add_argument("--skip-goldens", action="store_true")
+    args = ap.parse_args()
+
+    variants = args.variants.split(",") if args.variants else None
+    for cfg_name in args.config.split(","):
+        print(f"[aot] lowering config '{cfg_name}'")
+        build(cfg_name, args.out, train_variants=variants)
+        if not args.skip_goldens:
+            golden_dir = os.path.join(args.out, "golden")
+            write_forward_golden(golden_dir, M.CONFIGS[cfg_name])
+    if not args.skip_goldens:
+        print("[aot] writing golden vectors")
+        write_goldens(os.path.join(args.out, "golden"))
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,133 @@
+"""Microscaling format descriptors shared by the L1 kernels and L2 model.
+
+Mirrors ``rust/src/formats`` exactly:
+
+* MXINT(b), b in 2..8:  emax = b - 2, elements in [-(2^(b-1)), 2^(b-1)-1].
+* MXFP(b):  4->E2M1, 5->E2M2, 6->E3M2, 7->E3M3, 8->E4M3;  emax = 2^(eta-1);
+  E4M3 follows OCP (max normal 448).
+
+The numeric behaviour (shared-exponent extraction, RNE, saturation) lives in
+``kernels/ref.py``; this module is only the format algebra.
+"""
+
+from dataclasses import dataclass
+
+# Paper's MXFP bitwidth -> (exponent bits, mantissa bits).
+MXFP_BITS = {4: (2, 1), 5: (2, 2), 6: (3, 2), 7: (3, 3), 8: (4, 3)}
+
+# Scale exponent storage range (E8M0-like, matches rust SCALE_EXP_MIN/MAX).
+# The lower bound is -126 (not -127): XLA CPU flushes subnormal f32 to zero,
+# so a 2^-127 scale would decode differently between the jnp oracle (FTZ)
+# and the bit-exact rust path. Clamping to the normal range keeps the two
+# implementations bit-identical; blocks this small are zero-for-all-purposes.
+SCALE_EXP_MIN = -126
+SCALE_EXP_MAX = 127
+
+
+@dataclass(frozen=True)
+class ElementFormat:
+    """An MX element format: ``kind`` is 'int' or 'fp'."""
+
+    kind: str
+    bits: int  # total bits including sign
+
+    def __post_init__(self):
+        if self.kind == "int":
+            assert 2 <= self.bits <= 8, self.bits
+        elif self.kind == "fp":
+            assert self.bits in MXFP_BITS, self.bits
+        else:
+            raise ValueError(f"bad kind {self.kind}")
+
+    # ------------------------------------------------------------ properties
+    @property
+    def exp_bits(self) -> int:
+        assert self.kind == "fp"
+        return MXFP_BITS[self.bits][0]
+
+    @property
+    def man_bits(self) -> int:
+        assert self.kind == "fp"
+        return MXFP_BITS[self.bits][1]
+
+    @property
+    def emax(self) -> int:
+        """Exponent of the largest normal number (paper e_max(f))."""
+        if self.kind == "int":
+            return self.bits - 2
+        return 1 << (self.exp_bits - 1)
+
+    @property
+    def bias(self) -> int:
+        assert self.kind == "fp"
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def emin(self) -> int:
+        """Smallest normal exponent."""
+        assert self.kind == "fp"
+        return 1 - self.bias
+
+    @property
+    def is_e4m3(self) -> bool:
+        return self.kind == "fp" and MXFP_BITS[self.bits] == (4, 3)
+
+    @property
+    def max_value(self) -> float:
+        """Largest representable element magnitude."""
+        if self.kind == "int":
+            return float((1 << (self.bits - 1)) - 1)
+        m = self.man_bits
+        if self.is_e4m3:
+            # OCP E4M3: top mantissa code at top exponent is NaN -> 448.
+            return (2.0 - 2.0 ** (-m) * 2.0) * 2.0 ** self.emax
+        return (2.0 - 2.0 ** (-m)) * 2.0 ** self.emax
+
+    @property
+    def int_range(self):
+        assert self.kind == "int"
+        half = 1 << (self.bits - 1)
+        return (-half, half - 1)
+
+    @property
+    def name(self) -> str:
+        return f"{self.kind}{self.bits}"
+
+    @property
+    def long_name(self) -> str:
+        if self.kind == "int":
+            return f"MXINT{self.bits}"
+        e, m = MXFP_BITS[self.bits]
+        return f"MXFP{self.bits}(E{e}M{m})"
+
+
+def mxint(bits: int) -> ElementFormat:
+    return ElementFormat("int", bits)
+
+
+def mxfp(bits: int) -> ElementFormat:
+    return ElementFormat("fp", bits)
+
+
+def parse(name: str) -> ElementFormat:
+    n = name.strip().lower()
+    for prefix in ("mxint", "int"):
+        if n.startswith(prefix) and n[len(prefix):].isdigit():
+            bits = int(n[len(prefix):])
+            if not 2 <= bits <= 8:
+                raise ValueError(f"MXINT bits must be 2..8, got {bits}")
+            return mxint(bits)
+    for prefix in ("mxfp", "fp"):
+        if n.startswith(prefix) and n[len(prefix):].isdigit():
+            bits = int(n[len(prefix):])
+            if bits not in MXFP_BITS:
+                raise ValueError(f"MXFP bits must be 4..8, got {bits}")
+            return mxfp(bits)
+    raise ValueError(f"unknown format {name!r}")
+
+
+ALL_INT = [mxint(b) for b in range(2, 9)]
+ALL_FP = [mxfp(b) for b in range(4, 9)]
+# Formats seen during multi-format QAT (paper section 3.2).
+TRAIN_INT = [mxint(b) for b in (2, 4, 6, 8)]
+TRAIN_FP = [mxfp(b) for b in (4, 6, 8)]

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: matmul with on-the-fly MX weight dequantization.
+
+``y = x @ dequant(W)^T`` where W is stored as (scale, element) planes — the
+execution primitive of an MX-native accelerator (weights stay quantized in
+memory; the datapath rescales per block as operands stream into the MAC
+array).
+
+TPU mapping (DESIGN.md section 5): the grid tiles the output over N; each
+step pulls one (TILE_N, K) weight panel plus its scale strip into VMEM,
+dequantizes on the VPU, and feeds an MXU-shaped ``jnp.dot`` with f32
+accumulation. The HBM->VMEM schedule the paper's hardware implements with a
+weight-stationary dataflow is expressed here by the BlockSpec index maps.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .mx_quant import _pick_tile
+
+
+def _mm_kernel(x_ref, se_ref, p_ref, o_ref):
+    x = x_ref[...]                      # (B, K)
+    se = se_ref[...]                    # (TILE_N, NB)
+    p = p_ref[...]                      # (TILE_N, NB, BS)
+    tile_n = p.shape[0]
+    k = x.shape[-1]
+    w = (p * ref.exp2i(se)[..., None]).reshape(tile_n, k)
+    o_ref[...] = jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("max_tile",))
+def mx_matmul_pallas(x, se_w, p_w, max_tile: int = 128):
+    """``x``: [B, K]; ``se_w``: [N, NB] int32; ``p_w``: [N, NB, BS] f32.
+
+    Returns [B, N] f32.
+    """
+    b, k = x.shape
+    n, nb, bs = p_w.shape
+    assert nb * bs == k, (x.shape, p_w.shape)
+    tile_n = _pick_tile(n, max_tile)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(n // tile_n,),
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),          # x stays resident
+            pl.BlockSpec((tile_n, nb), lambda i: (i, 0)),    # scale strip
+            pl.BlockSpec((tile_n, nb, bs), lambda i: (i, 0, 0)),  # weight panel
+        ],
+        out_specs=pl.BlockSpec((b, tile_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(jnp.asarray(x, jnp.float32), jnp.asarray(se_w, jnp.int32),
+      jnp.asarray(p_w, jnp.float32))

@@ -1,0 +1,197 @@
+"""Pure-jnp oracle for MX quantization — the L1 correctness reference.
+
+Every operation here is bit-exact against ``rust/src/formats`` (enforced by
+the golden-vector tests): shared exponents are extracted from f32 bit
+patterns (no libm), scales are exact powers of two built by bit
+manipulation, rounding is round-to-nearest-even, and saturation follows the
+OCP conversion rules.
+
+Paper equations:
+  Eq. 1/3/5: shared_exp = floor(log2 max|V_i|) - e_max(f);  X = 2^shared_exp
+  Eq. 2:     P_i = quantize_f(V_i / X)
+  Eq. 4:     SSMXINT  P_l = clip(round(P_h / 2^de)),  X_l = X_h 2^de
+  Eq. 6:     SSMXFP   P_l = quantize_(eta_l,mu_l)(P_h / 2^de), X_l = X_h 2^de
+
+All public functions operate on arrays whose last dimension is a multiple of
+``block_size`` (the model chooses its dims accordingly); blocks never cross
+rows.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import formats as F
+
+
+# --------------------------------------------------------------------------
+# exact float helpers (bit manipulation, no libm)
+# --------------------------------------------------------------------------
+
+def floor_log2(x):
+    """Exact floor(log2 |x|) for finite normal x != 0; subnormal/zero inputs
+    map to -127, which is equivalent after the scale clamp (rust mxblock.rs
+    clamps shared_exp to >= -127 as well)."""
+    bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.int32)
+    expf = (bits >> 23) & 0xFF
+    return jnp.where(expf == 0, -127, expf - 127)
+
+
+def exp2i(e):
+    """Exact 2^e as f32 for integer e in [-127, 127].
+
+    Built as a product of two halves so both factors stay in the normal
+    range (each half is within [-64, 64]); the product is exact even when
+    the result is the subnormal 2^-127.
+    """
+    e = jnp.asarray(e, jnp.int32)
+    h1 = e // 2
+    h2 = e - h1
+    f1 = jax.lax.bitcast_convert_type((h1 + 127) << 23, jnp.float32)
+    f2 = jax.lax.bitcast_convert_type((h2 + 127) << 23, jnp.float32)
+    return f1 * f2
+
+
+# --------------------------------------------------------------------------
+# element quantizers (value-level)
+# --------------------------------------------------------------------------
+
+def quantize_int_elem(u, bits: int):
+    """RNE + saturate scaled values to the signed `bits`-bit grid."""
+    lo = float(-(1 << (bits - 1)))
+    hi = float((1 << (bits - 1)) - 1)
+    q = jnp.round(u)  # jnp.round is round-half-even
+    return jnp.clip(q, lo, hi)
+
+
+def quantize_fp_elem(u, fmt: F.ElementFormat):
+    """RNE + saturate scaled values to the minifloat grid (with subnormals).
+
+    Grid step at magnitude |u| is 2^(E-m) where E = max(floor(log2|u|), emin);
+    the subnormal region shares the emin grid. Saturation clamps to the OCP
+    max normal (448 for E4M3).
+    """
+    assert fmt.kind == "fp"
+    m = fmt.man_bits
+    a = jnp.abs(u)
+    E = jnp.maximum(floor_log2(a), fmt.emin)
+    inv_step = exp2i(m - E)
+    step = exp2i(E - m)
+    q = jnp.round(u * inv_step) * step
+    q = jnp.clip(q, -fmt.max_value, fmt.max_value)
+    return jnp.where(u == 0.0, 0.0, q)
+
+
+def quantize_elem(u, fmt: F.ElementFormat):
+    if fmt.kind == "int":
+        return quantize_int_elem(u, fmt.bits)
+    return quantize_fp_elem(u, fmt)
+
+
+# --------------------------------------------------------------------------
+# block quantization (Eq. 1-3)
+# --------------------------------------------------------------------------
+
+def _to_blocks(v, block_size: int):
+    v = jnp.asarray(v, jnp.float32)
+    assert v.shape[-1] % block_size == 0, (v.shape, block_size)
+    return v.reshape(v.shape[:-1] + (v.shape[-1] // block_size, block_size))
+
+
+def shared_exponent(vb, fmt: F.ElementFormat):
+    """Per-block shared exponent (Eq. 1), clamped to the E8M0-like range.
+
+    ``vb``: [..., n_blocks, block_size]. NaNs are ignored for the max (they
+    quantize to 0); an all-zero block stores SCALE_EXP_MIN; an infinite max
+    saturates to SCALE_EXP_MAX.
+    """
+    a = jnp.abs(vb)
+    a = jnp.where(jnp.isnan(a), 0.0, a)
+    amax = jnp.max(a, axis=-1)
+    se = floor_log2(amax) - fmt.emax
+    se = jnp.where(amax == 0.0, F.SCALE_EXP_MIN, se)
+    se = jnp.where(jnp.isinf(amax), F.SCALE_EXP_MAX, se)
+    return jnp.clip(se, F.SCALE_EXP_MIN, F.SCALE_EXP_MAX)
+
+
+def quantize_blocks(v, fmt: F.ElementFormat, block_size: int):
+    """Return (scale_exp [..., n_blocks] int32, elems [..., n_blocks, bs] f32).
+
+    ``elems`` are element *values* P_i (integer-valued for MXINT, minifloat
+    grid values for MXFP) — the code plane with the scale divided out.
+    """
+    vb = _to_blocks(v, block_size)
+    se = shared_exponent(vb, fmt)
+    u = vb * exp2i(-se)[..., None]
+    p = quantize_elem(u, fmt)
+    return se, p
+
+
+def dequantize_blocks(se, p, out_shape):
+    """Reconstruct V-hat = X * P and restore the original trailing dim."""
+    x = exp2i(se)[..., None]
+    return (p * x).reshape(out_shape)
+
+
+def fake_quantize(v, fmt: F.ElementFormat, block_size: int):
+    """Blockwise quantize + dequantize (the PTQ/QAT simulation primitive)."""
+    v = jnp.asarray(v, jnp.float32)
+    se, p = quantize_blocks(v, fmt, block_size)
+    return dequantize_blocks(se, p, v.shape)
+
+
+# --------------------------------------------------------------------------
+# Slice-and-Scale (Eq. 4 / Eq. 6)
+# --------------------------------------------------------------------------
+
+def ss_convert(se_h, p_h, src: F.ElementFormat, dst: F.ElementFormat):
+    """Slice-and-Scale a (scale, elements) plane from ``src`` to ``dst``.
+
+    Returns (se_l, p_l). Families must match and ``dst`` must be
+    lower-or-equal precision, as in the paper.
+    """
+    assert src.kind == dst.kind, (src, dst)
+    de = src.emax - dst.emax
+    assert de >= 0, (src, dst)
+    if src.kind == "int":
+        # Arithmetic shift right by de with RNE on the dropped bits. Since
+        # the elements are small integers, f32 division by 2^de is exact and
+        # jnp.round reproduces the bit-level shift_round (rust int.rs).
+        lo, hi = dst.int_range
+        p_l = jnp.clip(jnp.round(p_h * exp2i(-de)), float(lo), float(hi))
+    else:
+        p_l = quantize_fp_elem(p_h * exp2i(-de), dst)
+    se_l = jnp.minimum(se_h + de, F.SCALE_EXP_MAX)
+    return se_l, p_l
+
+
+def ss_fake_quantize(v_anchor, anchor: F.ElementFormat, dst: F.ElementFormat,
+                     block_size: int):
+    """Value-level Slice-and-Scale: anchor-quantized values -> dst values.
+
+    For anchor-quantized inputs the shared exponent recomputed from V-hat
+    equals the anchor shared exponent (the block max P lands in the top
+    element binade), so this equals ``fake_quantize(v_anchor, dst, bs)``;
+    we still route through the explicit code plane to keep the
+    correspondence with the paper's (X, P) formulation visible and testable.
+    """
+    v = jnp.asarray(v_anchor, jnp.float32)
+    vb = _to_blocks(v, block_size)
+    se_h = shared_exponent(vb, anchor)
+    p_h = vb * exp2i(-se_h)[..., None]
+    se_l, p_l = ss_convert(se_h, p_h, anchor, dst)
+    return dequantize_blocks(se_l, p_l, v.shape)
+
+
+# --------------------------------------------------------------------------
+# reference MX matmul (oracle for the mx_matmul pallas kernel)
+# --------------------------------------------------------------------------
+
+def mx_matmul_ref(x, se_w, p_w, out_features: int, block_size: int):
+    """y = x @ dequant(W)^T with W given as (scale, element) planes.
+
+    ``x``: [B, K]; ``se_w``: [N, K // bs]; ``p_w``: [N, K // bs, bs].
+    Returns [B, N].
+    """
+    k = x.shape[-1]
+    w = dequantize_blocks(se_w, p_w, (out_features, k))
+    return x @ w.T

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: Slice-and-Scale conversion on (scale, element) planes.
+
+Implements the paper's on-the-fly anchor->target conversion (sections 3.3
+and 3.4) as it would run on the serving accelerator: inputs are the stored
+anchor planes — per-block scale exponents and element values — and outputs
+are the converted planes. For MXINT the element transform is the
+shift-with-round of Eq. 4 (realized as an exact divide + RNE, equivalent for
+the small integer codes); for MXFP it is the requantization of Eq. 6.
+
+The grid walks row tiles of the element plane so each step converts one
+VMEM-resident slab; the per-block scales ride along in a parallel BlockSpec.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import formats as F
+from . import ref
+from .mx_quant import _pick_tile
+
+
+def _ss_kernel(se_ref, p_ref, se_o_ref, p_o_ref, *, src: F.ElementFormat,
+               dst: F.ElementFormat):
+    se_l, p_l = ref.ss_convert(se_ref[...], p_ref[...], src, dst)
+    se_o_ref[...] = se_l
+    p_o_ref[...] = p_l
+
+
+@partial(jax.jit, static_argnames=("src", "dst", "max_tile"))
+def ss_convert_pallas(se, p, src: F.ElementFormat, dst: F.ElementFormat,
+                      max_tile: int = 64):
+    """Convert planes ``se`` [R, NB] (int32), ``p`` [R, NB, BS] (f32 element
+    values) from ``src`` to the lower-precision ``dst``."""
+    rows, nb, bs = p.shape
+    assert se.shape == (rows, nb), (se.shape, p.shape)
+    tile_r = _pick_tile(rows, max_tile)
+    se_out, p_out = pl.pallas_call(
+        partial(_ss_kernel, src=src, dst=dst),
+        grid=(rows // tile_r,),
+        in_specs=[
+            pl.BlockSpec((tile_r, nb), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, nb, bs), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_r, nb), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, nb, bs), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, nb), jnp.int32),
+            jax.ShapeDtypeStruct((rows, nb, bs), jnp.float32),
+        ],
+        interpret=True,
+    )(jnp.asarray(se, jnp.int32), jnp.asarray(p, jnp.float32))
+    return se_out, p_out

@@ -1,0 +1,267 @@
+"""L2: decoder-only transformer LM with weight-only MX quantization.
+
+Functional JAX model matching the paper's setup (section 3.2):
+
+* Weight-only quantization of the decoder-stack linears (qkv / attn-proj /
+  mlp-up / mlp-down), **excluding** embeddings, norms and ``lm_head``.
+* Fake-quantization runs through the L1 Pallas kernel
+  (``kernels.mx_quant.fake_quantize_pallas``) wrapped in a straight-through
+  estimator, so the QAT train-step HLO contains the kernel's block schedule.
+* The anchor-storage variant (section 3.5) composes two fake-quant passes:
+  ``W_t = Q_{A->t}(Q_A(W))`` — by the SS equivalence theorem (DESIGN.md
+  section 4) this is exactly Slice-and-Scale from the anchor format.
+
+Parameters are handled as an *ordered flat list* (see ``param_specs``) so
+the AOT-exported HLOs have a deterministic argument layout the rust runtime
+can reproduce.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import formats as F
+from .kernels.mx_quant import fake_quantize_pallas
+
+
+# --------------------------------------------------------------------------
+# configuration
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    seq_len: int = 128
+    ff_mult: int = 4
+    block_size: int = 32  # MX scaling block size
+
+    @property
+    def d_ff(self) -> int:
+        return self.d_model * self.ff_mult
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "vocab": self.vocab,
+            "d_model": self.d_model,
+            "n_layers": self.n_layers,
+            "n_heads": self.n_heads,
+            "seq_len": self.seq_len,
+            "ff_mult": self.ff_mult,
+            "block_size": self.block_size,
+        }
+
+
+CONFIGS = {
+    # ~0.9M params: the experiment-matrix workhorse (1-core CPU budget).
+    "tiny": ModelConfig("tiny", d_model=128, n_layers=4, n_heads=4, seq_len=128),
+    # ~4.9M params: the "larger model" of the sweep + e2e example.
+    "small": ModelConfig("small", d_model=256, n_layers=6, n_heads=8, seq_len=128),
+    # ~25M params: buildable target config (not part of the recorded sweep).
+    "base": ModelConfig("base", d_model=512, n_layers=8, n_heads=8, seq_len=256),
+}
+
+
+# --------------------------------------------------------------------------
+# parameter registry (deterministic HLO argument order)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    quantized: bool  # True -> in the QAT fake-quant + trainable set
+    init: str        # "normal" | "zeros" | "ones"
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered parameter list. Quantized = decoder-stack linears only."""
+    specs = [
+        ParamSpec("emb", (cfg.vocab, cfg.d_model), False, "normal"),
+        ParamSpec("pos", (cfg.seq_len, cfg.d_model), False, "normal"),
+    ]
+    for i in range(cfg.n_layers):
+        specs += [
+            ParamSpec(f"l{i}.ln1", (cfg.d_model,), False, "ones"),
+            ParamSpec(f"l{i}.qkv", (cfg.d_model, 3 * cfg.d_model), True, "normal"),
+            ParamSpec(f"l{i}.proj", (cfg.d_model, cfg.d_model), True, "normal"),
+            ParamSpec(f"l{i}.ln2", (cfg.d_model,), False, "ones"),
+            ParamSpec(f"l{i}.up", (cfg.d_model, cfg.d_ff), True, "normal"),
+            ParamSpec(f"l{i}.down", (cfg.d_ff, cfg.d_model), True, "normal"),
+        ]
+    specs += [
+        ParamSpec("lnf", (cfg.d_model,), False, "ones"),
+        ParamSpec("head", (cfg.d_model, cfg.vocab), False, "normal"),
+    ]
+    return specs
+
+
+def quant_indices(cfg: ModelConfig):
+    return [i for i, s in enumerate(param_specs(cfg)) if s.quantized]
+
+
+def n_params(cfg: ModelConfig) -> int:
+    total = 0
+    for s in param_specs(cfg):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+# --------------------------------------------------------------------------
+# quantizers with straight-through estimators
+# --------------------------------------------------------------------------
+
+def make_weight_quantizer(fmt: Optional[F.ElementFormat],
+                          anchor: Optional[F.ElementFormat],
+                          block_size: int):
+    """Build the QAT weight transform with an identity-gradient STE.
+
+    ``fmt`` is the training target format (None -> full precision);
+    ``anchor`` composes the section-3.5 anchor pass before the target pass
+    (``W_t = Q_{A->t}(Q_A(W))``, realized value-level via the SS theorem).
+    """
+    if fmt is None and anchor is None:
+        return lambda w: w
+
+    def quant(w):
+        if anchor is not None:
+            w = fake_quantize_pallas(w, anchor, block_size)
+        if fmt is not None and fmt != anchor:
+            w = fake_quantize_pallas(w, fmt, block_size)
+        return w
+
+    @jax.custom_vjp
+    def ste(w):
+        return quant(w)
+
+    def fwd(w):
+        return quant(w), None
+
+    def bwd(_res, g):  # straight-through: gradients pass unchanged
+        return (g,)
+
+    ste.defvjp(fwd, bwd)
+    return ste
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+
+def _rmsnorm(x, g, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def _attention(x, wqkv, wproj, cfg: ModelConfig):
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = x @ wqkv  # [B, T, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wproj
+
+
+def forward(params: dict, tokens, cfg: ModelConfig, wq=None):
+    """``tokens``: [B, T] int32 -> logits [B, T, vocab].
+
+    ``wq``: optional weight transform applied to each quantized linear
+    (the QAT fake-quant STE); identity when None.
+    """
+    wq = wq or (lambda w: w)
+    b, t = tokens.shape
+    x = params["emb"][tokens] + params["pos"][:t][None]
+    for i in range(cfg.n_layers):
+        p = lambda k: params[f"l{i}.{k}"]  # noqa: E731
+        x = x + _attention(_rmsnorm(x, p("ln1")), wq(p("qkv")), wq(p("proj")), cfg)
+        h = _rmsnorm(x, p("ln2"))
+        h = jax.nn.gelu(h @ wq(p("up")), approximate=True)
+        x = x + h @ wq(p("down"))
+    x = _rmsnorm(x, params["lnf"])
+    return x @ params["head"]
+
+
+def nll_loss(params: dict, tokens, cfg: ModelConfig, wq=None):
+    """Mean next-token negative log-likelihood.
+
+    ``tokens``: [B, T+1] int32 — inputs are ``tokens[:, :-1]``, targets
+    ``tokens[:, 1:]``.
+    """
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits = forward(params, inputs, cfg, wq=wq)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+# --------------------------------------------------------------------------
+# flat-list <-> dict plumbing for AOT export
+# --------------------------------------------------------------------------
+
+def params_from_flat(cfg: ModelConfig, flat):
+    specs = param_specs(cfg)
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    return {s.name: a for s, a in zip(specs, flat)}
+
+
+def flat_from_params(cfg: ModelConfig, params: dict):
+    return [params[s.name] for s in param_specs(cfg)]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, scale: float = 0.02):
+    """Reference initializer (tests / python-side experiments; the rust
+    trainer owns initialization at runtime via the same spec table)."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for s in param_specs(cfg):
+        if s.init == "ones":
+            out[s.name] = jnp.ones(s.shape, jnp.float32)
+        elif s.init == "zeros":
+            out[s.name] = jnp.zeros(s.shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            out[s.name] = jax.random.normal(sub, s.shape, jnp.float32) * scale
+    return out
+
+
+# --------------------------------------------------------------------------
+# jit-able entry points used by aot.py
+# --------------------------------------------------------------------------
+
+def forward_flat(cfg: ModelConfig):
+    def f(tokens, *flat):
+        return (forward(params_from_flat(cfg, flat), tokens, cfg),)
+    return f
+
+
+def nll_flat(cfg: ModelConfig):
+    def f(tokens, *flat):
+        return (nll_loss(params_from_flat(cfg, flat), tokens, cfg),)
+    return f
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def forward_jit(params, tokens, cfg: ModelConfig):
+    return forward(params, tokens, cfg)

@@ -1,0 +1,134 @@
+"""L2: AdamW train-step builders for every training variant.
+
+Variants (paper section 3.2 / 3.5):
+
+* ``pretrain``      — all parameters trainable, no quantization (builds the
+                      "pretrained model" substrate the paper starts from).
+* ``ft_fp``         — full-precision finetune: only the decoder-stack
+                      linears are trainable (paper's FP baseline).
+* ``qat_<fmt>``     — single-format QAT at ``fmt``; the weight transform is
+                      the L1 Pallas fake-quant kernel behind an STE.
+* ``qat_ss_<fmt>``  — anchor-storage QAT (section 3.5):
+                      ``W_t = Q_{A->t}(Q_A(W))`` with the 8-bit anchor of the
+                      same family; STE through both operators.
+
+Multi-format QAT is a *schedule over* these steps (the rust trainer cycles
+formats across epochs in increasing bit order), so no extra graph is needed.
+
+Each builder returns a function with signature
+
+    step(lr, tokens, *train_params, *frozen_params, *m, *v)
+      -> (loss, *new_train_params, *new_m, *new_v)
+
+where the train/frozen split follows ``variant_trainable`` and the AdamW
+state covers the trainable set only. ``lr`` is a runtime scalar so learning
+-rate sweeps reuse one compiled executable.
+"""
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import formats as F
+from . import model as M
+
+# torch.optim.AdamW defaults (paper: "default hyperparameters").
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+ADAM_WD = 0.01
+
+
+def adamw_update(p, g, m, v, step, lr):
+    """One AdamW step (decoupled weight decay), f32 state."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mh = m / (1.0 - ADAM_B1 ** step)
+    vh = v / (1.0 - ADAM_B2 ** step)
+    p = p - lr * (mh / (jnp.sqrt(vh) + ADAM_EPS) + ADAM_WD * p)
+    return p, m, v
+
+
+# --------------------------------------------------------------------------
+# variants
+# --------------------------------------------------------------------------
+
+def parse_variant(name: str):
+    """-> (fmt, anchor, trainable) for a variant name."""
+    if name == "pretrain":
+        return None, None, "all"
+    if name == "ft_fp":
+        return None, None, "quant"
+    if name.startswith("qat_ss_"):
+        fmt = F.parse(name[len("qat_ss_"):])
+        anchor = F.mxint(8) if fmt.kind == "int" else F.mxfp(8)
+        return fmt, anchor, "quant"
+    if name.startswith("qat_"):
+        return F.parse(name[len("qat_"):]), None, "quant"
+    raise ValueError(f"unknown train variant {name!r}")
+
+
+def variant_trainable(cfg: M.ModelConfig, name: str):
+    """Indices (into param_specs order) of the trainable parameter set."""
+    _, _, which = parse_variant(name)
+    specs = M.param_specs(cfg)
+    if which == "all":
+        return list(range(len(specs)))
+    return [i for i, s in enumerate(specs) if s.quantized]
+
+
+def all_variants():
+    """Every train-step graph exported by aot.py."""
+    names = ["pretrain", "ft_fp"]
+    names += [f"qat_int{b}" for b in (2, 4, 6, 8)]
+    names += [f"qat_fp{b}" for b in (4, 6, 8)]
+    # Anchor-SS targets below the anchor (the anchor epoch itself reuses
+    # qat_int8 / qat_fp8 — fake-quant is idempotent at the anchor format).
+    names += [f"qat_ss_int{b}" for b in (2, 4, 6)]
+    names += [f"qat_ss_fp{b}" for b in (4, 6)]
+    return names
+
+
+def make_train_step(cfg: M.ModelConfig, variant: str):
+    """Build the flat-signature train step for AOT lowering.
+
+    Signature: ``(lr f32[], step i32[], tokens i32[B,T+1],
+    *train, *frozen, *m, *v) -> (loss, *train', *m', *v')``.
+    """
+    fmt, anchor, _ = parse_variant(variant)
+    wq = M.make_weight_quantizer(fmt, anchor, cfg.block_size)
+    specs = M.param_specs(cfg)
+    t_idx = variant_trainable(cfg, variant)
+    t_set = set(t_idx)
+    f_idx = [i for i in range(len(specs)) if i not in t_set]
+
+    def loss_fn(train_list, frozen_list, tokens):
+        flat = [None] * len(specs)
+        for j, i in enumerate(t_idx):
+            flat[i] = train_list[j]
+        for j, i in enumerate(f_idx):
+            flat[i] = frozen_list[j]
+        params = M.params_from_flat(cfg, flat)
+        return M.nll_loss(params, tokens, cfg, wq=wq)
+
+    n_t = len(t_idx)
+    n_f = len(f_idx)
+
+    def step_fn(lr, step, tokens, *rest):
+        assert len(rest) == n_t + n_f + 2 * n_t, (len(rest), n_t, n_f)
+        train = list(rest[:n_t])
+        frozen = list(rest[n_t:n_t + n_f])
+        m = list(rest[n_t + n_f:n_t + n_f + n_t])
+        v = list(rest[n_t + n_f + n_t:])
+        loss, grads = jax.value_and_grad(loss_fn)(train, frozen, tokens)
+        stepf = step.astype(jnp.float32)
+        new_t, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(train, grads, m, v):
+            p2, m2, v2 = adamw_update(p, g, mi, vi, stepf, lr)
+            new_t.append(p2)
+            new_m.append(m2)
+            new_v.append(v2)
+        return tuple([loss] + new_t + new_m + new_v)
+
+    return step_fn, t_idx, f_idx

@@ -1,0 +1,1 @@
+"""MF-QAT python test suite."""

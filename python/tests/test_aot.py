@@ -1,0 +1,83 @@
+"""AOT lowering tests: HLO text well-formedness and manifest consistency."""
+
+import json
+import os
+
+import pytest
+
+from compile import model as M
+from compile import train as T
+from compile.aot import lower_forward, lower_nll, lower_train
+
+
+CFG = M.ModelConfig("unit", vocab=64, d_model=32, n_layers=1, n_heads=2,
+                    seq_len=16, block_size=32)
+
+
+def test_forward_hlo_has_expected_signature():
+    text = lower_forward(CFG, 1)
+    assert text.startswith("HloModule")
+    # Entry layout: tokens + one array per param -> one tuple result.
+    n_params = len(M.param_specs(CFG))
+    assert "s32[1,16]" in text  # tokens
+    assert f"f32[{CFG.vocab},{CFG.d_model}]" in text  # embedding arg
+    assert text.count("ENTRY") == 1
+    _ = n_params
+
+
+def test_nll_hlo_returns_scalar():
+    text = lower_nll(CFG, 2)
+    assert "s32[2,17]" in text  # tokens of width seq+1
+    assert "->(f32[])" in text.replace(" ", "") or "f32[]" in text
+
+
+def test_train_hlo_io_arity():
+    text = lower_train(CFG, "qat_int4", 2)
+    assert text.startswith("HloModule")
+    n_t = len(T.variant_trainable(CFG, "qat_int4"))
+    n = len(M.param_specs(CFG))
+    # Inputs: lr, step, tokens, train, frozen, m, v.
+    n_inputs = 3 + n_t + (n - n_t) + 2 * n_t
+    entry = [l for l in text.splitlines() if "entry_computation_layout" in l][0]
+    assert entry.count("f32[") + entry.count("s32[") >= n_inputs
+
+
+def test_train_hlo_contains_quantization_ops():
+    """The QAT graph must embed the fake-quant (bitcast exponent extraction
+    from the Pallas kernel lowers to and/shift ops on s32)."""
+    fp = lower_train(CFG, "ft_fp", 2)
+    qat = lower_train(CFG, "qat_int4", 2)
+    assert len(qat) > len(fp), "QAT graph strictly larger than FP graph"
+    assert "bitcast-convert" in qat, "exponent extraction present"
+    assert "bitcast-convert" not in fp, "FP graph has no quantization"
+
+
+def test_ss_variant_has_two_quant_passes():
+    one = lower_train(CFG, "qat_int4", 2)
+    two = lower_train(CFG, "qat_ss_int4", 2)
+    assert two.count("bitcast-convert") > one.count("bitcast-convert")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                    "../../artifacts/tiny/manifest.json")),
+    reason="artifacts not built",
+)
+def test_emitted_manifest_consistent_with_model():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/tiny")
+    with open(os.path.join(path, "manifest.json")) as f:
+        man = json.load(f)
+    cfg = M.CONFIGS[man["config"]["name"]]
+    specs = M.param_specs(cfg)
+    assert len(man["params"]) == len(specs)
+    for got, want in zip(man["params"], specs):
+        assert got["name"] == want.name
+        assert tuple(got["shape"]) == want.shape
+        assert got["quantized"] == want.quantized
+    assert man["n_params"] == M.n_params(cfg)
+    for art in man["artifacts"].values():
+        assert os.path.exists(os.path.join(path, art["file"])), art
+    # Trainable index lists point at quantized params for QAT variants.
+    qat = man["artifacts"]["train_qat_int4"]["trainable"]
+    for i in qat:
+        assert man["params"][i]["quantized"]

@@ -1,0 +1,56 @@
+"""Format algebra tests (mirror of rust formats/mod.rs tests)."""
+
+import pytest
+
+from compile import formats as F
+
+
+def test_paper_bitwidth_map():
+    assert (F.mxfp(4).exp_bits, F.mxfp(4).man_bits) == (2, 1)
+    assert (F.mxfp(5).exp_bits, F.mxfp(5).man_bits) == (2, 2)
+    assert (F.mxfp(6).exp_bits, F.mxfp(6).man_bits) == (3, 2)
+    assert (F.mxfp(7).exp_bits, F.mxfp(7).man_bits) == (3, 3)
+    assert (F.mxfp(8).exp_bits, F.mxfp(8).man_bits) == (4, 3)
+
+
+def test_emax_matches_paper():
+    # MXINT: emax = b - 2 (so delta_e = b_h - b_l, section 3.3).
+    for b in range(2, 9):
+        assert F.mxint(b).emax == b - 2
+    # MXFP: emax = 2^(eta-1).
+    assert F.mxfp(4).emax == 2
+    assert F.mxfp(6).emax == 4
+    assert F.mxfp(8).emax == 8
+
+
+def test_max_values_are_ocp():
+    assert F.mxint(8).max_value == 127.0
+    assert F.mxint(2).max_value == 1.0
+    assert F.mxfp(4).max_value == 6.0     # FP4 E2M1
+    assert F.mxfp(6).max_value == 28.0    # FP6 E3M2
+    assert F.mxfp(8).max_value == 448.0   # FP8 E4M3 (OCP NaN slot)
+    assert F.mxfp(5).max_value == 7.0
+    assert F.mxfp(7).max_value == 30.0
+
+
+def test_int_ranges():
+    assert F.mxint(2).int_range == (-2, 1)
+    assert F.mxint(8).int_range == (-128, 127)
+
+
+def test_parse_roundtrip():
+    for f in F.ALL_INT + F.ALL_FP:
+        assert F.parse(f.name) == f
+        assert F.parse(f.name.upper()) == f
+    assert F.parse("mxint4") == F.mxint(4)
+    with pytest.raises(ValueError):
+        F.parse("int9")
+    with pytest.raises(Exception):
+        F.parse("fp3")
+    with pytest.raises(ValueError):
+        F.parse("nonsense")
+
+
+def test_training_format_sets():
+    assert [f.bits for f in F.TRAIN_INT] == [2, 4, 6, 8]
+    assert [f.bits for f in F.TRAIN_FP] == [4, 6, 8]

@@ -1,0 +1,143 @@
+"""L1 Pallas kernels vs the pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes, dtypes-of-content (magnitude regimes), bitwidths
+and block sizes; every comparison demands exact equality (interpret-mode
+Pallas must be bit-identical to the oracle since both run the same jax ops).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats as F
+from compile.kernels import ref
+from compile.kernels.mx_quant import fake_quantize_pallas, _pick_tile
+from compile.kernels.mx_matmul import mx_matmul_pallas
+from compile.kernels.ss_convert import ss_convert_pallas
+
+ALL_FMTS = F.ALL_INT + F.ALL_FP
+
+
+def wild(rng, shape, scale_pow):
+    """Values spanning many binades, with zeros and sign mix."""
+    v = rng.normal(size=shape) * (10.0 ** scale_pow)
+    mask = rng.random(size=shape) < 0.05
+    v = np.where(mask, 0.0, v)
+    return v.astype(np.float32)
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS, ids=lambda f: f.name)
+def test_fq_kernel_matches_oracle_exactly(fmt):
+    rng = np.random.default_rng(1)
+    v = wild(rng, (24, 96), 0)
+    got = np.asarray(fake_quantize_pallas(v, fmt, 32))
+    want = np.asarray(ref.fake_quantize(v, fmt, 32))
+    assert np.array_equal(got, want), fmt
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    rows=st.integers(1, 40),
+    nblocks=st.integers(1, 6),
+    bs=st.sampled_from([8, 16, 32]),
+    scale_pow=st.integers(-25, 25),
+    fmt_i=st.integers(0, len(ALL_FMTS) - 1),
+)
+def test_hypothesis_fq_kernel_equals_oracle(seed, rows, nblocks, bs, scale_pow, fmt_i):
+    fmt = ALL_FMTS[fmt_i]
+    rng = np.random.default_rng(seed)
+    v = wild(rng, (rows, nblocks * bs), scale_pow)
+    got = np.asarray(fake_quantize_pallas(v, fmt, bs))
+    want = np.asarray(ref.fake_quantize(v, fmt, bs))
+    assert np.array_equal(got, want), (fmt, rows, nblocks, bs, scale_pow)
+
+
+def test_fq_kernel_3d_input():
+    rng = np.random.default_rng(2)
+    v = wild(rng, (3, 4, 64), 0)
+    got = np.asarray(fake_quantize_pallas(v, F.mxint(5), 32))
+    want = np.asarray(ref.fake_quantize(v, F.mxint(5), 32))
+    assert got.shape == (3, 4, 64)
+    assert np.array_equal(got, want)
+
+
+def test_pick_tile_divides():
+    assert _pick_tile(128, 64) == 64
+    assert _pick_tile(96, 64) == 48
+    assert _pick_tile(7, 64) == 7
+    assert _pick_tile(13, 4) == 1
+
+
+@pytest.mark.parametrize(
+    "anchor,targets",
+    [(F.mxint(8), F.ALL_INT[:-1]), (F.mxfp(8), F.ALL_FP[:-1])],
+    ids=["int", "fp"],
+)
+def test_ss_kernel_matches_oracle(anchor, targets):
+    rng = np.random.default_rng(3)
+    v = wild(rng, (16, 128), 0)
+    se, p = ref.quantize_blocks(v, anchor, 32)
+    for t in targets:
+        se_k, p_k = ss_convert_pallas(se, p, anchor, t)
+        se_r, p_r = ref.ss_convert(se, p, anchor, t)
+        assert np.array_equal(np.asarray(se_k), np.asarray(se_r)), t
+        assert np.array_equal(np.asarray(p_k), np.asarray(p_r)), t
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    rows=st.integers(1, 24),
+    tbits=st.integers(2, 8),
+)
+def test_hypothesis_ss_kernel_int(seed, rows, tbits):
+    rng = np.random.default_rng(seed)
+    v = wild(rng, (rows, 64), 0)
+    se, p = ref.quantize_blocks(v, F.mxint(8), 32)
+    se_k, p_k = ss_convert_pallas(se, p, F.mxint(8), F.mxint(tbits))
+    se_r, p_r = ref.ss_convert(se, p, F.mxint(8), F.mxint(tbits))
+    assert np.array_equal(np.asarray(se_k), np.asarray(se_r))
+    assert np.array_equal(np.asarray(p_k), np.asarray(p_r))
+
+
+def test_mx_matmul_kernel_matches_ref():
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    w = rng.normal(size=(64, 128)).astype(np.float32)
+    se, p = ref.quantize_blocks(w, F.mxint(6), 32)
+    got = np.asarray(mx_matmul_pallas(x, se, p))
+    want = np.asarray(ref.mx_matmul_ref(x, se, p, 64, 32))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    b=st.integers(1, 8),
+    n=st.sampled_from([16, 32, 64]),
+    k_blocks=st.integers(1, 4),
+)
+def test_hypothesis_mx_matmul(seed, b, n, k_blocks):
+    rng = np.random.default_rng(seed)
+    k = 32 * k_blocks
+    x = rng.normal(size=(b, k)).astype(np.float32)
+    w = rng.normal(size=(n, k)).astype(np.float32)
+    se, p = ref.quantize_blocks(w, F.mxfp(8), 32)
+    got = np.asarray(mx_matmul_pallas(x, se, p))
+    want = np.asarray(ref.mx_matmul_ref(x, se, p, n, 32))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_with_quantized_weights_bounds_error():
+    """Sanity: 8-bit MX weights give a close matmul; 2-bit a worse one."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(4, 256)).astype(np.float32)
+    w = rng.normal(size=(32, 256)).astype(np.float32)
+    exact = x @ w.T
+    errs = {}
+    for bits in (8, 2):
+        se, p = ref.quantize_blocks(w, F.mxint(bits), 32)
+        y = np.asarray(mx_matmul_pallas(x, se, p))
+        errs[bits] = float(np.mean((y - exact) ** 2))
+    assert errs[8] < errs[2] / 100.0, errs

@@ -1,0 +1,128 @@
+"""L2 model tests: shapes, causality, quantizer wiring, STE gradients."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import formats as F
+from compile import model as M
+from compile.kernels import ref
+
+
+CFG = M.ModelConfig("unit", vocab=64, d_model=32, n_layers=2, n_heads=2,
+                    seq_len=16, block_size=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def test_param_specs_cover_model():
+    specs = M.param_specs(CFG)
+    names = [s.name for s in specs]
+    assert names[0] == "emb" and names[-1] == "head"
+    assert len([s for s in specs if s.quantized]) == 4 * CFG.n_layers
+    # lm_head and embeddings are excluded from quantization (paper 3.2).
+    by_name = {s.name: s for s in specs}
+    assert not by_name["head"].quantized
+    assert not by_name["emb"].quantized
+    assert by_name["l0.qkv"].quantized
+    # Quantized last dims are block-aligned.
+    for s in specs:
+        if s.quantized:
+            assert s.shape[-1] % CFG.block_size == 0, s
+
+
+def test_forward_shapes(params):
+    tokens = jnp.zeros((3, CFG.seq_len), jnp.int32)
+    logits = M.forward(params, tokens, CFG)
+    assert logits.shape == (3, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_causality(params):
+    """Changing a future token must not affect earlier logits."""
+    rng = np.random.default_rng(0)
+    t1 = rng.integers(0, CFG.vocab, size=(1, CFG.seq_len)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 7) % CFG.vocab
+    l1 = np.asarray(M.forward(params, jnp.asarray(t1), CFG))
+    l2 = np.asarray(M.forward(params, jnp.asarray(t2), CFG))
+    assert np.array_equal(l1[0, :-1], l2[0, :-1]), "causal mask violated"
+    assert not np.array_equal(l1[0, -1], l2[0, -1])
+
+
+def test_nll_close_to_uniform_at_init(params):
+    rng = np.random.default_rng(1)
+    tokens = rng.integers(0, CFG.vocab, size=(4, CFG.seq_len + 1)).astype(np.int32)
+    nll = float(M.nll_loss(params, jnp.asarray(tokens), CFG))
+    assert abs(nll - np.log(CFG.vocab)) < 0.5
+
+
+def test_quantizer_wiring_changes_output(params):
+    tokens = jnp.zeros((1, CFG.seq_len), jnp.int32)
+    base = np.asarray(M.forward(params, tokens, CFG))
+    wq = M.make_weight_quantizer(F.mxint(2), None, CFG.block_size)
+    quant = np.asarray(M.forward(params, tokens, CFG, wq=wq))
+    assert not np.array_equal(base, quant), "int2 fake-quant must alter logits"
+    # And the quantized forward equals manually fake-quantizing the weights.
+    manual = dict(params)
+    for s in M.param_specs(CFG):
+        if s.quantized:
+            manual[s.name] = ref.fake_quantize(params[s.name], F.mxint(2), CFG.block_size)
+    want = np.asarray(M.forward(manual, tokens, CFG))
+    assert np.allclose(quant, want, atol=1e-6)
+
+
+def test_anchor_composition_equals_ss(params):
+    """The 3.5 training transform Q_A->t(Q_A(W)) == value-level SS."""
+    w = params["l0.up"]
+    wq = M.make_weight_quantizer(F.mxint(3), F.mxint(8), CFG.block_size)
+    got = np.asarray(wq(w))
+    anchored = ref.fake_quantize(w, F.mxint(8), CFG.block_size)
+    want = np.asarray(ref.ss_fake_quantize(anchored, F.mxint(8), F.mxint(3),
+                                           CFG.block_size))
+    assert np.array_equal(got, want)
+
+
+def test_ste_gradient_is_identity(params):
+    wq = M.make_weight_quantizer(F.mxint(4), None, CFG.block_size)
+    w = params["l0.proj"]
+
+    def f(w):
+        return jnp.sum(wq(w) * 3.0)
+
+    g = np.asarray(jax.grad(f)(w))
+    assert np.allclose(g, 3.0), "STE must pass gradients through unchanged"
+
+
+def test_grads_flow_to_quantized_weights_only_through_nll(params):
+    tokens = jnp.zeros((2, CFG.seq_len + 1), jnp.int32)
+    wq = M.make_weight_quantizer(F.mxint(4), None, CFG.block_size)
+
+    def loss(qkv):
+        p = dict(params)
+        p["l0.qkv"] = qkv
+        return M.nll_loss(p, tokens, CFG, wq=wq)
+
+    g = np.asarray(jax.grad(loss)(params["l0.qkv"]))
+    assert np.isfinite(g).all()
+    assert np.abs(g).max() > 0.0
+
+
+def test_flat_roundtrip(params):
+    flat = M.flat_from_params(CFG, params)
+    back = M.params_from_flat(CFG, flat)
+    for name in params:
+        assert np.array_equal(np.asarray(params[name]), np.asarray(back[name]))
+
+
+def test_configs_are_block_aligned():
+    for cfg in M.CONFIGS.values():
+        for s in M.param_specs(cfg):
+            if s.quantized:
+                assert s.shape[-1] % cfg.block_size == 0, (cfg.name, s)
+        assert cfg.d_model % cfg.n_heads == 0

@@ -1,0 +1,226 @@
+"""Oracle (ref.py) numerics tests: exactness of the bit-level helpers and the
+quantization semantics, including hypothesis sweeps."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import formats as F
+from compile.kernels import ref
+
+
+# --------------------------------------------------------------------------
+# exact helpers
+# --------------------------------------------------------------------------
+
+def test_floor_log2_exact_on_normals():
+    xs = np.array([1.0, 0.9999999, 2.0, 3.999, 4.0, 0.5, 1e-30, 2.0**-126],
+                  np.float32)
+    got = np.asarray(ref.floor_log2(xs))
+    want = np.array([math.floor(math.log2(abs(float(x)))) for x in xs])
+    assert (got == want).all(), (got, want)
+
+
+def test_floor_log2_subnormals_clamp():
+    tiny = np.float32(1e-45)  # subnormal
+    assert int(np.asarray(ref.floor_log2(tiny))) == -127
+
+
+def test_exp2i_exact():
+    # Scales live in [-126, 127]: the f32 normal range (SCALE_EXP_MIN docs).
+    es = np.arange(F.SCALE_EXP_MIN, 128, dtype=np.int32)
+    got = np.asarray(ref.exp2i(es), np.float64)
+    want = np.array([2.0**int(e) for e in es])
+    assert (got == want).all()
+    # 2^-127 is subnormal; XLA CPU may flush it — either value is acceptable
+    # because the scale clamp keeps it out of the quantization path.
+    low = float(np.asarray(ref.exp2i(np.int32(-127))))
+    assert low in (0.0, 2.0**-127)
+
+
+# --------------------------------------------------------------------------
+# element quantizers
+# --------------------------------------------------------------------------
+
+def test_int_elem_rne_ties():
+    u = np.array([0.5, 1.5, 2.5, -0.5, -1.5, 100.0, -100.0], np.float32)
+    got = np.asarray(ref.quantize_int_elem(u, 4))
+    assert got.tolist() == [0.0, 2.0, 2.0, -0.0, -2.0, 7.0, -8.0]
+
+
+def fp_magnitudes(fmt):
+    """All representable non-negative magnitudes of a minifloat format."""
+    m = fmt.man_bits
+    vals = [k * 2.0 ** (fmt.emin - m) for k in range(2 ** m)]  # subnormals
+    top_m = 2 ** m
+    for E in range(fmt.emin, fmt.emax + 1):
+        for k in range(top_m):
+            v = (1 + k / top_m) * 2.0 ** E
+            if v <= fmt.max_value:
+                vals.append(v)
+    return sorted(set(vals))
+
+
+@pytest.mark.parametrize("bits", [4, 5, 6, 7, 8])
+def test_fp_elem_is_nearest(bits):
+    fmt = F.mxfp(bits)
+    grid = np.array(fp_magnitudes(fmt))
+    xs = np.linspace(-1.4 * fmt.max_value, 1.4 * fmt.max_value, 1001).astype(
+        np.float32)
+    got = np.asarray(ref.quantize_fp_elem(xs, fmt))
+    for x, q in zip(xs, got):
+        a = min(abs(float(x)), fmt.max_value)
+        best = grid[np.argmin(np.abs(grid - a))]
+        # Nearest (ties may legitimately differ; check distance optimality).
+        assert abs(abs(q) - a) <= abs(best - a) + 1e-6, (x, q, best)
+        assert (q <= 0) == (x <= 0) or q == 0
+
+
+@pytest.mark.parametrize("bits", [4, 5, 6, 7, 8])
+def test_fp_elem_fixed_points(bits):
+    fmt = F.mxfp(bits)
+    grid = np.array(fp_magnitudes(fmt), np.float32)
+    got = np.asarray(ref.quantize_fp_elem(grid, fmt))
+    assert (got == grid).all()
+    gotn = np.asarray(ref.quantize_fp_elem(-grid, fmt))
+    assert (gotn == -grid).all()
+
+
+def test_fp_elem_e2m1_matches_known_table():
+    fmt = F.mxfp(4)
+    # OCP FP4: 0, .5, 1, 1.5, 2, 3, 4, 6
+    assert fp_magnitudes(fmt) == [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+    # RNE ties to even code: 1.25 -> 1.0, 1.75 -> 2.0, 2.5 -> 2.0.
+    u = np.array([1.25, 1.75, 2.5, 0.25], np.float32)
+    got = np.asarray(ref.quantize_fp_elem(u, fmt))
+    assert got.tolist() == [1.0, 2.0, 2.0, 0.0]
+
+
+# --------------------------------------------------------------------------
+# block quantization
+# --------------------------------------------------------------------------
+
+def test_shared_exponent_basics():
+    fmt = F.mxint(8)
+    vb = np.array([[[0.5, -1.0, 0.25, 0.1]]], np.float32)
+    se = np.asarray(ref.shared_exponent(jnp.asarray(vb), fmt))
+    assert se.reshape(-1)[0] == -6  # floor(log2 1.0) - 6
+    zero = np.zeros((1, 1, 4), np.float32)
+    assert np.asarray(ref.shared_exponent(jnp.asarray(zero), fmt)).reshape(-1)[0] == F.SCALE_EXP_MIN
+
+
+def test_fake_quantize_error_bound_int():
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(4, 64)).astype(np.float32)
+    for bits in range(2, 9):
+        fq = np.asarray(ref.fake_quantize(v, F.mxint(bits), 32))
+        # Per-block bound: |err| <= X (bin radius X/2 + positive clip).
+        vb = v.reshape(4, 2, 32)
+        se = np.asarray(ref.shared_exponent(jnp.asarray(vb), F.mxint(bits)))
+        X = 2.0 ** se.astype(np.float64)
+        err = np.abs(fq - v).reshape(4, 2, 32)
+        assert (err <= X[..., None] + 1e-12).all(), bits
+
+
+def test_fake_quantize_idempotent():
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=(2, 64)).astype(np.float32)
+    for fmt in [F.mxint(4), F.mxint(8), F.mxfp(4), F.mxfp(8)]:
+        once = np.asarray(ref.fake_quantize(v, fmt, 32))
+        twice = np.asarray(ref.fake_quantize(once, fmt, 32))
+        assert np.array_equal(once, twice), fmt
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    bits=st.integers(2, 8),
+    bs=st.sampled_from([8, 16, 32, 64]),
+)
+def test_hypothesis_int_fq_bound(seed, bits, bs):
+    rng = np.random.default_rng(seed)
+    scale = 10.0 ** rng.integers(-20, 20)
+    v = (rng.normal(size=(2, 2 * bs)) * scale).astype(np.float32)
+    fq = np.asarray(ref.fake_quantize(v, F.mxint(bits), bs))
+    assert np.isfinite(fq).all()
+    vb = v.reshape(2, 2, bs)
+    amax = np.abs(vb).max(axis=-1, keepdims=True)
+    # Quantized magnitude can exceed per-element value but never the block
+    # max scaled beyond one bin.
+    assert (np.abs(fq.reshape(2, 2, bs)) <= amax * 1.5 + 1e-30).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    bits=st.sampled_from([4, 5, 6, 7, 8]),
+    bs=st.sampled_from([8, 16, 32, 64]),
+)
+def test_hypothesis_fp_fq_relative_error(seed, bits, bs):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(1, 4 * bs)).astype(np.float32)
+    fmt = F.mxfp(bits)
+    fq = np.asarray(ref.fake_quantize(v, fmt, bs))
+    vb = v.reshape(1, 4, bs)
+    se = np.asarray(ref.shared_exponent(jnp.asarray(vb), fmt))
+    X = 2.0 ** se.astype(np.float64)
+    # err <= max(relative 2^-(m+1), clip bound, subnormal step X*2^(emin-m)).
+    m = fmt.man_bits
+    err = np.abs(fq - v).reshape(1, 4, bs)
+    bound = np.maximum(
+        np.abs(v).reshape(1, 4, bs) * 2.0 ** (-m - 1),
+        X[..., None] * max(2.0 ** (fmt.emax - m + 1), 2.0 ** (fmt.emin - m)),
+    )
+    assert (err <= bound + 1e-30).all()
+
+
+# --------------------------------------------------------------------------
+# slice-and-scale
+# --------------------------------------------------------------------------
+
+def test_ss_scale_matches_direct():
+    rng = np.random.default_rng(2)
+    v = rng.normal(size=(1, 128)).astype(np.float32)
+    for anchor, targets in ((F.mxint(8), F.ALL_INT[:-1]), (F.mxfp(8), F.ALL_FP[:-1])):
+        va = ref.fake_quantize(v, anchor, 32)
+        vb = np.asarray(va).reshape(1, 4, 32)
+        se_h = ref.shared_exponent(jnp.asarray(vb), anchor)
+        p_h = jnp.asarray(vb) * ref.exp2i(-se_h)[..., None]
+        for t in targets:
+            se_l, _ = ref.ss_convert(se_h, p_h, anchor, t)
+            se_direct = ref.shared_exponent(jnp.asarray(v.reshape(1, 4, 32)), t)
+            assert np.array_equal(np.asarray(se_l), np.asarray(se_direct)), t
+
+
+def test_ss_equals_fake_quant_on_anchor_values():
+    """The SS theorem: value-level SS == direct fake-quant of anchor values."""
+    rng = np.random.default_rng(3)
+    v = rng.normal(size=(4, 96)).astype(np.float32)
+    for anchor, targets in ((F.mxint(8), F.ALL_INT[:-1]), (F.mxfp(8), F.ALL_FP[:-1])):
+        va = np.asarray(ref.fake_quantize(v, anchor, 32))
+        for t in targets:
+            ss = np.asarray(ref.ss_fake_quantize(va, anchor, t, 32))
+            direct = np.asarray(ref.fake_quantize(va, t, 32))
+            assert np.array_equal(ss, direct), (anchor, t)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), tbits=st.integers(2, 7))
+def test_hypothesis_ssint_close_to_direct(seed, tbits):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(1, 1024)).astype(np.float32)
+    t = F.mxint(tbits)
+    va = np.asarray(ref.fake_quantize(v, F.mxint(8), 64))
+    ss = np.asarray(ref.ss_fake_quantize(va, F.mxint(8), t, 64))
+    direct = np.asarray(ref.fake_quantize(v, t, 64))
+    mse_ss = float(np.mean((ss - v) ** 2))
+    mse_direct = float(np.mean((direct - v) ** 2))
+    # At n=1024 the statistical gap is small (paper App. C) except near the
+    # anchor bitwidth, where the direct error is tiny and the double-rounding
+    # term dominates the *ratio* (absolute gap stays negligible).
+    bound = 2.5 if tbits >= 7 else 1.6
+    assert mse_ss <= mse_direct * bound + 1e-10, (tbits, mse_ss, mse_direct)

@@ -1,0 +1,100 @@
+"""Train-step builder tests: AdamW semantics, variant parsing, trainable
+splits, and loss decrease over a few steps."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import formats as F
+from compile import model as M
+from compile import train as T
+
+
+CFG = M.ModelConfig("unit", vocab=64, d_model=32, n_layers=1, n_heads=2,
+                    seq_len=16, block_size=32)
+
+
+def test_parse_variants():
+    assert T.parse_variant("pretrain") == (None, None, "all")
+    assert T.parse_variant("ft_fp") == (None, None, "quant")
+    fmt, anchor, which = T.parse_variant("qat_int4")
+    assert fmt == F.mxint(4) and anchor is None and which == "quant"
+    fmt, anchor, _ = T.parse_variant("qat_ss_int2")
+    assert fmt == F.mxint(2) and anchor == F.mxint(8)
+    fmt, anchor, _ = T.parse_variant("qat_ss_fp4")
+    assert fmt == F.mxfp(4) and anchor == F.mxfp(8)
+    with pytest.raises(ValueError):
+        T.parse_variant("qat_bogus")
+
+
+def test_trainable_splits():
+    all_idx = T.variant_trainable(CFG, "pretrain")
+    quant_idx = T.variant_trainable(CFG, "qat_int4")
+    assert len(all_idx) == len(M.param_specs(CFG))
+    assert len(quant_idx) == 4 * CFG.n_layers
+    specs = M.param_specs(CFG)
+    assert all(specs[i].quantized for i in quant_idx)
+
+
+def test_all_variants_cover_paper_schedule():
+    v = T.all_variants()
+    for name in ["pretrain", "ft_fp", "qat_int2", "qat_int8", "qat_fp4",
+                 "qat_fp8", "qat_ss_int2", "qat_ss_fp6"]:
+        assert name in v, name
+    # The anchor epochs reuse plain anchor QAT; no qat_ss_int8/fp8 graphs.
+    assert "qat_ss_int8" not in v
+    assert "qat_ss_fp8" not in v
+
+
+def test_adamw_matches_reference_update():
+    p = jnp.array([1.0, -2.0])
+    g = jnp.array([0.5, 0.25])
+    m = jnp.zeros(2)
+    v = jnp.zeros(2)
+    p2, m2, v2 = T.adamw_update(p, g, m, v, step=1.0, lr=0.1)
+    # By hand: m=0.1*g_hat... bias-corrected first step => mh=g, vh=g^2
+    # update = lr*(g/(|g|+eps) + wd*p) = 0.1*(sign(g) + 0.01*p)
+    want0 = 1.0 - 0.1 * (1.0 + 0.01 * 1.0)
+    want1 = -2.0 - 0.1 * (1.0 + 0.01 * -2.0)
+    np.testing.assert_allclose(np.asarray(p2), [want0, want1], rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(m2), 0.1 * np.asarray(g), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), 0.001 * np.asarray(g) ** 2,
+                               rtol=1e-5)
+
+
+def run_steps(variant, n_steps=4, lr=1e-3, seed=0):
+    step_fn, t_idx, f_idx = T.make_train_step(CFG, variant)
+    params = M.init_params(CFG, seed=seed)
+    flat = M.flat_from_params(CFG, params)
+    train = [flat[i] for i in t_idx]
+    frozen = [flat[i] for i in f_idx]
+    m = [jnp.zeros_like(t) for t in train]
+    v = [jnp.zeros_like(t) for t in train]
+    rng = np.random.default_rng(seed)
+    losses = []
+    for s in range(1, n_steps + 1):
+        tokens = rng.integers(0, 8, size=(2, CFG.seq_len + 1)).astype(np.int32)
+        out = step_fn(jnp.float32(lr), jnp.int32(s), jnp.asarray(tokens),
+                      *train, *frozen, *m, *v)
+        loss = float(out[0])
+        n_t = len(train)
+        train = list(out[1:1 + n_t])
+        m = list(out[1 + n_t:1 + 2 * n_t])
+        v = list(out[1 + 2 * n_t:])
+        losses.append(loss)
+    return losses, train
+
+
+@pytest.mark.parametrize("variant", ["pretrain", "ft_fp", "qat_int4", "qat_ss_int4"])
+def test_loss_decreases(variant):
+    losses, _ = run_steps(variant, n_steps=5)
+    assert all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0], (variant, losses)
+
+
+def test_qat_trains_on_quantized_weights():
+    """After QAT steps the *fake-quantized* weights should fit the data
+    better than fake-quantizing the initial weights (the point of QAT)."""
+    losses, _ = run_steps("qat_int2", n_steps=6, lr=3e-3)
+    assert losses[-1] < losses[0] * 0.999, losses

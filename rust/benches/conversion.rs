@@ -1,0 +1,79 @@
+//! Slice-and-Scale conversion benchmarks — the paper's headline runtime
+//! claim: deriving a low-precision model from the anchor must be much
+//! cheaper than re-quantizing from FP32 (no FP32 weights are even stored).
+//!
+//! Rows map to the paper's elastic-inference pipeline (§3.5):
+//!   ss/int8->intN          packed anchor → packed target (per element)
+//!   ss/fp8->fpN            same for MXFP (LUT requant)
+//!   baseline/fp32->intN    direct quantization from FP32 (the path SS avoids)
+//!   pipeline/anchor->serve SS + dequant to the f32 serving buffer
+//!   ablation/round-mode    SSMXINT RNE vs round-half-away (§3.3 variant)
+
+use mfqat::formats::{ElementFormat, MxFormat, RoundMode};
+use mfqat::tensor::MxTensor;
+use mfqat::util::stats::mse;
+use mfqat::util::timer::bench;
+use mfqat::util::Rng;
+
+const N: usize = 1 << 20;
+
+fn main() {
+    let mut rng = Rng::new(2);
+    let data = rng.normal_vec(N);
+    let shape = [N / 1024, 1024];
+    let anchor_int = MxTensor::quantize(&data, &shape, MxFormat::mxint(8, 32)).unwrap();
+    let anchor_fp = MxTensor::quantize(&data, &shape, MxFormat::mxfp(8, 32)).unwrap();
+
+    println!("== slice-and-scale: anchor -> target (N = {N} elements) ==");
+    for bits in [2u8, 4, 6] {
+        let t = ElementFormat::int(bits);
+        let r = bench(&format!("ss/int8->int{bits}"), 6, 0.4, || {
+            std::hint::black_box(anchor_int.slice_and_scale(t).unwrap());
+        });
+        println!("{}", r.report(N as f64, "elem"));
+    }
+    for bits in [4u8, 6] {
+        let t = ElementFormat::fp_from_bits(bits);
+        let r = bench(&format!("ss/fp8->fp{bits}"), 6, 0.4, || {
+            std::hint::black_box(anchor_fp.slice_and_scale(t).unwrap());
+        });
+        println!("{}", r.report(N as f64, "elem"));
+    }
+
+    println!("\n== baseline: direct quantization from FP32 ==");
+    for bits in [2u8, 4, 6] {
+        let f = MxFormat::mxint(bits, 32);
+        let r = bench(&format!("baseline/fp32->int{bits}"), 6, 0.4, || {
+            std::hint::black_box(MxTensor::quantize(&data, &shape, f).unwrap());
+        });
+        println!("{}", r.report(N as f64, "elem"));
+    }
+
+    println!("\n== full serving derivation: SS + dequantize ==");
+    let mut out = vec![0.0f32; N];
+    for bits in [4u8, 6] {
+        let t = ElementFormat::int(bits);
+        let r = bench(&format!("pipeline/anchor->serve/int{bits}"), 6, 0.4, || {
+            let q = anchor_int.slice_and_scale(t).unwrap();
+            q.dequantize_into(&mut out);
+            std::hint::black_box(&out);
+        });
+        println!("{}", r.report(N as f64, "elem"));
+    }
+
+    println!("\n== ablation: SSMXINT rounding mode (quality + speed) ==");
+    for (name, mode) in [("half-even", RoundMode::HalfEven), ("half-away", RoundMode::HalfAway)] {
+        let r = bench(&format!("ablation/ss-int4/{name}"), 6, 0.3, || {
+            std::hint::black_box(
+                anchor_int
+                    .slice_and_scale_mode(ElementFormat::int(4), mode)
+                    .unwrap(),
+            );
+        });
+        println!("{}", r.report(N as f64, "elem"));
+        let q = anchor_int
+            .slice_and_scale_mode(ElementFormat::int(4), mode)
+            .unwrap();
+        println!("    reconstruction mse vs fp32: {:.6e}", mse(&data, &q.dequantize()));
+    }
+}

@@ -1,0 +1,64 @@
+//! Microbenchmarks for the native MX format layer: block quantization,
+//! dequantization, and sub-byte packing throughput per format.
+//!
+//! Custom harness (`harness = false`; criterion is not in the offline crate
+//! set). Throughput is reported in elements/s — the §Perf targets in
+//! EXPERIMENTS.md reference these names.
+
+use mfqat::formats::{pack, ElementFormat, MxFormat};
+use mfqat::tensor::MxTensor;
+use mfqat::util::timer::bench;
+use mfqat::util::Rng;
+
+const N: usize = 1 << 20; // 1 Mi elements per iteration
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let data = rng.normal_vec(N);
+    let shape = [N / 1024, 1024];
+    println!("== formats: quantize / dequantize / pack (N = {N}) ==");
+
+    for fmt in [
+        ElementFormat::int(2),
+        ElementFormat::int(4),
+        ElementFormat::int(8),
+        ElementFormat::fp_from_bits(4),
+        ElementFormat::fp_from_bits(8),
+    ] {
+        let mx = MxFormat::new(fmt, 32);
+        let r = bench(&format!("quantize/{}", fmt.name()), 8, 0.4, || {
+            std::hint::black_box(MxTensor::quantize(&data, &shape, mx).unwrap());
+        });
+        println!("{}", r.report(N as f64, "elem"));
+
+        let q = MxTensor::quantize(&data, &shape, mx).unwrap();
+        let mut out = vec![0.0f32; N];
+        let r = bench(&format!("dequantize/{}", fmt.name()), 8, 0.4, || {
+            q.dequantize_into(&mut out);
+            std::hint::black_box(&out);
+        });
+        println!("{}", r.report(N as f64, "elem"));
+    }
+
+    println!("\n== bit packing ==");
+    let codes: Vec<i8> = (0..N).map(|i| ((i * 37) % 15) as i8 - 8).collect();
+    for w in [2u8, 3, 4, 6, 8] {
+        let r = bench(&format!("pack/w{w}"), 8, 0.3, || {
+            std::hint::black_box(pack::pack(&codes, w));
+        });
+        println!("{}", r.report(N as f64, "elem"));
+        let packed = pack::pack(&codes, w);
+        let mut out = vec![0i8; N];
+        // §Perf before/after: scalar reference vs word-at-a-time fast path.
+        let r = bench(&format!("unpack_signed/scalar/w{w}"), 8, 0.3, || {
+            pack::unpack_signed_into_scalar(&packed, w, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!("{}", r.report(N as f64, "elem"));
+        let r = bench(&format!("unpack_signed/fast/w{w}"), 8, 0.3, || {
+            pack::unpack_signed_into(&packed, w, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!("{}", r.report(N as f64, "elem"));
+    }
+}

@@ -1,0 +1,406 @@
+//! Anchor checkpoint container (`.mfq` files) — paper §3.5.
+//!
+//! The elastic-inference workflow stores **one** checkpoint in the anchor
+//! format (MXINT8 or MXFP8) and derives every lower-precision variant at
+//! runtime via Slice-and-Scale. A `.mfq` file holds named [`MxTensor`]s plus
+//! free-form JSON metadata (model config, training provenance).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic "MFQAT\0"  | u16 version | u32 meta_len | meta JSON bytes
+//! u32 n_tensors
+//! per tensor:
+//!   u16 name_len | name utf-8
+//!   u8 elem_kind (0=int,1=fp) | u8 bits_or_exp | u8 man | u32 block_size
+//!   u8 ndim | u64 dims[ndim]
+//!   u64 n_scales | i8 scales[n_scales]
+//!   u64 n_packed | u8 packed[n_packed]
+//! u32 n_raw
+//! per raw tensor (f32 — embeddings/norms/head, which the paper leaves in
+//! high precision):
+//!   u16 name_len | name utf-8
+//!   u8 ndim | u64 dims[ndim]
+//!   u64 n_data | f32 data[n_data]
+//! u32 crc32 of everything above
+//! ```
+
+use crate::formats::{ElementFormat, MxFormat};
+use crate::tensor::{MxTensor, Tensor};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"MFQAT\0";
+const VERSION: u16 = 1;
+
+/// A named collection of MX tensors (quantized weights), raw f32 tensors
+/// (high-precision parameters), and metadata.
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    pub meta: BTreeMap<String, Json>,
+    pub tensors: BTreeMap<String, MxTensor>,
+    pub raw: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Checkpoint {
+        Checkpoint::default()
+    }
+
+    pub fn insert(&mut self, name: &str, tensor: MxTensor) {
+        self.tensors.insert(name.to_string(), tensor);
+    }
+
+    pub fn insert_raw(&mut self, name: &str, tensor: Tensor) {
+        self.raw.insert(name.to_string(), tensor);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&MxTensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn get_raw(&self, name: &str) -> Option<&Tensor> {
+        self.raw.get(name)
+    }
+
+    pub fn set_meta(&mut self, key: &str, value: Json) {
+        self.meta.insert(key.to_string(), value);
+    }
+
+    /// Total storage in bytes (packed codes + scales + raw f32 payloads).
+    pub fn storage_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.storage_bytes()).sum::<usize>()
+            + self.raw.values().map(|t| t.len() * 4).sum::<usize>()
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        let meta = Json::Obj(self.meta.clone()).to_string();
+        buf.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        buf.extend_from_slice(meta.as_bytes());
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            match t.format.elem {
+                ElementFormat::Int { bits } => {
+                    buf.push(0);
+                    buf.push(bits);
+                    buf.push(0);
+                }
+                ElementFormat::Fp { exp, man } => {
+                    buf.push(1);
+                    buf.push(exp);
+                    buf.push(man);
+                }
+            }
+            buf.extend_from_slice(&(t.format.block_size as u32).to_le_bytes());
+            buf.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            buf.extend_from_slice(&(t.scales.len() as u64).to_le_bytes());
+            buf.extend_from_slice(unsafe {
+                std::slice::from_raw_parts(t.scales.as_ptr() as *const u8, t.scales.len())
+            });
+            buf.extend_from_slice(&(t.packed.len() as u64).to_le_bytes());
+            buf.extend_from_slice(&t.packed);
+        }
+        buf.extend_from_slice(&(self.raw.len() as u32).to_le_bytes());
+        for (name, t) in &self.raw {
+            buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+            for &x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < MAGIC.len() + 2 + 4 + 4 {
+            bail!("checkpoint truncated");
+        }
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+        let stored_crc = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        if crc32(body) != stored_crc {
+            bail!("checkpoint CRC mismatch (corrupt file)");
+        }
+        let mut r = Reader { b: body, i: 0 };
+        if r.take(6)? != MAGIC {
+            bail!("bad magic (not an .mfq checkpoint)");
+        }
+        let version = r.u16()?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let meta_len = r.u32()? as usize;
+        let meta_text = std::str::from_utf8(r.take(meta_len)?).context("meta utf-8")?;
+        let meta_json = Json::parse(meta_text).map_err(|e| anyhow::anyhow!("meta json: {e}"))?;
+        let meta = match meta_json {
+            Json::Obj(m) => m,
+            _ => bail!("meta must be a JSON object"),
+        };
+        let n_tensors = r.u32()? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n_tensors {
+            let name_len = r.u16()? as usize;
+            let name = std::str::from_utf8(r.take(name_len)?)
+                .context("tensor name utf-8")?
+                .to_string();
+            let kind = r.u8()?;
+            let a = r.u8()?;
+            let b = r.u8()?;
+            let elem = match kind {
+                0 => ElementFormat::int(a),
+                1 => ElementFormat::fp(a, b),
+                k => bail!("bad element kind {k}"),
+            };
+            let block_size = r.u32()? as usize;
+            let ndim = r.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u64()? as usize);
+            }
+            let n_scales = r.u64()? as usize;
+            let scales_bytes = r.take(n_scales)?;
+            let scales: Vec<i8> = scales_bytes.iter().map(|&x| x as i8).collect();
+            let n_packed = r.u64()? as usize;
+            let packed = r.take(n_packed)?.to_vec();
+            let t = MxTensor {
+                format: MxFormat::new(elem, block_size),
+                shape,
+                scales,
+                packed,
+            };
+            // Structural validation.
+            let n = t.len();
+            let expected_packed = crate::formats::pack::packed_len(n, elem.bits());
+            if t.packed.len() != expected_packed {
+                bail!("tensor '{name}': packed length {} != expected {expected_packed}", t.packed.len());
+            }
+            let row_len = t.shape.last().copied().unwrap_or(1).max(1);
+            let rows = if n == 0 { 0 } else { n / row_len };
+            if t.scales.len() != rows * row_len.div_ceil(block_size) {
+                bail!("tensor '{name}': scale count mismatch");
+            }
+            tensors.insert(name, t);
+        }
+        let n_raw = r.u32()? as usize;
+        let mut raw = BTreeMap::new();
+        for _ in 0..n_raw {
+            let name_len = r.u16()? as usize;
+            let name = std::str::from_utf8(r.take(name_len)?)
+                .context("raw tensor name utf-8")?
+                .to_string();
+            let ndim = r.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u64()? as usize);
+            }
+            let n_data = r.u64()? as usize;
+            let bytes = r.take(n_data * 4)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            raw.insert(name.clone(), Tensor::new(&shape, data).context(name)?);
+        }
+        if r.i != body.len() {
+            bail!("trailing bytes in checkpoint");
+        }
+        Ok(Checkpoint { meta, tensors, raw })
+    }
+
+    /// Save to a file (atomic: write temp + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes();
+        let tmp = path.with_extension("mfq.tmp");
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename to {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes).with_context(|| format!("parse {}", path.display()))
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("checkpoint truncated at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// CRC-32 (IEEE 802.3), table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: once_cell::sync::Lazy<[u32; 256]> = once_cell::sync::Lazy::new(|| {
+        let mut table = [0u32; 256];
+        for (i, entry) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *entry = c;
+        }
+        table
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = TABLE[((crc ^ b as u32) & 0xff) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample_checkpoint() -> Checkpoint {
+        let mut rng = Rng::new(42);
+        let mut ck = Checkpoint::new();
+        ck.set_meta("model", Json::from("tiny"));
+        ck.set_meta("anchor", Json::from("int8"));
+        ck.set_meta("seed", Json::from(42usize));
+        let a: Vec<f32> = (0..256).map(|_| rng.normal()).collect();
+        ck.insert(
+            "w.0",
+            MxTensor::quantize(&a, &[8, 32], MxFormat::mxint(8, 32)).unwrap(),
+        );
+        let b: Vec<f32> = (0..192).map(|_| rng.normal()).collect();
+        ck.insert(
+            "w.1",
+            MxTensor::quantize(&b, &[3, 64], MxFormat::mxfp(8, 16)).unwrap(),
+        );
+        let c: Vec<f32> = (0..48).map(|_| rng.normal()).collect();
+        ck.insert_raw("emb", Tensor::new(&[6, 8], c).unwrap());
+        ck
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC32("123456789") = 0xCBF43926 (standard check value).
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let ck = sample_checkpoint();
+        let bytes = ck.to_bytes();
+        let re = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(ck.tensors, re.tensors);
+        assert_eq!(ck.meta, re.meta);
+        assert_eq!(ck.raw, re.raw);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let dir = std::env::temp_dir().join("mfqat_ck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.mfq");
+        let ck = sample_checkpoint();
+        ck.save(&path).unwrap();
+        let re = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.tensors, re.tensors);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let ck = sample_checkpoint();
+        let mut bytes = ck.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let ck = sample_checkpoint();
+        let bytes = ck.to_bytes();
+        for cut in [0, 3, 10, bytes.len() - 5] {
+            assert!(Checkpoint::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let ck = sample_checkpoint();
+        let mut bytes = ck.to_bytes();
+        bytes[0] = b'X';
+        // CRC covers the magic, so recompute it to reach the magic check.
+        let n = bytes.len();
+        let crc = crc32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn empty_checkpoint_roundtrips() {
+        let ck = Checkpoint::new();
+        let re = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert!(re.tensors.is_empty());
+        assert!(re.meta.is_empty());
+    }
+
+    #[test]
+    fn anchor_to_target_storage_savings() {
+        // The point of the anchor workflow: one 8-bit checkpoint instead of
+        // one fp32 model per format.
+        let ck = sample_checkpoint();
+        // 8-bit MX elements + per-block scales ≈ 4× smaller than fp32 for
+        // the quantized tensors (raw tensors stay fp32 on both sides).
+        let fp32_bytes: usize = ck.tensors.values().map(|t| t.len() * 4).sum();
+        let mx_bytes: usize = ck.tensors.values().map(|t| t.storage_bytes()).sum();
+        assert!(mx_bytes * 3 < fp32_bytes, "{mx_bytes} vs {fp32_bytes}");
+    }
+}

@@ -1,0 +1,157 @@
+//! LRU cache of per-format serving weight sets.
+//!
+//! Elastic serving switches formats with load; re-deriving weights on every
+//! batch would waste the SS + dequant work, while caching every format at
+//! full f32 costs memory. The cache bounds total bytes and evicts the least
+//! recently used format.
+
+use crate::eval::ParamLiterals;
+use crate::formats::ElementFormat;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Byte-bounded LRU over derived weight sets.
+pub struct FormatCache {
+    budget: usize,
+    used: usize,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    entries: HashMap<ElementFormat, Entry>,
+}
+
+struct Entry {
+    weights: Arc<ParamLiterals>,
+    bytes: usize,
+    last_used: u64,
+}
+
+impl FormatCache {
+    pub fn new(budget_bytes: usize) -> FormatCache {
+        FormatCache {
+            budget: budget_bytes,
+            used: 0,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            entries: HashMap::new(),
+        }
+    }
+
+    pub fn get(&mut self, fmt: ElementFormat) -> Option<Arc<ParamLiterals>> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(&fmt) {
+            Some(e) => {
+                e.last_used = clock;
+                self.hits += 1;
+                Some(e.weights.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&mut self, fmt: ElementFormat, weights: Arc<ParamLiterals>, bytes: usize) {
+        self.clock += 1;
+        if let Some(old) = self.entries.remove(&fmt) {
+            self.used -= old.bytes;
+        }
+        // Evict LRU entries until the new set fits (but always admit it —
+        // an over-budget single entry is still better than re-deriving
+        // every batch).
+        while self.used + bytes > self.budget && !self.entries.is_empty() {
+            let lru = *self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k)
+                .unwrap();
+            let e = self.entries.remove(&lru).unwrap();
+            self.used -= e.bytes;
+            log::debug!("format cache: evicted {lru} ({} bytes)", e.bytes);
+        }
+        self.used += bytes;
+        self.entries.insert(
+            fmt,
+            Entry {
+                weights,
+                bytes,
+                last_used: self.clock,
+            },
+        );
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy() -> Arc<ParamLiterals> {
+        Arc::new(ParamLiterals { literals: vec![] })
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = FormatCache::new(1000);
+        assert!(c.get(ElementFormat::int(4)).is_none());
+        c.put(ElementFormat::int(4), dummy(), 100);
+        assert!(c.get(ElementFormat::int(4)).is_some());
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert_eq!(c.used_bytes(), 100);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = FormatCache::new(250);
+        c.put(ElementFormat::int(2), dummy(), 100);
+        c.put(ElementFormat::int(4), dummy(), 100);
+        // Touch int2 so int4 becomes LRU.
+        c.get(ElementFormat::int(2));
+        c.put(ElementFormat::int(6), dummy(), 100);
+        assert!(c.get(ElementFormat::int(2)).is_some());
+        assert!(c.get(ElementFormat::int(4)).is_none(), "int4 evicted");
+        assert!(c.get(ElementFormat::int(6)).is_some());
+        assert!(c.used_bytes() <= 250);
+    }
+
+    #[test]
+    fn oversized_entry_still_admitted() {
+        let mut c = FormatCache::new(50);
+        c.put(ElementFormat::int(8), dummy(), 500);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(ElementFormat::int(8)).is_some());
+    }
+
+    #[test]
+    fn replace_same_format_updates_bytes() {
+        let mut c = FormatCache::new(1000);
+        c.put(ElementFormat::int(4), dummy(), 100);
+        c.put(ElementFormat::int(4), dummy(), 300);
+        assert_eq!(c.used_bytes(), 300);
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,348 @@
+//! Seeded synthetic corpus — the WikiText-2 stand-in (DESIGN.md §3).
+//!
+//! Four sentence families, all derived from one seed:
+//!
+//! 1. **Filler prose** — an order-2 Markov chain over an invented word list;
+//!    gives the corpus smooth n-gram statistics so perplexity behaves like a
+//!    real LM corpus (quantization noise degrades it progressively).
+//! 2. **Facts** — `the <attr> of <entity> is <value> .` from a fixed fact
+//!    table; the SynKnow task asks these back as multiple choice.
+//! 3. **Arithmetic** — `<a> plus <b> equals <c> .`; SynMath asks held-out
+//!    combinations.
+//! 4. **Chart records** — `chart : a 4 , b 7 , c 2 ; max b ; min c .`;
+//!    SynChart asks max/min of held-out charts (the ChartQA stand-in).
+//!
+//! Splits: `pretrain` (large), `qat` (exactly 128 sequences, matching the
+//! paper's 128-example finetune), `val` (held out, perplexity metric).
+
+use super::encode;
+use crate::util::Rng;
+
+/// Corpus generation parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub seed: u64,
+    /// Window width in tokens, typically `seq_len + 1`.
+    pub width: usize,
+    pub pretrain_sequences: usize,
+    pub qat_sequences: usize,
+    pub val_sequences: usize,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            seed: 20260710,
+            width: 129,
+            pretrain_sequences: 1024,
+            qat_sequences: 128, // paper §3.1: 128 training examples
+            val_sequences: 64,
+        }
+    }
+}
+
+/// One fact: `the <attr> of <entity> is <value>`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fact {
+    pub entity: String,
+    pub attr: String,
+    pub value: String,
+}
+
+/// One chart record with named series and integer values.
+#[derive(Debug, Clone)]
+pub struct Chart {
+    pub names: Vec<char>,
+    pub values: Vec<u8>,
+}
+
+impl Chart {
+    pub fn text(&self) -> String {
+        let body: Vec<String> = self
+            .names
+            .iter()
+            .zip(&self.values)
+            .map(|(n, v)| format!("{n} {v}"))
+            .collect();
+        format!("chart : {}", body.join(" , "))
+    }
+
+    pub fn argmax(&self) -> char {
+        let i = self
+            .values
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| **v)
+            .unwrap()
+            .0;
+        self.names[i]
+    }
+
+    pub fn argmin(&self) -> char {
+        let i = self
+            .values
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, v)| **v)
+            .unwrap()
+            .0;
+        self.names[i]
+    }
+}
+
+/// The generated corpus: token splits + the symbol tables the tasks reuse.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub config: CorpusConfig,
+    pub pretrain: Vec<Vec<i32>>,
+    pub qat: Vec<Vec<i32>>,
+    pub val: Vec<Vec<i32>>,
+    pub facts: Vec<Fact>,
+    pub attr_values: Vec<(String, Vec<String>)>,
+    pub words: Vec<String>,
+}
+
+const ENTITIES: &[&str] = &[
+    "kova", "brim", "talo", "nexu", "rilda", "sorn", "veya", "plon", "quim",
+    "zarel", "mundo", "felk", "grona", "histu", "jarn", "lumel",
+];
+
+const ATTRS: &[(&str, &[&str])] = &[
+    ("color", &["red", "blue", "green", "gold"]),
+    ("home", &["hill", "lake", "cave", "field"]),
+    ("food", &["corn", "fish", "moss", "plum"]),
+    ("mood", &["calm", "wild", "shy", "bold"]),
+];
+
+impl Corpus {
+    /// Generate the full corpus from the config seed.
+    pub fn generate(config: CorpusConfig) -> Corpus {
+        let mut rng = Rng::new(config.seed);
+
+        // Invented word list for the Markov filler.
+        let syllables = ["ba", "do", "ke", "lu", "mi", "no", "pa", "ri", "su", "te", "vo", "za"];
+        let mut words: Vec<String> = Vec::new();
+        for _ in 0..48 {
+            let n = rng.range(2, 4);
+            let w: String = (0..n).map(|_| *rng.pick(&syllables)).collect();
+            if !words.contains(&w) {
+                words.push(w);
+            }
+        }
+        for w in ["the", "a", "and", "near", "with", "goes", "sees", "makes"] {
+            words.push(w.to_string());
+        }
+
+        // Order-2 Markov transition preferences: (w1, w2) -> ranked next-word
+        // choices, realized as a per-pair seeded shortlist.
+        let nw = words.len();
+        let shortlist = |rng: &mut Rng, a: usize, b: usize| -> Vec<usize> {
+            let mut r = rng.fork((a * nw + b) as u64 ^ 0xC0FFEE);
+            (0..4).map(|_| r.below(nw)).collect()
+        };
+
+        // Fact table: every entity gets every attribute (64 facts).
+        let mut facts = Vec::new();
+        for &e in ENTITIES {
+            for (attr, values) in ATTRS {
+                let v = rng.pick(values);
+                facts.push(Fact {
+                    entity: e.to_string(),
+                    attr: attr.to_string(),
+                    value: v.to_string(),
+                });
+            }
+        }
+
+        let attr_values = ATTRS
+            .iter()
+            .map(|(a, vs)| (a.to_string(), vs.iter().map(|v| v.to_string()).collect()))
+            .collect();
+
+        // Sentence emitters -------------------------------------------------
+        let emit_filler = {
+            let words = words.clone();
+            move |rng: &mut Rng| -> String {
+                let mut a = rng.below(nw);
+                let mut b = rng.below(nw);
+                let len = rng.range(5, 12);
+                let mut parts = vec![words[a].clone(), words[b].clone()];
+                for _ in 0..len {
+                    let mut r2 = rng.fork(0);
+                    let opts = shortlist(&mut r2, a, b);
+                    let next = *rng.pick(&opts);
+                    parts.push(words[next].clone());
+                    a = b;
+                    b = next;
+                }
+                parts.join(" ") + " ."
+            }
+        };
+        let emit_fact = |rng: &mut Rng, facts: &[Fact]| -> String {
+            let f = rng.pick(facts);
+            format!("the {} of {} is {} .", f.attr, f.entity, f.value)
+        };
+        let emit_math = |rng: &mut Rng| -> String {
+            let a = rng.below(10);
+            let b = rng.below(10);
+            format!("{a} plus {b} equals {} .", a + b)
+        };
+        let emit_chart = |rng: &mut Rng| -> String {
+            let chart = random_chart(rng);
+            format!(
+                "{} ; max {} ; min {} .",
+                chart.text(),
+                chart.argmax(),
+                chart.argmin()
+            )
+        };
+
+        // Token stream ------------------------------------------------------
+        let make_split = |rng: &mut Rng, sequences: usize| -> Vec<Vec<i32>> {
+            let need = sequences * config.width;
+            let mut stream: Vec<i32> = Vec::with_capacity(need + 64);
+            while stream.len() < need {
+                let roll = rng.f64();
+                let s = if roll < 0.45 {
+                    emit_filler(rng)
+                } else if roll < 0.70 {
+                    emit_fact(rng, &facts)
+                } else if roll < 0.85 {
+                    emit_math(rng)
+                } else {
+                    emit_chart(rng)
+                };
+                stream.extend(encode(&s));
+                stream.push(b' ' as i32);
+            }
+            stream.truncate(need);
+            super::windows(&stream, config.width)
+        };
+
+        let mut pre_rng = rng.fork(1);
+        let mut qat_rng = rng.fork(2);
+        let mut val_rng = rng.fork(3);
+        let pretrain = make_split(&mut pre_rng, config.pretrain_sequences);
+        let qat = make_split(&mut qat_rng, config.qat_sequences);
+        let val = make_split(&mut val_rng, config.val_sequences);
+
+        Corpus {
+            config,
+            pretrain,
+            qat,
+            val,
+            facts,
+            attr_values,
+            words,
+        }
+    }
+}
+
+/// A random 3–5 series chart with distinct values (unique argmax/argmin).
+pub fn random_chart(rng: &mut Rng) -> Chart {
+    let k = rng.range(3, 6);
+    let names: Vec<char> = "abcdef".chars().take(k).collect();
+    loop {
+        let values: Vec<u8> = (0..k).map(|_| rng.below(10) as u8).collect();
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() == values.len() {
+            return Chart { names, values };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::decode;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Corpus::generate(CorpusConfig::default());
+        let b = Corpus::generate(CorpusConfig::default());
+        assert_eq!(a.pretrain, b.pretrain);
+        assert_eq!(a.facts, b.facts);
+    }
+
+    #[test]
+    fn split_sizes_match_paper_protocol() {
+        let c = Corpus::generate(CorpusConfig::default());
+        assert_eq!(c.qat.len(), 128); // the paper's 128 examples
+        assert_eq!(c.pretrain.len(), 1024);
+        assert_eq!(c.val.len(), 64);
+        for w in c.qat.iter().chain(&c.val) {
+            assert_eq!(w.len(), 129);
+        }
+    }
+
+    #[test]
+    fn splits_are_distinct() {
+        let c = Corpus::generate(CorpusConfig::default());
+        assert_ne!(c.pretrain[0], c.qat[0]);
+        assert_ne!(c.qat[0], c.val[0]);
+    }
+
+    #[test]
+    fn corpus_contains_all_families() {
+        let c = Corpus::generate(CorpusConfig::default());
+        let text: String = c
+            .pretrain
+            .iter()
+            .take(200)
+            .map(|w| decode(w))
+            .collect::<Vec<_>>()
+            .join("");
+        assert!(text.contains("the color of"), "facts present");
+        assert!(text.contains("plus"), "math present");
+        assert!(text.contains("chart :"), "charts present");
+        assert!(text.contains("max"), "chart answers present");
+    }
+
+    #[test]
+    fn tokens_are_bytes() {
+        let c = Corpus::generate(CorpusConfig::default());
+        for w in &c.pretrain[..16] {
+            assert!(w.iter().all(|&t| (0..256).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn facts_cover_all_entity_attr_pairs() {
+        let c = Corpus::generate(CorpusConfig::default());
+        assert_eq!(c.facts.len(), ENTITIES.len() * ATTRS.len());
+        // Every fact value is a legal value of its attribute.
+        for f in &c.facts {
+            let (_, values) = c
+                .attr_values
+                .iter()
+                .find(|(a, _)| *a == f.attr)
+                .unwrap();
+            assert!(values.contains(&f.value));
+        }
+    }
+
+    #[test]
+    fn chart_argminmax() {
+        let ch = Chart {
+            names: vec!['a', 'b', 'c'],
+            values: vec![3, 9, 1],
+        };
+        assert_eq!(ch.argmax(), 'b');
+        assert_eq!(ch.argmin(), 'c');
+        assert_eq!(ch.text(), "chart : a 3 , b 9 , c 1");
+    }
+
+    #[test]
+    fn random_chart_has_distinct_values() {
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..50 {
+            let ch = random_chart(&mut rng);
+            let mut v = ch.values.clone();
+            v.sort_unstable();
+            v.dedup();
+            assert_eq!(v.len(), ch.values.len());
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Data substrate: synthetic corpus, byte tokenizer, batching, and the
+//! downstream probe tasks.
+//!
+//! The paper finetunes pretrained LLMs on 128 WikiText-2 examples and
+//! evaluates perplexity + 0-shot downstream accuracy. We have no pretrained
+//! LLM or WikiText here (see DESIGN.md §3), so [`corpus`] generates a seeded
+//! synthetic language with learnable structure — Markov filler prose,
+//! planted facts, arithmetic statements and chart records — on which the
+//! repo *pretrains* its own models, and [`tasks`] derives the matching
+//! downstream multiple-choice suites (SynKnow/SynMath/SynCont/SynChart)
+//! scored exactly like lm-eval-harness 0-shot tasks.
+
+pub mod corpus;
+pub mod tasks;
+pub mod workload;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use tasks::{McItem, Task};
+
+/// Byte-level tokenizer (vocab 256). Identity on bytes — kept as a type to
+/// document intent and centralize padding.
+pub const PAD: u8 = b' ';
+
+/// Encode text to token ids.
+pub fn encode(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+/// Decode token ids to text. Byte-faithful: each token maps to exactly one
+/// `char` (latin-1 style), so `decode(x).chars().count() == x.len()` even
+/// for byte sequences an untrained model emits.
+pub fn decode(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| (t.clamp(0, 255) as u8) as char)
+        .collect()
+}
+
+/// Pack a token stream into fixed windows of `width` (dropping the ragged
+/// tail), as rows of one flat i32 batch buffer.
+pub fn windows(stream: &[i32], width: usize) -> Vec<Vec<i32>> {
+    stream.chunks_exact(width).map(|c| c.to_vec()).collect()
+}
+
+/// Assemble `rows` (each of length `width`) into batches of `batch` rows,
+/// padding the final batch by repeating its last row (extra rows are
+/// weighted out by the caller where it matters).
+pub fn batches(rows: &[Vec<i32>], batch: usize, width: usize) -> Vec<Vec<i32>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < rows.len() {
+        let mut flat = Vec::with_capacity(batch * width);
+        for j in 0..batch {
+            let row = rows.get(i + j).unwrap_or_else(|| rows.last().unwrap());
+            assert_eq!(row.len(), width);
+            flat.extend_from_slice(row);
+        }
+        out.push(flat);
+        i += batch;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "the color of kova is red .";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn windows_drop_tail() {
+        let stream: Vec<i32> = (0..25).collect();
+        let w = windows(&stream, 10);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[1][9], 19);
+    }
+
+    #[test]
+    fn batches_pad_with_last_row() {
+        let rows = vec![vec![1, 2], vec![3, 4], vec![5, 6]];
+        let b = batches(&rows, 2, 2);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[1], vec![5, 6, 5, 6]);
+    }
+}

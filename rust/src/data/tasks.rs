@@ -1,0 +1,307 @@
+//! Downstream probe tasks — MMLU / MathQA / HellaSwag / ChartQA stand-ins.
+//!
+//! Every task is 0-shot multiple choice scored by length-normalized
+//! continuation log-likelihood (the lm-eval-harness `acc_norm` protocol the
+//! paper uses). Items are derived from the same seeded symbol tables as the
+//! corpus, so a pretrained model holds the knowledge and quantization noise
+//! degrades it measurably:
+//!
+//! * **SynKnow** (≈MMLU): fact recall — `the color of kova is` → 4 values.
+//! * **SynMath** (≈MathQA): `3 plus 4 equals` → 4 candidate sums.
+//! * **SynCont** (≈HellaSwag): pick the true continuation of a corpus
+//!   prefix among shuffled distractors.
+//! * **SynChart** (≈ChartQA): `chart : a 3 , b 8 ... ; max` → series names;
+//!   charts are freshly sampled (held out from pretraining text).
+
+use super::corpus::{random_chart, Corpus};
+use super::decode;
+use crate::util::Rng;
+
+/// One multiple-choice item. `prompt` and `choices` are raw text; choice
+/// texts are appended to the prompt for scoring.
+#[derive(Debug, Clone)]
+pub struct McItem {
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+/// A named task = a list of items.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: String,
+    pub items: Vec<McItem>,
+}
+
+impl Task {
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// Build SynKnow from the corpus fact table.
+pub fn syn_know(corpus: &Corpus, n_items: usize, seed: u64) -> Task {
+    let mut rng = Rng::new(seed ^ 0x5EED_01);
+    let mut items = Vec::new();
+    for _ in 0..n_items {
+        let f = rng.pick(&corpus.facts);
+        let (_, values) = corpus
+            .attr_values
+            .iter()
+            .find(|(a, _)| *a == f.attr)
+            .expect("attr in table");
+        let mut choices: Vec<String> = values.clone();
+        rng.shuffle(&mut choices);
+        let answer = choices.iter().position(|c| *c == f.value).unwrap();
+        items.push(McItem {
+            prompt: format!("the {} of {} is", f.attr, f.entity),
+            choices: choices.iter().map(|c| format!(" {c}")).collect(),
+            answer,
+        });
+    }
+    Task {
+        name: "SynKnow".into(),
+        items,
+    }
+}
+
+/// Build SynMath: addition completions with near-miss distractors.
+pub fn syn_math(n_items: usize, seed: u64) -> Task {
+    let mut rng = Rng::new(seed ^ 0x5EED_02);
+    let mut items = Vec::new();
+    while items.len() < n_items {
+        let a = rng.below(10);
+        let b = rng.below(10);
+        let c = a + b;
+        let mut opts = vec![c];
+        // Distractors: ±1, ±2, or a random digit-sum — all distinct.
+        for delta in [1i64, -1, 2, -2, 3] {
+            let d = c as i64 + delta;
+            if d >= 0 && !opts.contains(&(d as usize)) {
+                opts.push(d as usize);
+            }
+            if opts.len() == 4 {
+                break;
+            }
+        }
+        if opts.len() < 4 {
+            continue;
+        }
+        let correct = opts[0];
+        rng.shuffle(&mut opts);
+        let answer = opts.iter().position(|&x| x == correct).unwrap();
+        items.push(McItem {
+            prompt: format!("{a} plus {b} equals"),
+            choices: opts.iter().map(|x| format!(" {x}")).collect(),
+            answer,
+        });
+    }
+    Task {
+        name: "SynMath".into(),
+        items,
+    }
+}
+
+/// Build SynCont: true continuation vs token-shuffled distractors.
+pub fn syn_cont(corpus: &Corpus, n_items: usize, seed: u64) -> Task {
+    let mut rng = Rng::new(seed ^ 0x5EED_03);
+    let mut items = Vec::new();
+    let prefix_len = 48;
+    let cont_len = 16;
+    for _ in 0..n_items {
+        let row = rng.pick(&corpus.val);
+        let start = rng.below(row.len() - prefix_len - cont_len);
+        let prompt = decode(&row[start..start + prefix_len]);
+        let true_cont = &row[start + prefix_len..start + prefix_len + cont_len];
+        let mut choices = vec![decode(true_cont)];
+        while choices.len() < 4 {
+            // Distractor: same bytes shuffled at word granularity — locally
+            // plausible vocabulary, wrong order. Re-shuffle (and finally
+            // perturb bytes) until distinct from every existing choice.
+            let text = decode(true_cont);
+            let mut tokens: Vec<&str> = text.split(' ').collect();
+            let mut candidate = String::new();
+            for attempt in 0..8 {
+                rng.shuffle(&mut tokens);
+                candidate = tokens.join(" ");
+                if attempt >= 6 {
+                    // Degenerate continuation (e.g. one word): mutate a byte.
+                    let mut bytes = candidate.into_bytes();
+                    let i = rng.below(bytes.len().max(1));
+                    bytes[i] = b'a' + (rng.below(26) as u8);
+                    candidate = String::from_utf8_lossy(&bytes).to_string();
+                }
+                if !choices.contains(&candidate) {
+                    break;
+                }
+            }
+            if choices.contains(&candidate) {
+                continue;
+            }
+            choices.push(candidate);
+        }
+        let mut order: Vec<usize> = (0..4).collect();
+        rng.shuffle(&mut order);
+        let answer = order.iter().position(|&i| i == 0).unwrap();
+        let choices = order.into_iter().map(|i| choices[i].clone()).collect();
+        items.push(McItem {
+            prompt,
+            choices,
+            answer,
+        });
+    }
+    Task {
+        name: "SynCont".into(),
+        items,
+    }
+}
+
+/// Build SynChart: max/min questions over held-out charts.
+pub fn syn_chart(n_items: usize, seed: u64) -> Task {
+    let mut rng = Rng::new(seed ^ 0x5EED_04);
+    let mut items = Vec::new();
+    for i in 0..n_items {
+        let chart = random_chart(&mut rng);
+        let ask_max = i % 2 == 0;
+        let target = if ask_max { chart.argmax() } else { chart.argmin() };
+        let answer = chart.names.iter().position(|&n| n == target).unwrap();
+        items.push(McItem {
+            prompt: format!(
+                "{} ; {}",
+                chart.text(),
+                if ask_max { "max" } else { "min" }
+            ),
+            choices: chart.names.iter().map(|n| format!(" {n}")).collect(),
+            answer,
+        });
+    }
+    Task {
+        name: "SynChart".into(),
+        items,
+    }
+}
+
+/// The standard evaluation suite (≈ the paper's MMLU+MathQA+HellaSwag avg).
+pub fn standard_suite(corpus: &Corpus, n_items: usize, seed: u64) -> Vec<Task> {
+    vec![
+        syn_know(corpus, n_items, seed),
+        syn_math(n_items, seed),
+        syn_cont(corpus, n_items, seed),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusConfig;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(CorpusConfig {
+            pretrain_sequences: 8,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn all_tasks_are_well_formed() {
+        let c = corpus();
+        for task in [
+            syn_know(&c, 40, 1),
+            syn_math(40, 1),
+            syn_cont(&c, 40, 1),
+            syn_chart(40, 1),
+        ] {
+            assert_eq!(task.len(), 40, "{}", task.name);
+            for item in &task.items {
+                assert!(item.answer < item.choices.len(), "{}", task.name);
+                assert!(!item.prompt.is_empty());
+                assert!(item.choices.len() >= 3);
+                // Choices must be distinct, or scoring is ill-posed.
+                let mut c2 = item.choices.clone();
+                c2.sort();
+                c2.dedup();
+                assert_eq!(c2.len(), item.choices.len(), "{}: {:?}", task.name, item);
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_are_deterministic_per_seed() {
+        let c = corpus();
+        let a = syn_math(10, 7);
+        let b = syn_math(10, 7);
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+        let d = syn_math(10, 8);
+        assert!(a.items.iter().zip(&d.items).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn syn_know_answers_match_fact_table() {
+        let c = corpus();
+        let t = syn_know(&c, 60, 3);
+        for item in &t.items {
+            // prompt: "the <attr> of <entity> is"
+            let parts: Vec<&str> = item.prompt.split(' ').collect();
+            let attr = parts[1];
+            let entity = parts[3];
+            let fact = c
+                .facts
+                .iter()
+                .find(|f| f.attr == attr && f.entity == entity)
+                .unwrap();
+            assert_eq!(item.choices[item.answer].trim(), fact.value);
+        }
+    }
+
+    #[test]
+    fn syn_math_correct_answer_is_the_sum() {
+        let t = syn_math(60, 9);
+        for item in &t.items {
+            let parts: Vec<&str> = item.prompt.split(' ').collect();
+            let a: usize = parts[0].parse().unwrap();
+            let b: usize = parts[2].parse().unwrap();
+            let val: usize = item.choices[item.answer].trim().parse().unwrap();
+            assert_eq!(val, a + b);
+        }
+    }
+
+    #[test]
+    fn syn_chart_answer_is_correct_series() {
+        let t = syn_chart(60, 11);
+        for item in &t.items {
+            // Recompute from the prompt text.
+            let is_max = item.prompt.ends_with("max");
+            let body = item
+                .prompt
+                .trim_start_matches("chart : ")
+                .split(" ;")
+                .next()
+                .unwrap();
+            let mut best: Option<(char, i32)> = None;
+            for pair in body.split(" , ") {
+                let mut it = pair.split(' ');
+                let name = it.next().unwrap().chars().next().unwrap();
+                let v: i32 = it.next().unwrap().parse().unwrap();
+                best = match best {
+                    None => Some((name, v)),
+                    Some((bn, bv)) => {
+                        if (is_max && v > bv) || (!is_max && v < bv) {
+                            Some((name, v))
+                        } else {
+                            Some((bn, bv))
+                        }
+                    }
+                };
+            }
+            let want = best.unwrap().0;
+            assert_eq!(item.choices[item.answer].trim().chars().next().unwrap(), want);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Serving workload traces — arrival processes for the elastic benchmarks.
+//!
+//! The paper motivates elastic precision with load that *varies over time*;
+//! these generators produce reproducible arrival schedules: Poisson at a
+//! fixed rate, bursty on/off, and a diurnal (sinusoidal-rate) pattern.
+
+use crate::util::Rng;
+
+/// One request arrival, seconds from trace start.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub at_s: f64,
+    /// Index into the request corpus (which sequence to score).
+    pub item: usize,
+}
+
+/// Workload shapes.
+#[derive(Debug, Clone)]
+pub enum TraceKind {
+    /// Poisson arrivals at `rate` req/s.
+    Poisson { rate: f64 },
+    /// Alternating on/off: `on_rate` req/s for `on_s`, silence for `off_s`.
+    Bursty {
+        on_rate: f64,
+        on_s: f64,
+        off_s: f64,
+    },
+    /// Sinusoidal rate between `min_rate` and `max_rate` with `period_s`.
+    Diurnal {
+        min_rate: f64,
+        max_rate: f64,
+        period_s: f64,
+    },
+}
+
+/// Generate a trace of `duration_s` seconds.
+pub fn generate(kind: &TraceKind, duration_s: f64, seed: u64) -> Vec<Arrival> {
+    let mut rng = Rng::new(seed ^ 0x7ACE);
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    let mut item = 0usize;
+    match kind {
+        TraceKind::Poisson { rate } => {
+            while t < duration_s {
+                t += exp_sample(&mut rng, *rate);
+                if t < duration_s {
+                    out.push(Arrival { at_s: t, item });
+                    item += 1;
+                }
+            }
+        }
+        TraceKind::Bursty { on_rate, on_s, off_s } => {
+            let mut phase_start = 0.0;
+            while phase_start < duration_s {
+                let on_end = (phase_start + on_s).min(duration_s);
+                t = phase_start;
+                loop {
+                    t += exp_sample(&mut rng, *on_rate);
+                    if t >= on_end {
+                        break;
+                    }
+                    out.push(Arrival { at_s: t, item });
+                    item += 1;
+                }
+                phase_start = on_end + off_s;
+            }
+        }
+        TraceKind::Diurnal { min_rate, max_rate, period_s } => {
+            // Thinning: sample at max_rate, accept with rate(t)/max_rate.
+            while t < duration_s {
+                t += exp_sample(&mut rng, *max_rate);
+                if t >= duration_s {
+                    break;
+                }
+                let phase = (t / period_s) * std::f64::consts::TAU;
+                let rate = min_rate + (max_rate - min_rate) * 0.5 * (1.0 - phase.cos());
+                if rng.f64() < rate / max_rate {
+                    out.push(Arrival { at_s: t, item });
+                    item += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
+    debug_assert!(rate > 0.0);
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_approximately_right() {
+        let trace = generate(&TraceKind::Poisson { rate: 100.0 }, 50.0, 1);
+        let rate = trace.len() as f64 / 50.0;
+        assert!((rate - 100.0).abs() < 10.0, "measured rate {rate}");
+        // Sorted, in-range, items sequential.
+        for w in trace.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+        assert!(trace.last().unwrap().at_s < 50.0);
+        assert_eq!(trace[5].item, 5);
+    }
+
+    #[test]
+    fn bursty_has_silent_gaps() {
+        let trace = generate(
+            &TraceKind::Bursty {
+                on_rate: 200.0,
+                on_s: 1.0,
+                off_s: 2.0,
+            },
+            9.0,
+            2,
+        );
+        // No arrivals during off windows, e.g. t in (1, 3).
+        assert!(trace.iter().all(|a| {
+            let cycle = a.at_s % 3.0;
+            cycle <= 1.0 + 1e-9
+        }));
+        assert!(trace.len() > 100);
+    }
+
+    #[test]
+    fn diurnal_rate_varies() {
+        let trace = generate(
+            &TraceKind::Diurnal {
+                min_rate: 10.0,
+                max_rate: 200.0,
+                period_s: 10.0,
+            },
+            10.0,
+            3,
+        );
+        // First half-period (trough around t=0) much sparser than the crest
+        // around t=5.
+        let trough = trace.iter().filter(|a| a.at_s < 2.0).count();
+        let crest = trace.iter().filter(|a| a.at_s >= 4.0 && a.at_s < 6.0).count();
+        assert!(crest > trough * 3, "crest {crest} trough {trough}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&TraceKind::Poisson { rate: 50.0 }, 5.0, 7);
+        let b = generate(&TraceKind::Poisson { rate: 50.0 }, 5.0, 7);
+        assert_eq!(a, b);
+        let c = generate(&TraceKind::Poisson { rate: 50.0 }, 5.0, 8);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,147 @@
+//! Autoregressive generation over the AOT forward graph.
+//!
+//! Uses `forward_b1` with full-sequence recompute per emitted token (no KV
+//! cache in the exported graph — fine at seq ≤ 256; the serving product of
+//! this repo is scoring, generation is a demo/debug surface). Sampling is
+//! greedy or temperature/top-k with the repo's seeded RNG.
+
+use crate::data::{decode, encode, PAD};
+use crate::eval::ParamLiterals;
+use crate::runtime::{self, ArtifactSet, Runtime};
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+
+/// Sampling configuration.
+#[derive(Debug, Clone)]
+pub struct SampleCfg {
+    /// 0.0 ⇒ greedy argmax.
+    pub temperature: f32,
+    /// 0 ⇒ no top-k truncation.
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SampleCfg {
+    fn default() -> Self {
+        SampleCfg {
+            temperature: 0.8,
+            top_k: 8,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate `n_tokens` continuation tokens for a text prompt.
+pub fn generate(
+    rt: &Runtime,
+    arts: &ArtifactSet,
+    params: &ParamLiterals,
+    prompt: &str,
+    n_tokens: usize,
+    cfg: &SampleCfg,
+) -> Result<String> {
+    let m = &arts.manifest;
+    let exe = arts.executable(rt, "forward_b1")?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut tokens = encode(prompt);
+    if tokens.is_empty() {
+        tokens.push(PAD as i32);
+    }
+    let start_len = tokens.len();
+
+    for _ in 0..n_tokens {
+        // Window: last seq_len tokens, right-padded.
+        let ctx_start = tokens.len().saturating_sub(m.seq_len);
+        let ctx = &tokens[ctx_start..];
+        let pos = ctx.len() - 1; // logits index predicting the next token
+        let mut row = ctx.to_vec();
+        row.resize(m.seq_len, PAD as i32);
+
+        let lit = runtime::i32_literal(&row, &[1, m.seq_len])?;
+        let mut args: Vec<&xla::Literal> = vec![&lit];
+        args.extend(params.literals.iter());
+        let out = exe.run(&args)?;
+        let logits = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let slice = &logits[pos * m.vocab..(pos + 1) * m.vocab];
+        let next = sample(slice, cfg, &mut rng);
+        tokens.push(next as i32);
+    }
+    Ok(decode(&tokens[start_len..]))
+}
+
+/// Sample one token id from a logits row.
+pub fn sample(logits: &[f32], cfg: &SampleCfg, rng: &mut Rng) -> usize {
+    if cfg.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Top-k + temperature softmax in f64.
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if cfg.top_k > 0 && cfg.top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(cfg.top_k);
+    }
+    let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max) as f64;
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| ((logits[i] as f64 - max) / cfg.temperature as f64).exp())
+        .collect();
+    idx[rng.weighted(&weights)]
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = vec![0.1f32, 5.0, -2.0, 4.9];
+        let cfg = SampleCfg {
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+        };
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(sample(&logits, &cfg, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = vec![10.0f32, 9.0, -100.0, -100.0];
+        let cfg = SampleCfg {
+            temperature: 1.0,
+            top_k: 2,
+            seed: 0,
+        };
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let s = sample(&logits, &cfg, &mut rng);
+            assert!(s < 2, "sampled outside top-k: {s}");
+        }
+    }
+
+    #[test]
+    fn temperature_spreads_distribution() {
+        let logits = vec![2.0f32, 1.0, 0.0];
+        let mut hot = std::collections::HashSet::new();
+        let cfg = SampleCfg {
+            temperature: 5.0,
+            top_k: 0,
+            seed: 0,
+        };
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            hot.insert(sample(&logits, &cfg, &mut rng));
+        }
+        assert_eq!(hot.len(), 3, "high temperature should hit all tokens");
+    }
+}

@@ -1,0 +1,212 @@
+//! Evaluation harness: perplexity and 0-shot multiple-choice scoring.
+//!
+//! Mirrors the paper's protocol (§3.1/§3.2): WikiText-style validation
+//! perplexity via the AOT `nll_b8` graph, and lm-eval-harness-style 0-shot
+//! accuracy — each choice is appended to the prompt, scored by
+//! length-normalized continuation log-likelihood over the `forward_b8`
+//! logits, and the argmax choice is compared to the answer.
+
+pub mod generate;
+
+use crate::data::{self, Task, PAD};
+use crate::model::ParamSet;
+use crate::runtime::{self, ArtifactSet, Runtime};
+use anyhow::{bail, Result};
+
+/// Pre-built parameter literals (reused across many eval calls).
+pub struct ParamLiterals {
+    pub literals: Vec<xla::Literal>,
+}
+
+impl ParamLiterals {
+    pub fn build(params: &ParamSet) -> Result<ParamLiterals> {
+        let literals = params
+            .tensors
+            .iter()
+            .map(runtime::tensor_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamLiterals { literals })
+    }
+}
+
+/// Mean next-token NLL over token windows (width `seq_len + 1`).
+///
+/// Windows must fill whole batches (`rows.len() % train_batch == 0`) so the
+/// metric is exact — the corpus splits are sized accordingly.
+pub fn mean_nll(
+    rt: &Runtime,
+    arts: &ArtifactSet,
+    params: &ParamLiterals,
+    rows: &[Vec<i32>],
+) -> Result<f64> {
+    let b = arts.manifest.train_batch;
+    let width = arts.manifest.seq_len + 1;
+    if rows.is_empty() || rows.len() % b != 0 {
+        bail!("mean_nll wants a multiple of {b} rows, got {}", rows.len());
+    }
+    let exe = arts.executable(rt, "nll_b8")?;
+    let mut total = 0.0f64;
+    let batches = data::batches(rows, b, width);
+    for flat in &batches {
+        let tokens = runtime::i32_literal(flat, &[b, width])?;
+        let mut args: Vec<&xla::Literal> = vec![&tokens];
+        args.extend(params.literals.iter());
+        let out = exe.run(&args)?;
+        total += runtime::literal_f32(&out[0])? as f64;
+    }
+    Ok(total / batches.len() as f64)
+}
+
+/// Perplexity = exp(mean NLL).
+pub fn perplexity(
+    rt: &Runtime,
+    arts: &ArtifactSet,
+    params: &ParamLiterals,
+    rows: &[Vec<i32>],
+) -> Result<f64> {
+    Ok(mean_nll(rt, arts, params, rows)?.exp())
+}
+
+/// Score a task: returns accuracy in [0, 1].
+pub fn mc_accuracy(
+    rt: &Runtime,
+    arts: &ArtifactSet,
+    params: &ParamLiterals,
+    task: &Task,
+) -> Result<f64> {
+    let scores = mc_choice_scores(rt, arts, params, task)?;
+    let mut correct = 0usize;
+    for (item, s) in task.items.iter().zip(&scores) {
+        let best = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if best == item.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / task.items.len() as f64)
+}
+
+/// Length-normalized continuation log-likelihood per (item, choice).
+pub fn mc_choice_scores(
+    rt: &Runtime,
+    arts: &ArtifactSet,
+    params: &ParamLiterals,
+    task: &Task,
+) -> Result<Vec<Vec<f64>>> {
+    let b = arts.manifest.train_batch;
+    let t_len = arts.manifest.seq_len;
+    let vocab = arts.manifest.vocab;
+    let exe = arts.executable(rt, "forward_b8")?;
+
+    // Flatten all (item, choice) pairs into padded rows.
+    struct Pair {
+        item: usize,
+        choice: usize,
+        row: Vec<i32>,
+        /// Continuation token positions: logits at p-1 predict token p.
+        start: usize,
+        end: usize,
+    }
+    let mut pairs = Vec::new();
+    for (ii, item) in task.items.iter().enumerate() {
+        let prompt = data::encode(&item.prompt);
+        for (ci, choice) in item.choices.iter().enumerate() {
+            let cont = data::encode(choice);
+            let mut row = prompt.clone();
+            row.extend_from_slice(&cont);
+            let (start, end) = if row.len() > t_len {
+                // Truncate from the left, keeping the continuation.
+                let drop = row.len() - t_len;
+                row.drain(..drop);
+                let s = prompt.len().saturating_sub(drop).max(1);
+                (s, row.len())
+            } else {
+                (prompt.len(), row.len())
+            };
+            row.resize(t_len, PAD as i32);
+            pairs.push(Pair {
+                item: ii,
+                choice: ci,
+                row,
+                start,
+                end,
+            });
+        }
+    }
+
+    let mut scores: Vec<Vec<f64>> = task
+        .items
+        .iter()
+        .map(|i| vec![f64::NEG_INFINITY; i.choices.len()])
+        .collect();
+
+    for chunk in pairs.chunks(b) {
+        let mut flat = Vec::with_capacity(b * t_len);
+        for j in 0..b {
+            let p = chunk.get(j).unwrap_or(&chunk[0]); // pad batch by repeat
+            flat.extend_from_slice(&p.row);
+        }
+        let tokens = runtime::i32_literal(&flat, &[b, t_len])?;
+        let mut args: Vec<&xla::Literal> = vec![&tokens];
+        args.extend(params.literals.iter());
+        let out = exe.run(&args)?;
+        let logits = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        debug_assert_eq!(logits.len(), b * t_len * vocab);
+        for (j, p) in chunk.iter().enumerate() {
+            let mut lp = 0.0f64;
+            let n = (p.end - p.start).max(1);
+            for pos in p.start..p.end {
+                let target = p.row[pos] as usize;
+                let off = (j * t_len + (pos - 1)) * vocab;
+                lp += log_softmax_pick(&logits[off..off + vocab], target);
+            }
+            scores[p.item][p.choice] = lp / n as f64;
+        }
+    }
+    Ok(scores)
+}
+
+/// log softmax(logits)[target], computed stably in f64.
+pub fn log_softmax_pick(logits: &[f32], target: usize) -> f64 {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let denom: f64 = logits.iter().map(|&x| ((x as f64) - max).exp()).sum();
+    (logits[target] as f64 - max) - denom.ln()
+}
+
+/// Average accuracy over a suite of tasks (the paper's Tables 1/2 metric).
+pub fn suite_accuracy(
+    rt: &Runtime,
+    arts: &ArtifactSet,
+    params: &ParamLiterals,
+    tasks: &[Task],
+) -> Result<Vec<(String, f64)>> {
+    tasks
+        .iter()
+        .map(|t| Ok((t.name.clone(), mc_accuracy(rt, arts, params, t)?)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_is_normalized() {
+        let logits = vec![1.0f32, 2.0, 3.0, -1.0];
+        let total: f64 = (0..4).map(|i| log_softmax_pick(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9, "{total}");
+        // Highest logit has highest logprob.
+        assert!(log_softmax_pick(&logits, 2) > log_softmax_pick(&logits, 0));
+    }
+
+    #[test]
+    fn log_softmax_stable_for_large_logits() {
+        let logits = vec![1000.0f32, 999.0];
+        let lp = log_softmax_pick(&logits, 0);
+        assert!(lp < 0.0 && lp > -1.0);
+    }
+}

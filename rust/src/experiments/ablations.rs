@@ -1,0 +1,117 @@
+//! Ablations for the design choices the paper asserts without a figure.
+//!
+//! * `abl_order` — multi-format QAT bit **ordering** (§3.2): the paper
+//!   trains in increasing bit order because "lower-precision weights
+//!   typically require larger updates to jump out of the quantization bin;
+//!   training in the opposite direction can destabilize the higher-precision
+//!   quantization settings learned earlier". We train ascending (2→4→6→8)
+//!   vs descending (8→6→4→2) and compare the full PTQ perplexity grid.
+//!
+//! * `abl_round` — SSMXINT element rounding (§3.3): the paper's "round
+//!   using the most-significant dropped bit" (≈ round-half-away) vs our
+//!   default unbiased round-half-even, measured as tensor MSE and as
+//!   end-to-end perplexity through the anchor path.
+
+use super::report::{ascii_plot, save_text, ResultTable, Series};
+use super::Ctx;
+use crate::formats::{ElementFormat, MxFormat, RoundMode};
+use crate::tensor::MxTensor;
+use crate::util::stats::mse;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Bit-order ablation: ascending vs descending multi-format QAT.
+pub fn abl_order(ctx: &Ctx) -> Result<()> {
+    let mut table = ResultTable::new(&["plan", "eval_bits", "ppl"]);
+    let mut series = Vec::new();
+    for plan in ["mf_int", "mf_int_desc"] {
+        let params = ctx.ensure_variant_best(plan)?;
+        let mut pts = Vec::new();
+        for fmt in ElementFormat::all_int() {
+            let ppl = ctx.val_ppl(&params.ptq(&ctx.arts.manifest, fmt)?)?;
+            table.push(vec![plan.into(), fmt.bits().to_string(), format!("{ppl:.4}")]);
+            pts.push((fmt.bits() as f64, ppl));
+            log::info!("[abl_order] {plan} @ {}: {ppl:.3}", fmt);
+        }
+        series.push(Series {
+            name: plan.to_string(),
+            points: pts,
+        });
+    }
+    table.save_csv(&ctx.result_path("abl_order.csv"))?;
+    let plot = ascii_plot(
+        "Ablation: multi-format QAT bit order (ascending 2→8 vs descending 8→2)",
+        "eval bitwidth",
+        "perplexity",
+        &series,
+        true,
+    );
+    save_text(&ctx.result_path("abl_order.txt"), &format!("{plot}\n{}", table.to_text()))?;
+    Ok(())
+}
+
+/// Rounding-mode ablation for SSMXINT.
+pub fn abl_round(ctx: &Ctx) -> Result<()> {
+    let mut table = ResultTable::new(&["metric", "target_bits", "half_even", "half_away"]);
+
+    // Tensor-level MSE (paper App. C protocol).
+    let mut rng = Rng::new(0xAB1);
+    let tensors: Vec<Vec<f32>> = (0..100).map(|_| rng.normal_vec(1024)).collect();
+    for bits in [2u8, 3, 4, 5, 6, 7] {
+        let t = ElementFormat::int(bits);
+        let mut m = [0.0f64; 2];
+        for data in &tensors {
+            let anchor = MxTensor::quantize(data, &[1, 1024], MxFormat::mxint(8, 64))?;
+            for (j, mode) in [RoundMode::HalfEven, RoundMode::HalfAway].iter().enumerate() {
+                let ss = anchor.slice_and_scale_mode(t, *mode)?;
+                m[j] += mse(data, &ss.dequantize()) / tensors.len() as f64;
+            }
+        }
+        table.push(vec![
+            "tensor_mse".into(),
+            bits.to_string(),
+            format!("{:.4e}", m[0]),
+            format!("{:.4e}", m[1]),
+        ]);
+    }
+
+    // End-to-end perplexity through the anchor path.
+    let params = ctx.ensure_pretrained()?;
+    let manifest = &ctx.arts.manifest;
+    for bits in [2u8, 4, 6] {
+        let t = ElementFormat::int(bits);
+        let mut ppl = [0.0f64; 2];
+        for (j, mode) in [RoundMode::HalfEven, RoundMode::HalfAway].iter().enumerate() {
+            let mut served = params.clone();
+            for i in manifest.quant_indices() {
+                let w = &params.tensors[i];
+                let anchor = MxTensor::quantize_mode(
+                    &w.data,
+                    &w.shape,
+                    MxFormat::mxint(8, manifest.block_size),
+                    RoundMode::HalfEven, // anchor quantization fixed; SS mode varies
+                )?;
+                let q = anchor.slice_and_scale_mode(t, *mode)?;
+                served.tensors[i] = crate::tensor::Tensor::new(&w.shape, q.dequantize())?;
+            }
+            ppl[j] = ctx.val_ppl(&served)?;
+        }
+        log::info!("[abl_round] int{bits}: even {:.4} away {:.4}", ppl[0], ppl[1]);
+        table.push(vec![
+            "val_ppl".into(),
+            bits.to_string(),
+            format!("{:.4}", ppl[0]),
+            format!("{:.4}", ppl[1]),
+        ]);
+    }
+
+    table.save_csv(&ctx.result_path("abl_round.csv"))?;
+    save_text(
+        &ctx.result_path("abl_round.txt"),
+        &format!(
+            "Ablation: SSMXINT rounding — unbiased RNE (default) vs round-half-away\n(paper §3.3 describes the MSB-of-dropped-bits variant)\n\n{}",
+            table.to_text()
+        ),
+    )?;
+    Ok(())
+}

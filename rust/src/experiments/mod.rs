@@ -1,0 +1,206 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+//!
+//! | id      | paper artifact                                  | module      |
+//! |---------|--------------------------------------------------|-------------|
+//! | `fig1`  | Fig. 1 + App. A.1 (MF-QAT vs single-format PPL)  | [`quality`] |
+//! | `fig2`  | Fig. 2 (SSMXINT vs direct, PPL sweeps)           | [`ss_eval`] |
+//! | `fig3`  | Fig. 3 (SSMXFP vs direct, PPL sweeps)            | [`ss_eval`] |
+//! | `fig4`  | Fig. 4 + App. A.2 (MF-QAT **with** SS)           | [`quality`] |
+//! | `tab1`  | Table 1 (+App. B Tables 4–6): MXINT accuracy grid| [`quality`] |
+//! | `tab2`  | Table 2 (+App. B Table 7): MXFP accuracy grid    | [`quality`] |
+//! | `tab3`  | Table 3: chart-QA grid (VL stand-in)             | [`quality`] |
+//! | `fig19` | App. C Fig. 19 (SSMXINT tensor MSE)              | [`ss_eval`] |
+//! | `fig20` | App. C Fig. 20 (SSMXFP tensor MSE)               | [`ss_eval`] |
+//!
+//! Trained variants are cached as checkpoints under `runs/<config>/`, so
+//! `tab1` reuses the models trained for `fig1`, etc. Results land in
+//! `results/<config>/`.
+
+pub mod ablations;
+pub mod quality;
+pub mod report;
+pub mod ss_eval;
+
+use crate::data::{Corpus, CorpusConfig};
+use crate::eval::ParamLiterals;
+use crate::model::ParamSet;
+use crate::runtime::{ArtifactSet, Runtime};
+use crate::train::{TrainPlan, Trainer};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shared state for experiment runs.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub arts: ArtifactSet,
+    pub corpus: Corpus,
+    pub runs_dir: PathBuf,
+    pub results_dir: PathBuf,
+    pub seed: u64,
+    /// Learning rates swept per variant (paper §3.2 sweeps 3; default here
+    /// is a 2-point sweep sized for the 1-core budget — override with
+    /// `--lrs`).
+    pub lrs: Vec<f32>,
+    /// Pretraining budget in epochs over the pretrain split.
+    pub pretrain_epochs: usize,
+    /// Items per downstream task.
+    pub task_items: usize,
+}
+
+impl Ctx {
+    pub fn open(repo_root: &Path, config: &str, seed: u64) -> Result<Ctx> {
+        let arts_dir = repo_root.join("artifacts").join(config);
+        if !arts_dir.join("manifest.json").exists() {
+            bail!(
+                "no artifacts for config '{config}' at {} — run `make artifacts`",
+                arts_dir.display()
+            );
+        }
+        let rt = Runtime::cpu()?;
+        let arts = ArtifactSet::open(&arts_dir)?;
+        let corpus = Corpus::generate(CorpusConfig {
+            seed,
+            width: arts.manifest.seq_len + 1,
+            ..Default::default()
+        });
+        Ok(Ctx {
+            rt,
+            arts,
+            corpus,
+            runs_dir: repo_root.join("runs").join(config),
+            results_dir: repo_root.join("results").join(config),
+            seed,
+            lrs: vec![3e-4, 1e-4],
+            pretrain_epochs: 2,
+            task_items: 48,
+        })
+    }
+
+    /// Mean NLL on the validation split.
+    pub fn val_nll(&self, params: &ParamSet) -> Result<f64> {
+        let lits = ParamLiterals::build(params)?;
+        crate::eval::mean_nll(&self.rt, &self.arts, &lits, &self.corpus.val)
+    }
+
+    /// Validation perplexity of a param set after host-side PTQ.
+    pub fn val_ppl(&self, params: &ParamSet) -> Result<f64> {
+        Ok(self.val_nll(params)?.exp())
+    }
+
+    // ------------------------------------------------------------- caching
+
+    fn pretrained_path(&self) -> PathBuf {
+        self.runs_dir.join("pretrained.mfq")
+    }
+
+    /// Train (or load) the pretrained base model — the substrate standing in
+    /// for the paper's pretrained LLMs.
+    pub fn ensure_pretrained(&self) -> Result<ParamSet> {
+        let path = self.pretrained_path();
+        if path.exists() {
+            let ck = crate::checkpoint::Checkpoint::load(&path)?;
+            log::info!("loaded pretrained base from {}", path.display());
+            return ParamSet::from_checkpoint(&self.arts.manifest, &ck, None);
+        }
+        log::info!(
+            "pretraining base model ({} epochs x {} sequences)…",
+            self.pretrain_epochs,
+            self.corpus.pretrain.len()
+        );
+        let params = ParamSet::init(&self.arts.manifest, self.seed);
+        let mut trainer = Trainer::new(&self.rt, &self.arts, params);
+        for e in 0..self.pretrain_epochs {
+            let stats = trainer.train_epoch("pretrain", &self.corpus.pretrain, 1e-3)?;
+            let ppl = self.val_ppl(&trainer.params)?;
+            log::info!("pretrain epoch {e}: loss {:.4}, val ppl {:.2}", stats.mean_loss, ppl);
+        }
+        std::fs::create_dir_all(&self.runs_dir)?;
+        trainer
+            .params
+            .to_master_checkpoint(&self.arts.manifest)?
+            .save(&path)?;
+        Ok(trainer.params)
+    }
+
+    fn variant_path(&self, plan: &str, lr: f32) -> PathBuf {
+        self.runs_dir.join(format!("var_{plan}_lr{lr:e}.mfq"))
+    }
+
+    /// Train (or load) one QAT/FT variant from the pretrained base at one
+    /// learning rate. Returns the FP32 master weights after finetuning.
+    pub fn ensure_variant(&self, plan_name: &str, lr: f32) -> Result<ParamSet> {
+        let path = self.variant_path(plan_name, lr);
+        if path.exists() {
+            let ck = crate::checkpoint::Checkpoint::load(&path)?;
+            return ParamSet::from_checkpoint(&self.arts.manifest, &ck, None);
+        }
+        let base = self.ensure_pretrained()?;
+        let plan = TrainPlan::by_name(plan_name)?;
+        log::info!("training variant {plan_name} (lr {lr:e}, {} epochs)", plan.total_epochs());
+        let mut trainer = Trainer::new(&self.rt, &self.arts, base);
+        trainer
+            .run_plan(&plan, &self.corpus.qat, lr)
+            .with_context(|| format!("training {plan_name}"))?;
+        std::fs::create_dir_all(&self.runs_dir)?;
+        trainer
+            .params
+            .to_master_checkpoint(&self.arts.manifest)?
+            .save(&path)?;
+        Ok(trainer.params)
+    }
+
+    /// LR sweep: train at each configured LR, return the params with the
+    /// lowest validation NLL (the paper's "best-performing learning rate").
+    pub fn ensure_variant_best(&self, plan_name: &str) -> Result<ParamSet> {
+        let mut best: Option<(f64, ParamSet)> = None;
+        for &lr in &self.lrs {
+            let params = self.ensure_variant(plan_name, lr)?;
+            let nll = self.val_nll(&params)?;
+            log::info!("variant {plan_name} lr {lr:e}: val nll {nll:.4}");
+            if best.as_ref().map(|(b, _)| nll < *b).unwrap_or(true) {
+                best = Some((nll, params));
+            }
+        }
+        Ok(best.expect("at least one lr").1)
+    }
+
+    pub fn result_path(&self, name: &str) -> PathBuf {
+        self.results_dir.join(name)
+    }
+}
+
+/// Run an experiment by id ("all" runs everything).
+pub fn run(ctx: &Ctx, id: &str) -> Result<()> {
+    match id {
+        "pretrain" => {
+            ctx.ensure_pretrained()?;
+        }
+        "fig1" => quality::fig1(ctx)?,
+        "fig2" => ss_eval::fig2_or_3(ctx, "int")?,
+        "fig3" => ss_eval::fig2_or_3(ctx, "fp")?,
+        "fig4" => quality::fig4(ctx)?,
+        "tab1" => quality::table_grid(ctx, "int", "tab1")?,
+        "tab2" => quality::table_grid(ctx, "fp", "tab2")?,
+        "tab3" => quality::tab3(ctx)?,
+        "fig19" => ss_eval::fig19_or_20("int", &ctx.result_path("fig19"))?,
+        "fig20" => ss_eval::fig19_or_20("fp", &ctx.result_path("fig20"))?,
+        "abl_order" => ablations::abl_order(ctx)?,
+        "abl_round" => ablations::abl_round(ctx)?,
+        "all" => {
+            for id in [
+                "fig19", "fig20", "fig2", "fig3", "fig1", "fig4", "tab1", "tab2", "tab3",
+            ] {
+                log::info!("=== experiment {id} ===");
+                run(ctx, id)?;
+            }
+        }
+        "ablations" => {
+            for id in ["abl_round", "abl_order"] {
+                log::info!("=== experiment {id} ===");
+                run(ctx, id)?;
+            }
+        }
+        _ => bail!("unknown experiment '{id}'"),
+    }
+    Ok(())
+}

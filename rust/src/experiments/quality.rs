@@ -1,0 +1,260 @@
+//! Quality experiments: Fig. 1/4 perplexity sweeps and Tables 1–3 accuracy
+//! grids.
+//!
+//! Protocol (paper §3.2): every trained variant — full-precision finetune,
+//! single-format QAT at each format, and multi-format QAT — is converted to
+//! each evaluation format with PTQ and measured in that target format, so
+//! all comparisons isolate the training procedure.
+
+use super::report::{ascii_plot, save_text, ResultTable, Series};
+use super::Ctx;
+use crate::data::tasks;
+use crate::eval::{self, ParamLiterals};
+use crate::formats::ElementFormat;
+use crate::model::{anchor_for, ParamSet};
+use anyhow::Result;
+
+/// Evaluation formats per family (paper: MXINT 2–8, MXFP 4–8 incl. unseen).
+pub fn eval_formats(family: &str) -> Vec<ElementFormat> {
+    match family {
+        "int" => ElementFormat::all_int(),
+        "fp" => ElementFormat::all_fp(),
+        _ => panic!("family must be int|fp"),
+    }
+}
+
+/// Training variants per family, in the paper's row order.
+pub fn variants(family: &str) -> Vec<String> {
+    match family {
+        "int" => vec![
+            "ft_fp_int".into(),
+            "qat_int2".into(),
+            "qat_int4".into(),
+            "qat_int6".into(),
+            "qat_int8".into(),
+            "mf_int".into(),
+        ],
+        "fp" => vec![
+            "ft_fp_fp".into(),
+            "qat_fp4".into(),
+            "qat_fp6".into(),
+            "qat_fp8".into(),
+            "mf_fp".into(),
+        ],
+        _ => panic!("family must be int|fp"),
+    }
+}
+
+/// PTQ-grid perplexity for one trained variant.
+fn ppl_grid(ctx: &Ctx, params: &ParamSet, family: &str, via_anchor: bool) -> Result<Vec<(u8, f64)>> {
+    let mut out = Vec::new();
+    for fmt in eval_formats(family) {
+        let q = if via_anchor {
+            params.ptq_via_anchor(&ctx.arts.manifest, anchor_for(fmt), fmt)?
+        } else {
+            params.ptq(&ctx.arts.manifest, fmt)?
+        };
+        let ppl = ctx.val_ppl(&q)?;
+        out.push((fmt.bits(), ppl));
+        log::info!("  {}: ppl {:.3}{}", fmt, ppl, if via_anchor { " (via anchor)" } else { "" });
+    }
+    Ok(out)
+}
+
+/// Figure 1 (+ Appendix A.1): MF-QAT vs single-format QAT vs FP-FT,
+/// perplexity vs evaluation bitwidth, both families.
+pub fn fig1(ctx: &Ctx) -> Result<()> {
+    for family in ["int", "fp"] {
+        let mut table = ResultTable::new(&["variant", "eval_bits", "ppl"]);
+        let mut series = Vec::new();
+
+        // Horizontal reference: the unquantized pretrained+FT model.
+        let base = ctx.ensure_pretrained()?;
+        let base_ppl = ctx.val_ppl(&base)?;
+        table.push(vec!["base_fp32".into(), "-".into(), format!("{base_ppl:.4}")]);
+
+        for variant in variants(family) {
+            log::info!("[fig1/{family}] variant {variant}");
+            let params = ctx.ensure_variant_best(&variant)?;
+            let grid = ppl_grid(ctx, &params, family, false)?;
+            for &(bits, ppl) in &grid {
+                table.push(vec![variant.clone(), bits.to_string(), format!("{ppl:.4}")]);
+            }
+            series.push(Series {
+                name: variant.clone(),
+                points: grid.iter().map(|&(b, p)| (b as f64, p)).collect(),
+            });
+        }
+
+        let stem = format!("fig1_{family}");
+        table.save_csv(&ctx.result_path(&format!("{stem}.csv")))?;
+        let plot = ascii_plot(
+            &format!(
+                "Fig.1 ({family}): WikiText-style val PPL vs eval bitwidth [config {}] (base fp32 ppl {base_ppl:.3})",
+                ctx.arts.manifest.config_name
+            ),
+            "eval bitwidth",
+            "perplexity",
+            &series,
+            true,
+        );
+        save_text(&ctx.result_path(&format!("{stem}.txt")), &format!("{plot}\n{}", table.to_text()))?;
+        log::info!("[fig1/{family}] written to {}", ctx.result_path(&stem).display());
+    }
+    Ok(())
+}
+
+/// Figure 4 (+ Appendix A.2): multi-format QAT *with* Slice-and-Scale
+/// (anchor-storage training + anchor-path PTQ) vs plain multi-format QAT.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    for family in ["int", "fp"] {
+        let mut table = ResultTable::new(&["variant", "eval_bits", "ppl", "path"]);
+        let mut series = Vec::new();
+
+        let mf = ctx.ensure_variant_best(&format!("mf_{family}"))?;
+        let grid = ppl_grid(ctx, &mf, family, false)?;
+        for &(bits, ppl) in &grid {
+            table.push(vec![
+                format!("mf_{family}"),
+                bits.to_string(),
+                format!("{ppl:.4}"),
+                "direct".into(),
+            ]);
+        }
+        series.push(Series {
+            name: format!("mf_{family} (direct PTQ)"),
+            points: grid.iter().map(|&(b, p)| (b as f64, p)).collect(),
+        });
+
+        let mfss = ctx.ensure_variant_best(&format!("mf_ss_{family}"))?;
+        let grid_ss = ppl_grid(ctx, &mfss, family, true)?;
+        for &(bits, ppl) in &grid_ss {
+            table.push(vec![
+                format!("mf_ss_{family}"),
+                bits.to_string(),
+                format!("{ppl:.4}"),
+                "anchor+SS".into(),
+            ]);
+        }
+        series.push(Series {
+            name: format!("mf_ss_{family} (anchor + SS)"),
+            points: grid_ss.iter().map(|&(b, p)| (b as f64, p)).collect(),
+        });
+
+        let stem = format!("fig4_{family}");
+        table.save_csv(&ctx.result_path(&format!("{stem}.csv")))?;
+        let plot = ascii_plot(
+            &format!("Fig.4 ({family}): MF-QAT with Slice-and-Scale vs plain MF-QAT"),
+            "eval bitwidth",
+            "perplexity",
+            &series,
+            true,
+        );
+        save_text(&ctx.result_path(&format!("{stem}.txt")), &format!("{plot}\n{}", table.to_text()))?;
+    }
+    Ok(())
+}
+
+/// Tables 1/2 (+ Appendix B): downstream accuracy grids. `family` selects
+/// MXINT (tab1) or MXFP (tab2). Emits both the averaged grid and per-task
+/// breakdowns.
+pub fn table_grid(ctx: &Ctx, family: &str, stem: &str) -> Result<()> {
+    let suite = tasks::standard_suite(&ctx.corpus, ctx.task_items, ctx.seed);
+    let fmts = eval_formats(family);
+    let mut avg = ResultTable::new(
+        &std::iter::once("variant")
+            .chain(fmts.iter().map(|f| Box::leak(f.long_name().into_boxed_str()) as &str))
+            .collect::<Vec<_>>(),
+    );
+    let mut per_task = ResultTable::new(&["variant", "format", "task", "accuracy"]);
+
+    for variant in variants(family) {
+        log::info!("[{stem}] variant {variant}");
+        let params = ctx.ensure_variant_best(&variant)?;
+        let mut row = vec![variant.clone()];
+        for &fmt in &fmts {
+            let q = params.ptq(&ctx.arts.manifest, fmt)?;
+            let lits = ParamLiterals::build(&q)?;
+            let accs = eval::suite_accuracy(&ctx.rt, &ctx.arts, &lits, &suite)?;
+            let mean: f64 = accs.iter().map(|(_, a)| a).sum::<f64>() / accs.len() as f64;
+            for (task, acc) in &accs {
+                per_task.push(vec![
+                    variant.clone(),
+                    fmt.long_name(),
+                    task.clone(),
+                    format!("{:.1}", acc * 100.0),
+                ]);
+            }
+            log::info!("  {}: avg acc {:.1}%", fmt, mean * 100.0);
+            row.push(format!("{:.1}", mean * 100.0));
+        }
+        avg.push(row);
+    }
+
+    avg.save_csv(&ctx.result_path(&format!("{stem}.csv")))?;
+    per_task.save_csv(&ctx.result_path(&format!("{stem}_per_task.csv")))?;
+    let title = format!(
+        "Table {} ({}): avg 0-shot accuracy (SynKnow+SynMath+SynCont), rows=training, cols=PTQ format\n",
+        if family == "int" { "1" } else { "2" },
+        family
+    );
+    save_text(
+        &ctx.result_path(&format!("{stem}.txt")),
+        &format!("{title}\n{}", avg.to_text()),
+    )?;
+    Ok(())
+}
+
+/// Table 3: SynChart (ChartQA stand-in) accuracy grid, both families, the
+/// paper's reduced variant set (FT, 4/6/8-bit singles, MF).
+pub fn tab3(ctx: &Ctx) -> Result<()> {
+    let task = tasks::syn_chart(ctx.task_items, ctx.seed);
+    let mut table = ResultTable::new(&["family", "variant", "format", "accuracy"]);
+    for family in ["int", "fp"] {
+        let vars: Vec<String> = match family {
+            "int" => vec![
+                "ft_fp_int".into(),
+                "qat_int4".into(),
+                "qat_int6".into(),
+                "qat_int8".into(),
+                "mf_int".into(),
+            ],
+            _ => vec![
+                "ft_fp_fp".into(),
+                "qat_fp4".into(),
+                "qat_fp6".into(),
+                "qat_fp8".into(),
+                "mf_fp".into(),
+            ],
+        };
+        let fmts: Vec<ElementFormat> = eval_formats(family)
+            .into_iter()
+            .filter(|f| f.bits() >= 4)
+            .collect();
+        for variant in vars {
+            log::info!("[tab3/{family}] variant {variant}");
+            let params = ctx.ensure_variant_best(&variant)?;
+            for &fmt in &fmts {
+                let q = params.ptq(&ctx.arts.manifest, fmt)?;
+                let lits = ParamLiterals::build(&q)?;
+                let acc = eval::mc_accuracy(&ctx.rt, &ctx.arts, &lits, &task)?;
+                log::info!("  {}: {:.1}%", fmt, acc * 100.0);
+                table.push(vec![
+                    family.into(),
+                    variant.clone(),
+                    fmt.long_name(),
+                    format!("{:.1}", acc * 100.0),
+                ]);
+            }
+        }
+    }
+    table.save_csv(&ctx.result_path("tab3.csv"))?;
+    save_text(
+        &ctx.result_path("tab3.txt"),
+        &format!(
+            "Table 3: SynChart (ChartQA stand-in) accuracy grid\n\n{}",
+            table.to_text()
+        ),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,203 @@
+//! Experiment output: CSV files and ASCII line plots.
+//!
+//! Every experiment writes `results/<id>.csv` (machine-readable, one row per
+//! measurement) and `results/<id>.txt` (a paper-style plot/table a human can
+//! eyeball against the figure).
+
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-oriented result table.
+#[derive(Debug, Clone, Default)]
+pub struct ResultTable {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl ResultTable {
+    pub fn new(columns: &[&str]) -> ResultTable {
+        ResultTable {
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.columns.len());
+        self.rows.push(row);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv()).with_context(|| format!("write {}", path.display()))
+    }
+
+    /// Fixed-width text rendering (for the .txt reports).
+    pub fn to_text(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, cell) in r.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut s = String::new();
+        for (i, c) in self.columns.iter().enumerate() {
+            let _ = write!(s, "{:<w$}  ", c, w = widths[i]);
+        }
+        s.push('\n');
+        for (i, _) in self.columns.iter().enumerate() {
+            let _ = write!(s, "{}  ", "-".repeat(widths[i]));
+        }
+        s.push('\n');
+        for r in &self.rows {
+            for (i, cell) in r.iter().enumerate() {
+                let _ = write!(s, "{:<w$}  ", cell, w = widths[i]);
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// One plot series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    /// (x, y) points; y may be NaN for gaps.
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render an ASCII line chart: series over a shared x grid.
+///
+/// `log_y` plots log10(y) (perplexity curves span decades at 2–3 bits).
+pub fn ascii_plot(title: &str, xlabel: &str, ylabel: &str, series: &[Series], log_y: bool) -> String {
+    const W: usize = 72;
+    const H: usize = 22;
+    let marks = ['o', '+', 'x', '*', '#', '@', '%', '&', '$', '~'];
+    let ys = |y: f64| if log_y { y.max(1e-12).log10() } else { y };
+
+    let mut xmin = f64::INFINITY;
+    let mut xmax = f64::NEG_INFINITY;
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for s in series {
+        for &(x, y) in &s.points {
+            if !y.is_finite() {
+                continue;
+            }
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(ys(y));
+            ymax = ymax.max(ys(y));
+        }
+    }
+    if !xmin.is_finite() {
+        return format!("{title}\n(no data)\n");
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; W]; H];
+    for (si, s) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in &s.points {
+            if !y.is_finite() {
+                continue;
+            }
+            let cx = (((x - xmin) / (xmax - xmin)) * (W - 1) as f64).round() as usize;
+            let cy = (((ys(y) - ymin) / (ymax - ymin)) * (H - 1) as f64).round() as usize;
+            grid[H - 1 - cy][cx.min(W - 1)] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let ylab = if log_y {
+        format!("{ylabel} (log10)")
+    } else {
+        ylabel.to_string()
+    };
+    let _ = writeln!(out, "y: {ylab}   [{:.3} .. {:.3}]", ymin, ymax);
+    for row in &grid {
+        let _ = writeln!(out, "|{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "+{}", "-".repeat(W));
+    let _ = writeln!(out, " x: {xlabel}   [{xmin} .. {xmax}]");
+    for (si, s) in series.iter().enumerate() {
+        let _ = writeln!(out, "   {} = {}", marks[si % marks.len()], s.name);
+    }
+    out
+}
+
+/// Write a text report file.
+pub fn save_text(path: &Path, text: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, text).with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_text_render() {
+        let mut t = ResultTable::new(&["variant", "bits", "ppl"]);
+        t.push(vec!["mf".into(), "4".into(), "12.5".into()]);
+        t.push(vec!["qat_int4".into(), "4".into(), "12.1".into()]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("variant,bits,ppl\n"));
+        assert_eq!(csv.lines().count(), 3);
+        let text = t.to_text();
+        assert!(text.contains("variant"));
+        assert!(text.contains("qat_int4"));
+    }
+
+    #[test]
+    fn plot_renders_all_series_markers() {
+        let s = vec![
+            Series {
+                name: "a".into(),
+                points: vec![(2.0, 100.0), (4.0, 10.0), (8.0, 5.0)],
+            },
+            Series {
+                name: "b".into(),
+                points: vec![(2.0, 80.0), (4.0, 12.0), (8.0, 5.2)],
+            },
+        ];
+        let p = ascii_plot("test", "bits", "ppl", &s, true);
+        assert!(p.contains('o'));
+        assert!(p.contains('+'));
+        assert!(p.contains("log10"));
+        assert!(p.contains("= a"));
+    }
+
+    #[test]
+    fn plot_handles_empty_and_degenerate() {
+        assert!(ascii_plot("t", "x", "y", &[], false).contains("no data"));
+        let s = vec![Series {
+            name: "flat".into(),
+            points: vec![(1.0, 3.0)],
+        }];
+        let p = ascii_plot("t", "x", "y", &s, false);
+        assert!(p.contains('o'));
+    }
+}

@@ -1,0 +1,305 @@
+//! Minifloat element formats (MXFP elements).
+//!
+//! Encoding is IEEE-like sign-magnitude: `[sign | exp_field | mantissa]`,
+//! bias `2^(e−1) − 1`, exponent field 0 ⇒ subnormal. For E4M3 we follow OCP:
+//! the all-ones exponent is *not* reserved for inf; only `S.1111.111` is NaN,
+//! so the max normal is 448. E2M1/E2M2/E3M2/E3M3 reserve nothing (OCP FP4/FP6
+//! have no inf/NaN encodings).
+//!
+//! Quantization is round-to-nearest-even over representable values with
+//! saturation to ±max (the OCP conversion behaviour for finite inputs).
+//! Because positive minifloat codes are monotone in value, RNE ties resolve
+//! to the *even code*, which we implement directly on the code lattice.
+
+use super::exp2i;
+
+/// A minifloat specification `E{e}M{m}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FpSpec {
+    /// Exponent bits (2..=4).
+    pub e: u8,
+    /// Mantissa bits (1..=3).
+    pub m: u8,
+}
+
+impl FpSpec {
+    pub const fn new(e: u8, m: u8) -> FpSpec {
+        assert!(e >= 2 && e <= 4);
+        assert!(m >= 1 && m <= 3);
+        FpSpec { e, m }
+    }
+
+    /// Exponent bias: `2^(e−1) − 1`.
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.e - 1)) - 1
+    }
+
+    /// Largest normal exponent value: `2^(e−1)` (paper `e_max(η)`).
+    pub const fn emax(&self) -> i32 {
+        1 << (self.e - 1)
+    }
+
+    /// Smallest normal exponent value: `2 − 2^(e−1)`.
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// True iff this is OCP E4M3 (whose top mantissa code at top exponent is
+    /// NaN, shrinking the max normal to 448).
+    pub const fn is_e4m3(&self) -> bool {
+        self.e == 4 && self.m == 3
+    }
+
+    /// Largest magnitude code (the code of [`Self::max_value`]).
+    pub fn max_code(&self) -> u8 {
+        let full = ((1u16 << (self.e + self.m)) - 1) as u8;
+        if self.is_e4m3() {
+            full - 1 // S.1111.111 is NaN; max normal is S.1111.110
+        } else {
+            full
+        }
+    }
+
+    /// Largest representable magnitude.
+    pub fn max_value(&self) -> f32 {
+        self.decode_mag(self.max_code())
+    }
+
+    /// Smallest positive (subnormal) magnitude: `2^(emin − m)`.
+    pub fn min_subnormal(&self) -> f32 {
+        exp2i(self.emin() - self.m as i32)
+    }
+
+    /// Total bits including sign.
+    pub const fn bits(&self) -> u8 {
+        1 + self.e + self.m
+    }
+
+    /// Decode a magnitude code (sign bit excluded) to f32.
+    pub fn decode_mag(&self, code: u8) -> f32 {
+        let m_mask = (1u8 << self.m) - 1;
+        let mant = (code & m_mask) as i32;
+        let exp_field = (code >> self.m) as i32;
+        if exp_field == 0 {
+            // Subnormal: mant · 2^(emin − m)
+            mant as f32 * exp2i(self.emin() - self.m as i32)
+        } else {
+            let exp = exp_field - self.bias();
+            (1.0 + mant as f32 / (1 << self.m) as f32) * exp2i(exp)
+        }
+    }
+
+    /// Decode a full code (sign-magnitude, low `bits()` bits significant).
+    pub fn decode(&self, code: u8) -> f32 {
+        let sign_bit = 1u8 << (self.e + self.m);
+        let mag = self.decode_mag(code & (sign_bit - 1));
+        if code & sign_bit != 0 {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Quantize to the nearest representable value (RNE, saturating) and
+    /// return the full sign-magnitude code. Non-finite inputs saturate
+    /// (NaN → +0).
+    pub fn quantize_code(&self, x: f32) -> u8 {
+        if x.is_nan() {
+            return 0;
+        }
+        let sign_bit = 1u8 << (self.e + self.m);
+        let sign = if x.is_sign_negative() { sign_bit } else { 0 };
+        let a = x.abs();
+        if a == 0.0 {
+            return sign; // signed zero keeps the sign bit (harmless)
+        }
+        let max_code = self.max_code();
+        if a >= self.max_value() {
+            return sign | max_code;
+        }
+        // Binary search the monotone magnitude-code lattice for the nearest
+        // value; ties resolve to the even code (IEEE RNE).
+        let mut lo = 0u8;
+        let mut hi = max_code;
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if self.decode_mag(mid) <= a {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let vlo = self.decode_mag(lo);
+        let vhi = self.decode_mag(hi);
+        debug_assert!(vlo <= a && a <= vhi);
+        // Compare distances exactly: a − vlo vs vhi − a. These are exact in
+        // f32 when a, vlo, vhi share a binade scale; for the tiny formats
+        // here (values spanning ≤ 2^10 with ≤ 4 significand bits) both
+        // differences are exactly representable.
+        let dlo = a - vlo;
+        let dhi = vhi - a;
+        let code = if dlo < dhi {
+            lo
+        } else if dhi < dlo {
+            hi
+        } else if lo % 2 == 0 {
+            lo
+        } else {
+            hi
+        };
+        sign | code
+    }
+
+    /// Quantize and decode in one step ("fake quantization").
+    pub fn quantize_value(&self, x: f32) -> f32 {
+        self.decode(self.quantize_code(x))
+    }
+
+    /// All non-negative representable magnitudes, ascending (for tests and
+    /// table-driven requantization).
+    pub fn magnitudes(&self) -> Vec<f32> {
+        (0..=self.max_code()).map(|c| self.decode_mag(c)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FpSpec> {
+        vec![
+            FpSpec::new(2, 1),
+            FpSpec::new(2, 2),
+            FpSpec::new(3, 2),
+            FpSpec::new(3, 3),
+            FpSpec::new(4, 3),
+        ]
+    }
+
+    #[test]
+    fn e2m1_value_table_is_ocp_fp4() {
+        // OCP FP4 (E2M1): 0, 0.5, 1, 1.5, 2, 3, 4, 6
+        let s = FpSpec::new(2, 1);
+        assert_eq!(s.magnitudes(), vec![0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn e4m3_is_ocp_fp8() {
+        let s = FpSpec::new(4, 3);
+        assert_eq!(s.max_value(), 448.0);
+        assert_eq!(s.min_subnormal(), exp2i(-9)); // 2^-9
+        assert_eq!(s.emin(), -6);
+        assert_eq!(s.emax(), 8);
+        // 256 = 1.0 · 2^8 must be representable.
+        let c = s.quantize_code(256.0);
+        assert_eq!(s.decode(c), 256.0);
+    }
+
+    #[test]
+    fn e3m2_is_ocp_fp6() {
+        let s = FpSpec::new(3, 2);
+        assert_eq!(s.max_value(), 28.0);
+        assert_eq!(s.emin(), -2);
+        assert_eq!(s.min_subnormal(), 0.0625); // 2^-4
+    }
+
+    #[test]
+    fn magnitudes_strictly_increasing() {
+        for s in specs() {
+            let mags = s.magnitudes();
+            for w in mags.windows(2) {
+                assert!(w[0] < w[1], "{s:?}: {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn representables_are_fixed_points() {
+        for s in specs() {
+            for code in 0..=s.max_code() {
+                let v = s.decode_mag(code);
+                assert_eq!(s.quantize_code(v), code, "{s:?} code={code} v={v}");
+                assert_eq!(s.quantize_value(-v), -v);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_is_nearest() {
+        // Brute-force check against a linear scan for a dense input sweep.
+        for s in specs() {
+            let mags = s.magnitudes();
+            let max = s.max_value();
+            let mut x = -1.5 * max;
+            while x <= 1.5 * max {
+                let got = s.quantize_value(x);
+                let a = x.abs().min(max);
+                let best = mags
+                    .iter()
+                    .copied()
+                    .min_by(|p, q| {
+                        let dp = (p - a).abs();
+                        let dq = (q - a).abs();
+                        dp.partial_cmp(&dq).unwrap()
+                    })
+                    .unwrap();
+                assert!(
+                    (got.abs() - best).abs() < 1e-6 || (got.abs() - a).abs() <= (best - a).abs() + 1e-6,
+                    "{s:?} x={x} got={got} best={best}"
+                );
+                x += max / 257.0; // irrational-ish step to avoid grid aliasing
+            }
+        }
+    }
+
+    #[test]
+    fn rne_ties_go_to_even_code() {
+        let s = FpSpec::new(2, 1); // values: 0, .5, 1, 1.5, 2, 3, 4, 6
+        // 1.25 is halfway between codes 2 (1.0) and 3 (1.5) → even code 2.
+        assert_eq!(s.quantize_value(1.25), 1.0);
+        // 1.75 halfway between 1.5 (code 3) and 2.0 (code 4) → code 4.
+        assert_eq!(s.quantize_value(1.75), 2.0);
+        // 2.5 halfway between 2 (code 4) and 3 (code 5) → code 4 → 2.0.
+        assert_eq!(s.quantize_value(2.5), 2.0);
+        // 0.25 halfway between 0 (code 0) and 0.5 (code 1) → code 0.
+        assert_eq!(s.quantize_value(0.25), 0.0);
+    }
+
+    #[test]
+    fn saturation_and_specials() {
+        for s in specs() {
+            let max = s.max_value();
+            assert_eq!(s.quantize_value(max * 10.0), max);
+            assert_eq!(s.quantize_value(-max * 10.0), -max);
+            assert_eq!(s.quantize_value(f32::INFINITY), max);
+            assert_eq!(s.quantize_value(f32::NEG_INFINITY), -max);
+            assert_eq!(s.quantize_value(f32::NAN), 0.0);
+            assert_eq!(s.quantize_value(0.0), 0.0);
+            // Tiny values round to zero or the min subnormal.
+            let tiny = s.min_subnormal() * 0.49;
+            assert_eq!(s.quantize_value(tiny), 0.0);
+            let near = s.min_subnormal() * 0.51;
+            assert_eq!(s.quantize_value(near), s.min_subnormal());
+        }
+    }
+
+    #[test]
+    fn e4m3_never_produces_nan_code() {
+        let s = FpSpec::new(4, 3);
+        let nan_mag_code = ((1u16 << (s.e + s.m)) - 1) as u8; // 0x7f magnitude
+        let mut x = 0.0f32;
+        while x < 1000.0 {
+            let c = s.quantize_code(x) & 0x7f;
+            assert_ne!(c, nan_mag_code, "x={x}");
+            x += 0.37;
+        }
+    }
+
+    #[test]
+    fn decode_sign_bit() {
+        let s = FpSpec::new(3, 2);
+        let c = s.quantize_code(-3.0);
+        assert!(s.decode(c) < 0.0);
+        assert_eq!(s.decode(c), -s.decode(c & 0x1f));
+    }
+}

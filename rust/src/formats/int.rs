@@ -1,0 +1,130 @@
+//! Signed-integer element quantization (MXINT elements).
+//!
+//! Elements are two's-complement with `b` bits: range `[−2^(b−1), 2^(b−1)−1]`.
+//! Quantization rounds to nearest (ties-to-even by default, matching the jnp
+//! oracle and OCP conversion; round-half-away is available for the ablation
+//! bench) and saturates to the range.
+
+use super::mxblock::RoundMode;
+
+/// Inclusive element range of a `b`-bit signed integer format.
+#[inline]
+pub const fn int_range(bits: u8) -> (i32, i32) {
+    let half = 1i32 << (bits - 1);
+    (-half, half - 1)
+}
+
+/// Round a finite f32 to an integer under the given mode.
+#[inline]
+pub fn round_f32(x: f32, mode: RoundMode) -> f32 {
+    match mode {
+        RoundMode::HalfEven => x.round_ties_even(),
+        RoundMode::HalfAway => x.round(),
+    }
+}
+
+/// Quantize a scaled value to a `b`-bit signed integer code (saturating).
+/// Non-finite inputs saturate (NaN → 0).
+#[inline]
+pub fn quantize_int(x: f32, bits: u8, mode: RoundMode) -> i8 {
+    let (lo, hi) = int_range(bits);
+    if x.is_nan() {
+        return 0;
+    }
+    let r = round_f32(x, mode);
+    let clamped = r.clamp(lo as f32, hi as f32);
+    clamped as i8
+}
+
+/// Round-to-nearest on an `i32` right shift by `d` bits (the SSMXINT
+/// element transform, paper Eq. 4: "divide by 2^Δe ... round using the
+/// dropped bits"). `HalfEven` implements unbiased RNE on the dropped bits;
+/// `HalfAway` rounds the exact .5 case away from zero.
+#[inline]
+pub fn shift_round(v: i32, d: u32, mode: RoundMode) -> i32 {
+    if d == 0 {
+        return v;
+    }
+    let floor = v >> d; // arithmetic shift: floor division for negatives
+    let rem = v - (floor << d); // in [0, 2^d)
+    let half = 1i32 << (d - 1);
+    match mode {
+        RoundMode::HalfEven => {
+            if rem > half || (rem == half && floor & 1 == 1) {
+                floor + 1
+            } else {
+                floor
+            }
+        }
+        RoundMode::HalfAway => {
+            // Ties away from zero on the *real* value v/2^d.
+            if rem > half || (rem == half && v >= 0) {
+                floor + 1
+            } else {
+                floor
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges() {
+        assert_eq!(int_range(2), (-2, 1));
+        assert_eq!(int_range(4), (-8, 7));
+        assert_eq!(int_range(8), (-128, 127));
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        assert_eq!(quantize_int(1000.0, 4, RoundMode::HalfEven), 7);
+        assert_eq!(quantize_int(-1000.0, 4, RoundMode::HalfEven), -8);
+        assert_eq!(quantize_int(f32::INFINITY, 8, RoundMode::HalfEven), 127);
+        assert_eq!(quantize_int(f32::NEG_INFINITY, 8, RoundMode::HalfEven), -128);
+        assert_eq!(quantize_int(f32::NAN, 8, RoundMode::HalfEven), 0);
+    }
+
+    #[test]
+    fn rne_ties() {
+        assert_eq!(quantize_int(0.5, 8, RoundMode::HalfEven), 0);
+        assert_eq!(quantize_int(1.5, 8, RoundMode::HalfEven), 2);
+        assert_eq!(quantize_int(2.5, 8, RoundMode::HalfEven), 2);
+        assert_eq!(quantize_int(-0.5, 8, RoundMode::HalfEven), 0);
+        assert_eq!(quantize_int(-1.5, 8, RoundMode::HalfEven), -2);
+        // Half-away mode.
+        assert_eq!(quantize_int(0.5, 8, RoundMode::HalfAway), 1);
+        assert_eq!(quantize_int(-0.5, 8, RoundMode::HalfAway), -1);
+    }
+
+    #[test]
+    fn shift_round_matches_float_division() {
+        // shift_round(v, d) must equal quantizing v / 2^d with the same mode.
+        for mode in [RoundMode::HalfEven, RoundMode::HalfAway] {
+            for v in -1024i32..=1024 {
+                for d in 0..=6u32 {
+                    let got = shift_round(v, d, mode);
+                    let exact = v as f64 / (1i64 << d) as f64;
+                    let want = match mode {
+                        RoundMode::HalfEven => {
+                            // f64 RNE
+                            let r = exact.round_ties_even();
+                            r as i32
+                        }
+                        RoundMode::HalfAway => exact.round() as i32,
+                    };
+                    assert_eq!(got, want, "v={v} d={d} mode={mode:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shift_round_zero_shift_is_identity() {
+        for v in [-7, -1, 0, 3, 127] {
+            assert_eq!(shift_round(v, 0, RoundMode::HalfEven), v);
+        }
+    }
+}

@@ -1,0 +1,325 @@
+//! Microscaling (MX) numeric formats — the paper's substrate.
+//!
+//! A microscaling format (OCP MX spec; paper §2) is defined by
+//! (i) the scale data type — here a power-of-two exponent stored as `i8`
+//! (E8M0-like), (ii) the element format and precision, and (iii) the scaling
+//! block size. [`ElementFormat`] captures (ii); [`MxFormat`] adds (iii).
+//!
+//! Element formats implemented (paper §3.2):
+//! * `MXINT b` for `b ∈ {2..8}` — signed two's-complement elements,
+//!   `emax_int(b) = b − 2`.
+//! * `MXFP b` for `b ∈ {4(E2M1), 5(E2M2), 6(E3M2), 7(E3M3), 8(E4M3)}` —
+//!   minifloat elements with subnormals, `emax_fp(η) = 2^(η−1)`; E4M3 uses the
+//!   OCP encoding (max normal 448, top mantissa slot reserved for NaN).
+//!
+//! Submodules:
+//! * [`fp`] — minifloat quantize/decode (round-to-nearest-even, saturating).
+//! * [`int`] — signed integer quantize (RNE or round-half-up, saturating).
+//! * [`mxblock`] — block encode/decode (paper Eq. 1–3).
+//! * [`ss`] — Slice-and-Scale conversions (paper Eq. 4 and Eq. 6).
+//! * [`pack`] — sub-byte bit packing of element codes.
+
+pub mod fp;
+pub mod int;
+pub mod mxblock;
+pub mod pack;
+pub mod ss;
+
+pub use fp::FpSpec;
+pub use mxblock::{MxBlock, RoundMode};
+
+use std::fmt;
+
+/// Element data type of an MX format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementFormat {
+    /// Signed two's-complement integer with `bits` total bits (2..=8).
+    Int { bits: u8 },
+    /// Minifloat with `exp` exponent bits and `man` mantissa bits
+    /// (total bits = 1 + exp + man).
+    Fp { exp: u8, man: u8 },
+}
+
+impl ElementFormat {
+    /// Signed integer element format with `bits` bits.
+    pub const fn int(bits: u8) -> ElementFormat {
+        assert!(bits >= 2 && bits <= 8);
+        ElementFormat::Int { bits }
+    }
+
+    /// Minifloat element format `E{exp}M{man}`.
+    pub const fn fp(exp: u8, man: u8) -> ElementFormat {
+        assert!(exp >= 2 && exp <= 4 && man >= 1 && man <= 3);
+        ElementFormat::Fp { exp, man }
+    }
+
+    /// The paper's MXFP bitwidth → element format map (§3.2):
+    /// 4→E2M1, 5→E2M2, 6→E3M2, 7→E3M3, 8→E4M3.
+    pub fn fp_from_bits(bits: u8) -> ElementFormat {
+        match bits {
+            4 => ElementFormat::fp(2, 1),
+            5 => ElementFormat::fp(2, 2),
+            6 => ElementFormat::fp(3, 2),
+            7 => ElementFormat::fp(3, 3),
+            8 => ElementFormat::fp(4, 3),
+            _ => panic!("MXFP defined for 4..=8 bits, got {bits}"),
+        }
+    }
+
+    /// Total element bits.
+    pub fn bits(&self) -> u8 {
+        match self {
+            ElementFormat::Int { bits } => *bits,
+            ElementFormat::Fp { exp, man } => 1 + exp + man,
+        }
+    }
+
+    /// Exponent of the largest normal number (paper: `e_max(f)`):
+    /// `b−2` for MXINT(b), `2^(η−1)` for MXFP(η, ·).
+    pub fn emax(&self) -> i32 {
+        match self {
+            ElementFormat::Int { bits } => *bits as i32 - 2,
+            ElementFormat::Fp { exp, .. } => 1 << (exp - 1),
+        }
+    }
+
+    /// Largest representable magnitude of the *element* (before block scale).
+    pub fn max_value(&self) -> f32 {
+        match self {
+            ElementFormat::Int { bits } => ((1i32 << (bits - 1)) - 1) as f32,
+            ElementFormat::Fp { .. } => self.fp_spec().unwrap().max_value(),
+        }
+    }
+
+    /// The [`FpSpec`] if this is a minifloat format.
+    pub fn fp_spec(&self) -> Option<FpSpec> {
+        match self {
+            ElementFormat::Fp { exp, man } => Some(FpSpec::new(*exp, *man)),
+            ElementFormat::Int { .. } => None,
+        }
+    }
+
+    pub fn is_int(&self) -> bool {
+        matches!(self, ElementFormat::Int { .. })
+    }
+
+    /// Canonical short name: `int4`, `fp6`, ...
+    pub fn name(&self) -> String {
+        match self {
+            ElementFormat::Int { bits } => format!("int{bits}"),
+            ElementFormat::Fp { exp, man } => format!("fp{}", 1 + exp + man),
+        }
+    }
+
+    /// Long name: `MXINT4`, `MXFP6(E3M2)`, ...
+    pub fn long_name(&self) -> String {
+        match self {
+            ElementFormat::Int { bits } => format!("MXINT{bits}"),
+            ElementFormat::Fp { exp, man } => {
+                format!("MXFP{}(E{exp}M{man})", 1 + exp + man)
+            }
+        }
+    }
+
+    /// Parse `int2..int8`, `fp4..fp8`, or `e{X}m{Y}`.
+    pub fn parse(s: &str) -> anyhow::Result<ElementFormat> {
+        let t = s.trim().to_ascii_lowercase();
+        if let Some(b) = t.strip_prefix("mxint").or_else(|| t.strip_prefix("int")) {
+            let bits: u8 = b.parse().map_err(|_| anyhow::anyhow!("bad format '{s}'"))?;
+            if !(2..=8).contains(&bits) {
+                anyhow::bail!("MXINT bits must be 2..=8, got {bits}");
+            }
+            return Ok(ElementFormat::int(bits));
+        }
+        if let Some(b) = t.strip_prefix("mxfp").or_else(|| t.strip_prefix("fp")) {
+            let bits: u8 = b.parse().map_err(|_| anyhow::anyhow!("bad format '{s}'"))?;
+            if !(4..=8).contains(&bits) {
+                anyhow::bail!("MXFP bits must be 4..=8, got {bits}");
+            }
+            return Ok(ElementFormat::fp_from_bits(bits));
+        }
+        if t.starts_with('e') {
+            if let Some(mpos) = t.find('m') {
+                let e: u8 = t[1..mpos].parse().map_err(|_| anyhow::anyhow!("bad '{s}'"))?;
+                let m: u8 = t[mpos + 1..].parse().map_err(|_| anyhow::anyhow!("bad '{s}'"))?;
+                return Ok(ElementFormat::fp(e, m));
+            }
+        }
+        anyhow::bail!("unknown element format '{s}' (try int2..int8, fp4..fp8, e2m1)")
+    }
+
+    /// All MXINT evaluation formats from the paper (bits 2..=8).
+    pub fn all_int() -> Vec<ElementFormat> {
+        (2..=8).map(ElementFormat::int).collect()
+    }
+
+    /// All MXFP evaluation formats from the paper (bits 4..=8).
+    pub fn all_fp() -> Vec<ElementFormat> {
+        (4..=8).map(ElementFormat::fp_from_bits).collect()
+    }
+}
+
+impl fmt::Display for ElementFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.long_name())
+    }
+}
+
+/// A complete microscaling format: element type + scaling block size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MxFormat {
+    pub elem: ElementFormat,
+    pub block_size: usize,
+}
+
+impl MxFormat {
+    pub fn new(elem: ElementFormat, block_size: usize) -> MxFormat {
+        assert!(block_size > 0, "block size must be positive");
+        MxFormat { elem, block_size }
+    }
+
+    /// `MXINT{bits}` with the given block size.
+    pub fn mxint(bits: u8, block_size: usize) -> MxFormat {
+        MxFormat::new(ElementFormat::int(bits), block_size)
+    }
+
+    /// `MXFP{bits}` (paper bitwidth map) with the given block size.
+    pub fn mxfp(bits: u8, block_size: usize) -> MxFormat {
+        MxFormat::new(ElementFormat::fp_from_bits(bits), block_size)
+    }
+
+    /// Storage bits per element including the amortized shared scale.
+    pub fn bits_per_element(&self) -> f64 {
+        self.elem.bits() as f64 + 8.0 / self.block_size as f64
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}@{}", self.elem.name(), self.block_size)
+    }
+}
+
+impl fmt::Display for MxFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} (block {})", self.elem.long_name(), self.block_size)
+    }
+}
+
+/// Exact `floor(log2 |x|)` for finite non-zero `x`, via bit manipulation
+/// (handles subnormals; no libm rounding hazards).
+#[inline]
+pub fn floor_log2(x: f32) -> i32 {
+    debug_assert!(x.is_finite() && x != 0.0);
+    let bits = x.to_bits();
+    let exp_field = ((bits >> 23) & 0xff) as i32;
+    if exp_field != 0 {
+        exp_field - 127
+    } else {
+        // Subnormal: value = mantissa * 2^-149.
+        let mant = bits & 0x7f_ffff;
+        debug_assert!(mant != 0);
+        let top = 31 - mant.leading_zeros() as i32; // index of highest set bit
+        top - 149
+    }
+}
+
+/// `2^e` as f32, valid for `e ∈ [-149, 127]`; saturates to ±range otherwise.
+#[inline]
+pub fn exp2i(e: i32) -> f32 {
+    if e >= -126 {
+        if e > 127 {
+            return f32::INFINITY;
+        }
+        f32::from_bits((((e + 127) as u32) & 0xff) << 23)
+    } else if e >= -149 {
+        f32::from_bits(1u32 << (e + 149))
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_bitwidth_map() {
+        assert_eq!(ElementFormat::fp_from_bits(4), ElementFormat::fp(2, 1));
+        assert_eq!(ElementFormat::fp_from_bits(5), ElementFormat::fp(2, 2));
+        assert_eq!(ElementFormat::fp_from_bits(6), ElementFormat::fp(3, 2));
+        assert_eq!(ElementFormat::fp_from_bits(7), ElementFormat::fp(3, 3));
+        assert_eq!(ElementFormat::fp_from_bits(8), ElementFormat::fp(4, 3));
+    }
+
+    #[test]
+    fn emax_values_match_paper() {
+        // MXINT: emax = b-2 so that Δe = b_h − b_l (paper §3.3).
+        for b in 2..=8u8 {
+            assert_eq!(ElementFormat::int(b).emax(), b as i32 - 2);
+        }
+        // MXFP: emax = 2^(η−1) — E2→2, E3→4, E4→8.
+        assert_eq!(ElementFormat::fp(2, 1).emax(), 2);
+        assert_eq!(ElementFormat::fp(3, 2).emax(), 4);
+        assert_eq!(ElementFormat::fp(4, 3).emax(), 8);
+    }
+
+    #[test]
+    fn max_values() {
+        assert_eq!(ElementFormat::int(8).max_value(), 127.0);
+        assert_eq!(ElementFormat::int(2).max_value(), 1.0);
+        assert_eq!(ElementFormat::fp(2, 1).max_value(), 6.0); // OCP FP4
+        assert_eq!(ElementFormat::fp(3, 2).max_value(), 28.0); // OCP FP6 E3M2
+        assert_eq!(ElementFormat::fp(4, 3).max_value(), 448.0); // OCP FP8 E4M3
+        assert_eq!(ElementFormat::fp(2, 2).max_value(), 7.0);
+        assert_eq!(ElementFormat::fp(3, 3).max_value(), 30.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for f in ElementFormat::all_int().into_iter().chain(ElementFormat::all_fp()) {
+            assert_eq!(ElementFormat::parse(&f.name()).unwrap(), f);
+        }
+        assert_eq!(
+            ElementFormat::parse("E2M1").unwrap(),
+            ElementFormat::fp(2, 1)
+        );
+        assert_eq!(
+            ElementFormat::parse("MXINT8").unwrap(),
+            ElementFormat::int(8)
+        );
+        assert!(ElementFormat::parse("int9").is_err());
+        assert!(ElementFormat::parse("fp3").is_err());
+        assert!(ElementFormat::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn floor_log2_exact() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(0.999_999_9), -1);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(3.999), 1);
+        assert_eq!(floor_log2(4.0), 2);
+        assert_eq!(floor_log2(-8.0), 3);
+        assert_eq!(floor_log2(0.5), -1);
+        assert_eq!(floor_log2(f32::MIN_POSITIVE), -126);
+        // Subnormals.
+        assert_eq!(floor_log2(f32::from_bits(1)), -149);
+        assert_eq!(floor_log2(f32::from_bits(0x7f_ffff)), -127);
+    }
+
+    #[test]
+    fn exp2i_matches_powi() {
+        for e in -149..=127 {
+            let got = exp2i(e);
+            let want = 2.0f64.powi(e) as f32;
+            assert_eq!(got, want, "e={e}");
+        }
+        assert_eq!(exp2i(-150), 0.0);
+        assert!(exp2i(128).is_infinite());
+    }
+
+    #[test]
+    fn bits_per_element_accounting() {
+        let f = MxFormat::mxint(4, 32);
+        assert!((f.bits_per_element() - 4.25).abs() < 1e-12);
+    }
+}

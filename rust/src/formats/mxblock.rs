@@ -1,0 +1,326 @@
+//! Block-level MX encode/decode — paper Eq. 1–3.
+//!
+//! For a block of scalars `V = {V_i}` the MX conversion computes
+//!
+//! ```text
+//! shared_exp = floor(log2 max_i |V_i|) − e_max(f)        (Eq. 1/3/5)
+//! X          = 2^shared_exp
+//! P_i        = quantize_f(V_i / X)                       (Eq. 2)
+//! ```
+//!
+//! and reconstructs `V̂_i = X · P_i`. The shared exponent is stored as an
+//! `i8` (E8M0-like scale datatype), clamped to `[−127, 127]`; an all-zero
+//! block stores the minimum exponent and all-zero elements.
+
+use super::int::quantize_int;
+use super::{exp2i, floor_log2, ElementFormat};
+
+/// Rounding mode for integer element quantization and SSMXINT shifts.
+///
+/// `HalfEven` (default) matches the jnp oracle / OCP conversions; `HalfAway`
+/// is the "round using the most-significant dropped bit" variant mentioned in
+/// paper §3.3, kept for the ablation benchmark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RoundMode {
+    #[default]
+    HalfEven,
+    HalfAway,
+}
+
+/// Minimum/maximum stored shared exponent (E8M0-like scale range).
+///
+/// The lower bound is −126, not −127: XLA CPU flushes subnormal f32 results
+/// to zero, so a 2^−127 scale would decode differently between the jnp
+/// oracle and this bit-exact path. Clamping the scale to the f32 *normal*
+/// range keeps rust ↔ python golden parity; blocks that small quantize to
+/// zero anyway.
+pub const SCALE_EXP_MIN: i32 = -126;
+pub const SCALE_EXP_MAX: i32 = 127;
+
+/// One encoded MX block: a shared scale exponent plus element codes.
+///
+/// Element codes are stored uniformly as `i8`:
+/// * `Int` formats: the two's-complement element value itself.
+/// * `Fp` formats: the sign-magnitude minifloat code reinterpreted as `i8`
+///   (only the low `bits()` bits are significant).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MxBlock {
+    pub format: ElementFormat,
+    pub scale_exp: i8,
+    pub codes: Vec<i8>,
+}
+
+/// Compute the shared exponent for a block (Eq. 1), clamped to the scale
+/// datatype range. Returns `SCALE_EXP_MIN` for an all-zero (or all-nonfinite)
+/// block.
+pub fn shared_exponent(values: &[f32], format: ElementFormat) -> i32 {
+    let mut max_abs = 0.0f32;
+    for &v in values {
+        let a = v.abs();
+        // NaNs are ignored for the max (quantize maps them to 0); infinities
+        // saturate the scale.
+        if a.is_finite() && a > max_abs {
+            max_abs = a;
+        } else if a.is_infinite() {
+            return SCALE_EXP_MAX;
+        }
+    }
+    if max_abs == 0.0 {
+        return SCALE_EXP_MIN;
+    }
+    (floor_log2(max_abs) - format.emax()).clamp(SCALE_EXP_MIN, SCALE_EXP_MAX)
+}
+
+/// Encode one block of values (Eq. 1–3). `values.len()` is the block size
+/// (ragged final blocks are allowed).
+pub fn encode_block(values: &[f32], format: ElementFormat, mode: RoundMode) -> MxBlock {
+    let scale_exp = shared_exponent(values, format);
+    let inv_scale = exp2i(-scale_exp); // exact power of two
+    let codes = match format {
+        ElementFormat::Int { bits } => values
+            .iter()
+            .map(|&v| quantize_int(v * inv_scale, bits, mode))
+            .collect(),
+        ElementFormat::Fp { .. } => {
+            let spec = format.fp_spec().unwrap();
+            values
+                .iter()
+                .map(|&v| spec.quantize_code(v * inv_scale) as i8)
+                .collect()
+        }
+    };
+    MxBlock {
+        format,
+        scale_exp: scale_exp as i8,
+        codes,
+    }
+}
+
+/// Decode a block back to f32 values (`V̂_i = X · P_i`).
+pub fn decode_block(block: &MxBlock) -> Vec<f32> {
+    let mut out = vec![0.0f32; block.codes.len()];
+    decode_block_into(block, &mut out);
+    out
+}
+
+/// Decode into a caller-provided buffer (hot path).
+pub fn decode_block_into(block: &MxBlock, out: &mut [f32]) {
+    assert_eq!(out.len(), block.codes.len());
+    let scale = exp2i(block.scale_exp as i32);
+    match block.format {
+        ElementFormat::Int { .. } => {
+            for (o, &c) in out.iter_mut().zip(&block.codes) {
+                *o = c as f32 * scale;
+            }
+        }
+        ElementFormat::Fp { .. } => {
+            let spec = block.format.fp_spec().unwrap();
+            for (o, &c) in out.iter_mut().zip(&block.codes) {
+                *o = spec.decode(c as u8) * scale;
+            }
+        }
+    }
+}
+
+/// Fake-quantize a whole slice blockwise: encode + decode (PTQ simulation).
+pub fn fake_quantize(values: &[f32], format: ElementFormat, block_size: usize, mode: RoundMode) -> Vec<f32> {
+    let mut out = vec![0.0f32; values.len()];
+    for (chunk, ochunk) in values.chunks(block_size).zip(out.chunks_mut(block_size)) {
+        let block = encode_block(chunk, format, mode);
+        decode_block_into(&block, ochunk);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::props::{run_cases, Gen};
+
+    #[test]
+    fn shared_exp_matches_paper_examples() {
+        // max|V| = 1.0 → floor(log2)=0; MXINT8 emax=6 → shared_exp=-6, X=2^-6.
+        let f = ElementFormat::int(8);
+        assert_eq!(shared_exponent(&[0.5, -1.0, 0.25], f), -6);
+        // MXFP8 (E4M3) emax=8 → shared_exp=-8.
+        let f8 = ElementFormat::fp(4, 3);
+        assert_eq!(shared_exponent(&[1.0], f8), -8);
+        // All-zero block.
+        assert_eq!(shared_exponent(&[0.0, 0.0], f), SCALE_EXP_MIN);
+    }
+
+    #[test]
+    fn max_element_never_clips_much() {
+        // For the max-magnitude element, |code| must land in
+        // [2^emax, 2^(emax+1)) before clipping — i.e. quantization uses the
+        // top binade of the element format.
+        let f = ElementFormat::int(8);
+        for max in [1.0f32, 1.5, 1.99, 2.0, 3.7, 100.0, 1e-3] {
+            let b = encode_block(&[max], f, RoundMode::HalfEven);
+            let code = b.codes[0] as i32;
+            assert!(code.abs() >= 64, "max={max} code={code}"); // 2^6
+            assert!(code.abs() <= 127, "max={max} code={code}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bound_int() {
+        // |x − decode(encode(x))| ≤ X/2 for in-range elements (RNE bin radius).
+        let f = ElementFormat::int(4);
+        let vals = [0.3f32, -0.95, 0.02, 1.0, -0.5, 0.77, -0.11, 0.0];
+        let b = encode_block(&vals, f, RoundMode::HalfEven);
+        let dec = decode_block(&b);
+        let x = exp2i(b.scale_exp as i32);
+        for (v, d) in vals.iter().zip(&dec) {
+            // The most-negative code −8 is never needed here; bound holds.
+            assert!((v - d).abs() <= x / 2.0 + 1e-9, "v={v} d={d} X={x}");
+        }
+    }
+
+    #[test]
+    fn all_zero_block_decodes_to_zero() {
+        for f in [ElementFormat::int(4), ElementFormat::fp(2, 1)] {
+            let b = encode_block(&[0.0; 16], f, RoundMode::HalfEven);
+            assert!(decode_block(&b).iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn nan_elements_become_zero() {
+        let f = ElementFormat::int(8);
+        let b = encode_block(&[f32::NAN, 1.0], f, RoundMode::HalfEven);
+        let dec = decode_block(&b);
+        assert_eq!(dec[0], 0.0);
+        assert!((dec[1] - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn subnormal_inputs_are_safe() {
+        let f = ElementFormat::int(8);
+        let tiny = f32::from_bits(1); // 2^-149
+        let b = encode_block(&[tiny, -tiny], f, RoundMode::HalfEven);
+        // Scale clamps at SCALE_EXP_MIN; elements quantize to ~0.
+        assert_eq!(b.scale_exp as i32, SCALE_EXP_MIN);
+        let dec = decode_block(&b);
+        assert!(dec.iter().all(|x| x.abs() <= exp2i(-120)));
+    }
+
+    #[test]
+    fn huge_inputs_saturate() {
+        let f = ElementFormat::int(8);
+        let b = encode_block(&[f32::MAX, 1.0], f, RoundMode::HalfEven);
+        let dec = decode_block(&b);
+        assert!(dec[0].is_finite());
+        assert!(dec[0] > 1e37);
+    }
+
+    #[test]
+    fn fp_block_roundtrip_fixed_points() {
+        // Values already on the MXFP grid survive encode/decode exactly.
+        let f = ElementFormat::fp(3, 2);
+        let spec = f.fp_spec().unwrap();
+        // Pick grid values scaled by a power of two.
+        let vals: Vec<f32> = spec.magnitudes().iter().map(|m| m * 0.25).collect();
+        let b = encode_block(&vals, f, RoundMode::HalfEven);
+        let dec = decode_block(&b);
+        for (v, d) in vals.iter().zip(&dec) {
+            assert_eq!(v, d, "vals={vals:?} dec={dec:?}");
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_error_bounded() {
+        run_cases("mx roundtrip error bound", 64, |g: &mut Gen| {
+            let n = g.len(1, 64);
+            let vals = g.f32_vec_wild(n);
+            for f in [
+                ElementFormat::int(2),
+                ElementFormat::int(5),
+                ElementFormat::int(8),
+                ElementFormat::fp(2, 1),
+                ElementFormat::fp(3, 2),
+                ElementFormat::fp(4, 3),
+            ] {
+                let b = encode_block(&vals, f, RoundMode::HalfEven);
+                let dec = decode_block(&b);
+                let x = exp2i(b.scale_exp as i32);
+                let max_abs = vals
+                    .iter()
+                    .filter(|v| v.is_finite())
+                    .fold(0.0f32, |m, v| m.max(v.abs()));
+                if !max_abs.is_finite() || max_abs == 0.0 || b.scale_exp as i32 == SCALE_EXP_MAX {
+                    continue; // saturated/degenerate scales checked elsewhere
+                }
+                for (&v, &d) in vals.iter().zip(&dec) {
+                    if !v.is_finite() {
+                        continue;
+                    }
+                    // Worst-case absolute error: int → X (the RNE bin radius
+                    // is X/2, but the positive clip at 2^(b−1)−1 can cost up
+                    // to one extra step for the block max, e.g. MXINT2's
+                    // range [−2, 1]); fp → relative 2^−(m+1) in range plus
+                    // the top-of-binade clip, ≤ X·2^(emax−m+1) (factor 2
+                    // covers E4M3's NaN-slot clip to 448).
+                    let bound = match f {
+                        ElementFormat::Int { .. } => x + 1e-30,
+                        ElementFormat::Fp { man, .. } => {
+                            let rel = exp2i(-(man as i32) - 1);
+                            let clip = x * exp2i(f.emax() - man as i32 + 1);
+                            (v.abs() * rel).max(clip) + 1e-30
+                        }
+                    };
+                    let err = (v - d).abs();
+                    if err > bound {
+                        return Err(format!(
+                            "fmt={f} v={v} d={d} err={err} bound={bound} X={x}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_scale_is_power_of_two_and_stable() {
+        run_cases("scale power-of-two", 64, |g: &mut Gen| {
+            let n = g.len(1, 96);
+            let vals = g.f32_vec_wild(n);
+            let f = ElementFormat::int(6);
+            let b1 = encode_block(&vals, f, RoundMode::HalfEven);
+            let b2 = encode_block(&vals, f, RoundMode::HalfEven);
+            if b1 != b2 {
+                return Err("encode must be deterministic".into());
+            }
+            let x = exp2i(b1.scale_exp as i32);
+            if x <= 0.0 || x.log2().fract().abs() > 1e-6 {
+                return Err(format!("scale {x} not a positive power of two"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fake_quantize_blocks_independent() {
+        // Changing values in one block must not affect another block.
+        let f = ElementFormat::int(4);
+        let mut a = vec![0.1f32; 64];
+        let fq1 = fake_quantize(&a, f, 32, RoundMode::HalfEven);
+        a[40] = 100.0; // second block only
+        let fq2 = fake_quantize(&a, f, 32, RoundMode::HalfEven);
+        assert_eq!(&fq1[..32], &fq2[..32]);
+        assert_ne!(&fq1[32..], &fq2[32..]);
+    }
+
+    #[test]
+    fn ragged_final_block() {
+        let f = ElementFormat::int(8);
+        let vals: Vec<f32> = (0..50).map(|i| (i as f32 * 0.7).sin()).collect();
+        let fq = fake_quantize(&vals, f, 32, RoundMode::HalfEven);
+        assert_eq!(fq.len(), 50);
+        // Final ragged block of 18 must be scaled on its own max.
+        let tail_block = encode_block(&vals[32..], f, RoundMode::HalfEven);
+        let tail_dec = decode_block(&tail_block);
+        assert_eq!(&fq[32..], &tail_dec[..]);
+    }
+}

@@ -1,0 +1,312 @@
+//! Sub-byte bit packing of element codes.
+//!
+//! MX tensors store element codes contiguously at their native width
+//! (2..=8 bits) in little-endian bit order: code `i` occupies bits
+//! `[i·w, (i+1)·w)` of the byte stream, low bits first. This is the wire
+//! and checkpoint layout; the hot path unpacks a whole block at a time.
+//!
+//! Codes are masked to `w` bits on pack; integer codes are sign-extended on
+//! unpack (`unpack_signed`), minifloat codes are returned raw
+//! (`unpack_unsigned`).
+
+/// Number of bytes needed for `n` codes of `w` bits.
+#[inline]
+pub const fn packed_len(n: usize, w: u8) -> usize {
+    (n * w as usize + 7) / 8
+}
+
+/// Pack `codes` (low `w` bits significant) into a byte vector.
+pub fn pack(codes: &[i8], w: u8) -> Vec<u8> {
+    assert!((1..=8).contains(&w));
+    let mut out = vec![0u8; packed_len(codes.len(), w)];
+    pack_into(codes, w, &mut out);
+    out
+}
+
+/// Pack into a caller-provided buffer of exactly `packed_len` bytes.
+pub fn pack_into(codes: &[i8], w: u8, out: &mut [u8]) {
+    assert_eq!(out.len(), packed_len(codes.len(), w));
+    out.fill(0);
+    let mask = if w == 8 { 0xffu16 } else { (1u16 << w) - 1 };
+    let w = w as usize;
+    let mut bitpos = 0usize;
+    for &c in codes {
+        let v = (c as u8 as u16) & mask;
+        let byte = bitpos >> 3;
+        let off = bitpos & 7;
+        out[byte] |= (v << off) as u8;
+        if off + w > 8 {
+            out[byte + 1] |= (v >> (8 - off)) as u8;
+        }
+        bitpos += w;
+    }
+}
+
+/// Unpack `n` unsigned codes of width `w` (minifloat code planes).
+pub fn unpack_unsigned(bytes: &[u8], w: u8, n: usize) -> Vec<u8> {
+    let mut out = vec![0u8; n];
+    unpack_unsigned_into(bytes, w, &mut out);
+    out
+}
+
+/// Unpack into a caller-provided buffer (hot path).
+///
+/// §Perf: word-at-a-time — each iteration loads one `u64` window covering 8
+/// consecutive codes (w·8 ≤ 64 bits always lands inside one aligned-enough
+/// read via the byte offset) and extracts them with shifts, replacing the
+/// byte-straddling branch of the scalar path. See
+/// [`unpack_unsigned_into_scalar`] for the reference implementation (kept
+/// for the bench baseline and differential tests).
+pub fn unpack_unsigned_into(bytes: &[u8], w: u8, out: &mut [u8]) {
+    assert!((1..=8).contains(&w));
+    assert!(bytes.len() >= packed_len(out.len(), w), "packed buffer too short");
+    if w == 8 {
+        out.copy_from_slice(&bytes[..out.len()]);
+        return;
+    }
+    let mask = ((1u16 << w) - 1) as u64;
+    let wu = w as usize;
+    let n = out.len();
+    // Main loop: 8 codes per iteration consume exactly `wu` bytes (8·w bits),
+    // so every group starts byte-aligned; fall to the scalar tail when fewer
+    // than 8 readable bytes remain.
+    let mut i = 0usize;
+    while i + 8 <= n && i * wu / 8 + 8 <= bytes.len() {
+        let byte = i * wu / 8;
+        let word = u64::from_le_bytes(bytes[byte..byte + 8].try_into().unwrap());
+        let base = &mut out[i..i + 8];
+        for (j, o) in base.iter_mut().enumerate() {
+            *o = ((word >> (j * wu)) & mask) as u8;
+        }
+        i += 8;
+    }
+    // Scalar tail.
+    unpack_unsigned_tail(bytes, w, out, i);
+}
+
+#[inline]
+fn unpack_unsigned_tail(bytes: &[u8], w: u8, out: &mut [u8], start: usize) {
+    let mask = if w == 8 { 0xffu16 } else { (1u16 << w) - 1 };
+    let wu = w as usize;
+    let mut bitpos = start * wu;
+    for o in out[start..].iter_mut() {
+        let byte = bitpos >> 3;
+        let off = bitpos & 7;
+        let mut v = (bytes[byte] as u16) >> off;
+        if off + wu > 8 {
+            v |= (bytes[byte + 1] as u16) << (8 - off);
+        }
+        *o = (v & mask) as u8;
+        bitpos += wu;
+    }
+}
+
+/// Reference scalar implementation (bench baseline + differential tests).
+pub fn unpack_unsigned_into_scalar(bytes: &[u8], w: u8, out: &mut [u8]) {
+    assert!((1..=8).contains(&w));
+    assert!(bytes.len() >= packed_len(out.len(), w), "packed buffer too short");
+    unpack_unsigned_tail(bytes, w, out, 0);
+}
+
+/// Unpack `n` signed (two's complement, width `w`) codes with sign extension.
+pub fn unpack_signed(bytes: &[u8], w: u8, n: usize) -> Vec<i8> {
+    let mut out = vec![0i8; n];
+    unpack_signed_into(bytes, w, &mut out);
+    out
+}
+
+/// Signed unpack into a caller-provided buffer (hot path).
+///
+/// §Perf: same word-at-a-time structure as [`unpack_unsigned_into`], with a
+/// shift-based sign extension (`<< (8−w) >> (8−w)` on `i8`).
+pub fn unpack_signed_into(bytes: &[u8], w: u8, out: &mut [i8]) {
+    assert!((1..=8).contains(&w));
+    let n = out.len();
+    assert!(bytes.len() >= packed_len(n, w), "packed buffer too short");
+    if w == 8 {
+        for (o, &b) in out.iter_mut().zip(bytes) {
+            *o = b as i8;
+        }
+        return;
+    }
+    let mask = ((1u16 << w) - 1) as u64;
+    let wu = w as usize;
+    let shift = 8 - w as u32;
+    let mut i = 0usize;
+    while i + 8 <= n && i * wu / 8 + 8 <= bytes.len() {
+        let byte = i * wu / 8; // 8 codes = wu whole bytes: aligned stride
+        let word = u64::from_le_bytes(bytes[byte..byte + 8].try_into().unwrap());
+        let base = &mut out[i..i + 8];
+        for (j, o) in base.iter_mut().enumerate() {
+            let v = ((word >> (j * wu)) & mask) as u8;
+            *o = ((v << shift) as i8) >> shift; // sign-extend
+        }
+        i += 8;
+    }
+    let mut bitpos = i * wu;
+    let mask16 = (1u16 << w) - 1;
+    let sign = 1u16 << (w - 1);
+    for o in out[i..].iter_mut() {
+        let byte = bitpos >> 3;
+        let off = bitpos & 7;
+        let mut v = (bytes[byte] as u16) >> off;
+        if off + wu > 8 {
+            v |= (bytes[byte + 1] as u16) << (8 - off);
+        }
+        v &= mask16;
+        *o = if v & sign != 0 {
+            (v | !mask16) as u8 as i8
+        } else {
+            v as u8 as i8
+        };
+        bitpos += wu;
+    }
+}
+
+/// Reference scalar implementation (bench baseline + differential tests).
+pub fn unpack_signed_into_scalar(bytes: &[u8], w: u8, out: &mut [i8]) {
+    let n = out.len();
+    let mask = if w == 8 { 0xffu16 } else { (1u16 << w) - 1 };
+    let sign = 1u16 << (w - 1);
+    let wide = w as usize;
+    let mut bitpos = 0usize;
+    assert!(bytes.len() >= packed_len(n, w), "packed buffer too short");
+    for o in out.iter_mut() {
+        let byte = bitpos >> 3;
+        let off = bitpos & 7;
+        let mut v = (bytes[byte] as u16) >> off;
+        if off + wide > 8 {
+            v |= (bytes[byte + 1] as u16) << (8 - off);
+        }
+        v &= mask;
+        *o = if v & sign != 0 {
+            (v | !mask) as u8 as i8
+        } else {
+            v as u8 as i8
+        };
+        bitpos += wide;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::props::{run_cases, Gen};
+
+    #[test]
+    fn packed_len_exact() {
+        assert_eq!(packed_len(0, 4), 0);
+        assert_eq!(packed_len(32, 4), 16);
+        assert_eq!(packed_len(32, 3), 12);
+        assert_eq!(packed_len(33, 3), 13);
+        assert_eq!(packed_len(5, 8), 5);
+        assert_eq!(packed_len(1, 2), 1);
+    }
+
+    #[test]
+    fn roundtrip_signed_all_widths() {
+        for w in 2..=8u8 {
+            let lo = -(1i16 << (w - 1));
+            let hi = (1i16 << (w - 1)) - 1;
+            let codes: Vec<i8> = (lo..=hi).map(|v| v as i8).collect();
+            let packed = pack(&codes, w);
+            assert_eq!(packed.len(), packed_len(codes.len(), w));
+            let un = unpack_signed(&packed, w, codes.len());
+            assert_eq!(codes, un, "w={w}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_unsigned_all_widths() {
+        for w in 1..=8u8 {
+            let max = if w == 8 { 255u16 } else { (1 << w) - 1 };
+            let codes: Vec<i8> = (0..=max).map(|v| v as u8 as i8).collect();
+            let packed = pack(&codes, w);
+            let un = unpack_unsigned(&packed, w, codes.len());
+            let want: Vec<u8> = (0..=max).map(|v| v as u8).collect();
+            assert_eq!(un, want, "w={w}");
+        }
+    }
+
+    #[test]
+    fn upper_bits_are_masked_on_pack() {
+        // A stray high bit in the i8 code must not corrupt neighbours.
+        let codes = [0b0111_1111u8 as i8, 0]; // only low 2 bits should persist at w=2
+        let packed = pack(&codes, 2);
+        let un = unpack_unsigned(&packed, 2, 2);
+        assert_eq!(un, vec![0b11, 0]);
+    }
+
+    #[test]
+    fn cross_byte_boundaries() {
+        // Width 3, 8 codes → 3 bytes; values straddle byte edges.
+        let codes: Vec<i8> = vec![1, 2, 3, -1, -4, 0, 3, -2];
+        let packed = pack(&codes, 3);
+        assert_eq!(packed.len(), 3);
+        assert_eq!(unpack_signed(&packed, 3, 8), codes);
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        run_cases("pack/unpack roundtrip", 64, |g: &mut Gen| {
+            let n = g.len(0, 257);
+            for w in 2..=8u8 {
+                let lo = -(1i32 << (w - 1));
+                let hi = (1i32 << (w - 1)) - 1;
+                let codes: Vec<i8> =
+                    (0..n).map(|_| g.rng.range(0, (hi - lo + 1) as usize) as i32 + lo)
+                        .map(|v| v as i8)
+                        .collect();
+                let packed = pack(&codes, w);
+                if packed.len() != packed_len(n, w) {
+                    return Err(format!("w={w}: wrong packed len"));
+                }
+                let un = unpack_signed(&packed, w, n);
+                if un != codes {
+                    return Err(format!("w={w} n={n}: signed roundtrip mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "packed buffer too short")]
+    fn unpack_checks_bounds() {
+        let packed = pack(&[1, 2, 3], 4); // 2 bytes
+        let _ = unpack_signed(&packed, 4, 100);
+    }
+
+    #[test]
+    fn prop_fast_unpack_matches_scalar_reference() {
+        // §Perf differential test: the word-at-a-time paths must be
+        // bit-identical to the retained scalar reference at every width,
+        // length (incl. non-multiples of 8) and alignment.
+        run_cases("fast unpack == scalar", 48, |g: &mut Gen| {
+            let n = g.len(0, 300);
+            for w in 2..=8u8 {
+                let lo = -(1i32 << (w - 1));
+                let hi = (1i32 << (w - 1)) - 1;
+                let codes: Vec<i8> = (0..n)
+                    .map(|_| (g.rng.range(0, (hi - lo + 1) as usize) as i32 + lo) as i8)
+                    .collect();
+                let packed = pack(&codes, w);
+                let mut fast = vec![0i8; n];
+                let mut slow = vec![0i8; n];
+                unpack_signed_into(&packed, w, &mut fast);
+                unpack_signed_into_scalar(&packed, w, &mut slow);
+                if fast != slow {
+                    return Err(format!("signed w={w} n={n}"));
+                }
+                let mut fast_u = vec![0u8; n];
+                let mut slow_u = vec![0u8; n];
+                unpack_unsigned_into(&packed, w, &mut fast_u);
+                unpack_unsigned_into_scalar(&packed, w, &mut slow_u);
+                if fast_u != slow_u {
+                    return Err(format!("unsigned w={w} n={n}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

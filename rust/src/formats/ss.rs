@@ -1,0 +1,288 @@
+//! Slice-and-Scale conversions — the paper's §3.3 (SSMXINT, Eq. 4) and
+//! §3.4 (SSMXFP, Eq. 6).
+//!
+//! These convert a *higher*-precision MX block `(X_h, P_h)` into a
+//! lower-precision one `(X_ℓ, P_ℓ)` **without access to the original FP32
+//! values**:
+//!
+//! * **SSMXINT** — `Δe = b_h − b_ℓ`; elements are arithmetically
+//!   shifted right by `Δe` with round-to-nearest on the dropped bits and
+//!   clipped to the target range; the scale exponent increases by `Δe`
+//!   (`X_ℓ = X_h·2^Δe`), preserving the represented real range.
+//! * **SSMXFP** — `Δe = e_max(η_h) − e_max(η_ℓ)`; elements are decoded,
+//!   multiplied by the exact power of two `2^−Δe`, and requantized to the
+//!   target minifloat (through an FP32 intermediate, as the paper permits);
+//!   the scale exponent increases by `Δe`.
+//!
+//! Because `V` is fixed, the scale for any MXINT precision differs from the
+//! high-precision scale only through `e_max` (paper §3.3), so the SS scale
+//! equals the direct-quantization scale exactly; the residual element error
+//! comes from the double rounding of the low-precision cast.
+
+use super::int::{int_range, shift_round};
+use super::mxblock::{MxBlock, RoundMode, SCALE_EXP_MAX};
+use super::{exp2i, ElementFormat};
+use anyhow::{bail, Result};
+
+/// Convert a block to a lower-precision format via Slice-and-Scale.
+///
+/// Errors if the source/target element families differ (MXINT→MXINT and
+/// MXFP→MXFP only, as in the paper) or if the target is not lower-or-equal
+/// precision.
+pub fn slice_and_scale(block: &MxBlock, target: ElementFormat, mode: RoundMode) -> Result<MxBlock> {
+    match (block.format, target) {
+        (ElementFormat::Int { bits: bh }, ElementFormat::Int { bits: bl }) => {
+            if bl > bh {
+                bail!("SSMXINT requires b_l <= b_h (got {bh} -> {bl})");
+            }
+            Ok(ss_int(block, bh, bl, mode))
+        }
+        (ElementFormat::Fp { .. }, ElementFormat::Fp { .. }) => {
+            let sh = block.format.fp_spec().unwrap();
+            let sl = target.fp_spec().unwrap();
+            if sl.emax() > sh.emax() || (sl.emax() == sh.emax() && sl.m > sh.m) {
+                bail!(
+                    "SSMXFP requires a lower-precision target (got {} -> {})",
+                    block.format,
+                    target
+                );
+            }
+            Ok(ss_fp(block, target))
+        }
+        _ => bail!(
+            "slice-and-scale cannot cross element families ({} -> {})",
+            block.format,
+            target
+        ),
+    }
+}
+
+/// SSMXINT (Eq. 4): integer right-shift with rounding + scale bump.
+fn ss_int(block: &MxBlock, bh: u8, bl: u8, mode: RoundMode) -> MxBlock {
+    let de = (bh - bl) as u32; // Δe = b_h − b_ℓ (emax(b) = b−2)
+    let (lo, hi) = int_range(bl);
+    let codes = block
+        .codes
+        .iter()
+        .map(|&c| shift_round(c as i32, de, mode).clamp(lo, hi) as i8)
+        .collect();
+    MxBlock {
+        format: ElementFormat::int(bl),
+        scale_exp: ((block.scale_exp as i32 + de as i32).min(SCALE_EXP_MAX)) as i8,
+        codes,
+    }
+}
+
+/// SSMXFP (Eq. 6): decode → scale by exact 2^−Δe → requantize + scale bump.
+fn ss_fp(block: &MxBlock, target: ElementFormat) -> MxBlock {
+    let sh = block.format.fp_spec().unwrap();
+    let sl = target.fp_spec().unwrap();
+    let de = sh.emax() - sl.emax();
+    let down = exp2i(-de); // exact power of two
+    let codes = block
+        .codes
+        .iter()
+        .map(|&c| sl.quantize_code(sh.decode(c as u8) * down) as i8)
+        .collect();
+    MxBlock {
+        format: target,
+        scale_exp: ((block.scale_exp as i32 + de).min(SCALE_EXP_MAX)) as i8,
+        codes,
+    }
+}
+
+/// Slice-and-scale an entire plane of blocks (convenience for tensors).
+pub fn slice_and_scale_all(
+    blocks: &[MxBlock],
+    target: ElementFormat,
+    mode: RoundMode,
+) -> Result<Vec<MxBlock>> {
+    blocks
+        .iter()
+        .map(|b| slice_and_scale(b, target, mode))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::mxblock::{decode_block, encode_block};
+    use crate::util::props::{run_cases, Gen};
+    use crate::util::stats::mse;
+
+    fn enc(vals: &[f32], f: ElementFormat) -> MxBlock {
+        encode_block(vals, f, RoundMode::HalfEven)
+    }
+
+    #[test]
+    fn ss_int_scale_matches_direct_quantization_scale() {
+        // Paper §3.3: the SS scale equals the direct-quantization scale,
+        // because only e_max differs between precisions.
+        let vals = [0.9f32, -0.3, 0.05, 0.61];
+        for bl in 2..=8u8 {
+            let anchor = enc(&vals, ElementFormat::int(8));
+            let ss = slice_and_scale(&anchor, ElementFormat::int(bl), RoundMode::HalfEven).unwrap();
+            let direct = enc(&vals, ElementFormat::int(bl));
+            assert_eq!(ss.scale_exp, direct.scale_exp, "bl={bl}");
+        }
+    }
+
+    #[test]
+    fn ss_fp_scale_matches_direct() {
+        let vals = [0.9f32, -0.3, 0.05, 0.61];
+        let anchor = enc(&vals, ElementFormat::fp(4, 3));
+        for bl in 4..=8u8 {
+            let tgt = ElementFormat::fp_from_bits(bl);
+            let ss = slice_and_scale(&anchor, tgt, RoundMode::HalfEven).unwrap();
+            let direct = enc(&vals, tgt);
+            assert_eq!(ss.scale_exp, direct.scale_exp, "bl={bl}");
+        }
+    }
+
+    #[test]
+    fn ss_identity_when_same_format() {
+        let vals = [0.4f32, -0.7, 0.1];
+        let b = enc(&vals, ElementFormat::int(8));
+        let ss = slice_and_scale(&b, ElementFormat::int(8), RoundMode::HalfEven).unwrap();
+        assert_eq!(b, ss);
+        let bf = enc(&vals, ElementFormat::fp(4, 3));
+        let ssf = slice_and_scale(&bf, ElementFormat::fp(4, 3), RoundMode::HalfEven).unwrap();
+        assert_eq!(bf, ssf);
+    }
+
+    #[test]
+    fn cross_family_rejected() {
+        let b = enc(&[1.0], ElementFormat::int(8));
+        assert!(slice_and_scale(&b, ElementFormat::fp(2, 1), RoundMode::HalfEven).is_err());
+        let bf = enc(&[1.0], ElementFormat::fp(4, 3));
+        assert!(slice_and_scale(&bf, ElementFormat::int(4), RoundMode::HalfEven).is_err());
+    }
+
+    #[test]
+    fn up_conversion_rejected() {
+        let b = enc(&[1.0], ElementFormat::int(4));
+        assert!(slice_and_scale(&b, ElementFormat::int(8), RoundMode::HalfEven).is_err());
+        let bf = enc(&[1.0], ElementFormat::fp(2, 1));
+        assert!(slice_and_scale(&bf, ElementFormat::fp(4, 3), RoundMode::HalfEven).is_err());
+    }
+
+    #[test]
+    fn ss_int_equals_shift_semantics() {
+        // Eq. 4: reconstruction X_l·P_l ≈ X_h·P_h.
+        let vals: Vec<f32> = (0..32).map(|i| ((i * 37 % 64) as f32 - 32.0) / 19.0).collect();
+        let anchor = enc(&vals, ElementFormat::int(8));
+        let anchor_dec = decode_block(&anchor);
+        let ss4 = slice_and_scale(&anchor, ElementFormat::int(4), RoundMode::HalfEven).unwrap();
+        let ss_dec = decode_block(&ss4);
+        let xl = exp2i(ss4.scale_exp as i32);
+        for (h, l) in anchor_dec.iter().zip(&ss_dec) {
+            // Residual bounded by the low-precision rounding bin (X_l/2),
+            // plus the negative-clip corner.
+            assert!((h - l).abs() <= xl * 0.5 + 1e-9, "h={h} l={l} xl={xl}");
+        }
+    }
+
+    #[test]
+    fn prop_ss_close_to_direct_quantization() {
+        // The headline SS claim (paper §4.3 / App. C): SS from an 8-bit
+        // anchor closely matches direct quantization from FP32. The two can
+        // differ by one quantization bin (double rounding) but the MSE gap
+        // must stay within a small factor.
+        run_cases("SS ≈ direct", 48, |g: &mut Gen| {
+            let n = g.len(8, 64);
+            let vals: Vec<f32> = (0..n).map(|_| g.rng.normal()).collect();
+            for (anchor_f, targets) in [
+                (
+                    ElementFormat::int(8),
+                    (2..=7u8).map(ElementFormat::int).collect::<Vec<_>>(),
+                ),
+                (
+                    ElementFormat::fp(4, 3),
+                    (4..=7u8).map(ElementFormat::fp_from_bits).collect(),
+                ),
+            ] {
+                let anchor = enc(&vals, anchor_f);
+                let anchor_dec = decode_block(&anchor);
+                let m_anchor = mse(&vals, &anchor_dec);
+                for &t in &targets {
+                    let ss = slice_and_scale(&anchor, t, RoundMode::HalfEven).unwrap();
+                    let ss_dec = decode_block(&ss);
+                    let direct = enc(&vals, t);
+                    let direct_dec = decode_block(&direct);
+                    let m_ss = mse(&vals, &ss_dec);
+                    let m_direct = mse(&vals, &direct_dec);
+                    // Sound per-element bound: SS error ≤ direct bin radius +
+                    // anchor bin radius (double rounding). In MSE terms that
+                    // is ≤ (√direct + √anchor)² per element, relaxed to a
+                    // 2.5× multiplicative + anchor-additive bound. The
+                    // statistical SS≈direct claim (gap ≈ 0 at scale) is
+                    // checked by experiment fig19/fig20 on 100×1024 tensors.
+                    let bound = 2.5 * m_direct + 8.0 * m_anchor + 1e-12;
+                    if m_ss > bound {
+                        return Err(format!(
+                            "anchor={anchor_f} target={t}: ss mse {m_ss} vs bound {bound} (direct {m_direct}, anchor {m_anchor})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ss_int_elements_match_shift_round_of_codes() {
+        run_cases("SSMXINT = shift+round on codes", 32, |g: &mut Gen| {
+            let n = g.len(4, 48);
+            let vals = g.f32_vec_wild(n);
+            let anchor = enc(&vals, ElementFormat::int(8));
+            for bl in [2u8, 3, 5, 7] {
+                let ss = slice_and_scale(&anchor, ElementFormat::int(bl), RoundMode::HalfEven)
+                    .unwrap();
+                let (lo, hi) = int_range(bl);
+                for (i, (&ch, &cl)) in anchor.codes.iter().zip(&ss.codes).enumerate() {
+                    let want = shift_round(ch as i32, (8 - bl) as u32, RoundMode::HalfEven)
+                        .clamp(lo, hi);
+                    if cl as i32 != want {
+                        return Err(format!("i={i} ch={ch} bl={bl}: got {cl}, want {want}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chained_ss_matches_one_hop_scale() {
+        // 8→6→4 vs 8→4: scales must agree; elements may differ by a bin.
+        let vals: Vec<f32> = (0..32).map(|i| ((i as f32) * 0.13).cos()).collect();
+        let anchor = enc(&vals, ElementFormat::int(8));
+        let hop6 = slice_and_scale(&anchor, ElementFormat::int(6), RoundMode::HalfEven).unwrap();
+        let hop64 = slice_and_scale(&hop6, ElementFormat::int(4), RoundMode::HalfEven).unwrap();
+        let direct4 = slice_and_scale(&anchor, ElementFormat::int(4), RoundMode::HalfEven).unwrap();
+        assert_eq!(hop64.scale_exp, direct4.scale_exp);
+        for (a, b) in hop64.codes.iter().zip(&direct4.codes) {
+            assert!((a - b).abs() <= 1);
+        }
+    }
+
+    #[test]
+    fn ss_fp_e4m3_to_e2m1_delta_e() {
+        // Δe = emax(E4)−emax(E2) = 8−2 = 6.
+        let vals = [1.0f32, -0.5, 0.25];
+        let anchor = enc(&vals, ElementFormat::fp(4, 3));
+        let ss = slice_and_scale(&anchor, ElementFormat::fp(2, 1), RoundMode::HalfEven).unwrap();
+        assert_eq!(ss.scale_exp as i32, anchor.scale_exp as i32 + 6);
+    }
+
+    #[test]
+    fn scale_exp_saturates_at_max() {
+        // A block whose anchor scale is already at the max must not overflow.
+        let anchor = MxBlock {
+            format: ElementFormat::int(8),
+            scale_exp: 125,
+            codes: vec![100, -100],
+        };
+        let ss = slice_and_scale(&anchor, ElementFormat::int(2), RoundMode::HalfEven).unwrap();
+        assert_eq!(ss.scale_exp as i32, SCALE_EXP_MAX);
+    }
+}

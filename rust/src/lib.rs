@@ -1,0 +1,56 @@
+//! # MF-QAT — Multi-Format Quantization-Aware Training for Elastic Inference
+//!
+//! Production-shaped reproduction of *"MF-QAT: Multi-Format Quantization-Aware
+//! Training for Elastic Inference"* (Xu, Sharify & Mostafa, d-Matrix, 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1 — Pallas kernels** (`python/compile/kernels/`): block fake-quant,
+//!   slice-and-scale, and MX matmul kernels, verified against a pure-`jnp`
+//!   oracle.
+//! * **L2 — JAX model** (`python/compile/`): decoder-only transformer with
+//!   weight-only MX quantization and straight-through estimators, AOT-lowered
+//!   once to HLO text.
+//! * **L3 — this crate**: the elastic-inference coordinator. Bit-exact native
+//!   microscaling formats ([`formats`]), packed tensors ([`tensor`]), anchor
+//!   checkpoints ([`checkpoint`]), a PJRT runtime ([`runtime`]) that loads the
+//!   AOT artifacts, a training driver ([`train`]), evaluation harness
+//!   ([`eval`]), the elastic precision server ([`server`], [`coordinator`]),
+//!   and the experiment harness ([`experiments`]) that regenerates every table
+//!   and figure in the paper.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the model
+//! once; afterwards the `mfqat` binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use mfqat::formats::{MxFormat, ElementFormat};
+//! use mfqat::tensor::MxTensor;
+//!
+//! // Quantize to the MXINT8 anchor format, then derive MXINT4 via
+//! // Slice-and-Scale — no FP32 weights needed.
+//! let data: Vec<f32> = (0..1024).map(|i| (i as f32).sin()).collect();
+//! let anchor = MxTensor::quantize(&data, &[32, 32], MxFormat::mxint(8, 32)).unwrap();
+//! let low = anchor.slice_and_scale(ElementFormat::int(4)).unwrap();
+//! let approx = low.dequantize();
+//! assert_eq!(approx.len(), data.len());
+//! ```
+
+pub mod checkpoint;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod formats;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default microscaling block size (OCP MX specification).
+pub const DEFAULT_BLOCK_SIZE: usize = 32;

@@ -1,0 +1,349 @@
+//! `mfqat` — CLI for the MF-QAT elastic-inference stack.
+//!
+//! Subcommands:
+//!   info                         inspect artifacts + manifest
+//!   pretrain                     train the base LM (substrate)
+//!   train --plan <name>          run a QAT/FT plan from the pretrained base
+//!   eval --checkpoint <p>        PPL + task grid for a checkpoint
+//!   convert --in <p> --format f  Slice-and-Scale convert a checkpoint
+//!   inspect --checkpoint <p>     dump checkpoint contents
+//!   serve                        run the elastic server demo workload
+//!   experiment <id>              regenerate a paper figure/table (or `all`)
+//!
+//! Global options: --config tiny|small|base (default tiny), --root <dir>,
+//! --seed N, --lrs a,b,c
+
+use anyhow::{anyhow, Context, Result};
+use mfqat::checkpoint::Checkpoint;
+use mfqat::coordinator::ElasticEngine;
+use mfqat::data::{Corpus, CorpusConfig};
+use mfqat::experiments::{self, Ctx};
+use mfqat::formats::ElementFormat;
+use mfqat::model::ParamSet;
+use mfqat::runtime::ArtifactSet;
+use mfqat::server::{Policy, Server, ServerConfig};
+use mfqat::util::cli::Args;
+use std::path::PathBuf;
+
+
+fn main() {
+    mfqat::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn repo_root(args: &Args) -> PathBuf {
+    args.get("root")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")))
+}
+
+fn open_ctx(args: &Args) -> Result<Ctx> {
+    let config = args.get_or("config", "tiny").to_string();
+    let seed = args.u64("seed", 20260710)?;
+    let mut ctx = Ctx::open(&repo_root(args), &config, seed)?;
+    if let Some(lrs) = args.list("lrs") {
+        ctx.lrs = lrs
+            .iter()
+            .map(|s| s.parse::<f32>().map_err(|_| anyhow!("bad lr '{s}'")))
+            .collect::<Result<_>>()?;
+    }
+    ctx.pretrain_epochs = args.usize("pretrain-epochs", ctx.pretrain_epochs)?;
+    ctx.task_items = args.usize("task-items", ctx.task_items)?;
+    Ok(ctx)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "pretrain" => {
+            let ctx = open_ctx(&args)?;
+            let p = ctx.ensure_pretrained()?;
+            println!("pretrained: {} params, val ppl {:.3}", p.n_params(), ctx.val_ppl(&p)?);
+            Ok(())
+        }
+        "train" => train(&args),
+        "eval" => eval_cmd(&args),
+        "generate" => generate_cmd(&args),
+        "convert" => convert(&args),
+        "inspect" => inspect(&args),
+        "serve" => serve(&args),
+        "experiment" => {
+            let id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: mfqat experiment <fig1|fig2|fig3|fig4|tab1|tab2|tab3|fig19|fig20|all>"))?;
+            let ctx = open_ctx(&args)?;
+            experiments::run(&ctx, id)
+        }
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "mfqat — Multi-Format QAT for Elastic Inference (paper reproduction)
+
+USAGE: mfqat <command> [--config tiny] [--root DIR] [options]
+
+COMMANDS:
+  info                              show artifact manifest
+  pretrain [--pretrain-epochs N]    train the base LM on the synthetic corpus
+  train --plan <name> [--lr X]      run a training plan (mf_int, qat_int4, ...)
+  eval --checkpoint P [--formats..] PPL grid for a checkpoint
+  generate --checkpoint P --prompt S [--format F] [--tokens N] [--temp X]
+                                    sample a continuation (elastic precision)
+  convert --in P --format F --out Q Slice-and-Scale convert an anchor checkpoint
+  inspect --checkpoint P            dump checkpoint metadata
+  serve [--policy ladder] [--requests N] [--burst N]
+                                    run the elastic serving demo workload
+  experiment <id>                   regenerate a paper figure/table; id in
+                                    fig1 fig2 fig3 fig4 tab1 tab2 tab3 fig19 fig20 all
+";
+
+fn info(args: &Args) -> Result<()> {
+    let root = repo_root(args);
+    let config = args.get_or("config", "tiny");
+    let arts = ArtifactSet::open(&root.join("artifacts").join(config))?;
+    let m = &arts.manifest;
+    println!(
+        "config {}: d_model={} layers={} heads={} seq={} vocab={} block={}",
+        m.config_name, m.d_model, m.n_layers, m.n_heads, m.seq_len, m.vocab, m.block_size
+    );
+    println!(
+        "params: {} tensors, {} total ({} quantized tensors)",
+        m.params.len(),
+        m.n_params,
+        m.quant_indices().len()
+    );
+    println!("artifacts:");
+    for (name, a) in &m.artifacts {
+        println!("  {name:<20} {}", a.file);
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let ctx = open_ctx(args)?;
+    let plan = args
+        .get("plan")
+        .ok_or_else(|| anyhow!("--plan required (e.g. mf_int, qat_int4, ft_fp_int)"))?;
+    let params = if let Some(lr) = args.get("lr") {
+        ctx.ensure_variant(plan, lr.parse().context("--lr")?)?
+    } else {
+        ctx.ensure_variant_best(plan)?
+    };
+    println!("trained {plan}: val ppl {:.3}", ctx.val_ppl(&params)?);
+    // Also emit the anchor checkpoints for serving.
+    for (anchor, name) in [
+        (ElementFormat::int(8), "int8"),
+        (ElementFormat::fp_from_bits(8), "fp8"),
+    ] {
+        let ck = params.to_anchor_checkpoint(&ctx.arts.manifest, anchor)?;
+        let path = ctx.runs_dir.join(format!("anchor_{plan}_{name}.mfq"));
+        ck.save(&path)?;
+        println!(
+            "anchor checkpoint ({}): {} ({} KB)",
+            anchor,
+            path.display(),
+            ck.storage_bytes() / 1024
+        );
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let ctx = open_ctx(args)?;
+    let ck_path = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint required"))?;
+    let ck = Checkpoint::load(&PathBuf::from(ck_path))?;
+    let params = ParamSet::from_checkpoint(&ctx.arts.manifest, &ck, None)?;
+    let fmts: Vec<ElementFormat> = match args.list("formats") {
+        Some(list) => list
+            .iter()
+            .map(|s| ElementFormat::parse(s))
+            .collect::<Result<_>>()?,
+        None => ElementFormat::all_int(),
+    };
+    println!("{:<14} {:>10}", "format", "val_ppl");
+    println!("{:<14} {:>10.3}", "fp32", ctx.val_ppl(&params)?);
+    for fmt in fmts {
+        let q = params.ptq(&ctx.arts.manifest, fmt)?;
+        println!("{:<14} {:>10.3}", fmt.long_name(), ctx.val_ppl(&q)?);
+    }
+    Ok(())
+}
+
+fn generate_cmd(args: &Args) -> Result<()> {
+    let ctx = open_ctx(args)?;
+    let ck_path = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint required"))?;
+    let prompt = args.get_or("prompt", "the color of kova is");
+    let ck = Checkpoint::load(&PathBuf::from(ck_path))?;
+    let fmt = args
+        .get("format")
+        .map(ElementFormat::parse)
+        .transpose()?;
+    let params = ParamSet::from_checkpoint(&ctx.arts.manifest, &ck, fmt)?;
+    let lits = mfqat::eval::ParamLiterals::build(&params)?;
+    let cfg = mfqat::eval::generate::SampleCfg {
+        temperature: args.f64("temp", 0.8)? as f32,
+        top_k: args.usize("top-k", 8)?,
+        seed: args.u64("seed", 0)?,
+    };
+    let n = args.usize("tokens", 64)?;
+    let out = mfqat::eval::generate::generate(&ctx.rt, &ctx.arts, &lits, prompt, n, &cfg)?;
+    println!("{prompt}│{out}");
+    Ok(())
+}
+
+fn convert(args: &Args) -> Result<()> {
+    let input = args.get("in").ok_or_else(|| anyhow!("--in required"))?;
+    let output = args.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let fmt = ElementFormat::parse(
+        args.get("format")
+            .ok_or_else(|| anyhow!("--format required"))?,
+    )?;
+    let ck = Checkpoint::load(&PathBuf::from(input))?;
+    let mut out = Checkpoint::new();
+    out.meta = ck.meta.clone();
+    out.set_meta("anchor", mfqat::util::json::Json::from(fmt.name()));
+    out.raw = ck.raw.clone();
+    let t = std::time::Instant::now();
+    let mut converted = 0usize;
+    for (name, tensor) in &ck.tensors {
+        let q = if tensor.format.elem == fmt {
+            tensor.clone()
+        } else {
+            tensor.slice_and_scale(fmt).with_context(|| name.clone())?
+        };
+        converted += q.len();
+        out.insert(name, q);
+    }
+    out.save(&PathBuf::from(output))?;
+    println!(
+        "slice-and-scale {} -> {}: {} elements in {:.1} ms ({} KB -> {} KB)",
+        input,
+        output,
+        converted,
+        t.elapsed().as_secs_f64() * 1e3,
+        ck.storage_bytes() / 1024,
+        out.storage_bytes() / 1024,
+    );
+    Ok(())
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let ck_path = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint required"))?;
+    let ck = Checkpoint::load(&PathBuf::from(ck_path))?;
+    println!("meta:");
+    for (k, v) in &ck.meta {
+        println!("  {k} = {}", v.to_string());
+    }
+    println!("mx tensors ({}):", ck.tensors.len());
+    for (name, t) in &ck.tensors {
+        println!(
+            "  {name:<14} {:?} {} ({} bytes packed)",
+            t.shape,
+            t.format,
+            t.storage_bytes()
+        );
+    }
+    println!("raw tensors ({}):", ck.raw.len());
+    for (name, t) in &ck.raw {
+        println!("  {name:<14} {:?} f32 ({} bytes)", t.shape, t.len() * 4);
+    }
+    println!("total storage: {} KB", ck.storage_bytes() / 1024);
+    Ok(())
+}
+
+/// Serving demo: fire a bursty synthetic workload at the elastic server and
+/// report the precision mix + latency profile.
+fn serve(args: &Args) -> Result<()> {
+    let ctx = open_ctx(args)?;
+    let policy = Policy::parse(args.get_or("policy", "ladder"))?;
+    let n_requests = args.usize("requests", 256)?;
+    let burst = args.usize("burst", 32)?;
+
+    // Need an anchor checkpoint: build one from the pretrained base if the
+    // user didn't provide one.
+    let ck_path = match args.get("checkpoint") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let path = ctx.runs_dir.join("anchor_serve_int8.mfq");
+            if !path.exists() {
+                let base = ctx.ensure_pretrained()?;
+                std::fs::create_dir_all(&ctx.runs_dir)?;
+                base.to_anchor_checkpoint(&ctx.arts.manifest, ElementFormat::int(8))?
+                    .save(&path)?;
+            }
+            path
+        }
+    };
+    let config = args.get_or("config", "tiny").to_string();
+    let arts_dir = repo_root(args).join("artifacts").join(&config);
+    let width = ctx.arts.manifest.seq_len + 1;
+    let (server, client) = Server::start(
+        width,
+        move || ElasticEngine::open(&arts_dir, &ck_path, 256 << 20),
+        ServerConfig {
+            policy,
+            gather_window: std::time::Duration::from_millis(2),
+        },
+    )?;
+
+    let corpus = Corpus::generate(CorpusConfig {
+        seed: 42,
+        width: ctx.arts.manifest.seq_len + 1,
+        pretrain_sequences: 8,
+        qat_sequences: 8,
+        val_sequences: n_requests.div_ceil(64).max(1) * 64,
+    });
+    println!("firing {n_requests} requests in bursts of {burst}…");
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    let mut sent = 0usize;
+    while sent < n_requests {
+        for _ in 0..burst.min(n_requests - sent) {
+            let row = &corpus.val[sent % corpus.val.len()];
+            pending.push(client.submit(row, None)?);
+            sent += 1;
+        }
+        // Drain this burst.
+        for rx in pending.drain(..) {
+            let resp = rx
+                .recv()
+                .map_err(|_| anyhow!("server dropped request"))?
+                .map_err(|e| anyhow!(e))?;
+            log::debug!(
+                "nll {:.3} fmt {} batch {} depth {}",
+                resp.nll,
+                resp.format,
+                resp.batch_size,
+                resp.queue_depth
+            );
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let metrics = server.metrics.lock().unwrap().clone();
+    println!(
+        "done: {} requests in {:.2}s ({:.1} req/s)",
+        metrics.requests,
+        elapsed,
+        metrics.requests as f64 / elapsed
+    );
+    println!("  {}", metrics.summary());
+    println!("  format conversions performed: {}", metrics.conversions);
+    drop(client);
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,336 @@
+//! Host-side model parameter management.
+//!
+//! The model *computation* lives in the AOT HLO artifacts; this module owns
+//! the parameter values: deterministic initialization from the manifest's
+//! spec table, PTQ (direct or via the anchor + Slice-and-Scale), and the
+//! anchor-checkpoint round trip of paper §3.5.
+
+use crate::checkpoint::Checkpoint;
+use crate::formats::{ElementFormat, MxFormat};
+use crate::runtime::Manifest;
+use crate::tensor::{MxTensor, Tensor};
+use crate::util::json::Json;
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+/// An ordered set of parameter tensors (order = manifest = HLO args).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    /// Deterministic initialization from the manifest spec table.
+    ///
+    /// `normal` params get N(0, 0.02²); `ones`/`zeros` as named. This is the
+    /// same family the python reference uses; exact equality with python is
+    /// not required (training runs from rust-owned init).
+    pub fn init(manifest: &Manifest, seed: u64) -> ParamSet {
+        let mut rng = Rng::new(seed);
+        let tensors = manifest
+            .params
+            .iter()
+            .map(|p| match p.init.as_str() {
+                "ones" => Tensor::full(&p.shape, 1.0),
+                "zeros" => Tensor::zeros(&p.shape),
+                _ => Tensor::randn(&p.shape, 0.02, &mut rng),
+            })
+            .collect();
+        ParamSet { tensors }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn get(&self, manifest: &Manifest, name: &str) -> Option<&Tensor> {
+        manifest.param_index(name).map(|i| &self.tensors[i])
+    }
+
+    /// Apply post-training quantization to the quantized-parameter set
+    /// (direct FP32 → target, paper's PTQ evaluation protocol).
+    pub fn ptq(&self, manifest: &Manifest, target: ElementFormat) -> Result<ParamSet> {
+        self.ptq_block(manifest, target, manifest.block_size)
+    }
+
+    /// PTQ with an explicit scaling block size (Figs. 2/3 block sweeps).
+    pub fn ptq_block(
+        &self,
+        manifest: &Manifest,
+        target: ElementFormat,
+        block_size: usize,
+    ) -> Result<ParamSet> {
+        let fmt = MxFormat::new(target, block_size);
+        let mut out = self.clone();
+        for i in manifest.quant_indices() {
+            let t = &self.tensors[i];
+            let q = MxTensor::quantize(&t.data, &t.shape, fmt)?;
+            out.tensors[i] = Tensor::new(&t.shape, q.dequantize())?;
+        }
+        Ok(out)
+    }
+
+    /// PTQ via the anchor path: FP32 → anchor → Slice-and-Scale → target
+    /// (the elastic-inference runtime conversion, §3.5).
+    pub fn ptq_via_anchor(
+        &self,
+        manifest: &Manifest,
+        anchor: ElementFormat,
+        target: ElementFormat,
+    ) -> Result<ParamSet> {
+        self.ptq_via_anchor_block(manifest, anchor, target, manifest.block_size)
+    }
+
+    /// Anchor-path PTQ with an explicit scaling block size.
+    pub fn ptq_via_anchor_block(
+        &self,
+        manifest: &Manifest,
+        anchor: ElementFormat,
+        target: ElementFormat,
+        block_size: usize,
+    ) -> Result<ParamSet> {
+        let afmt = MxFormat::new(anchor, block_size);
+        let mut out = self.clone();
+        for i in manifest.quant_indices() {
+            let t = &self.tensors[i];
+            let a = MxTensor::quantize(&t.data, &t.shape, afmt)?;
+            let q = if target == anchor {
+                a
+            } else {
+                a.slice_and_scale(target)?
+            };
+            out.tensors[i] = Tensor::new(&t.shape, q.dequantize())?;
+        }
+        Ok(out)
+    }
+
+    /// Store as an anchor checkpoint: quantized params in the anchor MX
+    /// format, everything else raw f32.
+    pub fn to_anchor_checkpoint(
+        &self,
+        manifest: &Manifest,
+        anchor: ElementFormat,
+    ) -> Result<Checkpoint> {
+        if self.tensors.len() != manifest.params.len() {
+            bail!("param count mismatch");
+        }
+        let afmt = MxFormat::new(anchor, manifest.block_size);
+        let mut ck = Checkpoint::new();
+        ck.set_meta("config", Json::from(manifest.config_name.as_str()));
+        ck.set_meta("anchor", Json::from(anchor.name()));
+        ck.set_meta("block_size", Json::from(manifest.block_size));
+        for (info, t) in manifest.params.iter().zip(&self.tensors) {
+            if info.quantized {
+                ck.insert(&info.name, MxTensor::quantize(&t.data, &t.shape, afmt)?);
+            } else {
+                ck.insert_raw(&info.name, t.clone());
+            }
+        }
+        Ok(ck)
+    }
+
+    /// Store all params raw (FP32 master checkpoint — training state).
+    pub fn to_master_checkpoint(&self, manifest: &Manifest) -> Result<Checkpoint> {
+        if self.tensors.len() != manifest.params.len() {
+            bail!("param count mismatch");
+        }
+        let mut ck = Checkpoint::new();
+        ck.set_meta("config", Json::from(manifest.config_name.as_str()));
+        ck.set_meta("kind", Json::from("master_fp32"));
+        for (info, t) in manifest.params.iter().zip(&self.tensors) {
+            ck.insert_raw(&info.name, t.clone());
+        }
+        Ok(ck)
+    }
+
+    /// Load from a checkpoint, converting quantized entries to ``target``
+    /// via Slice-and-Scale when needed (None ⇒ dequantize the stored format
+    /// as-is; raw entries load unchanged).
+    pub fn from_checkpoint(
+        manifest: &Manifest,
+        ck: &Checkpoint,
+        target: Option<ElementFormat>,
+    ) -> Result<ParamSet> {
+        let mut tensors = Vec::with_capacity(manifest.params.len());
+        for info in &manifest.params {
+            if let Some(t) = ck.get_raw(&info.name) {
+                if t.shape != info.shape {
+                    bail!("'{}': checkpoint shape {:?} != manifest {:?}", info.name, t.shape, info.shape);
+                }
+                tensors.push(t.clone());
+            } else if let Some(q) = ck.get(&info.name) {
+                if q.shape != info.shape {
+                    bail!("'{}': checkpoint shape {:?} != manifest {:?}", info.name, q.shape, info.shape);
+                }
+                let q2;
+                let qref = match target {
+                    Some(t) if t != q.format.elem => {
+                        q2 = q.slice_and_scale(t)?;
+                        &q2
+                    }
+                    _ => q,
+                };
+                tensors.push(Tensor::new(&info.shape, qref.dequantize())?);
+            } else {
+                bail!("checkpoint missing parameter '{}'", info.name);
+            }
+        }
+        Ok(ParamSet { tensors })
+    }
+
+    /// Sub-list by indices (trainable split for the train step).
+    pub fn select(&self, idx: &[usize]) -> Vec<&Tensor> {
+        idx.iter().map(|&i| &self.tensors[i]).collect()
+    }
+
+    /// Overwrite the tensors at `idx` with `new` (train-step outputs).
+    pub fn scatter(&mut self, idx: &[usize], new: Vec<Tensor>) -> Result<()> {
+        if idx.len() != new.len() {
+            bail!("scatter: {} indices vs {} tensors", idx.len(), new.len());
+        }
+        for (&i, t) in idx.iter().zip(new) {
+            if self.tensors[i].shape != t.shape {
+                bail!("scatter: shape mismatch at {i}");
+            }
+            self.tensors[i] = t;
+        }
+        Ok(())
+    }
+}
+
+/// Anchor format for a format family (paper: MXINT8 / MXFP8).
+pub fn anchor_for(target: ElementFormat) -> ElementFormat {
+    match target {
+        ElementFormat::Int { .. } => ElementFormat::int(8),
+        ElementFormat::Fp { .. } => ElementFormat::fp_from_bits(8),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{ArtifactEntry, ParamInfo};
+    use std::collections::BTreeMap;
+
+    pub(crate) fn test_manifest() -> Manifest {
+        Manifest {
+            config_name: "test".into(),
+            vocab: 16,
+            d_model: 32,
+            n_layers: 1,
+            n_heads: 2,
+            seq_len: 8,
+            block_size: 32,
+            n_params: 0,
+            train_batch: 2,
+            params: vec![
+                ParamInfo { name: "emb".into(), shape: vec![16, 32], quantized: false, init: "normal".into() },
+                ParamInfo { name: "l0.qkv".into(), shape: vec![32, 96], quantized: true, init: "normal".into() },
+                ParamInfo { name: "l0.ln1".into(), shape: vec![32], quantized: false, init: "ones".into() },
+            ],
+            artifacts: BTreeMap::from([(
+                "forward_b1".into(),
+                ArtifactEntry { file: "forward_b1.hlo.txt".into(), trainable: None },
+            )]),
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_typed() {
+        let m = test_manifest();
+        let a = ParamSet::init(&m, 7);
+        let b = ParamSet::init(&m, 7);
+        assert_eq!(a, b);
+        assert!(ParamSet::init(&m, 8) != a);
+        // ones init
+        assert!(a.tensors[2].data.iter().all(|&x| x == 1.0));
+        // normal init has reasonable scale
+        let std = (a.tensors[0].data.iter().map(|x| x * x).sum::<f32>()
+            / a.tensors[0].len() as f32)
+            .sqrt();
+        assert!((std - 0.02).abs() < 0.005, "std={std}");
+    }
+
+    #[test]
+    fn ptq_touches_only_quantized_params() {
+        let m = test_manifest();
+        let p = ParamSet::init(&m, 1);
+        let q = p.ptq(&m, ElementFormat::int(4)).unwrap();
+        assert_eq!(p.tensors[0], q.tensors[0]); // emb untouched
+        assert_eq!(p.tensors[2], q.tensors[2]); // ln untouched
+        assert_ne!(p.tensors[1], q.tensors[1]); // qkv quantized
+    }
+
+    #[test]
+    fn ptq_via_anchor_matches_ss_semantics() {
+        let m = test_manifest();
+        let p = ParamSet::init(&m, 2);
+        let via = p
+            .ptq_via_anchor(&m, ElementFormat::int(8), ElementFormat::int(4))
+            .unwrap();
+        // Equivalent to: quantize int8, SS to int4, dequant.
+        let t = &p.tensors[1];
+        let a = MxTensor::quantize(&t.data, &t.shape, MxFormat::mxint(8, 32)).unwrap();
+        let want = a.slice_and_scale(ElementFormat::int(4)).unwrap().dequantize();
+        assert_eq!(via.tensors[1].data, want);
+    }
+
+    #[test]
+    fn anchor_checkpoint_roundtrip() {
+        let m = test_manifest();
+        let p = ParamSet::init(&m, 3);
+        let ck = p.to_anchor_checkpoint(&m, ElementFormat::int(8)).unwrap();
+        // Quantized param stored packed; others raw.
+        assert!(ck.get("l0.qkv").is_some());
+        assert!(ck.get_raw("emb").is_some());
+        // Load at anchor precision = dequantized anchor values.
+        let loaded = ParamSet::from_checkpoint(&m, &ck, None).unwrap();
+        assert_eq!(loaded.tensors[0], p.tensors[0]);
+        let want = p.ptq(&m, ElementFormat::int(8)).unwrap();
+        assert_eq!(loaded.tensors[1], want.tensors[1]);
+        // Load at int3 = SS conversion.
+        let at3 = ParamSet::from_checkpoint(&m, &ck, Some(ElementFormat::int(3))).unwrap();
+        let want3 = p
+            .ptq_via_anchor(&m, ElementFormat::int(8), ElementFormat::int(3))
+            .unwrap();
+        assert_eq!(at3.tensors[1], want3.tensors[1]);
+    }
+
+    #[test]
+    fn master_checkpoint_is_lossless() {
+        let m = test_manifest();
+        let p = ParamSet::init(&m, 4);
+        let ck = p.to_master_checkpoint(&m).unwrap();
+        let re = ParamSet::from_checkpoint(&m, &ck, None).unwrap();
+        assert_eq!(p, re);
+    }
+
+    #[test]
+    fn select_scatter_roundtrip() {
+        let m = test_manifest();
+        let mut p = ParamSet::init(&m, 5);
+        let idx = vec![1usize];
+        let newt = Tensor::full(&[32, 96], 0.5);
+        p.scatter(&idx, vec![newt.clone()]).unwrap();
+        assert_eq!(p.tensors[1], newt);
+        assert!(p.scatter(&idx, vec![Tensor::zeros(&[2, 2])]).is_err());
+    }
+
+    #[test]
+    fn missing_param_in_checkpoint_errors() {
+        let m = test_manifest();
+        let p = ParamSet::init(&m, 6);
+        let mut ck = p.to_anchor_checkpoint(&m, ElementFormat::int(8)).unwrap();
+        ck.tensors.remove("l0.qkv");
+        assert!(ParamSet::from_checkpoint(&m, &ck, None).is_err());
+    }
+
+    #[test]
+    fn anchor_for_families() {
+        assert_eq!(anchor_for(ElementFormat::int(3)), ElementFormat::int(8));
+        assert_eq!(
+            anchor_for(ElementFormat::fp(2, 1)),
+            ElementFormat::fp(4, 3)
+        );
+    }
+}

@@ -1,0 +1,195 @@
+//! AOT artifact manifest: what `python/compile/aot.py` emitted.
+//!
+//! The manifest pins the parameter order (= HLO argument order), model
+//! dimensions, and the artifact file table. [`ArtifactSet`] is the lazy
+//! loader/compiler cache on top of a [`super::Runtime`].
+
+use super::{Executable, Runtime};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One model parameter as exported (name, shape, QAT membership).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub quantized: bool,
+    /// "normal" | "ones" | "zeros" — init family used by the trainer.
+    pub init: String,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config_name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub block_size: usize,
+    pub n_params: usize,
+    pub train_batch: usize,
+    pub params: Vec<ParamInfo>,
+    /// artifact name → (file, optional trainable indices)
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    /// For train steps: indices (into `params`) of the trainable set.
+    pub trainable: Option<Vec<usize>>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let cfg = j.req("config")?;
+        let mut params = Vec::new();
+        for p in j.req_arr("params")? {
+            params.push(ParamInfo {
+                name: p.req_str("name")?.to_string(),
+                shape: p.req("shape")?.usize_vec()?,
+                quantized: p.req("quantized")?.as_bool().unwrap_or(false),
+                init: p.req_str("init")?.to_string(),
+            });
+        }
+        let mut artifacts = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("artifacts") {
+            for (name, a) in m {
+                let trainable = a
+                    .get("trainable")
+                    .map(|t| t.usize_vec())
+                    .transpose()?;
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactEntry {
+                        file: a.req_str("file")?.to_string(),
+                        trainable,
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            config_name: cfg.req_str("name")?.to_string(),
+            vocab: cfg.req_usize("vocab")?,
+            d_model: cfg.req_usize("d_model")?,
+            n_layers: cfg.req_usize("n_layers")?,
+            n_heads: cfg.req_usize("n_heads")?,
+            seq_len: cfg.req_usize("seq_len")?,
+            block_size: cfg.req_usize("block_size")?,
+            n_params: j.req_usize("n_params")?,
+            train_batch: j.req_usize("train_batch")?,
+            params,
+            artifacts,
+        })
+    }
+
+    /// Indices of the quantized (QAT-trainable) parameters.
+    pub fn quant_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.quantized)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+}
+
+/// Lazy loader + compile cache for one artifact directory.
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: std::sync::Mutex<BTreeMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl ArtifactSet {
+    /// Open `artifacts/<config>` and parse its manifest.
+    pub fn open(dir: &Path) -> Result<ArtifactSet> {
+        let manifest =
+            Manifest::load(dir).with_context(|| format!("loading manifest in {}", dir.display()))?;
+        Ok(ArtifactSet {
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: std::sync::Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Get (compiling on first use) a named executable.
+    pub fn executable(&self, rt: &Runtime, name: &str) -> Result<std::sync::Arc<Executable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(name) {
+                return Ok(e.clone());
+            }
+        }
+        let entry = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (have: {:?})",
+                self.manifest.artifacts.keys().collect::<Vec<_>>()))?;
+        let exe = std::sync::Arc::new(rt.load_hlo(&self.dir.join(&entry.file))?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Trainable indices for a train-step artifact.
+    pub fn trainable(&self, name: &str) -> Result<Vec<usize>> {
+        self.manifest
+            .artifacts
+            .get(name)
+            .and_then(|a| a.trainable.clone())
+            .ok_or_else(|| anyhow!("artifact '{name}' has no trainable set"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn manifest_parses_and_is_consistent() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping (run `make artifacts` first)");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config_name, "tiny");
+        assert_eq!(m.vocab, 256);
+        assert!(m.seq_len >= 64);
+        // Param table covers the declared total.
+        let total: usize = m.params.iter().map(|p| p.numel()).sum();
+        assert_eq!(total, m.n_params);
+        // Quantized set = decoder linears only: 4 per layer.
+        assert_eq!(m.quant_indices().len(), 4 * m.n_layers);
+        // Every artifact file exists on disk.
+        for a in m.artifacts.values() {
+            assert!(dir.join(&a.file).exists(), "{}", a.file);
+        }
+        // Train steps carry trainable sets; forward does not.
+        assert!(m.artifacts["train_qat_int4"].trainable.is_some());
+        assert!(m.artifacts["forward_b1"].trainable.is_none());
+    }
+}

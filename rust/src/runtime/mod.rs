@@ -1,0 +1,136 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API). The interchange format is HLO *text*
+//! produced by `python/compile/aot.py` — jax ≥ 0.5 serialized protos use
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see `/opt/xla-example/README.md`).
+//!
+//! All exported computations are lowered with `return_tuple=True`, so every
+//! execution returns one tuple buffer which we decompose into per-output
+//! literals.
+
+pub mod artifacts;
+
+pub use artifacts::{ArtifactSet, Manifest, ParamInfo};
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text file and compile it.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_default();
+        log::debug!("compiled {} in {:.2}s", name, t.elapsed().as_secs_f64());
+        Ok(Executable { exe, name })
+    }
+}
+
+/// A compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal arguments (owned or borrowed); returns the
+    /// decomposed output tuple.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let res = self
+            .exe
+            .execute(args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let buf = res
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("execute {}: no outputs", self.name))?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output of {}: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+// ---------------------------------------------------------------- literals
+
+/// f32 tensor → literal.
+pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// i32 data → literal of the given shape.
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("i32 literal: shape {:?} wants {n}, got {}", shape, data.len());
+    }
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// f32 scalar literal.
+pub fn f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// i32 scalar literal.
+pub fn i32_scalar(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// literal → f32 tensor (shape recovered from the literal).
+pub fn literal_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to f32 vec: {e:?}"))?;
+    Tensor::new(&dims, data).context("literal tensor")
+}
+
+/// literal → f32 scalar.
+pub fn literal_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("literal scalar: {e:?}"))
+}

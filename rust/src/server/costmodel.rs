@@ -1,0 +1,136 @@
+//! MX-native hardware cost model — the *why* behind elastic precision.
+//!
+//! On this CPU testbed every format executes at the same speed (weights are
+//! dequantized to f32 before the XLA forward), so the serving benefit of
+//! lower precision cannot be *measured* here; it must be *modeled*, exactly
+//! as DESIGN.md §5 models MXU utilization for the Pallas kernels. This
+//! module implements a roofline-style model of an MX-native accelerator
+//! (weights stay packed in memory; the datapath rescales per block):
+//!
+//! * **weight traffic** — packed bits/element + amortized scale bytes; the
+//!   decode phase of LLM inference is weight-bandwidth-bound, so per-token
+//!   latency scales with it.
+//! * **compute** — MACs at element precision; MX hardware multiplies
+//!   low-precision elements and applies one scale per block
+//!   (`block_size` MACs per scale multiply).
+//!
+//! The model feeds the ladder policies (expected speedup per rung) and the
+//! `precision_sweep` example; its parameters are explicit so a deployment
+//! can calibrate them against real silicon.
+
+use crate::formats::{ElementFormat, MxFormat};
+
+/// Accelerator parameters (defaults shaped like a d-Matrix/TPU-class part).
+#[derive(Debug, Clone)]
+pub struct HwModel {
+    /// Weight-memory bandwidth in bytes/s.
+    pub mem_bw: f64,
+    /// 8-bit MAC throughput in ops/s; an `n`-bit MAC array is assumed to
+    /// deliver `8/n`× that rate (bit-serial / fracturable datapath).
+    pub macs_8bit: f64,
+    /// Fixed per-batch overhead in seconds (dispatch, activation traffic).
+    pub overhead_s: f64,
+}
+
+impl Default for HwModel {
+    fn default() -> Self {
+        HwModel {
+            mem_bw: 400e9,     // 400 GB/s
+            macs_8bit: 200e12, // 200 TOPS @ 8-bit
+            overhead_s: 5e-6,
+        }
+    }
+}
+
+/// Cost estimate for serving one token (decode step) of a model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostEstimate {
+    /// Packed weight bytes streamed per token.
+    pub weight_bytes: f64,
+    /// Element MACs per token.
+    pub macs: f64,
+    /// Memory-bound time (s).
+    pub mem_time_s: f64,
+    /// Compute-bound time (s).
+    pub compute_time_s: f64,
+    /// Roofline latency: max(mem, compute) + overhead.
+    pub latency_s: f64,
+}
+
+impl HwModel {
+    /// Estimate the per-token decode cost for `n_weights` quantized weights
+    /// stored in `fmt` (weights are streamed once per token in decode).
+    pub fn decode_cost(&self, n_weights: usize, fmt: MxFormat) -> CostEstimate {
+        let bits = fmt.bits_per_element();
+        let weight_bytes = n_weights as f64 * bits / 8.0;
+        let macs = n_weights as f64 // one MAC per weight per token
+            * (1.0 + 1.0 / fmt.block_size as f64); // + scale apply per block
+        let elem_bits = fmt.elem.bits() as f64;
+        let mac_rate = self.macs_8bit * (8.0 / elem_bits);
+        let mem_time = weight_bytes / self.mem_bw;
+        let compute_time = macs / mac_rate;
+        CostEstimate {
+            weight_bytes,
+            macs,
+            mem_time_s: mem_time,
+            compute_time_s: compute_time,
+            latency_s: mem_time.max(compute_time) + self.overhead_s,
+        }
+    }
+
+    /// Modeled throughput speedup of serving at `fmt` relative to the
+    /// 8-bit anchor of the same family.
+    pub fn speedup_vs_anchor(&self, n_weights: usize, fmt: MxFormat) -> f64 {
+        let anchor = ElementFormat::int(8);
+        let a = self.decode_cost(n_weights, MxFormat::new(anchor, fmt.block_size));
+        let t = self.decode_cost(n_weights, fmt);
+        a.latency_s / t.latency_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 7_000_000_000; // a 7B-class model
+
+    #[test]
+    fn lower_bits_mean_lower_latency() {
+        let hw = HwModel::default();
+        let mut last = f64::INFINITY;
+        for bits in [8u8, 6, 4, 2] {
+            let c = hw.decode_cost(N, MxFormat::mxint(bits, 32));
+            assert!(c.latency_s < last, "bits={bits}");
+            last = c.latency_s;
+        }
+    }
+
+    #[test]
+    fn decode_is_memory_bound_for_large_models() {
+        // The paper's premise: decode latency tracks weight bytes.
+        let hw = HwModel::default();
+        let c = hw.decode_cost(N, MxFormat::mxint(8, 32));
+        assert!(c.mem_time_s > c.compute_time_s);
+    }
+
+    #[test]
+    fn speedup_tracks_bits_per_element() {
+        let hw = HwModel::default();
+        let s4 = hw.speedup_vs_anchor(N, MxFormat::mxint(4, 32));
+        let s2 = hw.speedup_vs_anchor(N, MxFormat::mxint(2, 32));
+        // Memory-bound regime: ~bits ratio (8.25/4.25, 8.25/2.25), minus
+        // the fixed overhead share.
+        assert!(s4 > 1.6 && s4 < 2.0, "{s4}");
+        assert!(s2 > 3.0 && s2 < 3.7, "{s2}");
+        assert!(s2 > s4);
+    }
+
+    #[test]
+    fn scale_overhead_shrinks_with_block_size() {
+        let hw = HwModel::default();
+        let small = hw.decode_cost(N, MxFormat::mxint(4, 16));
+        let large = hw.decode_cost(N, MxFormat::mxint(4, 128));
+        assert!(small.weight_bytes > large.weight_bytes);
+        assert!(small.macs > large.macs);
+    }
+}

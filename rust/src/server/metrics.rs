@@ -1,0 +1,75 @@
+//! Serving metrics: request counts per format, latency distribution,
+//! batch-size and execution-time statistics.
+
+use crate::formats::ElementFormat;
+use crate::util::stats::{LatencyHist, Running};
+use std::collections::BTreeMap;
+
+/// Aggregated server metrics (guarded by a mutex in the server).
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    per_format: BTreeMap<String, u64>,
+    pub latency: LatencyHist,
+    pub batch_size: Running,
+    pub exec_time: Running,
+    /// Anchor→target weight derivations performed (format-cache misses).
+    pub conversions: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            latency: LatencyHist::new(),
+            ..Default::default()
+        }
+    }
+
+    pub fn record(&mut self, fmt: ElementFormat, latency_s: f64, batch: usize, exec_s: f64) {
+        self.requests += 1;
+        *self.per_format.entry(fmt.name()).or_insert(0) += 1;
+        self.latency.record(latency_s);
+        self.batch_size.push(batch as f64);
+        self.exec_time.push(exec_s);
+    }
+
+    pub fn format_counts(&self) -> &BTreeMap<String, u64> {
+        &self.per_format
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let mix: Vec<String> = self
+            .per_format
+            .iter()
+            .map(|(f, n)| format!("{f}:{n}"))
+            .collect();
+        format!(
+            "requests={} latency[{}] mean_batch={:.2} mix=[{}]",
+            self.requests,
+            self.latency.summary(),
+            self.batch_size.mean(),
+            mix.join(" ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let mut m = Metrics::new();
+        m.record(ElementFormat::int(8), 0.010, 4, 0.008);
+        m.record(ElementFormat::int(8), 0.020, 8, 0.015);
+        m.record(ElementFormat::int(4), 0.005, 8, 0.004);
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.format_counts()["int8"], 2);
+        assert_eq!(m.format_counts()["int4"], 1);
+        assert!((m.batch_size.mean() - 20.0 / 3.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("requests=3"));
+        assert!(s.contains("int8:2"));
+    }
+}

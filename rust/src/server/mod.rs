@@ -1,0 +1,284 @@
+//! Elastic inference server: request queue → dynamic batcher → worker.
+//!
+//! The deployment story the paper motivates (§1): one device, one anchor
+//! checkpoint, and the *numeric format chosen per batch* based on current
+//! load. The server owns a worker thread with the [`ElasticEngine`]; clients
+//! submit scoring requests over a channel; the batcher groups up to
+//! `train_batch` requests inside a gather window; the [`policy`] maps queue
+//! depth to the serving format; metrics record latency/throughput/format mix.
+
+pub mod costmodel;
+pub mod metrics;
+pub mod policy;
+
+pub use costmodel::HwModel;
+pub use metrics::Metrics;
+pub use policy::{Policy, SloState};
+
+use crate::coordinator::ElasticEngine;
+use crate::formats::ElementFormat;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A scoring request: one token window of width `seq_len + 1` (shorter
+/// windows are right-padded by the caller). `format` pins a precision;
+/// `None` lets the policy decide.
+pub struct ScoreRequest {
+    pub tokens: Vec<i32>,
+    pub format: Option<ElementFormat>,
+    pub respond: Sender<Result<ScoreResponse, String>>,
+    pub enqueued: Instant,
+}
+
+/// The response: per-sequence mean NLL plus serving telemetry.
+#[derive(Debug, Clone)]
+pub struct ScoreResponse {
+    pub nll: f32,
+    pub format: ElementFormat,
+    pub batch_size: usize,
+    pub queue_depth: usize,
+    pub latency: Duration,
+}
+
+/// Server configuration.
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub policy: Policy,
+    /// How long the batcher waits to fill a batch.
+    pub gather_window: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            policy: Policy::default_ladder(),
+            gather_window: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: Sender<ScoreRequest>,
+    pub metrics: Arc<Mutex<Metrics>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    alive: Arc<AtomicBool>,
+}
+
+/// Client handle (cheap to clone).
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<ScoreRequest>,
+    width: usize,
+    /// Cleared on shutdown — a live client must not enqueue into a queue
+    /// nobody drains (its own `tx` clone keeps the channel open).
+    alive: Arc<AtomicBool>,
+}
+
+impl Client {
+    /// Submit and wait. `tokens` is truncated / right-padded to the window.
+    pub fn score(&self, tokens: &[i32], format: Option<ElementFormat>) -> Result<ScoreResponse> {
+        let rx = self.submit(tokens, format)?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("server dropped the request"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Submit without waiting; returns the response channel.
+    pub fn submit(
+        &self,
+        tokens: &[i32],
+        format: Option<ElementFormat>,
+    ) -> Result<Receiver<Result<ScoreResponse, String>>> {
+        if !self.alive.load(Ordering::Acquire) {
+            anyhow::bail!("server is shut down");
+        }
+        let mut t = tokens.to_vec();
+        t.truncate(self.width);
+        t.resize(self.width, crate::data::PAD as i32);
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(ScoreRequest {
+                tokens: t,
+                format,
+                respond: tx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(rx)
+    }
+}
+
+impl Server {
+    /// Start the worker thread.
+    ///
+    /// PJRT handles are not `Send`, so the [`ElasticEngine`] must be *built
+    /// inside* the worker: `factory` runs on the worker thread and its error
+    /// (if any) is returned from `start`. `width` is `seq_len + 1` of the
+    /// serving model (used for client-side padding).
+    pub fn start<F>(width: usize, factory: F, config: ServerConfig) -> Result<(Server, Client)>
+    where
+        F: FnOnce() -> Result<ElasticEngine> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<ScoreRequest>();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let m2 = metrics.clone();
+        let alive = Arc::new(AtomicBool::new(true));
+        let alive_worker = alive.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker = std::thread::Builder::new()
+            .name("mfqat-server".into())
+            .spawn(move || {
+                let engine = match factory() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        alive_worker.store(false, Ordering::Release);
+                        return;
+                    }
+                };
+                worker_loop(engine, config, rx, m2, &alive_worker);
+                alive_worker.store(false, Ordering::Release);
+            })
+            .expect("spawn server worker");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker died during startup"))?
+            .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
+        let client = Client {
+            tx: tx.clone(),
+            width,
+            alive: alive.clone(),
+        };
+        Ok((
+            Server {
+                tx,
+                metrics,
+                worker: Some(worker),
+                alive,
+            },
+            client,
+        ))
+    }
+
+    /// Graceful shutdown: close the queue and join the worker.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        // Mark dead first so live clients stop enqueueing (their tx clones
+        // keep the channel open), then drop our sender and join.
+        self.alive.store(false, Ordering::Release);
+        drop(std::mem::replace(&mut self.tx, mpsc::channel().0));
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop(
+    engine: ElasticEngine,
+    config: ServerConfig,
+    rx: Receiver<ScoreRequest>,
+    metrics: Arc<Mutex<Metrics>>,
+    alive: &AtomicBool,
+) {
+    let b = engine.arts.manifest.train_batch;
+    let width = engine.arts.manifest.seq_len + 1;
+    let mut backlog: Vec<ScoreRequest> = Vec::new();
+    let mut slo = SloState::default();
+    loop {
+        // Wait for the first request, polling the shutdown flag (client tx
+        // clones can keep the channel open past Server::shutdown).
+        if backlog.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(r) => backlog.push(r),
+                Err(RecvTimeoutError::Timeout) => {
+                    if alive.load(Ordering::Acquire) {
+                        continue;
+                    }
+                    break; // shutdown requested
+                }
+                Err(RecvTimeoutError::Disconnected) => break, // all senders dropped
+            }
+        }
+        let deadline = Instant::now() + config.gather_window;
+        while backlog.len() < b {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => backlog.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Drain anything already queued (for depth measurement + batching).
+        while let Ok(r) = rx.try_recv() {
+            backlog.push(r);
+        }
+
+        let queue_depth = backlog.len();
+        let batch: Vec<ScoreRequest> = backlog.drain(..backlog.len().min(b)).collect();
+        // Pinned-format requests win over the policy (first pin in batch);
+        // otherwise the policy maps the *total* queue depth to a format.
+        let fmt = batch
+            .iter()
+            .find_map(|r| r.format)
+            .unwrap_or_else(|| config.policy.choose_with(queue_depth, &slo));
+
+        let t0 = Instant::now();
+        let mut flat = Vec::with_capacity(b * width);
+        for j in 0..b {
+            let r = batch.get(j).unwrap_or(&batch[0]);
+            flat.extend_from_slice(&r.tokens);
+        }
+        let result = engine.score_b8(&flat, fmt);
+        let elapsed = t0.elapsed();
+        slo.observe(&config.policy, elapsed.as_secs_f64());
+
+        match result {
+            Ok(nlls) => {
+                let bs = batch.len();
+                for (j, req) in batch.into_iter().enumerate() {
+                    let latency = req.enqueued.elapsed();
+                    let resp = ScoreResponse {
+                        nll: nlls[j],
+                        format: fmt,
+                        batch_size: bs,
+                        queue_depth,
+                        latency,
+                    };
+                    metrics
+                        .lock()
+                        .unwrap()
+                        .record(fmt, latency.as_secs_f64(), bs, elapsed.as_secs_f64());
+                    let _ = req.respond.send(Ok(resp));
+                }
+                metrics.lock().unwrap().conversions = engine.conversions();
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e:#}");
+                log::error!("{msg}");
+                for req in batch {
+                    let _ = req.respond.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+    log::info!("server worker exiting; {}", metrics.lock().unwrap().summary());
+}

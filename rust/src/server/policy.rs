@@ -1,0 +1,188 @@
+//! Elastic precision policies: queue depth → serving format.
+//!
+//! The paper's motivation: "the same device might want to serve at
+//! different precisions for different batches based on the current load of
+//! the system". The ladder policy drops precision as the backlog grows
+//! (lower bits ⇒ cheaper dequant + smaller working set ⇒ higher throughput
+//! on MX-native hardware); SLO mode is a latency-target wrapper around it.
+
+use crate::formats::ElementFormat;
+
+/// Precision-selection policy.
+#[derive(Debug, Clone)]
+pub enum Policy {
+    /// Always serve at one format.
+    Fixed(ElementFormat),
+    /// Depth thresholds, ascending: the first entry whose depth bound is
+    /// `>= queue_depth` wins; beyond the last bound, its format is used.
+    Ladder(Vec<(usize, ElementFormat)>),
+    /// Latency-SLO mode: walk a precision ladder adaptively — degrade when
+    /// the EWMA batch latency exceeds `target_s`, recover when it falls
+    /// below `target_s * low_water`. State lives in [`SloState`], owned by
+    /// the server worker.
+    Slo {
+        rungs: Vec<ElementFormat>,
+        target_s: f64,
+        low_water: f64,
+    },
+}
+
+/// Mutable state for [`Policy::Slo`] (EWMA latency + current rung).
+#[derive(Debug, Clone)]
+pub struct SloState {
+    pub rung: usize,
+    pub ewma_s: f64,
+}
+
+impl Default for SloState {
+    fn default() -> Self {
+        SloState { rung: 0, ewma_s: 0.0 }
+    }
+}
+
+impl SloState {
+    /// Feed one observed batch latency; moves the rung if needed.
+    pub fn observe(&mut self, policy: &Policy, batch_latency_s: f64) {
+        if let Policy::Slo { rungs, target_s, low_water } = policy {
+            const ALPHA: f64 = 0.3;
+            self.ewma_s = if self.ewma_s == 0.0 {
+                batch_latency_s
+            } else {
+                ALPHA * batch_latency_s + (1.0 - ALPHA) * self.ewma_s
+            };
+            if self.ewma_s > *target_s && self.rung + 1 < rungs.len() {
+                self.rung += 1;
+                log::info!("SLO: degrade to {} (ewma {:.2}ms)", rungs[self.rung], self.ewma_s * 1e3);
+            } else if self.ewma_s < *target_s * *low_water && self.rung > 0 {
+                self.rung -= 1;
+                log::info!("SLO: recover to {} (ewma {:.2}ms)", rungs[self.rung], self.ewma_s * 1e3);
+            }
+        }
+    }
+}
+
+impl Policy {
+    /// The default MXINT ladder: light load serves the anchor precision,
+    /// heavy load degrades gracefully (8 → 6 → 4 bits).
+    pub fn default_ladder() -> Policy {
+        Policy::Ladder(vec![
+            (8, ElementFormat::int(8)),
+            (24, ElementFormat::int(6)),
+            (usize::MAX, ElementFormat::int(4)),
+        ])
+    }
+
+    /// An MXFP ladder (anchor MXFP8).
+    pub fn fp_ladder() -> Policy {
+        Policy::Ladder(vec![
+            (8, ElementFormat::fp_from_bits(8)),
+            (24, ElementFormat::fp_from_bits(6)),
+            (usize::MAX, ElementFormat::fp_from_bits(4)),
+        ])
+    }
+
+    /// An SLO policy over the MXINT ladder.
+    pub fn slo(target: std::time::Duration) -> Policy {
+        Policy::Slo {
+            rungs: vec![
+                ElementFormat::int(8),
+                ElementFormat::int(6),
+                ElementFormat::int(4),
+            ],
+            target_s: target.as_secs_f64(),
+            low_water: 0.5,
+        }
+    }
+
+    /// Choose the serving format for the current queue depth + SLO state.
+    pub fn choose_with(&self, queue_depth: usize, slo: &SloState) -> ElementFormat {
+        match self {
+            Policy::Fixed(f) => *f,
+            Policy::Ladder(steps) => {
+                for &(bound, fmt) in steps {
+                    if queue_depth <= bound {
+                        return fmt;
+                    }
+                }
+                steps.last().expect("non-empty ladder").1
+            }
+            Policy::Slo { rungs, .. } => rungs[slo.rung.min(rungs.len() - 1)],
+        }
+    }
+
+    /// Choose ignoring SLO state (ladder/fixed policies).
+    pub fn choose(&self, queue_depth: usize) -> ElementFormat {
+        self.choose_with(queue_depth, &SloState::default())
+    }
+
+    /// Parse `fixed:<fmt>`, `ladder` / `ladder-fp`, or `slo:<millis>`.
+    pub fn parse(s: &str) -> anyhow::Result<Policy> {
+        if let Some(f) = s.strip_prefix("fixed:") {
+            return Ok(Policy::Fixed(ElementFormat::parse(f)?));
+        }
+        if let Some(ms) = s.strip_prefix("slo:") {
+            let ms: f64 = ms.parse().map_err(|_| anyhow::anyhow!("bad slo millis '{ms}'"))?;
+            return Ok(Policy::slo(std::time::Duration::from_secs_f64(ms / 1e3)));
+        }
+        match s {
+            "ladder" | "ladder-int" => Ok(Policy::default_ladder()),
+            "ladder-fp" => Ok(Policy::fp_ladder()),
+            _ => anyhow::bail!(
+                "unknown policy '{s}' (fixed:<fmt> | ladder | ladder-fp | slo:<ms>)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_degrades_with_load() {
+        let p = Policy::default_ladder();
+        assert_eq!(p.choose(0), ElementFormat::int(8));
+        assert_eq!(p.choose(8), ElementFormat::int(8));
+        assert_eq!(p.choose(9), ElementFormat::int(6));
+        assert_eq!(p.choose(24), ElementFormat::int(6));
+        assert_eq!(p.choose(25), ElementFormat::int(4));
+        assert_eq!(p.choose(10_000), ElementFormat::int(4));
+    }
+
+    #[test]
+    fn fixed_ignores_load() {
+        let p = Policy::Fixed(ElementFormat::int(5));
+        assert_eq!(p.choose(0), ElementFormat::int(5));
+        assert_eq!(p.choose(1000), ElementFormat::int(5));
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert!(matches!(Policy::parse("ladder").unwrap(), Policy::Ladder(_)));
+        assert!(matches!(Policy::parse("ladder-fp").unwrap(), Policy::Ladder(_)));
+        match Policy::parse("fixed:int4").unwrap() {
+            Policy::Fixed(f) => assert_eq!(f, ElementFormat::int(4)),
+            _ => panic!(),
+        }
+        assert!(matches!(Policy::parse("slo:20").unwrap(), Policy::Slo { .. }));
+        assert!(Policy::parse("bogus").is_err());
+        assert!(Policy::parse("slo:abc").is_err());
+    }
+
+    #[test]
+    fn slo_degrades_and_recovers() {
+        let p = Policy::slo(std::time::Duration::from_millis(10));
+        let mut st = SloState::default();
+        assert_eq!(p.choose_with(0, &st), ElementFormat::int(8));
+        // Sustained slow batches → degrade one rung at a time.
+        for _ in 0..8 {
+            st.observe(&p, 0.050);
+        }
+        assert_eq!(p.choose_with(0, &st), ElementFormat::int(4), "bottom rung");
+        // Sustained fast batches → recover.
+        for _ in 0..40 {
+            st.observe(&p, 0.001);
+        }
+        assert_eq!(p.choose_with(0, &st), ElementFormat::int(8));
+    }
+}

@@ -1,0 +1,110 @@
+//! Host-side tensors: dense f32 ([`Tensor`]) and packed microscaling
+//! ([`MxTensor`]).
+
+pub mod mxtensor;
+
+pub use mxtensor::MxTensor;
+
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+/// A dense, row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    /// Gaussian init with the given std (for host-side fallback init).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.normal() * std).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of rows when viewed as a 2-D `[prod(shape[..-1]), last]` matrix
+    /// (scalars/vectors view as a single row).
+    pub fn rows(&self) -> usize {
+        if self.shape.len() <= 1 {
+            1
+        } else {
+            self.shape[..self.shape.len() - 1].iter().product()
+        }
+    }
+
+    /// Last-dimension length (1 for scalars).
+    pub fn row_len(&self) -> usize {
+        self.shape.last().copied().unwrap_or(1)
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_shape() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rows_and_row_len() {
+        let t = Tensor::zeros(&[4, 5, 6]);
+        assert_eq!(t.rows(), 20);
+        assert_eq!(t.row_len(), 6);
+        let v = Tensor::zeros(&[7]);
+        assert_eq!(v.rows(), 1);
+        assert_eq!(v.row_len(), 7);
+    }
+
+    #[test]
+    fn randn_is_seed_deterministic() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        assert_eq!(
+            Tensor::randn(&[3, 3], 0.5, &mut r1),
+            Tensor::randn(&[3, 3], 0.5, &mut r2)
+        );
+    }
+}

@@ -1,0 +1,417 @@
+//! Packed microscaling tensors — the storage and conversion unit of the
+//! elastic-inference pipeline.
+//!
+//! An [`MxTensor`] holds a tensor quantized to one MX format: bit-packed
+//! element codes plus one `i8` shared-scale exponent per block. Blocks run
+//! along the last dimension and never cross rows (a ragged final block per
+//! row is allowed). This is the in-memory *and* checkpoint layout; the
+//! anchor-checkpoint workflow of the paper (§3.5) is
+//! `MxTensor::quantize(fp32, anchor)` → store → [`MxTensor::slice_and_scale`]
+//! → [`MxTensor::dequantize`] into the serving weight buffer.
+
+use crate::formats::int::{int_range, shift_round};
+use crate::formats::mxblock::{self, MxBlock, RoundMode, SCALE_EXP_MAX};
+use crate::formats::{exp2i, pack, ElementFormat, MxFormat};
+use anyhow::{bail, Result};
+
+/// A tensor stored in a microscaling format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MxTensor {
+    pub format: MxFormat,
+    pub shape: Vec<usize>,
+    /// One scale exponent per block, row-major block order.
+    pub scales: Vec<i8>,
+    /// Bit-packed element codes, one contiguous plane.
+    pub packed: Vec<u8>,
+}
+
+impl MxTensor {
+    /// Quantize dense f32 data into the given MX format (paper Eq. 1–3).
+    pub fn quantize(data: &[f32], shape: &[usize], format: MxFormat) -> Result<MxTensor> {
+        Self::quantize_mode(data, shape, format, RoundMode::HalfEven)
+    }
+
+    /// Quantize with an explicit rounding mode (ablation support).
+    pub fn quantize_mode(
+        data: &[f32],
+        shape: &[usize],
+        format: MxFormat,
+        mode: RoundMode,
+    ) -> Result<MxTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elements, got {}", shape, data.len());
+        }
+        let row_len = shape.last().copied().unwrap_or(1).max(1);
+        let rows = if n == 0 { 0 } else { n / row_len };
+        let bs = format.block_size;
+        let bpr = row_len.div_ceil(bs);
+        let mut scales = Vec::with_capacity(rows * bpr);
+        let mut codes: Vec<i8> = Vec::with_capacity(n);
+        for r in 0..rows {
+            let row = &data[r * row_len..(r + 1) * row_len];
+            for chunk in row.chunks(bs) {
+                let block = mxblock::encode_block(chunk, format.elem, mode);
+                scales.push(block.scale_exp);
+                codes.extend_from_slice(&block.codes);
+            }
+        }
+        let packed = pack::pack(&codes, format.elem.bits());
+        Ok(MxTensor {
+            format,
+            shape: shape.to_vec(),
+            scales,
+            packed,
+        })
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocks per row (ragged tail included).
+    pub fn blocks_per_row(&self) -> usize {
+        self.row_len().div_ceil(self.format.block_size)
+    }
+
+    fn row_len(&self) -> usize {
+        self.shape.last().copied().unwrap_or(1).max(1)
+    }
+
+    fn rows(&self) -> usize {
+        if self.len() == 0 {
+            0
+        } else {
+            self.len() / self.row_len()
+        }
+    }
+
+    /// Storage footprint in bytes (packed codes + scales).
+    pub fn storage_bytes(&self) -> usize {
+        self.packed.len() + self.scales.len()
+    }
+
+    /// Unpack the full code plane (sign-extended for int formats, raw codes
+    /// for fp formats).
+    pub fn unpack_codes(&self) -> Vec<i8> {
+        let w = self.format.elem.bits();
+        let n = self.len();
+        if self.format.elem.is_int() {
+            pack::unpack_signed(&self.packed, w, n)
+        } else {
+            pack::unpack_unsigned(&self.packed, w, n)
+                .into_iter()
+                .map(|c| c as i8)
+                .collect()
+        }
+    }
+
+    /// Dequantize to dense f32.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len()];
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Dequantize into a caller-provided buffer (serving hot path).
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len());
+        let codes = self.unpack_codes();
+        let bs = self.format.block_size;
+        let row_len = self.row_len();
+        let bpr = self.blocks_per_row();
+        match self.format.elem {
+            ElementFormat::Int { .. } => {
+                for r in 0..self.rows() {
+                    for b in 0..bpr {
+                        let scale = exp2i(self.scales[r * bpr + b] as i32);
+                        let start = r * row_len + b * bs;
+                        let end = (start + bs).min((r + 1) * row_len);
+                        for i in start..end {
+                            out[i] = codes[i] as f32 * scale;
+                        }
+                    }
+                }
+            }
+            ElementFormat::Fp { .. } => {
+                let spec = self.format.elem.fp_spec().unwrap();
+                // Decode LUT over the full code byte (sign included).
+                let nbits = spec.bits();
+                let lut: Vec<f32> = (0..(1u16 << nbits))
+                    .map(|c| spec.decode(c as u8))
+                    .collect();
+                for r in 0..self.rows() {
+                    for b in 0..bpr {
+                        let scale = exp2i(self.scales[r * bpr + b] as i32);
+                        let start = r * row_len + b * bs;
+                        let end = (start + bs).min((r + 1) * row_len);
+                        for i in start..end {
+                            out[i] = lut[(codes[i] as u8) as usize & ((1 << nbits) - 1)] * scale;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Slice-and-Scale conversion to a lower-precision element format
+    /// (paper §3.3/§3.4) — no FP32 weights involved.
+    pub fn slice_and_scale(&self, target: ElementFormat) -> Result<MxTensor> {
+        self.slice_and_scale_mode(target, RoundMode::HalfEven)
+    }
+
+    /// Slice-and-Scale with an explicit rounding mode.
+    pub fn slice_and_scale_mode(
+        &self,
+        target: ElementFormat,
+        mode: RoundMode,
+    ) -> Result<MxTensor> {
+        let codes = self.unpack_codes();
+        let mut out_codes = vec![0i8; codes.len()];
+        let mut out_scales = vec![0i8; self.scales.len()];
+        match (self.format.elem, target) {
+            (ElementFormat::Int { bits: bh }, ElementFormat::Int { bits: bl }) => {
+                if bl > bh {
+                    bail!("SSMXINT requires b_l <= b_h (got {bh} -> {bl})");
+                }
+                let de = (bh - bl) as u32;
+                let (lo, hi) = int_range(bl);
+                // Element transform is block-independent: shift+round+clip.
+                for (o, &c) in out_codes.iter_mut().zip(&codes) {
+                    *o = shift_round(c as i32, de, mode).clamp(lo, hi) as i8;
+                }
+                for (o, &s) in out_scales.iter_mut().zip(&self.scales) {
+                    *o = ((s as i32 + de as i32).min(SCALE_EXP_MAX)) as i8;
+                }
+            }
+            (ElementFormat::Fp { .. }, ElementFormat::Fp { .. }) => {
+                let sh = self.format.elem.fp_spec().unwrap();
+                let sl = target.fp_spec().unwrap();
+                if sl.emax() > sh.emax() || (sl.emax() == sh.emax() && sl.m > sh.m) {
+                    bail!(
+                        "SSMXFP requires a lower-precision target ({} -> {})",
+                        self.format.elem,
+                        target
+                    );
+                }
+                let de = sh.emax() - sl.emax();
+                let down = exp2i(-de);
+                // Requantization LUT: high code → low code (256 entries max).
+                let hbits = sh.bits();
+                let lut: Vec<i8> = (0..(1u16 << hbits))
+                    .map(|c| sl.quantize_code(sh.decode(c as u8) * down) as i8)
+                    .collect();
+                let hmask = (1u16 << hbits) - 1;
+                for (o, &c) in out_codes.iter_mut().zip(&codes) {
+                    *o = lut[((c as u8) as u16 & hmask) as usize];
+                }
+                for (o, &s) in out_scales.iter_mut().zip(&self.scales) {
+                    *o = ((s as i32 + de).min(SCALE_EXP_MAX)) as i8;
+                }
+            }
+            _ => bail!(
+                "slice-and-scale cannot cross element families ({} -> {})",
+                self.format.elem,
+                target
+            ),
+        }
+        Ok(MxTensor {
+            format: MxFormat::new(target, self.format.block_size),
+            shape: self.shape.clone(),
+            scales: out_scales,
+            packed: pack::pack(&out_codes, target.bits()),
+        })
+    }
+
+    /// Extract one block (for tests / inspection).
+    pub fn block(&self, row: usize, block_in_row: usize) -> MxBlock {
+        let bs = self.format.block_size;
+        let row_len = self.row_len();
+        let bpr = self.blocks_per_row();
+        let codes = self.unpack_codes();
+        let start = row * row_len + block_in_row * bs;
+        let end = (start + bs).min((row + 1) * row_len);
+        MxBlock {
+            format: self.format.elem,
+            scale_exp: self.scales[row * bpr + block_in_row],
+            codes: codes[start..end].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::props::{run_cases, Gen};
+    use crate::util::stats::mse;
+    use crate::util::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn quantize_dequantize_matches_blockwise_reference() {
+        let data = randvec(4 * 96, 1);
+        let fmt = MxFormat::mxint(6, 32);
+        let t = MxTensor::quantize(&data, &[4, 96], fmt).unwrap();
+        let got = t.dequantize();
+        let want = mxblock::fake_quantize(&data, fmt.elem, 32, RoundMode::HalfEven);
+        // Rows are 96 = 3 blocks each; fake_quantize on the flat slice has the
+        // same block boundaries here because 96 % 32 == 0.
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn blocks_do_not_cross_rows() {
+        // Rows of 48 with block 32: per-row blocks are [32, 16]; a flat
+        // 96-element quantization would instead put elements 32..64 together.
+        let mut data = vec![0.01f32; 2 * 48];
+        data[47] = 100.0; // spike at the end of row 0
+        let t = MxTensor::quantize(&data, &[2, 48], MxFormat::mxint(8, 32)).unwrap();
+        // Row 1 scales must be unaffected by the row-0 spike.
+        let bpr = t.blocks_per_row();
+        assert_eq!(bpr, 2);
+        let s_row1 = &t.scales[bpr..];
+        let t_clean = MxTensor::quantize(&vec![0.01f32; 48], &[1, 48], MxFormat::mxint(8, 32))
+            .unwrap();
+        assert_eq!(s_row1, &t_clean.scales[..]);
+    }
+
+    #[test]
+    fn storage_footprint() {
+        let data = randvec(1024, 2);
+        let t = MxTensor::quantize(&data, &[1, 1024], MxFormat::mxint(4, 32)).unwrap();
+        assert_eq!(t.packed.len(), 1024 * 4 / 8);
+        assert_eq!(t.scales.len(), 32);
+        assert_eq!(t.storage_bytes(), 512 + 32);
+        // 8x smaller than f32 (plus scales).
+        assert!(t.storage_bytes() < 1024 * 4 / 7);
+    }
+
+    #[test]
+    fn ss_matches_blockwise_ss() {
+        let data = randvec(8 * 64, 3);
+        let anchor = MxTensor::quantize(&data, &[8, 64], MxFormat::mxint(8, 32)).unwrap();
+        let low = anchor.slice_and_scale(ElementFormat::int(4)).unwrap();
+        // Compare each block against the block-level SS reference.
+        for r in 0..8 {
+            for b in 0..anchor.blocks_per_row() {
+                let hb = anchor.block(r, b);
+                let want =
+                    crate::formats::ss::slice_and_scale(&hb, ElementFormat::int(4), RoundMode::HalfEven)
+                        .unwrap();
+                let got = low.block(r, b);
+                assert_eq!(got, want, "r={r} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn ss_fp_matches_blockwise_ss() {
+        let data = randvec(4 * 64, 4);
+        let anchor = MxTensor::quantize(&data, &[4, 64], MxFormat::mxfp(8, 32)).unwrap();
+        for bits in 4..=7u8 {
+            let tgt = ElementFormat::fp_from_bits(bits);
+            let low = anchor.slice_and_scale(tgt).unwrap();
+            for r in 0..4 {
+                for b in 0..anchor.blocks_per_row() {
+                    let hb = anchor.block(r, b);
+                    let want = crate::formats::ss::slice_and_scale(&hb, tgt, RoundMode::HalfEven)
+                        .unwrap();
+                    assert_eq!(low.block(r, b), want, "bits={bits} r={r} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_ss_tensor_close_to_direct() {
+        run_cases("tensor SS ≈ direct", 24, |g: &mut Gen| {
+            let rows = g.len(1, 4);
+            let cols = 64;
+            let data: Vec<f32> = (0..rows * cols).map(|_| g.rng.normal()).collect();
+            let anchor =
+                MxTensor::quantize(&data, &[rows, cols], MxFormat::mxint(8, 32)).unwrap();
+            for bits in [2u8, 4, 6] {
+                let ss = anchor.slice_and_scale(ElementFormat::int(bits)).unwrap();
+                let direct =
+                    MxTensor::quantize(&data, &[rows, cols], MxFormat::mxint(bits, 32)).unwrap();
+                let m_ss = mse(&data, &ss.dequantize());
+                let m_direct = mse(&data, &direct.dequantize());
+                if m_ss > m_direct * 2.5 + 1e-12 {
+                    return Err(format!("bits={bits}: {m_ss} vs {m_direct}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ragged_rows() {
+        let data = randvec(3 * 40, 5);
+        let t = MxTensor::quantize(&data, &[3, 40], MxFormat::mxint(5, 32)).unwrap();
+        assert_eq!(t.blocks_per_row(), 2);
+        assert_eq!(t.scales.len(), 6);
+        let dec = t.dequantize();
+        assert_eq!(dec.len(), 120);
+        // Error bound still holds on the ragged tail.
+        for (v, d) in data.iter().zip(&dec) {
+            assert!((v - d).abs() < 0.2, "v={v} d={d}");
+        }
+    }
+
+    #[test]
+    fn scalar_and_empty_shapes() {
+        let t = MxTensor::quantize(&[1.5], &[1], MxFormat::mxint(8, 32)).unwrap();
+        assert_eq!(t.dequantize().len(), 1);
+        assert!((t.dequantize()[0] - 1.5).abs() < 0.02);
+        let e = MxTensor::quantize(&[], &[0], MxFormat::mxint(8, 32)).unwrap();
+        assert_eq!(e.dequantize().len(), 0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(MxTensor::quantize(&[1.0; 5], &[2, 3], MxFormat::mxint(8, 32)).is_err());
+    }
+
+    #[test]
+    fn fp_tensor_roundtrip_quality_improves_with_mantissa() {
+        // MXFP MSE is dominated by the mantissa width, which grows every
+        // two bitwidths (E2M1→E2M2→E3M2→E3M3→E4M3). Adjacent bitwidths
+        // need not be monotone — e.g. MXFP8 (E4M3) can lose to MXFP7 (E3M3)
+        // because E4M3's NaN slot clips the block max at 448/512 of the top
+        // binade (the paper's Table 2 likewise shows MXFP7 ≥ MXFP8 rows).
+        let data = randvec(2048, 6);
+        let m: Vec<f64> = [4u8, 5, 6, 7, 8]
+            .iter()
+            .map(|&bits| {
+                let t =
+                    MxTensor::quantize(&data, &[2, 1024], MxFormat::mxfp(bits, 32)).unwrap();
+                mse(&data, &t.dequantize())
+            })
+            .collect();
+        assert!(m[2] < m[0], "fp6 < fp4: {m:?}"); // +1 mantissa bit
+        assert!(m[3] < m[1], "fp7 < fp5: {m:?}");
+        assert!(m[4] < m[0], "fp8 < fp4: {m:?}");
+        assert!(m[3] < m[0], "fp7 < fp4: {m:?}");
+    }
+
+    #[test]
+    fn int_tensor_roundtrip_quality_improves_with_bits() {
+        let data = randvec(2048, 7);
+        let mut last = f64::INFINITY;
+        for bits in 2..=8u8 {
+            let t = MxTensor::quantize(&data, &[2, 1024], MxFormat::mxint(bits, 32)).unwrap();
+            let m = mse(&data, &t.dequantize());
+            assert!(m < last, "bits={bits}: {m} !< {last}");
+            last = m;
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Training driver: runs the AOT-compiled train-step HLOs from rust.
+//!
+//! Python never executes at training time — the AdamW update, the STE
+//! fake-quant (L1 Pallas kernel), and the loss are all inside the compiled
+//! graph. The driver owns the FP32 master weights ([`ParamSet`]), the
+//! optimizer state, and the format *schedule* (multi-format QAT is a
+//! schedule over per-format train steps, paper §3.2).
+
+pub mod optimizer;
+pub mod schedule;
+
+pub use schedule::{Phase, TrainPlan};
+
+use crate::model::ParamSet;
+use crate::runtime::{self, ArtifactSet, Runtime};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use optimizer::OptState;
+
+/// Training driver bound to one artifact set.
+pub struct Trainer<'a> {
+    pub rt: &'a Runtime,
+    pub arts: &'a ArtifactSet,
+    pub params: ParamSet,
+    pub step: i32,
+    opt: Option<OptState>,
+}
+
+/// Per-epoch training record.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub variant: String,
+    pub mean_loss: f64,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    pub steps: usize,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime, arts: &'a ArtifactSet, params: ParamSet) -> Trainer<'a> {
+        Trainer {
+            rt,
+            arts,
+            params,
+            step: 0,
+            opt: None,
+        }
+    }
+
+    /// Reset optimizer state and the step counter (fresh training run).
+    pub fn reset_opt(&mut self) {
+        self.opt = None;
+        self.step = 0;
+    }
+
+    /// Run one epoch of `variant` over `rows` (token windows of width
+    /// `seq_len + 1`) at learning rate `lr`. Returns loss stats.
+    pub fn train_epoch(&mut self, variant: &str, rows: &[Vec<i32>], lr: f32) -> Result<EpochStats> {
+        let name = format!("train_{variant}");
+        let exe = self.arts.executable(self.rt, &name)?;
+        let t_idx = self.arts.trainable(&name)?;
+        let m = &self.arts.manifest;
+        let b = m.train_batch;
+        let width = m.seq_len + 1;
+        if rows.is_empty() {
+            bail!("train_epoch: no data");
+        }
+
+        // (Re)build optimizer state if the trainable set changed (e.g.
+        // pretrain -> QAT). Within a multi-format schedule the set is
+        // identical across formats, so AdamW moments persist (paper trains
+        // sequentially with one optimizer).
+        let reset = match &self.opt {
+            Some(o) => o.idx != t_idx,
+            None => true,
+        };
+        if reset {
+            self.opt = Some(OptState::zeros(&self.params, &t_idx));
+            log::debug!("optimizer state reset for {} ({} tensors)", variant, t_idx.len());
+        }
+
+        let f_idx: Vec<usize> = (0..m.params.len()).filter(|i| !t_idx.contains(i)).collect();
+
+        let mut first_loss = f32::NAN;
+        let mut last_loss = f32::NAN;
+        let mut total = 0.0f64;
+        let batches = crate::data::batches(rows, b, width);
+        for flat in &batches {
+            self.step += 1;
+            let tokens = runtime::i32_literal(flat, &[b, width])?;
+            let lr_lit = runtime::f32_scalar(lr);
+            let step_lit = runtime::i32_scalar(self.step);
+            let opt = self.opt.as_ref().unwrap();
+
+            // Literal assembly in HLO argument order:
+            // (lr, step, tokens, *train, *frozen, *m, *v).
+            let train_lits: Vec<xla::Literal> = t_idx
+                .iter()
+                .map(|&i| runtime::tensor_literal(&self.params.tensors[i]))
+                .collect::<Result<_>>()?;
+            let frozen_lits: Vec<xla::Literal> = f_idx
+                .iter()
+                .map(|&i| runtime::tensor_literal(&self.params.tensors[i]))
+                .collect::<Result<_>>()?;
+            let m_lits: Vec<xla::Literal> = opt
+                .m
+                .iter()
+                .map(runtime::tensor_literal)
+                .collect::<Result<_>>()?;
+            let v_lits: Vec<xla::Literal> = opt
+                .v
+                .iter()
+                .map(runtime::tensor_literal)
+                .collect::<Result<_>>()?;
+            let mut args: Vec<&xla::Literal> = vec![&lr_lit, &step_lit, &tokens];
+            args.extend(train_lits.iter());
+            args.extend(frozen_lits.iter());
+            args.extend(m_lits.iter());
+            args.extend(v_lits.iter());
+
+            let out = exe.run(&args).context("train step")?;
+            let n_t = t_idx.len();
+            if out.len() != 1 + 3 * n_t {
+                bail!("train step returned {} outputs, expected {}", out.len(), 1 + 3 * n_t);
+            }
+            let loss = runtime::literal_f32(&out[0])?;
+            if !loss.is_finite() {
+                bail!("non-finite loss at step {} ({variant}, lr {lr})", self.step);
+            }
+            let new_t: Vec<Tensor> = out[1..1 + n_t]
+                .iter()
+                .map(runtime::literal_tensor)
+                .collect::<Result<_>>()?;
+            let new_m: Vec<Tensor> = out[1 + n_t..1 + 2 * n_t]
+                .iter()
+                .map(runtime::literal_tensor)
+                .collect::<Result<_>>()?;
+            let new_v: Vec<Tensor> = out[1 + 2 * n_t..]
+                .iter()
+                .map(runtime::literal_tensor)
+                .collect::<Result<_>>()?;
+            self.params.scatter(&t_idx, new_t)?;
+            let opt = self.opt.as_mut().unwrap();
+            opt.m = new_m;
+            opt.v = new_v;
+
+            if first_loss.is_nan() {
+                first_loss = loss;
+            }
+            last_loss = loss;
+            total += loss as f64;
+            log::debug!("step {:>5} [{}] loss {:.4}", self.step, variant, loss);
+        }
+        let stats = EpochStats {
+            variant: variant.to_string(),
+            mean_loss: total / batches.len() as f64,
+            first_loss,
+            last_loss,
+            steps: batches.len(),
+        };
+        log::info!(
+            "epoch [{}] {} steps, loss {:.4} -> {:.4} (mean {:.4})",
+            stats.variant,
+            stats.steps,
+            stats.first_loss,
+            stats.last_loss,
+            stats.mean_loss
+        );
+        Ok(stats)
+    }
+
+    /// Execute a full training plan; returns per-epoch stats.
+    pub fn run_plan(&mut self, plan: &TrainPlan, rows: &[Vec<i32>], lr: f32) -> Result<Vec<EpochStats>> {
+        let mut out = Vec::new();
+        for phase in &plan.phases {
+            for _ in 0..phase.epochs {
+                out.push(self.train_epoch(&phase.variant, rows, lr)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Subsample `rows` evenly to `n` rows (the paper's equal-step split for
+    /// >2B models; we use it to keep the experiment matrix affordable).
+    pub fn subsample(rows: &[Vec<i32>], n: usize) -> Vec<Vec<i32>> {
+        if n >= rows.len() {
+            return rows.to_vec();
+        }
+        (0..n)
+            .map(|i| rows[i * rows.len() / n].clone())
+            .collect()
+    }
+}

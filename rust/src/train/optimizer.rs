@@ -1,0 +1,53 @@
+//! AdamW optimizer state (the update itself runs inside the train-step HLO;
+//! the host only carries the moment tensors between steps).
+
+use crate::model::ParamSet;
+use crate::tensor::Tensor;
+
+/// First/second moment tensors for the trainable subset.
+#[derive(Debug, Clone)]
+pub struct OptState {
+    /// Indices (into the manifest param order) this state covers.
+    pub idx: Vec<usize>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+}
+
+impl OptState {
+    /// Fresh zero state for the given trainable indices.
+    pub fn zeros(params: &ParamSet, idx: &[usize]) -> OptState {
+        let m = idx
+            .iter()
+            .map(|&i| Tensor::zeros(&params.tensors[i].shape))
+            .collect::<Vec<_>>();
+        OptState {
+            idx: idx.to_vec(),
+            m: m.clone(),
+            v: m,
+        }
+    }
+
+    /// Total state elements (for memory accounting).
+    pub fn numel(&self) -> usize {
+        self.m.iter().map(|t| t.len()).sum::<usize>() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamSet;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn zeros_match_param_shapes() {
+        let params = ParamSet {
+            tensors: vec![Tensor::zeros(&[2, 3]), Tensor::zeros(&[4]), Tensor::zeros(&[5, 5])],
+        };
+        let s = OptState::zeros(&params, &[0, 2]);
+        assert_eq!(s.m.len(), 2);
+        assert_eq!(s.m[0].shape, vec![2, 3]);
+        assert_eq!(s.v[1].shape, vec![5, 5]);
+        assert_eq!(s.numel(), (6 + 25) * 2);
+    }
+}

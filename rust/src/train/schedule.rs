@@ -1,0 +1,174 @@
+//! Format schedules — the paper's training recipes (§3.2, §3.5).
+//!
+//! * Single-format QAT: one format for all epochs.
+//! * Multi-format QAT: one epoch per format in **increasing bit order**
+//!   (2→4→6→8): "lower-precision weights typically require larger updates to
+//!   jump out of the quantization bin; training in the opposite direction
+//!   can destabilize the higher-precision settings learned earlier".
+//! * Anchor-SS multi-format QAT (§3.5): targets are reached through the
+//!   8-bit anchor (`W_t = Q_{A→t}(Q_A(W))`); the anchor-format epoch itself
+//!   is plain QAT at the anchor (fake-quant is idempotent there).
+
+use anyhow::{bail, Result};
+
+/// One schedule phase: a train-step variant run for `epochs` epochs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Phase {
+    pub variant: String,
+    pub epochs: usize,
+}
+
+/// A named training plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrainPlan {
+    pub name: String,
+    pub phases: Vec<Phase>,
+}
+
+impl TrainPlan {
+    fn of(name: &str, phases: Vec<(&str, usize)>) -> TrainPlan {
+        TrainPlan {
+            name: name.to_string(),
+            phases: phases
+                .into_iter()
+                .map(|(v, epochs)| Phase {
+                    variant: v.to_string(),
+                    epochs,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn total_epochs(&self) -> usize {
+        self.phases.iter().map(|p| p.epochs).sum()
+    }
+
+    /// Full-precision finetune baseline, `epochs` epochs.
+    pub fn ft_fp(epochs: usize) -> TrainPlan {
+        TrainPlan::of("ft_fp", vec![("ft_fp", epochs)])
+    }
+
+    /// Single-format QAT at `fmt` (e.g. "int4"), `epochs` epochs.
+    pub fn single(fmt: &str, epochs: usize) -> TrainPlan {
+        TrainPlan::of(
+            &format!("qat_{fmt}"),
+            vec![(Box::leak(format!("qat_{fmt}").into_boxed_str()), epochs)],
+        )
+    }
+
+    /// Multi-format MXINT QAT: 2→4→6→8, one epoch each (4 total).
+    pub fn multi_int() -> TrainPlan {
+        TrainPlan::of(
+            "mf_int",
+            vec![("qat_int2", 1), ("qat_int4", 1), ("qat_int6", 1), ("qat_int8", 1)],
+        )
+    }
+
+    /// Multi-format MXFP QAT: 4→6→8, one epoch each (3 total).
+    pub fn multi_fp() -> TrainPlan {
+        TrainPlan::of("mf_fp", vec![("qat_fp4", 1), ("qat_fp6", 1), ("qat_fp8", 1)])
+    }
+
+    /// ABLATION: multi-format MXINT in **decreasing** bit order (8→6→4→2).
+    /// The paper (§3.2) claims this direction "can destabilize the
+    /// higher-precision quantization settings learned earlier"; experiment
+    /// `abl_order` tests it.
+    pub fn multi_int_desc() -> TrainPlan {
+        TrainPlan::of(
+            "mf_int_desc",
+            vec![("qat_int8", 1), ("qat_int6", 1), ("qat_int4", 1), ("qat_int2", 1)],
+        )
+    }
+
+    /// ABLATION: decreasing-bit MXFP (8→6→4).
+    pub fn multi_fp_desc() -> TrainPlan {
+        TrainPlan::of(
+            "mf_fp_desc",
+            vec![("qat_fp8", 1), ("qat_fp6", 1), ("qat_fp4", 1)],
+        )
+    }
+
+    /// Anchor-SS multi-format MXINT QAT (§3.5), anchor = MXINT8.
+    pub fn multi_ss_int() -> TrainPlan {
+        TrainPlan::of(
+            "mf_ss_int",
+            vec![
+                ("qat_ss_int2", 1),
+                ("qat_ss_int4", 1),
+                ("qat_ss_int6", 1),
+                ("qat_int8", 1), // anchor epoch: Q_A∘Q_A = Q_A
+            ],
+        )
+    }
+
+    /// Anchor-SS multi-format MXFP QAT (§3.5), anchor = MXFP8.
+    pub fn multi_ss_fp() -> TrainPlan {
+        TrainPlan::of(
+            "mf_ss_fp",
+            vec![("qat_ss_fp4", 1), ("qat_ss_fp6", 1), ("qat_fp8", 1)],
+        )
+    }
+
+    /// Look up a plan by name. Single-format plans take the total epoch
+    /// budget of the matching multi-format plan for fair comparison
+    /// (paper: "the same number of epochs as the multi-format QAT runs").
+    pub fn by_name(name: &str) -> Result<TrainPlan> {
+        Ok(match name {
+            "ft_fp_int" => TrainPlan::ft_fp(4),
+            "ft_fp_fp" | "ft_fp" => TrainPlan::ft_fp(3),
+            "mf_int" => TrainPlan::multi_int(),
+            "mf_fp" => TrainPlan::multi_fp(),
+            "mf_int_desc" => TrainPlan::multi_int_desc(),
+            "mf_fp_desc" => TrainPlan::multi_fp_desc(),
+            "mf_ss_int" => TrainPlan::multi_ss_int(),
+            "mf_ss_fp" => TrainPlan::multi_ss_fp(),
+            _ if name.starts_with("qat_int") => TrainPlan::single(&name[4..], 4),
+            _ if name.starts_with("qat_fp") => TrainPlan::single(&name[4..], 3),
+            _ => bail!("unknown train plan '{name}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multi_int_is_increasing_bit_order() {
+        let p = TrainPlan::multi_int();
+        let bits: Vec<u32> = p
+            .phases
+            .iter()
+            .map(|ph| ph.variant.trim_start_matches("qat_int").parse().unwrap())
+            .collect();
+        assert_eq!(bits, vec![2, 4, 6, 8]);
+        assert_eq!(p.total_epochs(), 4);
+    }
+
+    #[test]
+    fn fair_epoch_budgets() {
+        // Single-format gets the same total epochs as multi-format.
+        assert_eq!(
+            TrainPlan::by_name("qat_int4").unwrap().total_epochs(),
+            TrainPlan::multi_int().total_epochs()
+        );
+        assert_eq!(
+            TrainPlan::by_name("qat_fp6").unwrap().total_epochs(),
+            TrainPlan::multi_fp().total_epochs()
+        );
+        assert_eq!(TrainPlan::by_name("ft_fp_int").unwrap().total_epochs(), 4);
+    }
+
+    #[test]
+    fn ss_plans_route_through_anchor() {
+        let p = TrainPlan::multi_ss_int();
+        assert!(p.phases[0].variant.starts_with("qat_ss_"));
+        // The anchor epoch uses the plain anchor-format step.
+        assert_eq!(p.phases.last().unwrap().variant, "qat_int8");
+    }
+
+    #[test]
+    fn unknown_plan_errors() {
+        assert!(TrainPlan::by_name("nope").is_err());
+    }
+}

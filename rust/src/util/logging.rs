@@ -1,0 +1,60 @@
+//! Tiny stderr logger wired to the `log` facade.
+//!
+//! Level is controlled by `MFQAT_LOG` (error|warn|info|debug|trace),
+//! defaulting to `info`.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("MFQAT_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let logger = Box::new(StderrLogger { start: *START });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

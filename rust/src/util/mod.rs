@@ -1,0 +1,20 @@
+//! Small self-contained utilities.
+//!
+//! The offline crate set available in this environment is the dependency
+//! closure of the `xla` crate only — no `serde`, `clap`, `rand`, `criterion`
+//! or `proptest`. This module supplies the minimal replacements the rest of
+//! the crate needs: a seeded PRNG ([`rng`]), a tiny JSON value/parser/writer
+//! ([`json`]), a CLI argument parser ([`cli`]), logging ([`logging`]),
+//! streaming statistics ([`stats`]), a wall-clock timer ([`timer`]), and a
+//! seeded property-testing helper ([`props`]).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod props;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,222 @@
+//! Streaming statistics and fixed-bucket latency histograms.
+//!
+//! Used by the serving metrics ([`crate::server::metrics`]), the experiment
+//! reports, and the bench harness.
+
+/// Online mean/variance/min/max (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Running {
+        Running {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Log-scaled latency histogram from 1µs to ~100s, plus exact quantiles over a
+/// bounded reservoir.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    buckets: Vec<u64>,
+    reservoir: Vec<f64>,
+    cap: usize,
+    seen: u64,
+    rng_state: u64,
+}
+
+const BUCKETS_PER_DECADE: usize = 10;
+const DECADES: usize = 8; // 1e-6 .. 1e2 seconds
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist {
+            buckets: vec![0; BUCKETS_PER_DECADE * DECADES + 2],
+            reservoir: Vec::new(),
+            cap: 4096,
+            seen: 0,
+            rng_state: 0x1234_5678_9abc_def0,
+        }
+    }
+
+    fn bucket_index(secs: f64) -> usize {
+        if secs <= 1e-6 {
+            return 0;
+        }
+        let log = (secs / 1e-6).log10(); // decades above 1µs
+        let idx = 1 + (log * BUCKETS_PER_DECADE as f64) as usize;
+        idx.min(BUCKETS_PER_DECADE * DECADES + 1)
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.buckets[Self::bucket_index(secs)] += 1;
+        self.seen += 1;
+        if self.reservoir.len() < self.cap {
+            self.reservoir.push(secs);
+        } else {
+            // Reservoir sampling (xorshift64*).
+            self.rng_state ^= self.rng_state >> 12;
+            self.rng_state ^= self.rng_state << 25;
+            self.rng_state ^= self.rng_state >> 27;
+            let r = (self.rng_state.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 32) as u64;
+            let j = (r % self.seen) as usize;
+            if j < self.cap {
+                self.reservoir[j] = secs;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+
+    /// Quantile over the reservoir (exact for <= cap samples).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.reservoir.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.reservoir.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() - 1) as f64 * q).round() as usize;
+        v[idx]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} p50={} p95={} p99={}",
+            self.seen,
+            super::timer::fmt_time(self.quantile(0.5)),
+            super::timer::fmt_time(self.quantile(0.95)),
+            super::timer::fmt_time(self.quantile(0.99)),
+        )
+    }
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Max absolute difference.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 5);
+        assert!((r.mean() - 4.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((r.var() - var).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 10.0);
+    }
+
+    #[test]
+    fn hist_quantiles_ordered() {
+        let mut h = LatencyHist::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.quantile(0.5) <= h.quantile(0.95));
+        assert!(h.quantile(0.95) <= h.quantile(0.99));
+        // p50 should be near 5ms.
+        assert!((h.quantile(0.5) - 5e-3).abs() < 1e-3);
+    }
+
+    #[test]
+    fn hist_reservoir_overflow_is_safe() {
+        let mut h = LatencyHist::new();
+        for i in 0..10_000 {
+            h.record((i % 100) as f64 * 1e-4);
+        }
+        assert_eq!(h.count(), 10_000);
+        assert!(h.quantile(0.99) <= 1e-2 + 1e-9);
+    }
+
+    #[test]
+    fn mse_basics() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((mse(&[0.0, 0.0], &[1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(max_abs_diff(&[1.0, -3.0], &[2.0, 1.0]), 4.0);
+    }
+}

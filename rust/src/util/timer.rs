@@ -1,0 +1,145 @@
+//! Wall-clock timing helpers for the bench harness and perf logging.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Measure a closure repeatedly; returns per-iteration stats in seconds.
+///
+/// Does a warmup pass, then runs at least `min_iters` iterations and at least
+/// `min_time_s` seconds, whichever is longer. Used by `rust/benches/*` (the
+/// offline crate set has no criterion).
+pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time_s: f64, mut f: F) -> BenchResult {
+    // Warmup.
+    f();
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() >= min_iters && start.elapsed().as_secs_f64() >= min_time_s {
+            break;
+        }
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    BenchResult::from_samples(name, samples)
+}
+
+/// Summary statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn from_samples(name: &str, mut samples: Vec<f64>) -> BenchResult {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_s: mean,
+            p50_s: samples[n / 2],
+            p95_s: samples[(n as f64 * 0.95) as usize..][0],
+            min_s: samples[0],
+            max_s: samples[n - 1],
+        }
+    }
+
+    /// Throughput line given `units` processed per iteration.
+    pub fn report(&self, units_per_iter: f64, unit: &str) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  {:>14}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+            format!("{}/{}", fmt_rate(units_per_iter / self.mean_s), unit),
+        )
+    }
+}
+
+/// Human-readable time.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Human-readable rate (e.g. elements/s).
+pub fn fmt_rate(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2} k", x / 1e3)
+    } else {
+        format!("{x:.1} ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let r = bench("noop", 16, 0.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 16);
+        assert!(r.min_s <= r.p50_s && r.p50_s <= r.max_s);
+        assert!(r.mean_s > 0.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_time(2.0).contains('s'));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_rate(2e9).starts_with("2.00 G"));
+    }
+}

@@ -1,0 +1,178 @@
+//! End-to-end pipeline: train steps run and reduce loss; the anchor
+//! checkpoint → Slice-and-Scale → serving path produces sane scores.
+
+use mfqat::checkpoint::Checkpoint;
+use mfqat::coordinator::ElasticEngine;
+use mfqat::data::{Corpus, CorpusConfig};
+use mfqat::formats::ElementFormat;
+use mfqat::model::ParamSet;
+use mfqat::runtime::{ArtifactSet, Runtime};
+use mfqat::train::Trainer;
+use std::path::PathBuf;
+
+fn arts_dir() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping (run `make artifacts`)");
+        None
+    }
+}
+
+fn small_corpus(width: usize) -> Corpus {
+    Corpus::generate(CorpusConfig {
+        seed: 7,
+        width,
+        pretrain_sequences: 32,
+        qat_sequences: 16,
+        val_sequences: 8,
+    })
+}
+
+#[test]
+fn train_steps_reduce_loss_and_only_touch_trainables() {
+    let Some(dir) = arts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let arts = ArtifactSet::open(&dir).unwrap();
+    let corpus = small_corpus(arts.manifest.seq_len + 1);
+    let params = ParamSet::init(&arts.manifest, 1);
+    let before_emb = params.tensors[0].clone();
+    let quant_idx = arts.manifest.quant_indices();
+    let before_quant = params.tensors[quant_idx[0]].clone();
+
+    let mut trainer = Trainer::new(&rt, &arts, params);
+    // Two epochs of single-format QAT on a small slice.
+    let s1 = trainer.train_epoch("qat_int4", &corpus.pretrain, 1e-3).unwrap();
+    let s2 = trainer.train_epoch("qat_int4", &corpus.pretrain, 1e-3).unwrap();
+    assert!(s1.mean_loss.is_finite());
+    assert!(
+        s2.mean_loss < s1.mean_loss,
+        "loss should fall: {} -> {}",
+        s1.mean_loss,
+        s2.mean_loss
+    );
+    // Frozen params (embedding) unchanged; quantized weights moved.
+    assert_eq!(trainer.params.tensors[0], before_emb, "emb frozen in QAT");
+    assert_ne!(trainer.params.tensors[quant_idx[0]], before_quant);
+}
+
+#[test]
+fn pretrain_updates_everything() {
+    let Some(dir) = arts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let arts = ArtifactSet::open(&dir).unwrap();
+    let corpus = small_corpus(arts.manifest.seq_len + 1);
+    let params = ParamSet::init(&arts.manifest, 2);
+    let before_emb = params.tensors[0].clone();
+    let mut trainer = Trainer::new(&rt, &arts, params);
+    let rows = &corpus.pretrain[..8];
+    let s = trainer.train_epoch("pretrain", rows, 1e-3).unwrap();
+    assert!(s.mean_loss.is_finite());
+    assert_ne!(trainer.params.tensors[0], before_emb, "emb trains in pretrain");
+}
+
+#[test]
+fn optimizer_state_persists_across_formats_in_a_schedule() {
+    let Some(dir) = arts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let arts = ArtifactSet::open(&dir).unwrap();
+    let corpus = small_corpus(arts.manifest.seq_len + 1);
+    let params = ParamSet::init(&arts.manifest, 3);
+    let mut trainer = Trainer::new(&rt, &arts, params);
+    let rows = &corpus.qat[..8];
+    trainer.train_epoch("qat_int2", rows, 1e-3).unwrap();
+    let step_after_first = trainer.step;
+    trainer.train_epoch("qat_int4", rows, 1e-3).unwrap();
+    // Same trainable set → the step counter keeps counting (no reset).
+    assert_eq!(trainer.step, step_after_first * 2);
+}
+
+#[test]
+fn anchor_checkpoint_to_elastic_scoring() {
+    let Some(dir) = arts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let arts = ArtifactSet::open(&dir).unwrap();
+    let corpus = small_corpus(arts.manifest.seq_len + 1);
+    let params = ParamSet::init(&arts.manifest, 4);
+
+    // Store anchor, reload through the engine, score at several formats.
+    let tmp = std::env::temp_dir().join("mfqat_e2e_anchor.mfq");
+    params
+        .to_anchor_checkpoint(&arts.manifest, ElementFormat::int(8))
+        .unwrap()
+        .save(&tmp)
+        .unwrap();
+    let ck = Checkpoint::load(&tmp).unwrap();
+    let engine = ElasticEngine::from_parts(rt, arts, ck, ElementFormat::int(8), 64 << 20);
+
+    let m = &engine.arts.manifest;
+    let mut batch = Vec::new();
+    for r in 0..m.train_batch {
+        batch.extend_from_slice(&corpus.val[r][..m.seq_len + 1]);
+    }
+    let nll8 = engine.score_b8(&batch, ElementFormat::int(8)).unwrap();
+    let nll4 = engine.score_b8(&batch, ElementFormat::int(4)).unwrap();
+    let nll2 = engine.score_b8(&batch, ElementFormat::int(2)).unwrap();
+    for row in [&nll8, &nll4, &nll2] {
+        assert_eq!(row.len(), m.train_batch);
+        assert!(row.iter().all(|x| x.is_finite() && *x > 0.0));
+    }
+    // Untrained model ≈ uniform everywhere; formats shouldn't explode it.
+    let uniform = (m.vocab as f32).ln();
+    assert!((nll8[0] - uniform).abs() < 1.5, "nll8 {} vs {}", nll8[0], uniform);
+
+    // Each distinct format = exactly one conversion; repeats are cache hits.
+    assert_eq!(engine.conversions(), 3);
+    engine.score_b8(&batch, ElementFormat::int(4)).unwrap();
+    assert_eq!(engine.conversions(), 3, "cache hit on repeat");
+    assert_eq!(engine.cached_formats(), 3);
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn generation_produces_valid_tokens() {
+    let Some(dir) = arts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let arts = ArtifactSet::open(&dir).unwrap();
+    let params = ParamSet::init(&arts.manifest, 6);
+    let lits = mfqat::eval::ParamLiterals::build(&params).unwrap();
+    let cfg = mfqat::eval::generate::SampleCfg {
+        temperature: 1.0,
+        top_k: 16,
+        seed: 9,
+    };
+    let out = mfqat::eval::generate::generate(&rt, &arts, &lits, "the color of", 24, &cfg)
+        .unwrap();
+    assert_eq!(out.chars().count(), 24, "one byte-token per step: {out:?}");
+    // Deterministic per seed.
+    let out2 = mfqat::eval::generate::generate(&rt, &arts, &lits, "the color of", 24, &cfg)
+        .unwrap();
+    assert_eq!(out, out2);
+    // Greedy differs from seeded sampling in general but is also stable.
+    let greedy_cfg = mfqat::eval::generate::SampleCfg {
+        temperature: 0.0,
+        top_k: 0,
+        seed: 1,
+    };
+    let g1 = mfqat::eval::generate::generate(&rt, &arts, &lits, "3 plus 4", 8, &greedy_cfg)
+        .unwrap();
+    let g2 = mfqat::eval::generate::generate(&rt, &arts, &lits, "3 plus 4", 8, &greedy_cfg)
+        .unwrap();
+    assert_eq!(g1, g2);
+}
+
+#[test]
+fn ss_training_variants_execute() {
+    let Some(dir) = arts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let arts = ArtifactSet::open(&dir).unwrap();
+    let corpus = small_corpus(arts.manifest.seq_len + 1);
+    let params = ParamSet::init(&arts.manifest, 5);
+    let mut trainer = Trainer::new(&rt, &arts, params);
+    let rows = &corpus.qat[..8];
+    // The §3.5 anchor-composition graphs run and produce finite losses.
+    let a = trainer.train_epoch("qat_ss_int4", rows, 1e-3).unwrap();
+    let b = trainer.train_epoch("qat_ss_fp4", rows, 1e-3).unwrap();
+    assert!(a.mean_loss.is_finite() && b.mean_loss.is_finite());
+}

@@ -1,0 +1,99 @@
+//! Rust ↔ Python bit-parity: the native MX implementation must reproduce the
+//! jnp oracle (`python/compile/kernels/ref.py`) **exactly** — same shared
+//! exponents, same RNE decisions, same saturation — on the golden vectors
+//! emitted by `make artifacts`.
+
+use mfqat::formats::{ElementFormat, MxFormat};
+use mfqat::tensor::MxTensor;
+use mfqat::util::json::Json;
+use std::path::PathBuf;
+
+fn golden() -> Option<Json> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden/quant_golden.json");
+    if !path.exists() {
+        eprintln!("skipping golden parity (run `make artifacts` first)");
+        return None;
+    }
+    Some(Json::parse_file(&path).unwrap())
+}
+
+#[test]
+fn fake_quantize_bitwise_matches_oracle() {
+    let Some(g) = golden() else { return };
+    let input: Vec<f32> = g.req("input").unwrap().f32_vec().unwrap();
+    let bs = g.req_usize("block_size").unwrap();
+    let fq = g.req("fq").unwrap().as_obj().unwrap();
+    assert_eq!(fq.len(), 12, "7 int + 5 fp formats");
+    for (name, want) in fq {
+        let fmt = ElementFormat::parse(name).unwrap();
+        let want: Vec<f32> = want.f32_vec().unwrap();
+        let t = MxTensor::quantize(&input, &[1, input.len()], MxFormat::new(fmt, bs)).unwrap();
+        let got = t.dequantize();
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits() || (a == b), // -0.0 vs 0.0 tolerated
+                "{name}[{i}]: rust {a} ({:#x}) vs oracle {b} ({:#x}), input {}",
+                a.to_bits(),
+                b.to_bits(),
+                input[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn slice_and_scale_bitwise_matches_oracle() {
+    let Some(g) = golden() else { return };
+    let input: Vec<f32> = g.req("input").unwrap().f32_vec().unwrap();
+    let bs = g.req_usize("block_size").unwrap();
+    let ss = g.req("ss").unwrap().as_obj().unwrap();
+    assert_eq!(ss.len(), 6 + 4, "int8→{{2..7}} and fp8→{{4..7}}");
+    for (key, want) in ss {
+        let (anchor_name, target_name) = key.split_once("->").unwrap();
+        let anchor = ElementFormat::parse(anchor_name).unwrap();
+        let target = ElementFormat::parse(target_name).unwrap();
+        let want: Vec<f32> = want.f32_vec().unwrap();
+        let a = MxTensor::quantize(&input, &[1, input.len()], MxFormat::new(anchor, bs)).unwrap();
+        let got = a.slice_and_scale(target).unwrap().dequantize();
+        for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits() || (x == y),
+                "{key}[{i}]: rust {x} vs oracle {y} (input {})",
+                input[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn code_plane_matches_oracle() {
+    let Some(g) = golden() else { return };
+    let input: Vec<f32> = g.req("input").unwrap().f32_vec().unwrap();
+    let bs = g.req_usize("block_size").unwrap();
+    let want_scales: Vec<i64> = g
+        .req("int8_scales")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap())
+        .collect();
+    let want_codes: Vec<i64> = g
+        .req("int8_codes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap())
+        .collect();
+    let t = MxTensor::quantize(
+        &input,
+        &[1, input.len()],
+        MxFormat::new(ElementFormat::int(8), bs),
+    )
+    .unwrap();
+    let scales: Vec<i64> = t.scales.iter().map(|&s| s as i64).collect();
+    assert_eq!(scales, want_scales, "shared exponents must match the oracle");
+    let codes: Vec<i64> = t.unpack_codes().iter().map(|&c| c as i64).collect();
+    assert_eq!(codes, want_codes, "element codes must match the oracle");
+}

@@ -1,0 +1,121 @@
+//! Runtime integration: load the AOT forward HLO on the PJRT CPU client and
+//! reproduce the jnp reference logits for the recorded fixture.
+
+use mfqat::model::ParamSet;
+use mfqat::runtime::{self, ArtifactSet, Runtime};
+use mfqat::tensor::Tensor;
+use mfqat::util::json::Json;
+use std::path::PathBuf;
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn load_fixture_params(arts: &ArtifactSet) -> Option<(ParamSet, Vec<i32>, Vec<f32>)> {
+    let gdir = root().join("artifacts/golden");
+    let fix_path = gdir.join("forward_tiny.json");
+    if !fix_path.exists() {
+        eprintln!("skipping (run `make artifacts`)");
+        return None;
+    }
+    let fix = Json::parse_file(&fix_path).unwrap();
+    let tokens: Vec<i32> = fix
+        .req("tokens")
+        .unwrap()
+        .usize_vec()
+        .unwrap()
+        .into_iter()
+        .map(|x| x as i32)
+        .collect();
+    let logits_prefix = fix.req("logits_prefix").unwrap().f32_vec().unwrap();
+    // Raw f32 params in manifest order.
+    let bytes = std::fs::read(gdir.join("params_tiny.bin")).unwrap();
+    let mut offset = 0usize;
+    let mut tensors = Vec::new();
+    for p in &arts.manifest.params {
+        let n = p.numel();
+        let data: Vec<f32> = bytes[offset..offset + 4 * n]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        offset += 4 * n;
+        tensors.push(Tensor::new(&p.shape, data).unwrap());
+    }
+    assert_eq!(offset, bytes.len(), "fixture param payload fully consumed");
+    Some((ParamSet { tensors }, tokens, logits_prefix))
+}
+
+#[test]
+fn forward_b1_matches_jnp_reference() {
+    let arts_dir = root().join("artifacts/tiny");
+    if !arts_dir.join("manifest.json").exists() {
+        eprintln!("skipping (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let arts = ArtifactSet::open(&arts_dir).unwrap();
+    let Some((params, tokens, want_prefix)) = load_fixture_params(&arts) else {
+        return;
+    };
+
+    let exe = arts.executable(&rt, "forward_b1").unwrap();
+    let tok_lit = runtime::i32_literal(&tokens, &[1, arts.manifest.seq_len]).unwrap();
+    let mut args: Vec<xla::Literal> = vec![tok_lit];
+    for t in &params.tensors {
+        args.push(runtime::tensor_literal(t).unwrap());
+    }
+    let out = exe.run(&args).unwrap();
+    assert_eq!(out.len(), 1, "forward returns (logits,)");
+    let logits = out[0].to_vec::<f32>().unwrap();
+    assert_eq!(
+        logits.len(),
+        arts.manifest.seq_len * arts.manifest.vocab,
+        "logits shape [1, T, V]"
+    );
+
+    // First 4 positions recorded by the fixture; tolerance covers XLA CPU
+    // fusion reordering between the python jit and our AOT compile.
+    let v = arts.manifest.vocab;
+    for (i, want) in want_prefix.iter().enumerate() {
+        let got = logits[i];
+        assert!(
+            (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+            "logit[{}/{}]: got {got}, want {want}",
+            i / v,
+            i % v
+        );
+    }
+}
+
+#[test]
+fn nll_b8_is_finite_and_reasonable() {
+    let arts_dir = root().join("artifacts/tiny");
+    if !arts_dir.join("manifest.json").exists() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let arts = ArtifactSet::open(&arts_dir).unwrap();
+    let Some((params, _, _)) = load_fixture_params(&arts) else {
+        return;
+    };
+    let m = &arts.manifest;
+    let exe = arts.executable(&rt, "nll_b8").unwrap();
+    // Random tokens → NLL should be near ln(vocab) for an untrained model.
+    let mut rng = mfqat::util::Rng::new(0);
+    let tokens: Vec<i32> = (0..m.train_batch * (m.seq_len + 1))
+        .map(|_| rng.below(m.vocab) as i32)
+        .collect();
+    let tok_lit = runtime::i32_literal(&tokens, &[m.train_batch, m.seq_len + 1]).unwrap();
+    let mut args: Vec<xla::Literal> = vec![tok_lit];
+    for t in &params.tensors {
+        args.push(runtime::tensor_literal(t).unwrap());
+    }
+    let out = exe.run(&args).unwrap();
+    let nll = runtime::literal_f32(&out[0]).unwrap();
+    let uniform = (m.vocab as f32).ln(); // ≈ 5.545
+    assert!(
+        (nll - uniform).abs() < 1.0,
+        "untrained NLL {nll} should be near ln({}) = {uniform}",
+        m.vocab
+    );
+}

@@ -1,0 +1,149 @@
+//! Elastic server integration: batching, policy-driven format selection,
+//! pinned formats, metrics, and graceful shutdown.
+
+use mfqat::coordinator::ElasticEngine;
+use mfqat::data::{Corpus, CorpusConfig};
+use mfqat::formats::ElementFormat;
+use mfqat::model::ParamSet;
+use mfqat::runtime::{ArtifactSet, Runtime};
+use mfqat::server::{Policy, Server, ServerConfig};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn arts_dir() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping (run `make artifacts`)");
+        None
+    }
+}
+
+fn start_server(dir: PathBuf, policy: Policy) -> (Server, mfqat::server::Client, usize) {
+    // Build the engine inside the worker (PJRT handles are not Send).
+    let manifest = mfqat::runtime::Manifest::load(&dir).unwrap();
+    let width = manifest.seq_len + 1;
+    let (server, client) = Server::start(
+        width,
+        move || {
+            let rt = Runtime::cpu()?;
+            let arts = ArtifactSet::open(&dir)?;
+            let params = ParamSet::init(&arts.manifest, 11);
+            let ck = params.to_anchor_checkpoint(&arts.manifest, ElementFormat::int(8))?;
+            Ok(ElasticEngine::from_parts(
+                rt,
+                arts,
+                ck,
+                ElementFormat::int(8),
+                64 << 20,
+            ))
+        },
+        ServerConfig {
+            policy,
+            gather_window: Duration::from_millis(1),
+        },
+    )
+    .unwrap();
+    (server, client, width)
+}
+
+#[test]
+fn requests_are_scored_and_batched() {
+    let Some(dir) = arts_dir() else { return };
+    let corpus = Corpus::generate(CorpusConfig {
+        seed: 9,
+        width: 129,
+        pretrain_sequences: 8,
+        qat_sequences: 8,
+        val_sequences: 16,
+    });
+    let (server, client, _) = start_server(dir, Policy::Fixed(ElementFormat::int(8)));
+
+    // Fire a burst; all must come back finite with the fixed format.
+    let rxs: Vec<_> = (0..16)
+        .map(|i| client.submit(&corpus.val[i % corpus.val.len()], None).unwrap())
+        .collect();
+    let mut max_batch = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(resp.nll.is_finite() && resp.nll > 0.0);
+        assert_eq!(resp.format, ElementFormat::int(8));
+        max_batch = max_batch.max(resp.batch_size);
+    }
+    assert!(max_batch > 1, "burst must be batched (got {max_batch})");
+    let m = server.metrics.lock().unwrap().clone();
+    assert_eq!(m.requests, 16);
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn pinned_format_wins_over_policy() {
+    let Some(dir) = arts_dir() else { return };
+    let corpus = Corpus::generate(CorpusConfig {
+        seed: 10,
+        width: 129,
+        pretrain_sequences: 8,
+        qat_sequences: 8,
+        val_sequences: 8,
+    });
+    let (server, client, _) = start_server(dir, Policy::Fixed(ElementFormat::int(8)));
+    let resp = client
+        .score(&corpus.val[0], Some(ElementFormat::int(3)))
+        .unwrap();
+    assert_eq!(resp.format, ElementFormat::int(3), "pin honoured");
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn ladder_policy_degrades_under_load() {
+    let Some(dir) = arts_dir() else { return };
+    let corpus = Corpus::generate(CorpusConfig {
+        seed: 11,
+        width: 129,
+        pretrain_sequences: 8,
+        qat_sequences: 8,
+        val_sequences: 64,
+    });
+    // Aggressive ladder so a modest burst crosses thresholds.
+    let ladder = Policy::Ladder(vec![
+        (2, ElementFormat::int(8)),
+        (10, ElementFormat::int(6)),
+        (usize::MAX, ElementFormat::int(4)),
+    ]);
+    let (server, client, _) = start_server(dir, ladder);
+
+    // Single request under no load → highest precision.
+    let solo = client.score(&corpus.val[0], None).unwrap();
+    assert_eq!(solo.format, ElementFormat::int(8));
+
+    // Big burst → later batches must see depth > 10 and degrade.
+    let rxs: Vec<_> = (0..48)
+        .map(|i| client.submit(&corpus.val[i % corpus.val.len()], None).unwrap())
+        .collect();
+    let mut formats = std::collections::BTreeSet::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        formats.insert(resp.format.bits());
+    }
+    assert!(
+        formats.iter().any(|&b| b < 8),
+        "burst must trigger lower precisions, saw {formats:?}"
+    );
+    let metrics = server.metrics.lock().unwrap().clone();
+    assert!(metrics.conversions >= formats.len() as u64);
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_rejects_new_requests() {
+    let Some(dir) = arts_dir() else { return };
+    let (server, client, width) = start_server(dir, Policy::Fixed(ElementFormat::int(8)));
+    let tokens = vec![65i32; width];
+    client.score(&tokens, None).unwrap();
+    server.shutdown();
+    assert!(client.score(&tokens, None).is_err(), "post-shutdown submit fails");
+}
