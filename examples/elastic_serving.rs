@@ -6,23 +6,22 @@
 //! spikes; the report shows the precision ladder engaging during spikes and
 //! the latency/throughput profile per phase.
 //!
+//! Serves through the native packed-MX backend: no AOT artifacts and no
+//! XLA install required.
+//!
 //! Run: `cargo run --release --example elastic_serving`
 
 use mfqat::coordinator::ElasticEngine;
 use mfqat::data::{Corpus, CorpusConfig};
 use mfqat::formats::ElementFormat;
-use mfqat::model::ParamSet;
-use mfqat::runtime::{ArtifactSet, Runtime};
+use mfqat::model::{ModelDims, ParamSet};
 use mfqat::server::{Policy, Server, ServerConfig};
-use std::path::PathBuf;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     mfqat::util::logging::init();
-    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
-    let arts_dir = root.join("artifacts/tiny");
-    let manifest = mfqat::runtime::Manifest::load(&arts_dir)?;
-    let width = manifest.seq_len + 1;
+    let dims = ModelDims::by_name("tiny").unwrap();
+    let width = dims.seq_len + 1;
 
     // Aggressive ladder so the tiny demo visibly degrades under bursts.
     let ladder = Policy::Ladder(vec![
@@ -33,11 +32,10 @@ fn main() -> anyhow::Result<()> {
     let (server, client) = Server::start(
         width,
         move || {
-            let rt = Runtime::cpu()?;
-            let arts = ArtifactSet::open(&arts_dir)?;
-            let params = ParamSet::init(&arts.manifest, 7);
-            let ck = params.to_anchor_checkpoint(&arts.manifest, ElementFormat::int(8))?;
-            Ok(ElasticEngine::from_parts(rt, arts, ck, ElementFormat::int(8), 128 << 20))
+            let manifest = dims.to_manifest();
+            let params = ParamSet::init(&manifest, 7);
+            let ck = params.to_anchor_checkpoint(&manifest, ElementFormat::int(8))?;
+            ElasticEngine::native(dims, ck, 128 << 20)
         },
         ServerConfig {
             policy: ladder,
@@ -94,7 +92,7 @@ fn main() -> anyhow::Result<()> {
 
     let metrics = server.metrics.lock().unwrap().clone();
     println!("\nserver totals: {}", metrics.summary());
-    println!("anchor→target conversions: {} (cache does the rest)", metrics.conversions);
+    println!("anchor→target conversions: {} (cache does the rest)", metrics.conversions());
     drop(client);
     server.shutdown();
     Ok(())

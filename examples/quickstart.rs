@@ -1,25 +1,24 @@
 //! Quickstart: the elastic-inference workflow in ~60 lines.
 //!
-//! 1. Load the AOT artifacts (built once by `make artifacts`).
-//! 2. Build a model, store it as ONE MXINT8 anchor checkpoint.
-//! 3. Derive MXINT{6,4,3,2} serving weights at runtime via Slice-and-Scale —
-//!    no FP32 weights, no retraining — and score a batch at each precision.
+//! 1. Build a model, store it as ONE MXINT8 anchor checkpoint.
+//! 2. Derive MXINT{6,4,3,2} *packed* serving weights at runtime via
+//!    Slice-and-Scale — no FP32 weights, no retraining — and score a batch
+//!    at each precision through the native packed-MX backend.
+//!
+//! No AOT artifacts and no XLA install required: the native backend
+//! computes directly on packed element codes with fused block scales.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use mfqat::coordinator::ElasticEngine;
 use mfqat::data::{Corpus, CorpusConfig};
 use mfqat::formats::ElementFormat;
-use mfqat::model::ParamSet;
-use mfqat::runtime::{ArtifactSet, Runtime};
-use std::path::PathBuf;
+use mfqat::model::{ModelDims, ParamSet};
 
 fn main() -> anyhow::Result<()> {
     mfqat::util::logging::init();
-    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
-    let rt = Runtime::cpu()?;
-    let arts = ArtifactSet::open(&root.join("artifacts/tiny"))?;
-    let m = arts.manifest.clone();
+    let dims = ModelDims::by_name("tiny").unwrap();
+    let m = dims.to_manifest();
     println!(
         "model '{}': {} params, seq {}, MX block {}",
         m.config_name, m.n_params, m.seq_len, m.block_size
@@ -35,18 +34,18 @@ fn main() -> anyhow::Result<()> {
     let anchor_mb = ck.storage_bytes() as f64 / 1e6;
     println!("anchor checkpoint: {anchor_mb:.2} MB (fp32 would be {fp32_mb:.2} MB)");
 
-    let engine = ElasticEngine::from_parts(rt, arts, ck, ElementFormat::int(8), 128 << 20);
+    let engine = ElasticEngine::native(dims.clone(), ck, 128 << 20)?;
 
     // A batch of real corpus text to score.
     let corpus = Corpus::generate(CorpusConfig {
-        width: m.seq_len + 1,
+        width: dims.seq_len + 1,
         pretrain_sequences: 8,
         qat_sequences: 8,
         val_sequences: 8,
         ..Default::default()
     });
     let mut batch = Vec::new();
-    for r in 0..m.train_batch {
+    for r in 0..dims.train_batch {
         batch.extend_from_slice(&corpus.val[r]);
     }
 
@@ -55,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     for bits in [8u8, 6, 4, 3, 2] {
         let fmt = ElementFormat::int(bits);
         let t = std::time::Instant::now();
-        let nll = engine.score_b8(&batch, fmt)?;
+        let nll = engine.score_batch(&batch, fmt)?;
         let mean: f32 = nll.iter().sum::<f32>() / nll.len() as f32;
         println!(
             "{:<12} {:>10.4} {:>11.1} ms",
@@ -65,9 +64,10 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!(
-        "\nconversions performed: {} (then cached: {} formats resident)",
+        "\nconversions performed: {} (then cached: {} packed formats resident, {} KB)",
         engine.conversions(),
-        engine.cached_formats()
+        engine.cached_formats(),
+        engine.cache_stats().used_bytes / 1024
     );
     Ok(())
 }

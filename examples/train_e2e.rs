@@ -112,7 +112,7 @@ fn main() -> anyhow::Result<()> {
     for r in 0..m.train_batch {
         batch.extend_from_slice(&corpus.val[r]);
     }
-    let nll = engine.score_b8(&batch, ElementFormat::int(4))?;
+    let nll = engine.score_batch(&batch, ElementFormat::int(4))?;
     println!("engine MXINT4 batch NLL: {:?}", &nll[..3.min(nll.len())]);
     Ok(())
 }

@@ -1,0 +1,103 @@
+//! Native backend benchmarks — the packed-MX execution story, end to end.
+//!
+//! Three sections:
+//!   gemm/<fmt>           raw blockwise packed GEMM throughput per format,
+//!                        against the dequantized dense-f32 baseline
+//!   score/<fmt>          full decoder scoring batches through the
+//!                        NativeBackend per serving format (warm cache) —
+//!                        lower-bit formats stream less weight memory and
+//!                        must not be slower than 8-bit
+//!   derive/<fmt>         format-switch cost: anchor → packed target
+//!                        (Slice-and-Scale + repack), cold
+//!
+//! Runs with no AOT artifacts and no XLA. Pin `MFQAT_THREADS=1` for
+//! stable single-core numbers.
+
+use mfqat::backend::{kernels, NativeWeights};
+use mfqat::coordinator::ElasticEngine;
+use mfqat::formats::{ElementFormat, MxFormat};
+use mfqat::model::{ModelDims, ParamSet};
+use mfqat::tensor::MxTensor;
+use mfqat::util::timer::bench;
+use mfqat::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    // ---------------------------------------------------------- raw GEMM
+    let (rows, in_f, out_f) = (256usize, 512usize, 512usize);
+    let x: Vec<f32> = (0..rows * in_f).map(|_| rng.normal()).collect();
+    let wdata: Vec<f32> = (0..in_f * out_f).map(|_| rng.normal()).collect();
+    let flops = (rows * in_f * out_f) as f64;
+    println!("== packed GEMM [{rows}x{in_f}] @ [{in_f}x{out_f}] per format ==");
+    let mut y = vec![0.0f32; rows * out_f];
+    let r = bench("gemm/dense-f32(baseline)", 8, 0.5, || {
+        kernels::gemm_dense(&x, rows, &wdata, in_f, out_f, &mut y);
+        std::hint::black_box(&y);
+    });
+    println!("{}", r.report(flops, "mac"));
+    for fmt in [
+        ElementFormat::int(8),
+        ElementFormat::int(6),
+        ElementFormat::int(4),
+        ElementFormat::int(2),
+        ElementFormat::fp_from_bits(8),
+        ElementFormat::fp_from_bits(6),
+        ElementFormat::fp_from_bits(4),
+    ] {
+        let w = MxTensor::quantize(&wdata, &[in_f, out_f], MxFormat::new(fmt, 32)).unwrap();
+        let r = bench(&format!("gemm/{}", fmt.name()), 8, 0.5, || {
+            kernels::gemm_packed(&x, rows, &w, &mut y);
+            std::hint::black_box(&y);
+        });
+        println!("{}", r.report(flops, "mac"));
+    }
+
+    // ------------------------------------------------- end-to-end scoring
+    let dims = ModelDims::by_name("tiny").unwrap();
+    let manifest = dims.to_manifest();
+    let params = ParamSet::init(&manifest, 3);
+    let tokens_per_batch = (dims.train_batch * dims.seq_len) as f64;
+    let batch: Vec<i32> = (0..dims.train_batch * (dims.seq_len + 1))
+        .map(|i| ((i * 31 + 7) % dims.vocab) as i32)
+        .collect();
+
+    for (anchor, bits_list) in [
+        (ElementFormat::int(8), [8u8, 6, 4, 2]),
+        (ElementFormat::fp_from_bits(8), [8u8, 7, 6, 4]),
+    ] {
+        let ck = params.to_anchor_checkpoint(&manifest, anchor).unwrap();
+        let engine = ElasticEngine::native(dims.clone(), ck, 256 << 20).unwrap();
+        println!(
+            "\n== native scoring, anchor {} (batch = {}) ==",
+            anchor.long_name(),
+            dims.train_batch
+        );
+        for bits in bits_list {
+            let fmt = match anchor {
+                ElementFormat::Int { .. } => ElementFormat::int(bits),
+                ElementFormat::Fp { .. } => ElementFormat::fp_from_bits(bits),
+            };
+            engine.score_batch(&batch, fmt).unwrap(); // warm the format cache
+            let r = bench(&format!("score/{}", fmt.name()), 6, 0.8, || {
+                std::hint::black_box(engine.score_batch(&batch, fmt).unwrap());
+            });
+            println!("{}", r.report(tokens_per_batch, "tok"));
+        }
+    }
+
+    // ---------------------------------------------- format-switch (cold)
+    println!("\n== format-switch cost: anchor -> packed target, cold ==");
+    let ck = params
+        .to_anchor_checkpoint(&manifest, ElementFormat::int(8))
+        .unwrap();
+    for bits in [6u8, 4, 3, 2] {
+        let fmt = ElementFormat::int(bits);
+        let r = bench(&format!("derive/int{bits}"), 4, 0.4, || {
+            std::hint::black_box(
+                NativeWeights::packed_from_checkpoint(&dims, &ck, fmt).unwrap(),
+            );
+        });
+        println!("{}", r.report(manifest.n_params as f64, "param"));
+    }
+}

@@ -27,7 +27,7 @@ fn main() {
     let ck = params
         .to_anchor_checkpoint(&m, ElementFormat::int(8))
         .unwrap();
-    let engine = ElasticEngine::from_parts(rt, arts, ck, ElementFormat::int(8), 256 << 20);
+    let engine = ElasticEngine::from_parts(rt, arts, ck.clone(), ElementFormat::int(8), 256 << 20);
 
     let corpus = Corpus::generate(CorpusConfig {
         width: m.seq_len + 1,
@@ -45,9 +45,9 @@ fn main() {
     println!("== steady-state batch scoring per format (batch = {}) ==", m.train_batch);
     for bits in [8u8, 6, 4, 2] {
         let fmt = ElementFormat::int(bits);
-        engine.score_b8(&batch, fmt).unwrap(); // warm the format cache
-        let r = bench(&format!("score_b8/int{bits}"), 6, 0.8, || {
-            std::hint::black_box(engine.score_b8(&batch, fmt).unwrap());
+        engine.score_batch(&batch, fmt).unwrap(); // warm the format cache
+        let r = bench(&format!("score_batch/int{bits}"), 6, 0.8, || {
+            std::hint::black_box(engine.score_batch(&batch, fmt).unwrap());
         });
         println!("{}", r.report(tokens_per_batch, "tok"));
     }
@@ -60,8 +60,7 @@ fn main() {
         // possible with a large cache, so measure the cold path directly).
         let t = std::time::Instant::now();
         let w = {
-            let p = ParamSet::from_checkpoint(&engine.arts.manifest, &engine.anchor, Some(fmt))
-                .unwrap();
+            let p = ParamSet::from_checkpoint(&m, &ck, Some(fmt)).unwrap();
             mfqat::eval::ParamLiterals::build(&p).unwrap()
         };
         std::hint::black_box(&w);
@@ -74,7 +73,7 @@ fn main() {
 
     println!("\n== batched vs single-row execution (batching win) ==");
     let r8 = bench("forward/batch8", 6, 0.8, || {
-        std::hint::black_box(engine.score_b8(&batch, ElementFormat::int(8)).unwrap());
+        std::hint::black_box(engine.score_batch(&batch, ElementFormat::int(8)).unwrap());
     });
     println!("{}", r8.report(m.train_batch as f64, "seq"));
     // One row padded to a full batch: per-sequence cost without batching.
@@ -85,7 +84,7 @@ fn main() {
         one[r * w..(r + 1) * w].copy_from_slice(&src);
     }
     let r1 = bench("forward/batch1(padded)", 6, 0.8, || {
-        std::hint::black_box(engine.score_b8(&one, ElementFormat::int(8)).unwrap());
+        std::hint::black_box(engine.score_batch(&one, ElementFormat::int(8)).unwrap());
     });
     println!("{}", r1.report(1.0, "seq"));
     println!(

@@ -1,0 +1,431 @@
+//! Native decoder forward pass over packed MX weights.
+//!
+//! Mirrors the python reference model (`python/compile/model.py::forward`):
+//! token + learned positional embeddings → `n_layers` × (RMSNorm → causal
+//! attention → RMSNorm → GELU MLP, both with residuals) → final RMSNorm →
+//! LM head. Decoder-stack linears (`qkv`/`proj`/`up`/`down`) are served
+//! straight from their packed microscaling form ([`Mat::Packed`] →
+//! [`super::kernels::gemm_packed`]); embeddings, norms and the head stay f32
+//! exactly as the paper leaves them unquantized.
+//!
+//! [`Mat::Dense`] is the dequantize-then-f32-matmul oracle — the same
+//! forward over materialized f32 weights — used by parity tests and as the
+//! `fp32` reference row in native evaluation.
+
+use super::kernels;
+use crate::checkpoint::Checkpoint;
+use crate::formats::{ElementFormat, MxFormat};
+use crate::model::ModelDims;
+use crate::tensor::MxTensor;
+use anyhow::{anyhow, bail, Result};
+
+/// A weight matrix as the native kernels consume it.
+#[derive(Debug, Clone)]
+pub enum Mat {
+    /// Packed microscaling weights (codes + per-block scales, never
+    /// expanded to f32).
+    Packed(MxTensor),
+    /// Dense f32 `[in_features, out_features]` (oracle path / unquantized
+    /// parameters).
+    Dense {
+        data: Vec<f32>,
+        in_f: usize,
+        out_f: usize,
+    },
+}
+
+impl Mat {
+    pub fn in_features(&self) -> usize {
+        match self {
+            Mat::Packed(t) => t.shape[0],
+            Mat::Dense { in_f, .. } => *in_f,
+        }
+    }
+
+    pub fn out_features(&self) -> usize {
+        match self {
+            Mat::Packed(t) => t.shape[1],
+            Mat::Dense { out_f, .. } => *out_f,
+        }
+    }
+
+    /// Resident bytes (packed codes + scales, or f32 payload).
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            Mat::Packed(t) => t.storage_bytes(),
+            Mat::Dense { data, .. } => data.len() * 4,
+        }
+    }
+
+    /// `y[r, :] = x[r, :] @ W`.
+    pub fn gemm(&self, x: &[f32], rows: usize, y: &mut [f32]) {
+        match self {
+            Mat::Packed(t) => kernels::gemm_packed(x, rows, t, y),
+            Mat::Dense { data, in_f, out_f } => {
+                kernels::gemm_dense(x, rows, data, *in_f, *out_f, y)
+            }
+        }
+    }
+}
+
+/// One decoder layer's parameters.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub ln1: Vec<f32>,
+    pub qkv: Mat,
+    pub proj: Mat,
+    pub ln2: Vec<f32>,
+    pub up: Mat,
+    pub down: Mat,
+}
+
+/// A full serving weight set for one element format.
+///
+/// Note: the unquantized f32 parameters (`emb`/`pos`/norms/`head`) are
+/// owned per weight set, so each cached format currently duplicates them;
+/// `Arc`-sharing them across `FormatCache` entries is a known follow-up
+/// (see ROADMAP open items).
+#[derive(Debug, Clone)]
+pub struct NativeWeights {
+    pub dims: ModelDims,
+    /// Element format of the quantized linears (`None` = dense f32 oracle).
+    pub fmt: Option<ElementFormat>,
+    pub emb: Vec<f32>,
+    pub pos: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    pub lnf: Vec<f32>,
+    pub head: Mat,
+}
+
+/// Convert a stored MX tensor to the target element format: Slice-and-Scale
+/// when the target is a lower-precision member of the same family (the
+/// paper's runtime conversion, §3.5), otherwise requantize from the
+/// dequantized anchor values (cross-family or up-precision targets).
+/// Applicability is decided up front so genuine SS failures propagate
+/// instead of silently switching numerics path.
+fn derive_packed(src: &MxTensor, target: ElementFormat) -> Result<MxTensor> {
+    if src.format.elem == target {
+        return Ok(src.clone());
+    }
+    let ss_applicable = match (src.format.elem, target) {
+        (ElementFormat::Int { bits: bh }, ElementFormat::Int { bits: bl }) => bl <= bh,
+        (ElementFormat::Fp { .. }, ElementFormat::Fp { .. }) => {
+            let sh = src.format.elem.fp_spec().unwrap();
+            let sl = target.fp_spec().unwrap();
+            sl.emax() < sh.emax() || (sl.emax() == sh.emax() && sl.m <= sh.m)
+        }
+        _ => false,
+    };
+    if ss_applicable {
+        src.slice_and_scale(target)
+    } else {
+        log::debug!(
+            "{} -> {} is outside Slice-and-Scale support; requantizing from dequantized values",
+            src.format.elem,
+            target
+        );
+        MxTensor::quantize(
+            &src.dequantize(),
+            &src.shape,
+            MxFormat::new(target, src.format.block_size),
+        )
+    }
+}
+
+/// Fetch a raw f32 parameter of exactly `want` elements.
+fn fetch_raw(ck: &Checkpoint, name: &str, want: &[usize]) -> Result<Vec<f32>> {
+    let t = ck
+        .get_raw(name)
+        .ok_or_else(|| anyhow!("checkpoint missing raw parameter '{name}'"))?;
+    if t.shape != want {
+        bail!("'{name}': checkpoint shape {:?} != expected {:?}", t.shape, want);
+    }
+    Ok(t.data.clone())
+}
+
+/// Fetch a quantized linear as a packed tensor at `target` precision.
+/// Stored-MX entries ride Slice-and-Scale; raw f32 entries are PTQ'd
+/// directly (master checkpoints).
+fn fetch_packed(
+    ck: &Checkpoint,
+    name: &str,
+    want: &[usize],
+    target: ElementFormat,
+    block_size: usize,
+) -> Result<MxTensor> {
+    if let Some(q) = ck.get(name) {
+        if q.shape != want {
+            bail!("'{name}': checkpoint shape {:?} != expected {:?}", q.shape, want);
+        }
+        return derive_packed(q, target);
+    }
+    if let Some(t) = ck.get_raw(name) {
+        if t.shape != want {
+            bail!("'{name}': checkpoint shape {:?} != expected {:?}", t.shape, want);
+        }
+        return MxTensor::quantize(&t.data, &t.shape, MxFormat::new(target, block_size));
+    }
+    bail!("checkpoint missing quantized parameter '{name}'")
+}
+
+/// Fetch a quantized linear as dense f32 at `target` precision (`None` ⇒
+/// dequantize whatever is stored / keep raw f32 as-is). This is the
+/// dequantize-then-matmul oracle path.
+fn fetch_dense(
+    ck: &Checkpoint,
+    name: &str,
+    want: &[usize],
+    target: Option<ElementFormat>,
+    block_size: usize,
+) -> Result<Vec<f32>> {
+    match target {
+        Some(fmt) => Ok(fetch_packed(ck, name, want, fmt, block_size)?.dequantize()),
+        None => {
+            if let Some(q) = ck.get(name) {
+                if q.shape != want {
+                    bail!("'{name}': checkpoint shape {:?} != expected {:?}", q.shape, want);
+                }
+                Ok(q.dequantize())
+            } else {
+                fetch_raw(ck, name, want)
+            }
+        }
+    }
+}
+
+impl NativeWeights {
+    /// Build the packed serving weight set at `target` precision.
+    pub fn packed_from_checkpoint(
+        dims: &ModelDims,
+        ck: &Checkpoint,
+        target: ElementFormat,
+    ) -> Result<NativeWeights> {
+        Self::build(dims, ck, Some(target), true)
+    }
+
+    /// Build the dense-f32 oracle weight set (`target = None` dequantizes
+    /// whatever precision the checkpoint stores).
+    pub fn dense_from_checkpoint(
+        dims: &ModelDims,
+        ck: &Checkpoint,
+        target: Option<ElementFormat>,
+    ) -> Result<NativeWeights> {
+        Self::build(dims, ck, target, false)
+    }
+
+    fn build(
+        dims: &ModelDims,
+        ck: &Checkpoint,
+        target: Option<ElementFormat>,
+        packed: bool,
+    ) -> Result<NativeWeights> {
+        let d = dims.d_model;
+        let bs = dims.block_size;
+        let mat = |name: &str, in_f: usize, out_f: usize| -> Result<Mat> {
+            let want = [in_f, out_f];
+            if packed {
+                let fmt = target.expect("packed build requires a target format");
+                Ok(Mat::Packed(fetch_packed(ck, name, &want, fmt, bs)?))
+            } else {
+                Ok(Mat::Dense {
+                    data: fetch_dense(ck, name, &want, target, bs)?,
+                    in_f,
+                    out_f,
+                })
+            }
+        };
+        let mut layers = Vec::with_capacity(dims.n_layers);
+        for i in 0..dims.n_layers {
+            layers.push(LayerWeights {
+                ln1: fetch_raw(ck, &format!("l{i}.ln1"), &[d])?,
+                qkv: mat(&format!("l{i}.qkv"), d, 3 * d)?,
+                proj: mat(&format!("l{i}.proj"), d, d)?,
+                ln2: fetch_raw(ck, &format!("l{i}.ln2"), &[d])?,
+                up: mat(&format!("l{i}.up"), d, dims.d_ff)?,
+                down: mat(&format!("l{i}.down"), dims.d_ff, d)?,
+            });
+        }
+        Ok(NativeWeights {
+            dims: dims.clone(),
+            fmt: if packed { target } else { None },
+            emb: fetch_raw(ck, "emb", &[dims.vocab, d])?,
+            pos: fetch_raw(ck, "pos", &[dims.seq_len, d])?,
+            layers,
+            lnf: fetch_raw(ck, "lnf", &[d])?,
+            head: Mat::Dense {
+                data: fetch_raw(ck, "head", &[d, dims.vocab])?,
+                in_f: d,
+                out_f: dims.vocab,
+            },
+        })
+    }
+
+    /// Resident bytes of this weight set (cache accounting).
+    pub fn storage_bytes(&self) -> usize {
+        let mut total = (self.emb.len() + self.pos.len() + self.lnf.len()) * 4;
+        total += self.head.storage_bytes();
+        for l in &self.layers {
+            total += (l.ln1.len() + l.ln2.len()) * 4;
+            total += l.qkv.storage_bytes()
+                + l.proj.storage_bytes()
+                + l.up.storage_bytes()
+                + l.down.storage_bytes();
+        }
+        total
+    }
+}
+
+/// Full forward pass: `tokens` is `rows` sequences of `tokens.len() / rows`
+/// positions each; returns flat logits `[rows, t, vocab]`.
+pub fn forward_logits(w: &NativeWeights, tokens: &[i32], rows: usize) -> Result<Vec<f32>> {
+    let dims = &w.dims;
+    if rows == 0 || tokens.len() % rows != 0 {
+        bail!("tokens ({}) must split into {rows} equal rows", tokens.len());
+    }
+    let t = tokens.len() / rows;
+    if t == 0 || t > dims.seq_len {
+        bail!("sequence length {t} out of range 1..={}", dims.seq_len);
+    }
+    let d = dims.d_model;
+    let n = rows * t;
+
+    // Token + positional embeddings.
+    let mut x = vec![0.0f32; n * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        if tok < 0 || tok as usize >= dims.vocab {
+            bail!("token {tok} out of vocab range 0..{}", dims.vocab);
+        }
+        let er = &w.emb[tok as usize * d..(tok as usize + 1) * d];
+        let pr = &w.pos[(i % t) * d..(i % t + 1) * d];
+        let xr = &mut x[i * d..(i + 1) * d];
+        for j in 0..d {
+            xr[j] = er[j] + pr[j];
+        }
+    }
+
+    let mut xn = vec![0.0f32; n * d];
+    let mut qkv = vec![0.0f32; n * 3 * d];
+    let mut att = vec![0.0f32; n * d];
+    let mut delta = vec![0.0f32; n * d];
+    let mut hidden = vec![0.0f32; n * dims.d_ff];
+    for layer in &w.layers {
+        kernels::rmsnorm(&x, &layer.ln1, &mut xn);
+        layer.qkv.gemm(&xn, n, &mut qkv);
+        kernels::causal_attention(&qkv, rows, t, dims.n_heads, d, &mut att);
+        layer.proj.gemm(&att, n, &mut delta);
+        kernels::add_assign(&mut x, &delta);
+        kernels::rmsnorm(&x, &layer.ln2, &mut xn);
+        layer.up.gemm(&xn, n, &mut hidden);
+        kernels::gelu_in_place(&mut hidden);
+        layer.down.gemm(&hidden, n, &mut delta);
+        kernels::add_assign(&mut x, &delta);
+    }
+    kernels::rmsnorm(&x, &w.lnf, &mut xn);
+    let mut logits = vec![0.0f32; n * dims.vocab];
+    w.head.gemm(&xn, n, &mut logits);
+    Ok(logits)
+}
+
+/// Per-row mean next-token NLL for `rows` token windows of width
+/// `tokens.len() / rows` (inputs are positions `..width-1`, targets the
+/// shift by one) — the native equivalent of the AOT `nll_b8` graph.
+pub fn score_rows(w: &NativeWeights, tokens: &[i32], rows: usize) -> Result<Vec<f32>> {
+    if rows == 0 || tokens.len() % rows != 0 {
+        bail!("tokens ({}) must split into {rows} equal rows", tokens.len());
+    }
+    let width = tokens.len() / rows;
+    if width < 2 {
+        bail!("scoring wants windows of at least 2 tokens, got {width}");
+    }
+    let t = width - 1;
+    let mut inputs = Vec::with_capacity(rows * t);
+    for r in 0..rows {
+        inputs.extend_from_slice(&tokens[r * width..r * width + t]);
+    }
+    let logits = forward_logits(w, &inputs, rows)?;
+    crate::eval::nll_from_logits(&logits, tokens, rows, width, w.dims.vocab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamSet;
+
+    fn tiny_dims() -> ModelDims {
+        let mut d = ModelDims::new("unit", 64, 32, 2, 2, 16);
+        d.train_batch = 2;
+        d
+    }
+
+    fn anchor_ck(dims: &ModelDims, seed: u64, anchor: ElementFormat) -> Checkpoint {
+        let m = dims.to_manifest();
+        let p = ParamSet::init(&m, seed);
+        p.to_anchor_checkpoint(&m, anchor).unwrap()
+    }
+
+    #[test]
+    fn packed_forward_matches_dense_oracle() {
+        let dims = tiny_dims();
+        let ck = anchor_ck(&dims, 1, ElementFormat::int(8));
+        let tokens: Vec<i32> = (0..2 * 8).map(|i| (i * 7 % 64) as i32).collect();
+        for fmt in [ElementFormat::int(8), ElementFormat::int(4)] {
+            let packed = NativeWeights::packed_from_checkpoint(&dims, &ck, fmt).unwrap();
+            let dense = NativeWeights::dense_from_checkpoint(&dims, &ck, Some(fmt)).unwrap();
+            let lp = forward_logits(&packed, &tokens, 2).unwrap();
+            let ld = forward_logits(&dense, &tokens, 2).unwrap();
+            assert_eq!(lp.len(), 2 * 8 * 64);
+            for (a, b) in lp.iter().zip(&ld) {
+                assert!((a - b).abs() < 1e-4, "{fmt}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn score_rows_is_finite_and_positive() {
+        let dims = tiny_dims();
+        let ck = anchor_ck(&dims, 2, ElementFormat::int(8));
+        let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(6)).unwrap();
+        let tokens: Vec<i32> = (0..2 * 17).map(|i| (i * 11 % 64) as i32).collect();
+        let nll = score_rows(&w, &tokens, 2).unwrap();
+        assert_eq!(nll.len(), 2);
+        for v in nll {
+            assert!(v.is_finite() && v > 0.0, "nll={v}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_tokens_and_shapes() {
+        let dims = tiny_dims();
+        let ck = anchor_ck(&dims, 3, ElementFormat::int(8));
+        let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+        assert!(forward_logits(&w, &[0, 1, 2], 2).is_err(), "ragged rows");
+        assert!(forward_logits(&w, &[999, 0], 2).is_err(), "oov token");
+        let too_long: Vec<i32> = vec![0; 2 * (dims.seq_len + 1)];
+        assert!(forward_logits(&w, &too_long, 2).is_err(), "over seq_len");
+    }
+
+    #[test]
+    fn cross_family_target_requantizes() {
+        // int8 anchor served at fp4: SS cannot cross families, so the
+        // builder requantizes from dequantized anchor values.
+        let dims = tiny_dims();
+        let ck = anchor_ck(&dims, 4, ElementFormat::int(8));
+        let w =
+            NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::fp_from_bits(4))
+                .unwrap();
+        let tokens: Vec<i32> = (0..2 * 9).map(|i| (i % 64) as i32).collect();
+        let nll = score_rows(&w, &tokens, 2).unwrap();
+        assert!(nll.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn storage_bytes_shrink_with_bits() {
+        let dims = tiny_dims();
+        let ck = anchor_ck(&dims, 5, ElementFormat::int(8));
+        let w8 = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+        let w4 = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(4)).unwrap();
+        let dense = NativeWeights::dense_from_checkpoint(&dims, &ck, None).unwrap();
+        assert!(w4.storage_bytes() < w8.storage_bytes());
+        assert!(w8.storage_bytes() < dense.storage_bytes());
+    }
+}

@@ -1,0 +1,441 @@
+//! Native CPU compute kernels over packed MX tensors.
+//!
+//! The centerpiece is [`gemm_packed`]: `y = x @ W` where `W` stays in its
+//! packed microscaling form — sub-byte integer or minifloat element codes
+//! plus one E8M0 scale exponent per block. The per-block scale is fused into
+//! the dot product (`y += (x_k · 2^{s_{k,j}}) · P_{k,n}`), so no f32 weight
+//! buffer is ever materialized: the working set is the packed codes (2–8
+//! bits/element), which is why lower-precision formats stream less memory
+//! per batch — the elastic-serving speed knob the paper motivates (§1).
+//!
+//! Mirrors the pure-`jnp` oracle in `python/compile/kernels/ref.py`
+//! (`mx_matmul_ref` = dequantize-then-f32-matmul); parity is enforced by
+//! unit tests here and end-to-end by `rust/tests/native_backend.rs`.
+//!
+//! Threading: std scoped threads over contiguous row tiles
+//! ([`par_chunks_mut`]); `MFQAT_THREADS` pins the worker count (benches,
+//! reproducibility).
+
+use crate::formats::{exp2i, pack};
+use crate::tensor::MxTensor;
+
+/// Worker threads for the native kernels (`MFQAT_THREADS` overrides the
+/// detected core count; decided once per process).
+pub fn num_threads() -> usize {
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("MFQAT_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+/// Below this many elements the fan-out cost exceeds the win; run serial.
+const PAR_MIN_LEN: usize = 1 << 15;
+
+/// Rows of `y` processed per tile in the GEMM kernels (amortizes the
+/// per-`k` code-row and scale-row setup across the tile).
+const ROW_TILE: usize = 32;
+
+/// Apply `f(chunk_index, chunk)` to consecutive `chunk`-sized pieces of
+/// `data`, fanned out over scoped threads (serial for small inputs). Chunks
+/// are disjoint, so the closure may freely mutate its piece.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    if data.is_empty() {
+        return;
+    }
+    let n_chunks = data.len().div_ceil(chunk);
+    let nt = num_threads().min(n_chunks);
+    if nt <= 1 || data.len() < PAR_MIN_LEN {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let per = n_chunks.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (g, group) in data.chunks_mut(per * chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (i, c) in group.chunks_mut(chunk).enumerate() {
+                    f(g * per + i, c);
+                }
+            });
+        }
+    });
+}
+
+/// `y[r, :] = x[r, :] @ W` with `W` a packed 2-D [`MxTensor`] of shape
+/// `[in_features, out_features]` (scaling blocks along the out dimension,
+/// the layout `MxTensor::quantize` produces for the model's `[in, out]`
+/// weight matrices).
+///
+/// Weights are consumed directly from the packed stream: each row tile
+/// unpacks one `out_features`-code weight row at a time into a small
+/// L1-resident scratch (amortized over [`ROW_TILE`] batch rows), so the
+/// memory traffic per batch is the *packed* plane — `bits(f)`/element —
+/// and no full decoded plane is ever allocated.
+pub fn gemm_packed(x: &[f32], rows: usize, w: &MxTensor, y: &mut [f32]) {
+    assert_eq!(w.shape.len(), 2, "packed GEMM wants a 2-D weight");
+    let in_f = w.shape[0];
+    let out_f = w.shape[1];
+    assert_eq!(x.len(), rows * in_f, "x must be [rows, in_features]");
+    assert_eq!(y.len(), rows * out_f, "y must be [rows, out_features]");
+    if rows == 0 || in_f == 0 || out_f == 0 {
+        if out_f > 0 {
+            y.fill(0.0);
+        }
+        return;
+    }
+    let bs = w.format.block_size;
+    let bpr = out_f.div_ceil(bs);
+    let wbits = w.format.elem.bits();
+    debug_assert_eq!(w.scales.len(), in_f * bpr);
+    // Minifloat codes decode through a 256-entry value LUT; integer codes
+    // sign-extend to the element value directly.
+    let lut: Option<Vec<f32>> = w.format.elem.fp_spec().map(|spec| {
+        let mask = ((1u16 << spec.bits()) - 1) as u8;
+        (0..256u16).map(|b| spec.decode(b as u8 & mask)).collect()
+    });
+    par_chunks_mut(y, ROW_TILE * out_f, |ci, yc| {
+        let r0 = ci * ROW_TILE;
+        let rn = yc.len() / out_f;
+        yc.fill(0.0);
+        let mut sc = vec![0.0f32; bpr];
+        let mut int_row = vec![0i8; out_f];
+        let mut fp_row = vec![0u8; out_f];
+        for k in 0..in_f {
+            for (j, &s) in w.scales[k * bpr..(k + 1) * bpr].iter().enumerate() {
+                sc[j] = exp2i(s as i32);
+            }
+            // Unpack weight row `k` straight out of the packed stream.
+            if lut.is_none() {
+                pack::unpack_signed_at(&w.packed, wbits, k * out_f, &mut int_row);
+            } else {
+                pack::unpack_unsigned_at(&w.packed, wbits, k * out_f, &mut fp_row);
+            }
+            for r in 0..rn {
+                let xv = x[(r0 + r) * in_f + k];
+                if xv == 0.0 {
+                    continue;
+                }
+                let yr = &mut yc[r * out_f..(r + 1) * out_f];
+                match &lut {
+                    // MXINT path: y += (x_k · scale_j) · code.
+                    None => {
+                        for (j, &s) in sc.iter().enumerate() {
+                            let f = xv * s;
+                            let n0 = j * bs;
+                            let n1 = (n0 + bs).min(out_f);
+                            for n in n0..n1 {
+                                yr[n] += f * int_row[n] as f32;
+                            }
+                        }
+                    }
+                    // MXFP path: same shape, element value via the LUT.
+                    Some(lut) => {
+                        for (j, &s) in sc.iter().enumerate() {
+                            let f = xv * s;
+                            let n0 = j * bs;
+                            let n1 = (n0 + bs).min(out_f);
+                            for n in n0..n1 {
+                                yr[n] += f * lut[fp_row[n] as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `y[r, :] = x[r, :] @ W` for a dense f32 weight `[in_features,
+/// out_features]` — the reference oracle path (dequantize-then-matmul) and
+/// the kernel for unquantized parameters (`head`). Same loop structure and
+/// summation order as [`gemm_packed`] so the two paths are comparable to
+/// float-rounding error.
+pub fn gemm_dense(x: &[f32], rows: usize, w: &[f32], in_f: usize, out_f: usize, y: &mut [f32]) {
+    assert_eq!(x.len(), rows * in_f, "x must be [rows, in_features]");
+    assert_eq!(w.len(), in_f * out_f, "w must be [in_features, out_features]");
+    assert_eq!(y.len(), rows * out_f, "y must be [rows, out_features]");
+    if rows == 0 {
+        return;
+    }
+    par_chunks_mut(y, ROW_TILE * out_f, |ci, yc| {
+        let r0 = ci * ROW_TILE;
+        let rn = yc.len() / out_f;
+        yc.fill(0.0);
+        for k in 0..in_f {
+            let wrow = &w[k * out_f..(k + 1) * out_f];
+            for r in 0..rn {
+                let xv = x[(r0 + r) * in_f + k];
+                if xv == 0.0 {
+                    continue;
+                }
+                let yr = &mut yc[r * out_f..(r + 1) * out_f];
+                for (yv, &wv) in yr.iter_mut().zip(wrow) {
+                    *yv += xv * wv;
+                }
+            }
+        }
+    });
+}
+
+/// RMSNorm over the last dimension: `out = x · rsqrt(mean(x²) + 1e-6) · g`
+/// (matches `_rmsnorm` in `python/compile/model.py`).
+pub fn rmsnorm(x: &[f32], gain: &[f32], out: &mut [f32]) {
+    let d = gain.len();
+    assert!(d > 0 && x.len() % d == 0, "x must be [n, {d}]");
+    assert_eq!(x.len(), out.len());
+    for (xr, or) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ms = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + 1e-6).sqrt();
+        for ((o, &v), &g) in or.iter_mut().zip(xr).zip(gain) {
+            *o = v * r * g;
+        }
+    }
+}
+
+/// Tanh-approximate GELU, in place (jax.nn.gelu `approximate=True`).
+pub fn gelu_in_place(x: &mut [f32]) {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    for v in x.iter_mut() {
+        let u = *v;
+        let inner = SQRT_2_OVER_PI * (u + 0.044_715 * u * u * u);
+        *v = 0.5 * u * (1.0 + inner.tanh());
+    }
+}
+
+/// `acc += delta`, element-wise (residual connections).
+pub fn add_assign(acc: &mut [f32], delta: &[f32]) {
+    assert_eq!(acc.len(), delta.len());
+    for (a, &b) in acc.iter_mut().zip(delta) {
+        *a += b;
+    }
+}
+
+/// Multi-head causal self-attention.
+///
+/// `qkv` is the fused projection output `[rows·t, 3·d_model]` (row `b·t + i`
+/// holds `[q | k | v]` for sequence `b`, position `i`); `out` is
+/// `[rows·t, d_model]`. Softmax is computed per (sequence, head, query) over
+/// the causal prefix — numerically identical to the python reference's
+/// masked full-softmax (masked scores underflow to exactly 0 probability).
+pub fn causal_attention(
+    qkv: &[f32],
+    rows: usize,
+    t: usize,
+    n_heads: usize,
+    d_model: usize,
+    out: &mut [f32],
+) {
+    assert!(n_heads > 0 && d_model % n_heads == 0);
+    assert_eq!(qkv.len(), rows * t * 3 * d_model);
+    assert_eq!(out.len(), rows * t * d_model);
+    let hd = d_model / n_heads;
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    par_chunks_mut(out, t * d_model, |b, ob| {
+        ob.fill(0.0);
+        let base = b * t * 3 * d_model;
+        let mut probs = vec![0.0f32; t];
+        for h in 0..n_heads {
+            let qo = h * hd;
+            let ko = d_model + h * hd;
+            let vo = 2 * d_model + h * hd;
+            for i in 0..t {
+                let q = &qkv[base + i * 3 * d_model + qo..][..hd];
+                let mut max_s = f32::NEG_INFINITY;
+                for j in 0..=i {
+                    let krow = &qkv[base + j * 3 * d_model + ko..][..hd];
+                    let mut s = 0.0f32;
+                    for (&a, &k) in q.iter().zip(krow) {
+                        s += a * k;
+                    }
+                    let s = s * inv_sqrt;
+                    probs[j] = s;
+                    if s > max_s {
+                        max_s = s;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for p in probs[..=i].iter_mut() {
+                    *p = (*p - max_s).exp();
+                    denom += *p;
+                }
+                let inv_denom = 1.0 / denom;
+                let orow = &mut ob[i * d_model + qo..i * d_model + qo + hd];
+                for j in 0..=i {
+                    let wgt = probs[j] * inv_denom;
+                    let vrow = &qkv[base + j * 3 * d_model + vo..][..hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += wgt * vv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{ElementFormat, MxFormat};
+    use crate::util::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    fn naive_matmul(x: &[f32], rows: usize, w: &[f32], in_f: usize, out_f: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; rows * out_f];
+        for r in 0..rows {
+            for n in 0..out_f {
+                let mut acc = 0.0f64;
+                for k in 0..in_f {
+                    acc += x[r * in_f + k] as f64 * w[k * out_f + n] as f64;
+                }
+                y[r * out_f + n] = acc as f32;
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn dense_gemm_matches_naive() {
+        let (rows, in_f, out_f) = (5, 48, 33);
+        let x = randvec(rows * in_f, 1);
+        let w = randvec(in_f * out_f, 2);
+        let mut y = vec![0.0f32; rows * out_f];
+        gemm_dense(&x, rows, &w, in_f, out_f, &mut y);
+        let want = naive_matmul(&x, rows, &w, in_f, out_f);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn packed_gemm_matches_dequantized_dense() {
+        // The fused-scale packed path must equal dequantize-then-f32-matmul
+        // (the ref.py mx_matmul_ref oracle) to float rounding error.
+        for fmt in [
+            ElementFormat::int(4),
+            ElementFormat::int(6),
+            ElementFormat::int(8),
+            ElementFormat::fp_from_bits(4),
+            ElementFormat::fp_from_bits(6),
+            ElementFormat::fp_from_bits(8),
+        ] {
+            let (rows, in_f, out_f) = (7, 64, 96);
+            let x = randvec(rows * in_f, 3);
+            let wdata = randvec(in_f * out_f, 4);
+            let w = MxTensor::quantize(&wdata, &[in_f, out_f], MxFormat::new(fmt, 32)).unwrap();
+            let wd = w.dequantize();
+            let mut y_packed = vec![0.0f32; rows * out_f];
+            let mut y_dense = vec![0.0f32; rows * out_f];
+            gemm_packed(&x, rows, &w, &mut y_packed);
+            gemm_dense(&x, rows, &wd, in_f, out_f, &mut y_dense);
+            for (i, (a, b)) in y_packed.iter().zip(&y_dense).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "{}[{i}]: packed {a} vs dense {b}",
+                    fmt.long_name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_handles_ragged_blocks_and_row_tiles() {
+        // out_f not a multiple of the block size; rows beyond one ROW_TILE.
+        let (rows, in_f, out_f) = (ROW_TILE + 3, 32, 40);
+        let x = randvec(rows * in_f, 5);
+        let wdata = randvec(in_f * out_f, 6);
+        let w = MxTensor::quantize(&wdata, &[in_f, out_f], MxFormat::mxint(5, 32)).unwrap();
+        let wd = w.dequantize();
+        let mut y_packed = vec![0.0f32; rows * out_f];
+        gemm_packed(&x, rows, &w, &mut y_packed);
+        let want = naive_matmul(&x, rows, &wd, in_f, out_f);
+        for (a, b) in y_packed.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_scales_to_unit_rms() {
+        let d = 16;
+        let x = randvec(3 * d, 7);
+        let gain = vec![1.0f32; d];
+        let mut out = vec![0.0f32; x.len()];
+        rmsnorm(&x, &gain, &mut out);
+        for row in out.chunks_exact(d) {
+            let rms = (row.iter().map(|v| v * v).sum::<f32>() / d as f32).sqrt();
+            assert!((rms - 1.0).abs() < 1e-2, "rms={rms}");
+        }
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        let mut x = vec![0.0f32, 10.0, -10.0, 1.0];
+        gelu_in_place(&mut x);
+        assert_eq!(x[0], 0.0);
+        assert!((x[1] - 10.0).abs() < 1e-4);
+        assert!(x[2].abs() < 1e-4);
+        assert!((x[3] - 0.8412).abs() < 1e-3); // gelu(1) ≈ 0.8412
+    }
+
+    #[test]
+    fn attention_with_one_position_returns_v() {
+        // t = 1: softmax over a single score is 1, so out == v.
+        let (rows, t, heads, d) = (2, 1, 2, 8);
+        let qkv = randvec(rows * t * 3 * d, 8);
+        let mut out = vec![0.0f32; rows * t * d];
+        causal_attention(&qkv, rows, t, heads, d, &mut out);
+        for b in 0..rows {
+            let v = &qkv[b * 3 * d + 2 * d..][..d];
+            let o = &out[b * d..][..d];
+            for (a, e) in o.iter().zip(v) {
+                assert!((a - e).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn attention_is_causal() {
+        // The output at position i must not change when future positions do.
+        let (rows, t, heads, d) = (1, 6, 2, 8);
+        let qkv = randvec(rows * t * 3 * d, 9);
+        let mut full = vec![0.0f32; t * d];
+        causal_attention(&qkv, rows, t, heads, d, &mut full);
+        let t2 = 4;
+        let mut prefix = vec![0.0f32; t2 * d];
+        causal_attention(&qkv[..t2 * 3 * d], rows, t2, heads, d, &mut prefix);
+        for i in 0..t2 * d {
+            assert_eq!(full[i], prefix[i], "position {} differs", i / d);
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_visits_every_chunk_once() {
+        let mut data = vec![0u32; 100_000];
+        par_chunks_mut(&mut data, 7, |i, c| {
+            for v in c.iter_mut() {
+                *v = i as u32 + 1;
+            }
+        });
+        for (pos, &v) in data.iter().enumerate() {
+            assert_eq!(v, (pos / 7) as u32 + 1, "pos {pos}");
+        }
+    }
+}

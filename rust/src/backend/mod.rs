@@ -1,0 +1,59 @@
+//! Pluggable inference backends.
+//!
+//! The elastic coordinator ([`crate::coordinator::ElasticEngine`]) executes
+//! batches through a [`Backend`]:
+//!
+//! * [`NativeBackend`] — pure-Rust CPU engine ([`kernels`], [`forward`])
+//!   that computes directly on packed MX codes with fused per-block scales.
+//!   Needs only an anchor checkpoint + model dims: no XLA install, no AOT
+//!   artifacts — any CPU-only deployment target can serve every format.
+//! * `PjrtBackend` (feature `pjrt`) — wraps the PJRT runtime and the AOT
+//!   HLO artifacts exported by `python/compile/aot.py`; formats execute as
+//!   dequantized-f32 weight literals through one compiled graph.
+//!
+//! Both cache derived per-format weight sets in a byte-bounded LRU
+//! ([`crate::coordinator::FormatCache`]); the native cache holds *packed*
+//! weights, so a cached low-bit format costs a fraction of an f32 set.
+
+pub mod forward;
+pub mod kernels;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use forward::{LayerWeights, Mat, NativeWeights};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use crate::coordinator::format_cache::CacheStats;
+use crate::formats::ElementFormat;
+use crate::model::ModelDims;
+use anyhow::Result;
+
+/// An inference engine that can score token batches at any element format.
+///
+/// Implementations are *not* required to be `Send` (PJRT handles are
+/// thread-bound); the server constructs its backend inside the worker
+/// thread.
+pub trait Backend {
+    /// Short identifier (`"native"`, `"pjrt"`) for logs and metrics.
+    fn name(&self) -> &'static str;
+
+    /// Model dimensions this backend serves.
+    fn dims(&self) -> &ModelDims;
+
+    /// Forward pass on a flat buffer of `seq_len`-wide token rows;
+    /// returns flat logits `[rows, seq_len, vocab]`. The native backend
+    /// accepts any row count; PJRT executes its fixed `train_batch` graph.
+    fn forward_logits(&self, tokens: &[i32], fmt: ElementFormat) -> Result<Vec<f32>>;
+
+    /// Per-row mean NLL for a flat buffer of `1..=train_batch` token
+    /// windows of width `seq_len + 1`; returns one NLL per window. Short
+    /// batches execute at their true size on the native backend (the PJRT
+    /// graph pads internally to its fixed shape).
+    fn score_batch(&self, tokens: &[i32], fmt: ElementFormat) -> Result<Vec<f32>>;
+
+    /// Weight-cache counters (hits/misses/evictions/bytes).
+    fn cache_stats(&self) -> CacheStats;
+}

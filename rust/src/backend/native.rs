@@ -1,0 +1,163 @@
+//! The native CPU backend: anchor checkpoint → packed per-format weights →
+//! blockwise GEMM forward. No XLA, no AOT artifacts.
+
+use super::forward::{self, NativeWeights};
+use super::Backend;
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::format_cache::{CacheStats, FormatCache};
+use crate::formats::ElementFormat;
+use crate::model::ModelDims;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Native packed-MX inference engine.
+pub struct NativeBackend {
+    dims: ModelDims,
+    anchor: Checkpoint,
+    anchor_fmt: ElementFormat,
+    cache: Mutex<FormatCache<NativeWeights>>,
+}
+
+impl NativeBackend {
+    /// Build from an in-memory anchor checkpoint. The anchor format comes
+    /// from the checkpoint's `anchor` metadata; master (all-f32)
+    /// checkpoints work too and serve each format via direct PTQ.
+    pub fn new(dims: ModelDims, anchor: Checkpoint, cache_bytes: usize) -> Result<NativeBackend> {
+        // Master checkpoints carry no anchor meta; record the family
+        // default so `anchor_fmt` always names a sensible precision.
+        let anchor_fmt = anchor.anchor_format()?.unwrap_or(ElementFormat::int(8));
+        Ok(NativeBackend {
+            dims,
+            anchor,
+            anchor_fmt,
+            cache: Mutex::new(FormatCache::new(cache_bytes)),
+        })
+    }
+
+    /// Load the anchor checkpoint from disk.
+    pub fn open(dims: ModelDims, checkpoint: &Path, cache_bytes: usize) -> Result<NativeBackend> {
+        let anchor = Checkpoint::load(checkpoint)?;
+        NativeBackend::new(dims, anchor, cache_bytes)
+    }
+
+    /// Anchor precision the checkpoint stores.
+    pub fn anchor_fmt(&self) -> ElementFormat {
+        self.anchor_fmt
+    }
+
+    /// Packed serving weights for `fmt`, derived from the anchor via
+    /// Slice-and-Scale (cached, LRU).
+    pub fn weights(&self, fmt: ElementFormat) -> Result<Arc<NativeWeights>> {
+        if let Some(w) = self.cache.lock().unwrap().get(fmt) {
+            return Ok(w);
+        }
+        let t = std::time::Instant::now();
+        let w = Arc::new(NativeWeights::packed_from_checkpoint(
+            &self.dims,
+            &self.anchor,
+            fmt,
+        )?);
+        let bytes = w.storage_bytes();
+        log::info!(
+            "native: derived packed {} weights from anchor {} in {:.1} ms ({:.2} MB resident)",
+            fmt,
+            self.anchor_fmt,
+            t.elapsed().as_secs_f64() * 1e3,
+            bytes as f64 / 1e6
+        );
+        self.cache.lock().unwrap().put(fmt, w.clone(), bytes);
+        Ok(w)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn forward_logits(&self, tokens: &[i32], fmt: ElementFormat) -> Result<Vec<f32>> {
+        let w = self.weights(fmt)?;
+        let t = self.dims.seq_len;
+        if tokens.is_empty() || tokens.len() % t != 0 {
+            return Err(anyhow!(
+                "forward wants a non-empty multiple of seq_len ({t}) tokens, got {}",
+                tokens.len()
+            ));
+        }
+        forward::forward_logits(&w, tokens, tokens.len() / t)
+    }
+
+    fn score_batch(&self, tokens: &[i32], fmt: ElementFormat) -> Result<Vec<f32>> {
+        let w = self.weights(fmt)?;
+        let width = self.dims.seq_len + 1;
+        if tokens.is_empty() || tokens.len() % width != 0 {
+            return Err(anyhow!(
+                "scoring wants a non-empty multiple of seq_len+1 ({width}) tokens, got {}",
+                tokens.len()
+            ));
+        }
+        // Short batches run at their true size — no padding waste.
+        forward::score_rows(&w, tokens, tokens.len() / width)
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.cache.lock().unwrap().stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamSet;
+
+    fn backend(cache_bytes: usize) -> NativeBackend {
+        let mut dims = ModelDims::new("unit", 64, 32, 2, 2, 16);
+        dims.train_batch = 2;
+        let m = dims.to_manifest();
+        let ck = ParamSet::init(&m, 7)
+            .to_anchor_checkpoint(&m, ElementFormat::int(8))
+            .unwrap();
+        NativeBackend::new(dims, ck, cache_bytes).unwrap()
+    }
+
+    #[test]
+    fn scores_and_caches_per_format() {
+        let be = backend(64 << 20);
+        let tokens: Vec<i32> = (0..2 * 17).map(|i| (i % 64) as i32).collect();
+        for fmt in [ElementFormat::int(8), ElementFormat::int(4)] {
+            let nll = be.score_batch(&tokens, fmt).unwrap();
+            assert_eq!(nll.len(), 2);
+            assert!(nll.iter().all(|v| v.is_finite() && *v > 0.0));
+        }
+        // Repeat scoring hits the cache.
+        be.score_batch(&tokens, ElementFormat::int(4)).unwrap();
+        let s = be.cache_stats();
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.entries, 2);
+        assert!(s.used_bytes > 0);
+    }
+
+    #[test]
+    fn tiny_cache_evicts() {
+        let be = backend(1); // everything is over-budget → single resident set
+        let tokens: Vec<i32> = (0..2 * 17).map(|i| (i % 64) as i32).collect();
+        be.score_batch(&tokens, ElementFormat::int(8)).unwrap();
+        be.score_batch(&tokens, ElementFormat::int(4)).unwrap();
+        let s = be.cache_stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn wrong_batch_shape_is_rejected() {
+        let be = backend(1 << 20);
+        assert!(be.score_batch(&[1, 2, 3], ElementFormat::int(8)).is_err());
+        assert!(be.forward_logits(&[1, 2, 3], ElementFormat::int(8)).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! The PJRT/XLA backend: AOT HLO artifacts + dequantized f32 weight
+//! literals (feature `pjrt`).
+//!
+//! Every format executes through the same compiled graph; lower precisions
+//! change weight *values* only, so this backend measures quality, not
+//! speed. Use [`super::NativeBackend`] for packed-format execution.
+
+use super::Backend;
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::format_cache::{CacheStats, FormatCache};
+use crate::eval::ParamLiterals;
+use crate::formats::ElementFormat;
+use crate::model::{ModelDims, ParamSet};
+use crate::runtime::{self, ArtifactSet, Runtime};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// PJRT-backed engine over one artifact directory + anchor checkpoint.
+pub struct PjrtBackend {
+    pub rt: Runtime,
+    pub arts: ArtifactSet,
+    pub anchor: Checkpoint,
+    pub anchor_fmt: ElementFormat,
+    dims: ModelDims,
+    cache: Mutex<FormatCache<ParamLiterals>>,
+}
+
+impl PjrtBackend {
+    /// Open artifacts + anchor checkpoint.
+    pub fn open(artifact_dir: &Path, checkpoint: &Path, cache_bytes: usize) -> Result<PjrtBackend> {
+        let rt = Runtime::cpu()?;
+        let arts = ArtifactSet::open(artifact_dir)?;
+        let anchor = Checkpoint::load(checkpoint)?;
+        let anchor_fmt = anchor
+            .anchor_format()?
+            .ok_or_else(|| anyhow!("checkpoint has no 'anchor' meta — not an anchor checkpoint"))?;
+        Ok(PjrtBackend::from_parts(rt, arts, anchor, anchor_fmt, cache_bytes))
+    }
+
+    /// Build from already-loaded pieces (tests, examples).
+    pub fn from_parts(
+        rt: Runtime,
+        arts: ArtifactSet,
+        anchor: Checkpoint,
+        anchor_fmt: ElementFormat,
+        cache_bytes: usize,
+    ) -> PjrtBackend {
+        let dims = ModelDims::from_manifest(&arts.manifest);
+        PjrtBackend {
+            rt,
+            arts,
+            anchor,
+            anchor_fmt,
+            dims,
+            cache: Mutex::new(FormatCache::new(cache_bytes)),
+        }
+    }
+
+    /// Serving weight literals for `fmt`, derived via Slice-and-Scale from
+    /// the anchor (cached). `fmt == anchor` dequantizes the anchor directly.
+    pub fn weights(&self, fmt: ElementFormat) -> Result<Arc<ParamLiterals>> {
+        if let Some(w) = self.cache.lock().unwrap().get(fmt) {
+            return Ok(w);
+        }
+        let t = std::time::Instant::now();
+        let params = ParamSet::from_checkpoint(&self.arts.manifest, &self.anchor, Some(fmt))
+            .with_context(|| format!("deriving {fmt}"))?;
+        let lits = Arc::new(ParamLiterals::build(&params)?);
+        let bytes = params.n_params() * 4;
+        log::info!(
+            "pjrt: derived {} weights from anchor {} in {:.1} ms ({:.1} MB)",
+            fmt,
+            self.anchor_fmt,
+            t.elapsed().as_secs_f64() * 1e3,
+            bytes as f64 / 1e6
+        );
+        self.cache.lock().unwrap().put(fmt, lits.clone(), bytes);
+        Ok(lits)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn forward_logits(&self, tokens: &[i32], fmt: ElementFormat) -> Result<Vec<f32>> {
+        let m = &self.arts.manifest;
+        let weights = self.weights(fmt)?;
+        let exe = self.arts.executable(&self.rt, "forward_b8")?;
+        let lit = runtime::i32_literal(tokens, &[m.train_batch, m.seq_len])?;
+        let mut args: Vec<&xla::Literal> = vec![&lit];
+        args.extend(weights.literals.iter());
+        let out = exe.run(&args)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    fn score_batch(&self, tokens: &[i32], fmt: ElementFormat) -> Result<Vec<f32>> {
+        let m = &self.arts.manifest;
+        let b = m.train_batch;
+        let t = m.seq_len;
+        let vocab = m.vocab;
+        let width = t + 1;
+        if tokens.is_empty() || tokens.len() % width != 0 {
+            return Err(anyhow!(
+                "scoring wants a non-empty multiple of seq_len+1 ({width}) tokens, got {}",
+                tokens.len()
+            ));
+        }
+        let rows = tokens.len() / width;
+        if rows > b {
+            return Err(anyhow!("scoring wants at most {b} windows, got {rows}"));
+        }
+        // The AOT graph has a fixed [b, t] shape: pad short batches by
+        // repeating the first window, then truncate the scores back.
+        let mut padded = Vec::with_capacity(b * width);
+        for r in 0..b {
+            let rr = if r < rows { r } else { 0 };
+            padded.extend_from_slice(&tokens[rr * width..(rr + 1) * width]);
+        }
+        // Forward on the first T tokens of each row; NLL against the shift.
+        let mut inputs = Vec::with_capacity(b * t);
+        for r in 0..b {
+            inputs.extend_from_slice(&padded[r * width..r * width + t]);
+        }
+        let logits = self.forward_logits(&inputs, fmt)?;
+        let mut nll = crate::eval::nll_from_logits(&logits, &padded, b, width, vocab)?;
+        nll.truncate(rows);
+        Ok(nll)
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.cache.lock().unwrap().stats()
+    }
+}

@@ -70,6 +70,18 @@ impl Checkpoint {
         self.meta.insert(key.to_string(), value);
     }
 
+    /// Anchor element format recorded in the metadata, if any (`None` for
+    /// master/f32 checkpoints that carry no `anchor` entry). Shared by the
+    /// backends so they parse the meta identically; what to do about a
+    /// missing anchor is each backend's policy.
+    pub fn anchor_format(&self) -> Result<Option<ElementFormat>> {
+        self.meta
+            .get("anchor")
+            .and_then(|j| j.as_str())
+            .map(ElementFormat::parse)
+            .transpose()
+    }
+
     /// Total storage in bytes (packed codes + scales + raw f32 payloads).
     pub fn storage_bytes(&self) -> usize {
         self.tensors.values().map(|t| t.storage_bytes()).sum::<usize>()
@@ -279,7 +291,8 @@ impl<'a> Reader<'a> {
 
 /// CRC-32 (IEEE 802.3), table-driven.
 pub fn crc32(data: &[u8]) -> u32 {
-    static TABLE: once_cell::sync::Lazy<[u32; 256]> = once_cell::sync::Lazy::new(|| {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
         let mut table = [0u32; 256];
         for (i, entry) in table.iter_mut().enumerate() {
             let mut c = i as u32;
@@ -292,7 +305,7 @@ pub fn crc32(data: &[u8]) -> u32 {
     });
     let mut crc = 0xFFFF_FFFFu32;
     for &b in data {
-        crc = TABLE[((crc ^ b as u32) & 0xff) as usize] ^ (crc >> 8);
+        crc = table[((crc ^ b as u32) & 0xff) as usize] ^ (crc >> 8);
     }
     !crc
 }

@@ -1,44 +1,63 @@
 //! LRU cache of per-format serving weight sets.
 //!
 //! Elastic serving switches formats with load; re-deriving weights on every
-//! batch would waste the SS + dequant work, while caching every format at
-//! full f32 costs memory. The cache bounds total bytes and evicts the least
+//! batch would waste the Slice-and-Scale work, while caching every format
+//! forever costs memory. The cache bounds total bytes and evicts the least
 //! recently used format.
+//!
+//! The value type is generic so each backend caches its own weight
+//! representation: the native backend stores *packed* per-format weight sets
+//! (`backend::NativeWeights` — codes + block scales, 2–8 bits/element), the
+//! PJRT backend stores f32 parameter literals. Byte accounting uses the
+//! caller-reported resident size, so a packed MXINT4 entry costs ~8× less
+//! budget than its f32 counterpart.
 
-use crate::eval::ParamLiterals;
 use crate::formats::ElementFormat;
 use std::collections::HashMap;
 use std::sync::Arc;
 
+/// Counters exposed by a [`FormatCache`] (surfaced through the server
+/// metrics and the engine API).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub used_bytes: usize,
+}
+
 /// Byte-bounded LRU over derived weight sets.
-pub struct FormatCache {
+pub struct FormatCache<T> {
     budget: usize,
     used: usize,
     clock: u64,
     hits: u64,
     misses: u64,
-    entries: HashMap<ElementFormat, Entry>,
+    evictions: u64,
+    entries: HashMap<ElementFormat, Entry<T>>,
 }
 
-struct Entry {
-    weights: Arc<ParamLiterals>,
+struct Entry<T> {
+    weights: Arc<T>,
     bytes: usize,
     last_used: u64,
 }
 
-impl FormatCache {
-    pub fn new(budget_bytes: usize) -> FormatCache {
+impl<T> FormatCache<T> {
+    pub fn new(budget_bytes: usize) -> FormatCache<T> {
         FormatCache {
             budget: budget_bytes,
             used: 0,
             clock: 0,
             hits: 0,
             misses: 0,
+            evictions: 0,
             entries: HashMap::new(),
         }
     }
 
-    pub fn get(&mut self, fmt: ElementFormat) -> Option<Arc<ParamLiterals>> {
+    pub fn get(&mut self, fmt: ElementFormat) -> Option<Arc<T>> {
         self.clock += 1;
         let clock = self.clock;
         match self.entries.get_mut(&fmt) {
@@ -54,7 +73,7 @@ impl FormatCache {
         }
     }
 
-    pub fn put(&mut self, fmt: ElementFormat, weights: Arc<ParamLiterals>, bytes: usize) {
+    pub fn put(&mut self, fmt: ElementFormat, weights: Arc<T>, bytes: usize) {
         self.clock += 1;
         if let Some(old) = self.entries.remove(&fmt) {
             self.used -= old.bytes;
@@ -71,6 +90,7 @@ impl FormatCache {
                 .unwrap();
             let e = self.entries.remove(&lru).unwrap();
             self.used -= e.bytes;
+            self.evictions += 1;
             log::debug!("format cache: evicted {lru} ({} bytes)", e.bytes);
         }
         self.used += bytes;
@@ -103,55 +123,99 @@ impl FormatCache {
     pub fn misses(&self) -> u64 {
         self.misses
     }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.entries.len(),
+            used_bytes: self.used,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn dummy() -> Arc<ParamLiterals> {
-        Arc::new(ParamLiterals { literals: vec![] })
+    fn dummy(bytes: usize) -> Arc<Vec<u8>> {
+        Arc::new(vec![0u8; bytes.min(8)])
     }
 
     #[test]
     fn hit_miss_accounting() {
         let mut c = FormatCache::new(1000);
         assert!(c.get(ElementFormat::int(4)).is_none());
-        c.put(ElementFormat::int(4), dummy(), 100);
+        c.put(ElementFormat::int(4), dummy(100), 100);
         assert!(c.get(ElementFormat::int(4)).is_some());
         assert_eq!(c.hits(), 1);
         assert_eq!(c.misses(), 1);
         assert_eq!(c.used_bytes(), 100);
+        assert_eq!(
+            c.stats(),
+            CacheStats {
+                hits: 1,
+                misses: 1,
+                evictions: 0,
+                entries: 1,
+                used_bytes: 100
+            }
+        );
     }
 
     #[test]
     fn lru_eviction_order() {
         let mut c = FormatCache::new(250);
-        c.put(ElementFormat::int(2), dummy(), 100);
-        c.put(ElementFormat::int(4), dummy(), 100);
+        c.put(ElementFormat::int(2), dummy(100), 100);
+        c.put(ElementFormat::int(4), dummy(100), 100);
         // Touch int2 so int4 becomes LRU.
         c.get(ElementFormat::int(2));
-        c.put(ElementFormat::int(6), dummy(), 100);
+        c.put(ElementFormat::int(6), dummy(100), 100);
         assert!(c.get(ElementFormat::int(2)).is_some());
         assert!(c.get(ElementFormat::int(4)).is_none(), "int4 evicted");
         assert!(c.get(ElementFormat::int(6)).is_some());
         assert!(c.used_bytes() <= 250);
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn eviction_cascade_counts_and_rebalances_bytes() {
+        let mut c = FormatCache::new(350);
+        c.put(ElementFormat::int(2), dummy(100), 100);
+        c.put(ElementFormat::int(3), dummy(100), 100);
+        c.put(ElementFormat::int(4), dummy(100), 100);
+        // A 250-byte entry must push out the two least recently used.
+        c.put(ElementFormat::int(8), dummy(250), 250);
+        assert_eq!(c.evictions(), 2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.used_bytes(), 350, "int4 (100) + int8 (250)");
+        assert!(c.get(ElementFormat::int(4)).is_some(), "most recent survives");
+        assert!(c.get(ElementFormat::int(2)).is_none());
+        assert!(c.get(ElementFormat::int(3)).is_none());
     }
 
     #[test]
     fn oversized_entry_still_admitted() {
         let mut c = FormatCache::new(50);
-        c.put(ElementFormat::int(8), dummy(), 500);
+        c.put(ElementFormat::int(8), dummy(500), 500);
         assert_eq!(c.len(), 1);
         assert!(c.get(ElementFormat::int(8)).is_some());
+        assert_eq!(c.used_bytes(), 500);
     }
 
     #[test]
     fn replace_same_format_updates_bytes() {
         let mut c = FormatCache::new(1000);
-        c.put(ElementFormat::int(4), dummy(), 100);
-        c.put(ElementFormat::int(4), dummy(), 300);
+        c.put(ElementFormat::int(4), dummy(100), 100);
+        c.put(ElementFormat::int(4), dummy(300), 300);
         assert_eq!(c.used_bytes(), 300);
         assert_eq!(c.len(), 1);
+        assert_eq!(c.evictions(), 0, "replacement is not an eviction");
     }
 }

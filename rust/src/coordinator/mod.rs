@@ -1,153 +1,136 @@
 //! The elastic-inference coordinator — the L3 glue of paper §3.5.
 //!
-//! [`ElasticEngine`] owns the PJRT runtime, the AOT artifacts, and ONE
-//! anchor checkpoint (MXINT8/MXFP8). For any requested target format it
-//! derives serving weights on demand:
+//! [`ElasticEngine`] owns ONE anchor checkpoint (MXINT8/MXFP8) and a
+//! pluggable [`Backend`]. For any requested target format it derives
+//! serving weights on demand:
 //!
 //! ```text
-//! anchor .mfq ──Slice-and-Scale──▶ target MxTensors ──dequant──▶ f32
-//!        weight literals ──▶ forward/nll executables (one HLO, all formats)
+//! anchor .mfq ──Slice-and-Scale──▶ packed target MxTensors ──▶ native
+//!                                  blockwise GEMM (scales fused)   backend
+//!             └─(feature `pjrt`)─▶ dequantized f32 literals ──▶ AOT HLO
 //! ```
 //!
 //! Derived weight sets are cached per format with LRU eviction
 //! ([`FormatCache`]), so steady-state serving pays zero conversion cost and
-//! a format switch costs one SS pass (benchmarked in `benches/serving.rs`).
+//! a format switch costs one SS pass (benchmarked in `benches/native.rs`
+//! and `benches/serving.rs`). The native path caches *packed* weights —
+//! a resident MXINT4 set is ~8× smaller than its f32 equivalent, so the
+//! same cache budget holds many more formats.
 
 pub mod format_cache;
 
-pub use format_cache::FormatCache;
+pub use format_cache::{CacheStats, FormatCache};
 
+use crate::backend::{Backend, NativeBackend};
 use crate::checkpoint::Checkpoint;
-use crate::eval::ParamLiterals;
 use crate::formats::ElementFormat;
-use crate::model::ParamSet;
-use crate::runtime::{self, ArtifactSet, Runtime};
-use anyhow::{anyhow, Context, Result};
+use crate::model::ModelDims;
+use anyhow::Result;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
 
-/// Elastic inference engine: anchor checkpoint + on-demand format derivation.
+/// Elastic inference engine: anchor checkpoint + on-demand format
+/// derivation through a pluggable backend.
 pub struct ElasticEngine {
-    pub rt: Runtime,
-    pub arts: ArtifactSet,
-    pub anchor: Checkpoint,
-    pub anchor_fmt: ElementFormat,
-    cache: Mutex<FormatCache>,
+    backend: Box<dyn Backend>,
 }
 
 impl ElasticEngine {
-    /// Open artifacts + anchor checkpoint.
-    pub fn open(artifact_dir: &Path, checkpoint: &Path, cache_bytes: usize) -> Result<ElasticEngine> {
-        let rt = Runtime::cpu()?;
-        let arts = ArtifactSet::open(artifact_dir)?;
-        let anchor = Checkpoint::load(checkpoint)?;
-        let anchor_fmt = anchor
-            .meta
-            .get("anchor")
-            .and_then(|j| j.as_str())
-            .map(ElementFormat::parse)
-            .transpose()?
-            .ok_or_else(|| anyhow!("checkpoint has no 'anchor' meta — not an anchor checkpoint"))?;
-        Ok(ElasticEngine {
-            rt,
-            arts,
-            anchor,
-            anchor_fmt,
-            cache: Mutex::new(FormatCache::new(cache_bytes)),
-        })
+    /// Wrap an already-constructed backend.
+    pub fn from_backend(backend: Box<dyn Backend>) -> ElasticEngine {
+        ElasticEngine { backend }
     }
 
-    /// Build an engine from already-loaded pieces (tests, examples).
+    /// Native engine from an in-memory anchor checkpoint (no artifacts, no
+    /// XLA).
+    pub fn native(dims: ModelDims, anchor: Checkpoint, cache_bytes: usize) -> Result<ElasticEngine> {
+        Ok(ElasticEngine::from_backend(Box::new(NativeBackend::new(
+            dims,
+            anchor,
+            cache_bytes,
+        )?)))
+    }
+
+    /// Native engine, loading the anchor checkpoint from disk.
+    pub fn open_native(
+        dims: ModelDims,
+        checkpoint: &Path,
+        cache_bytes: usize,
+    ) -> Result<ElasticEngine> {
+        Ok(ElasticEngine::from_backend(Box::new(NativeBackend::open(
+            dims,
+            checkpoint,
+            cache_bytes,
+        )?)))
+    }
+
+    /// PJRT engine: open artifacts + anchor checkpoint.
+    #[cfg(feature = "pjrt")]
+    pub fn open(
+        artifact_dir: &Path,
+        checkpoint: &Path,
+        cache_bytes: usize,
+    ) -> Result<ElasticEngine> {
+        Ok(ElasticEngine::from_backend(Box::new(
+            crate::backend::PjrtBackend::open(artifact_dir, checkpoint, cache_bytes)?,
+        )))
+    }
+
+    /// PJRT engine from already-loaded pieces (tests, examples).
+    #[cfg(feature = "pjrt")]
     pub fn from_parts(
-        rt: Runtime,
-        arts: ArtifactSet,
+        rt: crate::runtime::Runtime,
+        arts: crate::runtime::ArtifactSet,
         anchor: Checkpoint,
         anchor_fmt: ElementFormat,
         cache_bytes: usize,
     ) -> ElasticEngine {
-        ElasticEngine {
-            rt,
-            arts,
-            anchor,
-            anchor_fmt,
-            cache: Mutex::new(FormatCache::new(cache_bytes)),
-        }
+        ElasticEngine::from_backend(Box::new(crate::backend::PjrtBackend::from_parts(
+            rt, arts, anchor, anchor_fmt, cache_bytes,
+        )))
     }
 
-    /// Serving weights for `fmt`, derived via Slice-and-Scale from the
-    /// anchor (cached). `fmt == anchor` dequantizes the anchor directly.
-    pub fn weights(&self, fmt: ElementFormat) -> Result<Arc<ParamLiterals>> {
-        if let Some(w) = self.cache.lock().unwrap().get(fmt) {
-            return Ok(w);
-        }
-        let t = std::time::Instant::now();
-        let params = ParamSet::from_checkpoint(&self.arts.manifest, &self.anchor, Some(fmt))
-            .with_context(|| format!("deriving {fmt}"))?;
-        let lits = Arc::new(ParamLiterals::build(&params)?);
-        let bytes = params.n_params() * 4;
-        log::info!(
-            "derived {} weights from anchor {} in {:.1} ms ({:.1} MB)",
-            fmt,
-            self.anchor_fmt,
-            t.elapsed().as_secs_f64() * 1e3,
-            bytes as f64 / 1e6
-        );
-        self.cache.lock().unwrap().put(fmt, lits.clone(), bytes);
-        Ok(lits)
+    /// Backend identifier (`"native"` / `"pjrt"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Model dimensions being served.
+    pub fn dims(&self) -> &ModelDims {
+        self.backend.dims()
+    }
+
+    /// Forward pass at `fmt`: flat `[train_batch * seq_len]` tokens →
+    /// flat logits `[train_batch, seq_len, vocab]`.
+    pub fn forward_logits(&self, tokens: &[i32], fmt: ElementFormat) -> Result<Vec<f32>> {
+        self.backend.forward_logits(tokens, fmt)
+    }
+
+    /// Per-row mean NLL for a flat `[train_batch * (seq_len + 1)]` batch of
+    /// token windows at `fmt`.
+    pub fn score_batch(&self, tokens: &[i32], fmt: ElementFormat) -> Result<Vec<f32>> {
+        self.backend.score_batch(tokens, fmt)
+    }
+
+    /// Weight-cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.backend.cache_stats()
     }
 
     /// Number of format weight-sets currently cached.
     pub fn cached_formats(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache_stats().entries
     }
 
     /// Conversions performed so far (cache misses).
     pub fn conversions(&self) -> u64 {
-        self.cache.lock().unwrap().misses()
-    }
-
-    /// Run the batch-8 forward at `fmt`: `tokens` is a flat `[8 * seq_len]`
-    /// buffer; returns flat logits `[8, seq_len, vocab]`.
-    pub fn forward_b8(&self, tokens: &[i32], fmt: ElementFormat) -> Result<Vec<f32>> {
-        let m = &self.arts.manifest;
-        let weights = self.weights(fmt)?;
-        let exe = self.arts.executable(&self.rt, "forward_b8")?;
-        let lit = runtime::i32_literal(tokens, &[m.train_batch, m.seq_len])?;
-        let mut args: Vec<&xla::Literal> = vec![&lit];
-        args.extend(weights.literals.iter());
-        let out = exe.run(&args)?;
-        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
-    }
-
-    /// Per-row mean NLL for a batch of `[8 * (seq_len+1)]` token windows.
-    pub fn score_b8(&self, tokens: &[i32], fmt: ElementFormat) -> Result<Vec<f32>> {
-        let m = &self.arts.manifest;
-        let b = m.train_batch;
-        let t = m.seq_len;
-        let vocab = m.vocab;
-        assert_eq!(tokens.len(), b * (t + 1));
-        // forward on the first T tokens of each row; NLL against the shift.
-        let mut inputs = Vec::with_capacity(b * t);
-        for r in 0..b {
-            inputs.extend_from_slice(&tokens[r * (t + 1)..r * (t + 1) + t]);
-        }
-        let logits = self.forward_b8(&inputs, fmt)?;
-        let mut out = Vec::with_capacity(b);
-        for r in 0..b {
-            let mut nll = 0.0f64;
-            for pos in 0..t {
-                let target = tokens[r * (t + 1) + pos + 1] as usize;
-                let off = (r * t + pos) * vocab;
-                nll -= crate::eval::log_softmax_pick(&logits[off..off + vocab], target);
-            }
-            out.push((nll / t as f64) as f32);
-        }
-        Ok(out)
+        self.cache_stats().misses
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // Engine behaviour over real artifacts is covered by
-    // `rust/tests/e2e_pipeline.rs`; cache mechanics in `format_cache`.
+    // Native engine behaviour is covered by `rust/tests/native_backend.rs`
+    // and `rust/tests/server_behaviour.rs` (artifact-free); the PJRT
+    // engine over real artifacts by `rust/tests/e2e_pipeline.rs`; cache
+    // mechanics in `format_cache`.
 }

@@ -5,19 +5,31 @@
 //! accuracy — each choice is appended to the prompt, scored by
 //! length-normalized continuation log-likelihood over the `forward_b8`
 //! logits, and the argmax choice is compared to the answer.
+//!
+//! The PJRT execution paths are gated behind the `pjrt` feature; the native
+//! equivalents ([`mean_nll_native`], [`perplexity_native`]) run everywhere
+//! through `backend::forward` and need no AOT artifacts.
 
+#[cfg(feature = "pjrt")]
 pub mod generate;
 
+#[cfg(feature = "pjrt")]
 use crate::data::{self, Task, PAD};
+#[cfg(feature = "pjrt")]
 use crate::model::ParamSet;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{self, ArtifactSet, Runtime};
-use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::bail;
+use anyhow::Result;
 
 /// Pre-built parameter literals (reused across many eval calls).
+#[cfg(feature = "pjrt")]
 pub struct ParamLiterals {
     pub literals: Vec<xla::Literal>,
 }
 
+#[cfg(feature = "pjrt")]
 impl ParamLiterals {
     pub fn build(params: &ParamSet) -> Result<ParamLiterals> {
         let literals = params
@@ -29,10 +41,87 @@ impl ParamLiterals {
     }
 }
 
+/// Per-row mean next-token NLL from flat logits `[rows, width-1, vocab]`
+/// against the shift-by-one targets of `tokens` (`rows` windows of `width`
+/// tokens each). Shared by the native and PJRT backends so both score with
+/// the identical definition.
+pub fn nll_from_logits(
+    logits: &[f32],
+    tokens: &[i32],
+    rows: usize,
+    width: usize,
+    vocab: usize,
+) -> Result<Vec<f32>> {
+    anyhow::ensure!(width >= 2, "windows need at least 2 tokens, got {width}");
+    let t = width - 1;
+    anyhow::ensure!(
+        tokens.len() == rows * width,
+        "expected {rows}x{width} tokens, got {}",
+        tokens.len()
+    );
+    anyhow::ensure!(
+        logits.len() == rows * t * vocab,
+        "expected {rows}x{t}x{vocab} logits, got {}",
+        logits.len()
+    );
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let mut nll = 0.0f64;
+        for pos in 0..t {
+            let target = tokens[r * width + pos + 1];
+            anyhow::ensure!(
+                target >= 0 && (target as usize) < vocab,
+                "target token {target} out of vocab range 0..{vocab}"
+            );
+            let off = (r * t + pos) * vocab;
+            nll -= log_softmax_pick(&logits[off..off + vocab], target as usize);
+        }
+        out.push((nll / t as f64) as f32);
+    }
+    Ok(out)
+}
+
+/// Mean next-token NLL over token windows, scored by the native backend
+/// (no artifacts). Windows must fill whole batches of `rows_per_batch`.
+pub fn mean_nll_native(
+    weights: &crate::backend::NativeWeights,
+    rows: &[Vec<i32>],
+    rows_per_batch: usize,
+) -> Result<f64> {
+    if rows.is_empty() || rows.len() % rows_per_batch != 0 {
+        anyhow::bail!(
+            "mean_nll_native wants a multiple of {rows_per_batch} rows, got {}",
+            rows.len()
+        );
+    }
+    let width = rows[0].len();
+    let mut total = 0.0f64;
+    for chunk in rows.chunks(rows_per_batch) {
+        let mut flat = Vec::with_capacity(rows_per_batch * width);
+        for row in chunk {
+            anyhow::ensure!(row.len() == width, "ragged row in eval set");
+            flat.extend_from_slice(row);
+        }
+        let nll = crate::backend::forward::score_rows(weights, &flat, rows_per_batch)?;
+        total += nll.iter().map(|&v| v as f64).sum::<f64>() / rows_per_batch as f64;
+    }
+    Ok(total / (rows.len() / rows_per_batch) as f64)
+}
+
+/// Perplexity via the native backend: `exp(mean NLL)`.
+pub fn perplexity_native(
+    weights: &crate::backend::NativeWeights,
+    rows: &[Vec<i32>],
+    rows_per_batch: usize,
+) -> Result<f64> {
+    Ok(mean_nll_native(weights, rows, rows_per_batch)?.exp())
+}
+
 /// Mean next-token NLL over token windows (width `seq_len + 1`).
 ///
 /// Windows must fill whole batches (`rows.len() % train_batch == 0`) so the
 /// metric is exact — the corpus splits are sized accordingly.
+#[cfg(feature = "pjrt")]
 pub fn mean_nll(
     rt: &Runtime,
     arts: &ArtifactSet,
@@ -57,6 +146,7 @@ pub fn mean_nll(
     Ok(total / batches.len() as f64)
 }
 
+#[cfg(feature = "pjrt")]
 /// Perplexity = exp(mean NLL).
 pub fn perplexity(
     rt: &Runtime,
@@ -67,6 +157,7 @@ pub fn perplexity(
     Ok(mean_nll(rt, arts, params, rows)?.exp())
 }
 
+#[cfg(feature = "pjrt")]
 /// Score a task: returns accuracy in [0, 1].
 pub fn mc_accuracy(
     rt: &Runtime,
@@ -90,6 +181,7 @@ pub fn mc_accuracy(
     Ok(correct as f64 / task.items.len() as f64)
 }
 
+#[cfg(feature = "pjrt")]
 /// Length-normalized continuation log-likelihood per (item, choice).
 pub fn mc_choice_scores(
     rt: &Runtime,
@@ -177,6 +269,7 @@ pub fn log_softmax_pick(logits: &[f32], target: usize) -> f64 {
     (logits[target] as f64 - max) - denom.ln()
 }
 
+#[cfg(feature = "pjrt")]
 /// Average accuracy over a suite of tasks (the paper's Tables 1/2 metric).
 pub fn suite_accuracy(
     rt: &Runtime,
@@ -208,5 +301,30 @@ mod tests {
         let logits = vec![1000.0f32, 999.0];
         let lp = log_softmax_pick(&logits, 0);
         assert!(lp < 0.0 && lp > -1.0);
+    }
+
+    #[test]
+    fn mean_nll_native_scores_without_artifacts() {
+        use crate::backend::NativeWeights;
+        use crate::formats::ElementFormat;
+        use crate::model::{ModelDims, ParamSet};
+        let mut dims = ModelDims::new("evalnat", 64, 32, 1, 2, 8);
+        dims.train_batch = 2;
+        let m = dims.to_manifest();
+        let ck = ParamSet::init(&m, 1)
+            .to_anchor_checkpoint(&m, ElementFormat::int(8))
+            .unwrap();
+        let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+        let rows: Vec<Vec<i32>> = (0..4)
+            .map(|r| (0..9).map(|i| ((r * 9 + i) % 64) as i32).collect())
+            .collect();
+        let nll = mean_nll_native(&w, &rows, 2).unwrap();
+        assert!(nll.is_finite() && nll > 0.0);
+        // Random init stays near the uniform baseline ln(vocab).
+        assert!((nll - (64f64).ln()).abs() < 2.0, "nll={nll}");
+        assert!(
+            mean_nll_native(&w, &rows[..3], 2).is_err(),
+            "non-multiple of batch is rejected"
+        );
     }
 }

@@ -16,20 +16,30 @@
 //! `tab1` reuses the models trained for `fig1`, etc. Results land in
 //! `results/<config>/`.
 
+#[cfg(feature = "pjrt")]
 pub mod ablations;
+#[cfg(feature = "pjrt")]
 pub mod quality;
 pub mod report;
 pub mod ss_eval;
 
+#[cfg(feature = "pjrt")]
 use crate::data::{Corpus, CorpusConfig};
+#[cfg(feature = "pjrt")]
 use crate::eval::ParamLiterals;
+#[cfg(feature = "pjrt")]
 use crate::model::ParamSet;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{ArtifactSet, Runtime};
+#[cfg(feature = "pjrt")]
 use crate::train::{TrainPlan, Trainer};
+#[cfg(feature = "pjrt")]
 use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 /// Shared state for experiment runs.
+#[cfg(feature = "pjrt")]
 pub struct Ctx {
     pub rt: Runtime,
     pub arts: ArtifactSet,
@@ -47,6 +57,7 @@ pub struct Ctx {
     pub task_items: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl Ctx {
     pub fn open(repo_root: &Path, config: &str, seed: u64) -> Result<Ctx> {
         let arts_dir = repo_root.join("artifacts").join(config);
@@ -170,6 +181,7 @@ impl Ctx {
 }
 
 /// Run an experiment by id ("all" runs everything).
+#[cfg(feature = "pjrt")]
 pub fn run(ctx: &Ctx, id: &str) -> Result<()> {
     match id {
         "pretrain" => {

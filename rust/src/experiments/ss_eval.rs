@@ -11,6 +11,7 @@
 //! perplexity is measured per setting.
 
 use super::report::{ascii_plot, save_text, ResultTable, Series};
+#[cfg(feature = "pjrt")]
 use super::Ctx;
 use crate::formats::{ElementFormat, MxFormat};
 use crate::tensor::MxTensor;
@@ -36,6 +37,7 @@ fn fmt_of(family: &str, bits: u8) -> ElementFormat {
 
 /// Figures 2 (int) / 3 (fp): direct vs SS perplexity. Left panel: bits at
 /// block size 64; right panel: block size at 4-bit.
+#[cfg(feature = "pjrt")]
 pub fn fig2_or_3(ctx: &Ctx, family: &str) -> Result<()> {
     let params = ctx.ensure_pretrained()?;
     let base_ppl = ctx.val_ppl(&params)?;

@@ -163,6 +163,61 @@ pub fn unpack_signed_into(bytes: &[u8], w: u8, out: &mut [i8]) {
     }
 }
 
+/// Scalar walk over `n` codes starting at absolute bit `bit`, feeding each
+/// masked code to `emit` (shared core of the `*_at` random-access paths).
+#[inline]
+fn unpack_walk_at(bytes: &[u8], w: u8, bit: usize, n: usize, mut emit: impl FnMut(usize, u16)) {
+    assert!(
+        bytes.len() * 8 >= bit + n * w as usize,
+        "packed buffer too short"
+    );
+    let mask = (1u16 << w) - 1;
+    let wu = w as usize;
+    let mut bitpos = bit;
+    for i in 0..n {
+        let byte = bitpos >> 3;
+        let off = bitpos & 7;
+        let mut v = (bytes[byte] as u16) >> off;
+        if off + wu > 8 {
+            v |= (bytes[byte + 1] as u16) << (8 - off);
+        }
+        emit(i, v & mask);
+        bitpos += wu;
+    }
+}
+
+/// Unpack `out.len()` unsigned codes starting at code index `start` of a
+/// packed stream (random access into a code plane, e.g. one weight row).
+/// Falls to a bit-offset scalar walk only when the start bit is unaligned.
+pub fn unpack_unsigned_at(bytes: &[u8], w: u8, start: usize, out: &mut [u8]) {
+    assert!((1..=8).contains(&w));
+    let bit = start * w as usize;
+    if bit % 8 == 0 {
+        unpack_unsigned_into(&bytes[bit / 8..], w, out);
+        return;
+    }
+    unpack_walk_at(bytes, w, bit, out.len(), |i, v| out[i] = v as u8);
+}
+
+/// Signed variant of [`unpack_unsigned_at`] (sign-extends to `i8`).
+pub fn unpack_signed_at(bytes: &[u8], w: u8, start: usize, out: &mut [i8]) {
+    assert!((1..=8).contains(&w));
+    let bit = start * w as usize;
+    if bit % 8 == 0 {
+        unpack_signed_into(&bytes[bit / 8..], w, out);
+        return;
+    }
+    let mask = (1u16 << w) - 1;
+    let sign = 1u16 << (w - 1);
+    unpack_walk_at(bytes, w, bit, out.len(), |i, v| {
+        out[i] = if v & sign != 0 {
+            (v | !mask) as u8 as i8
+        } else {
+            v as u8 as i8
+        };
+    });
+}
+
 /// Reference scalar implementation (bench baseline + differential tests).
 pub fn unpack_signed_into_scalar(bytes: &[u8], w: u8, out: &mut [i8]) {
     let n = out.len();
@@ -268,6 +323,70 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_unpack_at_matches_full_unpack() {
+        // Random access into a packed plane (the per-row GEMM path) must
+        // agree with unpacking the whole stream, at every width and start
+        // offset — aligned and unaligned alike.
+        run_cases("unpack_at == full unpack slice", 32, |g: &mut Gen| {
+            let n = g.len(16, 200);
+            for w in 2..=8u8 {
+                let lo = -(1i32 << (w - 1));
+                let hi = (1i32 << (w - 1)) - 1;
+                let codes: Vec<i8> = (0..n)
+                    .map(|_| (g.rng.range(0, (hi - lo + 1) as usize) as i32 + lo) as i8)
+                    .collect();
+                let packed = pack(&codes, w);
+                let full_s = unpack_signed(&packed, w, n);
+                let full_u = unpack_unsigned(&packed, w, n);
+                let start = g.rng.range(0, n);
+                let len = g.rng.range(0, n - start + 1);
+                let mut got_s = vec![0i8; len];
+                unpack_signed_at(&packed, w, start, &mut got_s);
+                if got_s != full_s[start..start + len] {
+                    return Err(format!("signed w={w} start={start} len={len}"));
+                }
+                let mut got_u = vec![0u8; len];
+                unpack_unsigned_at(&packed, w, start, &mut got_u);
+                if got_u != full_u[start..start + len] {
+                    return Err(format!("unsigned w={w} start={start} len={len}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn roundtrip_all_element_formats() {
+        // Every format the paper evaluates (MXINT2..8, MXFP4..8): the full
+        // code space must survive pack → unpack at the format's native
+        // width, through the same signed/unsigned paths MxTensor uses.
+        use crate::formats::int::int_range;
+        use crate::formats::ElementFormat;
+        for fmt in ElementFormat::all_int()
+            .into_iter()
+            .chain(ElementFormat::all_fp())
+        {
+            let w = fmt.bits();
+            if fmt.is_int() {
+                let (lo, hi) = int_range(w);
+                let codes: Vec<i8> = (lo..=hi).map(|v| v as i8).collect();
+                let packed = pack(&codes, w);
+                assert_eq!(packed.len(), packed_len(codes.len(), w));
+                assert_eq!(unpack_signed(&packed, w, codes.len()), codes, "{fmt}");
+            } else {
+                // Minifloat codes are raw sign-magnitude bit patterns.
+                let n = 1usize << w;
+                let codes: Vec<i8> = (0..n).map(|c| c as u8 as i8).collect();
+                let packed = pack(&codes, w);
+                assert_eq!(packed.len(), packed_len(n, w));
+                let got = unpack_unsigned(&packed, w, n);
+                let want: Vec<u8> = (0..n).map(|c| c as u8).collect();
+                assert_eq!(got, want, "{fmt}");
+            }
+        }
     }
 
     #[test]

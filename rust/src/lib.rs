@@ -12,14 +12,30 @@
 //!   once to HLO text.
 //! * **L3 — this crate**: the elastic-inference coordinator. Bit-exact native
 //!   microscaling formats ([`formats`]), packed tensors ([`tensor`]), anchor
-//!   checkpoints ([`checkpoint`]), a PJRT runtime ([`runtime`]) that loads the
-//!   AOT artifacts, a training driver ([`train`]), evaluation harness
-//!   ([`eval`]), the elastic precision server ([`server`], [`coordinator`]),
-//!   and the experiment harness ([`experiments`]) that regenerates every table
-//!   and figure in the paper.
+//!   checkpoints ([`checkpoint`]), pluggable inference backends
+//!   ([`backend`]), the elastic precision server ([`server`],
+//!   [`coordinator`]), an evaluation harness ([`eval`]), and — behind the
+//!   `pjrt` feature — a PJRT runtime ([`runtime`]) for the AOT artifacts, a
+//!   training driver ([`train`]) and the experiment harness
+//!   ([`experiments`]) that regenerates the paper's tables and figures.
 //!
-//! Python never runs on the request path: `make artifacts` lowers the model
-//! once; afterwards the `mfqat` binary is self-contained.
+//! ## Backends
+//!
+//! Inference runs through a [`backend::Backend`]:
+//!
+//! * **Native** ([`backend::NativeBackend`], the default): a pure-Rust CPU
+//!   engine whose GEMMs execute directly on packed MX codes — sub-byte
+//!   integer / minifloat elements with the per-block E8M0 scale fused into
+//!   the dot product. One anchor checkpoint serves every MXINT/MXFP format
+//!   with **no XLA install and no AOT artifacts**, so CPU-only deployment
+//!   targets get the full elastic-precision story, and lower-bit formats
+//!   genuinely stream less weight memory per batch.
+//! * **PJRT** (`--features pjrt`): executes the AOT HLO artifacts exported
+//!   by `python/compile/aot.py`; formats run as dequantized-f32 literals
+//!   through one compiled graph (quality measurements, training).
+//!
+//! Python never runs on the request path; with the native backend, neither
+//! does XLA — the `mfqat` binary is self-contained.
 //!
 //! ## Quick start
 //!
@@ -35,7 +51,27 @@
 //! let approx = low.dequantize();
 //! assert_eq!(approx.len(), data.len());
 //! ```
+//!
+//! End-to-end native serving (no artifacts):
+//!
+//! ```
+//! use mfqat::coordinator::ElasticEngine;
+//! use mfqat::formats::ElementFormat;
+//! use mfqat::model::{ModelDims, ParamSet};
+//!
+//! let mut dims = ModelDims::new("demo", 64, 32, 2, 2, 16);
+//! dims.train_batch = 2;
+//! let manifest = dims.to_manifest();
+//! let ck = ParamSet::init(&manifest, 42)
+//!     .to_anchor_checkpoint(&manifest, ElementFormat::int(8))
+//!     .unwrap();
+//! let engine = ElasticEngine::native(dims, ck, 64 << 20).unwrap();
+//! let tokens: Vec<i32> = (0..2 * 17).map(|i| i % 64).collect();
+//! let nll = engine.score_batch(&tokens, ElementFormat::int(4)).unwrap();
+//! assert_eq!(nll.len(), 2);
+//! ```
 
+pub mod backend;
 pub mod checkpoint;
 pub mod coordinator;
 pub mod data;

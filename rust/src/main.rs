@@ -2,29 +2,31 @@
 //!
 //! Subcommands:
 //!   info                         inspect artifacts + manifest
-//!   pretrain                     train the base LM (substrate)
-//!   train --plan <name>          run a QAT/FT plan from the pretrained base
-//!   eval --checkpoint <p>        PPL + task grid for a checkpoint
+//!   pretrain                     train the base LM (needs `pjrt`)
+//!   train --plan <name>          run a QAT/FT plan (needs `pjrt`)
+//!   eval --checkpoint <p>        PPL grid for a checkpoint (native or pjrt)
 //!   convert --in <p> --format f  Slice-and-Scale convert a checkpoint
 //!   inspect --checkpoint <p>     dump checkpoint contents
 //!   serve                        run the elastic server demo workload
 //!   experiment <id>              regenerate a paper figure/table (or `all`)
 //!
 //! Global options: --config tiny|small|base (default tiny), --root <dir>,
-//! --seed N, --lrs a,b,c
+//! --seed N, --lrs a,b,c, --backend native|pjrt (default native).
+//!
+//! The default build carries only the native packed-MX backend: `serve` and
+//! `eval` work with no AOT artifacts and no XLA install. Training and the
+//! full experiment matrix execute AOT graphs and need `--features pjrt`.
 
 use anyhow::{anyhow, Context, Result};
 use mfqat::checkpoint::Checkpoint;
 use mfqat::coordinator::ElasticEngine;
 use mfqat::data::{Corpus, CorpusConfig};
-use mfqat::experiments::{self, Ctx};
 use mfqat::formats::ElementFormat;
-use mfqat::model::ParamSet;
-use mfqat::runtime::ArtifactSet;
+use mfqat::model::{ModelDims, ParamSet};
+use mfqat::runtime::Manifest;
 use mfqat::server::{Policy, Server, ServerConfig};
 use mfqat::util::cli::Args;
-use std::path::PathBuf;
-
+use std::path::{Path, PathBuf};
 
 fn main() {
     mfqat::util::logging::init();
@@ -40,10 +42,28 @@ fn repo_root(args: &Args) -> PathBuf {
         .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")))
 }
 
-fn open_ctx(args: &Args) -> Result<Ctx> {
+/// Model dims for `--config`: artifact manifest when present, else the
+/// built-in config table (native backend needs no artifacts at all).
+fn resolve_dims(args: &Args) -> Result<ModelDims> {
+    let config = args.get_or("config", "tiny").to_string();
+    let arts_dir = repo_root(args).join("artifacts").join(&config);
+    if arts_dir.join("manifest.json").exists() {
+        Ok(ModelDims::from_manifest(&Manifest::load(&arts_dir)?))
+    } else {
+        ModelDims::by_name(&config).ok_or_else(|| {
+            anyhow!(
+                "unknown config '{config}' and no artifacts at {}",
+                arts_dir.display()
+            )
+        })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn open_ctx(args: &Args) -> Result<mfqat::experiments::Ctx> {
     let config = args.get_or("config", "tiny").to_string();
     let seed = args.u64("seed", 20260710)?;
-    let mut ctx = Ctx::open(&repo_root(args), &config, seed)?;
+    let mut ctx = mfqat::experiments::Ctx::open(&repo_root(args), &config, seed)?;
     if let Some(lrs) = args.list("lrs") {
         ctx.lrs = lrs
             .iter()
@@ -60,26 +80,14 @@ fn run() -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "info" => info(&args),
-        "pretrain" => {
-            let ctx = open_ctx(&args)?;
-            let p = ctx.ensure_pretrained()?;
-            println!("pretrained: {} params, val ppl {:.3}", p.n_params(), ctx.val_ppl(&p)?);
-            Ok(())
-        }
-        "train" => train(&args),
+        "pretrain" => pretrain_cmd(&args),
+        "train" => train_cmd(&args),
         "eval" => eval_cmd(&args),
         "generate" => generate_cmd(&args),
         "convert" => convert(&args),
         "inspect" => inspect(&args),
         "serve" => serve(&args),
-        "experiment" => {
-            let id = args
-                .positional
-                .get(1)
-                .ok_or_else(|| anyhow!("usage: mfqat experiment <fig1|fig2|fig3|fig4|tab1|tab2|tab3|fig19|fig20|all>"))?;
-            let ctx = open_ctx(&args)?;
-            experiments::run(&ctx, id)
-        }
+        "experiment" => experiment_cmd(&args),
         _ => {
             print!("{}", HELP);
             Ok(())
@@ -92,43 +100,76 @@ const HELP: &str = "mfqat — Multi-Format QAT for Elastic Inference (paper repr
 USAGE: mfqat <command> [--config tiny] [--root DIR] [options]
 
 COMMANDS:
-  info                              show artifact manifest
-  pretrain [--pretrain-epochs N]    train the base LM on the synthetic corpus
-  train --plan <name> [--lr X]      run a training plan (mf_int, qat_int4, ...)
+  info                              show model config (+ artifact manifest)
+  pretrain [--pretrain-epochs N]    train the base LM (needs --features pjrt)
+  train --plan <name> [--lr X]      run a training plan (needs --features pjrt)
   eval --checkpoint P [--formats..] PPL grid for a checkpoint
+                                    [--backend native|pjrt]
   generate --checkpoint P --prompt S [--format F] [--tokens N] [--temp X]
-                                    sample a continuation (elastic precision)
+                                    sample a continuation (needs --features pjrt)
   convert --in P --format F --out Q Slice-and-Scale convert an anchor checkpoint
   inspect --checkpoint P            dump checkpoint metadata
-  serve [--policy ladder] [--requests N] [--burst N]
+  serve [--policy ladder] [--requests N] [--burst N] [--backend native|pjrt]
+        [--checkpoint P] [--cache-mb N]
                                     run the elastic serving demo workload
   experiment <id>                   regenerate a paper figure/table; id in
                                     fig1 fig2 fig3 fig4 tab1 tab2 tab3 fig19 fig20 all
+                                    (fig19/fig20 run natively; the rest need pjrt)
+
+The native backend serves packed MX weights directly — no XLA install and
+no AOT artifacts required.
 ";
 
 fn info(args: &Args) -> Result<()> {
     let root = repo_root(args);
     let config = args.get_or("config", "tiny");
-    let arts = ArtifactSet::open(&root.join("artifacts").join(config))?;
-    let m = &arts.manifest;
+    let arts_dir = root.join("artifacts").join(config);
+    let dims = resolve_dims(args)?;
     println!(
-        "config {}: d_model={} layers={} heads={} seq={} vocab={} block={}",
-        m.config_name, m.d_model, m.n_layers, m.n_heads, m.seq_len, m.vocab, m.block_size
+        "config {}: d_model={} layers={} heads={} seq={} vocab={} d_ff={} block={}",
+        dims.name,
+        dims.d_model,
+        dims.n_layers,
+        dims.n_heads,
+        dims.seq_len,
+        dims.vocab,
+        dims.d_ff,
+        dims.block_size
     );
+    let m = dims.to_manifest();
     println!(
         "params: {} tensors, {} total ({} quantized tensors)",
         m.params.len(),
         m.n_params,
         m.quant_indices().len()
     );
-    println!("artifacts:");
-    for (name, a) in &m.artifacts {
-        println!("  {name:<20} {}", a.file);
+    if arts_dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&arts_dir)?;
+        println!("artifacts:");
+        for (name, a) in &manifest.artifacts {
+            println!("  {name:<20} {}", a.file);
+        }
+    } else {
+        println!("artifacts: none (native backend only)");
     }
     Ok(())
 }
 
-fn train(args: &Args) -> Result<()> {
+#[cfg(feature = "pjrt")]
+fn pretrain_cmd(args: &Args) -> Result<()> {
+    let ctx = open_ctx(args)?;
+    let p = ctx.ensure_pretrained()?;
+    println!("pretrained: {} params, val ppl {:.3}", p.n_params(), ctx.val_ppl(&p)?);
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pretrain_cmd(_args: &Args) -> Result<()> {
+    anyhow::bail!("`pretrain` executes AOT train-step graphs — rebuild with `--features pjrt`")
+}
+
+#[cfg(feature = "pjrt")]
+fn train_cmd(args: &Args) -> Result<()> {
     let ctx = open_ctx(args)?;
     let plan = args
         .get("plan")
@@ -157,21 +198,75 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn train_cmd(_args: &Args) -> Result<()> {
+    anyhow::bail!("`train` executes AOT train-step graphs — rebuild with `--features pjrt`")
+}
+
 fn eval_cmd(args: &Args) -> Result<()> {
+    match args.get_or("backend", "native") {
+        "native" => eval_native(args),
+        "pjrt" => eval_pjrt(args),
+        other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
+    }
+}
+
+/// Native PPL grid: score the validation split through the packed-MX
+/// forward — works with no artifacts and no XLA.
+fn eval_native(args: &Args) -> Result<()> {
+    use mfqat::backend::NativeWeights;
+    let dims = resolve_dims(args)?;
+    let ck_path = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint required"))?;
+    let ck = Checkpoint::load(&PathBuf::from(ck_path))?;
+    let fmts = parse_formats(args)?;
+    // Only the validation split is scored; keep the unused splits tiny.
+    let corpus = Corpus::generate(CorpusConfig {
+        seed: args.u64("seed", 20260710)?,
+        width: dims.seq_len + 1,
+        pretrain_sequences: 8,
+        qat_sequences: 8,
+        val_sequences: 64,
+    });
+    println!("{:<14} {:>10}   (native backend)", "format", "val_ppl");
+    let dense = NativeWeights::dense_from_checkpoint(&dims, &ck, None)?;
+    println!(
+        "{:<14} {:>10.3}",
+        "fp32",
+        mfqat::eval::perplexity_native(&dense, &corpus.val, dims.train_batch)?
+    );
+    for fmt in fmts {
+        let w = NativeWeights::packed_from_checkpoint(&dims, &ck, fmt)?;
+        println!(
+            "{:<14} {:>10.3}",
+            fmt.long_name(),
+            mfqat::eval::perplexity_native(&w, &corpus.val, dims.train_batch)?
+        );
+    }
+    Ok(())
+}
+
+fn parse_formats(args: &Args) -> Result<Vec<ElementFormat>> {
+    match args.list("formats") {
+        Some(list) => list
+            .iter()
+            .map(|s| ElementFormat::parse(s))
+            .collect::<Result<_>>(),
+        None => Ok(ElementFormat::all_int()),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn eval_pjrt(args: &Args) -> Result<()> {
     let ctx = open_ctx(args)?;
     let ck_path = args
         .get("checkpoint")
         .ok_or_else(|| anyhow!("--checkpoint required"))?;
     let ck = Checkpoint::load(&PathBuf::from(ck_path))?;
     let params = ParamSet::from_checkpoint(&ctx.arts.manifest, &ck, None)?;
-    let fmts: Vec<ElementFormat> = match args.list("formats") {
-        Some(list) => list
-            .iter()
-            .map(|s| ElementFormat::parse(s))
-            .collect::<Result<_>>()?,
-        None => ElementFormat::all_int(),
-    };
-    println!("{:<14} {:>10}", "format", "val_ppl");
+    let fmts = parse_formats(args)?;
+    println!("{:<14} {:>10}   (pjrt backend)", "format", "val_ppl");
     println!("{:<14} {:>10.3}", "fp32", ctx.val_ppl(&params)?);
     for fmt in fmts {
         let q = params.ptq(&ctx.arts.manifest, fmt)?;
@@ -180,6 +275,12 @@ fn eval_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn eval_pjrt(_args: &Args) -> Result<()> {
+    anyhow::bail!("this build has no PJRT backend — rebuild with `--features pjrt`")
+}
+
+#[cfg(feature = "pjrt")]
 fn generate_cmd(args: &Args) -> Result<()> {
     let ctx = open_ctx(args)?;
     let ck_path = args
@@ -202,6 +303,11 @@ fn generate_cmd(args: &Args) -> Result<()> {
     let out = mfqat::eval::generate::generate(&ctx.rt, &ctx.arts, &lits, prompt, n, &cfg)?;
     println!("{prompt}│{out}");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn generate_cmd(_args: &Args) -> Result<()> {
+    anyhow::bail!("`generate` runs the AOT forward graph — rebuild with `--features pjrt`")
 }
 
 fn convert(args: &Args) -> Result<()> {
@@ -266,35 +372,90 @@ fn inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Base weights for the serving demo: a pretrained checkpoint when one is
+/// available (training it first under `pjrt` if artifacts exist), else a
+/// random init — the serving path itself is identical either way.
+fn base_params(args: &Args, manifest: &Manifest) -> Result<ParamSet> {
+    let root = repo_root(args);
+    let pre = root
+        .join("runs")
+        .join(&manifest.config_name)
+        .join("pretrained.mfq");
+    if pre.exists() {
+        let ck = Checkpoint::load(&pre)?;
+        return ParamSet::from_checkpoint(manifest, &ck, None);
+    }
+    #[cfg(feature = "pjrt")]
+    if root
+        .join("artifacts")
+        .join(&manifest.config_name)
+        .join("manifest.json")
+        .exists()
+    {
+        let ctx = open_ctx(args)?;
+        return ctx.ensure_pretrained();
+    }
+    log::warn!("no pretrained base found — serving random-init weights");
+    Ok(ParamSet::init(manifest, args.u64("seed", 20260710)?))
+}
+
+/// Build (or reuse) the demo anchor checkpoint.
+fn default_anchor_checkpoint(args: &Args, dims: &ModelDims) -> Result<PathBuf> {
+    let runs_dir = repo_root(args).join("runs").join(&dims.name);
+    let path = runs_dir.join("anchor_serve_int8.mfq");
+    if path.exists() {
+        return Ok(path);
+    }
+    let manifest = dims.to_manifest();
+    let params = base_params(args, &manifest)?;
+    std::fs::create_dir_all(&runs_dir)?;
+    params
+        .to_anchor_checkpoint(&manifest, ElementFormat::int(8))?
+        .save(&path)?;
+    Ok(path)
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_engine(root: &Path, config: &str, ck: &Path, cache_bytes: usize) -> Result<ElasticEngine> {
+    ElasticEngine::open(&root.join("artifacts").join(config), ck, cache_bytes)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_engine(
+    _root: &Path,
+    _config: &str,
+    _ck: &Path,
+    _cache_bytes: usize,
+) -> Result<ElasticEngine> {
+    anyhow::bail!("this build has no PJRT backend — rebuild with `--features pjrt`")
+}
+
 /// Serving demo: fire a bursty synthetic workload at the elastic server and
 /// report the precision mix + latency profile.
 fn serve(args: &Args) -> Result<()> {
-    let ctx = open_ctx(args)?;
+    let backend = args.get_or("backend", "native").to_string();
     let policy = Policy::parse(args.get_or("policy", "ladder"))?;
     let n_requests = args.usize("requests", 256)?;
     let burst = args.usize("burst", 32)?;
+    let cache_bytes = args.usize("cache-mb", 256)? << 20;
+    let dims = resolve_dims(args)?;
+    let width = dims.seq_len + 1;
 
-    // Need an anchor checkpoint: build one from the pretrained base if the
-    // user didn't provide one.
     let ck_path = match args.get("checkpoint") {
         Some(p) => PathBuf::from(p),
-        None => {
-            let path = ctx.runs_dir.join("anchor_serve_int8.mfq");
-            if !path.exists() {
-                let base = ctx.ensure_pretrained()?;
-                std::fs::create_dir_all(&ctx.runs_dir)?;
-                base.to_anchor_checkpoint(&ctx.arts.manifest, ElementFormat::int(8))?
-                    .save(&path)?;
-            }
-            path
-        }
+        None => default_anchor_checkpoint(args, &dims)?,
     };
+
+    let root = repo_root(args);
     let config = args.get_or("config", "tiny").to_string();
-    let arts_dir = repo_root(args).join("artifacts").join(&config);
-    let width = ctx.arts.manifest.seq_len + 1;
+    let dims_worker = dims.clone();
     let (server, client) = Server::start(
         width,
-        move || ElasticEngine::open(&arts_dir, &ck_path, 256 << 20),
+        move || match backend.as_str() {
+            "native" => ElasticEngine::open_native(dims_worker, &ck_path, cache_bytes),
+            "pjrt" => pjrt_engine(&root, &config, &ck_path, cache_bytes),
+            other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
+        },
         ServerConfig {
             policy,
             gather_window: std::time::Duration::from_millis(2),
@@ -303,7 +464,7 @@ fn serve(args: &Args) -> Result<()> {
 
     let corpus = Corpus::generate(CorpusConfig {
         seed: 42,
-        width: ctx.arts.manifest.seq_len + 1,
+        width,
         pretrain_sequences: 8,
         qat_sequences: 8,
         val_sequences: n_requests.div_ceil(64).max(1) * 64,
@@ -342,8 +503,39 @@ fn serve(args: &Args) -> Result<()> {
         metrics.requests as f64 / elapsed
     );
     println!("  {}", metrics.summary());
-    println!("  format conversions performed: {}", metrics.conversions);
+    println!("  format conversions performed: {}", metrics.conversions());
     drop(client);
     server.shutdown();
     Ok(())
+}
+
+fn experiment_cmd(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| {
+            anyhow!("usage: mfqat experiment <fig1|fig2|fig3|fig4|tab1|tab2|tab3|fig19|fig20|all>")
+        })?
+        .clone();
+    // Tensor-level SS fidelity sweeps need no model runtime at all.
+    if id == "fig19" || id == "fig20" {
+        let results = repo_root(args)
+            .join("results")
+            .join(args.get_or("config", "tiny"));
+        std::fs::create_dir_all(&results)?;
+        let family = if id == "fig19" { "int" } else { "fp" };
+        return mfqat::experiments::ss_eval::fig19_or_20(family, &results.join(&id));
+    }
+    experiment_pjrt(args, &id)
+}
+
+#[cfg(feature = "pjrt")]
+fn experiment_pjrt(args: &Args, id: &str) -> Result<()> {
+    let ctx = open_ctx(args)?;
+    mfqat::experiments::run(&ctx, id)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn experiment_pjrt(_args: &Args, id: &str) -> Result<()> {
+    anyhow::bail!("experiment '{id}' trains/evaluates through AOT graphs — rebuild with `--features pjrt`")
 }

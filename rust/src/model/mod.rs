@@ -206,6 +206,179 @@ pub fn anchor_for(target: ElementFormat) -> ElementFormat {
     }
 }
 
+/// Model dimensions — everything a backend needs to run a forward pass and
+/// to lay out the parameter table. Mirrors `python/compile/model.py`
+/// (`ModelConfig` + `param_specs`), so the native backend can serve a
+/// checkpoint with *no* AOT artifacts on disk: the built-in config table
+/// ([`ModelDims::by_name`]) or an artifact manifest
+/// ([`ModelDims::from_manifest`]) both produce the same spec table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelDims {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub d_ff: usize,
+    /// MX scaling block size.
+    pub block_size: usize,
+    /// Serving/AOT batch size (rows per scoring batch).
+    pub train_batch: usize,
+}
+
+impl ModelDims {
+    /// Dims with the python defaults (`ff_mult = 4`, block 32, batch 8).
+    pub fn new(
+        name: &str,
+        vocab: usize,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        seq_len: usize,
+    ) -> ModelDims {
+        assert!(d_model % n_heads == 0, "d_model must divide into heads");
+        ModelDims {
+            name: name.to_string(),
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            seq_len,
+            d_ff: d_model * 4,
+            block_size: 32,
+            train_batch: 8,
+        }
+    }
+
+    /// The built-in config table (mirrors `CONFIGS` in python).
+    pub fn by_name(name: &str) -> Option<ModelDims> {
+        match name {
+            "tiny" => Some(ModelDims::new("tiny", 256, 128, 4, 4, 128)),
+            "small" => Some(ModelDims::new("small", 256, 256, 6, 8, 128)),
+            "base" => Some(ModelDims::new("base", 256, 512, 8, 8, 256)),
+            _ => None,
+        }
+    }
+
+    /// Dims from an AOT artifact manifest (`d_ff` recovered from the
+    /// `l0.up` parameter shape; falls back to `4 * d_model`).
+    pub fn from_manifest(m: &Manifest) -> ModelDims {
+        let d_ff = m
+            .params
+            .iter()
+            .find(|p| p.name == "l0.up")
+            .and_then(|p| p.shape.last().copied())
+            .unwrap_or(m.d_model * 4);
+        ModelDims {
+            name: m.config_name.clone(),
+            vocab: m.vocab,
+            d_model: m.d_model,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            seq_len: m.seq_len,
+            d_ff,
+            block_size: m.block_size,
+            train_batch: m.train_batch,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Ordered parameter table (= HLO argument order in python exports).
+    pub fn param_specs(&self) -> Vec<crate::runtime::ParamInfo> {
+        use crate::runtime::ParamInfo;
+        let d = self.d_model;
+        let mut specs = vec![
+            ParamInfo {
+                name: "emb".into(),
+                shape: vec![self.vocab, d],
+                quantized: false,
+                init: "normal".into(),
+            },
+            ParamInfo {
+                name: "pos".into(),
+                shape: vec![self.seq_len, d],
+                quantized: false,
+                init: "normal".into(),
+            },
+        ];
+        for i in 0..self.n_layers {
+            specs.push(ParamInfo {
+                name: format!("l{i}.ln1"),
+                shape: vec![d],
+                quantized: false,
+                init: "ones".into(),
+            });
+            specs.push(ParamInfo {
+                name: format!("l{i}.qkv"),
+                shape: vec![d, 3 * d],
+                quantized: true,
+                init: "normal".into(),
+            });
+            specs.push(ParamInfo {
+                name: format!("l{i}.proj"),
+                shape: vec![d, d],
+                quantized: true,
+                init: "normal".into(),
+            });
+            specs.push(ParamInfo {
+                name: format!("l{i}.ln2"),
+                shape: vec![d],
+                quantized: false,
+                init: "ones".into(),
+            });
+            specs.push(ParamInfo {
+                name: format!("l{i}.up"),
+                shape: vec![d, self.d_ff],
+                quantized: true,
+                init: "normal".into(),
+            });
+            specs.push(ParamInfo {
+                name: format!("l{i}.down"),
+                shape: vec![self.d_ff, d],
+                quantized: true,
+                init: "normal".into(),
+            });
+        }
+        specs.push(ParamInfo {
+            name: "lnf".into(),
+            shape: vec![d],
+            quantized: false,
+            init: "ones".into(),
+        });
+        specs.push(ParamInfo {
+            name: "head".into(),
+            shape: vec![d, self.vocab],
+            quantized: false,
+            init: "normal".into(),
+        });
+        specs
+    }
+
+    /// Synthesize a [`Manifest`] (empty artifact table) so the ParamSet /
+    /// checkpoint machinery works without any AOT export on disk.
+    pub fn to_manifest(&self) -> Manifest {
+        let params = self.param_specs();
+        let n_params = params.iter().map(|p| p.numel()).sum();
+        Manifest {
+            config_name: self.name.clone(),
+            vocab: self.vocab,
+            d_model: self.d_model,
+            n_layers: self.n_layers,
+            n_heads: self.n_heads,
+            seq_len: self.seq_len,
+            block_size: self.block_size,
+            n_params,
+            train_batch: self.train_batch,
+            params,
+            artifacts: std::collections::BTreeMap::new(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,6 +496,20 @@ mod tests {
         let mut ck = p.to_anchor_checkpoint(&m, ElementFormat::int(8)).unwrap();
         ck.tensors.remove("l0.qkv");
         assert!(ParamSet::from_checkpoint(&m, &ck, None).is_err());
+    }
+
+    #[test]
+    fn model_dims_spec_table_matches_python_layout() {
+        let dims = ModelDims::by_name("tiny").unwrap();
+        let m = dims.to_manifest();
+        // emb/pos + 6 per layer + lnf/head.
+        assert_eq!(m.params.len(), 2 + 6 * dims.n_layers + 2);
+        assert_eq!(m.quant_indices().len(), 4 * dims.n_layers);
+        // tiny: 869,504 params (~0.9M, matching python's n_params()).
+        assert_eq!(m.n_params, 869_504);
+        assert_eq!(ModelDims::from_manifest(&m), dims);
+        assert_eq!(dims.head_dim(), 32);
+        assert!(ModelDims::by_name("bogus").is_none());
     }
 
     #[test]

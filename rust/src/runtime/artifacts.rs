@@ -4,11 +4,14 @@
 //! dimensions, and the artifact file table. [`ArtifactSet`] is the lazy
 //! loader/compiler cache on top of a [`super::Runtime`].
 
+#[cfg(feature = "pjrt")]
 use super::{Executable, Runtime};
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 /// One model parameter as exported (name, shape, QAT membership).
 #[derive(Debug, Clone, PartialEq)]
@@ -110,12 +113,14 @@ impl Manifest {
 }
 
 /// Lazy loader + compile cache for one artifact directory.
+#[cfg(feature = "pjrt")]
 pub struct ArtifactSet {
     pub dir: PathBuf,
     pub manifest: Manifest,
     cache: std::sync::Mutex<BTreeMap<String, std::sync::Arc<Executable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl ArtifactSet {
     /// Open `artifacts/<config>` and parse its manifest.
     pub fn open(dir: &Path) -> Result<ArtifactSet> {
@@ -163,6 +168,7 @@ impl ArtifactSet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn artifacts_dir() -> Option<PathBuf> {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");

@@ -8,20 +8,32 @@
 //! All exported computations are lowered with `return_tuple=True`, so every
 //! execution returns one tuple buffer which we decompose into per-output
 //! literals.
+//!
+//! Everything that touches PJRT is gated behind the default-off `pjrt`
+//! feature; the artifact *manifest* ([`Manifest`], [`ParamInfo`]) stays
+//! available unconditionally because the native backend and the parameter
+//! spec table ride on it.
 
 pub mod artifacts;
 
-pub use artifacts::{ArtifactSet, Manifest, ParamInfo};
+#[cfg(feature = "pjrt")]
+pub use artifacts::ArtifactSet;
+pub use artifacts::{Manifest, ParamInfo};
 
+#[cfg(feature = "pjrt")]
 use crate::tensor::Tensor;
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
+#[cfg(feature = "pjrt")]
 /// A PJRT client (CPU).
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {
@@ -59,12 +71,14 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 /// A compiled computation.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with literal arguments (owned or borrowed); returns the
     /// decomposed output tuple.
@@ -89,6 +103,7 @@ impl Executable {
 
 // ---------------------------------------------------------------- literals
 
+#[cfg(feature = "pjrt")]
 /// f32 tensor → literal.
 pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(&t.data);
@@ -96,6 +111,7 @@ pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
     lit.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e:?}"))
 }
 
+#[cfg(feature = "pjrt")]
 /// i32 data → literal of the given shape.
 pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     let n: usize = shape.iter().product();
@@ -107,16 +123,19 @@ pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     lit.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e:?}"))
 }
 
+#[cfg(feature = "pjrt")]
 /// f32 scalar literal.
 pub fn f32_scalar(x: f32) -> xla::Literal {
     xla::Literal::scalar(x)
 }
 
+#[cfg(feature = "pjrt")]
 /// i32 scalar literal.
 pub fn i32_scalar(x: i32) -> xla::Literal {
     xla::Literal::scalar(x)
 }
 
+#[cfg(feature = "pjrt")]
 /// literal → f32 tensor (shape recovered from the literal).
 pub fn literal_tensor(lit: &xla::Literal) -> Result<Tensor> {
     let shape = lit
@@ -129,6 +148,7 @@ pub fn literal_tensor(lit: &xla::Literal) -> Result<Tensor> {
     Tensor::new(&dims, data).context("literal tensor")
 }
 
+#[cfg(feature = "pjrt")]
 /// literal → f32 scalar.
 pub fn literal_f32(lit: &xla::Literal) -> Result<f32> {
     lit.get_first_element::<f32>()

@@ -1,11 +1,13 @@
 //! Serving metrics: request counts per format, latency distribution,
-//! batch-size and execution-time statistics.
+//! batch-size and execution-time statistics, and weight-cache counters.
 
+use crate::coordinator::CacheStats;
 use crate::formats::ElementFormat;
 use crate::util::stats::{LatencyHist, Running};
 use std::collections::BTreeMap;
 
-/// Aggregated server metrics (guarded by a mutex in the server).
+/// Aggregated server metrics (guarded by a mutex in the server; the worker
+/// takes that lock once per executed batch).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests: u64,
@@ -13,8 +15,8 @@ pub struct Metrics {
     pub latency: LatencyHist,
     pub batch_size: Running,
     pub exec_time: Running,
-    /// Anchor→target weight derivations performed (format-cache misses).
-    pub conversions: u64,
+    /// Weight-cache counter snapshot (hits/misses/evictions/bytes).
+    pub cache: CacheStats,
 }
 
 impl Metrics {
@@ -33,6 +35,16 @@ impl Metrics {
         self.exec_time.push(exec_s);
     }
 
+    /// Refresh the weight-cache counter snapshot (once per batch).
+    pub fn set_cache(&mut self, stats: CacheStats) {
+        self.cache = stats;
+    }
+
+    /// Anchor→target weight derivations performed (= format-cache misses).
+    pub fn conversions(&self) -> u64 {
+        self.cache.misses
+    }
+
     pub fn format_counts(&self) -> &BTreeMap<String, u64> {
         &self.per_format
     }
@@ -45,11 +57,15 @@ impl Metrics {
             .map(|(f, n)| format!("{f}:{n}"))
             .collect();
         format!(
-            "requests={} latency[{}] mean_batch={:.2} mix=[{}]",
+            "requests={} latency[{}] mean_batch={:.2} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]",
             self.requests,
             self.latency.summary(),
             self.batch_size.mean(),
-            mix.join(" ")
+            mix.join(" "),
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.evictions,
+            self.cache.used_bytes / 1024,
         )
     }
 }
@@ -71,5 +87,22 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests=3"));
         assert!(s.contains("int8:2"));
+    }
+
+    #[test]
+    fn cache_counters_flow_into_summary() {
+        let mut m = Metrics::new();
+        m.set_cache(CacheStats {
+            hits: 7,
+            misses: 3,
+            evictions: 2,
+            entries: 1,
+            used_bytes: 4096,
+        });
+        assert_eq!(m.conversions(), 3);
+        let s = m.summary();
+        assert!(s.contains("hit:7"), "{s}");
+        assert!(s.contains("miss:3"), "{s}");
+        assert!(s.contains("evict:2"), "{s}");
     }
 }

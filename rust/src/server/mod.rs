@@ -196,8 +196,8 @@ fn worker_loop(
     metrics: Arc<Mutex<Metrics>>,
     alive: &AtomicBool,
 ) {
-    let b = engine.arts.manifest.train_batch;
-    let width = engine.arts.manifest.seq_len + 1;
+    let b = engine.dims().train_batch;
+    let width = engine.dims().seq_len + 1;
     let mut backlog: Vec<ScoreRequest> = Vec::new();
     let mut slo = SloState::default();
     loop {
@@ -234,48 +234,61 @@ fn worker_loop(
 
         let queue_depth = backlog.len();
         let batch: Vec<ScoreRequest> = backlog.drain(..backlog.len().min(b)).collect();
-        // Pinned-format requests win over the policy (first pin in batch);
-        // otherwise the policy maps the *total* queue depth to a format.
-        let fmt = batch
-            .iter()
-            .find_map(|r| r.format)
-            .unwrap_or_else(|| config.policy.choose_with(queue_depth, &slo));
-
-        let t0 = Instant::now();
-        let mut flat = Vec::with_capacity(b * width);
-        for j in 0..b {
-            let r = batch.get(j).unwrap_or(&batch[0]);
-            flat.extend_from_slice(&r.tokens);
-        }
-        let result = engine.score_b8(&flat, fmt);
-        let elapsed = t0.elapsed();
-        slo.observe(&config.policy, elapsed.as_secs_f64());
-
-        match result {
-            Ok(nlls) => {
-                let bs = batch.len();
-                for (j, req) in batch.into_iter().enumerate() {
-                    let latency = req.enqueued.elapsed();
-                    let resp = ScoreResponse {
-                        nll: nlls[j],
-                        format: fmt,
-                        batch_size: bs,
-                        queue_depth,
-                        latency,
-                    };
-                    metrics
-                        .lock()
-                        .unwrap()
-                        .record(fmt, latency.as_secs_f64(), bs, elapsed.as_secs_f64());
-                    let _ = req.respond.send(Ok(resp));
-                }
-                metrics.lock().unwrap().conversions = engine.conversions();
+        // Unpinned requests take the policy's pick for the *total* queue
+        // depth; pinned requests must be served at their pin, so the batch
+        // splits into per-format sub-batches (one execution each) instead
+        // of letting the first pin silently win for everyone.
+        let policy_fmt = config.policy.choose_with(queue_depth, &slo);
+        let mut groups: Vec<(ElementFormat, Vec<ScoreRequest>)> = Vec::new();
+        for r in batch {
+            let fmt = r.format.unwrap_or(policy_fmt);
+            match groups.iter_mut().find(|(f, _)| *f == fmt) {
+                Some((_, reqs)) => reqs.push(r),
+                None => groups.push((fmt, vec![r])),
             }
-            Err(e) => {
-                let msg = format!("batch execution failed: {e:#}");
-                log::error!("{msg}");
-                for req in batch {
-                    let _ = req.respond.send(Err(msg.clone()));
+        }
+
+        for (fmt, group) in groups {
+            let t0 = Instant::now();
+            // Sub-batches execute at their true size; only the PJRT graph
+            // pads internally to its fixed batch shape.
+            let mut flat = Vec::with_capacity(group.len() * width);
+            for r in &group {
+                flat.extend_from_slice(&r.tokens);
+            }
+            let result = engine.score_batch(&flat, fmt);
+            let elapsed = t0.elapsed();
+            slo.observe(&config.policy, elapsed.as_secs_f64());
+
+            match result {
+                Ok(nlls) => {
+                    let bs = group.len();
+                    let latencies: Vec<Duration> =
+                        group.iter().map(|r| r.enqueued.elapsed()).collect();
+                    // One metrics lock per executed sub-batch.
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        for latency in &latencies {
+                            m.record(fmt, latency.as_secs_f64(), bs, elapsed.as_secs_f64());
+                        }
+                        m.set_cache(engine.cache_stats());
+                    }
+                    for ((j, req), latency) in group.into_iter().enumerate().zip(latencies) {
+                        let _ = req.respond.send(Ok(ScoreResponse {
+                            nll: nlls[j],
+                            format: fmt,
+                            batch_size: bs,
+                            queue_depth,
+                            latency,
+                        }));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("batch execution failed: {e:#}");
+                    log::error!("{msg}");
+                    for req in group {
+                        let _ = req.respond.send(Err(msg.clone()));
+                    }
                 }
             }
         }

@@ -11,13 +11,19 @@ pub mod schedule;
 
 pub use schedule::{Phase, TrainPlan};
 
+#[cfg(feature = "pjrt")]
 use crate::model::ParamSet;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{self, ArtifactSet, Runtime};
+#[cfg(feature = "pjrt")]
 use crate::tensor::Tensor;
+#[cfg(feature = "pjrt")]
 use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use optimizer::OptState;
 
 /// Training driver bound to one artifact set.
+#[cfg(feature = "pjrt")]
 pub struct Trainer<'a> {
     pub rt: &'a Runtime,
     pub arts: &'a ArtifactSet,
@@ -36,6 +42,7 @@ pub struct EpochStats {
     pub steps: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'a> Trainer<'a> {
     pub fn new(rt: &'a Runtime, arts: &'a ArtifactSet, params: ParamSet) -> Trainer<'a> {
         Trainer {

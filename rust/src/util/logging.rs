@@ -10,8 +10,6 @@ struct StderrLogger {
     start: Instant,
 }
 
-static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
-
 impl log::Log for StderrLogger {
     fn enabled(&self, _metadata: &Metadata) -> bool {
         true
@@ -43,7 +41,9 @@ pub fn init() {
         Ok("trace") => LevelFilter::Trace,
         _ => LevelFilter::Info,
     };
-    let logger = Box::new(StderrLogger { start: *START });
+    let logger = Box::new(StderrLogger {
+        start: Instant::now(),
+    });
     if log::set_boxed_logger(logger).is_ok() {
         log::set_max_level(level);
     }

@@ -106,25 +106,25 @@ fn anchor_checkpoint_to_elastic_scoring() {
     let ck = Checkpoint::load(&tmp).unwrap();
     let engine = ElasticEngine::from_parts(rt, arts, ck, ElementFormat::int(8), 64 << 20);
 
-    let m = &engine.arts.manifest;
+    let dims = engine.dims().clone();
     let mut batch = Vec::new();
-    for r in 0..m.train_batch {
-        batch.extend_from_slice(&corpus.val[r][..m.seq_len + 1]);
+    for r in 0..dims.train_batch {
+        batch.extend_from_slice(&corpus.val[r][..dims.seq_len + 1]);
     }
-    let nll8 = engine.score_b8(&batch, ElementFormat::int(8)).unwrap();
-    let nll4 = engine.score_b8(&batch, ElementFormat::int(4)).unwrap();
-    let nll2 = engine.score_b8(&batch, ElementFormat::int(2)).unwrap();
+    let nll8 = engine.score_batch(&batch, ElementFormat::int(8)).unwrap();
+    let nll4 = engine.score_batch(&batch, ElementFormat::int(4)).unwrap();
+    let nll2 = engine.score_batch(&batch, ElementFormat::int(2)).unwrap();
     for row in [&nll8, &nll4, &nll2] {
-        assert_eq!(row.len(), m.train_batch);
+        assert_eq!(row.len(), dims.train_batch);
         assert!(row.iter().all(|x| x.is_finite() && *x > 0.0));
     }
     // Untrained model ≈ uniform everywhere; formats shouldn't explode it.
-    let uniform = (m.vocab as f32).ln();
+    let uniform = (dims.vocab as f32).ln();
     assert!((nll8[0] - uniform).abs() < 1.5, "nll8 {} vs {}", nll8[0], uniform);
 
     // Each distinct format = exactly one conversion; repeats are cache hits.
     assert_eq!(engine.conversions(), 3);
-    engine.score_b8(&batch, ElementFormat::int(4)).unwrap();
+    engine.score_batch(&batch, ElementFormat::int(4)).unwrap();
     assert_eq!(engine.conversions(), 3, "cache hit on repeat");
     assert_eq!(engine.cached_formats(), 3);
     let _ = std::fs::remove_file(&tmp);

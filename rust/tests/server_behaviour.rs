@@ -1,43 +1,43 @@
-//! Elastic server integration: batching, policy-driven format selection,
-//! pinned formats, metrics, and graceful shutdown.
+//! Elastic server integration over the native backend: batching,
+//! policy-driven format selection, pinned formats (including mixed pins in
+//! one gather window), metrics/cache counters, and graceful shutdown.
+//!
+//! Runs everywhere — the native backend needs no AOT artifacts and no XLA.
 
 use mfqat::coordinator::ElasticEngine;
-use mfqat::data::{Corpus, CorpusConfig};
 use mfqat::formats::ElementFormat;
-use mfqat::model::ParamSet;
-use mfqat::runtime::{ArtifactSet, Runtime};
+use mfqat::model::{ModelDims, ParamSet};
 use mfqat::server::{Policy, Server, ServerConfig};
-use std::path::PathBuf;
 use std::time::Duration;
 
-fn arts_dir() -> Option<PathBuf> {
-    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-    if d.join("manifest.json").exists() {
-        Some(d)
-    } else {
-        eprintln!("skipping (run `make artifacts`)");
-        None
-    }
+/// Small dims so the whole suite stays fast on one core.
+fn test_dims() -> ModelDims {
+    let mut dims = ModelDims::new("srv", 64, 32, 2, 2, 16);
+    dims.train_batch = 4;
+    dims
 }
 
-fn start_server(dir: PathBuf, policy: Policy) -> (Server, mfqat::server::Client, usize) {
-    // Build the engine inside the worker (PJRT handles are not Send).
-    let manifest = mfqat::runtime::Manifest::load(&dir).unwrap();
-    let width = manifest.seq_len + 1;
+fn test_corpus(width: usize, seed: u64, vocab: usize) -> Vec<Vec<i32>> {
+    // Deterministic token rows within the test vocab.
+    (0..64u64)
+        .map(|r| {
+            (0..width)
+                .map(|i| (((r * 31 + seed * 7 + i as u64 * 13) % vocab as u64) as i32))
+                .collect()
+        })
+        .collect()
+}
+
+fn start_server(policy: Policy, seed: u64) -> (Server, mfqat::server::Client, usize) {
+    let dims = test_dims();
+    let width = dims.seq_len + 1;
     let (server, client) = Server::start(
         width,
         move || {
-            let rt = Runtime::cpu()?;
-            let arts = ArtifactSet::open(&dir)?;
-            let params = ParamSet::init(&arts.manifest, 11);
-            let ck = params.to_anchor_checkpoint(&arts.manifest, ElementFormat::int(8))?;
-            Ok(ElasticEngine::from_parts(
-                rt,
-                arts,
-                ck,
-                ElementFormat::int(8),
-                64 << 20,
-            ))
+            let manifest = dims.to_manifest();
+            let params = ParamSet::init(&manifest, seed);
+            let ck = params.to_anchor_checkpoint(&manifest, ElementFormat::int(8))?;
+            ElasticEngine::native(dims, ck, 64 << 20)
         },
         ServerConfig {
             policy,
@@ -50,19 +50,12 @@ fn start_server(dir: PathBuf, policy: Policy) -> (Server, mfqat::server::Client,
 
 #[test]
 fn requests_are_scored_and_batched() {
-    let Some(dir) = arts_dir() else { return };
-    let corpus = Corpus::generate(CorpusConfig {
-        seed: 9,
-        width: 129,
-        pretrain_sequences: 8,
-        qat_sequences: 8,
-        val_sequences: 16,
-    });
-    let (server, client, _) = start_server(dir, Policy::Fixed(ElementFormat::int(8)));
+    let (server, client, width) = start_server(Policy::Fixed(ElementFormat::int(8)), 11);
+    let rows = test_corpus(width, 9, 64);
 
     // Fire a burst; all must come back finite with the fixed format.
     let rxs: Vec<_> = (0..16)
-        .map(|i| client.submit(&corpus.val[i % corpus.val.len()], None).unwrap())
+        .map(|i| client.submit(&rows[i % rows.len()], None).unwrap())
         .collect();
     let mut max_batch = 0usize;
     for rx in rxs {
@@ -74,23 +67,18 @@ fn requests_are_scored_and_batched() {
     assert!(max_batch > 1, "burst must be batched (got {max_batch})");
     let m = server.metrics.lock().unwrap().clone();
     assert_eq!(m.requests, 16);
+    assert!(m.cache.misses >= 1, "int8 derivation is a cache miss");
+    assert_eq!(m.cache.entries, 1, "one format resident after a fixed-format run");
     drop(client);
     server.shutdown();
 }
 
 #[test]
 fn pinned_format_wins_over_policy() {
-    let Some(dir) = arts_dir() else { return };
-    let corpus = Corpus::generate(CorpusConfig {
-        seed: 10,
-        width: 129,
-        pretrain_sequences: 8,
-        qat_sequences: 8,
-        val_sequences: 8,
-    });
-    let (server, client, _) = start_server(dir, Policy::Fixed(ElementFormat::int(8)));
+    let (server, client, width) = start_server(Policy::Fixed(ElementFormat::int(8)), 12);
+    let rows = test_corpus(width, 10, 64);
     let resp = client
-        .score(&corpus.val[0], Some(ElementFormat::int(3)))
+        .score(&rows[0], Some(ElementFormat::int(3)))
         .unwrap();
     assert_eq!(resp.format, ElementFormat::int(3), "pin honoured");
     drop(client);
@@ -98,30 +86,54 @@ fn pinned_format_wins_over_policy() {
 }
 
 #[test]
+fn mixed_pins_in_one_window_each_get_their_format() {
+    // Regression for the mixed-pin batching bug: when requests pinned to
+    // *different* formats land in the same gather window, each must be
+    // served at its own pin (the old code let the first pin win for all).
+    let (server, client, width) = start_server(Policy::Fixed(ElementFormat::int(8)), 13);
+    let rows = test_corpus(width, 11, 64);
+    let pins = [
+        Some(ElementFormat::int(4)),
+        Some(ElementFormat::int(6)),
+        Some(ElementFormat::int(4)),
+        None, // policy pick
+        Some(ElementFormat::int(2)),
+        Some(ElementFormat::int(6)),
+    ];
+    // Submit the whole burst back-to-back so several pins share a window.
+    let rxs: Vec<_> = pins
+        .iter()
+        .enumerate()
+        .map(|(i, pin)| client.submit(&rows[i % rows.len()], *pin).unwrap())
+        .collect();
+    for (rx, pin) in rxs.into_iter().zip(pins) {
+        let resp = rx.recv().unwrap().unwrap();
+        let want = pin.unwrap_or(ElementFormat::int(8));
+        assert_eq!(resp.format, want, "response served at the wrong precision");
+        assert!(resp.nll.is_finite());
+    }
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
 fn ladder_policy_degrades_under_load() {
-    let Some(dir) = arts_dir() else { return };
-    let corpus = Corpus::generate(CorpusConfig {
-        seed: 11,
-        width: 129,
-        pretrain_sequences: 8,
-        qat_sequences: 8,
-        val_sequences: 64,
-    });
     // Aggressive ladder so a modest burst crosses thresholds.
     let ladder = Policy::Ladder(vec![
         (2, ElementFormat::int(8)),
         (10, ElementFormat::int(6)),
         (usize::MAX, ElementFormat::int(4)),
     ]);
-    let (server, client, _) = start_server(dir, ladder);
+    let (server, client, width) = start_server(ladder, 14);
+    let rows = test_corpus(width, 12, 64);
 
     // Single request under no load → highest precision.
-    let solo = client.score(&corpus.val[0], None).unwrap();
+    let solo = client.score(&rows[0], None).unwrap();
     assert_eq!(solo.format, ElementFormat::int(8));
 
     // Big burst → later batches must see depth > 10 and degrade.
     let rxs: Vec<_> = (0..48)
-        .map(|i| client.submit(&corpus.val[i % corpus.val.len()], None).unwrap())
+        .map(|i| client.submit(&rows[i % rows.len()], None).unwrap())
         .collect();
     let mut formats = std::collections::BTreeSet::new();
     for rx in rxs {
@@ -133,16 +145,17 @@ fn ladder_policy_degrades_under_load() {
         "burst must trigger lower precisions, saw {formats:?}"
     );
     let metrics = server.metrics.lock().unwrap().clone();
-    assert!(metrics.conversions >= formats.len() as u64);
+    assert!(metrics.conversions() >= formats.len() as u64);
+    let s = metrics.summary();
+    assert!(s.contains("cache["), "summary surfaces cache counters: {s}");
     drop(client);
     server.shutdown();
 }
 
 #[test]
 fn shutdown_rejects_new_requests() {
-    let Some(dir) = arts_dir() else { return };
-    let (server, client, width) = start_server(dir, Policy::Fixed(ElementFormat::int(8)));
-    let tokens = vec![65i32; width];
+    let (server, client, width) = start_server(Policy::Fixed(ElementFormat::int(8)), 15);
+    let tokens = vec![33i32; width];
     client.score(&tokens, None).unwrap();
     server.shutdown();
     assert!(client.score(&tokens, None).is_err(), "post-shutdown submit fails");

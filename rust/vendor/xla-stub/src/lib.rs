@@ -1,0 +1,145 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! This crate mirrors exactly the API surface `mfqat` uses so that the
+//! `pjrt` feature *compiles* in environments without the PJRT C library.
+//! Every constructor that would touch PJRT returns [`Error::Stub`]; the
+//! engine then reports a clear "rebuild against real xla-rs" message instead
+//! of a link failure. To execute AOT artifacts for real, repoint the `xla`
+//! dependency in `rust/Cargo.toml` at an xla-rs checkout.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error: the real implementation is not linked in.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// Raised by every stubbed entry point.
+    Stub,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "xla stub: PJRT is not available in this build — point the `xla` \
+             dependency at a real xla-rs checkout to execute AOT artifacts"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Stub)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Stub)
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Stub)
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Stub)
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Stub)
+    }
+}
+
+/// Array shape (stub).
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn scalar<T: Copy>(_x: T) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Stub)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Stub)
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(Error::Stub)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Stub)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::Stub)
+    }
+}
