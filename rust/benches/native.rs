@@ -1,28 +1,42 @@
 //! Native backend benchmarks — the packed-MX execution story, end to end.
 //!
-//! Three sections:
-//!   gemm/<fmt>           raw blockwise packed GEMM throughput per format,
-//!                        against the dequantized dense-f32 baseline
+//! Sections:
+//!   gemm/<fmt>           packed GEMM throughput per format and kernel
+//!                        generation: `ref` = original fused-scale scalar
+//!                        f32 kernel, `tile` = block-major f32 tile kernel,
+//!                        `int` = integer-MAC pipeline (i8 activations,
+//!                        i32/i16 dots) — all against the dequantized
+//!                        dense-f32 baseline
 //!   score/<fmt>          full decoder scoring batches through the
 //!                        NativeBackend per serving format (warm cache) —
 //!                        lower-bit formats stream less weight memory and
 //!                        must not be slower than 8-bit
+//!   generate/<ctx>       per-token decode latency: full-window recompute
+//!                        vs KV-cached incremental decode, per context len
 //!   derive/<fmt>         format-switch cost: anchor → packed target
-//!                        (Slice-and-Scale + repack), cold
+//!                        (Slice-and-Scale + block-major repack), cold
+//!
+//! Writes a machine-readable summary to `BENCH_native.json` (CI archives
+//! it; the acceptance numbers — int-MAC speedup over the scalar f32
+//! kernel, MXINT4 vs MXINT8, KV-vs-full decode — live there).
 //!
 //! Runs with no AOT artifacts and no XLA. Pin `MFQAT_THREADS=1` for
 //! stable single-core numbers.
 
-use mfqat::backend::{kernels, NativeWeights};
+use mfqat::backend::forward::{forward_cached, forward_logits, ActMode, KvCache};
+use mfqat::backend::{kernels, NativeWeights, RepackedMx};
 use mfqat::coordinator::ElasticEngine;
 use mfqat::formats::{ElementFormat, MxFormat};
 use mfqat::model::{ModelDims, ParamSet};
 use mfqat::tensor::MxTensor;
+use mfqat::util::json::Json;
 use mfqat::util::timer::bench;
 use mfqat::util::Rng;
 
 fn main() {
     let mut rng = Rng::new(7);
+    let mut summary = Json::obj();
+    summary.set("threads", Json::from(kernels::num_threads()));
 
     // ---------------------------------------------------------- raw GEMM
     let (rows, in_f, out_f) = (256usize, 512usize, 512usize);
@@ -31,11 +45,17 @@ fn main() {
     let flops = (rows * in_f * out_f) as f64;
     println!("== packed GEMM [{rows}x{in_f}] @ [{in_f}x{out_f}] per format ==");
     let mut y = vec![0.0f32; rows * out_f];
-    let r = bench("gemm/dense-f32(baseline)", 8, 0.5, || {
+    let dense = bench("gemm/dense-f32(baseline)", 8, 0.5, || {
         kernels::gemm_dense(&x, rows, &wdata, in_f, out_f, &mut y);
         std::hint::black_box(&y);
     });
-    println!("{}", r.report(flops, "mac"));
+    println!("{}", dense.report(flops, "mac"));
+    let mut gemm_json = Json::obj();
+    gemm_json.set(
+        "shape",
+        Json::from(vec![rows, in_f, out_f]),
+    );
+    gemm_json.set("dense_f32_s", Json::from(dense.mean_s));
     for fmt in [
         ElementFormat::int(8),
         ElementFormat::int(6),
@@ -46,12 +66,37 @@ fn main() {
         ElementFormat::fp_from_bits(4),
     ] {
         let w = MxTensor::quantize(&wdata, &[in_f, out_f], MxFormat::new(fmt, 32)).unwrap();
-        let r = bench(&format!("gemm/{}", fmt.name()), 8, 0.5, || {
+        let rp = RepackedMx::from_mx(&w);
+        let mut fmt_json = Json::obj();
+        let r_ref = bench(&format!("gemm/ref/{}", fmt.name()), 6, 0.4, || {
             kernels::gemm_packed(&x, rows, &w, &mut y);
             std::hint::black_box(&y);
         });
-        println!("{}", r.report(flops, "mac"));
+        println!("{}", r_ref.report(flops, "mac"));
+        fmt_json.set("ref_s", Json::from(r_ref.mean_s));
+        let r_tile = bench(&format!("gemm/tile/{}", fmt.name()), 6, 0.4, || {
+            kernels::gemm_repacked(&x, rows, &rp, &mut y);
+            std::hint::black_box(&y);
+        });
+        println!("{}", r_tile.report(flops, "mac"));
+        fmt_json.set("tile_s", Json::from(r_tile.mean_s));
+        fmt_json.set("tile_speedup_vs_ref", Json::from(r_ref.mean_s / r_tile.mean_s));
+        if fmt.is_int() {
+            let r_int = bench(&format!("gemm/int/{}", fmt.name()), 6, 0.4, || {
+                kernels::gemm_repacked_int(&x, rows, &rp, &mut y);
+                std::hint::black_box(&y);
+            });
+            println!("{}", r_int.report(flops, "mac"));
+            fmt_json.set("int_s", Json::from(r_int.mean_s));
+            fmt_json.set("int_speedup_vs_ref", Json::from(r_ref.mean_s / r_int.mean_s));
+            fmt_json.set(
+                "int_mac_per_s",
+                Json::from(flops / r_int.mean_s),
+            );
+        }
+        gemm_json.set(&fmt.name(), fmt_json);
     }
+    summary.set("gemm", gemm_json);
 
     // ------------------------------------------------- end-to-end scoring
     let dims = ModelDims::by_name("tiny").unwrap();
@@ -62,12 +107,15 @@ fn main() {
         .map(|i| ((i * 31 + 7) % dims.vocab) as i32)
         .collect();
 
+    let mut score_json = Json::obj();
     for (anchor, bits_list) in [
         (ElementFormat::int(8), [8u8, 6, 4, 2]),
         (ElementFormat::fp_from_bits(8), [8u8, 7, 6, 4]),
     ] {
         let ck = params.to_anchor_checkpoint(&manifest, anchor).unwrap();
-        let engine = ElasticEngine::native(dims.clone(), ck, 256 << 20).unwrap();
+        let engine = ElasticEngine::native(dims.clone(), ck.clone(), 256 << 20).unwrap();
+        let engine_int =
+            ElasticEngine::native_with_act(dims.clone(), ck, 256 << 20, ActMode::Int8).unwrap();
         println!(
             "\n== native scoring, anchor {} (batch = {}) ==",
             anchor.long_name(),
@@ -79,18 +127,63 @@ fn main() {
                 ElementFormat::Fp { .. } => ElementFormat::fp_from_bits(bits),
             };
             engine.score_batch(&batch, fmt).unwrap(); // warm the format cache
-            let r = bench(&format!("score/{}", fmt.name()), 6, 0.8, || {
+            let r = bench(&format!("score/{}", fmt.name()), 6, 0.6, || {
                 std::hint::black_box(engine.score_batch(&batch, fmt).unwrap());
             });
             println!("{}", r.report(tokens_per_batch, "tok"));
+            let mut e = Json::obj();
+            e.set("f32_s", Json::from(r.mean_s));
+            if fmt.is_int() {
+                engine_int.score_batch(&batch, fmt).unwrap();
+                let ri = bench(&format!("score/{}+int8act", fmt.name()), 6, 0.6, || {
+                    std::hint::black_box(engine_int.score_batch(&batch, fmt).unwrap());
+                });
+                println!("{}", ri.report(tokens_per_batch, "tok"));
+                e.set("int8act_s", Json::from(ri.mean_s));
+                e.set("int8act_speedup", Json::from(r.mean_s / ri.mean_s));
+            }
+            score_json.set(&fmt.name(), e);
         }
     }
+    summary.set("score", score_json);
 
-    // ---------------------------------------------- format-switch (cold)
-    println!("\n== format-switch cost: anchor -> packed target, cold ==");
+    // -------------------------------------- generation: full vs KV decode
+    println!("\n== per-token decode: full-window recompute vs KV cache ==");
     let ck = params
         .to_anchor_checkpoint(&manifest, ElementFormat::int(8))
         .unwrap();
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(4)).unwrap();
+    let window: Vec<i32> = (0..dims.seq_len)
+        .map(|i| ((i * 13 + 5) % dims.vocab) as i32)
+        .collect();
+    let ctx_max = dims.seq_len - 1;
+    let mut cache = KvCache::new(&dims);
+    let mut gen_json = Json::obj();
+    for ctx in [dims.seq_len / 8, dims.seq_len / 2, ctx_max] {
+        let r_full = bench(&format!("generate/full/ctx{ctx}"), 4, 0.3, || {
+            std::hint::black_box(forward_logits(&w, &window[..ctx + 1], 1).unwrap());
+        });
+        println!("{}", r_full.report(1.0, "tok"));
+        // Prefill once; each timed iteration rolls the cache back to `ctx`
+        // filled positions and decodes one token incrementally.
+        cache.reset();
+        forward_cached(&w, &mut cache, &window[..ctx]).unwrap();
+        let r_kv = bench(&format!("generate/kv/ctx{ctx}"), 4, 0.3, || {
+            cache.truncate(ctx);
+            std::hint::black_box(forward_cached(&w, &mut cache, &window[ctx..ctx + 1]).unwrap());
+        });
+        println!("{}", r_kv.report(1.0, "tok"));
+        let mut e = Json::obj();
+        e.set("full_ms_per_tok", Json::from(r_full.mean_s * 1e3));
+        e.set("kv_ms_per_tok", Json::from(r_kv.mean_s * 1e3));
+        e.set("kv_speedup", Json::from(r_full.mean_s / r_kv.mean_s));
+        gen_json.set(&format!("ctx{ctx}"), e);
+    }
+    summary.set("generate", gen_json);
+
+    // ---------------------------------------------- format-switch (cold)
+    println!("\n== format-switch cost: anchor -> packed target (SS + repack), cold ==");
+    let mut derive_json = Json::obj();
     for bits in [6u8, 4, 3, 2] {
         let fmt = ElementFormat::int(bits);
         let r = bench(&format!("derive/int{bits}"), 4, 0.4, || {
@@ -99,5 +192,12 @@ fn main() {
             );
         });
         println!("{}", r.report(manifest.n_params as f64, "param"));
+        derive_json.set(&format!("int{bits}_s"), Json::from(r.mean_s));
     }
+    summary.set("derive", derive_json);
+
+    // ------------------------------------------------------------ summary
+    let path = "BENCH_native.json";
+    std::fs::write(path, summary.pretty()).expect("write BENCH_native.json");
+    println!("\nwrote {path}");
 }

@@ -4,27 +4,70 @@
 //! token + learned positional embeddings → `n_layers` × (RMSNorm → causal
 //! attention → RMSNorm → GELU MLP, both with residuals) → final RMSNorm →
 //! LM head. Decoder-stack linears (`qkv`/`proj`/`up`/`down`) are served
-//! straight from their packed microscaling form ([`Mat::Packed`] →
-//! [`super::kernels::gemm_packed`]); embeddings, norms and the head stay f32
-//! exactly as the paper leaves them unquantized.
+//! from the block-major repacked microscaling layout ([`Mat::Packed`] →
+//! [`super::kernels::gemm_repacked`] /
+//! [`super::kernels::gemm_repacked_int`]); embeddings, norms and the head
+//! stay f32 exactly as the paper leaves them unquantized, and live in one
+//! [`SharedParams`] set that is `Arc`-shared across every cached format
+//! (per-format cache cost is the packed planes only).
 //!
 //! [`Mat::Dense`] is the dequantize-then-f32-matmul oracle — the same
 //! forward over materialized f32 weights — used by parity tests and as the
 //! `fp32` reference row in native evaluation.
+//!
+//! Generation runs through a [`KvCache`]: [`forward_cached`] processes new
+//! tokens against cached per-layer keys/values, so decoding one token costs
+//! one rows=1 pass plus attention over the cached prefix instead of a full
+//! window recompute. With an empty cache over the whole sequence it is
+//! numerically identical to [`forward_logits`].
 
 use super::kernels;
+use super::repack::RepackedMx;
 use crate::checkpoint::Checkpoint;
 use crate::formats::{ElementFormat, MxFormat};
 use crate::model::ModelDims;
 use crate::tensor::MxTensor;
 use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// How packed linears consume activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ActMode {
+    /// Exact f32 activations (weight-only quantization — the paper's
+    /// setting and the default; keeps parity with the dequantize oracle at
+    /// float-rounding error).
+    #[default]
+    F32,
+    /// Quantize activations to i8 per MX block and run integer MACs
+    /// ([`kernels::gemm_repacked_int`]); MXFP weights still take the f32
+    /// path. Adds ~2^-7.5 relative activation error, buys integer-dot
+    /// throughput on MXINT formats.
+    Int8,
+}
+
+impl ActMode {
+    pub fn parse(s: &str) -> Result<ActMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "exact" => Ok(ActMode::F32),
+            "int8" | "i8" | "quantized" => Ok(ActMode::Int8),
+            other => bail!("unknown activation mode '{other}' (f32|int8)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActMode::F32 => "f32",
+            ActMode::Int8 => "int8",
+        }
+    }
+}
 
 /// A weight matrix as the native kernels consume it.
 #[derive(Debug, Clone)]
 pub enum Mat {
-    /// Packed microscaling weights (codes + per-block scales, never
-    /// expanded to f32).
-    Packed(MxTensor),
+    /// Packed microscaling weights in block-major serving layout (codes +
+    /// per-block scales, never expanded to f32).
+    Packed(RepackedMx),
     /// Dense f32 `[in_features, out_features]` (oracle path / unquantized
     /// parameters).
     Dense {
@@ -37,14 +80,14 @@ pub enum Mat {
 impl Mat {
     pub fn in_features(&self) -> usize {
         match self {
-            Mat::Packed(t) => t.shape[0],
+            Mat::Packed(t) => t.in_f,
             Mat::Dense { in_f, .. } => *in_f,
         }
     }
 
     pub fn out_features(&self) -> usize {
         match self {
-            Mat::Packed(t) => t.shape[1],
+            Mat::Packed(t) => t.out_f,
             Mat::Dense { out_f, .. } => *out_f,
         }
     }
@@ -57,10 +100,14 @@ impl Mat {
         }
     }
 
-    /// `y[r, :] = x[r, :] @ W`.
-    pub fn gemm(&self, x: &[f32], rows: usize, y: &mut [f32]) {
+    /// `y[r, :] = x[r, :] @ W`. `act` selects the integer-MAC pipeline for
+    /// packed MXINT weights; dense f32 mats (head, oracle) always run f32.
+    pub fn gemm(&self, x: &[f32], rows: usize, y: &mut [f32], act: ActMode) {
         match self {
-            Mat::Packed(t) => kernels::gemm_packed(x, rows, t, y),
+            Mat::Packed(t) => match act {
+                ActMode::F32 => kernels::gemm_repacked(x, rows, t, y),
+                ActMode::Int8 => kernels::gemm_repacked_int(x, rows, t, y),
+            },
             Mat::Dense { data, in_f, out_f } => {
                 kernels::gemm_dense(x, rows, data, *in_f, *out_f, y)
             }
@@ -68,33 +115,81 @@ impl Mat {
     }
 }
 
-/// One decoder layer's parameters.
+/// One decoder layer's quantized linears.
 #[derive(Debug, Clone)]
 pub struct LayerWeights {
-    pub ln1: Vec<f32>,
     pub qkv: Mat,
     pub proj: Mat,
-    pub ln2: Vec<f32>,
     pub up: Mat,
     pub down: Mat,
 }
 
-/// A full serving weight set for one element format.
-///
-/// Note: the unquantized f32 parameters (`emb`/`pos`/norms/`head`) are
-/// owned per weight set, so each cached format currently duplicates them;
-/// `Arc`-sharing them across `FormatCache` entries is a known follow-up
-/// (see ROADMAP open items).
+/// Per-layer RMSNorm gains.
+#[derive(Debug, Clone)]
+pub struct LayerNorms {
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+}
+
+/// The unquantized f32 parameters (embeddings, positional table, norms,
+/// LM head). One instance per anchor checkpoint, `Arc`-shared across every
+/// cached per-format weight set — switching formats re-derives only the
+/// packed planes.
+#[derive(Debug)]
+pub struct SharedParams {
+    pub emb: Vec<f32>,
+    pub pos: Vec<f32>,
+    pub norms: Vec<LayerNorms>,
+    pub lnf: Vec<f32>,
+    pub head: Mat,
+}
+
+impl SharedParams {
+    /// Load the unquantized parameter set from a checkpoint.
+    pub fn from_checkpoint(dims: &ModelDims, ck: &Checkpoint) -> Result<SharedParams> {
+        let d = dims.d_model;
+        let mut norms = Vec::with_capacity(dims.n_layers);
+        for i in 0..dims.n_layers {
+            norms.push(LayerNorms {
+                ln1: fetch_raw(ck, &format!("l{i}.ln1"), &[d])?,
+                ln2: fetch_raw(ck, &format!("l{i}.ln2"), &[d])?,
+            });
+        }
+        Ok(SharedParams {
+            emb: fetch_raw(ck, "emb", &[dims.vocab, d])?,
+            pos: fetch_raw(ck, "pos", &[dims.seq_len, d])?,
+            norms,
+            lnf: fetch_raw(ck, "lnf", &[d])?,
+            head: Mat::Dense {
+                data: fetch_raw(ck, "head", &[d, dims.vocab])?,
+                in_f: d,
+                out_f: dims.vocab,
+            },
+        })
+    }
+
+    /// Resident bytes of the shared f32 set.
+    pub fn storage_bytes(&self) -> usize {
+        let mut total = (self.emb.len() + self.pos.len() + self.lnf.len()) * 4;
+        total += self.head.storage_bytes();
+        for n in &self.norms {
+            total += (n.ln1.len() + n.ln2.len()) * 4;
+        }
+        total
+    }
+}
+
+/// A full serving weight set for one element format: per-format packed (or
+/// dense-oracle) linears plus the `Arc`-shared unquantized parameters.
 #[derive(Debug, Clone)]
 pub struct NativeWeights {
     pub dims: ModelDims,
     /// Element format of the quantized linears (`None` = dense f32 oracle).
     pub fmt: Option<ElementFormat>,
-    pub emb: Vec<f32>,
-    pub pos: Vec<f32>,
+    /// Activation handling for the packed linears.
+    pub act: ActMode,
+    pub shared: Arc<SharedParams>,
     pub layers: Vec<LayerWeights>,
-    pub lnf: Vec<f32>,
-    pub head: Mat,
 }
 
 /// Convert a stored MX tensor to the target element format: Slice-and-Scale
@@ -143,9 +238,9 @@ fn fetch_raw(ck: &Checkpoint, name: &str, want: &[usize]) -> Result<Vec<f32>> {
     Ok(t.data.clone())
 }
 
-/// Fetch a quantized linear as a packed tensor at `target` precision.
-/// Stored-MX entries ride Slice-and-Scale; raw f32 entries are PTQ'd
-/// directly (master checkpoints).
+/// Fetch a quantized linear at `target` precision as a row-major packed
+/// tensor. Stored-MX entries ride Slice-and-Scale; raw f32 entries are
+/// PTQ'd directly (master checkpoints).
 fn fetch_packed(
     ck: &Checkpoint,
     name: &str,
@@ -194,13 +289,50 @@ fn fetch_dense(
 }
 
 impl NativeWeights {
-    /// Build the packed serving weight set at `target` precision.
+    /// Build the packed serving weight set at `target` precision (builds
+    /// its own shared f32 set — one-shot use; backends that cache several
+    /// formats should use [`Self::packed_with_shared`]).
     pub fn packed_from_checkpoint(
         dims: &ModelDims,
         ck: &Checkpoint,
         target: ElementFormat,
     ) -> Result<NativeWeights> {
-        Self::build(dims, ck, Some(target), true)
+        let shared = Arc::new(SharedParams::from_checkpoint(dims, ck)?);
+        Self::packed_with_shared(dims, ck, target, shared, ActMode::F32)
+    }
+
+    /// Build a packed weight set that re-uses an existing `Arc`'d shared
+    /// parameter set — the `FormatCache` insert path: per-entry cost is the
+    /// packed planes only.
+    pub fn packed_with_shared(
+        dims: &ModelDims,
+        ck: &Checkpoint,
+        target: ElementFormat,
+        shared: Arc<SharedParams>,
+        act: ActMode,
+    ) -> Result<NativeWeights> {
+        let d = dims.d_model;
+        let bs = dims.block_size;
+        let mat = |name: &str, in_f: usize, out_f: usize| -> Result<Mat> {
+            let t = fetch_packed(ck, name, &[in_f, out_f], target, bs)?;
+            Ok(Mat::Packed(RepackedMx::from_mx(&t)))
+        };
+        let mut layers = Vec::with_capacity(dims.n_layers);
+        for i in 0..dims.n_layers {
+            layers.push(LayerWeights {
+                qkv: mat(&format!("l{i}.qkv"), d, 3 * d)?,
+                proj: mat(&format!("l{i}.proj"), d, d)?,
+                up: mat(&format!("l{i}.up"), d, dims.d_ff)?,
+                down: mat(&format!("l{i}.down"), dims.d_ff, d)?,
+            });
+        }
+        Ok(NativeWeights {
+            dims: dims.clone(),
+            fmt: Some(target),
+            act,
+            shared,
+            layers,
+        })
     }
 
     /// Build the dense-f32 oracle weight set (`target = None` dequantizes
@@ -210,68 +342,51 @@ impl NativeWeights {
         ck: &Checkpoint,
         target: Option<ElementFormat>,
     ) -> Result<NativeWeights> {
-        Self::build(dims, ck, target, false)
-    }
-
-    fn build(
-        dims: &ModelDims,
-        ck: &Checkpoint,
-        target: Option<ElementFormat>,
-        packed: bool,
-    ) -> Result<NativeWeights> {
         let d = dims.d_model;
         let bs = dims.block_size;
         let mat = |name: &str, in_f: usize, out_f: usize| -> Result<Mat> {
-            let want = [in_f, out_f];
-            if packed {
-                let fmt = target.expect("packed build requires a target format");
-                Ok(Mat::Packed(fetch_packed(ck, name, &want, fmt, bs)?))
-            } else {
-                Ok(Mat::Dense {
-                    data: fetch_dense(ck, name, &want, target, bs)?,
-                    in_f,
-                    out_f,
-                })
-            }
+            Ok(Mat::Dense {
+                data: fetch_dense(ck, name, &[in_f, out_f], target, bs)?,
+                in_f,
+                out_f,
+            })
         };
         let mut layers = Vec::with_capacity(dims.n_layers);
         for i in 0..dims.n_layers {
             layers.push(LayerWeights {
-                ln1: fetch_raw(ck, &format!("l{i}.ln1"), &[d])?,
                 qkv: mat(&format!("l{i}.qkv"), d, 3 * d)?,
                 proj: mat(&format!("l{i}.proj"), d, d)?,
-                ln2: fetch_raw(ck, &format!("l{i}.ln2"), &[d])?,
                 up: mat(&format!("l{i}.up"), d, dims.d_ff)?,
                 down: mat(&format!("l{i}.down"), dims.d_ff, d)?,
             });
         }
         Ok(NativeWeights {
             dims: dims.clone(),
-            fmt: if packed { target } else { None },
-            emb: fetch_raw(ck, "emb", &[dims.vocab, d])?,
-            pos: fetch_raw(ck, "pos", &[dims.seq_len, d])?,
+            fmt: None,
+            act: ActMode::F32,
+            shared: Arc::new(SharedParams::from_checkpoint(dims, ck)?),
             layers,
-            lnf: fetch_raw(ck, "lnf", &[d])?,
-            head: Mat::Dense {
-                data: fetch_raw(ck, "head", &[d, dims.vocab])?,
-                in_f: d,
-                out_f: dims.vocab,
-            },
         })
     }
 
-    /// Resident bytes of this weight set (cache accounting).
+    /// Bytes owned by this entry alone (the packed/dense linears) — what a
+    /// `FormatCache` entry costs beyond the shared f32 set.
+    pub fn packed_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.qkv.storage_bytes()
+                    + l.proj.storage_bytes()
+                    + l.up.storage_bytes()
+                    + l.down.storage_bytes()
+            })
+            .sum()
+    }
+
+    /// Total resident bytes including the shared f32 parameters (counted
+    /// once — they are `Arc`-shared across formats).
     pub fn storage_bytes(&self) -> usize {
-        let mut total = (self.emb.len() + self.pos.len() + self.lnf.len()) * 4;
-        total += self.head.storage_bytes();
-        for l in &self.layers {
-            total += (l.ln1.len() + l.ln2.len()) * 4;
-            total += l.qkv.storage_bytes()
-                + l.proj.storage_bytes()
-                + l.up.storage_bytes()
-                + l.down.storage_bytes();
-        }
-        total
+        self.packed_bytes() + self.shared.storage_bytes()
     }
 }
 
@@ -288,6 +403,7 @@ pub fn forward_logits(w: &NativeWeights, tokens: &[i32], rows: usize) -> Result<
     }
     let d = dims.d_model;
     let n = rows * t;
+    let sh = &w.shared;
 
     // Token + positional embeddings.
     let mut x = vec![0.0f32; n * d];
@@ -295,8 +411,8 @@ pub fn forward_logits(w: &NativeWeights, tokens: &[i32], rows: usize) -> Result<
         if tok < 0 || tok as usize >= dims.vocab {
             bail!("token {tok} out of vocab range 0..{}", dims.vocab);
         }
-        let er = &w.emb[tok as usize * d..(tok as usize + 1) * d];
-        let pr = &w.pos[(i % t) * d..(i % t + 1) * d];
+        let er = &sh.emb[tok as usize * d..(tok as usize + 1) * d];
+        let pr = &sh.pos[(i % t) * d..(i % t + 1) * d];
         let xr = &mut x[i * d..(i + 1) * d];
         for j in 0..d {
             xr[j] = er[j] + pr[j];
@@ -308,21 +424,21 @@ pub fn forward_logits(w: &NativeWeights, tokens: &[i32], rows: usize) -> Result<
     let mut att = vec![0.0f32; n * d];
     let mut delta = vec![0.0f32; n * d];
     let mut hidden = vec![0.0f32; n * dims.d_ff];
-    for layer in &w.layers {
-        kernels::rmsnorm(&x, &layer.ln1, &mut xn);
-        layer.qkv.gemm(&xn, n, &mut qkv);
+    for (layer, norms) in w.layers.iter().zip(&sh.norms) {
+        kernels::rmsnorm(&x, &norms.ln1, &mut xn);
+        layer.qkv.gemm(&xn, n, &mut qkv, w.act);
         kernels::causal_attention(&qkv, rows, t, dims.n_heads, d, &mut att);
-        layer.proj.gemm(&att, n, &mut delta);
+        layer.proj.gemm(&att, n, &mut delta, w.act);
         kernels::add_assign(&mut x, &delta);
-        kernels::rmsnorm(&x, &layer.ln2, &mut xn);
-        layer.up.gemm(&xn, n, &mut hidden);
+        kernels::rmsnorm(&x, &norms.ln2, &mut xn);
+        layer.up.gemm(&xn, n, &mut hidden, w.act);
         kernels::gelu_in_place(&mut hidden);
-        layer.down.gemm(&hidden, n, &mut delta);
+        layer.down.gemm(&hidden, n, &mut delta, w.act);
         kernels::add_assign(&mut x, &delta);
     }
-    kernels::rmsnorm(&x, &w.lnf, &mut xn);
+    kernels::rmsnorm(&x, &sh.lnf, &mut xn);
     let mut logits = vec![0.0f32; n * dims.vocab];
-    w.head.gemm(&xn, n, &mut logits);
+    sh.head.gemm(&xn, n, &mut logits, w.act);
     Ok(logits)
 }
 
@@ -344,6 +460,194 @@ pub fn score_rows(w: &NativeWeights, tokens: &[i32], rows: usize) -> Result<Vec<
     }
     let logits = forward_logits(w, &inputs, rows)?;
     crate::eval::nll_from_logits(&logits, tokens, rows, width, w.dims.vocab)
+}
+
+// --------------------------------------------------------------------------
+// KV-cached incremental decode (generation hot path).
+// --------------------------------------------------------------------------
+
+/// Per-layer key/value cache for single-sequence incremental decoding.
+///
+/// Holds `[n_layers, capacity, d_model]` keys and values; `len()` positions
+/// are filled. [`forward_cached`] appends the new positions' K/V as it runs,
+/// so decoding one token reads the whole cached prefix but recomputes
+/// nothing.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    n_layers: usize,
+    d_model: usize,
+    capacity: usize,
+    pos: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    /// Empty cache sized for `dims` (capacity = `seq_len` positions).
+    pub fn new(dims: &ModelDims) -> KvCache {
+        let n = dims.n_layers * dims.seq_len * dims.d_model;
+        KvCache {
+            n_layers: dims.n_layers,
+            d_model: dims.d_model,
+            capacity: dims.seq_len,
+            pos: 0,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    /// Filled positions.
+    pub fn len(&self) -> usize {
+        self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos == 0
+    }
+
+    /// Maximum positions the cache can hold (= model `seq_len`).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Forget everything (restart a sequence).
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    /// Roll back to `pos` filled positions (`pos ≤ len()`). Rows beyond
+    /// `pos` are simply ignored by subsequent decodes — used by the bench
+    /// to re-decode at a fixed context length without re-prefilling.
+    pub fn truncate(&mut self, pos: usize) {
+        assert!(pos <= self.pos, "cannot truncate {} to {pos}", self.pos);
+        self.pos = pos;
+    }
+
+    fn layer(&self, l: usize) -> (&[f32], &[f32]) {
+        let n = self.capacity * self.d_model;
+        (&self.k[l * n..(l + 1) * n], &self.v[l * n..(l + 1) * n])
+    }
+}
+
+/// Process `tokens.len()` new positions of one sequence against `cache`
+/// (prefill when the cache is empty, single-token decode when
+/// `tokens.len() == 1`); returns flat logits `[tokens.len(), vocab]` for
+/// the new positions and advances the cache.
+///
+/// Numerics: identical operation order to [`forward_logits`] per position —
+/// a full-sequence call on an empty cache reproduces the batch forward
+/// exactly, and `prefill(p) + decode(1)…` matches the full window at every
+/// step (enforced by `rust/tests/native_backend.rs`).
+pub fn forward_cached(w: &NativeWeights, cache: &mut KvCache, tokens: &[i32]) -> Result<Vec<f32>> {
+    let dims = &w.dims;
+    let t = tokens.len();
+    let p0 = cache.pos;
+    if t == 0 {
+        bail!("forward_cached wants at least one token");
+    }
+    if cache.n_layers != dims.n_layers
+        || cache.d_model != dims.d_model
+        || cache.capacity != dims.seq_len
+    {
+        bail!("KV cache was built for different model dims");
+    }
+    if p0 + t > cache.capacity {
+        bail!(
+            "KV cache overflow: {p0} cached + {t} new > capacity {}",
+            cache.capacity
+        );
+    }
+    let d = dims.d_model;
+    let hd = dims.d_model / dims.n_heads;
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    let sh = &w.shared;
+
+    // Token + positional embeddings at absolute positions p0..p0+t.
+    let mut x = vec![0.0f32; t * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        if tok < 0 || tok as usize >= dims.vocab {
+            bail!("token {tok} out of vocab range 0..{}", dims.vocab);
+        }
+        let er = &sh.emb[tok as usize * d..(tok as usize + 1) * d];
+        let pr = &sh.pos[(p0 + i) * d..(p0 + i + 1) * d];
+        let xr = &mut x[i * d..(i + 1) * d];
+        for j in 0..d {
+            xr[j] = er[j] + pr[j];
+        }
+    }
+
+    let mut xn = vec![0.0f32; t * d];
+    let mut qkv = vec![0.0f32; t * 3 * d];
+    let mut att = vec![0.0f32; t * d];
+    let mut delta = vec![0.0f32; t * d];
+    let mut hidden = vec![0.0f32; t * dims.d_ff];
+    let mut probs = vec![0.0f32; p0 + t];
+    for (l, (layer, norms)) in w.layers.iter().zip(&sh.norms).enumerate() {
+        kernels::rmsnorm(&x, &norms.ln1, &mut xn);
+        layer.qkv.gemm(&xn, t, &mut qkv, w.act);
+        // Append the new positions' K/V to the cache.
+        {
+            let n = cache.capacity * d;
+            let kl = &mut cache.k[l * n..(l + 1) * n];
+            let vl = &mut cache.v[l * n..(l + 1) * n];
+            for i in 0..t {
+                kl[(p0 + i) * d..(p0 + i + 1) * d]
+                    .copy_from_slice(&qkv[i * 3 * d + d..][..d]);
+                vl[(p0 + i) * d..(p0 + i + 1) * d]
+                    .copy_from_slice(&qkv[i * 3 * d + 2 * d..][..d]);
+            }
+        }
+        // Causal attention of the new queries over the cached prefix —
+        // same per-query math as `kernels::causal_attention`.
+        att.fill(0.0);
+        let (kl, vl) = cache.layer(l);
+        for h in 0..dims.n_heads {
+            let qo = h * hd;
+            for i in 0..t {
+                let q = &qkv[i * 3 * d + qo..][..hd];
+                let span = p0 + i + 1;
+                let mut max_s = f32::NEG_INFINITY;
+                for (j, p) in probs[..span].iter_mut().enumerate() {
+                    let krow = &kl[j * d + qo..][..hd];
+                    let mut s = 0.0f32;
+                    for (&a, &k) in q.iter().zip(krow) {
+                        s += a * k;
+                    }
+                    let s = s * inv_sqrt;
+                    *p = s;
+                    if s > max_s {
+                        max_s = s;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for p in probs[..span].iter_mut() {
+                    *p = (*p - max_s).exp();
+                    denom += *p;
+                }
+                let inv_denom = 1.0 / denom;
+                let orow = &mut att[i * d + qo..i * d + qo + hd];
+                for (j, &p) in probs[..span].iter().enumerate() {
+                    let wgt = p * inv_denom;
+                    let vrow = &vl[j * d + qo..][..hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += wgt * vv;
+                    }
+                }
+            }
+        }
+        layer.proj.gemm(&att, t, &mut delta, w.act);
+        kernels::add_assign(&mut x, &delta);
+        kernels::rmsnorm(&x, &norms.ln2, &mut xn);
+        layer.up.gemm(&xn, t, &mut hidden, w.act);
+        kernels::gelu_in_place(&mut hidden);
+        layer.down.gemm(&hidden, t, &mut delta, w.act);
+        kernels::add_assign(&mut x, &delta);
+    }
+    cache.pos = p0 + t;
+    kernels::rmsnorm(&x, &sh.lnf, &mut xn);
+    let mut logits = vec![0.0f32; t * dims.vocab];
+    sh.head.gemm(&xn, t, &mut logits, w.act);
+    Ok(logits)
 }
 
 #[cfg(test)]
@@ -427,5 +731,63 @@ mod tests {
         let dense = NativeWeights::dense_from_checkpoint(&dims, &ck, None).unwrap();
         assert!(w4.storage_bytes() < w8.storage_bytes());
         assert!(w8.storage_bytes() < dense.storage_bytes());
+        assert!(w4.packed_bytes() < w8.packed_bytes());
+    }
+
+    #[test]
+    fn shared_params_are_arc_shared_across_formats() {
+        let dims = tiny_dims();
+        let ck = anchor_ck(&dims, 6, ElementFormat::int(8));
+        let shared = Arc::new(SharedParams::from_checkpoint(&dims, &ck).unwrap());
+        let w8 = NativeWeights::packed_with_shared(
+            &dims,
+            &ck,
+            ElementFormat::int(8),
+            shared.clone(),
+            ActMode::F32,
+        )
+        .unwrap();
+        let w4 = NativeWeights::packed_with_shared(
+            &dims,
+            &ck,
+            ElementFormat::int(4),
+            shared.clone(),
+            ActMode::F32,
+        )
+        .unwrap();
+        assert!(Arc::ptr_eq(&w8.shared, &w4.shared), "one f32 set, two formats");
+        assert_eq!(Arc::strong_count(&shared), 3);
+    }
+
+    #[test]
+    fn cached_forward_equals_batch_forward() {
+        // Full-sequence forward through an empty KV cache must reproduce
+        // the batch forward exactly (same op order per position).
+        let dims = tiny_dims();
+        let ck = anchor_ck(&dims, 7, ElementFormat::int(8));
+        let tokens: Vec<i32> = (0..dims.seq_len).map(|i| (i * 5 % 64) as i32).collect();
+        for fmt in [ElementFormat::int(8), ElementFormat::int(4)] {
+            let w = NativeWeights::packed_from_checkpoint(&dims, &ck, fmt).unwrap();
+            let full = forward_logits(&w, &tokens, 1).unwrap();
+            let mut cache = KvCache::new(&dims);
+            let cached = forward_cached(&w, &mut cache, &tokens).unwrap();
+            assert_eq!(cache.len(), dims.seq_len);
+            assert_eq!(full, cached, "{fmt}");
+        }
+    }
+
+    #[test]
+    fn kv_cache_rejects_overflow_and_bad_dims() {
+        let dims = tiny_dims();
+        let ck = anchor_ck(&dims, 8, ElementFormat::int(8));
+        let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+        let mut cache = KvCache::new(&dims);
+        let tokens: Vec<i32> = vec![1; dims.seq_len + 1];
+        assert!(forward_cached(&w, &mut cache, &tokens).is_err(), "overflow");
+        assert!(forward_cached(&w, &mut cache, &[]).is_err(), "empty");
+        let mut other = ModelDims::new("other", 64, 16, 1, 2, 16);
+        other.train_batch = 2;
+        let mut bad = KvCache::new(&other);
+        assert!(forward_cached(&w, &mut bad, &[1]).is_err(), "dims mismatch");
     }
 }

@@ -1,22 +1,52 @@
 //! Native CPU compute kernels over packed MX tensors.
 //!
-//! The centerpiece is [`gemm_packed`]: `y = x @ W` where `W` stays in its
-//! packed microscaling form — sub-byte integer or minifloat element codes
-//! plus one E8M0 scale exponent per block. The per-block scale is fused into
-//! the dot product (`y += (x_k · 2^{s_{k,j}}) · P_{k,n}`), so no f32 weight
-//! buffer is ever materialized: the working set is the packed codes (2–8
-//! bits/element), which is why lower-precision formats stream less memory
-//! per batch — the elastic-serving speed knob the paper motivates (§1).
+//! Two generations of packed GEMM live here:
 //!
-//! Mirrors the pure-`jnp` oracle in `python/compile/kernels/ref.py`
-//! (`mx_matmul_ref` = dequantize-then-f32-matmul); parity is enforced by
-//! unit tests here and end-to-end by `rust/tests/native_backend.rs`.
+//! * [`gemm_packed`] — the original fused-scale scalar kernel on the
+//!   row-major [`MxTensor`] layout (`y += (x_k · 2^{s_{k,j}}) · P_{k,n}`),
+//!   kept as the bench baseline and as a second reference implementation
+//!   for differential tests. Its per-`k` scale expansion is precomputed
+//!   once per call (it used to be re-expanded inside every row tile).
+//! * The **block-major pipeline** on [`RepackedMx`] — the serving hot path:
+//!   - [`gemm_repacked`]: exact f32 path. Each `(out-block, k-chunk)` tile
+//!     of codes is decoded **once per row tile** into an L1-resident f32
+//!     scratch with the E8M0 scale folded in (`w = code · 2^s`, both
+//!     factors exact), then consumed by plain f32 MACs — the per-row,
+//!     per-element scale multiply and i8→f32 convert of the old kernel are
+//!     gone. Bit-identical to [`gemm_packed`] (same product rounding, same
+//!     summation order).
+//!   - [`gemm_repacked_int`]: the integer-MAC path for MXINT formats.
+//!     Activations are quantized on the fly to i8, one E8M0 exponent per
+//!     MX block along the reduction ([`quantize_acts`]); inside each
+//!     `(k-block, out-block)` tile the activation codes are aligned to the
+//!     tile's max weight exponent (an exact-or-RNE right shift, see below)
+//!     and the dot products run as pure `i8 × code` MACs accumulated in
+//!     `i32` — `i16` for ≤4-bit elements, where the narrow code range
+//!     doubles the SIMD lane count (this is why MXINT4 outruns MXINT8).
+//!     The **combined** activation×weight scale `2^{s_x + s_w^{max}}` is
+//!     applied once per tile at the end. MXFP formats fall back to
+//!     [`gemm_repacked`] via the element-decode LUT.
+//!
+//! Integer-path numerics: weight scale blocks run along the *out* dimension
+//! (the paper's layout), so within a reduction chunk the weight exponent
+//! `s_w[k]` varies per `k`. The kernel folds that variation into the
+//! activation side: `m_k = rne(x_q[k] >> (s_w^{max} − s_w[k]))`, which is
+//! exactly an i8 requantization of the scaled activation `x·2^{s_w[k]}` at
+//! the tile's coarsest step — so the only approximation anywhere in the
+//! path is i8 activation quantization (bounded by ½ ulp at
+//! `2^{s_x + s_w^{max}}` per element). When activations are exactly
+//! representable and the tile's scales agree, the path is *exact* (integer
+//! arithmetic end to end, final multiply by a power of two). Parity against
+//! the dequantize-f32 oracle is enforced by unit tests here and end-to-end
+//! by `rust/tests/native_backend.rs`.
 //!
 //! Threading: std scoped threads over contiguous row tiles
 //! ([`par_chunks_mut`]); `MFQAT_THREADS` pins the worker count (benches,
 //! reproducibility).
 
-use crate::formats::{exp2i, pack};
+use super::repack::RepackedMx;
+use crate::formats::int::shift_round;
+use crate::formats::{exp2i, floor_log2, pack, RoundMode};
 use crate::tensor::MxTensor;
 
 /// Worker threads for the native kernels (`MFQAT_THREADS` overrides the
@@ -40,7 +70,7 @@ pub fn num_threads() -> usize {
 const PAR_MIN_LEN: usize = 1 << 15;
 
 /// Rows of `y` processed per tile in the GEMM kernels (amortizes the
-/// per-`k` code-row and scale-row setup across the tile).
+/// per-tile code decode and scale setup across the tile).
 const ROW_TILE: usize = 32;
 
 /// Apply `f(chunk_index, chunk)` to consecutive `chunk`-sized pieces of
@@ -76,16 +106,264 @@ where
     });
 }
 
-/// `y[r, :] = x[r, :] @ W` with `W` a packed 2-D [`MxTensor`] of shape
-/// `[in_features, out_features]` (scaling blocks along the out dimension,
-/// the layout `MxTensor::quantize` produces for the model's `[in, out]`
-/// weight matrices).
-///
-/// Weights are consumed directly from the packed stream: each row tile
-/// unpacks one `out_features`-code weight row at a time into a small
-/// L1-resident scratch (amortized over [`ROW_TILE`] batch rows), so the
-/// memory traffic per batch is the *packed* plane — `bits(f)`/element —
-/// and no full decoded plane is ever allocated.
+// --------------------------------------------------------------------------
+// Activation quantization (the paper is weight-only; this is the serving-
+// side extension that unlocks integer MACs).
+// --------------------------------------------------------------------------
+
+/// Int8-quantized activations: one code per element, one E8M0 exponent per
+/// `(row, k-block)` — the same microscaling structure as the weights, with
+/// blocks along the reduction dimension.
+pub struct ActPlane {
+    /// `[rows, in_f]` i8 codes, clamped to `[-127, 127]` (symmetric range:
+    /// keeps `|code × int4-code| × block ≤ i16::MAX` for the narrow path).
+    pub codes: Vec<i8>,
+    /// `[rows, kblocks]` shared-scale exponents.
+    pub exps: Vec<i8>,
+    pub kblocks: usize,
+}
+
+/// Quantize `[rows, in_f]` activations to i8 codes with one power-of-two
+/// scale per `bs`-wide block along `in_f`. The exponent is chosen so the
+/// block max lands in `[64, 128)` before rounding (≈7.5 significant bits);
+/// values that are already `int · 2^e` with magnitude ≤ 127 round-trip
+/// exactly.
+pub fn quantize_acts(x: &[f32], rows: usize, in_f: usize, bs: usize) -> ActPlane {
+    assert_eq!(x.len(), rows * in_f);
+    let kblocks = in_f.div_ceil(bs).max(1);
+    let mut codes = vec![0i8; rows * in_f];
+    let mut exps = vec![0i8; rows * kblocks];
+    for r in 0..rows {
+        let xr = &x[r * in_f..(r + 1) * in_f];
+        for (kb, chunk) in xr.chunks(bs).enumerate() {
+            let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if amax == 0.0 {
+                continue; // all-zero block: exponent 0, codes 0
+            }
+            let e = (floor_log2(amax) - 6).clamp(-126, 126);
+            exps[r * kblocks + kb] = e as i8;
+            let inv = exp2i(-e);
+            let out = &mut codes[r * in_f + kb * bs..][..chunk.len()];
+            for (o, &v) in out.iter_mut().zip(chunk) {
+                *o = (v * inv).round_ties_even().clamp(-127.0, 127.0) as i8;
+            }
+        }
+    }
+    ActPlane {
+        codes,
+        exps,
+        kblocks,
+    }
+}
+
+// --------------------------------------------------------------------------
+// Block-major GEMM kernels (the serving hot path).
+// --------------------------------------------------------------------------
+
+/// 256-entry element-decode LUT for minifloat formats (`None` for integer
+/// formats, whose codes sign-extend to the element value directly). Shared
+/// by every GEMM generation so their decode semantics cannot drift apart.
+fn fp_decode_lut(elem: crate::formats::ElementFormat) -> Option<Vec<f32>> {
+    elem.fp_spec().map(|spec| {
+        let mask = ((1u16 << spec.bits()) - 1) as u8;
+        (0..256u16).map(|b| spec.decode(b as u8 & mask)).collect()
+    })
+}
+
+/// Exact-path `y[r, :] = x[r, :] @ W` over the block-major layout: per
+/// `(out-block, k-chunk)` tile, decode codes once into an f32 scratch with
+/// the block scale folded (`code · 2^s` — two exact factors, one rounding,
+/// identical to the fused-scale reference), then run plain f32 MACs
+/// amortized over the row tile.
+pub fn gemm_repacked(x: &[f32], rows: usize, w: &RepackedMx, y: &mut [f32]) {
+    let (in_f, out_f) = (w.in_f, w.out_f);
+    assert_eq!(x.len(), rows * in_f, "x must be [rows, in_features]");
+    assert_eq!(y.len(), rows * out_f, "y must be [rows, out_features]");
+    if rows == 0 || in_f == 0 || out_f == 0 {
+        y.fill(0.0);
+        return;
+    }
+    let bs = w.block_size;
+    let lut = fp_decode_lut(w.elem);
+    par_chunks_mut(y, ROW_TILE * out_f, |ci, yc| {
+        let r0 = ci * ROW_TILE;
+        let rn = yc.len() / out_f;
+        yc.fill(0.0);
+        let mut ct = vec![0i8; bs * bs];
+        let mut ctu = vec![0u8; bs * bs];
+        let mut wt = vec![0.0f32; bs * bs];
+        for jb in 0..w.blocks() {
+            let n0 = jb * bs;
+            let nl = (out_f - n0).min(bs);
+            let sc = w.scale_col(jb);
+            let mut k0 = 0usize;
+            while k0 < in_f {
+                let kl = (in_f - k0).min(bs);
+                match &lut {
+                    None => {
+                        w.decode_tile_signed(jb, k0, kl, &mut ct[..kl * bs]);
+                        for k in 0..kl {
+                            let s = exp2i(sc[k0 + k] as i32);
+                            let (src, dst) = (&ct[k * bs..][..bs], &mut wt[k * bs..][..bs]);
+                            for (o, &c) in dst.iter_mut().zip(src) {
+                                *o = c as f32 * s;
+                            }
+                        }
+                    }
+                    Some(lut) => {
+                        w.decode_tile_unsigned(jb, k0, kl, &mut ctu[..kl * bs]);
+                        for k in 0..kl {
+                            let s = exp2i(sc[k0 + k] as i32);
+                            let (src, dst) = (&ctu[k * bs..][..bs], &mut wt[k * bs..][..bs]);
+                            for (o, &c) in dst.iter_mut().zip(src) {
+                                *o = lut[c as usize] * s;
+                            }
+                        }
+                    }
+                }
+                for r in 0..rn {
+                    let xrow = &x[(r0 + r) * in_f + k0..][..kl];
+                    let yr = &mut yc[r * out_f + n0..][..nl];
+                    for (k, &xv) in xrow.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &wt[k * bs..][..nl];
+                        for (yv, &wv) in yr.iter_mut().zip(wrow) {
+                            *yv += xv * wv;
+                        }
+                    }
+                }
+                k0 += kl;
+            }
+        }
+    });
+}
+
+/// Integer-MAC `y[r, :] = x[r, :] @ W` for MXINT weights: activations are
+/// i8-quantized per MX block ([`quantize_acts`]), dot products accumulate
+/// code×code in integers, and the combined activation×weight E8M0 scale is
+/// applied once per `(k-block, out-block)` tile. `≤4`-bit elements use an
+/// `i16` accumulator (provably overflow-free for `block ≤ 32`: `127 · 8 ·
+/// 32 = 32512`), doubling the vector width. MXFP weights fall back to the
+/// exact f32 path.
+pub fn gemm_repacked_int(x: &[f32], rows: usize, w: &RepackedMx, y: &mut [f32]) {
+    if !w.elem.is_int() {
+        return gemm_repacked(x, rows, w, y);
+    }
+    let (in_f, out_f) = (w.in_f, w.out_f);
+    assert_eq!(x.len(), rows * in_f, "x must be [rows, in_features]");
+    assert_eq!(y.len(), rows * out_f, "y must be [rows, out_features]");
+    if rows == 0 || in_f == 0 || out_f == 0 {
+        y.fill(0.0);
+        return;
+    }
+    let bs = w.block_size;
+    let acts = quantize_acts(x, rows, in_f, bs);
+    let narrow = w.elem.bits() <= 4 && bs <= 32;
+    par_chunks_mut(y, ROW_TILE * out_f, |ci, yc| {
+        let r0 = ci * ROW_TILE;
+        let rn = yc.len() / out_f;
+        yc.fill(0.0);
+        let mut ct = vec![0i8; bs * bs];
+        let mut cw16 = vec![0i16; bs * bs];
+        let mut cw32 = vec![0i32; bs * bs];
+        let mut m16 = vec![0i16; bs];
+        let mut m32 = vec![0i32; bs];
+        let mut acc16 = vec![0i16; bs];
+        let mut acc32 = vec![0i32; bs];
+        for jb in 0..w.blocks() {
+            let n0 = jb * bs;
+            let nl = (out_f - n0).min(bs);
+            let sc = w.scale_col(jb);
+            let mut k0 = 0usize;
+            while k0 < in_f {
+                let kl = (in_f - k0).min(bs);
+                w.decode_tile_signed(jb, k0, kl, &mut ct[..kl * bs]);
+                if narrow {
+                    for (o, &c) in cw16[..kl * bs].iter_mut().zip(&ct[..kl * bs]) {
+                        *o = c as i16;
+                    }
+                } else {
+                    for (o, &c) in cw32[..kl * bs].iter_mut().zip(&ct[..kl * bs]) {
+                        *o = c as i32;
+                    }
+                }
+                let scc = &sc[k0..k0 + kl];
+                let smax = scc.iter().copied().max().unwrap() as i32;
+                let kb = k0 / bs;
+                for r in 0..rn {
+                    let sx = acts.exps[(r0 + r) * acts.kblocks + kb] as i32;
+                    let xq = &acts.codes[(r0 + r) * in_f + k0..][..kl];
+                    // Align activation codes to the tile's max weight
+                    // exponent: m_k = rne(x_q >> (smax - s_k)). |m| ≤ 127.
+                    let mut any = false;
+                    for k in 0..kl {
+                        let d = (smax - scc[k] as i32) as u32;
+                        let m = if d >= 8 {
+                            0 // |x_q|/2^d < 0.5 — rounds to zero
+                        } else {
+                            shift_round(xq[k] as i32, d, RoundMode::HalfEven)
+                        };
+                        any |= m != 0;
+                        if narrow {
+                            m16[k] = m as i16;
+                        } else {
+                            m32[k] = m;
+                        }
+                    }
+                    if !any {
+                        continue;
+                    }
+                    let scale = exp2i(sx + smax);
+                    let yr = &mut yc[r * out_f + n0..][..nl];
+                    if narrow {
+                        acc16[..nl].fill(0);
+                        for k in 0..kl {
+                            let m = m16[k];
+                            if m == 0 {
+                                continue;
+                            }
+                            let cw = &cw16[k * bs..][..nl];
+                            for (a, &c) in acc16[..nl].iter_mut().zip(cw) {
+                                *a += m * c;
+                            }
+                        }
+                        for (yv, &a) in yr.iter_mut().zip(&acc16[..nl]) {
+                            *yv += a as f32 * scale;
+                        }
+                    } else {
+                        acc32[..nl].fill(0);
+                        for k in 0..kl {
+                            let m = m32[k];
+                            if m == 0 {
+                                continue;
+                            }
+                            let cw = &cw32[k * bs..][..nl];
+                            for (a, &c) in acc32[..nl].iter_mut().zip(cw) {
+                                *a += m * c;
+                            }
+                        }
+                        for (yv, &a) in yr.iter_mut().zip(&acc32[..nl]) {
+                            *yv += a as f32 * scale;
+                        }
+                    }
+                }
+                k0 += kl;
+            }
+        }
+    });
+}
+
+// --------------------------------------------------------------------------
+// Reference fused-scale kernel (row-major MxTensor layout).
+// --------------------------------------------------------------------------
+
+/// `y[r, :] = x[r, :] @ W` with `W` a packed 2-D [`MxTensor`] — the
+/// original fused-scale scalar kernel, kept as the bench baseline and a
+/// differential reference for the block-major pipeline. The per-block scale
+/// expansion (`exp2i` over the whole scale matrix) is hoisted out of the
+/// row-tile loop and computed once per call.
 pub fn gemm_packed(x: &[f32], rows: usize, w: &MxTensor, y: &mut [f32]) {
     assert_eq!(w.shape.len(), 2, "packed GEMM wants a 2-D weight");
     let in_f = w.shape[0];
@@ -102,23 +380,17 @@ pub fn gemm_packed(x: &[f32], rows: usize, w: &MxTensor, y: &mut [f32]) {
     let bpr = out_f.div_ceil(bs);
     let wbits = w.format.elem.bits();
     debug_assert_eq!(w.scales.len(), in_f * bpr);
-    // Minifloat codes decode through a 256-entry value LUT; integer codes
-    // sign-extend to the element value directly.
-    let lut: Option<Vec<f32>> = w.format.elem.fp_spec().map(|spec| {
-        let mask = ((1u16 << spec.bits()) - 1) as u8;
-        (0..256u16).map(|b| spec.decode(b as u8 & mask)).collect()
-    });
+    let lut = fp_decode_lut(w.format.elem);
+    // Scale expansion, once per call (shared read-only across row tiles).
+    let scf: Vec<f32> = w.scales.iter().map(|&s| exp2i(s as i32)).collect();
     par_chunks_mut(y, ROW_TILE * out_f, |ci, yc| {
         let r0 = ci * ROW_TILE;
         let rn = yc.len() / out_f;
         yc.fill(0.0);
-        let mut sc = vec![0.0f32; bpr];
         let mut int_row = vec![0i8; out_f];
         let mut fp_row = vec![0u8; out_f];
         for k in 0..in_f {
-            for (j, &s) in w.scales[k * bpr..(k + 1) * bpr].iter().enumerate() {
-                sc[j] = exp2i(s as i32);
-            }
+            let sc = &scf[k * bpr..(k + 1) * bpr];
             // Unpack weight row `k` straight out of the packed stream.
             if lut.is_none() {
                 pack::unpack_signed_at(&w.packed, wbits, k * out_f, &mut int_row);
@@ -312,6 +584,18 @@ mod tests {
         y
     }
 
+    fn all_test_formats() -> Vec<ElementFormat> {
+        vec![
+            ElementFormat::int(2),
+            ElementFormat::int(4),
+            ElementFormat::int(6),
+            ElementFormat::int(8),
+            ElementFormat::fp_from_bits(4),
+            ElementFormat::fp_from_bits(6),
+            ElementFormat::fp_from_bits(8),
+        ]
+    }
+
     #[test]
     fn dense_gemm_matches_naive() {
         let (rows, in_f, out_f) = (5, 48, 33);
@@ -329,14 +613,7 @@ mod tests {
     fn packed_gemm_matches_dequantized_dense() {
         // The fused-scale packed path must equal dequantize-then-f32-matmul
         // (the ref.py mx_matmul_ref oracle) to float rounding error.
-        for fmt in [
-            ElementFormat::int(4),
-            ElementFormat::int(6),
-            ElementFormat::int(8),
-            ElementFormat::fp_from_bits(4),
-            ElementFormat::fp_from_bits(6),
-            ElementFormat::fp_from_bits(8),
-        ] {
+        for fmt in all_test_formats() {
             let (rows, in_f, out_f) = (7, 64, 96);
             let x = randvec(rows * in_f, 3);
             let wdata = randvec(in_f * out_f, 4);
@@ -357,6 +634,25 @@ mod tests {
     }
 
     #[test]
+    fn repacked_gemm_is_bit_identical_to_reference_kernel() {
+        // The block-major f32 path re-orders storage, not math: same
+        // product rounding, same per-output summation order as the
+        // fused-scale reference — the outputs must agree exactly.
+        for fmt in all_test_formats() {
+            let (rows, in_f, out_f) = (ROW_TILE + 5, 48, 72); // ragged everywhere
+            let x = randvec(rows * in_f, 5);
+            let wdata = randvec(in_f * out_f, 6);
+            let w = MxTensor::quantize(&wdata, &[in_f, out_f], MxFormat::new(fmt, 32)).unwrap();
+            let r = RepackedMx::from_mx(&w);
+            let mut y_ref = vec![0.0f32; rows * out_f];
+            let mut y_new = vec![0.0f32; rows * out_f];
+            gemm_packed(&x, rows, &w, &mut y_ref);
+            gemm_repacked(&x, rows, &r, &mut y_new);
+            assert_eq!(y_ref, y_new, "{}", fmt.long_name());
+        }
+    }
+
+    #[test]
     fn packed_gemm_handles_ragged_blocks_and_row_tiles() {
         // out_f not a multiple of the block size; rows beyond one ROW_TILE.
         let (rows, in_f, out_f) = (ROW_TILE + 3, 32, 40);
@@ -370,6 +666,112 @@ mod tests {
         for (a, b) in y_packed.iter().zip(&want) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
+        let r = RepackedMx::from_mx(&w);
+        let mut y_r = vec![0.0f32; rows * out_f];
+        gemm_repacked(&x, rows, &r, &mut y_r);
+        assert_eq!(y_packed, y_r);
+    }
+
+    #[test]
+    fn quantize_acts_exact_for_representable_values() {
+        // Values that are already int·2^e with |int| ≤ 127 round-trip
+        // exactly through the activation quantizer.
+        let bs = 32;
+        let x: Vec<f32> = (0..64).map(|i| (i as i32 - 31) as f32 * 0.5).collect();
+        let a = quantize_acts(&x, 1, 64, bs);
+        for (i, &v) in x.iter().enumerate() {
+            let kb = i / bs;
+            let got = a.codes[i] as f32 * exp2i(a.exps[kb] as i32);
+            assert_eq!(got, v, "i={i}");
+        }
+    }
+
+    #[test]
+    fn int_mac_exact_when_scales_align() {
+        // When activations are exactly i8·2^e representable and every
+        // weight block in a reduction tile shares one scale exponent, the
+        // integer path has no rounding anywhere: it must equal the f64
+        // reference exactly.
+        for bits in [2u8, 4, 6, 8] {
+            let (rows, in_f, out_f) = (4usize, 64usize, 64usize);
+            // Integer activations in [-100, 100].
+            let x: Vec<f32> = (0..rows * in_f)
+                .map(|i| ((i * 37 + 11) % 201) as f32 - 100.0)
+                .collect();
+            // Weight data with the same max magnitude in every block so all
+            // scale exponents agree.
+            let hi = (1i32 << (bits - 1)) - 1;
+            let wdata: Vec<f32> = (0..in_f * out_f)
+                .map(|i| {
+                    let v = (i as i32 * 29 + 3) % (2 * hi + 1) - hi;
+                    if i % 8 == 0 {
+                        hi as f32 // every 8-run carries the max
+                    } else {
+                        v as f32
+                    }
+                })
+                .collect();
+            let w =
+                MxTensor::quantize(&wdata, &[in_f, out_f], MxFormat::mxint(bits, 32)).unwrap();
+            let r = RepackedMx::from_mx(&w);
+            let wd = w.dequantize();
+            assert_eq!(wd, wdata, "bits={bits}: weights must be exact");
+            let want = naive_matmul(&x, rows, &wd, in_f, out_f);
+            let mut y = vec![0.0f32; rows * out_f];
+            gemm_repacked_int(&x, rows, &r, &mut y);
+            assert_eq!(y, want, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn int_mac_tracks_f32_oracle_within_activation_error() {
+        // With random data the only approximation is i8 activation
+        // quantization (~2^-7.5 relative per element); against the
+        // f32-activation dequantize oracle the error must stay at that
+        // scale: small relative RMS, no outliers beyond a few ulp of the
+        // activation step.
+        for fmt in [ElementFormat::int(4), ElementFormat::int(8)] {
+            let (rows, in_f, out_f) = (9usize, 128usize, 96usize);
+            let x = randvec(rows * in_f, 7);
+            let wdata = randvec(in_f * out_f, 8);
+            let w = MxTensor::quantize(&wdata, &[in_f, out_f], MxFormat::new(fmt, 32)).unwrap();
+            let r = RepackedMx::from_mx(&w);
+            let wd = w.dequantize();
+            let mut y_int = vec![0.0f32; rows * out_f];
+            let mut y_ora = vec![0.0f32; rows * out_f];
+            gemm_repacked_int(&x, rows, &r, &mut y_int);
+            gemm_dense(&x, rows, &wd, in_f, out_f, &mut y_ora);
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            let mut max_abs = 0.0f64;
+            for (a, b) in y_int.iter().zip(&y_ora) {
+                num += ((a - b) as f64).powi(2);
+                den += (*b as f64).powi(2);
+                max_abs = max_abs.max(((a - b) as f64).abs());
+            }
+            let rel_rms = (num / den.max(1e-30)).sqrt();
+            // i8 activation quantization is ~2^-7.5 relative per element,
+            // plus up to one alignment bit where block scales differ.
+            assert!(rel_rms < 2.5e-2, "{}: rel rms {rel_rms}", fmt.long_name());
+            // Deterministic bound: Σ_k |Δx_k|·|w_kn| with |Δx| ≤ ulp/2 at
+            // the block scale; bound loosely by the row norms.
+            let ymax = y_ora.iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+            assert!(
+                max_abs < 0.05 * ymax.max(1.0),
+                "{}: max abs err {max_abs} vs ymax {ymax}",
+                fmt.long_name()
+            );
+        }
+    }
+
+    #[test]
+    fn int_mac_zero_and_empty_inputs() {
+        let w = MxTensor::quantize(&vec![0.5f32; 32 * 40], &[32, 40], MxFormat::mxint(4, 32))
+            .unwrap();
+        let r = RepackedMx::from_mx(&w);
+        let mut y = vec![1.0f32; 2 * 40];
+        gemm_repacked_int(&vec![0.0f32; 2 * 32], 2, &r, &mut y);
+        assert!(y.iter().all(|&v| v == 0.0), "zero x ⇒ zero y");
     }
 
     #[test]

@@ -4,27 +4,36 @@
 //! batches through a [`Backend`]:
 //!
 //! * [`NativeBackend`] — pure-Rust CPU engine ([`kernels`], [`forward`])
-//!   that computes directly on packed MX codes with fused per-block scales.
-//!   Needs only an anchor checkpoint + model dims: no XLA install, no AOT
-//!   artifacts — any CPU-only deployment target can serve every format.
+//!   that computes directly on packed MX codes. Weights are held in a
+//!   block-major repacked layout ([`repack::RepackedMx`], built at
+//!   `FormatCache` insert time) and consumed by two pipelines: an exact
+//!   f32 tile kernel, and — opt-in via [`forward::ActMode::Int8`] — an
+//!   integer-MAC pipeline that quantizes activations to i8 per MX block
+//!   and accumulates code×code dots in i32/i16 with one combined E8M0
+//!   scale per block. Generation decodes incrementally through a
+//!   per-layer KV cache ([`forward::KvCache`]). Needs only an anchor
+//!   checkpoint + model dims: no XLA install, no AOT artifacts.
 //! * `PjrtBackend` (feature `pjrt`) — wraps the PJRT runtime and the AOT
 //!   HLO artifacts exported by `python/compile/aot.py`; formats execute as
 //!   dequantized-f32 weight literals through one compiled graph.
 //!
 //! Both cache derived per-format weight sets in a byte-bounded LRU
 //! ([`crate::coordinator::FormatCache`]); the native cache holds *packed*
-//! weights, so a cached low-bit format costs a fraction of an f32 set.
+//! weights and `Arc`-shares the unquantized f32 parameters across entries,
+//! so a cached low-bit format costs only its packed planes.
 
 pub mod forward;
 pub mod kernels;
 pub mod native;
+pub mod repack;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use forward::{LayerWeights, Mat, NativeWeights};
+pub use forward::{ActMode, KvCache, LayerWeights, Mat, NativeWeights, SharedParams};
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
+pub use repack::RepackedMx;
 
 use crate::coordinator::format_cache::CacheStats;
 use crate::formats::ElementFormat;
@@ -56,4 +65,18 @@ pub trait Backend {
 
     /// Weight-cache counters (hits/misses/evictions/bytes).
     fn cache_stats(&self) -> CacheStats;
+
+    /// Sampled text continuation at `fmt`. The native backend serves this
+    /// through KV-cached incremental decode; backends without a generation
+    /// surface return an error.
+    fn generate(
+        &self,
+        prompt: &str,
+        fmt: ElementFormat,
+        n_tokens: usize,
+        cfg: &crate::eval::generate::SampleCfg,
+    ) -> Result<String> {
+        let _ = (prompt, fmt, n_tokens, cfg);
+        anyhow::bail!("backend '{}' has no generation surface", self.name())
+    }
 }

@@ -1,10 +1,16 @@
 //! The native CPU backend: anchor checkpoint → packed per-format weights →
-//! blockwise GEMM forward. No XLA, no AOT artifacts.
+//! block-major GEMM forward. No XLA, no AOT artifacts.
+//!
+//! The unquantized f32 parameters (embeddings, norms, LM head) are loaded
+//! **once** from the anchor and `Arc`-shared into every cached format's
+//! weight set, so a `FormatCache` entry costs only its packed planes; the
+//! cache budget is charged accordingly ([`NativeWeights::packed_bytes`]).
 
-use super::forward::{self, NativeWeights};
+use super::forward::{self, ActMode, KvCache, NativeWeights, SharedParams};
 use super::Backend;
 use crate::checkpoint::Checkpoint;
 use crate::coordinator::format_cache::{CacheStats, FormatCache};
+use crate::eval::generate::SampleCfg;
 use crate::formats::ElementFormat;
 use crate::model::ModelDims;
 use anyhow::{anyhow, Result};
@@ -16,6 +22,8 @@ pub struct NativeBackend {
     dims: ModelDims,
     anchor: Checkpoint,
     anchor_fmt: ElementFormat,
+    act: ActMode,
+    shared: Arc<SharedParams>,
     cache: Mutex<FormatCache<NativeWeights>>,
 }
 
@@ -27,10 +35,17 @@ impl NativeBackend {
         // Master checkpoints carry no anchor meta; record the family
         // default so `anchor_fmt` always names a sensible precision.
         let anchor_fmt = anchor.anchor_format()?.unwrap_or(ElementFormat::int(8));
+        let shared = Arc::new(SharedParams::from_checkpoint(&dims, &anchor)?);
+        log::info!(
+            "native: shared f32 params loaded once ({:.2} MB, Arc-shared across formats)",
+            shared.storage_bytes() as f64 / 1e6
+        );
         Ok(NativeBackend {
             dims,
             anchor,
             anchor_fmt,
+            act: ActMode::F32,
+            shared,
             cache: Mutex::new(FormatCache::new(cache_bytes)),
         })
     }
@@ -41,34 +56,73 @@ impl NativeBackend {
         NativeBackend::new(dims, anchor, cache_bytes)
     }
 
+    /// Select the activation pipeline for packed linears (builder-style).
+    /// [`ActMode::Int8`] runs MXINT formats through the integer-MAC GEMM.
+    pub fn with_act(mut self, act: ActMode) -> NativeBackend {
+        self.act = act;
+        self
+    }
+
+    /// Activation pipeline in use.
+    pub fn act(&self) -> ActMode {
+        self.act
+    }
+
     /// Anchor precision the checkpoint stores.
     pub fn anchor_fmt(&self) -> ElementFormat {
         self.anchor_fmt
     }
 
     /// Packed serving weights for `fmt`, derived from the anchor via
-    /// Slice-and-Scale (cached, LRU).
+    /// Slice-and-Scale + block-major repack (cached, LRU; the shared f32
+    /// set rides along by `Arc`).
     pub fn weights(&self, fmt: ElementFormat) -> Result<Arc<NativeWeights>> {
         if let Some(w) = self.cache.lock().unwrap().get(fmt) {
             return Ok(w);
         }
         let t = std::time::Instant::now();
-        let w = Arc::new(NativeWeights::packed_from_checkpoint(
+        let w = Arc::new(NativeWeights::packed_with_shared(
             &self.dims,
             &self.anchor,
             fmt,
+            self.shared.clone(),
+            self.act,
         )?);
-        let bytes = w.storage_bytes();
+        // Charge the cache for this entry's own bytes only: the f32
+        // parameters are shared across every entry, not duplicated.
+        let bytes = w.packed_bytes();
         log::info!(
-            "native: derived packed {} weights from anchor {} in {:.1} ms ({:.2} MB resident)",
+            "native: derived packed {} weights from anchor {} in {:.1} ms \
+             ({:.2} MB packed + {:.2} MB shared f32, act={})",
             fmt,
             self.anchor_fmt,
             t.elapsed().as_secs_f64() * 1e3,
-            bytes as f64 / 1e6
+            bytes as f64 / 1e6,
+            self.shared.storage_bytes() as f64 / 1e6,
+            self.act.name()
         );
         self.cache.lock().unwrap().put(fmt, w.clone(), bytes);
         Ok(w)
     }
+
+    /// Fresh KV cache sized for this model.
+    pub fn kv_cache(&self) -> KvCache {
+        KvCache::new(&self.dims)
+    }
+
+    /// Greedy/temperature generation at `fmt` with KV-cached incremental
+    /// decode (see [`crate::eval::generate::generate_native`]).
+    pub fn generate(
+        &self,
+        prompt: &str,
+        fmt: ElementFormat,
+        n_tokens: usize,
+        cfg: &SampleCfg,
+    ) -> Result<String> {
+        let w = self.weights(fmt)?;
+        crate::eval::generate::generate_native(&w, prompt, n_tokens, cfg)
+    }
+
 }
 
 impl Backend for NativeBackend {
@@ -108,6 +162,16 @@ impl Backend for NativeBackend {
     fn cache_stats(&self) -> CacheStats {
         self.cache.lock().unwrap().stats()
     }
+
+    fn generate(
+        &self,
+        prompt: &str,
+        fmt: ElementFormat,
+        n_tokens: usize,
+        cfg: &SampleCfg,
+    ) -> Result<String> {
+        NativeBackend::generate(self, prompt, fmt, n_tokens, cfg)
+    }
 }
 
 #[cfg(test)]
@@ -141,6 +205,42 @@ mod tests {
         assert_eq!(s.hits, 1);
         assert_eq!(s.entries, 2);
         assert!(s.used_bytes > 0);
+    }
+
+    #[test]
+    fn cache_entries_share_one_f32_set() {
+        let be = backend(64 << 20);
+        let w8 = be.weights(ElementFormat::int(8)).unwrap();
+        let w4 = be.weights(ElementFormat::int(4)).unwrap();
+        assert!(
+            Arc::ptr_eq(&w8.shared, &w4.shared),
+            "formats must share the f32 params"
+        );
+        // Cache charges packed planes only.
+        let s = be.cache_stats();
+        assert_eq!(s.used_bytes, w8.packed_bytes() + w4.packed_bytes());
+        assert!(s.used_bytes < w8.storage_bytes() + w4.storage_bytes());
+    }
+
+    #[test]
+    fn int8_act_mode_scores_close_to_f32() {
+        let mut dims = ModelDims::new("unit", 64, 32, 2, 2, 16);
+        dims.train_batch = 2;
+        let m = dims.to_manifest();
+        let ck = ParamSet::init(&m, 9)
+            .to_anchor_checkpoint(&m, ElementFormat::int(8))
+            .unwrap();
+        let exact = NativeBackend::new(dims.clone(), ck.clone(), 1 << 20).unwrap();
+        let intmac = NativeBackend::new(dims, ck, 1 << 20)
+            .unwrap()
+            .with_act(ActMode::Int8);
+        let tokens: Vec<i32> = (0..2 * 17).map(|i| (i * 3 % 64) as i32).collect();
+        let a = exact.score_batch(&tokens, ElementFormat::int(8)).unwrap();
+        let b = intmac.score_batch(&tokens, ElementFormat::int(8)).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(y.is_finite());
+            assert!((x - y).abs() < 0.05, "act quantization drift: {x} vs {y}");
+        }
     }
 
     #[test]

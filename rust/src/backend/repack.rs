@@ -1,0 +1,221 @@
+//! Block-major repacked weights — the serving layout of the native GEMM.
+//!
+//! An [`MxTensor`] stores codes row-major (`[in_f, out_f]`, scaling blocks
+//! along `out`) — the wire and checkpoint layout. The GEMM kernels instead
+//! want to stream one *output block* at a time: all `in_f` code rows of a
+//! single `block_size`-wide column group, contiguous, with that block's
+//! scale column alongside. [`RepackedMx`] is exactly that layout, built once
+//! per weight at `FormatCache` insert time:
+//!
+//! ```text
+//! codes : [jb][k][n_in_block]   one plane per out-block jb; each (jb, k)
+//!                               row is `block_size` codes (tail block
+//!                               zero-padded) packed at the element width
+//!                               and padded to whole bytes, so tile decode
+//!                               is a straight byte-aligned streaming loop.
+//! scales: [jb][k]               the transposed scale matrix — the GEMM
+//!                               reads one contiguous scale column per
+//!                               out-block instead of striding by
+//!                               blocks-per-row (this is where the old
+//!                               per-row-tile `exp2i` re-expansion went).
+//! ```
+//!
+//! The transform is pure data movement: codes and scales are bit-identical
+//! to the source tensor (round-trip enforced by tests), so numerics are
+//! decided entirely by the kernel that consumes the layout.
+
+use crate::formats::{pack, ElementFormat};
+use crate::tensor::MxTensor;
+
+/// A 2-D packed MX weight `[in_f, out_f]` in block-major serving layout.
+#[derive(Debug, Clone)]
+pub struct RepackedMx {
+    pub elem: ElementFormat,
+    pub block_size: usize,
+    pub in_f: usize,
+    pub out_f: usize,
+    /// Block-major code planes (see module docs).
+    codes: Vec<u8>,
+    /// Block-major scales: `scales[jb * in_f + k]`.
+    scales: Vec<i8>,
+}
+
+impl RepackedMx {
+    /// Repack a row-major packed tensor into block-major serving form.
+    pub fn from_mx(t: &MxTensor) -> RepackedMx {
+        assert_eq!(t.shape.len(), 2, "repack wants a 2-D weight");
+        let in_f = t.shape[0];
+        let out_f = t.shape[1];
+        let bs = t.format.block_size;
+        let bpr = out_f.div_ceil(bs);
+        let flat = t.unpack_codes();
+        let mut tile_codes = vec![0i8; bpr * in_f * bs];
+        let mut scales = vec![0i8; bpr * in_f];
+        for jb in 0..bpr {
+            let n0 = jb * bs;
+            let nl = (out_f - n0).min(bs);
+            for k in 0..in_f {
+                tile_codes[(jb * in_f + k) * bs..][..nl]
+                    .copy_from_slice(&flat[k * out_f + n0..][..nl]);
+                scales[jb * in_f + k] = t.scales[k * bpr + jb];
+            }
+        }
+        let codes = if in_f == 0 || out_f == 0 {
+            Vec::new()
+        } else {
+            pack::pack_rows(&tile_codes, t.format.elem.bits(), bs)
+        };
+        RepackedMx {
+            elem: t.format.elem,
+            block_size: bs,
+            in_f,
+            out_f,
+            codes,
+            scales,
+        }
+    }
+
+    /// Output blocks per row (`ceil(out_f / block_size)`).
+    pub fn blocks(&self) -> usize {
+        self.out_f.div_ceil(self.block_size)
+    }
+
+    /// Packed bytes of one `(jb, k)` code row.
+    pub fn row_bytes(&self) -> usize {
+        pack::packed_len(self.block_size, self.elem.bits())
+    }
+
+    /// Contiguous scale column of out-block `jb` (one `i8` exponent per `k`).
+    pub fn scale_col(&self, jb: usize) -> &[i8] {
+        &self.scales[jb * self.in_f..(jb + 1) * self.in_f]
+    }
+
+    /// Decode rows `k0..k0+kl` of out-block `jb` into `out` (sign-extended
+    /// integer codes), `block_size` codes per row. `out.len()` must be
+    /// `kl * block_size`.
+    pub fn decode_tile_signed(&self, jb: usize, k0: usize, kl: usize, out: &mut [i8]) {
+        let bs = self.block_size;
+        assert_eq!(out.len(), kl * bs);
+        let rb = self.row_bytes();
+        let w = self.elem.bits();
+        let base = (jb * self.in_f + k0) * rb;
+        for k in 0..kl {
+            pack::unpack_signed_into(&self.codes[base + k * rb..], w, &mut out[k * bs..][..bs]);
+        }
+    }
+
+    /// Raw-code variant of [`Self::decode_tile_signed`] (minifloat planes).
+    pub fn decode_tile_unsigned(&self, jb: usize, k0: usize, kl: usize, out: &mut [u8]) {
+        let bs = self.block_size;
+        assert_eq!(out.len(), kl * bs);
+        let rb = self.row_bytes();
+        let w = self.elem.bits();
+        let base = (jb * self.in_f + k0) * rb;
+        for k in 0..kl {
+            pack::unpack_unsigned_into(&self.codes[base + k * rb..], w, &mut out[k * bs..][..bs]);
+        }
+    }
+
+    /// Resident bytes (packed codes + scales) — cache accounting.
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len()
+    }
+
+    /// Reconstruct the row-major code plane (tests / round-trip checks).
+    pub fn to_row_major_codes(&self) -> Vec<i8> {
+        let bs = self.block_size;
+        let mut flat = vec![0i8; self.in_f * self.out_f];
+        let mut row = vec![0i8; bs];
+        for jb in 0..self.blocks() {
+            let n0 = jb * bs;
+            let nl = (self.out_f - n0).min(bs);
+            for k in 0..self.in_f {
+                self.decode_tile_signed(jb, k, 1, &mut row);
+                flat[k * self.out_f + n0..][..nl].copy_from_slice(&row[..nl]);
+            }
+        }
+        flat
+    }
+
+    /// Reconstruct the row-major scale matrix `[k][jb]` (tests).
+    pub fn to_row_major_scales(&self) -> Vec<i8> {
+        let bpr = self.blocks();
+        let mut out = vec![0i8; self.in_f * bpr];
+        for jb in 0..bpr {
+            for k in 0..self.in_f {
+                out[k * bpr + jb] = self.scales[jb * self.in_f + k];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{ElementFormat, MxFormat};
+    use crate::util::props::{run_cases, Gen};
+
+    #[test]
+    fn prop_repack_round_trips_codes_and_scales() {
+        // Block-major repack is pure data movement: codes and scales must
+        // reconstruct bit-identically for every element format, including
+        // ragged final blocks and non-multiple row counts.
+        run_cases("repack roundtrip", 24, |g: &mut Gen| {
+            let in_f = g.len(1, 70);
+            let out_f = g.len(1, 90);
+            let bs = [8usize, 16, 32][g.rng.range(0, 3)];
+            let data: Vec<f32> = (0..in_f * out_f).map(|_| g.rng.normal()).collect();
+            for fmt in [
+                ElementFormat::int(2),
+                ElementFormat::int(4),
+                ElementFormat::int(8),
+                ElementFormat::fp_from_bits(4),
+                ElementFormat::fp_from_bits(8),
+            ] {
+                let t =
+                    MxTensor::quantize(&data, &[in_f, out_f], MxFormat::new(fmt, bs)).unwrap();
+                let r = RepackedMx::from_mx(&t);
+                if r.to_row_major_codes() != t.unpack_codes() {
+                    return Err(format!("{fmt}: codes differ ({in_f}x{out_f}@{bs})"));
+                }
+                if r.to_row_major_scales() != t.scales {
+                    return Err(format!("{fmt}: scales differ ({in_f}x{out_f}@{bs})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tile_decode_matches_dequantize_layout() {
+        // Decoding a (jb, k0, kl) tile must yield exactly the codes of
+        // columns [jb*bs, jb*bs+bs) of rows [k0, k0+kl).
+        let (in_f, out_f, bs) = (48usize, 40usize, 32usize);
+        let data: Vec<f32> = (0..in_f * out_f).map(|i| ((i * 37) % 19) as f32 - 9.0).collect();
+        let t = MxTensor::quantize(&data, &[in_f, out_f], MxFormat::mxint(4, bs)).unwrap();
+        let flat = t.unpack_codes();
+        let r = RepackedMx::from_mx(&t);
+        let mut tile = vec![0i8; 16 * bs];
+        r.decode_tile_signed(1, 8, 16, &mut tile);
+        let nl = out_f - bs; // ragged tail block: 8 columns
+        for k in 0..16 {
+            let want = &flat[(8 + k) * out_f + bs..][..nl];
+            assert_eq!(&tile[k * bs..][..nl], want, "k={k}");
+            assert!(tile[k * bs + nl..(k + 1) * bs].iter().all(|&c| c == 0), "pad");
+        }
+    }
+
+    #[test]
+    fn storage_is_close_to_source_tensor() {
+        // Padding waste is bounded by one block per (jb, k) row.
+        let t = MxTensor::quantize(
+            &vec![0.1f32; 128 * 96],
+            &[128, 96],
+            MxFormat::mxint(4, 32),
+        )
+        .unwrap();
+        let r = RepackedMx::from_mx(&t);
+        assert_eq!(r.storage_bytes(), t.storage_bytes());
+    }
+}

@@ -7,10 +7,14 @@
 //!
 //! The value type is generic so each backend caches its own weight
 //! representation: the native backend stores *packed* per-format weight sets
-//! (`backend::NativeWeights` — codes + block scales, 2–8 bits/element), the
-//! PJRT backend stores f32 parameter literals. Byte accounting uses the
-//! caller-reported resident size, so a packed MXINT4 entry costs ~8× less
-//! budget than its f32 counterpart.
+//! (`backend::NativeWeights` — block-major codes + scales, 2–8 bits/element),
+//! the PJRT backend stores f32 parameter literals. Byte accounting uses the
+//! caller-reported **marginal** resident size: the native backend charges
+//! only `NativeWeights::packed_bytes()` per entry because the unquantized
+//! f32 parameters (embeddings/norms/head) are `Arc`-shared across every
+//! entry and paid for once by the backend, not per format — so a packed
+//! MXINT4 entry costs ~8× less budget than an f32 set and the budget is not
+//! inflated by duplicated f32 planes.
 
 use crate::formats::ElementFormat;
 use std::collections::HashMap;

@@ -21,7 +21,7 @@ pub mod format_cache;
 
 pub use format_cache::{CacheStats, FormatCache};
 
-use crate::backend::{Backend, NativeBackend};
+use crate::backend::{ActMode, Backend, NativeBackend};
 use crate::checkpoint::Checkpoint;
 use crate::formats::ElementFormat;
 use crate::model::ModelDims;
@@ -43,11 +43,20 @@ impl ElasticEngine {
     /// Native engine from an in-memory anchor checkpoint (no artifacts, no
     /// XLA).
     pub fn native(dims: ModelDims, anchor: Checkpoint, cache_bytes: usize) -> Result<ElasticEngine> {
-        Ok(ElasticEngine::from_backend(Box::new(NativeBackend::new(
-            dims,
-            anchor,
-            cache_bytes,
-        )?)))
+        Self::native_with_act(dims, anchor, cache_bytes, ActMode::F32)
+    }
+
+    /// Native engine with an explicit activation pipeline —
+    /// [`ActMode::Int8`] serves MXINT formats through the integer-MAC GEMM.
+    pub fn native_with_act(
+        dims: ModelDims,
+        anchor: Checkpoint,
+        cache_bytes: usize,
+        act: ActMode,
+    ) -> Result<ElasticEngine> {
+        Ok(ElasticEngine::from_backend(Box::new(
+            NativeBackend::new(dims, anchor, cache_bytes)?.with_act(act),
+        )))
     }
 
     /// Native engine, loading the anchor checkpoint from disk.
@@ -56,11 +65,19 @@ impl ElasticEngine {
         checkpoint: &Path,
         cache_bytes: usize,
     ) -> Result<ElasticEngine> {
-        Ok(ElasticEngine::from_backend(Box::new(NativeBackend::open(
-            dims,
-            checkpoint,
-            cache_bytes,
-        )?)))
+        Self::open_native_with_act(dims, checkpoint, cache_bytes, ActMode::F32)
+    }
+
+    /// Disk-loading variant of [`Self::native_with_act`].
+    pub fn open_native_with_act(
+        dims: ModelDims,
+        checkpoint: &Path,
+        cache_bytes: usize,
+        act: ActMode,
+    ) -> Result<ElasticEngine> {
+        Ok(ElasticEngine::from_backend(Box::new(
+            NativeBackend::open(dims, checkpoint, cache_bytes)?.with_act(act),
+        )))
     }
 
     /// PJRT engine: open artifacts + anchor checkpoint.
@@ -109,6 +126,18 @@ impl ElasticEngine {
     /// token windows at `fmt`.
     pub fn score_batch(&self, tokens: &[i32], fmt: ElementFormat) -> Result<Vec<f32>> {
         self.backend.score_batch(tokens, fmt)
+    }
+
+    /// Sampled text continuation at `fmt` (native backend: KV-cached
+    /// incremental decode).
+    pub fn generate(
+        &self,
+        prompt: &str,
+        fmt: ElementFormat,
+        n_tokens: usize,
+        cfg: &crate::eval::generate::SampleCfg,
+    ) -> Result<String> {
+        self.backend.generate(prompt, fmt, n_tokens, cfg)
     }
 
     /// Weight-cache counters.

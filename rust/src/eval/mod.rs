@@ -10,7 +10,6 @@
 //! equivalents ([`mean_nll_native`], [`perplexity_native`]) run everywhere
 //! through `backend::forward` and need no AOT artifacts.
 
-#[cfg(feature = "pjrt")]
 pub mod generate;
 
 #[cfg(feature = "pjrt")]

@@ -163,6 +163,41 @@ pub fn unpack_signed_into(bytes: &[u8], w: u8, out: &mut [i8]) {
     }
 }
 
+/// Pack `codes` as consecutive **byte-aligned rows** of `row_codes` codes
+/// each: row `r` occupies bytes `[r·row_bytes, (r+1)·row_bytes)` with
+/// `row_bytes = packed_len(row_codes, w)`, so any row can be unpacked with a
+/// plain [`unpack_signed_into`]/[`unpack_unsigned_into`] on its byte slice —
+/// no bit-offset arithmetic. This is the block-major serving layout the
+/// native GEMM streams (`backend::repack`); the wire/checkpoint layout stays
+/// the fully-contiguous [`pack`] stream.
+pub fn pack_rows(codes: &[i8], w: u8, row_codes: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&w));
+    assert!(row_codes > 0 && codes.len() % row_codes == 0);
+    let rows = codes.len() / row_codes;
+    let row_bytes = packed_len(row_codes, w);
+    let mut out = vec![0u8; rows * row_bytes];
+    for (r, row) in codes.chunks_exact(row_codes).enumerate() {
+        pack_into(row, w, &mut out[r * row_bytes..(r + 1) * row_bytes]);
+    }
+    out
+}
+
+/// Inverse of [`pack_rows`]: unpack `rows × row_codes` signed codes from a
+/// byte-aligned-row stream.
+pub fn unpack_rows_signed(bytes: &[u8], w: u8, row_codes: usize, rows: usize) -> Vec<i8> {
+    let row_bytes = packed_len(row_codes, w);
+    assert!(bytes.len() >= rows * row_bytes, "packed buffer too short");
+    let mut out = vec![0i8; rows * row_codes];
+    for r in 0..rows {
+        unpack_signed_into(
+            &bytes[r * row_bytes..(r + 1) * row_bytes],
+            w,
+            &mut out[r * row_codes..(r + 1) * row_codes],
+        );
+    }
+    out
+}
+
 /// Scalar walk over `n` codes starting at absolute bit `bit`, feeding each
 /// masked code to `emit` (shared core of the `*_at` random-access paths).
 #[inline]
@@ -387,6 +422,41 @@ mod tests {
                 assert_eq!(got, want, "{fmt}");
             }
         }
+    }
+
+    #[test]
+    fn prop_pack_rows_roundtrip_and_alignment() {
+        // Byte-aligned row packing must round-trip at every width and row
+        // length (ragged bit counts included), and each row must start
+        // exactly at `r * packed_len(row_codes, w)`.
+        run_cases("pack_rows roundtrip", 32, |g: &mut Gen| {
+            let row_codes = g.len(1, 70);
+            let rows = g.len(1, 9);
+            for w in 2..=8u8 {
+                let lo = -(1i32 << (w - 1));
+                let hi = (1i32 << (w - 1)) - 1;
+                let codes: Vec<i8> = (0..rows * row_codes)
+                    .map(|_| (g.rng.range(0, (hi - lo + 1) as usize) as i32 + lo) as i8)
+                    .collect();
+                let packed = pack_rows(&codes, w, row_codes);
+                let row_bytes = packed_len(row_codes, w);
+                if packed.len() != rows * row_bytes {
+                    return Err(format!("w={w}: wrong packed_rows len"));
+                }
+                if unpack_rows_signed(&packed, w, row_codes, rows) != codes {
+                    return Err(format!("w={w} rows={rows} rc={row_codes}: roundtrip"));
+                }
+                // Per-row slices decode independently (the streaming GEMM path).
+                for r in 0..rows {
+                    let mut got = vec![0i8; row_codes];
+                    unpack_signed_into(&packed[r * row_bytes..], w, &mut got);
+                    if got != codes[r * row_codes..(r + 1) * row_codes] {
+                        return Err(format!("w={w} row {r}: unaligned row start"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

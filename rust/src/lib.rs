@@ -25,11 +25,16 @@
 //!
 //! * **Native** ([`backend::NativeBackend`], the default): a pure-Rust CPU
 //!   engine whose GEMMs execute directly on packed MX codes — sub-byte
-//!   integer / minifloat elements with the per-block E8M0 scale fused into
-//!   the dot product. One anchor checkpoint serves every MXINT/MXFP format
-//!   with **no XLA install and no AOT artifacts**, so CPU-only deployment
-//!   targets get the full elastic-precision story, and lower-bit formats
-//!   genuinely stream less weight memory per batch.
+//!   integer / minifloat elements held in a block-major repacked layout
+//!   ([`backend::RepackedMx`]) with per-block E8M0 scales. MXINT formats
+//!   can run a true integer-MAC pipeline ([`backend::ActMode::Int8`]):
+//!   activations quantize to i8 per MX block, dots accumulate code×code
+//!   in i32/i16, and the combined scale applies once per block.
+//!   Generation decodes incrementally through a KV cache
+//!   ([`backend::KvCache`]). One anchor checkpoint serves every
+//!   MXINT/MXFP format with **no XLA install and no AOT artifacts**, so
+//!   CPU-only deployment targets get the full elastic-precision story,
+//!   and lower-bit formats genuinely stream less weight memory per batch.
 //! * **PJRT** (`--features pjrt`): executes the AOT HLO artifacts exported
 //!   by `python/compile/aot.py`; formats run as dequantized-f32 literals
 //!   through one compiled graph (quality measurements, training).

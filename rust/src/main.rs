@@ -5,6 +5,8 @@
 //!   pretrain                     train the base LM (needs `pjrt`)
 //!   train --plan <name>          run a QAT/FT plan (needs `pjrt`)
 //!   eval --checkpoint <p>        PPL grid for a checkpoint (native or pjrt)
+//!   generate --prompt <s>        sample a continuation (native: KV-cached
+//!                                incremental decode; pjrt: AOT forward_b1)
 //!   convert --in <p> --format f  Slice-and-Scale convert a checkpoint
 //!   inspect --checkpoint <p>     dump checkpoint contents
 //!   serve                        run the elastic server demo workload
@@ -18,6 +20,7 @@
 //! full experiment matrix execute AOT graphs and need `--features pjrt`.
 
 use anyhow::{anyhow, Context, Result};
+use mfqat::backend::ActMode;
 use mfqat::checkpoint::Checkpoint;
 use mfqat::coordinator::ElasticEngine;
 use mfqat::data::{Corpus, CorpusConfig};
@@ -104,13 +107,15 @@ COMMANDS:
   pretrain [--pretrain-epochs N]    train the base LM (needs --features pjrt)
   train --plan <name> [--lr X]      run a training plan (needs --features pjrt)
   eval --checkpoint P [--formats..] PPL grid for a checkpoint
-                                    [--backend native|pjrt]
-  generate --checkpoint P --prompt S [--format F] [--tokens N] [--temp X]
-                                    sample a continuation (needs --features pjrt)
+                                    [--backend native|pjrt] [--act f32|int8]
+  generate [--checkpoint P] --prompt S [--format F] [--tokens N] [--temp X]
+                                    sample a continuation; the native backend
+                                    (default) decodes through the KV cache
+                                    [--backend native|pjrt] [--act f32|int8]
   convert --in P --format F --out Q Slice-and-Scale convert an anchor checkpoint
   inspect --checkpoint P            dump checkpoint metadata
   serve [--policy ladder] [--requests N] [--burst N] [--backend native|pjrt]
-        [--checkpoint P] [--cache-mb N]
+        [--checkpoint P] [--cache-mb N] [--act f32|int8]
                                     run the elastic serving demo workload
   experiment <id>                   regenerate a paper figure/table; id in
                                     fig1 fig2 fig3 fig4 tab1 tab2 tab3 fig19 fig20 all
@@ -206,9 +211,22 @@ fn train_cmd(_args: &Args) -> Result<()> {
 fn eval_cmd(args: &Args) -> Result<()> {
     match args.get_or("backend", "native") {
         "native" => eval_native(args),
-        "pjrt" => eval_pjrt(args),
+        "pjrt" => {
+            reject_act_for_pjrt(args)?;
+            eval_pjrt(args)
+        }
         other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
     }
+}
+
+/// `--act` selects the native integer-MAC pipeline; the PJRT graph always
+/// executes dequantized f32, so a non-default act mode there would silently
+/// measure the wrong thing — refuse instead.
+fn reject_act_for_pjrt(args: &Args) -> Result<()> {
+    if ActMode::parse(args.get_or("act", "f32"))? != ActMode::F32 {
+        anyhow::bail!("--act int8 is a native-backend pipeline; the pjrt backend runs f32 only");
+    }
+    Ok(())
 }
 
 /// Native PPL grid: score the validation split through the packed-MX
@@ -229,15 +247,24 @@ fn eval_native(args: &Args) -> Result<()> {
         qat_sequences: 8,
         val_sequences: 64,
     });
-    println!("{:<14} {:>10}   (native backend)", "format", "val_ppl");
+    let act = ActMode::parse(args.get_or("act", "f32"))?;
+    println!(
+        "{:<14} {:>10}   (native backend, act={})",
+        "format",
+        "val_ppl",
+        act.name()
+    );
     let dense = NativeWeights::dense_from_checkpoint(&dims, &ck, None)?;
     println!(
         "{:<14} {:>10.3}",
         "fp32",
         mfqat::eval::perplexity_native(&dense, &corpus.val, dims.train_batch)?
     );
+    // One shared f32 set for the whole grid; per-format cost is packed
+    // planes only.
+    let shared = std::sync::Arc::new(mfqat::backend::SharedParams::from_checkpoint(&dims, &ck)?);
     for fmt in fmts {
-        let w = NativeWeights::packed_from_checkpoint(&dims, &ck, fmt)?;
+        let w = NativeWeights::packed_with_shared(&dims, &ck, fmt, shared.clone(), act)?;
         println!(
             "{:<14} {:>10.3}",
             fmt.long_name(),
@@ -280,8 +307,53 @@ fn eval_pjrt(_args: &Args) -> Result<()> {
     anyhow::bail!("this build has no PJRT backend — rebuild with `--features pjrt`")
 }
 
-#[cfg(feature = "pjrt")]
+/// Shared sampling knobs for both generation backends.
+fn sample_cfg(args: &Args) -> Result<mfqat::eval::generate::SampleCfg> {
+    Ok(mfqat::eval::generate::SampleCfg {
+        temperature: args.f64("temp", 0.8)? as f32,
+        top_k: args.usize("top-k", 8)?,
+        seed: args.u64("seed", 0)?,
+    })
+}
+
 fn generate_cmd(args: &Args) -> Result<()> {
+    match args.get_or("backend", "native") {
+        "native" => generate_native_cmd(args),
+        "pjrt" => {
+            reject_act_for_pjrt(args)?;
+            generate_pjrt_cmd(args)
+        }
+        other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
+    }
+}
+
+/// Native generation: prompt prefill + KV-cached incremental decode over
+/// the packed weights — no artifacts, no XLA, no full-window recompute.
+fn generate_native_cmd(args: &Args) -> Result<()> {
+    let dims = resolve_dims(args)?;
+    let ck_path = match args.get("checkpoint") {
+        Some(p) => PathBuf::from(p),
+        None => default_anchor_checkpoint(args, &dims)?,
+    };
+    let prompt = args.get_or("prompt", "the color of kova is").to_string();
+    let act = ActMode::parse(args.get_or("act", "f32"))?;
+    let fmt = args
+        .get("format")
+        .map(ElementFormat::parse)
+        .transpose()?
+        .unwrap_or(ElementFormat::int(8));
+    let cfg = sample_cfg(args)?;
+    let n = args.usize("tokens", 64)?;
+    let cache_bytes = args.usize("cache-mb", 256)? << 20;
+    let engine =
+        ElasticEngine::open_native_with_act(dims, &ck_path, cache_bytes, act)?;
+    let out = engine.generate(&prompt, fmt, n, &cfg)?;
+    println!("{prompt}│{out}");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn generate_pjrt_cmd(args: &Args) -> Result<()> {
     let ctx = open_ctx(args)?;
     let ck_path = args
         .get("checkpoint")
@@ -294,11 +366,7 @@ fn generate_cmd(args: &Args) -> Result<()> {
         .transpose()?;
     let params = ParamSet::from_checkpoint(&ctx.arts.manifest, &ck, fmt)?;
     let lits = mfqat::eval::ParamLiterals::build(&params)?;
-    let cfg = mfqat::eval::generate::SampleCfg {
-        temperature: args.f64("temp", 0.8)? as f32,
-        top_k: args.usize("top-k", 8)?,
-        seed: args.u64("seed", 0)?,
-    };
+    let cfg = sample_cfg(args)?;
     let n = args.usize("tokens", 64)?;
     let out = mfqat::eval::generate::generate(&ctx.rt, &ctx.arts, &lits, prompt, n, &cfg)?;
     println!("{prompt}│{out}");
@@ -306,8 +374,8 @@ fn generate_cmd(args: &Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn generate_cmd(_args: &Args) -> Result<()> {
-    anyhow::bail!("`generate` runs the AOT forward graph — rebuild with `--features pjrt`")
+fn generate_pjrt_cmd(_args: &Args) -> Result<()> {
+    anyhow::bail!("this build has no PJRT backend — rebuild with `--features pjrt`")
 }
 
 fn convert(args: &Args) -> Result<()> {
@@ -437,6 +505,10 @@ fn serve(args: &Args) -> Result<()> {
     let policy = Policy::parse(args.get_or("policy", "ladder"))?;
     let n_requests = args.usize("requests", 256)?;
     let burst = args.usize("burst", 32)?;
+    let act = ActMode::parse(args.get_or("act", "f32"))?;
+    if backend == "pjrt" {
+        reject_act_for_pjrt(args)?;
+    }
     let cache_bytes = args.usize("cache-mb", 256)? << 20;
     let dims = resolve_dims(args)?;
     let width = dims.seq_len + 1;
@@ -452,7 +524,9 @@ fn serve(args: &Args) -> Result<()> {
     let (server, client) = Server::start(
         width,
         move || match backend.as_str() {
-            "native" => ElasticEngine::open_native(dims_worker, &ck_path, cache_bytes),
+            "native" => {
+                ElasticEngine::open_native_with_act(dims_worker, &ck_path, cache_bytes, act)
+            }
             "pjrt" => pjrt_engine(&root, &config, &ck_path, cache_bytes),
             other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
         },

@@ -3,7 +3,7 @@
 //! MXINT{4,6,8}/MXFP{4,6,8} format from one anchor checkpoint, and the
 //! engine's conversion/caching behaviour — all with **no** AOT artifacts.
 
-use mfqat::backend::forward::{forward_logits, score_rows};
+use mfqat::backend::forward::{forward_cached, forward_logits, score_rows, ActMode, KvCache};
 use mfqat::backend::NativeWeights;
 use mfqat::checkpoint::Checkpoint;
 use mfqat::coordinator::ElasticEngine;
@@ -127,18 +127,21 @@ fn engine_serves_every_paper_format_from_one_anchor() {
 
 #[test]
 fn lower_precision_costs_fewer_cache_bytes() {
-    // The native cache holds *packed* weight sets: MXINT4 must account
-    // roughly half the bytes of MXINT8 (plus shared f32 params).
+    // The native cache holds *packed* weight sets and Arc-shares the
+    // unquantized f32 params: an entry is charged only its packed planes,
+    // and MXINT4 planes are roughly half the MXINT8 bytes.
     let dims = test_dims();
     let ck = anchor_ck(&dims, 24, ElementFormat::int(8));
     let w8 = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
     let w4 = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(4)).unwrap();
-    let quant8: usize = w8.storage_bytes();
-    let quant4: usize = w4.storage_bytes();
+    let quant8: usize = w8.packed_bytes();
+    let quant4: usize = w4.packed_bytes();
     assert!(
         quant4 < quant8,
-        "packed int4 set ({quant4} B) must be smaller than int8 ({quant8} B)"
+        "packed int4 planes ({quant4} B) must be smaller than int8 ({quant8} B)"
     );
+    // Half the code bits ⇒ roughly half the plane bytes (scales identical).
+    assert!(quant4 * 2 < quant8 + quant8 / 4, "int4 ~ half of int8: {quant4} vs {quant8}");
 
     let engine = ElasticEngine::native(dims, ck, 256 << 20).unwrap();
     engine
@@ -148,7 +151,82 @@ fn lower_precision_costs_fewer_cache_bytes() {
         )
         .unwrap();
     let stats = engine.cache_stats();
-    assert_eq!(stats.used_bytes, quant4, "cache accounts packed bytes");
+    assert_eq!(
+        stats.used_bytes, quant4,
+        "cache charges packed planes only (shared f32 params ride the Arc)"
+    );
+}
+
+#[test]
+fn kv_incremental_decode_matches_full_window_all_formats() {
+    // Prefill + one-token decode steps must reproduce the full-window
+    // forward logits exactly at every position, for every ElementFormat
+    // the paper evaluates, in both activation modes (the decode path is
+    // deterministic per position — same op order as the batch forward).
+    let dims = test_dims();
+    let vocab = dims.vocab;
+    for (anchor, fmts) in [
+        (ElementFormat::int(8), ElementFormat::all_int()),
+        (ElementFormat::fp_from_bits(8), ElementFormat::all_fp()),
+    ] {
+        let ck = anchor_ck(&dims, 31, anchor);
+        let tokens = token_rows(&dims, 1, dims.seq_len, 7);
+        for fmt in fmts {
+            for act in [ActMode::F32, ActMode::Int8] {
+                let mut w =
+                    NativeWeights::packed_from_checkpoint(&dims, &ck, fmt).unwrap();
+                w.act = act;
+                let full = forward_logits(&w, &tokens, 1).unwrap();
+                let p0 = dims.seq_len / 2;
+                let mut cache = KvCache::new(&dims);
+                let prefill = forward_cached(&w, &mut cache, &tokens[..p0]).unwrap();
+                assert_eq!(cache.len(), p0);
+                assert_eq!(
+                    prefill,
+                    full[..p0 * vocab].to_vec(),
+                    "{} act={}: prefill logits",
+                    fmt.long_name(),
+                    act.name()
+                );
+                for i in p0..dims.seq_len {
+                    let step = forward_cached(&w, &mut cache, &tokens[i..i + 1]).unwrap();
+                    assert_eq!(
+                        step,
+                        full[i * vocab..(i + 1) * vocab].to_vec(),
+                        "{} act={}: decode step at position {i}",
+                        fmt.long_name(),
+                        act.name()
+                    );
+                }
+                assert_eq!(cache.len(), dims.seq_len);
+            }
+        }
+    }
+}
+
+#[test]
+fn int_mac_scoring_tracks_f32_activations() {
+    // End-to-end: the integer-MAC pipeline (i8 activations) must score
+    // within activation-quantization error of the exact f32-activation
+    // path, at every MXINT precision.
+    let dims = test_dims();
+    let ck = anchor_ck(&dims, 32, ElementFormat::int(8));
+    let windows = token_rows(&dims, 4, dims.seq_len + 1, 8);
+    for bits in [2u8, 4, 6, 8] {
+        let fmt = ElementFormat::int(bits);
+        let exact = NativeWeights::packed_from_checkpoint(&dims, &ck, fmt).unwrap();
+        let mut intmac = exact.clone();
+        intmac.act = ActMode::Int8;
+        let a = score_rows(&exact, &windows, 4).unwrap();
+        let b = score_rows(&intmac, &windows, 4).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(y.is_finite(), "int{bits}: nll must be finite");
+            assert!(
+                (x - y).abs() < 1e-2,
+                "int{bits}: act-quantization drift {x} vs {y}"
+            );
+        }
+    }
 }
 
 #[test]
