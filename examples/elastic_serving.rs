@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
         ServerConfig {
             policy: ladder,
             gather_window: Duration::from_millis(2),
+            workers: 2,
         },
     )?;
 

@@ -5,8 +5,11 @@
 //!                        generation: `ref` = original fused-scale scalar
 //!                        f32 kernel, `tile` = block-major f32 tile kernel,
 //!                        `int` = integer-MAC pipeline (i8 activations,
-//!                        i32/i16 dots) — all against the dequantized
-//!                        dense-f32 baseline
+//!                        i32/i16 dots, explicit AVX2/NEON tile MACs),
+//!                        `int-portable` = the same pipeline pinned to the
+//!                        autovectorized scalar loop (the PR 2 baseline the
+//!                        SIMD kernels must beat) — all against the
+//!                        dequantized dense-f32 baseline
 //!   score/<fmt>          full decoder scoring batches through the
 //!                        NativeBackend per serving format (warm cache) —
 //!                        lower-bit formats stream less weight memory and
@@ -93,9 +96,22 @@ fn main() {
                 "int_mac_per_s",
                 Json::from(flops / r_int.mean_s),
             );
+            // The PR 2 autovectorized pipeline (scalar tile MACs) — the
+            // baseline the explicit SIMD kernels must beat.
+            let r_port = bench(&format!("gemm/int-portable/{}", fmt.name()), 6, 0.4, || {
+                kernels::gemm_repacked_int_portable(&x, rows, &rp, &mut y);
+                std::hint::black_box(&y);
+            });
+            println!("{}", r_port.report(flops, "mac"));
+            fmt_json.set("int_portable_s", Json::from(r_port.mean_s));
+            fmt_json.set(
+                "int_simd_speedup_vs_portable",
+                Json::from(r_port.mean_s / r_int.mean_s),
+            );
         }
         gemm_json.set(&fmt.name(), fmt_json);
     }
+    summary.set("simd_level", Json::from(mfqat::backend::simd::level().name()));
     summary.set("gemm", gemm_json);
 
     // ------------------------------------------------- end-to-end scoring

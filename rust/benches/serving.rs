@@ -1,94 +1,262 @@
-//! End-to-end serving benchmarks over the real PJRT engine — regenerates
-//! the elastic-inference trade-off the paper motivates (§1): throughput and
-//! latency per serving precision, cost of a format switch, and fixed-format
-//! vs elastic-ladder behaviour under a burst.
+//! End-to-end serving benchmarks over the **native** backend — the elastic
+//! trade-off the paper motivates (§1) measured where it now lives: a
+//! multi-worker server pool sharing one packed-weight engine.
 //!
-//! Requires `make artifacts` (skips gracefully otherwise).
+//! Sections (all artifact-free; no XLA):
+//!   score/<fmt>/workersN    closed-loop scoring throughput + latency
+//!                           (p50/p99) by worker count and format — the
+//!                           worker-pool scaling story
+//!   generate/<fmt>/workersN batched-generation tokens/sec by worker count
+//!                           (requests grouped into step-synchronized
+//!                           batched decodes per gather window)
+//!   batched_decode/rowsN    raw `generate_native_batch` tokens/sec by
+//!                           batch width (no server) — the KV-batching win
+//!
+//! Writes a machine-readable summary to `BENCH_serving.json` (CI archives
+//! it; the acceptance numbers — tokens/sec scaling with worker count,
+//! batched-decode speedup over rows=1 — live there).
+//!
+//! Inner GEMM threading is pinned to 1 unless `MFQAT_THREADS` is set, so
+//! worker-pool scaling is not confounded by kernel-level parallelism.
 
+use mfqat::backend::NativeWeights;
 use mfqat::coordinator::ElasticEngine;
-use mfqat::data::{Corpus, CorpusConfig};
+use mfqat::eval::generate::{generate_native_batch, SampleCfg};
 use mfqat::formats::ElementFormat;
-use mfqat::model::ParamSet;
-use mfqat::runtime::{ArtifactSet, Runtime};
-use mfqat::util::timer::{bench, fmt_time};
-use std::path::PathBuf;
+use mfqat::model::{ModelDims, ParamSet};
+use mfqat::server::{Policy, Server, ServerConfig};
+use mfqat::util::json::Json;
+use std::time::{Duration, Instant};
+
+/// Small serving model: large enough that a batch costs real work, small
+/// enough that the whole worker×format matrix runs in CI.
+fn bench_dims() -> ModelDims {
+    let mut dims = ModelDims::new("srvbench", 256, 64, 2, 2, 32);
+    dims.train_batch = 4;
+    dims
+}
+
+fn quantiles(lats: &mut [f64]) -> (f64, f64) {
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = lats.len();
+    let p50 = lats[n / 2];
+    let p99 = lats[((n as f64 * 0.99) as usize).min(n - 1)];
+    (p50, p99)
+}
+
+/// Closed-loop load harness shared by the score and generate sections:
+/// `threads` client threads each issue `per_thread` blocking requests via
+/// `work` (which returns the server-reported latency), so concurrency ==
+/// `threads`. Returns `(wall_s, p50_s, p99_s)`.
+fn closed_loop<W>(
+    client: &mfqat::server::Client,
+    threads: usize,
+    per_thread: usize,
+    work: W,
+) -> (f64, f64, f64)
+where
+    W: Fn(&mfqat::server::Client, usize, usize) -> Duration + Sync,
+{
+    let t0 = Instant::now();
+    let lats = std::sync::Mutex::new(Vec::<f64>::new());
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let client = client.clone();
+            let lats = &lats;
+            let work = &work;
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    let latency = work(&client, t, i);
+                    lats.lock().unwrap().push(latency.as_secs_f64());
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let mut lats = lats.into_inner().unwrap();
+    let (p50, p99) = quantiles(&mut lats);
+    (wall, p50, p99)
+}
+
+fn start_pool(workers: usize) -> (Server, mfqat::server::Client, usize) {
+    let dims = bench_dims();
+    let width = dims.seq_len + 1;
+    let (server, client) = Server::start(
+        width,
+        move || {
+            let manifest = dims.to_manifest();
+            let params = ParamSet::init(&manifest, 5);
+            let ck = params.to_anchor_checkpoint(&manifest, ElementFormat::int(8))?;
+            ElasticEngine::native(dims, ck, 256 << 20)
+        },
+        ServerConfig {
+            policy: Policy::Fixed(ElementFormat::int(8)),
+            gather_window: Duration::from_millis(1),
+            workers,
+        },
+    )
+    .unwrap();
+    (server, client, width)
+}
 
 fn main() {
-    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
-    let arts_dir = root.join("artifacts/tiny");
-    if !arts_dir.join("manifest.json").exists() {
-        println!("serving bench skipped: run `make artifacts` first");
-        return;
+    // Pin kernel threading so worker-count scaling measures the pool, not
+    // the GEMM fan-out (override by setting MFQAT_THREADS explicitly).
+    if std::env::var("MFQAT_THREADS").is_err() {
+        std::env::set_var("MFQAT_THREADS", "1");
     }
-    let rt = Runtime::cpu().unwrap();
-    let arts = ArtifactSet::open(&arts_dir).unwrap();
-    let m = arts.manifest.clone();
-    let params = ParamSet::init(&m, 3);
-    let ck = params
-        .to_anchor_checkpoint(&m, ElementFormat::int(8))
+    let dims = bench_dims();
+    let width = dims.seq_len + 1;
+    let mut summary = Json::obj();
+    summary.set("simd_level", Json::from(mfqat::backend::simd::level().name()));
+
+    // Deterministic request rows.
+    let rows: Vec<Vec<i32>> = (0..64u64)
+        .map(|r| {
+            (0..width)
+                .map(|i| (((r * 31 + i as u64 * 13 + 7) % 256) as i32))
+                .collect()
+        })
+        .collect();
+
+    // ------------------------------------------- score scaling by workers
+    let client_threads = 4usize;
+    let per_thread = 24usize;
+    let formats = [ElementFormat::int(8), ElementFormat::int(4)];
+    let mut score_json = Json::obj();
+    for fmt in formats {
+        let mut fmt_json = Json::obj();
+        let mut rps_by_workers: Vec<(usize, f64)> = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let (server, client, _) = start_pool(workers);
+            // Warm the format cache outside the measurement.
+            client.score(&rows[0], Some(fmt)).unwrap();
+            let (wall, p50, p99) = closed_loop(&client, client_threads, per_thread, |c, t, i| {
+                c.score(&rows[(t * per_thread + i) % rows.len()], Some(fmt))
+                    .unwrap()
+                    .latency
+            });
+            let reqs = (client_threads * per_thread) as f64;
+            let rps = reqs / wall;
+            println!(
+                "score/{}/workers{workers}: {reqs:.0} reqs in {wall:.2}s  \
+                 {rps:.1} req/s  p50 {:.2}ms  p99 {:.2}ms",
+                fmt.name(),
+                p50 * 1e3,
+                p99 * 1e3
+            );
+            let mut e = Json::obj();
+            e.set("req_per_s", Json::from(rps));
+            e.set("p50_ms", Json::from(p50 * 1e3));
+            e.set("p99_ms", Json::from(p99 * 1e3));
+            fmt_json.set(&format!("workers{workers}"), e);
+            rps_by_workers.push((workers, rps));
+            drop(client);
+            server.shutdown();
+        }
+        if let (Some((_, r1)), Some((_, r4))) = (
+            rps_by_workers.iter().find(|(w, _)| *w == 1),
+            rps_by_workers.iter().find(|(w, _)| *w == 4),
+        ) {
+            fmt_json.set("scaling_4v1", Json::from(r4 / r1));
+        }
+        score_json.set(&fmt.name(), fmt_json);
+    }
+    summary.set("score", score_json);
+
+    // --------------------------------------- generate scaling by workers
+    let gen_threads = 4usize;
+    let gen_per_thread = 3usize;
+    let gen_tokens = 16usize;
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 8,
+        seed: 11,
+    };
+    let prompts = ["the color of kova is", "kovaq", "blue sky", "q"];
+    let mut gen_json = Json::obj();
+    for fmt in formats {
+        let mut fmt_json = Json::obj();
+        let mut tps_by_workers: Vec<(usize, f64)> = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let (server, client, _) = start_pool(workers);
+            client.score(&rows[0], Some(fmt)).unwrap(); // warm cache
+            let (wall, p50, p99) =
+                closed_loop(&client, gen_threads, gen_per_thread, |c, t, i| {
+                    c.generate(
+                        prompts[(t + i) % prompts.len()],
+                        gen_tokens,
+                        Some(fmt),
+                        cfg.clone(),
+                    )
+                    .unwrap()
+                    .latency
+                });
+            let toks = (gen_threads * gen_per_thread * gen_tokens) as f64;
+            let tps = toks / wall;
+            println!(
+                "generate/{}/workers{workers}: {toks:.0} tok in {wall:.2}s  \
+                 {tps:.1} tok/s  p50 {:.1}ms  p99 {:.1}ms",
+                fmt.name(),
+                p50 * 1e3,
+                p99 * 1e3
+            );
+            let mut e = Json::obj();
+            e.set("tok_per_s", Json::from(tps));
+            e.set("p50_ms", Json::from(p50 * 1e3));
+            e.set("p99_ms", Json::from(p99 * 1e3));
+            fmt_json.set(&format!("workers{workers}"), e);
+            tps_by_workers.push((workers, tps));
+            drop(client);
+            server.shutdown();
+        }
+        if let (Some((_, t1)), Some((_, t4))) = (
+            tps_by_workers.iter().find(|(w, _)| *w == 1),
+            tps_by_workers.iter().find(|(w, _)| *w == 4),
+        ) {
+            fmt_json.set("scaling_4v1", Json::from(t4 / t1));
+        }
+        gen_json.set(&fmt.name(), fmt_json);
+    }
+    summary.set("generate", gen_json);
+
+    // ------------------------------ raw batched decode (no server) by rows
+    let manifest = dims.to_manifest();
+    let ck = ParamSet::init(&manifest, 5)
+        .to_anchor_checkpoint(&manifest, ElementFormat::int(8))
         .unwrap();
-    let engine = ElasticEngine::from_parts(rt, arts, ck.clone(), ElementFormat::int(8), 256 << 20);
-
-    let corpus = Corpus::generate(CorpusConfig {
-        width: m.seq_len + 1,
-        pretrain_sequences: 8,
-        qat_sequences: 8,
-        val_sequences: 16,
-        ..Default::default()
-    });
-    let mut batch = Vec::new();
-    for r in 0..m.train_batch {
-        batch.extend_from_slice(&corpus.val[r]);
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(4)).unwrap();
+    let mut batch_json = Json::obj();
+    let mut tps_by_rows: Vec<(usize, f64)> = Vec::new();
+    for rows_n in [1usize, 2, 4, 8] {
+        let batch_prompts: Vec<&str> = (0..rows_n)
+            .map(|i| prompts[i % prompts.len()])
+            .collect();
+        // Warm-up then timed runs.
+        generate_native_batch(&w, &batch_prompts, gen_tokens, &cfg).unwrap();
+        let t0 = Instant::now();
+        let iters = 3usize;
+        for _ in 0..iters {
+            std::hint::black_box(
+                generate_native_batch(&w, &batch_prompts, gen_tokens, &cfg).unwrap(),
+            );
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tps = (iters * rows_n * gen_tokens) as f64 / wall;
+        println!("batched_decode/rows{rows_n}: {tps:.1} tok/s");
+        batch_json.set(&format!("rows{rows_n}"), Json::from(tps));
+        tps_by_rows.push((rows_n, tps));
     }
-    let tokens_per_batch = (m.train_batch * m.seq_len) as f64;
-
-    println!("== steady-state batch scoring per format (batch = {}) ==", m.train_batch);
-    for bits in [8u8, 6, 4, 2] {
-        let fmt = ElementFormat::int(bits);
-        engine.score_batch(&batch, fmt).unwrap(); // warm the format cache
-        let r = bench(&format!("score_batch/int{bits}"), 6, 0.8, || {
-            std::hint::black_box(engine.score_batch(&batch, fmt).unwrap());
-        });
-        println!("{}", r.report(tokens_per_batch, "tok"));
+    if let (Some((_, t1)), Some((_, t8))) = (
+        tps_by_rows.iter().find(|(r, _)| *r == 1),
+        tps_by_rows.iter().find(|(r, _)| *r == 8),
+    ) {
+        batch_json.set("batch_speedup_8v1", Json::from(t8 / t1));
     }
+    summary.set("batched_decode", batch_json);
 
-    println!("\n== format-switch cost (anchor -> target derivation, uncached) ==");
-    for bits in [6u8, 4, 3, 2] {
-        let fmt = ElementFormat::int(bits);
-        // Fresh engine state per measurement: use a cache-busting format
-        // cycle (derive, then measure re-derivation after eviction is not
-        // possible with a large cache, so measure the cold path directly).
-        let t = std::time::Instant::now();
-        let w = {
-            let p = ParamSet::from_checkpoint(&m, &ck, Some(fmt)).unwrap();
-            mfqat::eval::ParamLiterals::build(&p).unwrap()
-        };
-        std::hint::black_box(&w);
-        println!(
-            "derive/int{bits}: {} ({} params)",
-            fmt_time(t.elapsed().as_secs_f64()),
-            m.n_params
-        );
-    }
-
-    println!("\n== batched vs single-row execution (batching win) ==");
-    let r8 = bench("forward/batch8", 6, 0.8, || {
-        std::hint::black_box(engine.score_batch(&batch, ElementFormat::int(8)).unwrap());
-    });
-    println!("{}", r8.report(m.train_batch as f64, "seq"));
-    // One row padded to a full batch: per-sequence cost without batching.
-    let mut one = batch.clone();
-    for r in 1..m.train_batch {
-        let w = m.seq_len + 1;
-        let src = batch[..w].to_vec();
-        one[r * w..(r + 1) * w].copy_from_slice(&src);
-    }
-    let r1 = bench("forward/batch1(padded)", 6, 0.8, || {
-        std::hint::black_box(engine.score_batch(&one, ElementFormat::int(8)).unwrap());
-    });
-    println!("{}", r1.report(1.0, "seq"));
-    println!(
-        "batching speedup: {:.2}x per sequence",
-        r1.mean_s / (r8.mean_s / m.train_batch as f64)
-    );
+    // ------------------------------------------------------------ summary
+    let path = "BENCH_serving.json";
+    std::fs::write(path, summary.pretty()).expect("write BENCH_serving.json");
+    println!("\nwrote {path}");
 }

@@ -15,11 +15,16 @@
 //! forward over materialized f32 weights — used by parity tests and as the
 //! `fp32` reference row in native evaluation.
 //!
-//! Generation runs through a [`KvCache`]: [`forward_cached`] processes new
-//! tokens against cached per-layer keys/values, so decoding one token costs
-//! one rows=1 pass plus attention over the cached prefix instead of a full
-//! window recompute. With an empty cache over the whole sequence it is
-//! numerically identical to [`forward_logits`].
+//! Generation runs through a [`KvCache`] holding `rows ≥ 1` sequences with
+//! per-sequence fill lengths: [`forward_cached_batch`] processes each row's
+//! new tokens (ragged prefill, step-synchronized decode) against cached
+//! per-layer keys/values, so decoding one token per sequence costs one
+//! `rows`-row pass plus attention over each row's own prefix instead of a
+//! full window recompute — and one weight-streaming pass serves the whole
+//! batch. [`forward_cached`] is the single-sequence wrapper. With an empty
+//! cache over the whole sequence it is numerically identical to
+//! [`forward_logits`], and every row of a batched call is bit-identical to
+//! the same row decoded alone.
 
 use super::kernels;
 use super::repack::RepackedMx;
@@ -466,84 +471,143 @@ pub fn score_rows(w: &NativeWeights, tokens: &[i32], rows: usize) -> Result<Vec<
 // KV-cached incremental decode (generation hot path).
 // --------------------------------------------------------------------------
 
-/// Per-layer key/value cache for single-sequence incremental decoding.
+/// Per-layer key/value cache for `rows ≥ 1` sequences decoding in lockstep.
 ///
-/// Holds `[n_layers, capacity, d_model]` keys and values; `len()` positions
-/// are filled. [`forward_cached`] appends the new positions' K/V as it runs,
-/// so decoding one token reads the whole cached prefix but recomputes
-/// nothing.
+/// Holds `[n_layers, rows, capacity, d_model]` keys and values with a
+/// *per-sequence* fill length ([`Self::len_of`]) — sequences prefill
+/// ragged prompt windows and then decode step-synchronized, each attending
+/// only over its own cached prefix. [`forward_cached_batch`] appends the
+/// new positions' K/V as it runs, so decoding one token per sequence costs
+/// one `rows`-row pass over the weights instead of `rows` separate passes.
+/// [`KvCache::new`] builds the single-sequence (`rows = 1`) cache that
+/// [`forward_cached`] and the benches consume.
 #[derive(Debug, Clone)]
 pub struct KvCache {
     n_layers: usize,
     d_model: usize,
     capacity: usize,
-    pos: usize,
+    rows: usize,
+    lens: Vec<usize>,
     k: Vec<f32>,
     v: Vec<f32>,
 }
 
 impl KvCache {
-    /// Empty cache sized for `dims` (capacity = `seq_len` positions).
+    /// Empty single-sequence cache sized for `dims` (capacity = `seq_len`
+    /// positions).
     pub fn new(dims: &ModelDims) -> KvCache {
-        let n = dims.n_layers * dims.seq_len * dims.d_model;
+        KvCache::with_rows(dims, 1)
+    }
+
+    /// Empty cache for `rows` step-synchronized sequences.
+    pub fn with_rows(dims: &ModelDims, rows: usize) -> KvCache {
+        assert!(rows >= 1, "KV cache wants at least one sequence row");
+        let n = dims.n_layers * rows * dims.seq_len * dims.d_model;
         KvCache {
             n_layers: dims.n_layers,
             d_model: dims.d_model,
             capacity: dims.seq_len,
-            pos: 0,
+            rows,
+            lens: vec![0; rows],
             k: vec![0.0; n],
             v: vec![0.0; n],
         }
     }
 
-    /// Filled positions.
+    /// Sequence rows this cache tracks.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Filled positions of sequence row `r`.
+    pub fn len_of(&self, r: usize) -> usize {
+        self.lens[r]
+    }
+
+    /// Filled positions (single-sequence caches; row 0 otherwise).
     pub fn len(&self) -> usize {
-        self.pos
+        self.lens[0]
     }
 
     pub fn is_empty(&self) -> bool {
-        self.pos == 0
+        self.lens.iter().all(|&l| l == 0)
     }
 
-    /// Maximum positions the cache can hold (= model `seq_len`).
+    /// Maximum positions each row can hold (= model `seq_len`).
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
-    /// Forget everything (restart a sequence).
+    /// Forget everything (restart every sequence).
     pub fn reset(&mut self) {
-        self.pos = 0;
+        self.lens.fill(0);
     }
 
-    /// Roll back to `pos` filled positions (`pos ≤ len()`). Rows beyond
-    /// `pos` are simply ignored by subsequent decodes — used by the bench
-    /// to re-decode at a fixed context length without re-prefilling.
+    /// Forget one sequence row (it re-prefills on its next tokens while the
+    /// other rows keep decoding — the batched window-overflow path).
+    pub fn reset_row(&mut self, r: usize) {
+        self.lens[r] = 0;
+    }
+
+    /// Roll back a single-sequence cache to `pos` filled positions
+    /// (`pos ≤ len()`). Rows beyond `pos` are simply ignored by subsequent
+    /// decodes — used by the bench to re-decode at a fixed context length
+    /// without re-prefilling.
     pub fn truncate(&mut self, pos: usize) {
-        assert!(pos <= self.pos, "cannot truncate {} to {pos}", self.pos);
-        self.pos = pos;
+        assert_eq!(self.rows, 1, "truncate is a single-sequence helper");
+        assert!(pos <= self.lens[0], "cannot truncate {} to {pos}", self.lens[0]);
+        self.lens[0] = pos;
     }
 
-    fn layer(&self, l: usize) -> (&[f32], &[f32]) {
+    fn layer_row(&self, l: usize, r: usize) -> (&[f32], &[f32]) {
         let n = self.capacity * self.d_model;
-        (&self.k[l * n..(l + 1) * n], &self.v[l * n..(l + 1) * n])
+        let base = (l * self.rows + r) * n;
+        (&self.k[base..base + n], &self.v[base..base + n])
     }
 }
 
-/// Process `tokens.len()` new positions of one sequence against `cache`
-/// (prefill when the cache is empty, single-token decode when
-/// `tokens.len() == 1`); returns flat logits `[tokens.len(), vocab]` for
-/// the new positions and advances the cache.
+/// Process `tokens.len()` new positions of one sequence against a
+/// single-sequence `cache` (prefill when the cache is empty, single-token
+/// decode when `tokens.len() == 1`); returns flat logits
+/// `[tokens.len(), vocab]` for the new positions and advances the cache.
 ///
 /// Numerics: identical operation order to [`forward_logits`] per position —
 /// a full-sequence call on an empty cache reproduces the batch forward
 /// exactly, and `prefill(p) + decode(1)…` matches the full window at every
 /// step (enforced by `rust/tests/native_backend.rs`).
 pub fn forward_cached(w: &NativeWeights, cache: &mut KvCache, tokens: &[i32]) -> Result<Vec<f32>> {
+    if cache.rows != 1 {
+        bail!(
+            "forward_cached is single-sequence; use forward_cached_batch for {} rows",
+            cache.rows
+        );
+    }
+    forward_cached_batch(w, cache, &[tokens])
+}
+
+/// Batched KV-cached forward: `tokens[r]` holds sequence row `r`'s new
+/// positions — ragged counts welcome, including empty rows (skipped this
+/// step, e.g. finished sequences while their neighbours keep decoding).
+/// Returns flat logits for the new positions, concatenated in row order
+/// (`[Σ tokens[r].len(), vocab]`), and advances each row's cache length.
+///
+/// Every per-row computation — activation quantization, GEMM accumulation,
+/// attention over the row's own prefix — is row-independent, so the
+/// batched pass is **bit-identical** per row to `rows` separate
+/// [`forward_cached`] calls (enforced by `rust/tests/batched_decode.rs`);
+/// batching buys one weight-streaming pass per step instead of `rows`.
+pub fn forward_cached_batch(
+    w: &NativeWeights,
+    cache: &mut KvCache,
+    tokens: &[&[i32]],
+) -> Result<Vec<f32>> {
     let dims = &w.dims;
-    let t = tokens.len();
-    let p0 = cache.pos;
-    if t == 0 {
-        bail!("forward_cached wants at least one token");
+    if tokens.len() != cache.rows {
+        bail!(
+            "cache tracks {} sequence rows, got {} token rows",
+            cache.rows,
+            tokens.len()
+        );
     }
     if cache.n_layers != dims.n_layers
         || cache.d_model != dims.d_model
@@ -551,102 +615,135 @@ pub fn forward_cached(w: &NativeWeights, cache: &mut KvCache, tokens: &[i32]) ->
     {
         bail!("KV cache was built for different model dims");
     }
-    if p0 + t > cache.capacity {
-        bail!(
-            "KV cache overflow: {p0} cached + {t} new > capacity {}",
-            cache.capacity
-        );
+    let total: usize = tokens.iter().map(|t| t.len()).sum();
+    if total == 0 {
+        bail!("forward_cached_batch wants at least one new token across the batch");
+    }
+    for (r, row) in tokens.iter().enumerate() {
+        if cache.lens[r] + row.len() > cache.capacity {
+            bail!(
+                "KV cache overflow on row {r}: {} cached + {} new > capacity {}",
+                cache.lens[r],
+                row.len(),
+                cache.capacity
+            );
+        }
     }
     let d = dims.d_model;
     let hd = dims.d_model / dims.n_heads;
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
     let sh = &w.shared;
 
-    // Token + positional embeddings at absolute positions p0..p0+t.
-    let mut x = vec![0.0f32; t * d];
-    for (i, &tok) in tokens.iter().enumerate() {
-        if tok < 0 || tok as usize >= dims.vocab {
-            bail!("token {tok} out of vocab range 0..{}", dims.vocab);
-        }
-        let er = &sh.emb[tok as usize * d..(tok as usize + 1) * d];
-        let pr = &sh.pos[(p0 + i) * d..(p0 + i + 1) * d];
-        let xr = &mut x[i * d..(i + 1) * d];
-        for j in 0..d {
-            xr[j] = er[j] + pr[j];
+    // Row offsets into the flat [total, d] activation matrix.
+    let mut offs = Vec::with_capacity(tokens.len() + 1);
+    offs.push(0usize);
+    for row in tokens {
+        offs.push(offs.last().unwrap() + row.len());
+    }
+
+    // Token + positional embeddings at each row's absolute positions.
+    let mut x = vec![0.0f32; total * d];
+    for (r, row) in tokens.iter().enumerate() {
+        let p0 = cache.lens[r];
+        for (i, &tok) in row.iter().enumerate() {
+            if tok < 0 || tok as usize >= dims.vocab {
+                bail!("token {tok} out of vocab range 0..{}", dims.vocab);
+            }
+            let er = &sh.emb[tok as usize * d..(tok as usize + 1) * d];
+            let pr = &sh.pos[(p0 + i) * d..(p0 + i + 1) * d];
+            let xr = &mut x[(offs[r] + i) * d..(offs[r] + i + 1) * d];
+            for j in 0..d {
+                xr[j] = er[j] + pr[j];
+            }
         }
     }
 
-    let mut xn = vec![0.0f32; t * d];
-    let mut qkv = vec![0.0f32; t * 3 * d];
-    let mut att = vec![0.0f32; t * d];
-    let mut delta = vec![0.0f32; t * d];
-    let mut hidden = vec![0.0f32; t * dims.d_ff];
-    let mut probs = vec![0.0f32; p0 + t];
+    let max_span = tokens
+        .iter()
+        .enumerate()
+        .map(|(r, row)| cache.lens[r] + row.len())
+        .max()
+        .unwrap_or(0);
+    let mut xn = vec![0.0f32; total * d];
+    let mut qkv = vec![0.0f32; total * 3 * d];
+    let mut att = vec![0.0f32; total * d];
+    let mut delta = vec![0.0f32; total * d];
+    let mut hidden = vec![0.0f32; total * dims.d_ff];
+    let mut probs = vec![0.0f32; max_span];
     for (l, (layer, norms)) in w.layers.iter().zip(&sh.norms).enumerate() {
         kernels::rmsnorm(&x, &norms.ln1, &mut xn);
-        layer.qkv.gemm(&xn, t, &mut qkv, w.act);
-        // Append the new positions' K/V to the cache.
+        layer.qkv.gemm(&xn, total, &mut qkv, w.act);
+        // Append each row's new K/V at its absolute positions.
         {
             let n = cache.capacity * d;
-            let kl = &mut cache.k[l * n..(l + 1) * n];
-            let vl = &mut cache.v[l * n..(l + 1) * n];
-            for i in 0..t {
-                kl[(p0 + i) * d..(p0 + i + 1) * d]
-                    .copy_from_slice(&qkv[i * 3 * d + d..][..d]);
-                vl[(p0 + i) * d..(p0 + i + 1) * d]
-                    .copy_from_slice(&qkv[i * 3 * d + 2 * d..][..d]);
+            for (r, row) in tokens.iter().enumerate() {
+                let p0 = cache.lens[r];
+                let base = (l * cache.rows + r) * n;
+                for i in 0..row.len() {
+                    let src = (offs[r] + i) * 3 * d;
+                    cache.k[base + (p0 + i) * d..base + (p0 + i + 1) * d]
+                        .copy_from_slice(&qkv[src + d..][..d]);
+                    cache.v[base + (p0 + i) * d..base + (p0 + i + 1) * d]
+                        .copy_from_slice(&qkv[src + 2 * d..][..d]);
+                }
             }
         }
-        // Causal attention of the new queries over the cached prefix —
-        // same per-query math as `kernels::causal_attention`.
+        // Causal attention of each row's new queries over that row's cached
+        // prefix — same per-query math as `kernels::causal_attention`.
         att.fill(0.0);
-        let (kl, vl) = cache.layer(l);
-        for h in 0..dims.n_heads {
-            let qo = h * hd;
-            for i in 0..t {
-                let q = &qkv[i * 3 * d + qo..][..hd];
-                let span = p0 + i + 1;
-                let mut max_s = f32::NEG_INFINITY;
-                for (j, p) in probs[..span].iter_mut().enumerate() {
-                    let krow = &kl[j * d + qo..][..hd];
-                    let mut s = 0.0f32;
-                    for (&a, &k) in q.iter().zip(krow) {
-                        s += a * k;
+        for (r, row) in tokens.iter().enumerate() {
+            let p0 = cache.lens[r];
+            let (kl, vl) = cache.layer_row(l, r);
+            for h in 0..dims.n_heads {
+                let qo = h * hd;
+                for i in 0..row.len() {
+                    let q = &qkv[(offs[r] + i) * 3 * d + qo..][..hd];
+                    let span = p0 + i + 1;
+                    let mut max_s = f32::NEG_INFINITY;
+                    for (j, p) in probs[..span].iter_mut().enumerate() {
+                        let krow = &kl[j * d + qo..][..hd];
+                        let mut s = 0.0f32;
+                        for (&a, &k) in q.iter().zip(krow) {
+                            s += a * k;
+                        }
+                        let s = s * inv_sqrt;
+                        *p = s;
+                        if s > max_s {
+                            max_s = s;
+                        }
                     }
-                    let s = s * inv_sqrt;
-                    *p = s;
-                    if s > max_s {
-                        max_s = s;
+                    let mut denom = 0.0f32;
+                    for p in probs[..span].iter_mut() {
+                        *p = (*p - max_s).exp();
+                        denom += *p;
                     }
-                }
-                let mut denom = 0.0f32;
-                for p in probs[..span].iter_mut() {
-                    *p = (*p - max_s).exp();
-                    denom += *p;
-                }
-                let inv_denom = 1.0 / denom;
-                let orow = &mut att[i * d + qo..i * d + qo + hd];
-                for (j, &p) in probs[..span].iter().enumerate() {
-                    let wgt = p * inv_denom;
-                    let vrow = &vl[j * d + qo..][..hd];
-                    for (o, &vv) in orow.iter_mut().zip(vrow) {
-                        *o += wgt * vv;
+                    let inv_denom = 1.0 / denom;
+                    let o0 = (offs[r] + i) * d + qo;
+                    let orow = &mut att[o0..o0 + hd];
+                    for (j, &p) in probs[..span].iter().enumerate() {
+                        let wgt = p * inv_denom;
+                        let vrow = &vl[j * d + qo..][..hd];
+                        for (o, &vv) in orow.iter_mut().zip(vrow) {
+                            *o += wgt * vv;
+                        }
                     }
                 }
             }
         }
-        layer.proj.gemm(&att, t, &mut delta, w.act);
+        layer.proj.gemm(&att, total, &mut delta, w.act);
         kernels::add_assign(&mut x, &delta);
         kernels::rmsnorm(&x, &norms.ln2, &mut xn);
-        layer.up.gemm(&xn, t, &mut hidden, w.act);
+        layer.up.gemm(&xn, total, &mut hidden, w.act);
         kernels::gelu_in_place(&mut hidden);
-        layer.down.gemm(&hidden, t, &mut delta, w.act);
+        layer.down.gemm(&hidden, total, &mut delta, w.act);
         kernels::add_assign(&mut x, &delta);
     }
-    cache.pos = p0 + t;
+    for (r, row) in tokens.iter().enumerate() {
+        cache.lens[r] += row.len();
+    }
     kernels::rmsnorm(&x, &sh.lnf, &mut xn);
-    let mut logits = vec![0.0f32; t * dims.vocab];
-    sh.head.gemm(&xn, t, &mut logits, w.act);
+    let mut logits = vec![0.0f32; total * dims.vocab];
+    sh.head.gemm(&xn, total, &mut logits, w.act);
     Ok(logits)
 }
 
@@ -789,5 +886,93 @@ mod tests {
         other.train_batch = 2;
         let mut bad = KvCache::new(&other);
         assert!(forward_cached(&w, &mut bad, &[1]).is_err(), "dims mismatch");
+        // Batch-shape misuse is rejected too.
+        let mut two = KvCache::with_rows(&dims, 2);
+        assert!(forward_cached(&w, &mut two, &[1]).is_err(), "rows>1 via scalar api");
+        assert!(
+            forward_cached_batch(&w, &mut two, &[&[1i32][..]]).is_err(),
+            "row-count mismatch"
+        );
+        assert!(
+            forward_cached_batch(&w, &mut two, &[&[][..], &[][..]]).is_err(),
+            "no new tokens anywhere"
+        );
+    }
+
+    #[test]
+    fn batched_cached_forward_matches_per_row_decode() {
+        // A ragged batched step must reproduce, row for row, what each
+        // sequence computes alone through its own single-row cache —
+        // bit-identically, across prefill and subsequent mixed steps where
+        // one row decodes a single token while another re-prefills.
+        let dims = tiny_dims();
+        let ck = anchor_ck(&dims, 9, ElementFormat::int(8));
+        let vocab = dims.vocab;
+        for act in [ActMode::F32, ActMode::Int8] {
+            let mut w =
+                NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(4)).unwrap();
+            w.act = act;
+            // Three rows with ragged prompt lengths.
+            let rows_tok: Vec<Vec<i32>> = vec![
+                (0..5).map(|i| (i * 7 % 64) as i32).collect(),
+                (0..11).map(|i| (i * 3 + 1) as i32 % 64).collect(),
+                (0..2).map(|i| (i + 40) as i32).collect(),
+            ];
+            let mut batch_cache = KvCache::with_rows(&dims, 3);
+            let step: Vec<&[i32]> = rows_tok.iter().map(|t| t.as_slice()).collect();
+            let batched = forward_cached_batch(&w, &mut batch_cache, &step).unwrap();
+            let mut solo_caches: Vec<KvCache> =
+                (0..3).map(|_| KvCache::new(&dims)).collect();
+            let mut off = 0usize;
+            for (r, row) in rows_tok.iter().enumerate() {
+                let solo = forward_cached(&w, &mut solo_caches[r], row).unwrap();
+                assert_eq!(
+                    &batched[off * vocab..(off + row.len()) * vocab],
+                    solo.as_slice(),
+                    "prefill row {r} (act={})",
+                    act.name()
+                );
+                off += row.len();
+                assert_eq!(batch_cache.len_of(r), row.len());
+            }
+            // Mixed follow-up: row 0 decodes one token, row 1 is idle this
+            // step, row 2 pushes three more.
+            let step2: Vec<Vec<i32>> = vec![vec![9], vec![], vec![10, 11, 12]];
+            let s2: Vec<&[i32]> = step2.iter().map(|t| t.as_slice()).collect();
+            let batched2 = forward_cached_batch(&w, &mut batch_cache, &s2).unwrap();
+            let mut off = 0usize;
+            for (r, row) in step2.iter().enumerate() {
+                if row.is_empty() {
+                    continue;
+                }
+                let solo = forward_cached(&w, &mut solo_caches[r], row).unwrap();
+                assert_eq!(
+                    &batched2[off * vocab..(off + row.len()) * vocab],
+                    solo.as_slice(),
+                    "step row {r} (act={})",
+                    act.name()
+                );
+                off += row.len();
+            }
+            // Per-row reset re-prefills independently.
+            batch_cache.reset_row(0);
+            assert_eq!(batch_cache.len_of(0), 0);
+            assert_eq!(batch_cache.len_of(2), 5);
+            let step3: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![4], vec![5]];
+            let s3: Vec<&[i32]> = step3.iter().map(|t| t.as_slice()).collect();
+            let batched3 = forward_cached_batch(&w, &mut batch_cache, &s3).unwrap();
+            solo_caches[0].reset();
+            let mut off = 0usize;
+            for (r, row) in step3.iter().enumerate() {
+                let solo = forward_cached(&w, &mut solo_caches[r], row).unwrap();
+                assert_eq!(
+                    &batched3[off * vocab..(off + row.len()) * vocab],
+                    solo.as_slice(),
+                    "post-reset row {r} (act={})",
+                    act.name()
+                );
+                off += row.len();
+            }
+        }
     }
 }

@@ -25,7 +25,10 @@
 //!     doubles the SIMD lane count (this is why MXINT4 outruns MXINT8).
 //!     The **combined** activation×weight scale `2^{s_x + s_w^{max}}` is
 //!     applied once per tile at the end. MXFP formats fall back to
-//!     [`gemm_repacked`] via the element-decode LUT.
+//!     [`gemm_repacked`] via the element-decode LUT. The per-tile MACs
+//!     dispatch to explicit AVX2/NEON kernels when the host supports them
+//!     ([`super::simd`]); `MFQAT_SIMD=off` forces the portable loop, which
+//!     is bit-identical by construction.
 //!
 //! Integer-path numerics: weight scale blocks run along the *out* dimension
 //! (the paper's layout), so within a reduction chunk the weight exponent
@@ -42,9 +45,11 @@
 //!
 //! Threading: std scoped threads over contiguous row tiles
 //! ([`par_chunks_mut`]); `MFQAT_THREADS` pins the worker count (benches,
-//! reproducibility).
+//! reproducibility). `MFQAT_SIMD=off` pins the integer-MAC tile kernels to
+//! the portable loop (differential runs, bisecting) — see [`super::simd`].
 
 use super::repack::RepackedMx;
+use super::simd;
 use crate::formats::int::shift_round;
 use crate::formats::{exp2i, floor_log2, pack, RoundMode};
 use crate::tensor::MxTensor;
@@ -128,6 +133,19 @@ pub struct ActPlane {
 /// block max lands in `[64, 128)` before rounding (≈7.5 significant bits);
 /// values that are already `int · 2^e` with magnitude ≤ 127 round-trip
 /// exactly.
+///
+/// Edge blocks always yield a *valid* E8M0 scale — one whose `2^e` and
+/// `2^{-e}` are both finite f32 — so no downstream `exp2i` can overflow or
+/// collapse the inverse scale:
+/// * **all-zero blocks** keep exponent 0 and zero codes (exact);
+/// * **subnormal-max blocks** clamp to `e = -126`: the ideal exponent
+///   (`floor_log2(amax) − 6 < −126`) would need `2^{-e} > 2^{127} = ∞`,
+///   turning every code into saturated garbage — at the clamp the values
+///   sit below half a quantization step and round to 0 instead (they are
+///   unrepresentable at any finite E8M0 step);
+/// * **non-finite block maxima** (±∞ anywhere in the block) pin the
+///   exponent to the largest finite choice, saturating infinities to ±127
+///   without feeding `floor_log2` a value it rejects.
 pub fn quantize_acts(x: &[f32], rows: usize, in_f: usize, bs: usize) -> ActPlane {
     assert_eq!(x.len(), rows * in_f);
     let kblocks = in_f.div_ceil(bs).max(1);
@@ -136,11 +154,20 @@ pub fn quantize_acts(x: &[f32], rows: usize, in_f: usize, bs: usize) -> ActPlane
     for r in 0..rows {
         let xr = &x[r * in_f..(r + 1) * in_f];
         for (kb, chunk) in xr.chunks(bs).enumerate() {
+            // NaN elements quantize to code 0 below and must not poison the
+            // shared exponent (`f32::max` ignores a NaN operand).
             let amax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
             if amax == 0.0 {
                 continue; // all-zero block: exponent 0, codes 0
             }
-            let e = (floor_log2(amax) - 6).clamp(-126, 126);
+            let e = if amax.is_finite() {
+                (floor_log2(amax) - 6).clamp(-126, 126)
+            } else {
+                // What a block whose max were f32::MAX would get
+                // (floor_log2(MAX) − 6 = 121): infinities saturate to ±127
+                // below, finite neighbours scale to ~0.
+                121
+            };
             exps[r * kblocks + kb] = e as i8;
             let inv = exp2i(-e);
             let out = &mut codes[r * in_f + kb * bs..][..chunk.len()];
@@ -247,7 +274,36 @@ pub fn gemm_repacked(x: &[f32], rows: usize, w: &RepackedMx, y: &mut [f32]) {
 /// `i16` accumulator (provably overflow-free for `block ≤ 32`: `127 · 8 ·
 /// 32 = 32512`), doubling the vector width. MXFP weights fall back to the
 /// exact f32 path.
+///
+/// The per-tile rank update dispatches to the explicit SIMD kernels
+/// ([`super::simd`]) when available; [`gemm_repacked_int_portable`] pins the
+/// scalar loop (bit-identical output — enforced by differential tests).
 pub fn gemm_repacked_int(x: &[f32], rows: usize, w: &RepackedMx, y: &mut [f32]) {
+    gemm_repacked_int_with(x, rows, w, y, simd::tile_mac_i16, simd::tile_mac_i32)
+}
+
+/// Forced-portable integer-MAC GEMM — the PR 2 autovectorized pipeline,
+/// kept as the bench baseline and the SIMD differential-test oracle.
+pub fn gemm_repacked_int_portable(x: &[f32], rows: usize, w: &RepackedMx, y: &mut [f32]) {
+    gemm_repacked_int_with(
+        x,
+        rows,
+        w,
+        y,
+        simd::tile_mac_i16_portable,
+        simd::tile_mac_i32_portable,
+    )
+}
+
+/// Shared integer-MAC pipeline, parametric in the tile MAC kernels.
+fn gemm_repacked_int_with(
+    x: &[f32],
+    rows: usize,
+    w: &RepackedMx,
+    y: &mut [f32],
+    mac16: fn(&mut [i16], &[i16], &[i16], usize),
+    mac32: fn(&mut [i32], &[i32], &[i32], usize),
+) {
     if !w.elem.is_int() {
         return gemm_repacked(x, rows, w, y);
     }
@@ -317,33 +373,21 @@ pub fn gemm_repacked_int(x: &[f32], rows: usize, w: &RepackedMx, y: &mut [f32]) 
                     }
                     let scale = exp2i(sx + smax);
                     let yr = &mut yc[r * out_f + n0..][..nl];
+                    // Rank-`kl` update over the decoded tile, dispatched to
+                    // the explicit AVX2/NEON kernels (or the bit-identical
+                    // portable loop — `MFQAT_SIMD=off`, other ISAs). The
+                    // accumulator runs the full padded block width: decode
+                    // pads tail columns with zero codes, so lanes ≥ nl stay
+                    // zero and only `acc[..nl]` is consumed.
                     if narrow {
-                        acc16[..nl].fill(0);
-                        for k in 0..kl {
-                            let m = m16[k];
-                            if m == 0 {
-                                continue;
-                            }
-                            let cw = &cw16[k * bs..][..nl];
-                            for (a, &c) in acc16[..nl].iter_mut().zip(cw) {
-                                *a += m * c;
-                            }
-                        }
+                        acc16.fill(0);
+                        mac16(&mut acc16, &m16[..kl], &cw16[..kl * bs], bs);
                         for (yv, &a) in yr.iter_mut().zip(&acc16[..nl]) {
                             *yv += a as f32 * scale;
                         }
                     } else {
-                        acc32[..nl].fill(0);
-                        for k in 0..kl {
-                            let m = m32[k];
-                            if m == 0 {
-                                continue;
-                            }
-                            let cw = &cw32[k * bs..][..nl];
-                            for (a, &c) in acc32[..nl].iter_mut().zip(cw) {
-                                *a += m * c;
-                            }
-                        }
+                        acc32.fill(0);
+                        mac32(&mut acc32, &m32[..kl], &cw32[..kl * bs], bs);
                         for (yv, &a) in yr.iter_mut().zip(&acc32[..nl]) {
                             *yv += a as f32 * scale;
                         }
@@ -762,6 +806,131 @@ mod tests {
                 fmt.long_name()
             );
         }
+    }
+
+    #[test]
+    fn prop_int_mac_simd_matches_portable_bit_exact() {
+        // The dispatched integer-MAC GEMM (AVX2/NEON on capable hosts,
+        // scalar elsewhere or under MFQAT_SIMD=off) must be bit-identical
+        // to the forced-portable pipeline on random repacked planes: the
+        // SIMD kernels reassociate wrapping integer MACs only, so every
+        // f32 output — and the i16/i32 accumulators behind it — agrees
+        // exactly for every MXINT width, block size and ragged shape.
+        use crate::util::props::{run_cases, Gen};
+        run_cases("gemm_repacked_int simd == portable", 16, |g: &mut Gen| {
+            let rows = g.len(1, 9);
+            let in_f = g.len(1, 80);
+            let out_f = g.len(1, 90);
+            let bs = [8usize, 16, 32][g.rng.range(0, 3)];
+            let x: Vec<f32> = (0..rows * in_f).map(|_| g.rng.normal()).collect();
+            let wdata: Vec<f32> = (0..in_f * out_f).map(|_| g.rng.normal()).collect();
+            for bits in [2u8, 4, 6, 8] {
+                let w = MxTensor::quantize(&wdata, &[in_f, out_f], MxFormat::mxint(bits, bs))
+                    .map_err(|e| e.to_string())?;
+                let r = RepackedMx::from_mx(&w);
+                let mut y_simd = vec![0.0f32; rows * out_f];
+                let mut y_port = vec![0.0f32; rows * out_f];
+                gemm_repacked_int(&x, rows, &r, &mut y_simd);
+                gemm_repacked_int_portable(&x, rows, &r, &mut y_port);
+                if y_simd != y_port {
+                    return Err(format!(
+                        "int{bits} {rows}x{in_f}x{out_f}@{bs}: simd != portable"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quantize_acts_edge_blocks_yield_valid_scales() {
+        // Every block — all-zero, subnormal-max, wild-magnitude — must
+        // produce an E8M0 exponent whose scale AND inverse scale are
+        // finite, codes in [-127, 127], and in-range finite values must
+        // reconstruct within half a quantization step.
+        use crate::util::props::{run_cases, Gen};
+        run_cases("quantize_acts edge planes", 24, |g: &mut Gen| {
+            let rows = g.len(2, 6);
+            let bs = [8usize, 16, 32][g.rng.range(0, 3)];
+            let in_f = g.len(1, 3 * bs + 5);
+            let mut x = g.f32_vec_wild(rows * in_f);
+            // Row 0: all zeros. Row 1: subnormal-max blocks.
+            for v in x[..in_f].iter_mut() {
+                *v = 0.0;
+            }
+            for (i, v) in x[in_f..2 * in_f].iter_mut().enumerate() {
+                *v = f32::from_bits(1 + (i as u32 % 1000)) * if i % 2 == 0 { 1.0 } else { -1.0 };
+            }
+            let a = quantize_acts(&x, rows, in_f, bs);
+            let kblocks = in_f.div_ceil(bs).max(1);
+            if a.kblocks != kblocks {
+                return Err("kblocks mismatch".into());
+            }
+            for r in 0..rows {
+                for kb in 0..kblocks {
+                    let e = a.exps[r * kblocks + kb] as i32;
+                    let (s, inv) = (exp2i(e), exp2i(-e));
+                    if !(s.is_finite() && s > 0.0 && inv.is_finite() && inv > 0.0) {
+                        return Err(format!("row {r} block {kb}: invalid scale 2^{e}"));
+                    }
+                }
+                for (i, &v) in x[r * in_f..(r + 1) * in_f].iter().enumerate() {
+                    let code = a.codes[r * in_f + i];
+                    if !(-127..=127).contains(&code) {
+                        return Err(format!("row {r} col {i}: code {code} out of range"));
+                    }
+                    let step = exp2i(a.exps[r * kblocks + i / bs] as i32);
+                    let got = code as f32 * step;
+                    if !got.is_finite() {
+                        return Err(format!("row {r} col {i}: non-finite reconstruction"));
+                    }
+                    // In-range finite values: |err| ≤ step/2 (RNE), with a
+                    // hair of slack for the subnormal-product rounding.
+                    if v.is_finite() && v.abs() <= 127.0 * step {
+                        let tol = 0.5 * step + step * 1e-6 + f32::MIN_POSITIVE;
+                        if (got - v).abs() > tol {
+                            return Err(format!(
+                                "row {r} col {i}: {v} -> {got} (step {step})"
+                            ));
+                        }
+                    }
+                }
+            }
+            // Row 0 must be exactly zero codes with exponent 0.
+            if a.codes[..in_f].iter().any(|&c| c != 0) || a.exps[..kblocks].iter().any(|&e| e != 0)
+            {
+                return Err("all-zero row must quantize to zero codes, exponent 0".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_acts_subnormal_and_nonfinite_blocks() {
+        // Deterministic spot checks of the edge-block contract.
+        let bs = 32;
+        // Subnormal-max block: exponent clamps to -126, codes round to 0
+        // (the values sit below half the smallest representable step).
+        let tiny = vec![f32::from_bits(1); bs]; // 2^-149
+        let a = quantize_acts(&tiny, 1, bs, bs);
+        assert_eq!(a.exps[0], -126);
+        assert!(a.codes.iter().all(|&c| c == 0), "below half a step: rounds to 0");
+        // An infinity saturates its own code and leaves neighbours sane.
+        let mut x = vec![1.0f32; bs];
+        x[3] = f32::INFINITY;
+        x[7] = f32::NEG_INFINITY;
+        let a = quantize_acts(&x, 1, bs, bs);
+        assert_eq!(a.codes[3], 127);
+        assert_eq!(a.codes[7], -127);
+        let inv = exp2i(-(a.exps[0] as i32));
+        assert!(inv.is_finite() && inv > 0.0);
+        // NaN elements quantize to 0 without poisoning the block exponent.
+        let mut x = vec![2.0f32; bs];
+        x[5] = f32::NAN;
+        let a = quantize_acts(&x, 1, bs, bs);
+        assert_eq!(a.codes[5], 0);
+        let step = exp2i(a.exps[0] as i32);
+        assert_eq!(a.codes[0] as f32 * step, 2.0, "finite neighbours exact");
     }
 
     #[test]

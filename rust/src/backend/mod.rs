@@ -10,8 +10,12 @@
 //!   f32 tile kernel, and — opt-in via [`forward::ActMode::Int8`] — an
 //!   integer-MAC pipeline that quantizes activations to i8 per MX block
 //!   and accumulates code×code dots in i32/i16 with one combined E8M0
-//!   scale per block. Generation decodes incrementally through a
-//!   per-layer KV cache ([`forward::KvCache`]). Needs only an anchor
+//!   scale per block, its per-tile MACs dispatched to explicit AVX2/NEON
+//!   kernels ([`simd`]) with a bit-identical portable fallback
+//!   (`MFQAT_SIMD=off`). Generation decodes incrementally through a
+//!   per-layer KV cache holding `rows ≥ 1` step-synchronized sequences
+//!   ([`forward::KvCache`], [`forward::forward_cached_batch`]), exposed
+//!   batched via [`Backend::generate_batch`]. Needs only an anchor
 //!   checkpoint + model dims: no XLA install, no AOT artifacts.
 //! * `PjrtBackend` (feature `pjrt`) — wraps the PJRT runtime and the AOT
 //!   HLO artifacts exported by `python/compile/aot.py`; formats execute as
@@ -26,6 +30,7 @@ pub mod forward;
 pub mod kernels;
 pub mod native;
 pub mod repack;
+pub mod simd;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
@@ -34,6 +39,7 @@ pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use repack::RepackedMx;
+pub use simd::SimdLevel;
 
 use crate::coordinator::format_cache::CacheStats;
 use crate::formats::ElementFormat;
@@ -42,10 +48,13 @@ use anyhow::Result;
 
 /// An inference engine that can score token batches at any element format.
 ///
-/// Implementations are *not* required to be `Send` (PJRT handles are
-/// thread-bound); the server constructs its backend inside the worker
-/// thread.
-pub trait Backend {
+/// Implementations must be `Send + Sync`: the server's worker pool shares
+/// **one** backend — weight cache included — across its worker threads via
+/// `Arc`, so concurrent `score_batch`/`generate*` calls from different
+/// threads must be safe (the native backend guards its `FormatCache` with
+/// a mutex and computes on immutable `Arc`'d weight sets; the stubbed PJRT
+/// types are plain data).
+pub trait Backend: Send + Sync {
     /// Short identifier (`"native"`, `"pjrt"`) for logs and metrics.
     fn name(&self) -> &'static str;
 
@@ -78,5 +87,21 @@ pub trait Backend {
     ) -> Result<String> {
         let _ = (prompt, fmt, n_tokens, cfg);
         anyhow::bail!("backend '{}' has no generation surface", self.name())
+    }
+
+    /// Sampled continuations for several prompts at `fmt`, decoded
+    /// step-synchronized through one batched KV cache. Token-identical to
+    /// calling [`Backend::generate`] once per prompt on the native backend
+    /// (one weight-streaming pass per step serves the whole batch);
+    /// backends without a generation surface return an error.
+    fn generate_batch(
+        &self,
+        prompts: &[&str],
+        fmt: ElementFormat,
+        n_tokens: usize,
+        cfg: &crate::eval::generate::SampleCfg,
+    ) -> Result<Vec<String>> {
+        let _ = (prompts, fmt, n_tokens, cfg);
+        anyhow::bail!("backend '{}' has no batched generation surface", self.name())
     }
 }

@@ -105,9 +105,14 @@ impl NativeBackend {
         Ok(w)
     }
 
-    /// Fresh KV cache sized for this model.
+    /// Fresh single-sequence KV cache sized for this model.
     pub fn kv_cache(&self) -> KvCache {
         KvCache::new(&self.dims)
+    }
+
+    /// Fresh batched KV cache for `rows` step-synchronized sequences.
+    pub fn kv_cache_rows(&self, rows: usize) -> KvCache {
+        KvCache::with_rows(&self.dims, rows)
     }
 
     /// Greedy/temperature generation at `fmt` with KV-cached incremental
@@ -123,6 +128,20 @@ impl NativeBackend {
         crate::eval::generate::generate_native(&w, prompt, n_tokens, cfg)
     }
 
+    /// Batched generation at `fmt`: all prompts decode step-synchronized
+    /// through one batched KV cache, token-identical to per-prompt
+    /// [`Self::generate`] calls (see
+    /// [`crate::eval::generate::generate_native_batch`]).
+    pub fn generate_batch(
+        &self,
+        prompts: &[&str],
+        fmt: ElementFormat,
+        n_tokens: usize,
+        cfg: &SampleCfg,
+    ) -> Result<Vec<String>> {
+        let w = self.weights(fmt)?;
+        crate::eval::generate::generate_native_batch(&w, prompts, n_tokens, cfg)
+    }
 }
 
 impl Backend for NativeBackend {
@@ -171,6 +190,16 @@ impl Backend for NativeBackend {
         cfg: &SampleCfg,
     ) -> Result<String> {
         NativeBackend::generate(self, prompt, fmt, n_tokens, cfg)
+    }
+
+    fn generate_batch(
+        &self,
+        prompts: &[&str],
+        fmt: ElementFormat,
+        n_tokens: usize,
+        cfg: &SampleCfg,
+    ) -> Result<Vec<String>> {
+        NativeBackend::generate_batch(self, prompts, fmt, n_tokens, cfg)
     }
 }
 

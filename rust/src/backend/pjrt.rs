@@ -4,6 +4,14 @@
 //! Every format executes through the same compiled graph; lower precisions
 //! change weight *values* only, so this backend measures quality, not
 //! speed. Use [`super::NativeBackend`] for packed-format execution.
+//!
+//! `Send + Sync`: the [`Backend`] trait now requires both (the server's
+//! worker pool `Arc`-shares one engine). The vendored xla stub's types are
+//! plain data, so this compiles as-is; when re-pointing the `xla` dep at a
+//! real xla-rs checkout (ROADMAP open item), either rely on xla-rs's
+//! `Send + Sync` handle wrappers or confine this backend behind a
+//! dedicated executor thread + channel — do **not** silently share
+//! thread-bound PJRT handles across workers.
 
 use super::Backend;
 use crate::checkpoint::Checkpoint;

@@ -140,6 +140,19 @@ impl ElasticEngine {
         self.backend.generate(prompt, fmt, n_tokens, cfg)
     }
 
+    /// Sampled continuations for several prompts at `fmt`, decoded
+    /// step-synchronized through one batched KV cache (native backend;
+    /// token-identical to per-prompt [`Self::generate`] calls).
+    pub fn generate_batch(
+        &self,
+        prompts: &[&str],
+        fmt: ElementFormat,
+        n_tokens: usize,
+        cfg: &crate::eval::generate::SampleCfg,
+    ) -> Result<Vec<String>> {
+        self.backend.generate_batch(prompts, fmt, n_tokens, cfg)
+    }
+
     /// Weight-cache counters.
     pub fn cache_stats(&self) -> CacheStats {
         self.backend.cache_stats()

@@ -2,13 +2,18 @@
 //!
 //! Two execution paths share one sampler ([`sample`] / [`SampleCfg`]):
 //!
-//! * [`generate_native`] — the serving path: prefill the prompt once
-//!   through the KV cache, then decode one token per step
-//!   ([`crate::backend::forward::forward_cached`]); per-token cost is one
-//!   rows=1 pass over the packed weights plus attention over the cached
-//!   prefix — no full-window recompute. When the context outgrows
-//!   `seq_len` the cache is re-prefilled from the trailing half window
-//!   (amortized O(1) prefills per emitted token).
+//! * [`generate_native_batch`] — the serving path: `rows` prompts prefill
+//!   their (ragged) trailing windows through one batched KV cache, then
+//!   every sequence decodes one token per step-synchronized pass
+//!   ([`crate::backend::forward::forward_cached_batch`]); per-step cost is
+//!   one `rows`-row pass over the packed weights plus attention over each
+//!   row's own cached prefix — no full-window recompute, and the weight
+//!   planes stream once per step for the whole batch. When a row's context
+//!   outgrows `seq_len` only that row re-prefills from its trailing half
+//!   window (amortized O(1) prefills per emitted token); each row carries
+//!   its own sampler RNG, so the batch is **token-identical** to `rows`
+//!   independent [`generate_native`] calls (which is itself the `rows = 1`
+//!   wrapper).
 //! * [`generate`] (feature `pjrt`) — the AOT `forward_b1` graph with
 //!   full-sequence recompute per emitted token (quality/debug surface for
 //!   the compiled path).
@@ -24,8 +29,9 @@ use crate::runtime::{self, ArtifactSet, Runtime};
 #[cfg(feature = "pjrt")]
 use anyhow::anyhow;
 
-/// Sampling configuration.
-#[derive(Debug, Clone)]
+/// Sampling configuration. `PartialEq` lets the server group generation
+/// requests that can share one batched decode.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SampleCfg {
     /// 0.0 ⇒ greedy argmax.
     pub temperature: f32,
@@ -45,46 +51,98 @@ impl Default for SampleCfg {
 }
 
 /// Generate `n_tokens` continuation tokens for a text prompt through the
-/// native backend's KV-cached incremental decode.
+/// native backend's KV-cached incremental decode (single-sequence wrapper
+/// around [`generate_native_batch`]).
 pub fn generate_native(
     w: &crate::backend::NativeWeights,
     prompt: &str,
     n_tokens: usize,
     cfg: &SampleCfg,
 ) -> Result<String> {
-    use crate::backend::forward::{forward_cached, KvCache};
+    let mut out = generate_native_batch(w, &[prompt], n_tokens, cfg)?;
+    Ok(out.pop().expect("one continuation per prompt"))
+}
+
+/// Generate `n_tokens` continuation tokens for each of `prompts.len()`
+/// prompts in one step-synchronized batched decode.
+///
+/// Every row carries its own sampler RNG (seeded `cfg.seed`, exactly as an
+/// independent call would be) and its own re-prefill window, and every
+/// per-row computation in [`forward_cached_batch`] is row-independent — so
+/// the output is **token-identical** to calling [`generate_native`] once
+/// per prompt, while the packed weight planes stream once per decode step
+/// for the whole batch instead of once per sequence. When one row's window
+/// overflows, only that row resets and re-prefills its trailing half
+/// window (a ragged step); its neighbours keep decoding single tokens.
+pub fn generate_native_batch(
+    w: &crate::backend::NativeWeights,
+    prompts: &[&str],
+    n_tokens: usize,
+    cfg: &SampleCfg,
+) -> Result<Vec<String>> {
+    use crate::backend::forward::{forward_cached_batch, KvCache};
+    if prompts.is_empty() {
+        return Ok(Vec::new());
+    }
     let seq_len = w.dims.seq_len;
     let vocab = w.dims.vocab;
-    let mut rng = Rng::new(cfg.seed);
-    let mut tokens = encode(prompt);
-    if tokens.is_empty() {
-        tokens.push(PAD as i32);
-    }
-    let start_len = tokens.len();
+    let rows = prompts.len();
+    let mut rngs: Vec<Rng> = (0..rows).map(|_| Rng::new(cfg.seed)).collect();
+    let mut tokens: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| {
+            let mut t = encode(p);
+            if t.is_empty() {
+                t.push(PAD as i32);
+            }
+            t
+        })
+        .collect();
+    let start_lens: Vec<usize> = tokens.iter().map(|t| t.len()).collect();
 
-    let mut cache = KvCache::new(&w.dims);
-    // Prefill: the trailing window of the prompt, leaving room to decode.
-    let ctx_start = tokens.len().saturating_sub(seq_len);
-    let prefill: Vec<i32> = tokens[ctx_start..].to_vec();
-    let mut logits = forward_cached(w, &mut cache, &prefill)?;
-    for _ in 0..n_tokens {
-        // The last logits row predicts the next token.
-        let last = &logits[logits.len() - vocab..];
-        let next = sample(last, cfg, &mut rng) as i32;
-        tokens.push(next);
-        if cache.len() >= seq_len {
-            // Window full: re-prefill from the trailing half so subsequent
-            // decodes are incremental again (one prefill per seq_len/2
-            // emitted tokens, amortized O(1)).
-            let keep = (seq_len / 2).max(1);
-            let ctx = tokens[tokens.len() - keep..].to_vec();
-            cache.reset();
-            logits = forward_cached(w, &mut cache, &ctx)?;
-        } else {
-            logits = forward_cached(w, &mut cache, &[next])?;
+    let mut cache = KvCache::with_rows(&w.dims, rows);
+    // Ragged prefill: each row's trailing prompt window, leaving room to
+    // decode, in one batched pass.
+    let step: Vec<Vec<i32>> = tokens
+        .iter()
+        .map(|t| t[t.len().saturating_sub(seq_len)..].to_vec())
+        .collect();
+    let slices: Vec<&[i32]> = step.iter().map(|t| t.as_slice()).collect();
+    let mut logits = forward_cached_batch(w, &mut cache, &slices)?;
+    let mut counts: Vec<usize> = step.iter().map(|t| t.len()).collect();
+    for emitted in 0..n_tokens {
+        // Row r's next token comes from the last logits row of its chunk.
+        let mut step: Vec<Vec<i32>> = Vec::with_capacity(rows);
+        let mut off = 0usize;
+        for r in 0..rows {
+            let last = &logits[(off + counts[r] - 1) * vocab..(off + counts[r]) * vocab];
+            off += counts[r];
+            let next = sample(last, cfg, &mut rngs[r]) as i32;
+            tokens[r].push(next);
+            if cache.len_of(r) >= seq_len {
+                // Row window full: re-prefill this row from its trailing
+                // half so subsequent decodes are incremental again (one
+                // prefill per seq_len/2 emitted tokens, amortized O(1)).
+                let keep = (seq_len / 2).max(1);
+                let ctx = tokens[r][tokens[r].len() - keep..].to_vec();
+                cache.reset_row(r);
+                step.push(ctx);
+            } else {
+                step.push(vec![next]);
+            }
         }
+        if emitted + 1 == n_tokens {
+            break; // the last sample needs no further forward pass
+        }
+        let slices: Vec<&[i32]> = step.iter().map(|t| t.as_slice()).collect();
+        logits = forward_cached_batch(w, &mut cache, &slices)?;
+        counts = step.iter().map(|t| t.len()).collect();
     }
-    Ok(decode(&tokens[start_len..]))
+    Ok(tokens
+        .iter()
+        .zip(&start_lens)
+        .map(|(t, &s)| decode(&t[s..]))
+        .collect())
 }
 
 /// Generate `n_tokens` continuation tokens for a text prompt over the AOT
@@ -201,6 +259,36 @@ mod tests {
             hot.insert(sample(&logits, &cfg, &mut rng));
         }
         assert_eq!(hot.len(), 3, "high temperature should hit all tokens");
+    }
+
+    #[test]
+    fn batched_generation_matches_independent_calls() {
+        use crate::backend::NativeWeights;
+        use crate::formats::ElementFormat;
+        use crate::model::{ModelDims, ParamSet};
+        let mut dims = ModelDims::new("genb", 256, 32, 1, 2, 12);
+        dims.train_batch = 2;
+        let m = dims.to_manifest();
+        let ck = ParamSet::init(&m, 13)
+            .to_anchor_checkpoint(&m, ElementFormat::int(8))
+            .unwrap();
+        let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(4)).unwrap();
+        let cfg = SampleCfg {
+            temperature: 0.8,
+            top_k: 6,
+            seed: 21,
+        };
+        // Ragged prompts, generation long enough to cross the window and
+        // exercise per-row re-prefill at different steps.
+        let prompts = ["k", "kovaq blue", "the color of kova is violet", ""];
+        let batch =
+            generate_native_batch(&w, &prompts, 20, &cfg).unwrap();
+        assert_eq!(batch.len(), prompts.len());
+        for (r, p) in prompts.iter().enumerate() {
+            let solo = generate_native(&w, p, 20, &cfg).unwrap();
+            assert_eq!(batch[r], solo, "row {r} (prompt {p:?}) diverged");
+        }
+        assert!(generate_native_batch(&w, &[], 8, &cfg).unwrap().is_empty());
     }
 
     #[test]

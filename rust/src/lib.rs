@@ -29,15 +29,28 @@
 //!   ([`backend::RepackedMx`]) with per-block E8M0 scales. MXINT formats
 //!   can run a true integer-MAC pipeline ([`backend::ActMode::Int8`]):
 //!   activations quantize to i8 per MX block, dots accumulate code×code
-//!   in i32/i16, and the combined scale applies once per block.
-//!   Generation decodes incrementally through a KV cache
-//!   ([`backend::KvCache`]). One anchor checkpoint serves every
-//!   MXINT/MXFP format with **no XLA install and no AOT artifacts**, so
-//!   CPU-only deployment targets get the full elastic-precision story,
-//!   and lower-bit formats genuinely stream less weight memory per batch.
+//!   in i32/i16 through explicit AVX2/NEON tile kernels
+//!   ([`backend::simd`], runtime-detected; `MFQAT_SIMD=off` pins the
+//!   bit-identical portable loop), and the combined scale applies once per
+//!   block. Generation decodes incrementally through a KV cache holding
+//!   `rows ≥ 1` step-synchronized sequences with ragged prefill
+//!   ([`backend::KvCache`]), so a batch of prompts streams the weight
+//!   planes once per decode step ([`backend::Backend::generate_batch`] —
+//!   token-identical to decoding each prompt alone). One anchor checkpoint
+//!   serves every MXINT/MXFP format with **no XLA install and no AOT
+//!   artifacts**, so CPU-only deployment targets get the full
+//!   elastic-precision story, and lower-bit formats genuinely stream less
+//!   weight memory per batch.
 //! * **PJRT** (`--features pjrt`): executes the AOT HLO artifacts exported
 //!   by `python/compile/aot.py`; formats run as dequantized-f32 literals
 //!   through one compiled graph (quality measurements, training).
+//!
+//! Serving ([`server`]) runs a configurable worker pool
+//! (`ServerConfig::workers`) sharing one engine — weight cache included —
+//! via `Arc`: each worker gathers its own batch (scoring and batched
+//! generation share the queue) while the others compute, and metrics
+//! aggregate across the pool. `MFQAT_THREADS` pins kernel threading,
+//! `MFQAT_SIMD` the integer-MAC dispatch.
 //!
 //! Python never runs on the request path; with the native backend, neither
 //! does XLA — the `mfqat` binary is self-contained.

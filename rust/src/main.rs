@@ -115,8 +115,11 @@ COMMANDS:
   convert --in P --format F --out Q Slice-and-Scale convert an anchor checkpoint
   inspect --checkpoint P            dump checkpoint metadata
   serve [--policy ladder] [--requests N] [--burst N] [--backend native|pjrt]
-        [--checkpoint P] [--cache-mb N] [--act f32|int8]
-                                    run the elastic serving demo workload
+        [--checkpoint P] [--cache-mb N] [--act f32|int8] [--workers N]
+        [--gen-requests N] [--gen-tokens N]
+                                    run the elastic serving demo workload:
+                                    N workers share one engine; scoring and
+                                    batched-generation requests interleave
   experiment <id>                   regenerate a paper figure/table; id in
                                     fig1 fig2 fig3 fig4 tab1 tab2 tab3 fig19 fig20 all
                                     (fig19/fig20 run natively; the rest need pjrt)
@@ -498,13 +501,17 @@ fn pjrt_engine(
     anyhow::bail!("this build has no PJRT backend — rebuild with `--features pjrt`")
 }
 
-/// Serving demo: fire a bursty synthetic workload at the elastic server and
-/// report the precision mix + latency profile.
+/// Serving demo: fire a bursty synthetic workload — scoring plus optional
+/// batched-generation requests — at the elastic server pool and report the
+/// precision mix + latency profile.
 fn serve(args: &Args) -> Result<()> {
     let backend = args.get_or("backend", "native").to_string();
     let policy = Policy::parse(args.get_or("policy", "ladder"))?;
     let n_requests = args.usize("requests", 256)?;
     let burst = args.usize("burst", 32)?;
+    let workers = args.usize("workers", 1)?;
+    let gen_requests = args.usize("gen-requests", 0)?;
+    let gen_tokens = args.usize("gen-tokens", 16)?;
     let act = ActMode::parse(args.get_or("act", "f32"))?;
     if backend == "pjrt" {
         reject_act_for_pjrt(args)?;
@@ -533,6 +540,7 @@ fn serve(args: &Args) -> Result<()> {
         ServerConfig {
             policy,
             gather_window: std::time::Duration::from_millis(2),
+            workers,
         },
     )?;
 
@@ -543,15 +551,36 @@ fn serve(args: &Args) -> Result<()> {
         qat_sequences: 8,
         val_sequences: n_requests.div_ceil(64).max(1) * 64,
     });
-    println!("firing {n_requests} requests in bursts of {burst}…");
+    println!(
+        "firing {n_requests} score requests in bursts of {burst} \
+         (+{gen_requests} generate) across {workers} worker(s)…"
+    );
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
+    let mut pending_gen = Vec::new();
     let mut sent = 0usize;
-    while sent < n_requests {
-        for _ in 0..burst.min(n_requests - sent) {
+    let mut gen_sent = 0usize;
+    let gen_cfg = sample_cfg(args)?;
+    let gen_prompts = ["the color of kova is", "kovaq", "blue sky", "q"];
+    // Generation traffic rides along in slices per score burst; a pure
+    // generation workload (--requests 0) still drains through the loop.
+    let bursts = n_requests.div_ceil(burst.max(1)).max(1);
+    let gen_share = gen_requests.div_ceil(bursts).max(1);
+    while sent < n_requests || gen_sent < gen_requests {
+        for _ in 0..burst.max(1).min(n_requests - sent) {
             let row = &corpus.val[sent % corpus.val.len()];
             pending.push(client.submit(row, None)?);
             sent += 1;
+        }
+        for _ in 0..gen_share.min(gen_requests - gen_sent) {
+            let prompt = gen_prompts[gen_sent % gen_prompts.len()];
+            pending_gen.push(client.submit_generate(
+                prompt,
+                gen_tokens,
+                None,
+                gen_cfg.clone(),
+            )?);
+            gen_sent += 1;
         }
         // Drain this burst.
         for rx in pending.drain(..) {
@@ -565,6 +594,18 @@ fn serve(args: &Args) -> Result<()> {
                 resp.format,
                 resp.batch_size,
                 resp.queue_depth
+            );
+        }
+        for rx in pending_gen.drain(..) {
+            let resp = rx
+                .recv()
+                .map_err(|_| anyhow!("server dropped request"))?
+                .map_err(|e| anyhow!(e))?;
+            log::debug!(
+                "gen {:?} fmt {} batch {}",
+                resp.text,
+                resp.format,
+                resp.batch_size
             );
         }
     }

@@ -1,13 +1,16 @@
-//! Serving metrics: request counts per format, latency distribution,
-//! batch-size and execution-time statistics, and weight-cache counters.
+//! Serving metrics: request counts per format and lane (scoring vs
+//! generation), latency distributions, batch-size and execution-time
+//! statistics, generated-token throughput, and weight-cache counters.
+//! One instance aggregates the whole worker pool (shared behind a mutex;
+//! each worker takes the lock once per executed sub-batch).
 
 use crate::coordinator::CacheStats;
 use crate::formats::ElementFormat;
 use crate::util::stats::{LatencyHist, Running};
 use std::collections::BTreeMap;
 
-/// Aggregated server metrics (guarded by a mutex in the server; the worker
-/// takes that lock once per executed batch).
+/// Aggregated server metrics (guarded by a mutex in the server; workers
+/// take that lock once per executed batch).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests: u64,
@@ -15,6 +18,18 @@ pub struct Metrics {
     pub latency: LatencyHist,
     pub batch_size: Running,
     pub exec_time: Running,
+    /// Generation-lane request count (also counted in `requests`).
+    pub gen_requests: u64,
+    /// Generation-lane end-to-end latency distribution.
+    pub gen_latency: LatencyHist,
+    /// Tokens emitted by the generation lane.
+    pub gen_tokens: u64,
+    /// Wall-clock seconds spent inside batched decodes (per request row —
+    /// `gen_tokens / gen_exec_time` understates shared-batch throughput;
+    /// divide by the mean batch size for per-pass numbers).
+    pub gen_exec_time: Running,
+    /// Worker threads serving this instance (set at server start).
+    pub workers: usize,
     /// Weight-cache counter snapshot (hits/misses/evictions/bytes).
     pub cache: CacheStats,
 }
@@ -23,6 +38,7 @@ impl Metrics {
     pub fn new() -> Metrics {
         Metrics {
             latency: LatencyHist::new(),
+            gen_latency: LatencyHist::new(),
             ..Default::default()
         }
     }
@@ -33,6 +49,29 @@ impl Metrics {
         self.latency.record(latency_s);
         self.batch_size.push(batch as f64);
         self.exec_time.push(exec_s);
+    }
+
+    /// Record one generation-lane request served in a batch of `batch`
+    /// prompts that emitted `tokens` tokens for this request. The request
+    /// feeds the headline `requests`/`latency`/`batch_size` aggregates
+    /// (so the summary line describes one population) *and* the gen-lane
+    /// counters for lane-specific views.
+    pub fn record_generate(
+        &mut self,
+        fmt: ElementFormat,
+        latency_s: f64,
+        batch: usize,
+        exec_s: f64,
+        tokens: u64,
+    ) {
+        self.requests += 1;
+        self.gen_requests += 1;
+        *self.per_format.entry(fmt.name()).or_insert(0) += 1;
+        self.latency.record(latency_s);
+        self.gen_latency.record(latency_s);
+        self.batch_size.push(batch as f64);
+        self.gen_exec_time.push(exec_s);
+        self.gen_tokens += tokens;
     }
 
     /// Refresh the weight-cache counter snapshot (once per batch).
@@ -56,11 +95,23 @@ impl Metrics {
             .iter()
             .map(|(f, n)| format!("{f}:{n}"))
             .collect();
+        let gen = if self.gen_requests > 0 {
+            format!(
+                " gen[{} reqs {} tok {}]",
+                self.gen_requests,
+                self.gen_tokens,
+                self.gen_latency.summary()
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "requests={} latency[{}] mean_batch={:.2} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]",
+            "workers={} requests={} latency[{}] mean_batch={:.2}{} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]",
+            self.workers.max(1),
             self.requests,
             self.latency.summary(),
             self.batch_size.mean(),
+            gen,
             mix.join(" "),
             self.cache.hits,
             self.cache.misses,
@@ -87,6 +138,27 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests=3"));
         assert!(s.contains("int8:2"));
+    }
+
+    #[test]
+    fn generation_lane_is_tracked() {
+        let mut m = Metrics::new();
+        m.record(ElementFormat::int(8), 0.010, 4, 0.008);
+        m.record_generate(ElementFormat::int(4), 0.200, 2, 0.180, 32);
+        m.record_generate(ElementFormat::int(4), 0.210, 2, 0.180, 32);
+        assert_eq!(m.requests, 3, "gen requests count toward the total");
+        assert_eq!(m.gen_requests, 2);
+        assert_eq!(m.gen_tokens, 64);
+        assert_eq!(m.format_counts()["int4"], 2);
+        let s = m.summary();
+        assert!(s.contains("gen[2 reqs 64 tok"), "{s}");
+        // Scoring-only metrics skip the gen section.
+        let mut m2 = Metrics::new();
+        m2.workers = 4;
+        m2.record(ElementFormat::int(8), 0.010, 4, 0.008);
+        let s2 = m2.summary();
+        assert!(!s2.contains("gen["), "{s2}");
+        assert!(s2.contains("workers=4"), "{s2}");
     }
 
     #[test]

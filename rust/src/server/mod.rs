@@ -1,11 +1,25 @@
-//! Elastic inference server: request queue → dynamic batcher → worker.
+//! Elastic inference server: request queue → dynamic batcher → worker pool.
 //!
 //! The deployment story the paper motivates (§1): one device, one anchor
 //! checkpoint, and the *numeric format chosen per batch* based on current
-//! load. The server owns a worker thread with the [`ElasticEngine`]; clients
-//! submit scoring requests over a channel; the batcher groups up to
-//! `train_batch` requests inside a gather window; the [`policy`] maps queue
-//! depth to the serving format; metrics record latency/throughput/format mix.
+//! load. The server owns a pool of [`ServerConfig::workers`] worker threads
+//! sharing **one** [`ElasticEngine`] — and therefore one weight
+//! `FormatCache` — via `Arc` (the [`crate::backend::Backend`] trait is
+//! `Send + Sync`); clients submit requests over a channel; each worker
+//! takes the queue lock, gathers up to `train_batch` requests inside a
+//! gather window, releases, and executes — so gathering overlaps compute
+//! across workers. Two request lanes share the queue and the batcher:
+//!
+//! * [`ScoreRequest`] — NLL scoring of a token window (split into
+//!   per-format sub-batches, one execution each, exactly as before);
+//! * [`GenerateRequest`] — sampled continuations, grouped by
+//!   `(format, n_tokens, cfg)` and decoded **step-synchronized** through
+//!   one batched KV cache ([`crate::backend::Backend::generate_batch`]),
+//!   token-identical to serving each prompt alone.
+//!
+//! The [`policy`] maps queue depth (a shared atomic counter — exact under
+//! concurrent workers) to the serving format; [`metrics`] aggregates
+//! latency/throughput/format mix across the whole pool behind one mutex.
 
 pub mod costmodel;
 pub mod metrics;
@@ -16,9 +30,10 @@ pub use metrics::Metrics;
 pub use policy::{Policy, SloState};
 
 use crate::coordinator::ElasticEngine;
+use crate::eval::generate::SampleCfg;
 use crate::formats::ElementFormat;
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -33,7 +48,7 @@ pub struct ScoreRequest {
     pub enqueued: Instant,
 }
 
-/// The response: per-sequence mean NLL plus serving telemetry.
+/// The scoring response: per-sequence mean NLL plus serving telemetry.
 #[derive(Debug, Clone)]
 pub struct ScoreResponse {
     pub nll: f32,
@@ -43,12 +58,43 @@ pub struct ScoreResponse {
     pub latency: Duration,
 }
 
+/// A generation request: sampled continuation of a text prompt. Requests
+/// with equal `(format, n_tokens, cfg)` landing in one gather window decode
+/// as a single batched KV-cache pass.
+pub struct GenerateRequest {
+    pub prompt: String,
+    pub n_tokens: usize,
+    pub format: Option<ElementFormat>,
+    pub cfg: SampleCfg,
+    pub respond: Sender<Result<GenerateResponse, String>>,
+    pub enqueued: Instant,
+}
+
+/// The generation response: continuation text plus serving telemetry.
+#[derive(Debug, Clone)]
+pub struct GenerateResponse {
+    pub text: String,
+    pub format: ElementFormat,
+    pub batch_size: usize,
+    pub queue_depth: usize,
+    pub latency: Duration,
+}
+
+/// One queued request (either lane).
+pub enum Request {
+    Score(ScoreRequest),
+    Generate(GenerateRequest),
+}
+
 /// Server configuration.
 #[derive(Clone)]
 pub struct ServerConfig {
     pub policy: Policy,
     /// How long the batcher waits to fill a batch.
     pub gather_window: Duration,
+    /// Worker threads sharing the engine (≥ 1). Each worker gathers and
+    /// executes its own batches; weights and metrics are shared.
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -56,30 +102,33 @@ impl Default for ServerConfig {
         ServerConfig {
             policy: Policy::default_ladder(),
             gather_window: Duration::from_millis(2),
+            workers: 1,
         }
     }
 }
 
 /// Handle to a running server.
 pub struct Server {
-    tx: Sender<ScoreRequest>,
+    tx: Sender<Request>,
     pub metrics: Arc<Mutex<Metrics>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     alive: Arc<AtomicBool>,
 }
 
 /// Client handle (cheap to clone).
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<ScoreRequest>,
+    tx: Sender<Request>,
     width: usize,
+    depth: Arc<AtomicUsize>,
     /// Cleared on shutdown — a live client must not enqueue into a queue
     /// nobody drains (its own `tx` clone keeps the channel open).
     alive: Arc<AtomicBool>,
 }
 
 impl Client {
-    /// Submit and wait. `tokens` is truncated / right-padded to the window.
+    /// Submit a scoring request and wait. `tokens` is truncated /
+    /// right-padded to the window.
     pub fn score(&self, tokens: &[i32], format: Option<ElementFormat>) -> Result<ScoreResponse> {
         let rx = self.submit(tokens, format)?;
         rx.recv()
@@ -87,87 +136,173 @@ impl Client {
             .map_err(|e| anyhow::anyhow!(e))
     }
 
-    /// Submit without waiting; returns the response channel.
+    /// Submit a scoring request without waiting; returns the response
+    /// channel.
     pub fn submit(
         &self,
         tokens: &[i32],
         format: Option<ElementFormat>,
     ) -> Result<Receiver<Result<ScoreResponse, String>>> {
-        if !self.alive.load(Ordering::Acquire) {
-            anyhow::bail!("server is shut down");
-        }
         let mut t = tokens.to_vec();
         t.truncate(self.width);
         t.resize(self.width, crate::data::PAD as i32);
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(ScoreRequest {
-                tokens: t,
-                format,
-                respond: tx,
-                enqueued: Instant::now(),
-            })
-            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        self.send(Request::Score(ScoreRequest {
+            tokens: t,
+            format,
+            respond: tx,
+            enqueued: Instant::now(),
+        }))?;
         Ok(rx)
+    }
+
+    /// Submit a generation request and wait.
+    pub fn generate(
+        &self,
+        prompt: &str,
+        n_tokens: usize,
+        format: Option<ElementFormat>,
+        cfg: SampleCfg,
+    ) -> Result<GenerateResponse> {
+        let rx = self.submit_generate(prompt, n_tokens, format, cfg)?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("server dropped the request"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Submit a generation request without waiting; returns the response
+    /// channel.
+    pub fn submit_generate(
+        &self,
+        prompt: &str,
+        n_tokens: usize,
+        format: Option<ElementFormat>,
+        cfg: SampleCfg,
+    ) -> Result<Receiver<Result<GenerateResponse, String>>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Request::Generate(GenerateRequest {
+            prompt: prompt.to_string(),
+            n_tokens,
+            format,
+            cfg,
+            respond: tx,
+            enqueued: Instant::now(),
+        }))?;
+        Ok(rx)
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        if !self.alive.load(Ordering::Acquire) {
+            anyhow::bail!("server is shut down");
+        }
+        self.depth.fetch_add(1, Ordering::AcqRel);
+        self.tx.send(req).map_err(|_| {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            anyhow::anyhow!("server is shut down")
+        })
     }
 }
 
 impl Server {
-    /// Start the worker thread.
+    /// Start the worker pool.
     ///
-    /// PJRT handles are not `Send`, so the [`ElasticEngine`] must be *built
-    /// inside* the worker: `factory` runs on the worker thread and its error
-    /// (if any) is returned from `start`. `width` is `seq_len + 1` of the
-    /// serving model (used for client-side padding).
+    /// `factory` runs on the first worker thread (PJRT-style backends want
+    /// construction off the caller's thread) and its error (if any) is
+    /// returned from `start`; the resulting engine is `Arc`-shared across
+    /// all `config.workers` workers — one weight cache, one metrics sink.
+    /// `width` is `seq_len + 1` of the serving model (used for client-side
+    /// padding).
     pub fn start<F>(width: usize, factory: F, config: ServerConfig) -> Result<(Server, Client)>
     where
         F: FnOnce() -> Result<ElasticEngine> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<ScoreRequest>();
+        if config.workers == 0 {
+            anyhow::bail!("server wants at least one worker (got workers=0)");
+        }
+        let (tx, rx) = mpsc::channel::<Request>();
+        let queue = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let m2 = metrics.clone();
+        let depth = Arc::new(AtomicUsize::new(0));
         let alive = Arc::new(AtomicBool::new(true));
-        let alive_worker = alive.clone();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let worker = std::thread::Builder::new()
-            .name("mfqat-server".into())
-            .spawn(move || {
-                let engine = match factory() {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        alive_worker.store(false, Ordering::Release);
-                        return;
-                    }
-                };
-                worker_loop(engine, config, rx, m2, &alive_worker);
-                alive_worker.store(false, Ordering::Release);
-            })
-            .expect("spawn server worker");
-        ready_rx
+        let slo = Arc::new(Mutex::new(SloState::default()));
+        let mut workers = Vec::with_capacity(config.workers);
+
+        // Worker 0 builds the engine and hands an Arc back for the rest of
+        // the pool (startup errors surface from `start` exactly as before).
+        type Ready = std::result::Result<Arc<ElasticEngine>, String>;
+        let (ready_tx, ready_rx) = mpsc::channel::<Ready>();
+        {
+            let (queue, metrics, depth, alive, slo, config) = (
+                queue.clone(),
+                metrics.clone(),
+                depth.clone(),
+                alive.clone(),
+                slo.clone(),
+                config.clone(),
+            );
+            workers.push(
+                std::thread::Builder::new()
+                    .name("mfqat-worker-0".into())
+                    .spawn(move || {
+                        let engine = match factory() {
+                            Ok(e) => {
+                                let e = Arc::new(e);
+                                let _ = ready_tx.send(Ok(e.clone()));
+                                e
+                            }
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(format!("{e:#}")));
+                                alive.store(false, Ordering::Release);
+                                return;
+                            }
+                        };
+                        worker_loop(&engine, &config, &queue, &metrics, &depth, &alive, &slo);
+                    })
+                    .expect("spawn server worker"),
+            );
+        }
+        let engine = ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("server worker died during startup"))?
             .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
+        for i in 1..config.workers {
+            let engine = engine.clone();
+            let (queue, metrics, depth, alive, slo, config) = (
+                queue.clone(),
+                metrics.clone(),
+                depth.clone(),
+                alive.clone(),
+                slo.clone(),
+                config.clone(),
+            );
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("mfqat-worker-{i}"))
+                    .spawn(move || {
+                        worker_loop(&engine, &config, &queue, &metrics, &depth, &alive, &slo);
+                    })
+                    .expect("spawn server worker"),
+            );
+        }
+        metrics.lock().unwrap().workers = config.workers;
         let client = Client {
             tx: tx.clone(),
             width,
+            depth,
             alive: alive.clone(),
         };
         Ok((
             Server {
                 tx,
                 metrics,
-                worker: Some(worker),
+                workers,
                 alive,
             },
             client,
         ))
     }
 
-    /// Graceful shutdown: close the queue and join the worker.
+    /// Graceful shutdown: close the queue and join the pool.
     pub fn shutdown(mut self) {
         self.stop();
     }
@@ -177,7 +312,7 @@ impl Server {
         // keep the channel open), then drop our sender and join.
         self.alive.store(false, Ordering::Release);
         drop(std::mem::replace(&mut self.tx, mpsc::channel().0));
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -189,76 +324,119 @@ impl Drop for Server {
     }
 }
 
-fn worker_loop(
-    engine: ElasticEngine,
-    config: ServerConfig,
-    rx: Receiver<ScoreRequest>,
-    metrics: Arc<Mutex<Metrics>>,
+/// Gathered batch: at most `cap` requests, first one waited for (poll loop
+/// honours shutdown), the rest collected inside the gather window. Anything
+/// beyond `cap` stays queued for the other workers. Returns `None` on
+/// shutdown/disconnect.
+fn gather(
+    queue: &Mutex<Receiver<Request>>,
+    cap: usize,
+    window: Duration,
     alive: &AtomicBool,
-) {
-    let b = engine.dims().train_batch;
-    let width = engine.dims().seq_len + 1;
-    let mut backlog: Vec<ScoreRequest> = Vec::new();
-    let mut slo = SloState::default();
+) -> Option<Vec<Request>> {
+    let mut batch = Vec::new();
+    let rx = queue.lock().unwrap();
     loop {
-        // Wait for the first request, polling the shutdown flag (client tx
-        // clones can keep the channel open past Server::shutdown).
-        if backlog.is_empty() {
-            match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(r) => backlog.push(r),
-                Err(RecvTimeoutError::Timeout) => {
-                    if alive.load(Ordering::Acquire) {
-                        continue;
-                    }
-                    break; // shutdown requested
-                }
-                Err(RecvTimeoutError::Disconnected) => break, // all senders dropped
-            }
-        }
-        let deadline = Instant::now() + config.gather_window;
-        while backlog.len() < b {
-            let now = Instant::now();
-            if now >= deadline {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => {
+                batch.push(r);
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => backlog.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                if alive.load(Ordering::Acquire) {
+                    continue;
+                }
+                return None; // shutdown requested
             }
+            Err(RecvTimeoutError::Disconnected) => return None, // all senders gone
         }
-        // Drain anything already queued (for depth measurement + batching).
-        while let Ok(r) = rx.try_recv() {
-            backlog.push(r);
+    }
+    let deadline = Instant::now() + window;
+    while batch.len() < cap {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
         }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(_) => break,
+        }
+    }
+    // Top up from anything already queued, still capped so concurrent
+    // workers share the backlog.
+    while batch.len() < cap {
+        match rx.try_recv() {
+            Ok(r) => batch.push(r),
+            Err(_) => break,
+        }
+    }
+    Some(batch)
+}
 
-        let queue_depth = backlog.len();
-        let batch: Vec<ScoreRequest> = backlog.drain(..backlog.len().min(b)).collect();
-        // Unpinned requests take the policy's pick for the *total* queue
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    engine: &ElasticEngine,
+    config: &ServerConfig,
+    queue: &Mutex<Receiver<Request>>,
+    metrics: &Mutex<Metrics>,
+    depth: &AtomicUsize,
+    alive: &AtomicBool,
+    slo: &Mutex<SloState>,
+) {
+    let b = engine.dims().train_batch;
+    loop {
+        let Some(batch) = gather(queue, b, config.gather_window, alive) else {
+            break;
+        };
+        // Depth *before* this worker hands its gathered requests to the
+        // engine — pending elsewhere plus this batch (the policy signal).
+        let queue_depth = depth.load(Ordering::Acquire);
+        depth.fetch_sub(batch.len(), Ordering::AcqRel);
+
+        // Unpinned requests take the policy's pick for the current queue
         // depth; pinned requests must be served at their pin, so the batch
         // splits into per-format sub-batches (one execution each) instead
-        // of letting the first pin silently win for everyone.
-        let policy_fmt = config.policy.choose_with(queue_depth, &slo);
-        let mut groups: Vec<(ElementFormat, Vec<ScoreRequest>)> = Vec::new();
-        for r in batch {
-            let fmt = r.format.unwrap_or(policy_fmt);
-            match groups.iter_mut().find(|(f, _)| *f == fmt) {
-                Some((_, reqs)) => reqs.push(r),
-                None => groups.push((fmt, vec![r])),
+        // of letting the first pin silently win for everyone. Generation
+        // additionally groups by (n_tokens, cfg) so one batched decode is
+        // token-identical to serving each prompt alone.
+        let policy_fmt = config.policy.choose_with(queue_depth, &slo.lock().unwrap());
+        let mut score_groups: Vec<(ElementFormat, Vec<ScoreRequest>)> = Vec::new();
+        let mut gen_groups: Vec<(ElementFormat, usize, SampleCfg, Vec<GenerateRequest>)> =
+            Vec::new();
+        for req in batch {
+            match req {
+                Request::Score(r) => {
+                    let fmt = r.format.unwrap_or(policy_fmt);
+                    match score_groups.iter_mut().find(|(f, _)| *f == fmt) {
+                        Some((_, reqs)) => reqs.push(r),
+                        None => score_groups.push((fmt, vec![r])),
+                    }
+                }
+                Request::Generate(r) => {
+                    let fmt = r.format.unwrap_or(policy_fmt);
+                    match gen_groups
+                        .iter_mut()
+                        .find(|g| g.0 == fmt && g.1 == r.n_tokens && g.2 == r.cfg)
+                    {
+                        Some(g) => g.3.push(r),
+                        None => gen_groups.push((fmt, r.n_tokens, r.cfg.clone(), vec![r])),
+                    }
+                }
             }
         }
 
-        for (fmt, group) in groups {
+        for (fmt, group) in score_groups {
             let t0 = Instant::now();
             // Sub-batches execute at their true size; only the PJRT graph
             // pads internally to its fixed batch shape.
+            let width = engine.dims().seq_len + 1;
             let mut flat = Vec::with_capacity(group.len() * width);
             for r in &group {
                 flat.extend_from_slice(&r.tokens);
             }
             let result = engine.score_batch(&flat, fmt);
             let elapsed = t0.elapsed();
-            slo.observe(&config.policy, elapsed.as_secs_f64());
+            slo.lock().unwrap().observe(&config.policy, elapsed.as_secs_f64());
 
             match result {
                 Ok(nlls) => {
@@ -292,6 +470,58 @@ fn worker_loop(
                 }
             }
         }
+
+        for (fmt, n_tokens, cfg, group) in gen_groups {
+            let t0 = Instant::now();
+            let result = {
+                let prompts: Vec<&str> = group.iter().map(|r| r.prompt.as_str()).collect();
+                engine.generate_batch(&prompts, fmt, n_tokens, &cfg)
+            };
+            let elapsed = t0.elapsed();
+            slo.lock().unwrap().observe(&config.policy, elapsed.as_secs_f64());
+
+            match result {
+                Ok(texts) => {
+                    let bs = group.len();
+                    let latencies: Vec<Duration> =
+                        group.iter().map(|r| r.enqueued.elapsed()).collect();
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        for latency in &latencies {
+                            m.record_generate(
+                                fmt,
+                                latency.as_secs_f64(),
+                                bs,
+                                elapsed.as_secs_f64(),
+                                n_tokens as u64,
+                            );
+                        }
+                        m.set_cache(engine.cache_stats());
+                    }
+                    for ((req, text), latency) in
+                        group.into_iter().zip(texts).zip(latencies)
+                    {
+                        let _ = req.respond.send(Ok(GenerateResponse {
+                            text,
+                            format: fmt,
+                            batch_size: bs,
+                            queue_depth,
+                            latency,
+                        }));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("batched generation failed: {e:#}");
+                    log::error!("{msg}");
+                    for req in group {
+                        let _ = req.respond.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
     }
-    log::info!("server worker exiting; {}", metrics.lock().unwrap().summary());
+    log::info!(
+        "server worker exiting; {}",
+        metrics.lock().unwrap().summary()
+    );
 }

@@ -1,0 +1,123 @@
+//! Batched KV-cached decode: `generate_batch` with ragged prompt lengths
+//! must be **token-identical** to N independent single-sequence `generate`
+//! calls — for every `ElementFormat` the paper evaluates, in both
+//! activation modes. Exactness assertions, not tolerances: every per-row
+//! computation in the batched forward is row-independent, so the outputs
+//! must agree bit for bit.
+
+use mfqat::backend::forward::{forward_cached, forward_cached_batch, KvCache};
+use mfqat::backend::{ActMode, NativeWeights};
+use mfqat::coordinator::ElasticEngine;
+use mfqat::eval::generate::{generate_native, generate_native_batch, SampleCfg};
+use mfqat::formats::ElementFormat;
+use mfqat::model::{ModelDims, ParamSet};
+
+/// Byte-level prompts need the full 256-token vocab; keep everything else
+/// tiny so the full format × act-mode matrix stays fast.
+fn gen_dims() -> ModelDims {
+    let mut dims = ModelDims::new("batchgen", 256, 32, 1, 2, 10);
+    dims.train_batch = 4;
+    dims
+}
+
+fn anchor(dims: &ModelDims, seed: u64, fmt: ElementFormat) -> mfqat::checkpoint::Checkpoint {
+    let m = dims.to_manifest();
+    ParamSet::init(&m, seed).to_anchor_checkpoint(&m, fmt).unwrap()
+}
+
+#[test]
+fn generate_batch_token_identical_all_formats_and_act_modes() {
+    let dims = gen_dims();
+    // Ragged prompts: shorter than, equal to, and longer than the window,
+    // plus empty (PAD-seeded) — rows hit the re-prefill path at different
+    // steps, so decode batches go ragged mid-run.
+    let prompts = ["k", "kova query", "the color of kova is violet", ""];
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 6,
+        seed: 33,
+    };
+    let n_tokens = 2 * dims.seq_len; // well past the window: forced overflow
+    for (anchor_fmt, targets) in [
+        (ElementFormat::int(8), ElementFormat::all_int()),
+        (ElementFormat::fp_from_bits(8), ElementFormat::all_fp()),
+    ] {
+        let ck = anchor(&dims, 41, anchor_fmt);
+        for fmt in targets {
+            for act in [ActMode::F32, ActMode::Int8] {
+                let mut w =
+                    NativeWeights::packed_from_checkpoint(&dims, &ck, fmt).unwrap();
+                w.act = act;
+                let batch = generate_native_batch(&w, &prompts, n_tokens, &cfg).unwrap();
+                assert_eq!(batch.len(), prompts.len());
+                for (r, p) in prompts.iter().enumerate() {
+                    let solo = generate_native(&w, p, n_tokens, &cfg).unwrap();
+                    assert_eq!(solo.chars().count(), n_tokens, "one char per token");
+                    assert_eq!(
+                        batch[r],
+                        solo,
+                        "{} act={} row {r} (prompt {p:?}): batched decode diverged",
+                        fmt.long_name(),
+                        act.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_generate_batch_matches_engine_generate() {
+    // The Backend/engine surface routes through the same batched decode.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 42, ElementFormat::int(8));
+    let engine = ElasticEngine::native(dims.clone(), ck, 64 << 20).unwrap();
+    let cfg = SampleCfg {
+        temperature: 0.6,
+        top_k: 4,
+        seed: 7,
+    };
+    let prompts = ["ab", "kova", "q"];
+    let batch = engine
+        .generate_batch(&prompts, ElementFormat::int(4), 12, &cfg)
+        .unwrap();
+    for (r, p) in prompts.iter().enumerate() {
+        let solo = engine.generate(p, ElementFormat::int(4), 12, &cfg).unwrap();
+        assert_eq!(batch[r], solo, "row {r}");
+    }
+    // Batched generation at a new format is one cache derivation.
+    assert_eq!(engine.cached_formats(), 1);
+}
+
+#[test]
+fn batched_prefill_logits_match_single_sequence_prefill() {
+    // Scoring-shaped check on the batched cache itself: a ragged batched
+    // prefill reproduces each row's single-sequence prefill logits exactly
+    // (the decode exactness above builds on this).
+    let dims = gen_dims();
+    let ck = anchor(&dims, 43, ElementFormat::int(8));
+    let vocab = dims.vocab;
+    let rows_tok: Vec<Vec<i32>> = vec![
+        (0..3).map(|i| (i * 31 + 5) as i32 % 256).collect(),
+        (0..9).map(|i| (i * 17 + 2) as i32 % 256).collect(),
+        (0..6).map(|i| (i * 7 + 11) as i32 % 256).collect(),
+    ];
+    for fmt in [ElementFormat::int(8), ElementFormat::fp_from_bits(6)] {
+        let w = NativeWeights::packed_from_checkpoint(&dims, &ck, fmt).unwrap();
+        let mut cache = KvCache::with_rows(&dims, rows_tok.len());
+        let step: Vec<&[i32]> = rows_tok.iter().map(|t| t.as_slice()).collect();
+        let batched = forward_cached_batch(&w, &mut cache, &step).unwrap();
+        let mut off = 0usize;
+        for (r, row) in rows_tok.iter().enumerate() {
+            let mut solo_cache = KvCache::new(&dims);
+            let solo = forward_cached(&w, &mut solo_cache, row).unwrap();
+            assert_eq!(
+                &batched[off * vocab..(off + row.len()) * vocab],
+                solo.as_slice(),
+                "{}: row {r}",
+                fmt.long_name()
+            );
+            off += row.len();
+        }
+    }
+}
