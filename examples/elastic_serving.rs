@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
             policy: ladder,
             gather_window: Duration::from_millis(2),
             workers: 2,
+            ..Default::default()
         },
     )?;
 

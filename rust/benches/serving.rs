@@ -6,15 +6,23 @@
 //!   score/<fmt>/workersN    closed-loop scoring throughput + latency
 //!                           (p50/p99) by worker count and format — the
 //!                           worker-pool scaling story
-//!   generate/<fmt>/workersN batched-generation tokens/sec by worker count
-//!                           (requests grouped into step-synchronized
-//!                           batched decodes per gather window)
+//!   generate/<fmt>/workersN generation tokens/sec by worker count through
+//!                           the continuous-batching lane
+//!   continuous_batching/*   open-loop Poisson arrivals of MIXED-format
+//!                           generation requests served by (a) legacy
+//!                           gather batching — which serializes formats
+//!                           into per-group convoys — and (b) continuous
+//!                           batching with per-row formats and
+//!                           prefill-on-join; p50/p99 request latency and
+//!                           tokens/sec per mode, plus the headline
+//!                           p50 speedup of continuous over gather
 //!   batched_decode/rowsN    raw `generate_native_batch` tokens/sec by
 //!                           batch width (no server) — the KV-batching win
 //!
 //! Writes a machine-readable summary to `BENCH_serving.json` (CI archives
 //! it; the acceptance numbers — tokens/sec scaling with worker count,
-//! batched-decode speedup over rows=1 — live there).
+//! continuous-vs-gather queue-latency reduction, batched-decode speedup
+//! over rows=1 — live there).
 //!
 //! Inner GEMM threading is pinned to 1 unless `MFQAT_THREADS` is set, so
 //! worker-pool scaling is not confounded by kernel-level parallelism.
@@ -24,8 +32,9 @@ use mfqat::coordinator::ElasticEngine;
 use mfqat::eval::generate::{generate_native_batch, SampleCfg};
 use mfqat::formats::ElementFormat;
 use mfqat::model::{ModelDims, ParamSet};
-use mfqat::server::{Policy, Server, ServerConfig};
+use mfqat::server::{GenBatching, Policy, Server, ServerConfig};
 use mfqat::util::json::Json;
+use mfqat::util::Rng;
 use std::time::{Duration, Instant};
 
 /// Small serving model: large enough that a batch costs real work, small
@@ -78,7 +87,10 @@ where
     (wall, p50, p99)
 }
 
-fn start_pool(workers: usize) -> (Server, mfqat::server::Client, usize) {
+fn start_pool_mode(
+    workers: usize,
+    batching: GenBatching,
+) -> (Server, mfqat::server::Client, usize) {
     let dims = bench_dims();
     let width = dims.seq_len + 1;
     let (server, client) = Server::start(
@@ -93,10 +105,16 @@ fn start_pool(workers: usize) -> (Server, mfqat::server::Client, usize) {
             policy: Policy::Fixed(ElementFormat::int(8)),
             gather_window: Duration::from_millis(1),
             workers,
+            batching,
+            ..Default::default()
         },
     )
     .unwrap();
     (server, client, width)
+}
+
+fn start_pool(workers: usize) -> (Server, mfqat::server::Client, usize) {
+    start_pool_mode(workers, GenBatching::Continuous)
 }
 
 fn main() {
@@ -219,6 +237,84 @@ fn main() {
         gen_json.set(&fmt.name(), fmt_json);
     }
     summary.set("generate", gen_json);
+
+    // ------------- continuous vs gather batching under Poisson mixed load
+    //
+    // Open-loop arrivals (exponential inter-arrival gaps, deterministic
+    // RNG) of generation requests pinned round-robin across THREE formats.
+    // Gather batching can only group equal-format requests, so mixed
+    // traffic serializes into per-format convoys and queue latency grows;
+    // continuous batching admits every prompt into the in-flight decode at
+    // the next step, whatever format its neighbours run.
+    let mix = [
+        ElementFormat::int(8),
+        ElementFormat::int(6),
+        ElementFormat::int(4),
+    ];
+    let cb_requests = 24usize;
+    let cb_tokens = 16usize;
+    let mean_gap_ms = 3.0f64;
+    let mut cb_json = Json::obj();
+    let mut cb_p50: Vec<(&'static str, f64)> = Vec::new();
+    for batching in [GenBatching::Gather, GenBatching::Continuous] {
+        let (server, client, _) = start_pool_mode(2, batching);
+        // Warm every format in the mix outside the measurement.
+        for fmt in mix {
+            client.score(&rows[0], Some(fmt)).unwrap();
+        }
+        let mut rng = Rng::new(0xC0FFEE);
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(cb_requests);
+        for i in 0..cb_requests {
+            rxs.push(
+                client
+                    .submit_generate(
+                        prompts[i % prompts.len()],
+                        cb_tokens,
+                        Some(mix[i % mix.len()]),
+                        cfg.clone(),
+                    )
+                    .unwrap(),
+            );
+            let gap_ms = -(rng.f64().max(1e-9)).ln() * mean_gap_ms;
+            std::thread::sleep(Duration::from_secs_f64(gap_ms.min(20.0) / 1e3));
+        }
+        let mut lats: Vec<f64> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap().latency.as_secs_f64())
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+        let tps = (cb_requests * cb_tokens) as f64 / wall;
+        let (p50, p99) = quantiles(&mut lats);
+        println!(
+            "continuous_batching/{}: {} mixed-format reqs  {tps:.1} tok/s  \
+             p50 {:.1}ms  p99 {:.1}ms",
+            batching.name(),
+            cb_requests,
+            p50 * 1e3,
+            p99 * 1e3
+        );
+        let mut e = Json::obj();
+        e.set("tok_per_s", Json::from(tps));
+        e.set("p50_ms", Json::from(p50 * 1e3));
+        e.set("p99_ms", Json::from(p99 * 1e3));
+        cb_json.set(batching.name(), e);
+        cb_p50.push((batching.name(), p50));
+        drop(client);
+        server.shutdown();
+    }
+    if let (Some((_, gather_p50)), Some((_, cont_p50))) = (
+        cb_p50.iter().find(|(m, _)| *m == "gather"),
+        cb_p50.iter().find(|(m, _)| *m == "continuous"),
+    ) {
+        // > 1.0 ⇒ continuous batching cut the p50 request latency under
+        // sustained mixed-format generation load.
+        cb_json.set(
+            "p50_speedup_continuous_vs_gather",
+            Json::from(gather_p50 / cont_p50),
+        );
+    }
+    summary.set("continuous_batching", cb_json);
 
     // ------------------------------ raw batched decode (no server) by rows
     let manifest = dims.to_manifest();

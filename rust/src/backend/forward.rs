@@ -51,6 +51,7 @@ pub enum ActMode {
 }
 
 impl ActMode {
+    /// Parse `f32` / `int8` (plus aliases) into an activation mode.
     pub fn parse(s: &str) -> Result<ActMode> {
         match s.trim().to_ascii_lowercase().as_str() {
             "f32" | "fp32" | "exact" => Ok(ActMode::F32),
@@ -59,6 +60,7 @@ impl ActMode {
         }
     }
 
+    /// Stable identifier (`"f32"` / `"int8"`) for logs and CLI output.
     pub fn name(&self) -> &'static str {
         match self {
             ActMode::F32 => "f32",
@@ -83,6 +85,7 @@ pub enum Mat {
 }
 
 impl Mat {
+    /// Input features (the reduction dimension).
     pub fn in_features(&self) -> usize {
         match self {
             Mat::Packed(t) => t.in_f,
@@ -90,6 +93,7 @@ impl Mat {
         }
     }
 
+    /// Output features.
     pub fn out_features(&self) -> usize {
         match self {
             Mat::Packed(t) => t.out_f,
@@ -123,16 +127,22 @@ impl Mat {
 /// One decoder layer's quantized linears.
 #[derive(Debug, Clone)]
 pub struct LayerWeights {
+    /// Fused QKV projection `[d_model, 3*d_model]`.
     pub qkv: Mat,
+    /// Attention output projection `[d_model, d_model]`.
     pub proj: Mat,
+    /// MLP up projection `[d_model, d_ff]`.
     pub up: Mat,
+    /// MLP down projection `[d_ff, d_model]`.
     pub down: Mat,
 }
 
 /// Per-layer RMSNorm gains.
 #[derive(Debug, Clone)]
 pub struct LayerNorms {
+    /// Pre-attention RMSNorm gain.
     pub ln1: Vec<f32>,
+    /// Pre-MLP RMSNorm gain.
     pub ln2: Vec<f32>,
 }
 
@@ -142,10 +152,15 @@ pub struct LayerNorms {
 /// packed planes.
 #[derive(Debug)]
 pub struct SharedParams {
+    /// Token embedding table `[vocab, d_model]`.
     pub emb: Vec<f32>,
+    /// Learned positional table `[seq_len, d_model]`.
     pub pos: Vec<f32>,
+    /// Per-layer RMSNorm gains.
     pub norms: Vec<LayerNorms>,
+    /// Final RMSNorm gain.
     pub lnf: Vec<f32>,
+    /// LM head `[d_model, vocab]`, kept dense f32.
     pub head: Mat,
 }
 
@@ -188,12 +203,15 @@ impl SharedParams {
 /// dense-oracle) linears plus the `Arc`-shared unquantized parameters.
 #[derive(Debug, Clone)]
 pub struct NativeWeights {
+    /// Model dimensions this weight set serves.
     pub dims: ModelDims,
     /// Element format of the quantized linears (`None` = dense f32 oracle).
     pub fmt: Option<ElementFormat>,
     /// Activation handling for the packed linears.
     pub act: ActMode,
+    /// The `Arc`-shared unquantized f32 parameter set.
     pub shared: Arc<SharedParams>,
+    /// Per-layer quantized linears.
     pub layers: Vec<LayerWeights>,
 }
 
@@ -471,6 +489,26 @@ pub fn score_rows(w: &NativeWeights, tokens: &[i32], rows: usize) -> Result<Vec<
 // KV-cached incremental decode (generation hot path).
 // --------------------------------------------------------------------------
 
+/// The weight-set identity a continuous-batching row was admitted with:
+/// the row's element format (`None` = dense f32 oracle) and activation
+/// pipeline. [`forward_cached_batch_mixed`] checks every fed row's weights
+/// against its tag, so a scheduler bug that decodes a row against the wrong
+/// format's planes fails loudly instead of silently corrupting tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowTag {
+    /// Element format of the row's packed linears (`None` = dense oracle).
+    pub fmt: Option<ElementFormat>,
+    /// Activation pipeline the row's weight set was built with.
+    pub act: ActMode,
+}
+
+impl RowTag {
+    /// The tag describing a given weight set.
+    pub fn of(w: &NativeWeights) -> RowTag {
+        RowTag { fmt: w.fmt, act: w.act }
+    }
+}
+
 /// Per-layer key/value cache for `rows ≥ 1` sequences decoding in lockstep.
 ///
 /// Holds `[n_layers, rows, capacity, d_model]` keys and values with a
@@ -481,6 +519,16 @@ pub fn score_rows(w: &NativeWeights, tokens: &[i32], rows: usize) -> Result<Vec<
 /// one `rows`-row pass over the weights instead of `rows` separate passes.
 /// [`KvCache::new`] builds the single-sequence (`rows = 1`) cache that
 /// [`forward_cached`] and the benches consume.
+///
+/// # Row lifecycle (continuous batching)
+///
+/// A cache built with [`KvCache::with_slots`] starts with every row
+/// **free**; the continuous-batching scheduler admits a sequence with
+/// [`KvCache::join_row`] (which claims the lowest free slot and records the
+/// row's [`RowTag`]), and releases it with [`KvCache::retire_row`] when the
+/// sequence completes or is cancelled — the slot is immediately reusable by
+/// the next join. [`KvCache::with_rows`] keeps the pre-lifecycle behaviour
+/// (all rows occupied, untagged) for fixed-membership batches.
 #[derive(Debug, Clone)]
 pub struct KvCache {
     n_layers: usize,
@@ -488,6 +536,11 @@ pub struct KvCache {
     capacity: usize,
     rows: usize,
     lens: Vec<usize>,
+    /// Slot occupancy: `false` rows are free for [`Self::join_row`] and must
+    /// not receive tokens.
+    occupied: Vec<bool>,
+    /// Per-row weight-set tag (`None` on untagged legacy rows).
+    tags: Vec<Option<RowTag>>,
     k: Vec<f32>,
     v: Vec<f32>,
 }
@@ -499,8 +552,18 @@ impl KvCache {
         KvCache::with_rows(dims, 1)
     }
 
-    /// Empty cache for `rows` step-synchronized sequences.
+    /// Empty cache for `rows` step-synchronized sequences, all occupied and
+    /// untagged (fixed-membership batches; use [`Self::with_slots`] for the
+    /// continuous-batching lifecycle).
     pub fn with_rows(dims: &ModelDims, rows: usize) -> KvCache {
+        let mut c = KvCache::with_slots(dims, rows);
+        c.occupied.fill(true);
+        c
+    }
+
+    /// Empty cache with `rows` **free** slots: sequences enter via
+    /// [`Self::join_row`] and leave via [`Self::retire_row`].
+    pub fn with_slots(dims: &ModelDims, rows: usize) -> KvCache {
         assert!(rows >= 1, "KV cache wants at least one sequence row");
         let n = dims.n_layers * rows * dims.seq_len * dims.d_model;
         KvCache {
@@ -509,6 +572,8 @@ impl KvCache {
             capacity: dims.seq_len,
             rows,
             lens: vec![0; rows],
+            occupied: vec![false; rows],
+            tags: vec![None; rows],
             k: vec![0.0; n],
             v: vec![0.0; n],
         }
@@ -517,6 +582,48 @@ impl KvCache {
     /// Sequence rows this cache tracks.
     pub fn rows(&self) -> usize {
         self.rows
+    }
+
+    /// Claim the lowest free slot for a joining sequence: marks it occupied
+    /// at length 0 and records `tag` as the weight set it must be decoded
+    /// with. Errors when every slot is occupied.
+    pub fn join_row(&mut self, tag: RowTag) -> Result<usize> {
+        let Some(r) = self.occupied.iter().position(|&o| !o) else {
+            bail!("KV cache has no free slot ({} rows all occupied)", self.rows);
+        };
+        self.occupied[r] = true;
+        self.tags[r] = Some(tag);
+        self.lens[r] = 0;
+        Ok(r)
+    }
+
+    /// Release slot `r` (sequence finished or cancelled): the slot becomes
+    /// free for the next [`Self::join_row`], its tag and length cleared.
+    pub fn retire_row(&mut self, r: usize) {
+        self.occupied[r] = false;
+        self.tags[r] = None;
+        self.lens[r] = 0;
+    }
+
+    /// Whether slot `r` currently holds a sequence.
+    pub fn is_row_occupied(&self, r: usize) -> bool {
+        self.occupied[r]
+    }
+
+    /// Free slots available to [`Self::join_row`].
+    pub fn free_rows(&self) -> usize {
+        self.occupied.iter().filter(|&&o| !o).count()
+    }
+
+    /// Slots currently holding sequences.
+    pub fn occupied_rows(&self) -> usize {
+        self.rows - self.free_rows()
+    }
+
+    /// The weight-set tag slot `r` was admitted with (`None` on free or
+    /// untagged legacy rows).
+    pub fn row_tag(&self, r: usize) -> Option<RowTag> {
+        self.tags[r]
     }
 
     /// Filled positions of sequence row `r`.
@@ -529,6 +636,7 @@ impl KvCache {
         self.lens[0]
     }
 
+    /// Whether no row holds any cached positions.
     pub fn is_empty(&self) -> bool {
         self.lens.iter().all(|&l| l == 0)
     }
@@ -585,11 +693,14 @@ pub fn forward_cached(w: &NativeWeights, cache: &mut KvCache, tokens: &[i32]) ->
     forward_cached_batch(w, cache, &[tokens])
 }
 
-/// Batched KV-cached forward: `tokens[r]` holds sequence row `r`'s new
-/// positions — ragged counts welcome, including empty rows (skipped this
-/// step, e.g. finished sequences while their neighbours keep decoding).
-/// Returns flat logits for the new positions, concatenated in row order
-/// (`[Σ tokens[r].len(), vocab]`), and advances each row's cache length.
+/// Batched KV-cached forward where every row shares one weight set (the
+/// uniform-format fast path; thin wrapper over
+/// [`forward_cached_batch_mixed`]). `tokens[r]` holds sequence row `r`'s
+/// new positions — ragged counts welcome, including empty rows (skipped
+/// this step, e.g. finished sequences while their neighbours keep
+/// decoding). Returns flat logits for the new positions, concatenated in
+/// row order (`[Σ tokens[r].len(), vocab]`), and advances each row's cache
+/// length.
 ///
 /// Every per-row computation — activation quantization, GEMM accumulation,
 /// attention over the row's own prefix — is row-independent, so the
@@ -601,7 +712,35 @@ pub fn forward_cached_batch(
     cache: &mut KvCache,
     tokens: &[&[i32]],
 ) -> Result<Vec<f32>> {
-    let dims = &w.dims;
+    let ws: Vec<&NativeWeights> = vec![w; tokens.len()];
+    forward_cached_batch_mixed(&ws, cache, tokens)
+}
+
+/// Batched KV-cached forward with **per-row weight sets**: row `r` decodes
+/// against `ws[r]` — its own element format and activation pipeline — while
+/// the whole batch still runs as one step-synchronized pass. This is the
+/// elastic-inference step the paper motivates: rows at MXINT8, MXINT4 and
+/// MXFP8 coexist in a single decode step, sharing the embedding lookup,
+/// norms, attention machinery and LM head (the unquantized parameters are
+/// one `Arc`'d [`SharedParams`] — all `ws` must point at the same set), and
+/// dispatching each linear per **contiguous run of rows with the same
+/// weight set** (a uniform batch therefore takes exactly one GEMM call per
+/// linear, same as [`forward_cached_batch`]).
+///
+/// Per-row outputs stay **bit-identical** to decoding that row alone in its
+/// own format: GEMM accumulation, activation quantization and attention are
+/// all row-independent, so splitting the linears by format changes which
+/// rows share a call but never a row's own arithmetic (enforced across
+/// formats and mid-flight joins by `rust/tests/batched_decode.rs`).
+///
+/// Rows with non-empty `tokens` must be occupied in `cache`, and — when the
+/// row was admitted via [`KvCache::join_row`] — `ws[r]` must match the
+/// row's [`RowTag`]; the entries of empty rows are ignored.
+pub fn forward_cached_batch_mixed(
+    ws: &[&NativeWeights],
+    cache: &mut KvCache,
+    tokens: &[&[i32]],
+) -> Result<Vec<f32>> {
     if tokens.len() != cache.rows {
         bail!(
             "cache tracks {} sequence rows, got {} token rows",
@@ -609,17 +748,62 @@ pub fn forward_cached_batch(
             tokens.len()
         );
     }
+    if ws.len() != tokens.len() {
+        bail!(
+            "need one weight set per row: got {} weight sets for {} rows",
+            ws.len(),
+            tokens.len()
+        );
+    }
+    let total: usize = tokens.iter().map(|t| t.len()).sum();
+    if total == 0 {
+        bail!("forward_cached_batch wants at least one new token across the batch");
+    }
+    // The first fed row anchors the model dims and the shared f32 set;
+    // every other fed row must agree on both.
+    let first = tokens
+        .iter()
+        .position(|t| !t.is_empty())
+        .expect("total > 0 implies a non-empty row");
+    let dims = &ws[first].dims;
     if cache.n_layers != dims.n_layers
         || cache.d_model != dims.d_model
         || cache.capacity != dims.seq_len
     {
         bail!("KV cache was built for different model dims");
     }
-    let total: usize = tokens.iter().map(|t| t.len()).sum();
-    if total == 0 {
-        bail!("forward_cached_batch wants at least one new token across the batch");
-    }
     for (r, row) in tokens.iter().enumerate() {
+        if row.is_empty() {
+            continue;
+        }
+        if !cache.occupied[r] {
+            bail!("row {r} is retired/free; join it before feeding tokens");
+        }
+        if let Some(tag) = cache.tags[r] {
+            if tag != RowTag::of(ws[r]) {
+                bail!(
+                    "row {r} was admitted as {:?} but is being decoded with {:?}",
+                    tag,
+                    RowTag::of(ws[r])
+                );
+            }
+        }
+        if !Arc::ptr_eq(&ws[r].shared, &ws[first].shared) {
+            bail!(
+                "row {r}'s weight set does not share the batch's unquantized f32 parameters \
+                 (mixed-format rows must come from one anchor's SharedParams)"
+            );
+        }
+        let wd = &ws[r].dims;
+        if wd.n_layers != dims.n_layers
+            || wd.d_model != dims.d_model
+            || wd.seq_len != dims.seq_len
+            || wd.vocab != dims.vocab
+            || wd.d_ff != dims.d_ff
+            || wd.n_heads != dims.n_heads
+        {
+            bail!("row {r}'s weight set was built for different model dims");
+        }
         if cache.lens[r] + row.len() > cache.capacity {
             bail!(
                 "KV cache overflow on row {r}: {} cached + {} new > capacity {}",
@@ -632,13 +816,29 @@ pub fn forward_cached_batch(
     let d = dims.d_model;
     let hd = dims.d_model / dims.n_heads;
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
-    let sh = &w.shared;
+    let sh = &ws[first].shared;
 
     // Row offsets into the flat [total, d] activation matrix.
     let mut offs = Vec::with_capacity(tokens.len() + 1);
     offs.push(0usize);
     for row in tokens {
         offs.push(offs.last().unwrap() + row.len());
+    }
+
+    // Contiguous runs of fed rows sharing one weight set, as
+    // `(representative row, token offset, token count)`: each linear issues
+    // one GEMM per run, so a uniform batch keeps the single-call shape (and
+    // its row-tile amortization) while a mixed batch dispatches each row
+    // group against its own packed planes and activation pipeline.
+    let mut runs: Vec<(usize, usize, usize)> = Vec::new();
+    for (r, row) in tokens.iter().enumerate() {
+        if row.is_empty() {
+            continue;
+        }
+        match runs.last_mut() {
+            Some((wr, _, tn)) if std::ptr::eq(ws[*wr], ws[r]) => *tn += row.len(),
+            _ => runs.push((r, offs[r], row.len())),
+        }
     }
 
     // Token + positional embeddings at each row's absolute positions.
@@ -670,9 +870,17 @@ pub fn forward_cached_batch(
     let mut delta = vec![0.0f32; total * d];
     let mut hidden = vec![0.0f32; total * dims.d_ff];
     let mut probs = vec![0.0f32; max_span];
-    for (l, (layer, norms)) in w.layers.iter().zip(&sh.norms).enumerate() {
+    for (l, norms) in sh.norms.iter().enumerate() {
         kernels::rmsnorm(&x, &norms.ln1, &mut xn);
-        layer.qkv.gemm(&xn, total, &mut qkv, w.act);
+        for &(wr, t0, tn) in &runs {
+            let w = ws[wr];
+            w.layers[l].qkv.gemm(
+                &xn[t0 * d..(t0 + tn) * d],
+                tn,
+                &mut qkv[t0 * 3 * d..(t0 + tn) * 3 * d],
+                w.act,
+            );
+        }
         // Append each row's new K/V at its absolute positions.
         {
             let n = cache.capacity * d;
@@ -730,12 +938,36 @@ pub fn forward_cached_batch(
                 }
             }
         }
-        layer.proj.gemm(&att, total, &mut delta, w.act);
+        for &(wr, t0, tn) in &runs {
+            let w = ws[wr];
+            w.layers[l].proj.gemm(
+                &att[t0 * d..(t0 + tn) * d],
+                tn,
+                &mut delta[t0 * d..(t0 + tn) * d],
+                w.act,
+            );
+        }
         kernels::add_assign(&mut x, &delta);
         kernels::rmsnorm(&x, &norms.ln2, &mut xn);
-        layer.up.gemm(&xn, total, &mut hidden, w.act);
+        for &(wr, t0, tn) in &runs {
+            let w = ws[wr];
+            w.layers[l].up.gemm(
+                &xn[t0 * d..(t0 + tn) * d],
+                tn,
+                &mut hidden[t0 * dims.d_ff..(t0 + tn) * dims.d_ff],
+                w.act,
+            );
+        }
         kernels::gelu_in_place(&mut hidden);
-        layer.down.gemm(&hidden, total, &mut delta, w.act);
+        for &(wr, t0, tn) in &runs {
+            let w = ws[wr];
+            w.layers[l].down.gemm(
+                &hidden[t0 * dims.d_ff..(t0 + tn) * dims.d_ff],
+                tn,
+                &mut delta[t0 * d..(t0 + tn) * d],
+                w.act,
+            );
+        }
         kernels::add_assign(&mut x, &delta);
     }
     for (r, row) in tokens.iter().enumerate() {
@@ -743,7 +975,9 @@ pub fn forward_cached_batch(
     }
     kernels::rmsnorm(&x, &sh.lnf, &mut xn);
     let mut logits = vec![0.0f32; total * dims.vocab];
-    sh.head.gemm(&xn, total, &mut logits, w.act);
+    // The LM head is an unquantized dense f32 matrix shared by every row
+    // (act mode only affects packed linears), so one call serves the batch.
+    sh.head.gemm(&xn, total, &mut logits, ActMode::F32);
     Ok(logits)
 }
 

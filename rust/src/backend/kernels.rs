@@ -44,9 +44,13 @@
 //! by `rust/tests/native_backend.rs`.
 //!
 //! Threading: std scoped threads over contiguous row tiles
-//! ([`par_chunks_mut`]); `MFQAT_THREADS` pins the worker count (benches,
-//! reproducibility). `MFQAT_SIMD=off` pins the integer-MAC tile kernels to
-//! the portable loop (differential runs, bisecting) — see [`super::simd`].
+//! ([`par_chunks_mut`]); activation rows everywhere in this module are the
+//! *flattened token positions* of whatever batch the forward assembled —
+//! one sequence, a fixed batch, or a continuously batched mixed-format
+//! step — and every kernel treats them independently, which is what makes
+//! batched decode bit-identical per sequence. The `MFQAT_THREADS` /
+//! `MFQAT_SIMD` environment knobs are documented once, in
+//! [`crate::util::cli`] (runtime configuration surface).
 
 use super::repack::RepackedMx;
 use super::simd;
@@ -125,6 +129,7 @@ pub struct ActPlane {
     pub codes: Vec<i8>,
     /// `[rows, kblocks]` shared-scale exponents.
     pub exps: Vec<i8>,
+    /// Scale blocks along the reduction dimension (`ceil(in_f / bs)`).
     pub kblocks: usize,
 }
 
@@ -133,6 +138,13 @@ pub struct ActPlane {
 /// block max lands in `[64, 128)` before rounding (≈7.5 significant bits);
 /// values that are already `int · 2^e` with magnitude ≤ 127 round-trip
 /// exactly.
+///
+/// `rows` are flattened token positions, not sequences: a KV-batched (or
+/// continuously batched, mixed-format) decode step hands this function the
+/// concatenated new positions of *all* its sequence rows, and because each
+/// row quantizes independently the result is bit-identical to quantizing
+/// each sequence's positions alone — the property the batched-decode
+/// exactness tests lean on.
 ///
 /// Edge blocks always yield a *valid* E8M0 scale — one whose `2^e` and
 /// `2^{-e}` are both finite f32 — so no downstream `exp2i` can overflow or

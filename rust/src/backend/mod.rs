@@ -34,8 +34,8 @@ pub mod simd;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use forward::{ActMode, KvCache, LayerWeights, Mat, NativeWeights, SharedParams};
-pub use native::NativeBackend;
+pub use forward::{ActMode, KvCache, LayerWeights, Mat, NativeWeights, RowTag, SharedParams};
+pub use native::{NativeBackend, NativeDecodeSession};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use repack::RepackedMx;
@@ -104,4 +104,49 @@ pub trait Backend: Send + Sync {
         let _ = (prompts, fmt, n_tokens, cfg);
         anyhow::bail!("backend '{}' has no batched generation surface", self.name())
     }
+
+    /// Open a continuous-batching decode session with `slots` sequence
+    /// rows. The session admits prompts *per row, at any step, each with
+    /// its own element format* ([`DecodeSession::join`]) and advances all
+    /// live rows one token per [`DecodeSession::step`] — the serving
+    /// runtime's generate lane drives one of these per worker. Backends
+    /// without an incremental-decode surface return an error (the server
+    /// then falls back to gather batching).
+    fn decode_session(&self, slots: usize) -> Result<Box<dyn DecodeSession + '_>> {
+        let _ = slots;
+        anyhow::bail!("backend '{}' has no continuous-decode surface", self.name())
+    }
+}
+
+/// A continuously batched decode in flight: per-row sequences that join,
+/// step and finish independently while sharing every step-synchronized
+/// forward pass. Rows may run **different element formats** in the same
+/// step; each row's tokens are identical to a solo [`Backend::generate`]
+/// call at that row's format (see
+/// [`crate::eval::generate::ContinuousBatch`], the native implementation).
+pub trait DecodeSession {
+    /// Total sequence rows (live + free).
+    fn capacity(&self) -> usize;
+
+    /// Rows currently decoding.
+    fn active(&self) -> usize;
+
+    /// Admit a prompt at `fmt` into a free row (prefill happens on the
+    /// next [`Self::step`]); returns the claimed slot index, or an error
+    /// when every row is live or the format cannot be derived.
+    fn join(
+        &mut self,
+        prompt: &str,
+        fmt: ElementFormat,
+        n_tokens: usize,
+        cfg: &crate::eval::generate::SampleCfg,
+    ) -> Result<usize>;
+
+    /// Cancel the sequence in `slot` without a result; the row frees
+    /// immediately and surviving rows are unaffected.
+    fn cancel(&mut self, slot: usize) -> Result<()>;
+
+    /// Advance every live row by one step-synchronized pass; returns the
+    /// rows that completed (their slots are free for the next join).
+    fn step(&mut self) -> Result<Vec<crate::eval::generate::FinishedRow>>;
 }

@@ -7,10 +7,10 @@
 //! cache budget is charged accordingly ([`NativeWeights::packed_bytes`]).
 
 use super::forward::{self, ActMode, KvCache, NativeWeights, SharedParams};
-use super::Backend;
+use super::{Backend, DecodeSession};
 use crate::checkpoint::Checkpoint;
 use crate::coordinator::format_cache::{CacheStats, FormatCache};
-use crate::eval::generate::SampleCfg;
+use crate::eval::generate::{ContinuousBatch, FinishedRow, SampleCfg};
 use crate::formats::ElementFormat;
 use crate::model::ModelDims;
 use anyhow::{anyhow, Result};
@@ -18,6 +18,27 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 /// Native packed-MX inference engine.
+///
+/// One anchor checkpoint serves every target format; scoring windows are
+/// `seq_len + 1` tokens wide:
+///
+/// ```
+/// use mfqat::backend::{Backend, NativeBackend};
+/// use mfqat::formats::ElementFormat;
+/// use mfqat::model::{ModelDims, ParamSet};
+///
+/// let mut dims = ModelDims::new("doc", 64, 32, 2, 2, 16);
+/// dims.train_batch = 2;
+/// let manifest = dims.to_manifest();
+/// let ck = ParamSet::init(&manifest, 1)
+///     .to_anchor_checkpoint(&manifest, ElementFormat::int(8))
+///     .unwrap();
+/// let be = NativeBackend::new(dims, ck, 64 << 20).unwrap();
+/// let tokens: Vec<i32> = (0..2 * 17).map(|i| i % 64).collect();
+/// let nll = be.score_batch(&tokens, ElementFormat::int(4)).unwrap();
+/// assert_eq!(nll.len(), 2);
+/// assert!(nll.iter().all(|v| v.is_finite()));
+/// ```
 pub struct NativeBackend {
     dims: ModelDims,
     anchor: Checkpoint,
@@ -142,6 +163,58 @@ impl NativeBackend {
         let w = self.weights(fmt)?;
         crate::eval::generate::generate_native_batch(&w, prompts, n_tokens, cfg)
     }
+
+    /// Open a continuous-batching decode session over `slots` KV rows.
+    /// Joined rows pull their weight sets from this backend's `FormatCache`
+    /// (so every format in the session shares one `Arc`'d f32 parameter
+    /// set), letting rows of *different* formats decode in one
+    /// step-synchronized pass.
+    pub fn decode_session(&self, slots: usize) -> Result<NativeDecodeSession<'_>> {
+        if slots == 0 {
+            anyhow::bail!("a decode session wants at least one slot");
+        }
+        Ok(NativeDecodeSession {
+            backend: self,
+            inner: ContinuousBatch::new(&self.dims, slots),
+        })
+    }
+}
+
+/// [`DecodeSession`] over the native backend: a
+/// [`ContinuousBatch`] whose per-row weight sets resolve through the
+/// backend's format cache at join time.
+pub struct NativeDecodeSession<'a> {
+    backend: &'a NativeBackend,
+    inner: ContinuousBatch<Arc<NativeWeights>>,
+}
+
+impl DecodeSession for NativeDecodeSession<'_> {
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn active(&self) -> usize {
+        self.inner.active()
+    }
+
+    fn join(
+        &mut self,
+        prompt: &str,
+        fmt: ElementFormat,
+        n_tokens: usize,
+        cfg: &SampleCfg,
+    ) -> Result<usize> {
+        let w = self.backend.weights(fmt)?;
+        self.inner.join(w, prompt, n_tokens, cfg)
+    }
+
+    fn cancel(&mut self, slot: usize) -> Result<()> {
+        self.inner.retire(slot)
+    }
+
+    fn step(&mut self) -> Result<Vec<FinishedRow>> {
+        self.inner.step()
+    }
 }
 
 impl Backend for NativeBackend {
@@ -200,6 +273,10 @@ impl Backend for NativeBackend {
         cfg: &SampleCfg,
     ) -> Result<Vec<String>> {
         NativeBackend::generate_batch(self, prompts, fmt, n_tokens, cfg)
+    }
+
+    fn decode_session(&self, slots: usize) -> Result<Box<dyn DecodeSession + '_>> {
+        Ok(Box::new(NativeBackend::decode_session(self, slots)?))
     }
 }
 

@@ -26,9 +26,13 @@ use std::sync::{Arc, Mutex};
 
 /// PJRT-backed engine over one artifact directory + anchor checkpoint.
 pub struct PjrtBackend {
+    /// PJRT runtime (client + compiled executables).
     pub rt: Runtime,
+    /// Loaded AOT artifact set.
     pub arts: ArtifactSet,
+    /// Anchor checkpoint every served format derives from.
     pub anchor: Checkpoint,
+    /// Precision the anchor checkpoint stores.
     pub anchor_fmt: ElementFormat,
     dims: ModelDims,
     cache: Mutex<FormatCache<ParamLiterals>>,

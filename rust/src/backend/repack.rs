@@ -30,9 +30,13 @@ use crate::tensor::MxTensor;
 /// A 2-D packed MX weight `[in_f, out_f]` in block-major serving layout.
 #[derive(Debug, Clone)]
 pub struct RepackedMx {
+    /// Element format of the packed codes.
     pub elem: ElementFormat,
+    /// MX scaling block size (codes per shared scale).
     pub block_size: usize,
+    /// Input features (the reduction dimension).
     pub in_f: usize,
+    /// Output features.
     pub out_f: usize,
     /// Block-major code planes (see module docs).
     codes: Vec<u8>,

@@ -19,9 +19,14 @@
 //!   the same products is exact).
 //!
 //! Dispatch is per-call ([`tile_mac_i16`] / [`tile_mac_i32`]) against a
-//! once-per-process [`SimdLevel`]; `MFQAT_SIMD=off` forces the portable
-//! path (the forced-fallback leg of CI's differential run), documented
-//! alongside `MFQAT_THREADS` in [`super::kernels`].
+//! once-per-process [`SimdLevel`]. The tiles these kernels chew arrive
+//! from any GEMM the forward issues — full-sequence scoring, `rows ≥ 1`
+//! KV-batched decode, or a mixed-format continuous-batching step (where
+//! one step dispatches several per-format GEMMs); the kernels are
+//! oblivious to batching shape, seeing only `[rows, k]` tiles.
+//! `MFQAT_SIMD=off` forces the portable path (the forced-fallback leg of
+//! CI's differential run); the env-var surface is documented once in
+//! [`crate::util::cli`].
 
 use std::sync::OnceLock;
 
@@ -37,6 +42,7 @@ pub enum SimdLevel {
 }
 
 impl SimdLevel {
+    /// Stable identifier (`"portable"` / `"avx2"` / `"neon"`) for logs and bench JSON.
     pub fn name(&self) -> &'static str {
         match self {
             SimdLevel::Portable => "portable",

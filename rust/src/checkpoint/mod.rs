@@ -40,32 +40,41 @@ const VERSION: u16 = 1;
 /// (high-precision parameters), and metadata.
 #[derive(Debug, Clone, Default)]
 pub struct Checkpoint {
+    /// Free-form metadata (anchor format, provenance, training plan).
     pub meta: BTreeMap<String, Json>,
+    /// Quantized MX tensors by parameter name.
     pub tensors: BTreeMap<String, MxTensor>,
+    /// Raw f32 tensors by parameter name (unquantized parameters; master checkpoints store everything here).
     pub raw: BTreeMap<String, Tensor>,
 }
 
 impl Checkpoint {
+    /// Empty checkpoint.
     pub fn new() -> Checkpoint {
         Checkpoint::default()
     }
 
+    /// Insert a quantized MX tensor under `name`.
     pub fn insert(&mut self, name: &str, tensor: MxTensor) {
         self.tensors.insert(name.to_string(), tensor);
     }
 
+    /// Insert a raw f32 tensor under `name`.
     pub fn insert_raw(&mut self, name: &str, tensor: Tensor) {
         self.raw.insert(name.to_string(), tensor);
     }
 
+    /// Look up a quantized tensor by name.
     pub fn get(&self, name: &str) -> Option<&MxTensor> {
         self.tensors.get(name)
     }
 
+    /// Look up a raw f32 tensor by name.
     pub fn get_raw(&self, name: &str) -> Option<&Tensor> {
         self.raw.get(name)
     }
 
+    /// Set a metadata entry.
     pub fn set_meta(&mut self, key: &str, value: Json) {
         self.meta.insert(key.to_string(), value);
     }

@@ -24,10 +24,15 @@ use std::sync::Arc;
 /// metrics and the engine API).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from the cache.
     pub hits: u64,
+    /// Lookups that required deriving a new weight set.
     pub misses: u64,
+    /// Entries evicted to fit the byte budget.
     pub evictions: u64,
+    /// Entries currently resident.
     pub entries: usize,
+    /// Bytes currently charged against the budget.
     pub used_bytes: usize,
 }
 
@@ -49,6 +54,7 @@ struct Entry<T> {
 }
 
 impl<T> FormatCache<T> {
+    /// Empty cache with the given byte budget.
     pub fn new(budget_bytes: usize) -> FormatCache<T> {
         FormatCache {
             budget: budget_bytes,
@@ -61,6 +67,7 @@ impl<T> FormatCache<T> {
         }
     }
 
+    /// Look up the cached weight set for `fmt` (counted as a hit or miss).
     pub fn get(&mut self, fmt: ElementFormat) -> Option<Arc<T>> {
         self.clock += 1;
         let clock = self.clock;
@@ -77,6 +84,7 @@ impl<T> FormatCache<T> {
         }
     }
 
+    /// Insert a weight set for `fmt`, charged at `bytes`; evicts least-recently-used entries until the budget fits.
     pub fn put(&mut self, fmt: ElementFormat, weights: Arc<T>, bytes: usize) {
         self.clock += 1;
         if let Some(old) = self.entries.remove(&fmt) {
@@ -108,26 +116,32 @@ impl<T> FormatCache<T> {
         );
     }
 
+    /// Resident entry count.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// Bytes currently resident.
     pub fn used_bytes(&self) -> usize {
         self.used
     }
 
+    /// Cumulative cache hits.
     pub fn hits(&self) -> u64 {
         self.hits
     }
 
+    /// Cumulative cache misses (= derivations performed).
     pub fn misses(&self) -> u64 {
         self.misses
     }
 
+    /// Cumulative evictions.
     pub fn evictions(&self) -> u64 {
         self.evictions
     }

@@ -153,6 +153,18 @@ impl ElasticEngine {
         self.backend.generate_batch(prompts, fmt, n_tokens, cfg)
     }
 
+    /// Open a continuous-batching decode session with `slots` sequence
+    /// rows (native backend): prompts join per-row with their own formats
+    /// and budgets, and every [`crate::backend::DecodeSession::step`]
+    /// advances all live rows in one mixed-format pass. Backends without
+    /// an incremental-decode surface return an error.
+    pub fn decode_session(
+        &self,
+        slots: usize,
+    ) -> Result<Box<dyn crate::backend::DecodeSession + '_>> {
+        self.backend.decode_session(slots)
+    }
+
     /// Weight-cache counters.
     pub fn cache_stats(&self) -> CacheStats {
         self.backend.cache_stats()

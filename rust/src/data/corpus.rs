@@ -21,11 +21,15 @@ use crate::util::Rng;
 /// Corpus generation parameters.
 #[derive(Debug, Clone)]
 pub struct CorpusConfig {
+    /// Base seed for the deterministic corpus generator.
     pub seed: u64,
     /// Window width in tokens, typically `seq_len + 1`.
     pub width: usize,
+    /// Sequences in the pretraining split.
     pub pretrain_sequences: usize,
+    /// Sequences in the QAT/finetune split (the paper uses 128).
     pub qat_sequences: usize,
+    /// Held-out validation sequences (the perplexity metric).
     pub val_sequences: usize,
 }
 
@@ -44,19 +48,25 @@ impl Default for CorpusConfig {
 /// One fact: `the <attr> of <entity> is <value>`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Fact {
+    /// Entity name (subject of the fact).
     pub entity: String,
+    /// Attribute name.
     pub attr: String,
+    /// Attribute value.
     pub value: String,
 }
 
 /// One chart record with named series and integer values.
 #[derive(Debug, Clone)]
 pub struct Chart {
+    /// Series labels, one char each.
     pub names: Vec<char>,
+    /// Series values, aligned with `names`.
     pub values: Vec<u8>,
 }
 
 impl Chart {
+    /// Render as the `chart : a 3 , b 7 ...` text the corpus embeds.
     pub fn text(&self) -> String {
         let body: Vec<String> = self
             .names
@@ -67,6 +77,7 @@ impl Chart {
         format!("chart : {}", body.join(" , "))
     }
 
+    /// Label of the largest value.
     pub fn argmax(&self) -> char {
         let i = self
             .values
@@ -78,6 +89,7 @@ impl Chart {
         self.names[i]
     }
 
+    /// Label of the smallest value.
     pub fn argmin(&self) -> char {
         let i = self
             .values
@@ -93,12 +105,19 @@ impl Chart {
 /// The generated corpus: token splits + the symbol tables the tasks reuse.
 #[derive(Debug, Clone)]
 pub struct Corpus {
+    /// Parameters the corpus was generated with.
     pub config: CorpusConfig,
+    /// Pretraining split (token windows).
     pub pretrain: Vec<Vec<i32>>,
+    /// QAT/finetune split.
     pub qat: Vec<Vec<i32>>,
+    /// Held-out validation split.
     pub val: Vec<Vec<i32>>,
+    /// Fact table the corpus text was built from.
     pub facts: Vec<Fact>,
+    /// Attribute -> value-set table (distractor sampling).
     pub attr_values: Vec<(String, Vec<String>)>,
+    /// Filler vocabulary words.
     pub words: Vec<String>,
 }
 

@@ -21,23 +21,30 @@ use crate::util::Rng;
 /// texts are appended to the prompt for scoring.
 #[derive(Debug, Clone)]
 pub struct McItem {
+    /// Prompt text shared by all choices.
     pub prompt: String,
+    /// Choice texts (appended to the prompt for scoring).
     pub choices: Vec<String>,
+    /// Index of the correct choice.
     pub answer: usize,
 }
 
 /// A named task = a list of items.
 #[derive(Debug, Clone)]
 pub struct Task {
+    /// Task name (reported in tables).
     pub name: String,
+    /// The task's items.
     pub items: Vec<McItem>,
 }
 
 impl Task {
+    /// Item count.
     pub fn len(&self) -> usize {
         self.items.len()
     }
 
+    /// Whether the task has no items.
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }

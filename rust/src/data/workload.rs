@@ -9,6 +9,7 @@ use crate::util::Rng;
 /// One request arrival, seconds from trace start.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Arrival {
+    /// Arrival time, seconds from trace start.
     pub at_s: f64,
     /// Index into the request corpus (which sequence to score).
     pub item: usize,

@@ -2,25 +2,35 @@
 //!
 //! Two execution paths share one sampler ([`sample`] / [`SampleCfg`]):
 //!
-//! * [`generate_native_batch`] — the serving path: `rows` prompts prefill
-//!   their (ragged) trailing windows through one batched KV cache, then
-//!   every sequence decodes one token per step-synchronized pass
-//!   ([`crate::backend::forward::forward_cached_batch`]); per-step cost is
-//!   one `rows`-row pass over the packed weights plus attention over each
-//!   row's own cached prefix — no full-window recompute, and the weight
-//!   planes stream once per step for the whole batch. When a row's context
+//! * [`ContinuousBatch`] — the serving path's decode state machine: each
+//!   **slot** holds one sequence with its *own* weight set (element format
+//!   + activation mode), sampler RNG, sampling config and token budget.
+//!   Sequences [`ContinuousBatch::join`] at any step (prefill-on-join: the
+//!   new row's prompt window rides the next step-synchronized pass while
+//!   its neighbours decode single tokens), finish independently, and free
+//!   their slot for immediate reuse. Every step is one
+//!   [`crate::backend::forward::forward_cached_batch_mixed`] call, so rows
+//!   of *different formats* coexist in a single pass. When a row's context
 //!   outgrows `seq_len` only that row re-prefills from its trailing half
-//!   window (amortized O(1) prefills per emitted token); each row carries
-//!   its own sampler RNG, so the batch is **token-identical** to `rows`
-//!   independent [`generate_native`] calls (which is itself the `rows = 1`
-//!   wrapper).
+//!   window (amortized O(1) prefills per emitted token). Because every
+//!   per-row computation is row-independent, each row's continuation is
+//!   **token-identical** to a solo [`generate_native`] call in that row's
+//!   format, no matter what joined, finished or was retired around it
+//!   (enforced by `rust/tests/batched_decode.rs`).
+//! * [`generate_native_batch`] / [`generate_native`] — fixed-membership
+//!   wrappers over [`ContinuousBatch`]: join all prompts up front, step to
+//!   completion.
 //! * [`generate`] (feature `pjrt`) — the AOT `forward_b1` graph with
 //!   full-sequence recompute per emitted token (quality/debug surface for
 //!   the compiled path).
 
+use crate::backend::forward::{forward_cached_batch_mixed, KvCache, RowTag};
+use crate::backend::NativeWeights;
 use crate::data::{decode, encode, PAD};
+use crate::model::ModelDims;
 use crate::util::Rng;
 use anyhow::Result;
+use std::ops::Deref;
 
 #[cfg(feature = "pjrt")]
 use crate::eval::ParamLiterals;
@@ -37,6 +47,7 @@ pub struct SampleCfg {
     pub temperature: f32,
     /// 0 ⇒ no top-k truncation.
     pub top_k: usize,
+    /// Sampler RNG seed (each row's stream starts at this seed).
     pub seed: u64,
 }
 
@@ -64,14 +75,16 @@ pub fn generate_native(
 }
 
 /// Generate `n_tokens` continuation tokens for each of `prompts.len()`
-/// prompts in one step-synchronized batched decode.
+/// prompts in one step-synchronized batched decode (fixed-membership
+/// wrapper over [`ContinuousBatch`]: all rows join up front and share one
+/// weight set; the batch steps until every row finishes).
 ///
 /// Every row carries its own sampler RNG (seeded `cfg.seed`, exactly as an
 /// independent call would be) and its own re-prefill window, and every
-/// per-row computation in [`forward_cached_batch`] is row-independent — so
-/// the output is **token-identical** to calling [`generate_native`] once
-/// per prompt, while the packed weight planes stream once per decode step
-/// for the whole batch instead of once per sequence. When one row's window
+/// per-row computation in the batched forward is row-independent — so the
+/// output is **token-identical** to calling [`generate_native`] once per
+/// prompt, while the packed weight planes stream once per decode step for
+/// the whole batch instead of once per sequence. When one row's window
 /// overflows, only that row resets and re-prefills its trailing half
 /// window (a ragged step); its neighbours keep decoding single tokens.
 pub fn generate_native_batch(
@@ -80,69 +93,244 @@ pub fn generate_native_batch(
     n_tokens: usize,
     cfg: &SampleCfg,
 ) -> Result<Vec<String>> {
-    use crate::backend::forward::{forward_cached_batch, KvCache};
     if prompts.is_empty() {
         return Ok(Vec::new());
     }
-    let seq_len = w.dims.seq_len;
-    let vocab = w.dims.vocab;
-    let rows = prompts.len();
-    let mut rngs: Vec<Rng> = (0..rows).map(|_| Rng::new(cfg.seed)).collect();
-    let mut tokens: Vec<Vec<i32>> = prompts
-        .iter()
-        .map(|p| {
-            let mut t = encode(p);
-            if t.is_empty() {
-                t.push(PAD as i32);
-            }
-            t
-        })
-        .collect();
-    let start_lens: Vec<usize> = tokens.iter().map(|t| t.len()).collect();
+    let mut batch: ContinuousBatch<&NativeWeights> =
+        ContinuousBatch::new(&w.dims, prompts.len());
+    let mut slot_of = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        slot_of.push(batch.join(w, p, n_tokens, cfg)?);
+    }
+    let mut out: Vec<Option<String>> = vec![None; prompts.len()];
+    while batch.active() > 0 {
+        for f in batch.step()? {
+            let i = slot_of
+                .iter()
+                .position(|&s| s == f.slot)
+                .expect("finished slot was joined here");
+            out[i] = Some(f.text);
+        }
+    }
+    Ok(out
+        .into_iter()
+        .map(|t| t.expect("every joined row finishes"))
+        .collect())
+}
 
-    let mut cache = KvCache::with_rows(&w.dims, rows);
-    // Ragged prefill: each row's trailing prompt window, leaving room to
-    // decode, in one batched pass.
-    let step: Vec<Vec<i32>> = tokens
-        .iter()
-        .map(|t| t[t.len().saturating_sub(seq_len)..].to_vec())
-        .collect();
-    let slices: Vec<&[i32]> = step.iter().map(|t| t.as_slice()).collect();
-    let mut logits = forward_cached_batch(w, &mut cache, &slices)?;
-    let mut counts: Vec<usize> = step.iter().map(|t| t.len()).collect();
-    for emitted in 0..n_tokens {
-        // Row r's next token comes from the last logits row of its chunk.
-        let mut step: Vec<Vec<i32>> = Vec::with_capacity(rows);
+// --------------------------------------------------------------------------
+// Continuous batching: per-slot sequences, per-row formats, join/retire.
+// --------------------------------------------------------------------------
+
+/// One completed sequence returned by [`ContinuousBatch::step`].
+#[derive(Debug, Clone)]
+pub struct FinishedRow {
+    /// The slot the sequence occupied (free for reuse as soon as this is
+    /// returned).
+    pub slot: usize,
+    /// The decoded continuation text (prompt excluded).
+    pub text: String,
+}
+
+/// Per-slot decode state: the sequence's weight set, sampler, token
+/// history, budget, and the chunk queued for the next forward pass.
+struct Slot<W> {
+    w: W,
+    cfg: SampleCfg,
+    rng: Rng,
+    /// Full token history (prompt + generated).
+    tokens: Vec<i32>,
+    /// Prompt length — everything after it is the continuation.
+    start_len: usize,
+    n_tokens: usize,
+    emitted: usize,
+    /// Tokens this slot feeds the next step: the prompt window at join
+    /// (prefill-on-join), the trailing half window after an overflow
+    /// re-prefill, or the single freshly sampled token. Non-empty for
+    /// every live slot between steps.
+    pending: Vec<i32>,
+}
+
+/// A continuously batched, step-synchronized decode over `capacity` slots
+/// with **per-row elastic formats**.
+///
+/// This is the state machine behind the serving runtime's generate lane
+/// (and, with all rows joined up front, behind [`generate_native_batch`]):
+///
+/// * [`ContinuousBatch::join`] admits a prompt into the lowest free slot
+///   with its *own* weight set `W` (any format/activation mode derived from
+///   the same anchor's shared f32 parameters), sampling config and token
+///   budget — mid-flight, between any two steps;
+/// * [`ContinuousBatch::step`] runs **one**
+///   [`forward_cached_batch_mixed`] pass over every live slot (newly
+///   joined rows prefill their prompt window in the same pass their
+///   neighbours decode a single token), samples each live row's next
+///   token, and returns the rows that just completed — their slots are
+///   free for reuse immediately;
+/// * [`ContinuousBatch::retire`] cancels a sequence early, freeing its
+///   slot without emitting a result.
+///
+/// Because every per-row computation in the batched forward is
+/// row-independent, each row's continuation is bit-for-bit the tokens of a
+/// solo [`generate_native`] call with that row's weight set — regardless
+/// of joins, completions or retirements in the other slots. `W` is any
+/// [`Deref`] to [`NativeWeights`]: plain references for library callers,
+/// `Arc<NativeWeights>` for the backend's cached weight sets.
+pub struct ContinuousBatch<W: Deref<Target = NativeWeights>> {
+    dims: ModelDims,
+    cache: KvCache,
+    slots: Vec<Option<Slot<W>>>,
+}
+
+impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
+    /// Empty batch with `capacity` free slots for a model of `dims`.
+    pub fn new(dims: &ModelDims, capacity: usize) -> ContinuousBatch<W> {
+        ContinuousBatch {
+            dims: dims.clone(),
+            cache: KvCache::with_slots(dims, capacity),
+            slots: (0..capacity).map(|_| None).collect(),
+        }
+    }
+
+    /// Total slots (live + free).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Slots currently holding live sequences.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Whether [`Self::join`] can admit another sequence right now.
+    pub fn has_free_slot(&self) -> bool {
+        self.active() < self.capacity()
+    }
+
+    /// Admit a prompt into the lowest free slot with weight set `w` (the
+    /// row's own format + activation mode), to emit `n_tokens` tokens
+    /// sampled under `cfg`. The prompt's trailing window prefills on the
+    /// *next* [`Self::step`] — joining never stalls rows already decoding.
+    /// Returns the claimed slot index; errors when the batch is full or
+    /// `w` was built for a different model.
+    pub fn join(&mut self, w: W, prompt: &str, n_tokens: usize, cfg: &SampleCfg) -> Result<usize> {
+        let wd = &w.dims;
+        if wd.d_model != self.dims.d_model
+            || wd.n_layers != self.dims.n_layers
+            || wd.seq_len != self.dims.seq_len
+            || wd.vocab != self.dims.vocab
+            || wd.d_ff != self.dims.d_ff
+            || wd.n_heads != self.dims.n_heads
+        {
+            anyhow::bail!("joining weight set was built for different model dims");
+        }
+        let slot = self.cache.join_row(RowTag::of(&w))?;
+        let mut tokens = encode(prompt);
+        if tokens.is_empty() {
+            tokens.push(PAD as i32);
+        }
+        let start_len = tokens.len();
+        // Prefill chunk: the trailing prompt window (same as a solo call).
+        let pending = tokens[tokens.len().saturating_sub(self.dims.seq_len)..].to_vec();
+        self.slots[slot] = Some(Slot {
+            w,
+            cfg: cfg.clone(),
+            rng: Rng::new(cfg.seed),
+            tokens,
+            start_len,
+            n_tokens,
+            emitted: 0,
+            pending,
+        });
+        Ok(slot)
+    }
+
+    /// Cancel the sequence in `slot` (no result is emitted); the slot and
+    /// its KV rows are immediately reusable. Surviving rows are unaffected
+    /// — their tokens stay identical to their solo decodes.
+    pub fn retire(&mut self, slot: usize) -> Result<()> {
+        if slot >= self.slots.len() || self.slots[slot].is_none() {
+            anyhow::bail!("slot {slot} holds no live sequence");
+        }
+        self.slots[slot] = None;
+        self.cache.retire_row(slot);
+        Ok(())
+    }
+
+    /// Run one step-synchronized pass: every live slot's pending chunk
+    /// (single token, prefill window, or re-prefill window) goes through
+    /// one mixed-format batched forward; each live row then samples its
+    /// next token. Returns the rows that completed their budget this step
+    /// (their slots are already free). A batch with no live rows is a
+    /// no-op returning an empty list.
+    pub fn step(&mut self) -> Result<Vec<FinishedRow>> {
+        let rows = self.cache.rows();
+        let Some(filler) = self.slots.iter().position(|s| s.is_some()) else {
+            return Ok(Vec::new());
+        };
+        // Per-row weight/chunk views; free rows ride along with empty
+        // chunks (their weight entry is ignored by the forward).
+        let filler_w: &NativeWeights = &self.slots[filler].as_ref().unwrap().w;
+        let mut ws: Vec<&NativeWeights> = Vec::with_capacity(rows);
+        let mut chunks: Vec<&[i32]> = Vec::with_capacity(rows);
+        for s in &self.slots {
+            match s {
+                Some(s) => {
+                    ws.push(&s.w);
+                    chunks.push(&s.pending);
+                }
+                None => {
+                    ws.push(filler_w);
+                    chunks.push(&[]);
+                }
+            }
+        }
+        let counts: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+        let logits = forward_cached_batch_mixed(&ws, &mut self.cache, &chunks)?;
+
+        let vocab = self.dims.vocab;
+        let seq_len = self.dims.seq_len;
+        let mut finished = Vec::new();
         let mut off = 0usize;
         for r in 0..rows {
-            let last = &logits[(off + counts[r] - 1) * vocab..(off + counts[r]) * vocab];
-            off += counts[r];
-            let next = sample(last, cfg, &mut rngs[r]) as i32;
-            tokens[r].push(next);
-            if cache.len_of(r) >= seq_len {
-                // Row window full: re-prefill this row from its trailing
-                // half so subsequent decodes are incremental again (one
-                // prefill per seq_len/2 emitted tokens, amortized O(1)).
-                let keep = (seq_len / 2).max(1);
-                let ctx = tokens[r][tokens[r].len() - keep..].to_vec();
-                cache.reset_row(r);
-                step.push(ctx);
-            } else {
-                step.push(vec![next]);
+            let count = counts[r];
+            if count == 0 {
+                continue;
+            }
+            let last = &logits[(off + count - 1) * vocab..(off + count) * vocab];
+            off += count;
+            let s = self.slots[r].as_mut().expect("fed row holds a sequence");
+            s.pending.clear();
+            let mut done = s.n_tokens == 0;
+            if !done {
+                let next = sample(last, &s.cfg, &mut s.rng) as i32;
+                s.tokens.push(next);
+                s.emitted += 1;
+                if s.emitted == s.n_tokens {
+                    done = true;
+                } else if self.cache.len_of(r) >= seq_len {
+                    // Row window full: re-prefill this row from its
+                    // trailing half so subsequent decodes are incremental
+                    // again (one prefill per seq_len/2 emitted tokens,
+                    // amortized O(1)); neighbours are untouched.
+                    let keep = (seq_len / 2).max(1);
+                    s.pending = s.tokens[s.tokens.len() - keep..].to_vec();
+                    self.cache.reset_row(r);
+                } else {
+                    s.pending.push(next);
+                }
+            }
+            if done {
+                let s = self.slots[r].take().expect("fed row holds a sequence");
+                self.cache.retire_row(r);
+                finished.push(FinishedRow {
+                    slot: r,
+                    text: decode(&s.tokens[s.start_len..]),
+                });
             }
         }
-        if emitted + 1 == n_tokens {
-            break; // the last sample needs no further forward pass
-        }
-        let slices: Vec<&[i32]> = step.iter().map(|t| t.as_slice()).collect();
-        logits = forward_cached_batch(w, &mut cache, &slices)?;
-        counts = step.iter().map(|t| t.len()).collect();
+        Ok(finished)
     }
-    Ok(tokens
-        .iter()
-        .zip(&start_lens)
-        .map(|(t, &s)| decode(&t[s..]))
-        .collect())
 }
 
 /// Generate `n_tokens` continuation tokens for a text prompt over the AOT

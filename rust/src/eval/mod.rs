@@ -25,11 +25,13 @@ use anyhow::Result;
 /// Pre-built parameter literals (reused across many eval calls).
 #[cfg(feature = "pjrt")]
 pub struct ParamLiterals {
+    /// Per-parameter XLA literals in manifest order.
     pub literals: Vec<xla::Literal>,
 }
 
 #[cfg(feature = "pjrt")]
 impl ParamLiterals {
+    /// Build literals from a parameter set.
     pub fn build(params: &ParamSet) -> Result<ParamLiterals> {
         let literals = params
             .tensors

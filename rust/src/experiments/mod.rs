@@ -41,11 +41,17 @@ use std::path::{Path, PathBuf};
 /// Shared state for experiment runs.
 #[cfg(feature = "pjrt")]
 pub struct Ctx {
+    /// PJRT runtime.
     pub rt: Runtime,
+    /// Loaded AOT artifacts.
     pub arts: ArtifactSet,
+    /// Generated corpus shared by every experiment.
     pub corpus: Corpus,
+    /// Directory for training runs and checkpoints.
     pub runs_dir: PathBuf,
+    /// Directory for result tables and figures.
     pub results_dir: PathBuf,
+    /// Base seed.
     pub seed: u64,
     /// Learning rates swept per variant (paper §3.2 sweeps 3; default here
     /// is a 2-point sweep sized for the 1-core budget — override with
@@ -59,6 +65,7 @@ pub struct Ctx {
 
 #[cfg(feature = "pjrt")]
 impl Ctx {
+    /// Open an experiment context for `config` under the repo root.
     pub fn open(repo_root: &Path, config: &str, seed: u64) -> Result<Ctx> {
         let arts_dir = repo_root.join("artifacts").join(config);
         if !arts_dir.join("manifest.json").exists() {
@@ -175,6 +182,7 @@ impl Ctx {
         Ok(best.expect("at least one lr").1)
     }
 
+    /// Path for a result file under the results directory.
     pub fn result_path(&self, name: &str) -> PathBuf {
         self.results_dir.join(name)
     }

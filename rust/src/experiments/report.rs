@@ -11,11 +11,14 @@ use std::path::Path;
 /// A simple column-oriented result table.
 #[derive(Debug, Clone, Default)]
 pub struct ResultTable {
+    /// Column headers.
     pub columns: Vec<String>,
+    /// Rows of stringified cells, aligned with `columns`.
     pub rows: Vec<Vec<String>>,
 }
 
 impl ResultTable {
+    /// Empty table with the given column headers.
     pub fn new(columns: &[&str]) -> ResultTable {
         ResultTable {
             columns: columns.iter().map(|s| s.to_string()).collect(),
@@ -23,11 +26,13 @@ impl ResultTable {
         }
     }
 
+    /// Append one row.
     pub fn push(&mut self, row: Vec<String>) {
         assert_eq!(row.len(), self.columns.len());
         self.rows.push(row);
     }
 
+    /// Render as CSV text.
     pub fn to_csv(&self) -> String {
         let mut s = self.columns.join(",");
         s.push('\n');
@@ -38,6 +43,7 @@ impl ResultTable {
         s
     }
 
+    /// Write the CSV to disk.
     pub fn save_csv(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -75,6 +81,7 @@ impl ResultTable {
 /// One plot series.
 #[derive(Debug, Clone)]
 pub struct Series {
+    /// Figure/table identifier (result file stem).
     pub name: String,
     /// (x, y) points; y may be NaN for gaps.
     pub points: Vec<(f64, f64)>,

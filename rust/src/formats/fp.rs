@@ -23,6 +23,7 @@ pub struct FpSpec {
 }
 
 impl FpSpec {
+    /// Spec with `e` exponent and `m` mantissa bits (asserts the supported ranges).
     pub const fn new(e: u8, m: u8) -> FpSpec {
         assert!(e >= 2 && e <= 4);
         assert!(m >= 1 && m <= 3);

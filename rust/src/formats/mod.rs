@@ -99,6 +99,7 @@ impl ElementFormat {
         }
     }
 
+    /// Whether this is an integer element format.
     pub fn is_int(&self) -> bool {
         matches!(self, ElementFormat::Int { .. })
     }
@@ -168,11 +169,14 @@ impl fmt::Display for ElementFormat {
 /// A complete microscaling format: element type + scaling block size.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MxFormat {
+    /// Element format.
     pub elem: ElementFormat,
+    /// Scaling block size (elements per shared scale).
     pub block_size: usize,
 }
 
 impl MxFormat {
+    /// New format (asserts a positive block size).
     pub fn new(elem: ElementFormat, block_size: usize) -> MxFormat {
         assert!(block_size > 0, "block size must be positive");
         MxFormat { elem, block_size }
@@ -193,6 +197,7 @@ impl MxFormat {
         self.elem.bits() as f64 + 8.0 / self.block_size as f64
     }
 
+    /// Short name including the block size, e.g. `int4@32`.
     pub fn name(&self) -> String {
         format!("{}@{}", self.elem.name(), self.block_size)
     }

@@ -22,8 +22,10 @@ use super::{exp2i, floor_log2, ElementFormat};
 /// paper §3.3, kept for the ablation benchmark.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum RoundMode {
+    /// Round half to even (the default; matches the jnp oracle and OCP conversions).
     #[default]
     HalfEven,
+    /// Round half away from zero (paper §3.3 ablation variant).
     HalfAway,
 }
 
@@ -35,6 +37,7 @@ pub enum RoundMode {
 /// range keeps rust ↔ python golden parity; blocks that small quantize to
 /// zero anyway.
 pub const SCALE_EXP_MIN: i32 = -126;
+/// Maximum stored shared exponent (see [`SCALE_EXP_MIN`] for the range rationale).
 pub const SCALE_EXP_MAX: i32 = 127;
 
 /// One encoded MX block: a shared scale exponent plus element codes.
@@ -45,8 +48,11 @@ pub const SCALE_EXP_MAX: i32 = 127;
 ///   (only the low `bits()` bits are significant).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MxBlock {
+    /// Element format of the codes.
     pub format: ElementFormat,
+    /// Shared E8M0-style scale exponent.
     pub scale_exp: i8,
+    /// Element codes (`block_size` of them).
     pub codes: Vec<i8>,
 }
 

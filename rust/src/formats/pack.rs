@@ -170,6 +170,17 @@ pub fn unpack_signed_into(bytes: &[u8], w: u8, out: &mut [i8]) {
 /// no bit-offset arithmetic. This is the block-major serving layout the
 /// native GEMM streams (`backend::repack`); the wire/checkpoint layout stays
 /// the fully-contiguous [`pack`] stream.
+///
+/// ```
+/// use mfqat::formats::pack::{pack_rows, unpack_rows_signed};
+///
+/// // Two rows of five 4-bit codes; every row starts byte-aligned, so each
+/// // packs to ceil(5·4/8) = 3 bytes and rows can be sliced independently.
+/// let codes: Vec<i8> = vec![-3, 7, 0, -8, 5, 1, -1, 2, -4, 6];
+/// let packed = pack_rows(&codes, 4, 5);
+/// assert_eq!(packed.len(), 2 * 3);
+/// assert_eq!(unpack_rows_signed(&packed, 4, 5, 2), codes);
+/// ```
 pub fn pack_rows(codes: &[i8], w: u8, row_codes: usize) -> Vec<u8> {
     assert!((1..=8).contains(&w));
     assert!(row_codes > 0 && codes.len() % row_codes == 0);

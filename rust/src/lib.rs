@@ -33,27 +33,49 @@
 //!   ([`backend::simd`], runtime-detected; `MFQAT_SIMD=off` pins the
 //!   bit-identical portable loop), and the combined scale applies once per
 //!   block. Generation decodes incrementally through a KV cache holding
-//!   `rows ≥ 1` step-synchronized sequences with ragged prefill
-//!   ([`backend::KvCache`]), so a batch of prompts streams the weight
-//!   planes once per decode step ([`backend::Backend::generate_batch`] —
-//!   token-identical to decoding each prompt alone). One anchor checkpoint
-//!   serves every MXINT/MXFP format with **no XLA install and no AOT
-//!   artifacts**, so CPU-only deployment targets get the full
-//!   elastic-precision story, and lower-bit formats genuinely stream less
-//!   weight memory per batch.
+//!   `rows ≥ 1` step-synchronized sequences with ragged prefill, a row
+//!   join/retire lifecycle and **per-row element formats**
+//!   ([`backend::KvCache`],
+//!   [`backend::forward::forward_cached_batch_mixed`]): one decode step
+//!   serves rows at MXINT8, MXINT4 and MXFP8 simultaneously, and prompts
+//!   join or leave between any two steps
+//!   ([`eval::generate::ContinuousBatch`], surfaced as
+//!   [`backend::DecodeSession`]) — each row token-identical to decoding
+//!   that prompt alone at its format. One anchor checkpoint serves every
+//!   MXINT/MXFP format with **no XLA install and no AOT artifacts**, so
+//!   CPU-only deployment targets get the full elastic-precision story, and
+//!   lower-bit formats genuinely stream less weight memory per batch.
 //! * **PJRT** (`--features pjrt`): executes the AOT HLO artifacts exported
 //!   by `python/compile/aot.py`; formats run as dequantized-f32 literals
 //!   through one compiled graph (quality measurements, training).
 //!
 //! Serving ([`server`]) runs a configurable worker pool
 //! (`ServerConfig::workers`) sharing one engine — weight cache included —
-//! via `Arc`: each worker gathers its own batch (scoring and batched
-//! generation share the queue) while the others compute, and metrics
-//! aggregate across the pool. `MFQAT_THREADS` pins kernel threading,
-//! `MFQAT_SIMD` the integer-MAC dispatch.
+//! via `Arc`. Scoring batches gather per worker as before; the generate
+//! lane defaults to **continuous batching**: each worker keeps one
+//! persistent in-flight decode, drains the queue every step
+//! (prefill-on-join), assigns the precision policy's format *per row*, and
+//! completes and replaces rows independently — so mixed-precision traffic
+//! no longer serializes into per-format convoys
+//! (`ServerConfig::batching` restores the legacy gather mode). Metrics
+//! aggregate across the pool. The env/flag surface (`MFQAT_THREADS`,
+//! `MFQAT_SIMD`, `--backend`, `--act`, `--batching`) is documented in
+//! [`util::cli`].
 //!
 //! Python never runs on the request path; with the native backend, neither
 //! does XLA — the `mfqat` binary is self-contained.
+//!
+//! ## Further reading
+//!
+//! * [Architecture handbook](../../../../docs/ARCHITECTURE.md) — maintained
+//!   in-repo at `docs/ARCHITECTURE.md`: backend trait, repack + GEMM
+//!   generations, KV-cache/continuous-batching lifecycle, server worker
+//!   pool, FormatCache, and the differential-oracle test map.
+//!   (Link is relative to the CI rustdoc artifact layout,
+//!   `rust/target/doc/mfqat/`.)
+//! * [README](../../../../README.md) — at the repo root: quickstart, CLI
+//!   walkthrough, bench reproduction, and the ElementFormat × ActMode ×
+//!   backend feature matrix.
 //!
 //! ## Quick start
 //!
@@ -88,6 +110,8 @@
 //! let nll = engine.score_batch(&tokens, ElementFormat::int(4)).unwrap();
 //! assert_eq!(nll.len(), 2);
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod checkpoint;

@@ -27,7 +27,7 @@ use mfqat::data::{Corpus, CorpusConfig};
 use mfqat::formats::ElementFormat;
 use mfqat::model::{ModelDims, ParamSet};
 use mfqat::runtime::Manifest;
-use mfqat::server::{Policy, Server, ServerConfig};
+use mfqat::server::{GenBatching, Policy, Server, ServerConfig};
 use mfqat::util::cli::Args;
 use std::path::{Path, PathBuf};
 
@@ -117,9 +117,15 @@ COMMANDS:
   serve [--policy ladder] [--requests N] [--burst N] [--backend native|pjrt]
         [--checkpoint P] [--cache-mb N] [--act f32|int8] [--workers N]
         [--gen-requests N] [--gen-tokens N]
+        [--batching continuous|gather] [--slots N]
                                     run the elastic serving demo workload:
                                     N workers share one engine; scoring and
-                                    batched-generation requests interleave
+                                    generation requests interleave. The
+                                    generate lane defaults to continuous
+                                    batching (per-row formats, mid-flight
+                                    joins into --slots decode rows);
+                                    --batching gather restores the legacy
+                                    grouped batched decode
   experiment <id>                   regenerate a paper figure/table; id in
                                     fig1 fig2 fig3 fig4 tab1 tab2 tab3 fig19 fig20 all
                                     (fig19/fig20 run natively; the rest need pjrt)
@@ -512,6 +518,8 @@ fn serve(args: &Args) -> Result<()> {
     let workers = args.usize("workers", 1)?;
     let gen_requests = args.usize("gen-requests", 0)?;
     let gen_tokens = args.usize("gen-tokens", 16)?;
+    let batching = GenBatching::parse(args.get_or("batching", "continuous"))?;
+    let decode_slots = args.usize("slots", 0)?;
     let act = ActMode::parse(args.get_or("act", "f32"))?;
     if backend == "pjrt" {
         reject_act_for_pjrt(args)?;
@@ -541,6 +549,8 @@ fn serve(args: &Args) -> Result<()> {
             policy,
             gather_window: std::time::Duration::from_millis(2),
             workers,
+            batching,
+            decode_slots,
         },
     )?;
 

@@ -16,6 +16,7 @@ use anyhow::{bail, Result};
 /// An ordered set of parameter tensors (order = manifest = HLO args).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamSet {
+    /// Parameter tensors in manifest order.
     pub tensors: Vec<Tensor>,
 }
 
@@ -39,10 +40,12 @@ impl ParamSet {
         ParamSet { tensors }
     }
 
+    /// Total parameter count.
     pub fn n_params(&self) -> usize {
         self.tensors.iter().map(|t| t.len()).sum()
     }
 
+    /// Look up a parameter tensor by name.
     pub fn get(&self, manifest: &Manifest, name: &str) -> Option<&Tensor> {
         manifest.param_index(name).map(|i| &self.tensors[i])
     }
@@ -214,12 +217,19 @@ pub fn anchor_for(target: ElementFormat) -> ElementFormat {
 /// ([`ModelDims::from_manifest`]) both produce the same spec table.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelDims {
+    /// Config name (`tiny`, `small`, `base`, ...).
     pub name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Model width.
     pub d_model: usize,
+    /// Decoder layers.
     pub n_layers: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Context window in tokens.
     pub seq_len: usize,
+    /// MLP hidden width.
     pub d_ff: usize,
     /// MX scaling block size.
     pub block_size: usize,
@@ -283,6 +293,7 @@ impl ModelDims {
         }
     }
 
+    /// Per-head dimension (`d_model / n_heads`).
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }

@@ -16,14 +16,18 @@ use std::path::PathBuf;
 /// One model parameter as exported (name, shape, QAT membership).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamInfo {
+    /// Parameter name.
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Whether the parameter is quantized during QAT.
     pub quantized: bool,
     /// "normal" | "ones" | "zeros" — init family used by the trainer.
     pub init: String,
 }
 
 impl ParamInfo {
+    /// Element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -32,28 +36,41 @@ impl ParamInfo {
 /// Parsed `manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Config name this manifest describes.
     pub config_name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Model width.
     pub d_model: usize,
+    /// Decoder layers.
     pub n_layers: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Context window in tokens.
     pub seq_len: usize,
+    /// MX scaling block size.
     pub block_size: usize,
+    /// Total parameter count.
     pub n_params: usize,
+    /// Batch size the AOT graphs were built for.
     pub train_batch: usize,
+    /// Parameter specs in graph argument order.
     pub params: Vec<ParamInfo>,
     /// artifact name → (file, optional trainable indices)
     pub artifacts: BTreeMap<String, ArtifactEntry>,
 }
 
+/// One exported artifact (an HLO text file).
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// HLO text filename relative to the artifact directory.
     pub file: String,
     /// For train steps: indices (into `params`) of the trainable set.
     pub trainable: Option<Vec<usize>>,
 }
 
 impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let j = Json::parse_file(&dir.join("manifest.json"))?;
         let cfg = j.req("config")?;
@@ -107,6 +124,7 @@ impl Manifest {
             .collect()
     }
 
+    /// Index of a parameter by name.
     pub fn param_index(&self, name: &str) -> Option<usize> {
         self.params.iter().position(|p| p.name == name)
     }
@@ -115,7 +133,9 @@ impl Manifest {
 /// Lazy loader + compile cache for one artifact directory.
 #[cfg(feature = "pjrt")]
 pub struct ArtifactSet {
+    /// Artifact directory.
     pub dir: PathBuf,
+    /// The parsed manifest.
     pub manifest: Manifest,
     cache: std::sync::Mutex<BTreeMap<String, std::sync::Arc<Executable>>>,
 }

@@ -46,6 +46,7 @@ impl Runtime {
         Ok(Runtime { client })
     }
 
+    /// PJRT platform name (`cpu`, ...).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -75,6 +76,7 @@ impl Runtime {
 /// A compiled computation.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Graph name (file stem of the HLO artifact).
     pub name: String,
 }
 

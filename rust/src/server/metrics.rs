@@ -13,10 +13,14 @@ use std::collections::BTreeMap;
 /// take that lock once per executed batch).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
+    /// Requests served (both lanes).
     pub requests: u64,
     per_format: BTreeMap<String, u64>,
+    /// End-to-end request latency distribution.
     pub latency: LatencyHist,
+    /// Executed batch-size statistics.
     pub batch_size: Running,
+    /// Batch execution-time statistics (scoring lane).
     pub exec_time: Running,
     /// Generation-lane request count (also counted in `requests`).
     pub gen_requests: u64,
@@ -35,6 +39,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Empty metrics.
     pub fn new() -> Metrics {
         Metrics {
             latency: LatencyHist::new(),
@@ -43,6 +48,7 @@ impl Metrics {
         }
     }
 
+    /// Record one scoring request served in a batch of `batch` at `fmt`.
     pub fn record(&mut self, fmt: ElementFormat, latency_s: f64, batch: usize, exec_s: f64) {
         self.requests += 1;
         *self.per_format.entry(fmt.name()).or_insert(0) += 1;
@@ -84,6 +90,7 @@ impl Metrics {
         self.cache.misses
     }
 
+    /// Requests served per format name.
     pub fn format_counts(&self) -> &BTreeMap<String, u64> {
         &self.per_format
     }

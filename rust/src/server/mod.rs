@@ -1,21 +1,31 @@
-//! Elastic inference server: request queue → dynamic batcher → worker pool.
+//! Elastic inference server: request queue → continuous batcher → worker
+//! pool.
 //!
 //! The deployment story the paper motivates (§1): one device, one anchor
-//! checkpoint, and the *numeric format chosen per batch* based on current
+//! checkpoint, and the *numeric format chosen per request* based on current
 //! load. The server owns a pool of [`ServerConfig::workers`] worker threads
 //! sharing **one** [`ElasticEngine`] — and therefore one weight
 //! `FormatCache` — via `Arc` (the [`crate::backend::Backend`] trait is
-//! `Send + Sync`); clients submit requests over a channel; each worker
-//! takes the queue lock, gathers up to `train_batch` requests inside a
-//! gather window, releases, and executes — so gathering overlaps compute
-//! across workers. Two request lanes share the queue and the batcher:
+//! `Send + Sync`); clients submit requests over a channel. Two request
+//! lanes share the queue:
 //!
-//! * [`ScoreRequest`] — NLL scoring of a token window (split into
-//!   per-format sub-batches, one execution each, exactly as before);
-//! * [`GenerateRequest`] — sampled continuations, grouped by
-//!   `(format, n_tokens, cfg)` and decoded **step-synchronized** through
-//!   one batched KV cache ([`crate::backend::Backend::generate_batch`]),
-//!   token-identical to serving each prompt alone.
+//! * [`ScoreRequest`] — NLL scoring of a token window; each worker gathers
+//!   up to `train_batch` requests inside a gather window and executes them
+//!   as per-format sub-batches, one execution each.
+//! * [`GenerateRequest`] — sampled continuations. Under the default
+//!   [`GenBatching::Continuous`] mode each worker keeps **one persistent
+//!   in-flight decode** ([`crate::backend::DecodeSession`]) and drains the
+//!   queue *every decode step*: new prompts prefill into free rows while
+//!   their neighbours keep decoding (prefill-on-join), every row carries
+//!   its **own element format** — assigned per-row by the [`policy`] at
+//!   admission — and its own token budget and sampling config, rows finish
+//!   and respond independently, and freed rows are reused by the next
+//!   join. Each row's tokens are identical to a solo
+//!   [`crate::backend::Backend::generate`] call at that row's format.
+//!   [`GenBatching::Gather`] keeps the legacy behaviour (requests grouped
+//!   by `(format, n_tokens, cfg)` at gather time into fixed-membership
+//!   batched decodes) for comparison benchmarks and for backends without
+//!   an incremental-decode surface.
 //!
 //! The [`policy`] maps queue depth (a shared atomic counter — exact under
 //! concurrent workers) to the serving format; [`metrics`] aggregates
@@ -29,10 +39,12 @@ pub use costmodel::HwModel;
 pub use metrics::Metrics;
 pub use policy::{Policy, SloState};
 
+use crate::backend::DecodeSession;
 use crate::coordinator::ElasticEngine;
 use crate::eval::generate::SampleCfg;
 use crate::formats::ElementFormat;
 use anyhow::Result;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -42,59 +54,126 @@ use std::time::{Duration, Instant};
 /// windows are right-padded by the caller). `format` pins a precision;
 /// `None` lets the policy decide.
 pub struct ScoreRequest {
+    /// Token window to score (width `seq_len + 1`).
     pub tokens: Vec<i32>,
+    /// Optional precision pin (`None` = policy pick).
     pub format: Option<ElementFormat>,
+    /// Where the response goes.
     pub respond: Sender<Result<ScoreResponse, String>>,
+    /// Enqueue timestamp (latency accounting).
     pub enqueued: Instant,
 }
 
 /// The scoring response: per-sequence mean NLL plus serving telemetry.
 #[derive(Debug, Clone)]
 pub struct ScoreResponse {
+    /// Mean NLL of the scored window.
     pub nll: f32,
+    /// Format the request was served at.
     pub format: ElementFormat,
+    /// Requests in the executed sub-batch.
     pub batch_size: usize,
+    /// Queue depth the batcher observed.
     pub queue_depth: usize,
+    /// End-to-end latency (enqueue to response).
     pub latency: Duration,
 }
 
-/// A generation request: sampled continuation of a text prompt. Requests
-/// with equal `(format, n_tokens, cfg)` landing in one gather window decode
-/// as a single batched KV-cache pass.
+/// A generation request: sampled continuation of a text prompt. Under
+/// continuous batching the request joins a worker's in-flight decode as
+/// its own row — with its own format, budget and sampling config — as soon
+/// as a slot frees; under gather batching, requests with equal
+/// `(format, n_tokens, cfg)` in one gather window decode as a single
+/// fixed-membership batched pass.
 pub struct GenerateRequest {
+    /// Prompt text.
     pub prompt: String,
+    /// Continuation tokens to emit.
     pub n_tokens: usize,
+    /// Optional precision pin (`None` = per-row policy pick).
     pub format: Option<ElementFormat>,
+    /// Sampling configuration.
     pub cfg: SampleCfg,
+    /// Where the response goes.
     pub respond: Sender<Result<GenerateResponse, String>>,
+    /// Enqueue timestamp (latency accounting).
     pub enqueued: Instant,
 }
 
 /// The generation response: continuation text plus serving telemetry.
 #[derive(Debug, Clone)]
 pub struct GenerateResponse {
+    /// The sampled continuation (prompt excluded).
     pub text: String,
+    /// Element format this request's row decoded at.
     pub format: ElementFormat,
+    /// Rows sharing the decode when this request completed (continuous
+    /// mode) or the gathered group size (gather mode).
     pub batch_size: usize,
+    /// Queue depth observed when the request was admitted.
     pub queue_depth: usize,
+    /// End-to-end latency (enqueue → response).
     pub latency: Duration,
 }
 
 /// One queued request (either lane).
 pub enum Request {
+    /// A scoring-lane request.
     Score(ScoreRequest),
+    /// A generation-lane request.
     Generate(GenerateRequest),
+}
+
+/// How the generate lane forms decode batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GenBatching {
+    /// Continuous batching (default): each worker keeps one persistent
+    /// in-flight decode, drains the queue every step, admits prompts into
+    /// free rows mid-flight (prefill-on-join), assigns formats per row and
+    /// completes rows independently. Falls back to [`GenBatching::Gather`]
+    /// on backends without an incremental-decode surface.
+    #[default]
+    Continuous,
+    /// Legacy gather batching: generation requests group by
+    /// `(format, n_tokens, cfg)` at gather time and decode as one
+    /// fixed-membership batch — new requests wait for the next gather.
+    Gather,
+}
+
+impl GenBatching {
+    /// Parse `continuous` | `gather`.
+    pub fn parse(s: &str) -> Result<GenBatching> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "continuous" | "cb" => Ok(GenBatching::Continuous),
+            "gather" | "grouped" => Ok(GenBatching::Gather),
+            other => anyhow::bail!("unknown batching mode '{other}' (continuous|gather)"),
+        }
+    }
+
+    /// Stable identifier for logs and bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GenBatching::Continuous => "continuous",
+            GenBatching::Gather => "gather",
+        }
+    }
 }
 
 /// Server configuration.
 #[derive(Clone)]
 pub struct ServerConfig {
+    /// Queue-depth → precision policy (applied per request row).
     pub policy: Policy,
     /// How long the batcher waits to fill a batch.
     pub gather_window: Duration,
     /// Worker threads sharing the engine (≥ 1). Each worker gathers and
     /// executes its own batches; weights and metrics are shared.
     pub workers: usize,
+    /// Generate-lane batching mode.
+    pub batching: GenBatching,
+    /// Sequence rows in each worker's continuous decode session
+    /// (`0` ⇒ the model's `train_batch`).
+    pub decode_slots: usize,
 }
 
 impl Default for ServerConfig {
@@ -103,6 +182,8 @@ impl Default for ServerConfig {
             policy: Policy::default_ladder(),
             gather_window: Duration::from_millis(2),
             workers: 1,
+            batching: GenBatching::Continuous,
+            decode_slots: 0,
         }
     }
 }
@@ -110,6 +191,7 @@ impl Default for ServerConfig {
 /// Handle to a running server.
 pub struct Server {
     tx: Sender<Request>,
+    /// Pool-wide serving metrics (shared with every worker).
     pub metrics: Arc<Mutex<Metrics>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     alive: Arc<AtomicBool>,
@@ -373,8 +455,206 @@ fn gather(
     Some(batch)
 }
 
+/// Non-blocking drain for a worker with an in-flight decode: take the
+/// queue lock only if it is free (an idle worker may be blocked inside
+/// [`gather`] holding it — it will pick those requests up itself) and pop
+/// whatever is already queued, up to `cap`.
+fn drain_ready(queue: &Mutex<Receiver<Request>>, cap: usize) -> Vec<Request> {
+    let mut batch = Vec::new();
+    if let Ok(rx) = queue.try_lock() {
+        while batch.len() < cap {
+            match rx.try_recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+    }
+    batch
+}
+
+/// Group requests by their effective format (pin, else the policy pick for
+/// the current depth): pinned requests must be served at their pin, so one
+/// gathered batch splits into per-format sub-batches instead of letting
+/// the first pin silently win for everyone.
+fn group_scores(
+    reqs: Vec<ScoreRequest>,
+    policy_fmt: ElementFormat,
+) -> Vec<(ElementFormat, Vec<ScoreRequest>)> {
+    let mut groups: Vec<(ElementFormat, Vec<ScoreRequest>)> = Vec::new();
+    for r in reqs {
+        let fmt = r.format.unwrap_or(policy_fmt);
+        match groups.iter_mut().find(|(f, _)| *f == fmt) {
+            Some((_, g)) => g.push(r),
+            None => groups.push((fmt, vec![r])),
+        }
+    }
+    groups
+}
+
+/// Execute one per-format scoring sub-batch and respond to every request
+/// in it (shared by both worker-loop flavours).
+fn execute_score_group(
+    engine: &ElasticEngine,
+    config: &ServerConfig,
+    metrics: &Mutex<Metrics>,
+    slo: &Mutex<SloState>,
+    queue_depth: usize,
+    fmt: ElementFormat,
+    group: Vec<ScoreRequest>,
+) {
+    let t0 = Instant::now();
+    // Sub-batches execute at their true size; only the PJRT graph pads
+    // internally to its fixed batch shape.
+    let width = engine.dims().seq_len + 1;
+    let mut flat = Vec::with_capacity(group.len() * width);
+    for r in &group {
+        flat.extend_from_slice(&r.tokens);
+    }
+    let result = engine.score_batch(&flat, fmt);
+    let elapsed = t0.elapsed();
+    slo.lock().unwrap().observe(&config.policy, elapsed.as_secs_f64());
+
+    match result {
+        Ok(nlls) => {
+            let bs = group.len();
+            let latencies: Vec<Duration> = group.iter().map(|r| r.enqueued.elapsed()).collect();
+            // One metrics lock per executed sub-batch.
+            {
+                let mut m = metrics.lock().unwrap();
+                for latency in &latencies {
+                    m.record(fmt, latency.as_secs_f64(), bs, elapsed.as_secs_f64());
+                }
+                m.set_cache(engine.cache_stats());
+            }
+            for ((j, req), latency) in group.into_iter().enumerate().zip(latencies) {
+                let _ = req.respond.send(Ok(ScoreResponse {
+                    nll: nlls[j],
+                    format: fmt,
+                    batch_size: bs,
+                    queue_depth,
+                    latency,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("batch execution failed: {e:#}");
+            log::error!("{msg}");
+            for req in group {
+                let _ = req.respond.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// Execute one legacy gather-mode generation group (fixed membership, one
+/// shared format/budget/cfg) and respond to every request in it.
+#[allow(clippy::too_many_arguments)]
+fn execute_gen_group(
+    engine: &ElasticEngine,
+    config: &ServerConfig,
+    metrics: &Mutex<Metrics>,
+    slo: &Mutex<SloState>,
+    queue_depth: usize,
+    fmt: ElementFormat,
+    n_tokens: usize,
+    cfg: SampleCfg,
+    group: Vec<GenerateRequest>,
+) {
+    let t0 = Instant::now();
+    let result = {
+        let prompts: Vec<&str> = group.iter().map(|r| r.prompt.as_str()).collect();
+        engine.generate_batch(&prompts, fmt, n_tokens, &cfg)
+    };
+    let elapsed = t0.elapsed();
+    // The SLO ladder tracks *batch execution* latency. A whole decode is
+    // `n_tokens` step-synchronized passes, so feed the per-step time —
+    // feeding the full decode duration would let a single long generation
+    // blow the EWMA past any scoring-scale target and pin the ladder at
+    // the bottom rung.
+    slo.lock()
+        .unwrap()
+        .observe(&config.policy, elapsed.as_secs_f64() / n_tokens.max(1) as f64);
+
+    match result {
+        Ok(texts) => {
+            let bs = group.len();
+            let latencies: Vec<Duration> = group.iter().map(|r| r.enqueued.elapsed()).collect();
+            {
+                let mut m = metrics.lock().unwrap();
+                for latency in &latencies {
+                    m.record_generate(
+                        fmt,
+                        latency.as_secs_f64(),
+                        bs,
+                        elapsed.as_secs_f64(),
+                        n_tokens as u64,
+                    );
+                }
+                m.set_cache(engine.cache_stats());
+            }
+            for ((req, text), latency) in group.into_iter().zip(texts).zip(latencies) {
+                let _ = req.respond.send(Ok(GenerateResponse {
+                    text,
+                    format: fmt,
+                    batch_size: bs,
+                    queue_depth,
+                    latency,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("batched generation failed: {e:#}");
+            log::error!("{msg}");
+            for req in group {
+                let _ = req.respond.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
+    engine: &ElasticEngine,
+    config: &ServerConfig,
+    queue: &Mutex<Receiver<Request>>,
+    metrics: &Mutex<Metrics>,
+    depth: &AtomicUsize,
+    alive: &AtomicBool,
+    slo: &Mutex<SloState>,
+) {
+    if config.batching == GenBatching::Continuous {
+        let slots = if config.decode_slots == 0 {
+            engine.dims().train_batch
+        } else {
+            config.decode_slots
+        };
+        match engine.decode_session(slots) {
+            Ok(session) => {
+                continuous_loop(engine, config, queue, metrics, depth, alive, slo, session);
+                log::info!(
+                    "server worker exiting; {}",
+                    metrics.lock().unwrap().summary()
+                );
+                return;
+            }
+            Err(e) => log::warn!(
+                "backend '{}' has no continuous-decode surface ({e:#}); \
+                 generate lane falls back to gather batching",
+                engine.backend_name()
+            ),
+        }
+    }
+    gather_loop(engine, config, queue, metrics, depth, alive, slo);
+    log::info!(
+        "server worker exiting; {}",
+        metrics.lock().unwrap().summary()
+    );
+}
+
+/// Legacy batching loop: gather → split into per-format (and, for
+/// generation, per-budget/cfg) groups → execute each group to completion.
+#[allow(clippy::too_many_arguments)]
+fn gather_loop(
     engine: &ElasticEngine,
     config: &ServerConfig,
     queue: &Mutex<Receiver<Request>>,
@@ -393,25 +673,13 @@ fn worker_loop(
         let queue_depth = depth.load(Ordering::Acquire);
         depth.fetch_sub(batch.len(), Ordering::AcqRel);
 
-        // Unpinned requests take the policy's pick for the current queue
-        // depth; pinned requests must be served at their pin, so the batch
-        // splits into per-format sub-batches (one execution each) instead
-        // of letting the first pin silently win for everyone. Generation
-        // additionally groups by (n_tokens, cfg) so one batched decode is
-        // token-identical to serving each prompt alone.
         let policy_fmt = config.policy.choose_with(queue_depth, &slo.lock().unwrap());
-        let mut score_groups: Vec<(ElementFormat, Vec<ScoreRequest>)> = Vec::new();
+        let mut scores: Vec<ScoreRequest> = Vec::new();
         let mut gen_groups: Vec<(ElementFormat, usize, SampleCfg, Vec<GenerateRequest>)> =
             Vec::new();
         for req in batch {
             match req {
-                Request::Score(r) => {
-                    let fmt = r.format.unwrap_or(policy_fmt);
-                    match score_groups.iter_mut().find(|(f, _)| *f == fmt) {
-                        Some((_, reqs)) => reqs.push(r),
-                        None => score_groups.push((fmt, vec![r])),
-                    }
-                }
+                Request::Score(r) => scores.push(r),
                 Request::Generate(r) => {
                     let fmt = r.format.unwrap_or(policy_fmt);
                     match gen_groups
@@ -424,104 +692,210 @@ fn worker_loop(
                 }
             }
         }
+        for (fmt, group) in group_scores(scores, policy_fmt) {
+            execute_score_group(engine, config, metrics, slo, queue_depth, fmt, group);
+        }
+        for (fmt, n_tokens, cfg, group) in gen_groups {
+            execute_gen_group(
+                engine, config, metrics, slo, queue_depth, fmt, n_tokens, cfg, group,
+            );
+        }
+    }
+}
 
-        for (fmt, group) in score_groups {
-            let t0 = Instant::now();
-            // Sub-batches execute at their true size; only the PJRT graph
-            // pads internally to its fixed batch shape.
-            let width = engine.dims().seq_len + 1;
-            let mut flat = Vec::with_capacity(group.len() * width);
-            for r in &group {
-                flat.extend_from_slice(&r.tokens);
+/// Server-side bookkeeping for one live row of a worker's continuous
+/// decode session.
+struct GenRow {
+    respond: Sender<std::result::Result<GenerateResponse, String>>,
+    enqueued: Instant,
+    joined: Instant,
+    fmt: ElementFormat,
+    n_tokens: usize,
+    queue_depth: usize,
+}
+
+/// Continuous-batching loop: one persistent in-flight decode per worker.
+///
+/// Every iteration (a) drains whatever is already queued — without
+/// blocking while rows are decoding, (b) executes scoring sub-batches,
+/// (c) admits queued generation requests into free rows (prefill-on-join,
+/// per-row format from the policy at admission time), and (d) advances the
+/// decode by **one step**, responding to rows that completed. Queue
+/// latency for a new prompt is therefore one decode step, not one whole
+/// batched decode.
+#[allow(clippy::too_many_arguments)]
+fn continuous_loop<'e>(
+    engine: &'e ElasticEngine,
+    config: &ServerConfig,
+    queue: &Mutex<Receiver<Request>>,
+    metrics: &Mutex<Metrics>,
+    depth: &AtomicUsize,
+    alive: &AtomicBool,
+    slo: &Mutex<SloState>,
+    mut session: Box<dyn DecodeSession + 'e>,
+) {
+    let b = engine.dims().train_batch;
+    let mut backlog: VecDeque<GenerateRequest> = VecDeque::new();
+    let mut rows: Vec<Option<GenRow>> = (0..session.capacity()).map(|_| None).collect();
+    loop {
+        // (a) Take work from the shared queue. Idle workers block exactly
+        // like the gather loop (so shutdown and wakeup semantics match);
+        // workers with live rows only sweep what is already queued so the
+        // decode never stalls on an empty queue. A worker whose session is
+        // *full* stops draining while it has pool peers: anything it pulled
+        // would sit in its private backlog for whole decodes while an idle
+        // peer could serve it now (a lone worker keeps draining — there is
+        // nobody else, and interleaving score batches between steps beats
+        // letting them wait for a row to finish).
+        let busy = session.active() > 0 || !backlog.is_empty();
+        // Shutdown must not wait out arbitrarily long in-flight budgets
+        // (n_tokens is client-controlled): fail the live rows and exit.
+        if busy && !alive.load(Ordering::Acquire) {
+            let msg = "server is shutting down".to_string();
+            for slot in rows.iter_mut() {
+                if let Some(row) = slot.take() {
+                    let _ = row.respond.send(Err(msg.clone()));
+                }
             }
-            let result = engine.score_batch(&flat, fmt);
-            let elapsed = t0.elapsed();
-            slo.lock().unwrap().observe(&config.policy, elapsed.as_secs_f64());
+            for r in backlog.drain(..) {
+                let _ = r.respond.send(Err(msg.clone()));
+            }
+            break;
+        }
+        let batch = if busy {
+            if config.workers > 1 && session.active() == session.capacity() {
+                Vec::new()
+            } else {
+                drain_ready(queue, b)
+            }
+        } else {
+            match gather(queue, b, config.gather_window, alive) {
+                Some(batch) => batch,
+                None => break,
+            }
+        };
+        let queue_depth = depth.load(Ordering::Acquire);
+        if !batch.is_empty() {
+            depth.fetch_sub(batch.len(), Ordering::AcqRel);
+        }
+        let mut scores: Vec<ScoreRequest> = Vec::new();
+        for req in batch {
+            match req {
+                Request::Score(r) => scores.push(r),
+                Request::Generate(r) => backlog.push_back(r),
+            }
+        }
 
-            match result {
-                Ok(nlls) => {
-                    let bs = group.len();
-                    let latencies: Vec<Duration> =
-                        group.iter().map(|r| r.enqueued.elapsed()).collect();
-                    // One metrics lock per executed sub-batch.
-                    {
-                        let mut m = metrics.lock().unwrap();
-                        for latency in &latencies {
-                            m.record(fmt, latency.as_secs_f64(), bs, elapsed.as_secs_f64());
-                        }
-                        m.set_cache(engine.cache_stats());
-                    }
-                    for ((j, req), latency) in group.into_iter().enumerate().zip(latencies) {
-                        let _ = req.respond.send(Ok(ScoreResponse {
-                            nll: nlls[j],
-                            format: fmt,
-                            batch_size: bs,
-                            queue_depth,
-                            latency,
-                        }));
-                    }
+        // (b) Scoring executes between decode steps, exactly as before.
+        if !scores.is_empty() {
+            let policy_fmt = config.policy.choose_with(queue_depth, &slo.lock().unwrap());
+            for (fmt, group) in group_scores(scores, policy_fmt) {
+                execute_score_group(engine, config, metrics, slo, queue_depth, fmt, group);
+            }
+        }
+
+        // (c) Admit queued prompts into free rows: they prefill on the very
+        // next step while their neighbours keep decoding. The precision
+        // policy runs per row at admission time, so one in-flight decode
+        // carries as many formats as the load swung through.
+        while session.active() < session.capacity() {
+            let Some(r) = backlog.pop_front() else { break };
+            let d = depth.load(Ordering::Acquire) + backlog.len();
+            let fmt = match r.format {
+                Some(f) => f,
+                None => config.policy.choose_with(d, &slo.lock().unwrap()),
+            };
+            match session.join(&r.prompt, fmt, r.n_tokens, &r.cfg) {
+                Ok(slot) => {
+                    rows[slot] = Some(GenRow {
+                        respond: r.respond,
+                        enqueued: r.enqueued,
+                        joined: Instant::now(),
+                        fmt,
+                        n_tokens: r.n_tokens,
+                        queue_depth: d,
+                    });
                 }
                 Err(e) => {
-                    let msg = format!("batch execution failed: {e:#}");
+                    let msg = format!("generation admission failed: {e:#}");
                     log::error!("{msg}");
-                    for req in group {
-                        let _ = req.respond.send(Err(msg.clone()));
-                    }
+                    let _ = r.respond.send(Err(msg));
                 }
             }
         }
 
-        for (fmt, n_tokens, cfg, group) in gen_groups {
-            let t0 = Instant::now();
-            let result = {
-                let prompts: Vec<&str> = group.iter().map(|r| r.prompt.as_str()).collect();
-                engine.generate_batch(&prompts, fmt, n_tokens, &cfg)
-            };
-            let elapsed = t0.elapsed();
-            slo.lock().unwrap().observe(&config.policy, elapsed.as_secs_f64());
-
-            match result {
-                Ok(texts) => {
-                    let bs = group.len();
-                    let latencies: Vec<Duration> =
-                        group.iter().map(|r| r.enqueued.elapsed()).collect();
-                    {
-                        let mut m = metrics.lock().unwrap();
-                        for latency in &latencies {
-                            m.record_generate(
-                                fmt,
-                                latency.as_secs_f64(),
-                                bs,
-                                elapsed.as_secs_f64(),
-                                n_tokens as u64,
-                            );
-                        }
-                        m.set_cache(engine.cache_stats());
-                    }
-                    for ((req, text), latency) in
-                        group.into_iter().zip(texts).zip(latencies)
-                    {
-                        let _ = req.respond.send(Ok(GenerateResponse {
-                            text,
-                            format: fmt,
-                            batch_size: bs,
-                            queue_depth,
-                            latency,
-                        }));
+        // (d) One decode step for every live row; completed rows respond
+        // immediately and free their slots for the next iteration's joins.
+        if session.active() == 0 {
+            continue;
+        }
+        let bs = session.active();
+        match session.step() {
+            Ok(finished) => {
+                let mut done = Vec::with_capacity(finished.len());
+                for f in finished {
+                    if let Some(row) = rows[f.slot].take() {
+                        let latency = row.enqueued.elapsed();
+                        let service = row.joined.elapsed();
+                        done.push((row, f.text, latency, service));
                     }
                 }
-                Err(e) => {
-                    let msg = format!("batched generation failed: {e:#}");
-                    log::error!("{msg}");
-                    for req in group {
-                        let _ = req.respond.send(Err(msg.clone()));
+                if done.is_empty() {
+                    continue;
+                }
+                {
+                    // Feed the SLO per-step time, not the whole decode's
+                    // service time (see `execute_gen_group`): a row's
+                    // service spans `n_tokens` step-synchronized passes.
+                    let mut s = slo.lock().unwrap();
+                    for (row, _, _, service) in &done {
+                        s.observe(
+                            &config.policy,
+                            service.as_secs_f64() / row.n_tokens.max(1) as f64,
+                        );
+                    }
+                }
+                {
+                    let mut m = metrics.lock().unwrap();
+                    for (row, _, latency, service) in &done {
+                        m.record_generate(
+                            row.fmt,
+                            latency.as_secs_f64(),
+                            bs,
+                            service.as_secs_f64(),
+                            row.n_tokens as u64,
+                        );
+                    }
+                    m.set_cache(engine.cache_stats());
+                }
+                for (row, text, latency, _) in done {
+                    let _ = row.respond.send(Ok(GenerateResponse {
+                        text,
+                        format: row.fmt,
+                        batch_size: bs,
+                        queue_depth: row.queue_depth,
+                        latency,
+                    }));
+                }
+            }
+            Err(e) => {
+                // A step failure poisons the whole in-flight batch: fail
+                // every live row and restart from a fresh session.
+                let msg = format!("continuous decode step failed: {e:#}");
+                log::error!("{msg}");
+                for slot in rows.iter_mut() {
+                    if let Some(row) = slot.take() {
+                        let _ = row.respond.send(Err(msg.clone()));
+                    }
+                }
+                match engine.decode_session(session.capacity()) {
+                    Ok(s) => session = s,
+                    Err(e) => {
+                        log::error!("could not reopen the decode session: {e:#}");
+                        break;
                     }
                 }
             }
         }
     }
-    log::info!(
-        "server worker exiting; {}",
-        metrics.lock().unwrap().summary()
-    );
 }

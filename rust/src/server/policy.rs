@@ -30,7 +30,9 @@ pub enum Policy {
 /// Mutable state for [`Policy::Slo`] (EWMA latency + current rung).
 #[derive(Debug, Clone)]
 pub struct SloState {
+    /// Current ladder rung (0 = highest precision).
     pub rung: usize,
+    /// EWMA of observed batch latency, in seconds.
     pub ewma_s: f64,
 }
 

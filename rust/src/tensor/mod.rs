@@ -11,11 +11,14 @@ use anyhow::{bail, Result};
 /// A dense, row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
+    /// Flat f32 data.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// New tensor (errors when shape and data disagree).
     pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -27,6 +30,7 @@ impl Tensor {
         })
     }
 
+    /// All-zeros tensor of `shape`.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
@@ -34,6 +38,7 @@ impl Tensor {
         }
     }
 
+    /// Constant-filled tensor of `shape`.
     pub fn full(shape: &[usize], v: f32) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
@@ -50,10 +55,12 @@ impl Tensor {
         }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -73,6 +80,7 @@ impl Tensor {
         self.shape.last().copied().unwrap_or(1)
     }
 
+    /// L2 norm of the data.
     pub fn l2(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }

@@ -17,7 +17,9 @@ use anyhow::{bail, Result};
 /// A tensor stored in a microscaling format.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MxTensor {
+    /// The microscaling format (element type + block size).
     pub format: MxFormat,
+    /// Logical tensor shape (row-major).
     pub shape: Vec<usize>,
     /// One scale exponent per block, row-major block order.
     pub scales: Vec<i8>,
@@ -70,6 +72,7 @@ impl MxTensor {
         self.shape.iter().product()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -25,9 +25,13 @@ use optimizer::OptState;
 /// Training driver bound to one artifact set.
 #[cfg(feature = "pjrt")]
 pub struct Trainer<'a> {
+    /// PJRT runtime.
     pub rt: &'a Runtime,
+    /// AOT artifacts (train-step graphs).
     pub arts: &'a ArtifactSet,
+    /// Current parameters.
     pub params: ParamSet,
+    /// Optimizer step counter.
     pub step: i32,
     opt: Option<OptState>,
 }
@@ -35,15 +39,21 @@ pub struct Trainer<'a> {
 /// Per-epoch training record.
 #[derive(Debug, Clone)]
 pub struct EpochStats {
+    /// Plan/variant name.
     pub variant: String,
+    /// Mean loss across the epoch.
     pub mean_loss: f64,
+    /// First-step loss.
     pub first_loss: f32,
+    /// Last-step loss.
     pub last_loss: f32,
+    /// Steps executed.
     pub steps: usize,
 }
 
 #[cfg(feature = "pjrt")]
 impl<'a> Trainer<'a> {
+    /// New trainer over `params` bound to a runtime + artifact set.
     pub fn new(rt: &'a Runtime, arts: &'a ArtifactSet, params: ParamSet) -> Trainer<'a> {
         Trainer {
             rt,

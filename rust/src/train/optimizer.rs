@@ -9,7 +9,9 @@ use crate::tensor::Tensor;
 pub struct OptState {
     /// Indices (into the manifest param order) this state covers.
     pub idx: Vec<usize>,
+    /// First-moment (momentum) accumulator.
     pub m: Vec<Tensor>,
+    /// Second-moment accumulator.
     pub v: Vec<Tensor>,
 }
 

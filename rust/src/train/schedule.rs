@@ -14,14 +14,18 @@ use anyhow::{bail, Result};
 /// One schedule phase: a train-step variant run for `epochs` epochs.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Phase {
+    /// Train-step variant this phase runs.
     pub variant: String,
+    /// Epochs to run the variant for.
     pub epochs: usize,
 }
 
 /// A named training plan.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TrainPlan {
+    /// Plan name.
     pub name: String,
+    /// Ordered phases.
     pub phases: Vec<Phase>,
 }
 
@@ -39,6 +43,7 @@ impl TrainPlan {
         }
     }
 
+    /// Total epochs across all phases.
     pub fn total_epochs(&self) -> usize {
         self.phases.iter().map(|p| p.epochs).sum()
     }

@@ -2,14 +2,39 @@
 //!
 //! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
 //! arguments. Subcommand dispatch lives in `main.rs`.
+//!
+//! # Runtime configuration surface (canonical reference)
+//!
+//! The knobs below steer *how* the engine executes, independent of what a
+//! subcommand computes. This table is the one place they are documented —
+//! kernel and backend module docs link here.
+//!
+//! **Flags** (every `mfqat` subcommand that runs inference):
+//!
+//! | flag | values | effect |
+//! |------|--------|--------|
+//! | `--backend` | `native` (default) \| `pjrt` | `native` executes packed MX codes directly (no XLA, no AOT artifacts); `pjrt` runs the AOT HLO path and needs `--features pjrt` plus exported artifacts. |
+//! | `--act` | `f32` (default) \| `int8` | Activation pipeline for packed linears on the native backend: `f32` keeps dequantize-oracle parity; `int8` quantizes activations per MX block and runs the integer-MAC GEMM. Rejected for `--backend pjrt` (that graph is f32-only). |
+//! | `--batching` | `continuous` (default) \| `gather` | Generate-lane batching for `serve`: continuous batching admits prompts into the in-flight decode every step with per-row formats; `gather` restores the legacy grouped batched decode. |
+//! | `--slots` | integer (default `0` = model `train_batch`) | Sequence rows in each serve worker's continuous decode session. |
+//!
+//! **Environment variables** (read once per process):
+//!
+//! | variable | values | effect |
+//! |----------|--------|--------|
+//! | `MFQAT_THREADS` | integer ≥ 1 | Pins the kernel worker-thread count (default: detected cores). Benches pin to 1 so pool scaling is not confounded by kernel fan-out. |
+//! | `MFQAT_SIMD` | `off`/`0`/`false`/`portable`/`none` | Forces the integer-MAC tile kernels onto the portable scalar loop (the differential-test oracle); any other value, or unset, keeps the runtime-detected AVX2/NEON dispatch. |
 
 use std::collections::BTreeMap;
 
 /// Parsed arguments: positionals in order + `--key value` options.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Positional arguments in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -45,18 +70,22 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether `--name` was passed as a bare flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Option value for `--name`.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Option value for `--name`, with a default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Integer option with a default.
     pub fn usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -66,6 +95,7 @@ impl Args {
         }
     }
 
+    /// `u64` option with a default.
     pub fn u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -75,6 +105,7 @@ impl Args {
         }
     }
 
+    /// Float option with a default.
     pub fn f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(name) {
             None => Ok(default),

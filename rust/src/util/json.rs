@@ -12,11 +12,17 @@ use std::fmt;
 /// A JSON value. Object keys are ordered (BTreeMap) for stable output.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// Boolean.
     Bool(bool),
+    /// Number (stored as f64).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (ordered keys).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -24,16 +30,20 @@ pub enum Json {
 #[derive(Debug, thiserror::Error)]
 #[error("json parse error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset of the error.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
 impl Json {
     // ---------------------------------------------------------- constructors
+    /// Empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Object from key/value pairs.
     pub fn from_pairs<I: IntoIterator<Item = (&'static str, Json)>>(pairs: I) -> Json {
         let mut m = BTreeMap::new();
         for (k, v) in pairs {
@@ -55,6 +65,7 @@ impl Json {
     }
 
     // --------------------------------------------------------------- getters
+    /// Object field by key (`None` on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -62,6 +73,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -69,14 +81,17 @@ impl Json {
         }
     }
 
+    /// Numeric value as `usize`, if a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Numeric value as `i64`, if a number.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|x| x as i64)
     }
 
+    /// String value, if a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -84,6 +99,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -91,6 +107,7 @@ impl Json {
         }
     }
 
+    /// Array items, if an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -98,6 +115,7 @@ impl Json {
         }
     }
 
+    /// Object map, if an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -111,24 +129,28 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing json key '{key}'"))
     }
 
+    /// Required string field (error when missing or mistyped).
     pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
         self.req(key)?
             .as_str()
             .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not a string"))
     }
 
+    /// Required `usize` field.
     pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
         self.req(key)?
             .as_usize()
             .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not a number"))
     }
 
+    /// Required `f64` field.
     pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
         self.req(key)?
             .as_f64()
             .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not a number"))
     }
 
+    /// Required array field.
     pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.req(key)?
             .as_arr()
@@ -161,6 +183,7 @@ impl Json {
     }
 
     // --------------------------------------------------------------- parsing
+    /// Parse JSON text.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let bytes = text.as_bytes();
         let mut p = Parser { b: bytes, i: 0 };

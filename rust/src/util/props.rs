@@ -9,10 +9,12 @@ use super::rng::Rng;
 
 /// Generation context handed to each property case.
 pub struct Gen {
+    /// Case RNG (seeded per case for exact replay).
     pub rng: Rng,
     /// Size hint in [0.0, 1.0]; generators should scale magnitudes/lengths by
     /// it so that re-runs with smaller sizes produce simpler counterexamples.
     pub size: f64,
+    /// Zero-based case index.
     pub case: usize,
 }
 

@@ -14,6 +14,7 @@ pub struct Running {
 }
 
 impl Running {
+    /// Empty accumulator.
     pub fn new() -> Running {
         Running {
             n: 0,
@@ -24,6 +25,7 @@ impl Running {
         }
     }
 
+    /// Push one sample.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -33,14 +35,17 @@ impl Running {
         self.max = self.max.max(x);
     }
 
+    /// Samples seen.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Mean of the samples.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Sample variance.
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -49,14 +54,17 @@ impl Running {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
 
+    /// Smallest sample.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -83,6 +91,7 @@ impl Default for LatencyHist {
 }
 
 impl LatencyHist {
+    /// Empty histogram.
     pub fn new() -> LatencyHist {
         LatencyHist {
             buckets: vec![0; BUCKETS_PER_DECADE * DECADES + 2],
@@ -102,6 +111,7 @@ impl LatencyHist {
         idx.min(BUCKETS_PER_DECADE * DECADES + 1)
     }
 
+    /// Record one latency sample (seconds).
     pub fn record(&mut self, secs: f64) {
         self.buckets[Self::bucket_index(secs)] += 1;
         self.seen += 1;
@@ -120,6 +130,7 @@ impl LatencyHist {
         }
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.seen
     }
@@ -135,6 +146,7 @@ impl LatencyHist {
         v[idx]
     }
 
+    /// One-line `n`/`p50`/`p95`/`p99` summary.
     pub fn summary(&self) -> String {
         format!(
             "n={} p50={} p95={} p99={}",

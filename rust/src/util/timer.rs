@@ -9,20 +9,24 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start a stopwatch.
     pub fn start() -> Timer {
         Timer {
             start: Instant::now(),
         }
     }
 
+    /// Elapsed time.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Elapsed seconds.
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
 
+    /// Elapsed milliseconds.
     pub fn millis(&self) -> f64 {
         self.secs() * 1e3
     }
@@ -55,16 +59,24 @@ pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time_s: f64, mut f: F
 /// Summary statistics for one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Iterations measured.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub p50_s: f64,
+    /// 95th-percentile seconds per iteration.
     pub p95_s: f64,
+    /// Fastest iteration, seconds.
     pub min_s: f64,
+    /// Slowest iteration, seconds.
     pub max_s: f64,
 }
 
 impl BenchResult {
+    /// Build stats from raw per-iteration samples (sorted internally).
     pub fn from_samples(name: &str, mut samples: Vec<f64>) -> BenchResult {
         assert!(!samples.is_empty());
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());

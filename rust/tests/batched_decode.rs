@@ -4,13 +4,21 @@
 //! activation modes. Exactness assertions, not tolerances: every per-row
 //! computation in the batched forward is row-independent, so the outputs
 //! must agree bit for bit.
+//!
+//! The continuous-batching sections extend the same oracle to **per-row
+//! elastic formats** and **mid-flight membership changes**: rows in
+//! MXINT8/MXINT4/MXFP8 decode in one step-synchronized pass, prompts join
+//! and retire between any two steps, freed slots are reused — and every
+//! row's text must still equal a solo decode at that row's format.
 
 use mfqat::backend::forward::{forward_cached, forward_cached_batch, KvCache};
-use mfqat::backend::{ActMode, NativeWeights};
+use mfqat::backend::{ActMode, DecodeSession as _, NativeWeights, SharedParams};
 use mfqat::coordinator::ElasticEngine;
-use mfqat::eval::generate::{generate_native, generate_native_batch, SampleCfg};
+use mfqat::eval::generate::{ContinuousBatch, generate_native, generate_native_batch, SampleCfg};
 use mfqat::formats::ElementFormat;
 use mfqat::model::{ModelDims, ParamSet};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Byte-level prompts need the full 256-token vocab; keep everything else
 /// tiny so the full format × act-mode matrix stays fast.
@@ -87,6 +95,232 @@ fn engine_generate_batch_matches_engine_generate() {
     }
     // Batched generation at a new format is one cache derivation.
     assert_eq!(engine.cached_formats(), 1);
+}
+
+/// Build one weight set per format, all sharing a single `Arc`'d f32
+/// parameter set (the precondition for mixing rows in one batch).
+fn shared_weight_sets(
+    dims: &ModelDims,
+    ck: &mfqat::checkpoint::Checkpoint,
+    formats: &[ElementFormat],
+    act: ActMode,
+) -> Vec<NativeWeights> {
+    let shared = Arc::new(SharedParams::from_checkpoint(dims, ck).unwrap());
+    formats
+        .iter()
+        .map(|&fmt| {
+            NativeWeights::packed_with_shared(dims, ck, fmt, shared.clone(), act).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn mixed_format_rows_with_midflight_joins_match_solo() {
+    // The acceptance scenario: rows in MXINT8, MXINT4 and MXFP8 decode in
+    // ONE step-synchronized batch; a third prompt joins mid-flight; the
+    // first finished row's slot is immediately reused by a fourth prompt
+    // with yet another budget — and every row's continuation is exactly the
+    // tokens of a solo `generate_native` with that row's weight set.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 44, ElementFormat::int(8));
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 6,
+        seed: 19,
+    };
+    for act in [ActMode::F32, ActMode::Int8] {
+        let ws = shared_weight_sets(
+            &dims,
+            &ck,
+            &[
+                ElementFormat::int(8),
+                ElementFormat::int(4),
+                ElementFormat::fp_from_bits(8),
+            ],
+            act,
+        );
+        let (w8, w4, wf8) = (&ws[0], &ws[1], &ws[2]);
+        let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::new(&dims, 3);
+        let mut expect: HashMap<usize, (&NativeWeights, &str, usize)> = HashMap::new();
+        // n_tokens > seq_len on one row so a re-prefill lands mid-batch.
+        let s = cb.join(w8, "kova", 10, &cfg).unwrap();
+        expect.insert(s, (w8, "kova", 10));
+        let s = cb.join(w4, "the color of kova is violet", dims.seq_len + 6, &cfg).unwrap();
+        expect.insert(s, (w4, "the color of kova is violet", dims.seq_len + 6));
+
+        let mut steps = 0usize;
+        let mut joined_fp8 = false;
+        let mut reused_slot = false;
+        let mut finished_rows = 0usize;
+        while cb.active() > 0 {
+            for f in cb.step().unwrap() {
+                let (w, p, n) = expect.remove(&f.slot).expect("unexpected slot finished");
+                let solo = generate_native(w, p, n, &cfg).unwrap();
+                assert_eq!(
+                    f.text, solo,
+                    "act={} slot {} (prompt {p:?}, fmt {:?}): continuous decode diverged",
+                    act.name(),
+                    f.slot,
+                    w.fmt
+                );
+                finished_rows += 1;
+                if !reused_slot {
+                    // Immediately reuse the freed slot while the other
+                    // rows keep decoding — in a different format again.
+                    let s = cb.join(w4, "q", 8, &cfg).unwrap();
+                    assert_eq!(s, f.slot, "lowest free slot is the one just retired");
+                    expect.insert(s, (w4, "q", 8));
+                    reused_slot = true;
+                }
+            }
+            steps += 1;
+            if steps == 2 {
+                // Mid-flight join in a third format: prefill-on-join rides
+                // the next step while neighbours decode single tokens.
+                let s = cb.join(wf8, "blue", 12, &cfg).unwrap();
+                expect.insert(s, (wf8, "blue", 12));
+                joined_fp8 = true;
+            }
+            assert!(steps < 500, "continuous decode did not converge");
+        }
+        assert!(joined_fp8 && reused_slot);
+        assert_eq!(finished_rows, 4, "all four sequences completed");
+        assert!(expect.is_empty());
+    }
+}
+
+#[test]
+fn engine_decode_session_serves_mixed_formats_with_joins() {
+    // The Backend surface the server drives: per-row formats resolve
+    // through the engine's FormatCache, mid-flight joins and cancels work,
+    // and every row matches the engine's own solo `generate`.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 45, ElementFormat::int(8));
+    let engine = ElasticEngine::native(dims.clone(), ck, 64 << 20).unwrap();
+    let cfg = SampleCfg {
+        temperature: 0.6,
+        top_k: 4,
+        seed: 5,
+    };
+    let mut session = engine.decode_session(3).unwrap();
+    assert_eq!(session.capacity(), 3);
+    let mut expect: HashMap<usize, (&str, ElementFormat, usize)> = HashMap::new();
+    for (p, fmt, n) in [
+        ("kova", ElementFormat::int(8), 9usize),
+        ("ab", ElementFormat::int(4), 13),
+    ] {
+        let s = session.join(p, fmt, n, &cfg).unwrap();
+        expect.insert(s, (p, fmt, n));
+    }
+    let mut steps = 0usize;
+    let mut joined_late = false;
+    let mut finished_rows = 0usize;
+    while session.active() > 0 {
+        for f in session.step().unwrap() {
+            let (p, fmt, n) = expect.remove(&f.slot).expect("unexpected slot finished");
+            let solo = engine.generate(p, fmt, n, &cfg).unwrap();
+            assert_eq!(f.text, solo, "slot {} ({p:?} at {fmt}) diverged", f.slot);
+            finished_rows += 1;
+        }
+        steps += 1;
+        if steps == 3 && !joined_late {
+            let s = session
+                .join("blue", ElementFormat::fp_from_bits(6), 7, &cfg)
+                .unwrap();
+            expect.insert(s, ("blue", ElementFormat::fp_from_bits(6), 7));
+            joined_late = true;
+        }
+        assert!(steps < 300, "session did not converge");
+    }
+    assert_eq!(finished_rows, 3);
+    assert!(expect.is_empty());
+    // Cancel frees the slot without emitting a result.
+    let s = session.join("qq", ElementFormat::int(6), 50, &cfg).unwrap();
+    session.step().unwrap();
+    session.cancel(s).unwrap();
+    assert_eq!(session.active(), 0);
+    assert!(session.cancel(s).is_err(), "double-cancel is an error");
+}
+
+#[test]
+fn prop_join_retire_order_never_changes_surviving_rows() {
+    // Property: retiring a random row mid-decode and joining a new prompt
+    // into the freed slot never perturbs the surviving rows — each still
+    // emits exactly its solo tokens, whatever the membership churn.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 46, ElementFormat::int(8));
+    let formats = [
+        ElementFormat::int(8),
+        ElementFormat::int(6),
+        ElementFormat::int(4),
+        ElementFormat::fp_from_bits(8),
+    ];
+    let weights = shared_weight_sets(&dims, &ck, &formats, ActMode::F32);
+    let prompts = ["k", "kova blue", "the color of kova", "", "qq"];
+    let cfg = SampleCfg {
+        temperature: 0.9,
+        top_k: 5,
+        seed: 27,
+    };
+    mfqat::util::props::run_cases("join_retire_survivors", 10, |g| {
+        let rows = 3usize;
+        let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::new(&dims, rows);
+        let mut expect: HashMap<usize, (&NativeWeights, &str, usize)> = HashMap::new();
+        let max_n = 4 + g.len(2, 2 * dims.seq_len);
+        for _ in 0..rows {
+            let w = &weights[g.rng.below(weights.len())];
+            let p = prompts[g.rng.below(prompts.len())];
+            let n = g.rng.range(4, max_n + 1);
+            let s = cb.join(w, p, n, &cfg).unwrap();
+            expect.insert(s, (w, p, n));
+        }
+        // A few steps in (before anything can finish: n ≥ 4), retire a
+        // random live row and join a fresh prompt into the freed slot.
+        let retire_after = g.rng.range(1, 4);
+        for _ in 0..retire_after {
+            if !cb.step().map_err(|e| e.to_string())?.is_empty() {
+                return Err("a row finished before its budget".into());
+            }
+        }
+        let victims: Vec<usize> = expect.keys().copied().collect();
+        let victim = victims[g.rng.below(victims.len())];
+        cb.retire(victim).map_err(|e| e.to_string())?;
+        expect.remove(&victim);
+        let w = &weights[g.rng.below(weights.len())];
+        let p = prompts[g.rng.below(prompts.len())];
+        let n = g.rng.range(4, max_n + 1);
+        let s = cb.join(w, p, n, &cfg).map_err(|e| e.to_string())?;
+        if s != victim {
+            return Err(format!("expected freed slot {victim}, joined into {s}"));
+        }
+        expect.insert(s, (w, p, n));
+        // Run to completion: every surviving (and newly joined) row must
+        // match its solo decode exactly.
+        let mut steps = 0usize;
+        while cb.active() > 0 {
+            for f in cb.step().map_err(|e| e.to_string())? {
+                let (w, p, n) = expect
+                    .remove(&f.slot)
+                    .ok_or_else(|| format!("unexpected slot {} finished", f.slot))?;
+                let solo = generate_native(w, p, n, &cfg).map_err(|e| e.to_string())?;
+                if f.text != solo {
+                    return Err(format!(
+                        "slot {} (prompt {p:?}, fmt {:?}, n={n}) diverged after churn: \
+                         batch {:?} vs solo {:?}",
+                        f.slot, w.fmt, f.text, solo
+                    ));
+                }
+            }
+            steps += 1;
+            if steps > 4 * max_n + 50 {
+                return Err("decode did not converge".into());
+            }
+        }
+        if !expect.is_empty() {
+            return Err("not every joined row finished".into());
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -1,7 +1,9 @@
 //! Elastic server integration over the native backend: batching,
 //! policy-driven format selection, pinned formats (including mixed pins in
-//! one gather window), the generation lane, multi-worker pools sharing one
-//! engine, metrics/cache counters, and graceful shutdown.
+//! one gather window), the generation lane (continuous batching by
+//! default, with per-row formats/budgets and mid-flight joins; legacy
+//! gather batching behind [`GenBatching::Gather`]), multi-worker pools
+//! sharing one engine, metrics/cache counters, and graceful shutdown.
 //!
 //! Runs everywhere — the native backend needs no AOT artifacts and no XLA.
 
@@ -9,7 +11,7 @@ use mfqat::coordinator::ElasticEngine;
 use mfqat::eval::generate::SampleCfg;
 use mfqat::formats::ElementFormat;
 use mfqat::model::{ModelDims, ParamSet};
-use mfqat::server::{Policy, Server, ServerConfig};
+use mfqat::server::{GenBatching, Policy, Server, ServerConfig};
 use std::time::Duration;
 
 /// Small dims so the whole suite stays fast on one core. Vocab 256 so the
@@ -31,7 +33,12 @@ fn test_corpus(width: usize, seed: u64, vocab: usize) -> Vec<Vec<i32>> {
         .collect()
 }
 
-fn start_pool(policy: Policy, seed: u64, workers: usize) -> (Server, mfqat::server::Client, usize) {
+fn start_pool_mode(
+    policy: Policy,
+    seed: u64,
+    workers: usize,
+    batching: GenBatching,
+) -> (Server, mfqat::server::Client, usize) {
     let dims = test_dims();
     let width = dims.seq_len + 1;
     let (server, client) = Server::start(
@@ -46,10 +53,16 @@ fn start_pool(policy: Policy, seed: u64, workers: usize) -> (Server, mfqat::serv
             policy,
             gather_window: Duration::from_millis(1),
             workers,
+            batching,
+            ..Default::default()
         },
     )
     .unwrap();
     (server, client, width)
+}
+
+fn start_pool(policy: Policy, seed: u64, workers: usize) -> (Server, mfqat::server::Client, usize) {
+    start_pool_mode(policy, seed, workers, GenBatching::Continuous)
 }
 
 fn start_server(policy: Policy, seed: u64) -> (Server, mfqat::server::Client, usize) {
@@ -202,6 +215,87 @@ fn generate_lane_serves_batched_continuations() {
     assert_eq!(m.gen_requests, 5);
     assert_eq!(m.gen_tokens, 5 * 8);
     assert!(m.summary().contains("gen["), "{}", m.summary());
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn continuous_lane_serves_mixed_formats_and_budgets_in_flight() {
+    // The continuous generate lane (the default) must serve a burst of
+    // requests pinned to *different* formats with *different* token
+    // budgets — impossible to group under gather batching — with every
+    // response at its own pin, its own length, and text identical to a
+    // solo request at the same pin (token-identity through the serving
+    // path, whatever joined or finished around it).
+    let (server, client, _width) = start_server(Policy::Fixed(ElementFormat::int(8)), 21);
+    let cfg = SampleCfg {
+        temperature: 0.7,
+        top_k: 6,
+        seed: 13,
+    };
+    let jobs = [
+        ("kova", Some(ElementFormat::int(8)), 6usize),
+        ("blue", Some(ElementFormat::int(4)), 11),
+        ("the color", Some(ElementFormat::fp_from_bits(8)), 8),
+        ("q", Some(ElementFormat::int(4)), 15),
+        ("kova", None, 6), // policy pick rides along
+    ];
+    let rxs: Vec<_> = jobs
+        .iter()
+        .map(|(p, pin, n)| client.submit_generate(p, *n, *pin, cfg.clone()).unwrap())
+        .collect();
+    let mut texts = Vec::new();
+    for (rx, (_, pin, n)) in rxs.into_iter().zip(&jobs) {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.format, pin.unwrap_or(ElementFormat::int(8)), "served at its pin");
+        assert_eq!(resp.text.chars().count(), *n, "one char per token");
+        texts.push(resp.text);
+    }
+    // Per-row token identity through the server: a solo request at the
+    // same pin/budget must reproduce each burst row exactly.
+    for ((p, pin, n), text) in jobs.iter().zip(&texts) {
+        let solo = client.generate(p, *n, *pin, cfg.clone()).unwrap();
+        assert_eq!(&solo.text, text, "{p:?} at {pin:?} diverged from solo");
+    }
+    let m = server.metrics.lock().unwrap().clone();
+    assert_eq!(m.gen_requests, 10, "burst + solo checks");
+    assert_eq!(
+        m.gen_tokens,
+        2 * jobs.iter().map(|(_, _, n)| *n as u64).sum::<u64>()
+    );
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn gather_mode_still_serves_grouped_batches() {
+    // The legacy lane stays alive behind GenBatching::Gather (comparison
+    // benchmarks; backends without an incremental-decode surface).
+    let (server, client, width) =
+        start_pool_mode(Policy::Fixed(ElementFormat::int(8)), 22, 1, GenBatching::Gather);
+    let rows = test_corpus(width, 15, 64);
+    let cfg = SampleCfg {
+        temperature: 0.5,
+        top_k: 4,
+        seed: 2,
+    };
+    let score = client.score(&rows[0], None).unwrap();
+    assert!(score.nll.is_finite());
+    let rxs: Vec<_> = ["kova", "blue", "kova"]
+        .iter()
+        .map(|p| client.submit_generate(p, 7, None, cfg.clone()).unwrap())
+        .collect();
+    let mut texts = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.text.chars().count(), 7);
+        texts.push(resp.text);
+    }
+    assert_eq!(texts[0], texts[2], "same prompt + cfg ⇒ same continuation");
+    // Both batching modes run the same row-independent decode, so gather
+    // mode's text matches a (continuous-mode-independent) solo request.
+    let solo = client.generate("kova", 7, None, cfg).unwrap();
+    assert_eq!(solo.text, texts[0]);
     drop(client);
     server.shutdown();
 }
