@@ -25,8 +25,16 @@
 //! cache over the whole sequence it is numerically identical to
 //! [`forward_logits`], and every row of a batched call is bit-identical to
 //! the same row decoded alone.
+//!
+//! KV storage is **paged** ([`super::kvpool`]): rows map fixed-size pages
+//! from a shared pool as they append and return them on retire/reset, so
+//! resident KV memory tracks live context instead of `rows × seq_len`. The
+//! attention gather walks each row's page table in position order, which
+//! keeps paging bit-invisible to decode output (`rust/tests/kv_paging.rs`
+//! proves any page size reproduces the single-page dense layout exactly).
 
 use super::kernels;
+use super::kvpool::{KvMemory, KvPageCfg, KvPagePool};
 use super::repack::RepackedMx;
 use crate::checkpoint::Checkpoint;
 use crate::formats::{ElementFormat, MxFormat};
@@ -509,14 +517,22 @@ impl RowTag {
     }
 }
 
-/// Per-layer key/value cache for `rows ≥ 1` sequences decoding in lockstep.
+/// Per-layer key/value cache for `rows ≥ 1` sequences decoding in lockstep,
+/// stored **paged**: a [`KvPagePool`] arena plus a per-row page table.
 ///
-/// Holds `[n_layers, rows, capacity, d_model]` keys and values with a
-/// *per-sequence* fill length ([`Self::len_of`]) — sequences prefill
-/// ragged prompt windows and then decode step-synchronized, each attending
-/// only over its own cached prefix. [`forward_cached_batch`] appends the
-/// new positions' K/V as it runs, so decoding one token per sequence costs
-/// one `rows`-row pass over the weights instead of `rows` separate passes.
+/// Logically the cache still holds `[n_layers, rows, capacity, d_model]`
+/// keys and values with a *per-sequence* fill length ([`Self::len_of`]) —
+/// sequences prefill ragged prompt windows and then decode
+/// step-synchronized, each attending only over its own cached prefix.
+/// Physically, a row maps fixed-size pages of
+/// [`Self::page_positions()`] positions (each page spans every layer) on
+/// append and returns them — zeroed — on [`Self::retire_row`] /
+/// [`Self::reset_row`] / truncation, so resident KV memory tracks **live
+/// context**, not `rows × capacity`. Within a page, a layer's positions
+/// are contiguous, so a row whose span fits one page walks exactly the
+/// dense layout (the contiguous fast path); longer spans walk page chunks
+/// in position order, which keeps every float op in the same order as the
+/// dense layout — paging is **bit-invisible** to the numerics.
 /// [`KvCache::new`] builds the single-sequence (`rows = 1`) cache that
 /// [`forward_cached`] and the benches consume.
 ///
@@ -526,9 +542,19 @@ impl RowTag {
 /// **free**; the continuous-batching scheduler admits a sequence with
 /// [`KvCache::join_row`] (which claims the lowest free slot and records the
 /// row's [`RowTag`]), and releases it with [`KvCache::retire_row`] when the
-/// sequence completes or is cancelled — the slot is immediately reusable by
-/// the next join. [`KvCache::with_rows`] keeps the pre-lifecycle behaviour
-/// (all rows occupied, untagged) for fixed-membership batches.
+/// sequence completes or is cancelled — the slot's pages return to the pool
+/// and the slot is immediately reusable by the next join.
+/// [`KvCache::with_rows`] keeps the pre-lifecycle behaviour (all rows
+/// occupied, untagged) for fixed-membership batches.
+///
+/// # Page budget and admission
+///
+/// [`KvCache::with_slots_cfg`] can cap the pool below the dense-equivalent
+/// `rows × ceil(capacity / page)` pages; [`Self::join_row`] then admits a
+/// sequence only when the pool can still fund its **worst case** (a full
+/// `capacity`-position window) on top of what every live row might still
+/// grow to ([`Self::can_fund_row`]). That reservation invariant means a
+/// row that was admitted can never hit pool exhaustion mid-decode.
 #[derive(Debug, Clone)]
 pub struct KvCache {
     n_layers: usize,
@@ -541,13 +567,23 @@ pub struct KvCache {
     occupied: Vec<bool>,
     /// Per-row weight-set tag (`None` on untagged legacy rows).
     tags: Vec<Option<RowTag>>,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    /// Positions per page.
+    page_positions: usize,
+    /// Pages a row at full `capacity` maps (the worst-case funding unit).
+    pages_per_row: usize,
+    /// Page arenas + free list shared by every row.
+    pool: KvPagePool,
+    /// Per-row page tables: `tables[r][i]` backs positions
+    /// `[i*page_positions, (i+1)*page_positions)` of row `r`.
+    tables: Vec<Vec<usize>>,
+    /// High-water mark of mapped pages, recorded at allocation time (so a
+    /// row that maps and retires within one step still registers).
+    resident_peak_pages: usize,
 }
 
 impl KvCache {
     /// Empty single-sequence cache sized for `dims` (capacity = `seq_len`
-    /// positions).
+    /// positions; page size from `MFQAT_KV_PAGE`, fully funded).
     pub fn new(dims: &ModelDims) -> KvCache {
         KvCache::with_rows(dims, 1)
     }
@@ -556,26 +592,54 @@ impl KvCache {
     /// untagged (fixed-membership batches; use [`Self::with_slots`] for the
     /// continuous-batching lifecycle).
     pub fn with_rows(dims: &ModelDims, rows: usize) -> KvCache {
-        let mut c = KvCache::with_slots(dims, rows);
+        KvCache::with_rows_cfg(dims, rows, KvPageCfg::from_env())
+    }
+
+    /// [`Self::with_rows`] with an explicit page size. Fixed-membership
+    /// rows are all live from the start, so the pool is always fully
+    /// funded (`cfg.budget_pages` is ignored) — a budget below the
+    /// worst case would make construction itself an admission decision.
+    pub fn with_rows_cfg(dims: &ModelDims, rows: usize, cfg: KvPageCfg) -> KvCache {
+        let mut c = KvCache::with_slots_cfg(dims, rows, KvPageCfg::with_page(cfg.page_positions));
         c.occupied.fill(true);
         c
     }
 
     /// Empty cache with `rows` **free** slots: sequences enter via
-    /// [`Self::join_row`] and leave via [`Self::retire_row`].
+    /// [`Self::join_row`] and leave via [`Self::retire_row`]. Page size
+    /// from `MFQAT_KV_PAGE` (default 64 positions), fully funded.
     pub fn with_slots(dims: &ModelDims, rows: usize) -> KvCache {
+        KvCache::with_slots_cfg(dims, rows, KvPageCfg::from_env())
+    }
+
+    /// Empty cache with `rows` free slots over an explicitly sized page
+    /// pool. `cfg.budget_pages == 0` funds every row's worst case (the
+    /// dense-equivalent pool); a smaller budget is clamped up to at least
+    /// one worst-case row so the pool can always serve one sequence.
+    pub fn with_slots_cfg(dims: &ModelDims, rows: usize, cfg: KvPageCfg) -> KvCache {
         assert!(rows >= 1, "KV cache wants at least one sequence row");
-        let n = dims.n_layers * rows * dims.seq_len * dims.d_model;
+        let capacity = dims.seq_len;
+        let page_positions = cfg.page_positions.clamp(1, capacity);
+        let pages_per_row = capacity.div_ceil(page_positions);
+        let total_pages = if cfg.budget_pages == 0 {
+            rows * pages_per_row
+        } else {
+            cfg.budget_pages.clamp(pages_per_row, rows * pages_per_row)
+        };
+        let floats_per_page = dims.n_layers * page_positions * dims.d_model;
         KvCache {
             n_layers: dims.n_layers,
             d_model: dims.d_model,
-            capacity: dims.seq_len,
+            capacity,
             rows,
             lens: vec![0; rows],
             occupied: vec![false; rows],
             tags: vec![None; rows],
-            k: vec![0.0; n],
-            v: vec![0.0; n],
+            page_positions,
+            pages_per_row,
+            pool: KvPagePool::new(total_pages, floats_per_page),
+            tables: vec![Vec::new(); rows],
+            resident_peak_pages: 0,
         }
     }
 
@@ -584,22 +648,104 @@ impl KvCache {
         self.rows
     }
 
+    /// Positions per page.
+    pub fn page_positions(&self) -> usize {
+        self.page_positions
+    }
+
+    /// Pages a full-`capacity` row maps (the worst-case funding unit).
+    pub fn pages_per_row(&self) -> usize {
+        self.pages_per_row
+    }
+
+    /// Pages currently on the pool's free list.
+    pub fn free_pages(&self) -> usize {
+        self.pool.free_pages()
+    }
+
+    /// Pool size in pages.
+    pub fn total_pages(&self) -> usize {
+        self.pool.total_pages()
+    }
+
+    /// Pages the pool still owes live rows if every one of them grows to
+    /// full `capacity` (their worst case minus what they already hold).
+    fn committed_pages(&self) -> usize {
+        (0..self.rows)
+            .filter(|&r| self.occupied[r])
+            .map(|r| self.pages_per_row.saturating_sub(self.tables[r].len()))
+            .sum()
+    }
+
+    /// Whether the pool can fund **one more worst-case row** on top of
+    /// what every live row might still grow to. [`Self::join_row`] admits
+    /// only under this invariant, which guarantees an admitted row never
+    /// hits pool exhaustion mid-decode — the server's memory-aware
+    /// admission signal.
+    pub fn can_fund_row(&self) -> bool {
+        self.pool.free_pages() >= self.committed_pages() + self.pages_per_row
+    }
+
+    /// Paged-KV accounting snapshot (resident vs dense-equivalent bytes,
+    /// pool utilization).
+    pub fn kv_memory(&self) -> KvMemory {
+        KvMemory {
+            resident_bytes: self.pool.used_pages() * self.pool.page_bytes(),
+            resident_peak_bytes: self.resident_peak_pages * self.pool.page_bytes(),
+            dense_equivalent_bytes: self.rows
+                * self.n_layers
+                * self.capacity
+                * self.d_model
+                * 2
+                * std::mem::size_of::<f32>(),
+            pool_bytes: self.pool.pool_bytes(),
+            used_pages: self.pool.used_pages(),
+            free_pages: self.pool.free_pages(),
+            total_pages: self.pool.total_pages(),
+            page_positions: self.page_positions,
+        }
+    }
+
     /// Claim the lowest free slot for a joining sequence: marks it occupied
     /// at length 0 and records `tag` as the weight set it must be decoded
-    /// with. Errors when every slot is occupied.
+    /// with. Errors when every slot is occupied **or** the page pool cannot
+    /// fund another worst-case row ([`Self::can_fund_row`]) — the caller
+    /// should defer the join until a live row retires.
     pub fn join_row(&mut self, tag: RowTag) -> Result<usize> {
         let Some(r) = self.occupied.iter().position(|&o| !o) else {
             bail!("KV cache has no free slot ({} rows all occupied)", self.rows);
         };
+        if !self.can_fund_row() {
+            bail!(
+                "KV page pool cannot fund another worst-case row \
+                 ({} free of {} pages, {} committed to live rows, {} per row); \
+                 defer the join until a row retires",
+                self.pool.free_pages(),
+                self.pool.total_pages(),
+                self.committed_pages(),
+                self.pages_per_row
+            );
+        }
         self.occupied[r] = true;
         self.tags[r] = Some(tag);
         self.lens[r] = 0;
         Ok(r)
     }
 
-    /// Release slot `r` (sequence finished or cancelled): the slot becomes
-    /// free for the next [`Self::join_row`], its tag and length cleared.
+    /// Return every page row `r` maps to the pool (zeroed) and clear its
+    /// table.
+    fn release_row_pages(&mut self, r: usize) {
+        for page in std::mem::take(&mut self.tables[r]) {
+            self.pool.release(page);
+        }
+    }
+
+    /// Release slot `r` (sequence finished or cancelled): its pages return
+    /// to the pool zeroed, the slot becomes free for the next
+    /// [`Self::join_row`], its tag and length cleared — the next occupant
+    /// can observe nothing of this one (see `rust/tests/kv_paging.rs`).
     pub fn retire_row(&mut self, r: usize) {
+        self.release_row_pages(r);
         self.occupied[r] = false;
         self.tags[r] = None;
         self.lens[r] = 0;
@@ -646,31 +792,84 @@ impl KvCache {
         self.capacity
     }
 
-    /// Forget everything (restart every sequence).
+    /// Forget everything (restart every sequence): every row's pages return
+    /// to the pool, occupancy and tags are untouched.
     pub fn reset(&mut self) {
+        for r in 0..self.rows {
+            self.release_row_pages(r);
+        }
         self.lens.fill(0);
     }
 
     /// Forget one sequence row (it re-prefills on its next tokens while the
-    /// other rows keep decoding — the batched window-overflow path).
+    /// other rows keep decoding — the batched window-overflow path). The
+    /// row's pages return to the pool immediately, so an overflow shrinks
+    /// resident KV before the re-prefill grows it back.
     pub fn reset_row(&mut self, r: usize) {
+        self.release_row_pages(r);
         self.lens[r] = 0;
     }
 
     /// Roll back a single-sequence cache to `pos` filled positions
-    /// (`pos ≤ len()`). Rows beyond `pos` are simply ignored by subsequent
-    /// decodes — used by the bench to re-decode at a fixed context length
-    /// without re-prefilling.
+    /// (`pos ≤ len()`). Pages past the truncation point return to the pool;
+    /// the next decode re-maps them on append — used by the bench to
+    /// re-decode at a fixed context length without re-prefilling.
     pub fn truncate(&mut self, pos: usize) {
         assert_eq!(self.rows, 1, "truncate is a single-sequence helper");
         assert!(pos <= self.lens[0], "cannot truncate {} to {pos}", self.lens[0]);
+        let keep = pos.div_ceil(self.page_positions);
+        while self.tables[0].len() > keep {
+            let page = self.tables[0].pop().expect("len checked above");
+            self.pool.release(page);
+        }
         self.lens[0] = pos;
     }
 
-    fn layer_row(&self, l: usize, r: usize) -> (&[f32], &[f32]) {
-        let n = self.capacity * self.d_model;
-        let base = (l * self.rows + r) * n;
-        (&self.k[base..base + n], &self.v[base..base + n])
+    /// Grow row `r`'s page table to cover `new_len` positions, claiming
+    /// pages from the pool. Errors on pool exhaustion (unreachable for rows
+    /// admitted under [`Self::can_fund_row`] or fully-funded caches).
+    fn ensure_row_pages(&mut self, r: usize, new_len: usize) -> Result<()> {
+        while self.tables[r].len() * self.page_positions < new_len {
+            let Some(page) = self.pool.alloc() else {
+                bail!(
+                    "KV page pool exhausted growing row {r} to {new_len} positions \
+                     ({} pages mapped, pool of {})",
+                    self.tables[r].len(),
+                    self.pool.total_pages()
+                );
+            };
+            self.tables[r].push(page);
+        }
+        self.resident_peak_pages = self.resident_peak_pages.max(self.pool.used_pages());
+        Ok(())
+    }
+
+    /// Write position `pos` of row `r`, layer `l` (one `d_model` row each
+    /// of K and V). The backing page must already be mapped
+    /// ([`Self::ensure_row_pages`]).
+    fn write_kv(&mut self, l: usize, r: usize, pos: usize, k_src: &[f32], v_src: &[f32]) {
+        let (pp, d) = (self.page_positions, self.d_model);
+        let page = self.tables[r][pos / pp];
+        let off = l * pp * d + (pos % pp) * d;
+        self.pool.k_mut(page)[off..off + d].copy_from_slice(k_src);
+        self.pool.v_mut(page)[off..off + d].copy_from_slice(v_src);
+    }
+
+    /// Contiguous K/V chunk of row `r`, layer `l`, starting at position
+    /// `j`: returns `(k, v, positions)` where both slices run
+    /// `positions × d_model` floats to the end of `j`'s page. Walking
+    /// chunks in position order visits exactly the dense layout's element
+    /// order (a span inside one page is a single chunk — the dense fast
+    /// path).
+    fn kv_chunk(&self, l: usize, r: usize, j: usize) -> (&[f32], &[f32], usize) {
+        let (pp, d) = (self.page_positions, self.d_model);
+        let page = self.tables[r][j / pp];
+        let in_page = j % pp;
+        let avail = pp - in_page;
+        let base = l * pp * d + in_page * d;
+        let k = &self.pool.k(page)[base..base + avail * d];
+        let v = &self.pool.v(page)[base..base + avail * d];
+        (k, v, avail)
     }
 }
 
@@ -813,6 +1012,15 @@ pub fn forward_cached_batch_mixed(
             );
         }
     }
+    // Map pages for every fed row's new positions up front (pages span all
+    // layers, so allocation happens once per row per step, not per layer).
+    // Admitted rows can never fail here — `join_row` only admits what the
+    // pool can fund at full capacity — so an error means a scheduler bug.
+    for (r, row) in tokens.iter().enumerate() {
+        if !row.is_empty() {
+            cache.ensure_row_pages(r, cache.lens[r] + row.len())?;
+        }
+    }
     let d = dims.d_model;
     let hd = dims.d_model / dims.n_heads;
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
@@ -881,43 +1089,63 @@ pub fn forward_cached_batch_mixed(
                 w.act,
             );
         }
-        // Append each row's new K/V at its absolute positions.
-        {
-            let n = cache.capacity * d;
-            for (r, row) in tokens.iter().enumerate() {
-                let p0 = cache.lens[r];
-                let base = (l * cache.rows + r) * n;
-                for i in 0..row.len() {
-                    let src = (offs[r] + i) * 3 * d;
-                    cache.k[base + (p0 + i) * d..base + (p0 + i + 1) * d]
-                        .copy_from_slice(&qkv[src + d..][..d]);
-                    cache.v[base + (p0 + i) * d..base + (p0 + i + 1) * d]
-                        .copy_from_slice(&qkv[src + 2 * d..][..d]);
-                }
+        // Append each row's new K/V at its absolute positions (the backing
+        // pages were mapped before the layer loop).
+        for (r, row) in tokens.iter().enumerate() {
+            let p0 = cache.lens[r];
+            for i in 0..row.len() {
+                let src = (offs[r] + i) * 3 * d;
+                cache.write_kv(l, r, p0 + i, &qkv[src + d..][..d], &qkv[src + 2 * d..][..d]);
             }
         }
         // Causal attention of each row's new queries over that row's cached
-        // prefix — same per-query math as `kernels::causal_attention`.
+        // prefix — same per-query math as `kernels::causal_attention`. The
+        // prefix walks the row's page table chunk by chunk in position
+        // order (`probs` is indexed by absolute position), so the float op
+        // order is identical to the dense layout's; a span within one page
+        // is a single contiguous chunk.
         att.fill(0.0);
         for (r, row) in tokens.iter().enumerate() {
+            if row.is_empty() {
+                continue;
+            }
             let p0 = cache.lens[r];
-            let (kl, vl) = cache.layer_row(l, r);
+            let full_span = p0 + row.len();
+            // Hoist the row's page-chunk list once per (layer, row) —
+            // `(K, V, start position, positions)` covering `0..full_span`
+            // in position order — so the per-head, per-query loops below
+            // index straight into contiguous slices instead of re-deriving
+            // the page lookup (the pre-paging code's one-slice shape).
+            let mut chunks: Vec<(&[f32], &[f32], usize, usize)> = Vec::new();
+            let mut j0 = 0usize;
+            while j0 < full_span {
+                let (kl, vl, avail) = cache.kv_chunk(l, r, j0);
+                let take = avail.min(full_span - j0);
+                chunks.push((&kl[..take * d], &vl[..take * d], j0, take));
+                j0 += take;
+            }
             for h in 0..dims.n_heads {
                 let qo = h * hd;
                 for i in 0..row.len() {
                     let q = &qkv[(offs[r] + i) * 3 * d + qo..][..hd];
                     let span = p0 + i + 1;
                     let mut max_s = f32::NEG_INFINITY;
-                    for (j, p) in probs[..span].iter_mut().enumerate() {
-                        let krow = &kl[j * d + qo..][..hd];
-                        let mut s = 0.0f32;
-                        for (&a, &k) in q.iter().zip(krow) {
-                            s += a * k;
+                    for &(kc, _, start, cnt) in &chunks {
+                        if start >= span {
+                            break;
                         }
-                        let s = s * inv_sqrt;
-                        *p = s;
-                        if s > max_s {
-                            max_s = s;
+                        let take = cnt.min(span - start);
+                        for (jj, p) in probs[start..start + take].iter_mut().enumerate() {
+                            let krow = &kc[jj * d + qo..][..hd];
+                            let mut s = 0.0f32;
+                            for (&a, &k) in q.iter().zip(krow) {
+                                s += a * k;
+                            }
+                            let s = s * inv_sqrt;
+                            *p = s;
+                            if s > max_s {
+                                max_s = s;
+                            }
                         }
                     }
                     let mut denom = 0.0f32;
@@ -928,11 +1156,17 @@ pub fn forward_cached_batch_mixed(
                     let inv_denom = 1.0 / denom;
                     let o0 = (offs[r] + i) * d + qo;
                     let orow = &mut att[o0..o0 + hd];
-                    for (j, &p) in probs[..span].iter().enumerate() {
-                        let wgt = p * inv_denom;
-                        let vrow = &vl[j * d + qo..][..hd];
-                        for (o, &vv) in orow.iter_mut().zip(vrow) {
-                            *o += wgt * vv;
+                    for &(_, vc, start, cnt) in &chunks {
+                        if start >= span {
+                            break;
+                        }
+                        let take = cnt.min(span - start);
+                        for (jj, &p) in probs[start..start + take].iter().enumerate() {
+                            let wgt = p * inv_denom;
+                            let vrow = &vc[jj * d + qo..][..hd];
+                            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                                *o += wgt * vv;
+                            }
                         }
                     }
                 }

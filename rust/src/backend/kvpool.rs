@@ -1,0 +1,299 @@
+//! Paged KV-cache storage: a fixed-size page-pool allocator.
+//!
+//! Dense KV allocation sizes every slot for its worst case
+//! (`slots × seq_len × d_model` per layer), so a mostly-idle pool of short
+//! sequences pays full-window memory the whole time. [`KvPagePool`] instead
+//! carves one arena per K and V into fixed-size **pages** of
+//! [`KvPageCfg::page_positions`] positions (each page spans every layer, so
+//! one allocation funds a position range across the whole stack), hands
+//! them out from a free list as rows append tokens, and takes them back —
+//! zeroed — when a row retires, resets, or re-prefills after window
+//! overflow. Resident KV memory therefore tracks **live context**, not slot
+//! capacity, and admission can be budgeted in pages instead of slots
+//! ([`crate::backend::forward::KvCache::can_fund_row`]).
+//!
+//! Pages are zeroed on release (not lazily on reuse) so a freed page can
+//! never leak a previous occupant's keys/values to the next sequence that
+//! maps it — the quarantine guarantee `rust/tests/kv_paging.rs` regresses.
+//!
+//! [`KvMemory`] is the accounting snapshot surfaced through
+//! [`crate::backend::DecodeSession::kv_memory`] and
+//! `server::Metrics::summary()`; `benches/serving.rs` records it as the
+//! `kv_memory.*` section of `BENCH_serving.json`.
+
+/// Default page size in positions when `MFQAT_KV_PAGE` is unset.
+pub const DEFAULT_PAGE_POSITIONS: usize = 64;
+
+/// Page-pool sizing for a [`crate::backend::forward::KvCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPageCfg {
+    /// Positions per page (the paging granularity). Clamped to the model
+    /// window at cache construction; tiny values (e.g. `8`) force page
+    /// boundaries mid-prompt and mid-decode, which CI exercises via
+    /// `MFQAT_KV_PAGE=8`.
+    pub page_positions: usize,
+    /// Total pages in the pool; `0` funds every row's worst case
+    /// (`rows × ceil(seq_len / page_positions)` — dense-equivalent
+    /// capacity, the default). Smaller budgets make admission
+    /// memory-aware: [`crate::backend::forward::KvCache::join_row`] defers
+    /// rows the pool cannot fund. Clamped up to at least one row's worst
+    /// case so a pool can always serve one sequence.
+    pub budget_pages: usize,
+}
+
+impl Default for KvPageCfg {
+    fn default() -> Self {
+        KvPageCfg::from_env()
+    }
+}
+
+impl KvPageCfg {
+    /// Page size from the `MFQAT_KV_PAGE` environment pin (positions per
+    /// page; see `util/cli.rs` for the env-var table), full funding.
+    pub fn from_env() -> KvPageCfg {
+        let page_positions = match std::env::var("MFQAT_KV_PAGE") {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => n,
+                _ => {
+                    log::warn!(
+                        "MFQAT_KV_PAGE='{v}' is not a positive integer; \
+                         using the default page of {DEFAULT_PAGE_POSITIONS} positions"
+                    );
+                    DEFAULT_PAGE_POSITIONS
+                }
+            },
+            Err(_) => DEFAULT_PAGE_POSITIONS,
+        };
+        KvPageCfg {
+            page_positions,
+            budget_pages: 0,
+        }
+    }
+
+    /// Explicit page size, full funding.
+    pub fn with_page(page_positions: usize) -> KvPageCfg {
+        KvPageCfg {
+            page_positions: page_positions.max(1),
+            budget_pages: 0,
+        }
+    }
+
+    /// Restrict the pool to `budget_pages` total pages (builder-style).
+    pub fn budget(mut self, budget_pages: usize) -> KvPageCfg {
+        self.budget_pages = budget_pages;
+        self
+    }
+}
+
+/// A snapshot of paged-KV accounting: what is resident now versus what the
+/// pre-paging dense layout would have preallocated.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KvMemory {
+    /// Bytes held by pages currently mapped into row page tables (K + V).
+    pub resident_bytes: usize,
+    /// High-water mark of `resident_bytes` over the cache's lifetime,
+    /// recorded **at page-allocation time** — so a row that maps pages and
+    /// retires within one decode step still registers its footprint (a
+    /// snapshot taken between steps would miss it).
+    pub resident_peak_bytes: usize,
+    /// Bytes the dense layout would preallocate for the same cache
+    /// (`rows × n_layers × seq_len × d_model × 2 × 4`).
+    pub dense_equivalent_bytes: usize,
+    /// Total arena bytes backing the pool (all pages, free or mapped).
+    pub pool_bytes: usize,
+    /// Pages currently mapped into page tables.
+    pub used_pages: usize,
+    /// Pages on the free list.
+    pub free_pages: usize,
+    /// Pool size in pages.
+    pub total_pages: usize,
+    /// Positions per page.
+    pub page_positions: usize,
+}
+
+impl KvMemory {
+    /// Fraction of the pool's pages currently mapped (0.0 on an empty or
+    /// absent pool).
+    pub fn utilization(&self) -> f64 {
+        if self.total_pages == 0 {
+            0.0
+        } else {
+            self.used_pages as f64 / self.total_pages as f64
+        }
+    }
+
+    /// Resident bytes over the dense-equivalent allocation (the headline
+    /// paging win; 0.0 when there is no dense baseline).
+    pub fn resident_over_dense(&self) -> f64 {
+        if self.dense_equivalent_bytes == 0 {
+            0.0
+        } else {
+            self.resident_bytes as f64 / self.dense_equivalent_bytes as f64
+        }
+    }
+}
+
+/// Fixed-size page arenas (one for K, one for V) plus a LIFO free list.
+///
+/// The pool is position-layout-agnostic: it deals in pages of
+/// `floats_per_page` f32s per arena and leaves the
+/// `[layer, position-in-page, d_model]` indexing to the cache that owns it.
+#[derive(Debug, Clone)]
+pub struct KvPagePool {
+    floats_per_page: usize,
+    total: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    free: Vec<usize>,
+}
+
+impl KvPagePool {
+    /// Pool of `total` pages of `floats_per_page` f32s per arena, all free.
+    pub fn new(total: usize, floats_per_page: usize) -> KvPagePool {
+        KvPagePool {
+            floats_per_page,
+            total,
+            k: vec![0.0; total * floats_per_page],
+            v: vec![0.0; total * floats_per_page],
+            // LIFO so recently-hot pages are remapped first.
+            free: (0..total).rev().collect(),
+        }
+    }
+
+    /// Claim a page; `None` when the pool is exhausted. Handed-out pages
+    /// are always zeroed (arenas start zeroed, [`Self::release`] re-zeroes).
+    pub fn alloc(&mut self) -> Option<usize> {
+        self.free.pop()
+    }
+
+    /// Return a page to the free list, **zeroing its K and V spans** so no
+    /// stale keys/values survive into the next mapping.
+    pub fn release(&mut self, page: usize) {
+        debug_assert!(page < self.total, "released page {page} out of range");
+        debug_assert!(
+            !self.free.contains(&page),
+            "double free of KV page {page}"
+        );
+        let s = page * self.floats_per_page;
+        self.k[s..s + self.floats_per_page].fill(0.0);
+        self.v[s..s + self.floats_per_page].fill(0.0);
+        self.free.push(page);
+    }
+
+    /// K-arena span of `page`.
+    pub fn k(&self, page: usize) -> &[f32] {
+        &self.k[page * self.floats_per_page..(page + 1) * self.floats_per_page]
+    }
+
+    /// V-arena span of `page`.
+    pub fn v(&self, page: usize) -> &[f32] {
+        &self.v[page * self.floats_per_page..(page + 1) * self.floats_per_page]
+    }
+
+    /// Mutable K-arena span of `page`.
+    pub fn k_mut(&mut self, page: usize) -> &mut [f32] {
+        &mut self.k[page * self.floats_per_page..(page + 1) * self.floats_per_page]
+    }
+
+    /// Mutable V-arena span of `page`.
+    pub fn v_mut(&mut self, page: usize) -> &mut [f32] {
+        &mut self.v[page * self.floats_per_page..(page + 1) * self.floats_per_page]
+    }
+
+    /// Pages on the free list.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages currently handed out.
+    pub fn used_pages(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    /// Pool size in pages.
+    pub fn total_pages(&self) -> usize {
+        self.total
+    }
+
+    /// f32s per page per arena.
+    pub fn floats_per_page(&self) -> usize {
+        self.floats_per_page
+    }
+
+    /// Bytes one mapped page holds across both arenas (K + V).
+    pub fn page_bytes(&self) -> usize {
+        2 * self.floats_per_page * std::mem::size_of::<f32>()
+    }
+
+    /// Total arena bytes (all pages, free or mapped).
+    pub fn pool_bytes(&self) -> usize {
+        self.total * self.page_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_accounting_round_trips() {
+        let mut pool = KvPagePool::new(3, 8);
+        assert_eq!(pool.free_pages(), 3);
+        assert_eq!(pool.used_pages(), 0);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
+        assert_eq!(pool.alloc(), None, "pool exhausted");
+        assert_eq!(pool.used_pages(), 3);
+        pool.release(b);
+        assert_eq!(pool.free_pages(), 1);
+        // LIFO: the page just released is the next handed out.
+        assert_eq!(pool.alloc(), Some(b));
+        pool.release(a);
+        pool.release(b);
+        pool.release(c);
+        assert_eq!(pool.free_pages(), 3);
+        assert_eq!(pool.pool_bytes(), 3 * 2 * 8 * 4);
+    }
+
+    #[test]
+    fn released_pages_are_zeroed() {
+        // The quarantine fix: contents written by one occupant must never
+        // be observable after the page returns to the pool.
+        let mut pool = KvPagePool::new(2, 4);
+        let p = pool.alloc().unwrap();
+        pool.k_mut(p).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        pool.v_mut(p).copy_from_slice(&[5.0, 6.0, 7.0, 8.0]);
+        pool.release(p);
+        let q = pool.alloc().unwrap();
+        assert_eq!(q, p, "LIFO hands the same page back");
+        assert!(pool.k(q).iter().all(|&x| x == 0.0), "stale K leaked");
+        assert!(pool.v(q).iter().all(|&x| x == 0.0), "stale V leaked");
+    }
+
+    #[test]
+    fn cfg_env_pin_and_builders() {
+        let c = KvPageCfg::with_page(16).budget(5);
+        assert_eq!(c.page_positions, 16);
+        assert_eq!(c.budget_pages, 5);
+        assert_eq!(KvPageCfg::with_page(0).page_positions, 1, "clamped");
+    }
+
+    #[test]
+    fn memory_snapshot_ratios() {
+        let m = KvMemory {
+            resident_bytes: 256,
+            resident_peak_bytes: 512,
+            dense_equivalent_bytes: 1024,
+            pool_bytes: 512,
+            used_pages: 2,
+            free_pages: 6,
+            total_pages: 8,
+            page_positions: 4,
+        };
+        assert!((m.utilization() - 0.25).abs() < 1e-12);
+        assert!((m.resident_over_dense() - 0.25).abs() < 1e-12);
+        assert_eq!(KvMemory::default().utilization(), 0.0);
+        assert_eq!(KvMemory::default().resident_over_dense(), 0.0);
+    }
+}

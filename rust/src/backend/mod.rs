@@ -13,10 +13,13 @@
 //!   scale per block, its per-tile MACs dispatched to explicit AVX2/NEON
 //!   kernels ([`simd`]) with a bit-identical portable fallback
 //!   (`MFQAT_SIMD=off`). Generation decodes incrementally through a
-//!   per-layer KV cache holding `rows ≥ 1` step-synchronized sequences
-//!   ([`forward::KvCache`], [`forward::forward_cached_batch`]), exposed
-//!   batched via [`Backend::generate_batch`]. Needs only an anchor
-//!   checkpoint + model dims: no XLA install, no AOT artifacts.
+//!   per-layer **paged** KV cache holding `rows ≥ 1` step-synchronized
+//!   sequences ([`forward::KvCache`] over a [`kvpool::KvPagePool`]:
+//!   resident memory tracks live context in fixed-size pages, admission
+//!   can be budgeted in pages — [`forward::forward_cached_batch`],
+//!   [`DecodeSession::kv_memory`]), exposed batched via
+//!   [`Backend::generate_batch`]. Needs only an anchor checkpoint + model
+//!   dims: no XLA install, no AOT artifacts.
 //! * `PjrtBackend` (feature `pjrt`) — wraps the PJRT runtime and the AOT
 //!   HLO artifacts exported by `python/compile/aot.py`; formats execute as
 //!   dequantized-f32 weight literals through one compiled graph.
@@ -28,6 +31,7 @@
 
 pub mod forward;
 pub mod kernels;
+pub mod kvpool;
 pub mod native;
 pub mod repack;
 pub mod simd;
@@ -35,6 +39,7 @@ pub mod simd;
 pub mod pjrt;
 
 pub use forward::{ActMode, KvCache, LayerWeights, Mat, NativeWeights, RowTag, SharedParams};
+pub use kvpool::{KvMemory, KvPageCfg, KvPagePool};
 pub use native::{NativeBackend, NativeDecodeSession};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
@@ -116,6 +121,20 @@ pub trait Backend: Send + Sync {
         let _ = slots;
         anyhow::bail!("backend '{}' has no continuous-decode surface", self.name())
     }
+
+    /// [`Backend::decode_session`] with an explicit KV page-pool sizing
+    /// (page granularity + optional page budget below the dense-equivalent
+    /// allocation — see [`KvPageCfg`]). The default implementation ignores
+    /// the sizing and defers to [`Backend::decode_session`], so backends
+    /// without paged KV storage keep working unchanged.
+    fn decode_session_cfg(
+        &self,
+        slots: usize,
+        kv: KvPageCfg,
+    ) -> Result<Box<dyn DecodeSession + '_>> {
+        let _ = kv;
+        self.decode_session(slots)
+    }
 }
 
 /// A continuously batched decode in flight: per-row sequences that join,
@@ -149,4 +168,20 @@ pub trait DecodeSession {
     /// Advance every live row by one step-synchronized pass; returns the
     /// rows that completed (their slots are free for the next join).
     fn step(&mut self) -> Result<Vec<crate::eval::generate::FinishedRow>>;
+
+    /// Whether [`Self::join`] can admit another sequence **right now** —
+    /// a free row *and*, on paged-KV backends, enough unclaimed pool pages
+    /// to fund the new row's worst-case window. The serving runtime defers
+    /// queued prompts while this is false instead of failing them. Default:
+    /// slot-count admission (non-paged backends).
+    fn can_admit(&self) -> bool {
+        self.active() < self.capacity()
+    }
+
+    /// Paged-KV accounting for this session (resident vs dense-equivalent
+    /// bytes, pool utilization). Backends without paged storage report the
+    /// zero snapshot.
+    fn kv_memory(&self) -> KvMemory {
+        KvMemory::default()
+    }
 }

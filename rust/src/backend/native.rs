@@ -7,6 +7,7 @@
 //! cache budget is charged accordingly ([`NativeWeights::packed_bytes`]).
 
 use super::forward::{self, ActMode, KvCache, NativeWeights, SharedParams};
+use super::kvpool::{KvMemory, KvPageCfg};
 use super::{Backend, DecodeSession};
 use crate::checkpoint::Checkpoint;
 use crate::coordinator::format_cache::{CacheStats, FormatCache};
@@ -168,14 +169,28 @@ impl NativeBackend {
     /// Joined rows pull their weight sets from this backend's `FormatCache`
     /// (so every format in the session shares one `Arc`'d f32 parameter
     /// set), letting rows of *different* formats decode in one
-    /// step-synchronized pass.
+    /// step-synchronized pass. KV storage is paged with the environment's
+    /// default sizing ([`KvPageCfg::from_env`]).
     pub fn decode_session(&self, slots: usize) -> Result<NativeDecodeSession<'_>> {
+        self.decode_session_cfg(slots, KvPageCfg::from_env())
+    }
+
+    /// [`Self::decode_session`] with an explicit KV page-pool sizing: the
+    /// session's resident KV memory tracks live context in `kv` pages, and
+    /// a `kv.budget_pages` below the dense-equivalent pool makes
+    /// [`DecodeSession::can_admit`] memory-aware (joins defer while the
+    /// pool cannot fund a worst-case row).
+    pub fn decode_session_cfg(
+        &self,
+        slots: usize,
+        kv: KvPageCfg,
+    ) -> Result<NativeDecodeSession<'_>> {
         if slots == 0 {
             anyhow::bail!("a decode session wants at least one slot");
         }
         Ok(NativeDecodeSession {
             backend: self,
-            inner: ContinuousBatch::new(&self.dims, slots),
+            inner: ContinuousBatch::with_kv(&self.dims, slots, kv),
         })
     }
 }
@@ -214,6 +229,14 @@ impl DecodeSession for NativeDecodeSession<'_> {
 
     fn step(&mut self) -> Result<Vec<FinishedRow>> {
         self.inner.step()
+    }
+
+    fn can_admit(&self) -> bool {
+        self.inner.can_admit()
+    }
+
+    fn kv_memory(&self) -> KvMemory {
+        self.inner.kv_memory()
     }
 }
 
@@ -277,6 +300,14 @@ impl Backend for NativeBackend {
 
     fn decode_session(&self, slots: usize) -> Result<Box<dyn DecodeSession + '_>> {
         Ok(Box::new(NativeBackend::decode_session(self, slots)?))
+    }
+
+    fn decode_session_cfg(
+        &self,
+        slots: usize,
+        kv: KvPageCfg,
+    ) -> Result<Box<dyn DecodeSession + '_>> {
+        Ok(Box::new(NativeBackend::decode_session_cfg(self, slots, kv)?))
     }
 }
 

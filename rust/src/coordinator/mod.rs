@@ -165,6 +165,18 @@ impl ElasticEngine {
         self.backend.decode_session(slots)
     }
 
+    /// [`Self::decode_session`] with an explicit KV page-pool sizing
+    /// ([`crate::backend::KvPageCfg`]): paged backends size the session's
+    /// KV pool by page budget (memory-aware admission); others ignore the
+    /// sizing.
+    pub fn decode_session_cfg(
+        &self,
+        slots: usize,
+        kv: crate::backend::KvPageCfg,
+    ) -> Result<Box<dyn crate::backend::DecodeSession + '_>> {
+        self.backend.decode_session_cfg(slots, kv)
+    }
+
     /// Weight-cache counters.
     pub fn cache_stats(&self) -> CacheStats {
         self.backend.cache_stats()

@@ -25,6 +25,7 @@
 //!   the compiled path).
 
 use crate::backend::forward::{forward_cached_batch_mixed, KvCache, RowTag};
+use crate::backend::kvpool::{KvMemory, KvPageCfg};
 use crate::backend::NativeWeights;
 use crate::data::{decode, encode, PAD};
 use crate::model::ModelDims;
@@ -183,11 +184,23 @@ pub struct ContinuousBatch<W: Deref<Target = NativeWeights>> {
 }
 
 impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
-    /// Empty batch with `capacity` free slots for a model of `dims`.
+    /// Empty batch with `capacity` free slots for a model of `dims`. KV
+    /// storage is paged ([`KvPageCfg::from_env`]: `MFQAT_KV_PAGE` positions
+    /// per page, pool fully funded); use [`Self::with_kv`] to cap the pool
+    /// below the dense-equivalent allocation.
     pub fn new(dims: &ModelDims, capacity: usize) -> ContinuousBatch<W> {
+        ContinuousBatch::with_kv(dims, capacity, KvPageCfg::from_env())
+    }
+
+    /// Empty batch over an explicitly sized KV page pool. A
+    /// `kv.budget_pages` below `capacity × ceil(seq_len / page)` makes
+    /// [`Self::join`] memory-aware: it defers (errors) when the pool cannot
+    /// fund another worst-case row even though a slot is free — poll
+    /// [`Self::can_admit`] first.
+    pub fn with_kv(dims: &ModelDims, capacity: usize, kv: KvPageCfg) -> ContinuousBatch<W> {
         ContinuousBatch {
             dims: dims.clone(),
-            cache: KvCache::with_slots(dims, capacity),
+            cache: KvCache::with_slots_cfg(dims, capacity, kv),
             slots: (0..capacity).map(|_| None).collect(),
         }
     }
@@ -205,6 +218,21 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
     /// Whether [`Self::join`] can admit another sequence right now.
     pub fn has_free_slot(&self) -> bool {
         self.active() < self.capacity()
+    }
+
+    /// Whether [`Self::join`] can admit another sequence right now: a free
+    /// slot **and** a page pool that can still fund a worst-case
+    /// (`seq_len`-position) row on top of every live row's potential
+    /// growth. On a fully-funded pool (the default) this equals
+    /// [`Self::has_free_slot`].
+    pub fn can_admit(&self) -> bool {
+        self.has_free_slot() && self.cache.can_fund_row()
+    }
+
+    /// Paged-KV accounting snapshot (resident vs dense-equivalent bytes,
+    /// pool utilization) for this batch's cache.
+    pub fn kv_memory(&self) -> KvMemory {
+        self.cache.kv_memory()
     }
 
     /// Admit a prompt into the lowest free slot with weight set `w` (the

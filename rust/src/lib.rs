@@ -32,10 +32,13 @@
 //!   in i32/i16 through explicit AVX2/NEON tile kernels
 //!   ([`backend::simd`], runtime-detected; `MFQAT_SIMD=off` pins the
 //!   bit-identical portable loop), and the combined scale applies once per
-//!   block. Generation decodes incrementally through a KV cache holding
-//!   `rows ≥ 1` step-synchronized sequences with ragged prefill, a row
-//!   join/retire lifecycle and **per-row element formats**
-//!   ([`backend::KvCache`],
+//!   block. Generation decodes incrementally through a **paged** KV cache
+//!   holding `rows ≥ 1` step-synchronized sequences with ragged prefill, a
+//!   row join/retire lifecycle and **per-row element formats**
+//!   ([`backend::KvCache`] over a [`backend::KvPagePool`] — resident KV
+//!   memory tracks live context in fixed-size pages, not
+//!   `slots × seq_len`, and admission can be budgeted in pages;
+//!   `MFQAT_KV_PAGE` / `--kv-page` tune the granularity,
 //!   [`backend::forward::forward_cached_batch_mixed`]): one decode step
 //!   serves rows at MXINT8, MXINT4 and MXFP8 simultaneously, and prompts
 //!   join or leave between any two steps

@@ -110,20 +110,22 @@ COMMANDS:
                                     [--backend native|pjrt] [--act f32|int8]
   generate [--checkpoint P] --prompt S [--format F] [--tokens N] [--temp X]
                                     sample a continuation; the native backend
-                                    (default) decodes through the KV cache
-                                    [--backend native|pjrt] [--act f32|int8]
+                                    (default) decodes through the paged KV
+                                    cache [--backend native|pjrt]
+                                    [--act f32|int8] [--kv-page N]
   convert --in P --format F --out Q Slice-and-Scale convert an anchor checkpoint
   inspect --checkpoint P            dump checkpoint metadata
   serve [--policy ladder] [--requests N] [--burst N] [--backend native|pjrt]
         [--checkpoint P] [--cache-mb N] [--act f32|int8] [--workers N]
         [--gen-requests N] [--gen-tokens N]
-        [--batching continuous|gather] [--slots N]
+        [--batching continuous|gather] [--slots N] [--kv-page N]
                                     run the elastic serving demo workload:
                                     N workers share one engine; scoring and
                                     generation requests interleave. The
                                     generate lane defaults to continuous
                                     batching (per-row formats, mid-flight
-                                    joins into --slots decode rows);
+                                    joins into --slots decode rows; KV paged
+                                    at --kv-page positions per page);
                                     --batching gather restores the legacy
                                     grouped batched decode
   experiment <id>                   regenerate a paper figure/table; id in
@@ -316,6 +318,26 @@ fn eval_pjrt(_args: &Args) -> Result<()> {
     anyhow::bail!("this build has no PJRT backend — rebuild with `--features pjrt`")
 }
 
+/// KV page-pool sizing from `--kv-page` (positions per page; falls back to
+/// the `MFQAT_KV_PAGE` env pin, then the 64-position default). `--kv-page`
+/// also pins the env var so engine paths that size their own caches (e.g.
+/// `generate`'s solo decode) see the same page size.
+fn kv_page_cfg(args: &Args) -> Result<mfqat::backend::KvPageCfg> {
+    match args.get("kv-page") {
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| anyhow!("--kv-page expects a positive integer, got '{v}'"))?;
+            if n == 0 {
+                anyhow::bail!("--kv-page expects at least 1 position per page");
+            }
+            std::env::set_var("MFQAT_KV_PAGE", v);
+            Ok(mfqat::backend::KvPageCfg::with_page(n))
+        }
+        None => Ok(mfqat::backend::KvPageCfg::from_env()),
+    }
+}
+
 /// Shared sampling knobs for both generation backends.
 fn sample_cfg(args: &Args) -> Result<mfqat::eval::generate::SampleCfg> {
     Ok(mfqat::eval::generate::SampleCfg {
@@ -345,6 +367,9 @@ fn generate_native_cmd(args: &Args) -> Result<()> {
         None => default_anchor_checkpoint(args, &dims)?,
     };
     let prompt = args.get_or("prompt", "the color of kova is").to_string();
+    // Pins MFQAT_KV_PAGE when --kv-page is given, so the engine's decode
+    // cache pages accordingly.
+    kv_page_cfg(args)?;
     let act = ActMode::parse(args.get_or("act", "f32"))?;
     let fmt = args
         .get("format")
@@ -520,6 +545,7 @@ fn serve(args: &Args) -> Result<()> {
     let gen_tokens = args.usize("gen-tokens", 16)?;
     let batching = GenBatching::parse(args.get_or("batching", "continuous"))?;
     let decode_slots = args.usize("slots", 0)?;
+    let kv_page = kv_page_cfg(args)?;
     let act = ActMode::parse(args.get_or("act", "f32"))?;
     if backend == "pjrt" {
         reject_act_for_pjrt(args)?;
@@ -551,6 +577,7 @@ fn serve(args: &Args) -> Result<()> {
             workers,
             batching,
             decode_slots,
+            kv_page,
         },
     )?;
 

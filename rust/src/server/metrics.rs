@@ -4,6 +4,7 @@
 //! One instance aggregates the whole worker pool (shared behind a mutex;
 //! each worker takes the lock once per executed sub-batch).
 
+use crate::backend::KvMemory;
 use crate::coordinator::CacheStats;
 use crate::formats::ElementFormat;
 use crate::util::stats::{LatencyHist, Running};
@@ -36,6 +37,18 @@ pub struct Metrics {
     pub workers: usize,
     /// Weight-cache counter snapshot (hits/misses/evictions/bytes).
     pub cache: CacheStats,
+    /// Latest paged-KV accounting snapshot from a worker's decode session
+    /// (updated once per decode step; per-session numbers — the
+    /// resident-over-dense ratio is the pool-independent signal).
+    pub kv: KvMemory,
+    /// Highest resident paged-KV bytes observed — sourced from the cache's
+    /// own allocation-time high-water mark
+    /// ([`KvMemory::resident_peak_bytes`], which registers rows that map
+    /// and retire within a single step) plus every snapshot's current
+    /// residency. The number to hold against
+    /// [`KvMemory::dense_equivalent_bytes`] (dense would sit at that
+    /// ceiling the whole time).
+    pub kv_resident_peak_bytes: usize,
 }
 
 impl Metrics {
@@ -85,6 +98,27 @@ impl Metrics {
         self.cache = stats;
     }
 
+    /// Refresh the paged-KV snapshot (once per decode step) and track the
+    /// resident peak.
+    pub fn set_kv(&mut self, kv: KvMemory) {
+        self.kv_resident_peak_bytes = self
+            .kv_resident_peak_bytes
+            .max(kv.resident_bytes)
+            .max(kv.resident_peak_bytes);
+        self.kv = kv;
+    }
+
+    /// Bytes of KV currently resident (mapped pages) in the last-reported
+    /// decode session — `0` until a continuous worker reports.
+    pub fn kv_resident_bytes(&self) -> usize {
+        self.kv.resident_bytes
+    }
+
+    /// Fraction of the last-reported session's KV page pool in use.
+    pub fn kv_pool_utilization(&self) -> f64 {
+        self.kv.utilization()
+    }
+
     /// Anchor→target weight derivations performed (= format-cache misses).
     pub fn conversions(&self) -> u64 {
         self.cache.misses
@@ -112,8 +146,20 @@ impl Metrics {
         } else {
             String::new()
         };
+        let kv = if self.kv.total_pages > 0 {
+            format!(
+                " kv[resident:{}KB peak:{}KB dense:{}KB util:{:.0}% page:{}]",
+                self.kv_resident_bytes() / 1024,
+                self.kv_resident_peak_bytes / 1024,
+                self.kv.dense_equivalent_bytes / 1024,
+                self.kv_pool_utilization() * 100.0,
+                self.kv.page_positions,
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "workers={} requests={} latency[{}] mean_batch={:.2}{} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]",
+            "workers={} requests={} latency[{}] mean_batch={:.2}{} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]{}",
             self.workers.max(1),
             self.requests,
             self.latency.summary(),
@@ -124,6 +170,7 @@ impl Metrics {
             self.cache.misses,
             self.cache.evictions,
             self.cache.used_bytes / 1024,
+            kv,
         )
     }
 }
@@ -166,6 +213,42 @@ mod tests {
         let s2 = m2.summary();
         assert!(!s2.contains("gen["), "{s2}");
         assert!(s2.contains("workers=4"), "{s2}");
+    }
+
+    #[test]
+    fn kv_residency_flows_into_summary() {
+        let mut m = Metrics::new();
+        assert!(!m.summary().contains("kv["), "no kv section before a report");
+        m.set_kv(KvMemory {
+            resident_bytes: 8192,
+            resident_peak_bytes: 8192,
+            dense_equivalent_bytes: 32768,
+            pool_bytes: 16384,
+            used_pages: 4,
+            free_pages: 4,
+            total_pages: 8,
+            page_positions: 16,
+        });
+        assert_eq!(m.kv_resident_bytes(), 8192);
+        assert!((m.kv_pool_utilization() - 0.5).abs() < 1e-12);
+        // Peak survives a lower follow-up snapshot, and honours the cache's
+        // own allocation-time high-water mark (rows that mapped and retired
+        // within one step).
+        m.set_kv(KvMemory {
+            resident_bytes: 2048,
+            resident_peak_bytes: 10240,
+            used_pages: 1,
+            free_pages: 7,
+            total_pages: 8,
+            page_positions: 16,
+            dense_equivalent_bytes: 32768,
+            pool_bytes: 16384,
+        });
+        assert_eq!(m.kv_resident_peak_bytes, 10240);
+        let s = m.summary();
+        assert!(s.contains("kv[resident:2KB"), "{s}");
+        assert!(s.contains("peak:10KB"), "{s}");
+        assert!(s.contains("dense:32KB"), "{s}");
     }
 
     #[test]

@@ -174,6 +174,13 @@ pub struct ServerConfig {
     /// Sequence rows in each worker's continuous decode session
     /// (`0` ⇒ the model's `train_batch`).
     pub decode_slots: usize,
+    /// KV page-pool sizing for each worker's decode session: page
+    /// granularity (`--kv-page` / `MFQAT_KV_PAGE`) and optional page
+    /// budget. With a budget below the dense-equivalent pool, generation
+    /// admission becomes **memory-aware**: queued prompts wait while the
+    /// pool cannot fund another worst-case row, instead of claiming a slot
+    /// the memory cannot back.
+    pub kv_page: crate::backend::KvPageCfg,
 }
 
 impl Default for ServerConfig {
@@ -184,6 +191,7 @@ impl Default for ServerConfig {
             workers: 1,
             batching: GenBatching::Continuous,
             decode_slots: 0,
+            kv_page: crate::backend::KvPageCfg::from_env(),
         }
     }
 }
@@ -628,7 +636,7 @@ fn worker_loop(
         } else {
             config.decode_slots
         };
-        match engine.decode_session(slots) {
+        match engine.decode_session_cfg(slots, config.kv_page) {
             Ok(session) => {
                 continuous_loop(engine, config, queue, metrics, depth, alive, slo, session);
                 log::info!(
@@ -797,8 +805,12 @@ fn continuous_loop<'e>(
         // (c) Admit queued prompts into free rows: they prefill on the very
         // next step while their neighbours keep decoding. The precision
         // policy runs per row at admission time, so one in-flight decode
-        // carries as many formats as the load swung through.
-        while session.active() < session.capacity() {
+        // carries as many formats as the load swung through. Admission is
+        // memory-aware: `can_admit` also checks that the KV page pool can
+        // fund another worst-case row, so under a constrained page budget
+        // queued prompts *defer* (stay backlogged) until a live row retires
+        // and returns its pages, instead of failing.
+        while session.can_admit() {
             let Some(r) = backlog.pop_front() else { break };
             let d = depth.load(Ordering::Acquire) + backlog.len();
             let fmt = match r.format {
@@ -840,6 +852,11 @@ fn continuous_loop<'e>(
                         done.push((row, f.text, latency, service));
                     }
                 }
+                // Snapshot paged-KV residency after the step. The snapshot
+                // carries the cache's allocation-time high-water mark, so
+                // rows that mapped pages and retired *within* this step
+                // still register in the peak `Metrics` reports.
+                metrics.lock().unwrap().set_kv(session.kv_memory());
                 if done.is_empty() {
                     continue;
                 }
@@ -888,7 +905,7 @@ fn continuous_loop<'e>(
                         let _ = row.respond.send(Err(msg.clone()));
                     }
                 }
-                match engine.decode_session(session.capacity()) {
+                match engine.decode_session_cfg(session.capacity(), config.kv_page) {
                     Ok(s) => session = s,
                     Err(e) => {
                         log::error!("could not reopen the decode session: {e:#}");

@@ -1,0 +1,333 @@
+//! Paged KV-cache behaviour: paging must be **bit-invisible** to decode
+//! output (any page size reproduces the dense single-page layout token for
+//! token), page accounting must never leak (every join/decode/overflow/
+//! retire churn returns the free list to baseline), retired rows must leave
+//! no observable state for the next occupant (the zero-on-release
+//! quarantine), and a page budget below the dense-equivalent pool must turn
+//! admission memory-aware (joins defer, never fail mid-decode).
+
+use mfqat::backend::forward::{forward_cached, forward_cached_batch_mixed, KvCache, RowTag};
+use mfqat::backend::{ActMode, KvPageCfg, NativeWeights, SharedParams};
+use mfqat::eval::generate::{generate_native, ContinuousBatch, SampleCfg};
+use mfqat::formats::ElementFormat;
+use mfqat::model::{ModelDims, ParamSet};
+use std::sync::Arc;
+
+/// Byte-level prompts need the full 256-token vocab; tiny window so page
+/// boundaries and overflow re-prefills land fast.
+fn gen_dims() -> ModelDims {
+    let mut dims = ModelDims::new("kvpage", 256, 32, 1, 2, 10);
+    dims.train_batch = 4;
+    dims
+}
+
+/// Small forward-level model (no text decode, vocab can stay tiny).
+fn fwd_dims() -> ModelDims {
+    let mut dims = ModelDims::new("kvfwd", 64, 32, 2, 2, 12);
+    dims.train_batch = 2;
+    dims
+}
+
+fn anchor(dims: &ModelDims, seed: u64, fmt: ElementFormat) -> mfqat::checkpoint::Checkpoint {
+    let m = dims.to_manifest();
+    ParamSet::init(&m, seed).to_anchor_checkpoint(&m, fmt).unwrap()
+}
+
+/// One weight set per format over a single `Arc`'d f32 parameter set.
+fn shared_weight_sets(
+    dims: &ModelDims,
+    ck: &mfqat::checkpoint::Checkpoint,
+    formats: &[ElementFormat],
+    act: ActMode,
+) -> Vec<NativeWeights> {
+    let shared = Arc::new(SharedParams::from_checkpoint(dims, ck).unwrap());
+    formats
+        .iter()
+        .map(|&fmt| NativeWeights::packed_with_shared(dims, ck, fmt, shared.clone(), act).unwrap())
+        .collect()
+}
+
+/// Decode every prompt to completion through a `ContinuousBatch` over the
+/// given KV paging, returning the continuations in prompt order.
+fn run_batch(
+    dims: &ModelDims,
+    w: &NativeWeights,
+    prompts: &[&str],
+    kv: KvPageCfg,
+    n_tokens: usize,
+    cfg: &SampleCfg,
+) -> Vec<String> {
+    let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(dims, prompts.len(), kv);
+    let mut slot_of = Vec::new();
+    for p in prompts {
+        slot_of.push(cb.join(w, p, n_tokens, cfg).unwrap());
+    }
+    let mut out: Vec<Option<String>> = vec![None; prompts.len()];
+    let mut steps = 0usize;
+    while cb.active() > 0 {
+        for f in cb.step().unwrap() {
+            let i = slot_of.iter().position(|&s| s == f.slot).unwrap();
+            out[i] = Some(f.text);
+        }
+        steps += 1;
+        assert!(steps < 1000, "decode did not converge");
+    }
+    out.into_iter().map(|t| t.unwrap()).collect()
+}
+
+#[test]
+fn paged_decode_token_identical_across_page_sizes() {
+    // The paged-vs-dense oracle: a single page spanning the whole window
+    // IS the dense layout, so decoding with 1-, 3- and 4-position pages
+    // must emit exactly the same tokens — across MXINT8/MXINT4/MXFP8 and
+    // both activation pipelines, through overflow re-prefills.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 51, ElementFormat::int(8));
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 6,
+        seed: 9,
+    };
+    let prompts = ["kova", "the color of kova is violet", "q"];
+    let n_tokens = 2 * dims.seq_len; // past the window: forced overflow
+    for fmt in [
+        ElementFormat::int(8),
+        ElementFormat::int(4),
+        ElementFormat::fp_from_bits(8),
+    ] {
+        for act in [ActMode::F32, ActMode::Int8] {
+            let mut w = NativeWeights::packed_from_checkpoint(&dims, &ck, fmt).unwrap();
+            w.act = act;
+            let dense = run_batch(
+                &dims,
+                &w,
+                &prompts,
+                KvPageCfg::with_page(dims.seq_len),
+                n_tokens,
+                &cfg,
+            );
+            for pp in [1usize, 3, 4] {
+                let paged =
+                    run_batch(&dims, &w, &prompts, KvPageCfg::with_page(pp), n_tokens, &cfg);
+                assert_eq!(
+                    paged,
+                    dense,
+                    "{} act={}: page size {pp} changed decode output",
+                    fmt.long_name(),
+                    act.name()
+                );
+            }
+            // And the dense-page run equals the solo decode path.
+            for (r, p) in prompts.iter().enumerate() {
+                let solo = generate_native(&w, p, n_tokens, &cfg).unwrap();
+                assert_eq!(dense[r], solo, "{} act={} row {r}", fmt.long_name(), act.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kv_churn_never_leaks_pages() {
+    // Property: arbitrary join/decode/overflow/retire churn keeps
+    // `used + free == total` at every step and returns the free list to
+    // baseline once every sequence finishes — no page is ever leaked or
+    // double-freed, whatever the membership history.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 52, ElementFormat::int(8));
+    let formats = [
+        ElementFormat::int(8),
+        ElementFormat::int(4),
+        ElementFormat::fp_from_bits(8),
+    ];
+    let weights = shared_weight_sets(&dims, &ck, &formats, ActMode::F32);
+    let prompts = ["k", "kova blue", "the color of kova", ""];
+    let cfg = SampleCfg {
+        temperature: 0.9,
+        top_k: 5,
+        seed: 27,
+    };
+    mfqat::util::props::run_cases("kv_page_leak", 8, |g| {
+        let pp = 1 + g.rng.below(4); // 1..=4 positions per page
+        let mut cb: ContinuousBatch<&NativeWeights> =
+            ContinuousBatch::with_kv(&dims, 3, KvPageCfg::with_page(pp));
+        let total = cb.kv_memory().total_pages;
+        if cb.kv_memory().free_pages != total {
+            return Err("fresh pool must be all-free".into());
+        }
+        let mut live: Vec<usize> = Vec::new();
+        for _ in 0..g.rng.range(4, 12) {
+            if cb.can_admit() && g.rng.chance(0.6) {
+                let w = &weights[g.rng.below(weights.len())];
+                let p = prompts[g.rng.below(prompts.len())];
+                let n = g.rng.range(1, 2 * dims.seq_len);
+                live.push(cb.join(w, p, n, &cfg).map_err(|e| e.to_string())?);
+            }
+            if cb.active() > 0 {
+                for f in cb.step().map_err(|e| e.to_string())? {
+                    live.retain(|&s| s != f.slot);
+                }
+            }
+            if !live.is_empty() && g.rng.chance(0.3) {
+                let victim = live[g.rng.below(live.len())];
+                cb.retire(victim).map_err(|e| e.to_string())?;
+                live.retain(|&s| s != victim);
+            }
+            let m = cb.kv_memory();
+            if m.used_pages + m.free_pages != total {
+                return Err(format!(
+                    "page accounting broke mid-churn: {} used + {} free != {total}",
+                    m.used_pages, m.free_pages
+                ));
+            }
+        }
+        // Drain and check the pool returned to baseline.
+        let mut steps = 0usize;
+        while cb.active() > 0 {
+            cb.step().map_err(|e| e.to_string())?;
+            steps += 1;
+            if steps > 1000 {
+                return Err("decode did not converge".into());
+            }
+        }
+        let m = cb.kv_memory();
+        if m.used_pages != 0 || m.free_pages != total || m.resident_bytes != 0 {
+            return Err(format!(
+                "pages leaked after all rows finished: {} used, {} free of {total}",
+                m.used_pages, m.free_pages
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn retired_row_leaves_no_stale_kv_or_tag() {
+    // Regression for the retire-row audit: after a row retires, its slot
+    // must expose nothing of the previous occupant — not its RowTag (a new
+    // join re-tags) and not its K/V contents (pages are zeroed on release,
+    // and the new occupant's logits equal a fresh solo decode).
+    let dims = fwd_dims();
+    let ck = anchor(&dims, 53, ElementFormat::int(8));
+    let ws = shared_weight_sets(
+        &dims,
+        &ck,
+        &[ElementFormat::int(8), ElementFormat::int(4)],
+        ActMode::F32,
+    );
+    let (w8, w4) = (&ws[0], &ws[1]);
+    let mut cache = KvCache::with_slots_cfg(&dims, 1, KvPageCfg::with_page(4));
+    let r = cache.join_row(RowTag::of(w8)).unwrap();
+    assert_eq!(r, 0);
+    let toks_a: Vec<i32> = (0..7).map(|i| (i * 5 + 3) % 64).collect();
+    forward_cached_batch_mixed(&[w8], &mut cache, &[toks_a.as_slice()]).unwrap();
+    assert!(cache.kv_memory().used_pages > 0, "occupant A mapped pages");
+    cache.retire_row(0);
+    assert_eq!(cache.row_tag(0), None, "stale RowTag survived retire");
+    assert_eq!(cache.kv_memory().used_pages, 0, "pages not returned");
+
+    // New occupant in a different format reuses the same slot.
+    let r = cache.join_row(RowTag::of(w4)).unwrap();
+    assert_eq!(r, 0, "freed slot is reused");
+    assert_eq!(cache.row_tag(0), Some(RowTag::of(w4)));
+    let toks_b: Vec<i32> = (0..9).map(|i| (i * 11 + 1) % 64).collect();
+    let paged = forward_cached_batch_mixed(&[w4], &mut cache, &[toks_b.as_slice()]).unwrap();
+    let mut fresh = KvCache::with_rows_cfg(&dims, 1, KvPageCfg::with_page(4));
+    let solo = forward_cached(w4, &mut fresh, &toks_b).unwrap();
+    assert_eq!(paged, solo, "previous occupant's state leaked into the reused slot");
+
+    // Decoding the reused slot with the *retired* occupant's weights is a
+    // tag error, not silent corruption.
+    let one = [1i32];
+    assert!(
+        forward_cached_batch_mixed(&[w8], &mut cache, &[&one[..]]).is_err(),
+        "stale-format decode must be rejected by the RowTag"
+    );
+}
+
+#[test]
+fn kv_admission_defers_until_pages_return() {
+    // Pool funds exactly one worst-case row but the batch has two slots:
+    // admission must become memory-aware (defer), not fail mid-decode.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 54, ElementFormat::int(8));
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let cfg = SampleCfg {
+        temperature: 0.7,
+        top_k: 4,
+        seed: 3,
+    };
+    let pages_per_row = dims.seq_len.div_ceil(4);
+    let kv = KvPageCfg::with_page(4).budget(pages_per_row);
+    let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(&dims, 2, kv);
+    assert!(cb.can_admit(), "an idle constrained pool can fund one row");
+    let s0 = cb.join(&w, "kova", 4, &cfg).unwrap();
+    assert!(cb.has_free_slot(), "a slot is free…");
+    assert!(!cb.can_admit(), "…but the pool cannot fund it");
+    assert!(
+        cb.join(&w, "q", 4, &cfg).is_err(),
+        "join must defer while unfundable"
+    );
+    // The funded row decodes to completion untouched by the pressure.
+    let mut finished = Vec::new();
+    let mut steps = 0usize;
+    while cb.active() > 0 {
+        finished.extend(cb.step().unwrap());
+        steps += 1;
+        assert!(steps < 200, "decode did not converge");
+    }
+    assert_eq!(finished.len(), 1);
+    assert_eq!(finished[0].slot, s0);
+    assert_eq!(finished[0].text, generate_native(&w, "kova", 4, &cfg).unwrap());
+    // Pages returned ⇒ admission reopens.
+    assert!(cb.can_admit(), "retired pages must re-fund admission");
+    cb.join(&w, "q", 3, &cfg).unwrap();
+
+    // Budgets below one worst-case row are clamped up so a pool can always
+    // serve one sequence.
+    let tiny = KvCache::with_slots_cfg(&dims, 2, KvPageCfg::with_page(4).budget(1));
+    assert_eq!(tiny.total_pages(), pages_per_row);
+}
+
+#[test]
+fn kv_resident_bytes_track_live_context() {
+    // Residency grows page by page with appended context and shrinks on
+    // truncate/reset — the memory story the refactor exists for.
+    let dims = fwd_dims();
+    let ck = anchor(&dims, 55, ElementFormat::int(8));
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let mut cache = KvCache::with_rows_cfg(&dims, 1, KvPageCfg::with_page(4));
+    assert_eq!(cache.kv_memory().used_pages, 0);
+    let toks: Vec<i32> = (0..6).map(|i| (i * 7 + 2) % 64).collect();
+    let first = forward_cached(&w, &mut cache, &toks).unwrap();
+    let m = cache.kv_memory();
+    assert_eq!(m.used_pages, 2, "6 positions at 4/page map 2 pages");
+    let page_bytes = 2 * dims.n_layers * 4 * dims.d_model * std::mem::size_of::<f32>();
+    assert_eq!(m.resident_bytes, 2 * page_bytes);
+    assert!(
+        m.resident_bytes < m.dense_equivalent_bytes,
+        "resident {} must undercut dense {}",
+        m.resident_bytes,
+        m.dense_equivalent_bytes
+    );
+    // Two more tokens stay inside page 2 (positions 7 and 8)…
+    forward_cached(&w, &mut cache, &[9]).unwrap();
+    forward_cached(&w, &mut cache, &[9]).unwrap();
+    assert_eq!(cache.kv_memory().used_pages, 2);
+    // …the 9th position maps page 3.
+    forward_cached(&w, &mut cache, &[9]).unwrap();
+    assert_eq!(cache.kv_memory().used_pages, 3);
+    // Truncation returns pages past the cut.
+    cache.truncate(4);
+    assert_eq!(cache.kv_memory().used_pages, 1);
+    cache.truncate(0);
+    assert_eq!(cache.kv_memory().used_pages, 0);
+    // A fresh prefill after full truncation reproduces the first one.
+    let again = forward_cached(&w, &mut cache, &toks).unwrap();
+    assert_eq!(first, again, "truncate-to-zero must behave like a fresh cache");
+    cache.reset();
+    let m = cache.kv_memory();
+    assert_eq!((m.used_pages, m.free_pages), (0, m.total_pages));
+    // The allocation-time high-water mark survives truncation and reset:
+    // 3 pages were simultaneously mapped at the widest point.
+    assert_eq!(m.resident_peak_bytes, 3 * page_bytes);
+}
