@@ -92,7 +92,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let metrics = server.metrics.lock().unwrap().clone();
+    let metrics = server.metrics();
     println!("\nserver totals: {}", metrics.summary());
     println!("anchor→target conversions: {} (cache does the rest)", metrics.conversions());
     drop(client);

@@ -23,11 +23,18 @@
 //!                           dense-equivalent `slots × seq_len` allocation
 //!                           (8-position pages so residency tracks the
 //!                           short mixed contexts), plus pool utilization
+//!   ttft / inter_token      per-format time-to-first-token and inter-token
+//!                           gap percentiles from the continuous mixed run
+//!                           (the lock-free span histograms)
+//!   observability/*         lifecycle-tracing overhead: the same closed-
+//!                           loop mixed-format load with the trace sink off
+//!                           vs on, min-of-3 walls each
 //!
 //! Writes a machine-readable summary to `BENCH_serving.json` (CI archives
 //! it; the acceptance numbers — tokens/sec scaling with worker count,
 //! continuous-vs-gather queue-latency reduction, batched-decode speedup
-//! over rows=1, paged-KV peak residency ≤ the dense-equivalent bytes —
+//! over rows=1, paged-KV peak residency ≤ the dense-equivalent bytes,
+//! per-format TTFT/inter-token percentiles, `tracing_overhead_pct` ≤ 3 —
 //! live there).
 //!
 //! Inner GEMM threading is pinned to 1 unless `MFQAT_THREADS` is set, so
@@ -93,11 +100,12 @@ where
     (wall, p50, p99)
 }
 
-fn start_pool_kv(
+fn start_pool_traced(
     workers: usize,
     batching: GenBatching,
     decode_slots: usize,
     kv_page: KvPageCfg,
+    trace: bool,
 ) -> (Server, mfqat::server::Client, usize) {
     let dims = bench_dims();
     let width = dims.seq_len + 1;
@@ -116,11 +124,21 @@ fn start_pool_kv(
             batching,
             decode_slots,
             kv_page,
+            trace,
             ..Default::default()
         },
     )
     .unwrap();
     (server, client, width)
+}
+
+fn start_pool_kv(
+    workers: usize,
+    batching: GenBatching,
+    decode_slots: usize,
+    kv_page: KvPageCfg,
+) -> (Server, mfqat::server::Client, usize) {
+    start_pool_traced(workers, batching, decode_slots, kv_page, false)
 }
 
 fn start_pool_mode(
@@ -327,7 +345,47 @@ fn main() {
         // resident bytes vs the dense-equivalent allocation every
         // pre-paging decode session preallocated up front.
         if batching == GenBatching::Continuous {
-            let m = server.metrics.lock().unwrap().clone();
+            let m = server.metrics();
+            // Per-format lifecycle spans from the lock-free histograms:
+            // time-to-first-token (enqueue → first sampled token, so queue
+            // wait is included) and inter-token gap, p50/p99 per element
+            // format in the mix.
+            let mut ttft_json = Json::obj();
+            for (f, h) in m.ttft.iter() {
+                let mut e = Json::obj();
+                e.set("p50_ms", Json::from(h.quantile(0.5) * 1e3));
+                e.set("p99_ms", Json::from(h.quantile(0.99) * 1e3));
+                e.set("n", Json::from(h.count()));
+                println!(
+                    "ttft/{f}: p50 {:.1}ms  p99 {:.1}ms  (n={})",
+                    h.quantile(0.5) * 1e3,
+                    h.quantile(0.99) * 1e3,
+                    h.count()
+                );
+                ttft_json.set(f, e);
+            }
+            summary.set("ttft", ttft_json);
+            let mut it_json = Json::obj();
+            for (f, h) in m.inter_token.iter() {
+                let mut e = Json::obj();
+                e.set("p50_ms", Json::from(h.quantile(0.5) * 1e3));
+                e.set("p99_ms", Json::from(h.quantile(0.99) * 1e3));
+                e.set("n", Json::from(h.count()));
+                println!(
+                    "inter_token/{f}: p50 {:.2}ms  p99 {:.2}ms  (n={})",
+                    h.quantile(0.5) * 1e3,
+                    h.quantile(0.99) * 1e3,
+                    h.count()
+                );
+                it_json.set(f, e);
+            }
+            summary.set("inter_token", it_json);
+            let mut q = Json::obj();
+            q.set("p50_ms", Json::from(m.queue_wait.quantile(0.5) * 1e3));
+            q.set("p99_ms", Json::from(m.queue_wait.quantile(0.99) * 1e3));
+            q.set("n", Json::from(m.queue_wait.count()));
+            q.set("deferrals", Json::from(m.deferrals));
+            summary.set("queue_wait", q);
             let kv = m.kv;
             let mut k = Json::obj();
             k.set("page_positions", Json::from(kv.page_positions));
@@ -366,6 +424,61 @@ fn main() {
         );
     }
     summary.set("continuous_batching", cb_json);
+
+    // ------------------------------------------- lifecycle-tracing overhead
+    //
+    // The same mixed-format continuous load, closed-loop (no arrival gaps,
+    // so the wall is pure serving work), with the trace sink disabled vs
+    // enabled. min-of-3 walls each side — tracing fully on must stay within
+    // a few percent, and disabled it is a single `Option` check.
+    let ov_requests = 24usize;
+    let run_mixed = |trace: bool| -> (f64, usize) {
+        let mut best = f64::INFINITY;
+        let mut events = 0usize;
+        for _ in 0..3 {
+            let (server, client, _) =
+                start_pool_traced(2, GenBatching::Continuous, 8, KvPageCfg::with_page(8), trace);
+            for fmt in mix {
+                client.score(&rows[0], Some(fmt)).unwrap();
+            }
+            let t0 = Instant::now();
+            let rxs: Vec<_> = (0..ov_requests)
+                .map(|i| {
+                    client
+                        .submit_generate(
+                            prompts[i % prompts.len()],
+                            cb_tokens,
+                            Some(mix[i % mix.len()]),
+                            cfg.clone(),
+                        )
+                        .unwrap()
+                })
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+            if let Some(sink) = server.obs().trace() {
+                events = events.max(sink.len());
+            }
+            drop(client);
+            server.shutdown();
+        }
+        (best, events)
+    };
+    let (wall_off, _) = run_mixed(false);
+    let (wall_on, trace_events) = run_mixed(true);
+    let overhead_pct = (wall_on - wall_off) / wall_off * 100.0;
+    println!(
+        "observability: untraced {wall_off:.3}s  traced {wall_on:.3}s  \
+         overhead {overhead_pct:+.2}%  ({trace_events} events)"
+    );
+    let mut ov = Json::obj();
+    ov.set("wall_untraced_s", Json::from(wall_off));
+    ov.set("wall_traced_s", Json::from(wall_on));
+    ov.set("tracing_overhead_pct", Json::from(overhead_pct));
+    ov.set("trace_events", Json::from(trace_events));
+    summary.set("observability", ov);
 
     // ------------------------------ raw batched decode (no server) by rows
     let manifest = dims.to_manifest();

@@ -169,6 +169,21 @@ pub trait DecodeSession {
     /// rows that completed (their slots are free for the next join).
     fn step(&mut self) -> Result<Vec<crate::eval::generate::FinishedRow>>;
 
+    /// [`Self::step`] plus one [`crate::eval::generate::RowStepEvent`] per
+    /// fed row attributing what its chunk was (prefill / decode / overflow
+    /// re-prefill) — the hook behind the serving runtime's lifecycle
+    /// traces. The default implementation steps without attribution (an
+    /// empty event list), so backends without per-row bookkeeping keep
+    /// working; the native session reports real events.
+    fn step_with_events(
+        &mut self,
+    ) -> Result<(
+        Vec<crate::eval::generate::FinishedRow>,
+        Vec<crate::eval::generate::RowStepEvent>,
+    )> {
+        Ok((self.step()?, Vec::new()))
+    }
+
     /// Whether [`Self::join`] can admit another sequence **right now** —
     /// a free row *and*, on paged-KV backends, enough unclaimed pool pages
     /// to fund the new row's worst-case window. The serving runtime defers

@@ -11,7 +11,7 @@ use super::kvpool::{KvMemory, KvPageCfg};
 use super::{Backend, DecodeSession};
 use crate::checkpoint::Checkpoint;
 use crate::coordinator::format_cache::{CacheStats, FormatCache};
-use crate::eval::generate::{ContinuousBatch, FinishedRow, SampleCfg};
+use crate::eval::generate::{ContinuousBatch, FinishedRow, RowStepEvent, SampleCfg};
 use crate::formats::ElementFormat;
 use crate::model::ModelDims;
 use anyhow::{anyhow, Result};
@@ -229,6 +229,10 @@ impl DecodeSession for NativeDecodeSession<'_> {
 
     fn step(&mut self) -> Result<Vec<FinishedRow>> {
         self.inner.step()
+    }
+
+    fn step_with_events(&mut self) -> Result<(Vec<FinishedRow>, Vec<RowStepEvent>)> {
+        self.inner.step_with_events()
     }
 
     fn can_admit(&self) -> bool {

@@ -133,6 +133,33 @@ pub struct FinishedRow {
     pub text: String,
 }
 
+/// What one live row's pending chunk was in a single
+/// [`ContinuousBatch::step`] — the per-row step attribution behind the
+/// serving runtime's lifecycle traces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowStepKind {
+    /// The row fed its prompt window (its first pass after joining).
+    Prefill,
+    /// The row fed one freshly sampled token (steady-state decode).
+    Decode,
+    /// The row fed its trailing half window after an in-place context
+    /// overflow ([`ContinuousBatch::step`]'s re-prefill path).
+    Reprefill,
+}
+
+/// Per-row record emitted by [`ContinuousBatch::step_with_events`]: what
+/// the row in `slot` contributed to this step's batched forward.
+#[derive(Debug, Clone, Copy)]
+pub struct RowStepEvent {
+    /// The row's slot index.
+    pub slot: usize,
+    /// What the row's pending chunk was.
+    pub kind: RowStepKind,
+    /// Tokens the row fed this pass (window length for prefills, 1 for
+    /// decode).
+    pub fed_tokens: usize,
+}
+
 /// Per-slot decode state: the sequence's weight set, sampler, token
 /// history, budget, and the chunk queued for the next forward pass.
 struct Slot<W> {
@@ -150,6 +177,9 @@ struct Slot<W> {
     /// re-prefill, or the single freshly sampled token. Non-empty for
     /// every live slot between steps.
     pending: Vec<i32>,
+    /// What `pending` is (prefill window / decode token / re-prefill
+    /// window) — reported by [`ContinuousBatch::step_with_events`].
+    pending_kind: RowStepKind,
 }
 
 /// A continuously batched, step-synchronized decode over `capacity` slots
@@ -269,6 +299,7 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
             n_tokens,
             emitted: 0,
             pending,
+            pending_kind: RowStepKind::Prefill,
         });
         Ok(slot)
     }
@@ -292,9 +323,18 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
     /// (their slots are already free). A batch with no live rows is a
     /// no-op returning an empty list.
     pub fn step(&mut self) -> Result<Vec<FinishedRow>> {
+        Ok(self.step_with_events()?.0)
+    }
+
+    /// [`Self::step`] plus one [`RowStepEvent`] per fed row, attributing
+    /// what each row's chunk was (prefill / decode / overflow re-prefill).
+    /// The events are pure bookkeeping read off state [`Self::step`]
+    /// already tracks — decode numerics and sampling are untouched, so
+    /// per-row bit-identity to solo decode is preserved.
+    pub fn step_with_events(&mut self) -> Result<(Vec<FinishedRow>, Vec<RowStepEvent>)> {
         let rows = self.cache.rows();
         let Some(filler) = self.slots.iter().position(|s| s.is_some()) else {
-            return Ok(Vec::new());
+            return Ok((Vec::new(), Vec::new()));
         };
         // Per-row weight/chunk views; free rows ride along with empty
         // chunks (their weight entry is ignored by the forward).
@@ -319,6 +359,7 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
         let vocab = self.dims.vocab;
         let seq_len = self.dims.seq_len;
         let mut finished = Vec::new();
+        let mut events = Vec::new();
         let mut off = 0usize;
         for r in 0..rows {
             let count = counts[r];
@@ -328,6 +369,11 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
             let last = &logits[(off + count - 1) * vocab..(off + count) * vocab];
             off += count;
             let s = self.slots[r].as_mut().expect("fed row holds a sequence");
+            events.push(RowStepEvent {
+                slot: r,
+                kind: s.pending_kind,
+                fed_tokens: count,
+            });
             s.pending.clear();
             let mut done = s.n_tokens == 0;
             if !done {
@@ -343,9 +389,11 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
                     // amortized O(1)); neighbours are untouched.
                     let keep = (seq_len / 2).max(1);
                     s.pending = s.tokens[s.tokens.len() - keep..].to_vec();
+                    s.pending_kind = RowStepKind::Reprefill;
                     self.cache.reset_row(r);
                 } else {
                     s.pending.push(next);
+                    s.pending_kind = RowStepKind::Decode;
                 }
             }
             if done {
@@ -357,7 +405,7 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
                 });
             }
         }
-        Ok(finished)
+        Ok((finished, events))
     }
 }
 
@@ -505,6 +553,50 @@ mod tests {
             assert_eq!(batch[r], solo, "row {r} (prompt {p:?}) diverged");
         }
         assert!(generate_native_batch(&w, &[], 8, &cfg).unwrap().is_empty());
+    }
+
+    #[test]
+    fn step_events_attribute_prefill_decode_reprefill() {
+        use crate::backend::NativeWeights;
+        use crate::formats::ElementFormat;
+        use crate::model::{ModelDims, ParamSet};
+        let mut dims = ModelDims::new("genev", 256, 16, 1, 2, 12);
+        dims.train_batch = 2;
+        let m = dims.to_manifest();
+        let ck = ParamSet::init(&m, 9)
+            .to_anchor_checkpoint(&m, ElementFormat::int(8))
+            .unwrap();
+        let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+        let cfg = SampleCfg {
+            temperature: 0.7,
+            top_k: 8,
+            seed: 4,
+        };
+        let mut batch: ContinuousBatch<&NativeWeights> = ContinuousBatch::new(&dims, 2);
+        // Budget past the 16-token window so the row must re-prefill.
+        let slot = batch.join(&w, "kova", 24, &cfg).unwrap();
+        let mut kinds = Vec::new();
+        while batch.active() > 0 {
+            let (_, events) = batch.step_with_events().unwrap();
+            assert_eq!(events.len(), 1, "one live row, one event per step");
+            assert_eq!(events[0].slot, slot);
+            if events[0].kind == RowStepKind::Decode {
+                assert_eq!(events[0].fed_tokens, 1);
+            } else {
+                assert!(events[0].fed_tokens > 1, "prefills feed a window");
+            }
+            kinds.push(events[0].kind);
+        }
+        assert_eq!(kinds[0], RowStepKind::Prefill, "first pass prefills");
+        assert!(kinds[1..].contains(&RowStepKind::Decode));
+        assert!(
+            kinds.contains(&RowStepKind::Reprefill),
+            "a 24-token budget over a 16-token window must re-prefill: {kinds:?}"
+        );
+        // Events are attribution only: plain step() output is unchanged.
+        let a = generate_native(&w, "kova", 24, &cfg).unwrap();
+        let b = generate_native(&w, "kova", 24, &cfg).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

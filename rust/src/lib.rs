@@ -124,6 +124,7 @@ pub mod eval;
 pub mod experiments;
 pub mod formats;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

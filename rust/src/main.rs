@@ -119,6 +119,7 @@ COMMANDS:
         [--checkpoint P] [--cache-mb N] [--act f32|int8] [--workers N]
         [--gen-requests N] [--gen-tokens N]
         [--batching continuous|gather] [--slots N] [--kv-page N]
+        [--trace-out PATH] [--metrics-out PATH]
                                     run the elastic serving demo workload:
                                     N workers share one engine; scoring and
                                     generation requests interleave. The
@@ -127,7 +128,12 @@ COMMANDS:
                                     joins into --slots decode rows; KV paged
                                     at --kv-page positions per page);
                                     --batching gather restores the legacy
-                                    grouped batched decode
+                                    grouped batched decode. --trace-out
+                                    writes a Chrome-trace JSON of every
+                                    request lifecycle (Perfetto-loadable);
+                                    --metrics-out writes a JSON metrics
+                                    snapshot (+ .prom Prometheus text)
+                                    periodically and at shutdown
   experiment <id>                   regenerate a paper figure/table; id in
                                     fig1 fig2 fig3 fig4 tab1 tab2 tab3 fig19 fig20 all
                                     (fig19/fig20 run natively; the rest need pjrt)
@@ -546,6 +552,8 @@ fn serve(args: &Args) -> Result<()> {
     let batching = GenBatching::parse(args.get_or("batching", "continuous"))?;
     let decode_slots = args.usize("slots", 0)?;
     let kv_page = kv_page_cfg(args)?;
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
     let act = ActMode::parse(args.get_or("act", "f32"))?;
     if backend == "pjrt" {
         reject_act_for_pjrt(args)?;
@@ -578,6 +586,9 @@ fn serve(args: &Args) -> Result<()> {
             batching,
             decode_slots,
             kv_page,
+            trace_out: trace_out.clone(),
+            metrics_out: metrics_out.clone(),
+            ..ServerConfig::default()
         },
     )?;
 
@@ -647,7 +658,7 @@ fn serve(args: &Args) -> Result<()> {
         }
     }
     let elapsed = t0.elapsed().as_secs_f64();
-    let metrics = server.metrics.lock().unwrap().clone();
+    let metrics = server.metrics();
     println!(
         "done: {} requests in {:.2}s ({:.1} req/s)",
         metrics.requests,
@@ -658,6 +669,16 @@ fn serve(args: &Args) -> Result<()> {
     println!("  format conversions performed: {}", metrics.conversions());
     drop(client);
     server.shutdown();
+    if let Some(p) = &trace_out {
+        println!("  trace written to {} (load in Perfetto / chrome://tracing)", p.display());
+    }
+    if let Some(p) = &metrics_out {
+        println!(
+            "  metrics snapshot written to {} (+ {})",
+            p.display(),
+            p.with_extension("prom").display()
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,28 @@
+//! Observability: lock-free metrics and request-lifecycle tracing.
+//!
+//! Two building blocks, both designed so that a fully *disabled*
+//! configuration stays within noise of the untouched hot path and never
+//! perturbs decode numerics:
+//!
+//! * [`registry`] — atomic [`Counter`]s/[`Gauge`]s, CAS-accumulated
+//!   [`AtomicRunning`] stats and sharded bucketed [`Hist`]ograms behind a
+//!   named [`Registry`]. These replace the server's former once-per-batch
+//!   metrics mutex: workers cache `Arc` handles and update with plain
+//!   atomics. The registry renders a JSON snapshot and a Prometheus text
+//!   exposition.
+//! * [`trace`] — a [`TraceSink`] collecting per-request lifecycle spans
+//!   (enqueue → admit/defer → prefill → per-step decode → complete)
+//!   through the continuous-batching state machine, exported as
+//!   Perfetto-loadable Chrome trace-event JSON with one track per worker
+//!   and one lane per decode row.
+//!
+//! The serving glue — which counters exist, how spans map onto
+//! [`crate::server`]'s worker loops, snapshotting back into
+//! [`crate::server::Metrics`] — lives in [`crate::server::metrics`]; this
+//! module is the reusable substrate.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{AtomicRunning, Counter, Gauge, Hist, Metric, Registry};
+pub use trace::{TraceEvent, TraceSink};

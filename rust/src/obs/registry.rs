@@ -1,0 +1,665 @@
+//! Lock-free metric primitives and the named [`Registry`] behind the
+//! serving telemetry surface.
+//!
+//! Every primitive updates with plain atomics — no mutex on any record
+//! path — so the server's worker threads (and every decode step) can feed
+//! metrics without serializing on a shared lock:
+//!
+//! * [`Counter`] — monotonic `u64` (`fetch_add`).
+//! * [`Gauge`] — last-written `u64` value plus a `fetch_max` peak helper.
+//! * [`AtomicRunning`] — mean/variance/min/max over `f64` samples via
+//!   CAS-accumulated `sum`/`sumsq` (bridged back to
+//!   [`crate::util::stats::Running`] snapshots).
+//! * [`Hist`] — sharded bucketed latency histogram sharing the fixed
+//!   log-bucket layout of [`LatencyHist`]; each thread lands on its own
+//!   shard, shards merge at read time.
+//!
+//! The [`Registry`] maps `name{labels}` ids to shared handles. Its map is
+//! behind an `RwLock`, but that lock is touched only at
+//! registration/lookup — callers cache the returned `Arc` handles, so the
+//! hot path never sees it. Exporters walk the registry to render a JSON
+//! snapshot or Prometheus text exposition.
+
+use crate::util::json::Json;
+use crate::util::stats::{LatencyHist, Running};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+// ---------------------------------------------------------------- helpers
+
+/// CAS-accumulate `x` into an `f64` stored as bits in an `AtomicU64`.
+fn f64_add(cell: &AtomicU64, x: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + x).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// CAS-minimize an `f64` stored as bits in an `AtomicU64`.
+fn f64_min(cell: &AtomicU64, x: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while x < f64::from_bits(cur) {
+        match cell.compare_exchange_weak(cur, x.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// CAS-maximize an `f64` stored as bits in an `AtomicU64`.
+fn f64_max(cell: &AtomicU64, x: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while x > f64::from_bits(cur) {
+        match cell.compare_exchange_weak(cur, x.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Stable per-thread shard index (a thread-local ticket from a global
+/// counter — cheaper and more portable than hashing `ThreadId`).
+fn shard_id() -> usize {
+    use std::cell::Cell;
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static ID: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    ID.with(|c| {
+        let mut v = c.get();
+        if v == usize::MAX {
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+        }
+        v
+    })
+}
+
+// ----------------------------------------------------------------- Counter
+
+/// Monotonic lock-free counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Zeroed counter.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+// ------------------------------------------------------------------- Gauge
+
+/// Last-written value gauge (also usable as a running peak via
+/// [`Gauge::set_max`]).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Zeroed gauge.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the value to at least `v` (running peak).
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+// ----------------------------------------------------------- AtomicRunning
+
+/// Lock-free mean/variance/min/max accumulator over `f64` samples.
+///
+/// Accumulates `sum` and `sumsq` by CAS (exact for integer-valued samples
+/// below 2^53; ordinary floating-point addition-order noise otherwise) and
+/// snapshots back into [`Running`] for display.
+#[derive(Debug)]
+pub struct AtomicRunning {
+    n: AtomicU64,
+    sum: AtomicU64,
+    sumsq: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicRunning {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicRunning {
+    /// Empty accumulator.
+    pub fn new() -> AtomicRunning {
+        AtomicRunning {
+            n: AtomicU64::new(0),
+            sum: AtomicU64::new(0f64.to_bits()),
+            sumsq: AtomicU64::new(0f64.to_bits()),
+            min: AtomicU64::new(f64::INFINITY.to_bits()),
+            max: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+
+    /// Push one sample.
+    pub fn push(&self, x: f64) {
+        self.n.fetch_add(1, Ordering::Relaxed);
+        f64_add(&self.sum, x);
+        f64_add(&self.sumsq, x * x);
+        f64_min(&self.min, x);
+        f64_max(&self.max, x);
+    }
+
+    /// Samples seen.
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    /// Sum of the samples.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum.load(Ordering::Relaxed))
+    }
+
+    /// Snapshot into the display accumulator type.
+    pub fn snapshot(&self) -> Running {
+        let n = self.count();
+        if n == 0 {
+            return Running::new();
+        }
+        let sum = self.sum();
+        let sumsq = f64::from_bits(self.sumsq.load(Ordering::Relaxed));
+        let mean = sum / n as f64;
+        Running::from_parts(
+            n,
+            mean,
+            sumsq - sum * sum / n as f64,
+            f64::from_bits(self.min.load(Ordering::Relaxed)),
+            f64::from_bits(self.max.load(Ordering::Relaxed)),
+        )
+    }
+}
+
+// -------------------------------------------------------------------- Hist
+
+/// Number of shards per histogram (threads spread across shards; merged at
+/// read time).
+const HIST_SHARDS: usize = 8;
+
+#[derive(Debug)]
+struct HistShard {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl HistShard {
+    fn new() -> HistShard {
+        HistShard {
+            buckets: (0..LatencyHist::N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+}
+
+/// Sharded lock-free latency histogram over [`LatencyHist`]'s fixed
+/// log-bucket layout (1µs..100s, 10 buckets/decade). Recording touches one
+/// shard's atomics; reads merge shards and can rebuild a [`LatencyHist`]
+/// for quantile display.
+#[derive(Debug)]
+pub struct Hist {
+    shards: Vec<HistShard>,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    /// Empty histogram.
+    pub fn new() -> Hist {
+        Hist {
+            shards: (0..HIST_SHARDS).map(|_| HistShard::new()).collect(),
+        }
+    }
+
+    /// Record one latency sample (seconds).
+    pub fn record(&self, secs: f64) {
+        let shard = &self.shards[shard_id() % HIST_SHARDS];
+        shard.buckets[LatencyHist::bucket_index(secs)].fetch_add(1, Ordering::Relaxed);
+        shard.count.fetch_add(1, Ordering::Relaxed);
+        f64_add(&shard.sum, secs);
+    }
+
+    /// Samples recorded (all shards).
+    pub fn count(&self) -> u64 {
+        self.shards.iter().map(|s| s.count.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of recorded seconds (all shards).
+    pub fn sum(&self) -> f64 {
+        self.shards
+            .iter()
+            .map(|s| f64::from_bits(s.sum.load(Ordering::Relaxed)))
+            .sum()
+    }
+
+    /// Merged per-bucket counts in [`LatencyHist`] layout.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        let mut out = vec![0u64; LatencyHist::N_BUCKETS];
+        for shard in &self.shards {
+            for (o, b) in out.iter_mut().zip(&shard.buckets) {
+                *o += b.load(Ordering::Relaxed);
+            }
+        }
+        out
+    }
+
+    /// Snapshot into a [`LatencyHist`] (bucket-resolution quantiles).
+    pub fn snapshot(&self) -> LatencyHist {
+        LatencyHist::from_bucket_counts(&self.bucket_counts())
+    }
+
+    /// Bucket-resolution quantile over the merged shards.
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.snapshot().quantile(q)
+    }
+}
+
+// ---------------------------------------------------------------- Registry
+
+/// One registered metric handle.
+#[derive(Debug, Clone)]
+pub enum Metric {
+    /// Monotonic counter.
+    Counter(Arc<Counter>),
+    /// Last-value gauge.
+    Gauge(Arc<Gauge>),
+    /// Bucketed latency histogram.
+    Hist(Arc<Hist>),
+    /// Mean/var/min/max accumulator.
+    Running(Arc<AtomicRunning>),
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+/// Named metric registry: `name{labels}` → lock-free handle.
+///
+/// The map lives behind an `RwLock`, but only registration/lookup touches
+/// it; updates go straight through the returned `Arc` handles. Get-or-
+/// create is idempotent — asking for the same id returns the same handle.
+#[derive(Debug, Default)]
+pub struct Registry {
+    entries: RwLock<BTreeMap<String, Entry>>,
+}
+
+/// Canonical id for a metric name plus label set.
+fn metric_id(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let body: Vec<String> = labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{name}{{{}}}", body.join(","))
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn get_or_insert<T, F, G>(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        wrap: F,
+        unwrap: G,
+    ) -> Arc<T>
+    where
+        F: FnOnce() -> Metric,
+        G: Fn(&Metric) -> Option<Arc<T>>,
+    {
+        let id = metric_id(name, labels);
+        if let Some(e) = self.entries.read().unwrap().get(&id) {
+            return unwrap(&e.metric)
+                .unwrap_or_else(|| panic!("metric '{id}' registered with a different kind"));
+        }
+        let mut w = self.entries.write().unwrap();
+        let e = w.entry(id.clone()).or_insert_with(|| Entry {
+            name: name.to_string(),
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            metric: wrap(),
+        });
+        unwrap(&e.metric)
+            .unwrap_or_else(|| panic!("metric '{id}' registered with a different kind"))
+    }
+
+    /// Get-or-create a labelless counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counter_with(name, &[])
+    }
+
+    /// Get-or-create a labelled counter.
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        self.get_or_insert(
+            name,
+            labels,
+            || Metric::Counter(Arc::new(Counter::new())),
+            |m| match m {
+                Metric::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get-or-create a labelless gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauge_with(name, &[])
+    }
+
+    /// Get-or-create a labelled gauge.
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        self.get_or_insert(
+            name,
+            labels,
+            || Metric::Gauge(Arc::new(Gauge::new())),
+            |m| match m {
+                Metric::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get-or-create a labelless histogram.
+    pub fn hist(&self, name: &str) -> Arc<Hist> {
+        self.hist_with(name, &[])
+    }
+
+    /// Get-or-create a labelled histogram.
+    pub fn hist_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Hist> {
+        self.get_or_insert(
+            name,
+            labels,
+            || Metric::Hist(Arc::new(Hist::new())),
+            |m| match m {
+                Metric::Hist(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get-or-create a labelless running accumulator.
+    pub fn running(&self, name: &str) -> Arc<AtomicRunning> {
+        self.running_with(name, &[])
+    }
+
+    /// Get-or-create a labelled running accumulator.
+    pub fn running_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<AtomicRunning> {
+        self.get_or_insert(
+            name,
+            labels,
+            || Metric::Running(Arc::new(AtomicRunning::new())),
+            |m| match m {
+                Metric::Running(r) => Some(r.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Visit every registered metric as `(id, name, labels, metric)` in id
+    /// order.
+    pub fn visit<F: FnMut(&str, &str, &[(String, String)], &Metric)>(&self, mut f: F) {
+        for (id, e) in self.entries.read().unwrap().iter() {
+            f(id, &e.name, &e.labels, &e.metric);
+        }
+    }
+
+    /// JSON snapshot: one key per metric id. Counters/gauges render as
+    /// numbers, running accumulators as `{count, mean, std, min, max}`,
+    /// histograms as `{count, sum_s, mean_s, p50_s, p90_s, p99_s}`.
+    pub fn snapshot_json(&self) -> Json {
+        let mut out = Json::obj();
+        self.visit(|id, _, _, m| {
+            let v = match m {
+                Metric::Counter(c) => Json::from(c.get()),
+                Metric::Gauge(g) => Json::from(g.get()),
+                Metric::Running(r) => {
+                    let s = r.snapshot();
+                    let mut o = Json::obj();
+                    o.set("count", Json::from(s.count()));
+                    if s.count() > 0 {
+                        o.set("mean", Json::from(s.mean()));
+                        o.set("std", Json::from(s.std()));
+                        o.set("min", Json::from(s.min()));
+                        o.set("max", Json::from(s.max()));
+                    }
+                    o
+                }
+                Metric::Hist(h) => {
+                    let n = h.count();
+                    let snap = h.snapshot();
+                    let mut o = Json::obj();
+                    o.set("count", Json::from(n));
+                    o.set("sum_s", Json::from(h.sum()));
+                    if n > 0 {
+                        o.set("mean_s", Json::from(h.sum() / n as f64));
+                        o.set("p50_s", Json::from(snap.quantile(0.5)));
+                        o.set("p90_s", Json::from(snap.quantile(0.9)));
+                        o.set("p99_s", Json::from(snap.quantile(0.99)));
+                    }
+                    o
+                }
+            };
+            out.set(id, v);
+        });
+        out
+    }
+
+    /// Prometheus text exposition with metric names prefixed `prefix_`.
+    /// Counters get a `_total` suffix; histograms render cumulative
+    /// `_bucket{le=...}` lines (zero-delta buckets are skipped; `+Inf` is
+    /// always present) plus `_sum`/`_count`; running accumulators render as
+    /// `_count`/`_mean`/`_min`/`_max` gauges.
+    pub fn prometheus(&self, prefix: &str) -> String {
+        fn sanitize(s: &str) -> String {
+            s.chars()
+                .map(|c| {
+                    if c.is_ascii_alphanumeric() || c == '_' {
+                        c
+                    } else {
+                        '_'
+                    }
+                })
+                .collect()
+        }
+        fn labels_text(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+            let mut parts: Vec<String> =
+                labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+            if let Some((k, v)) = extra {
+                parts.push(format!("{k}=\"{v}\""));
+            }
+            if parts.is_empty() {
+                String::new()
+            } else {
+                format!("{{{}}}", parts.join(","))
+            }
+        }
+        let mut out = String::new();
+        let mut last_type_line = String::new();
+        self.visit(|_, name, labels, m| {
+            let base = format!("{}_{}", sanitize(prefix), sanitize(name));
+            let (full, kind) = match m {
+                Metric::Counter(_) => (format!("{base}_total"), "counter"),
+                Metric::Gauge(_) => (base.clone(), "gauge"),
+                Metric::Hist(_) => (base.clone(), "histogram"),
+                Metric::Running(_) => (base.clone(), "gauge"),
+            };
+            // One TYPE line per metric family (same-name label variants
+            // are adjacent in id order).
+            if !matches!(m, Metric::Running(_)) {
+                let type_line = format!("# TYPE {full} {kind}\n");
+                if type_line != last_type_line {
+                    out.push_str(&type_line);
+                    last_type_line = type_line;
+                }
+            }
+            match m {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("{full}{} {}\n", labels_text(labels, None), c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("{full}{} {}\n", labels_text(labels, None), g.get()));
+                }
+                Metric::Running(r) => {
+                    let s = r.snapshot();
+                    let lt = labels_text(labels, None);
+                    out.push_str(&format!("{full}_count{lt} {}\n", s.count()));
+                    if s.count() > 0 {
+                        out.push_str(&format!("{full}_mean{lt} {}\n", s.mean()));
+                        out.push_str(&format!("{full}_min{lt} {}\n", s.min()));
+                        out.push_str(&format!("{full}_max{lt} {}\n", s.max()));
+                    }
+                }
+                Metric::Hist(h) => {
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, &c) in counts.iter().enumerate() {
+                        cum += c;
+                        if c == 0 && i != LatencyHist::N_BUCKETS - 1 {
+                            continue; // cumulative value carries over
+                        }
+                        let bound = LatencyHist::bucket_bound(i);
+                        let le = if bound.is_infinite() {
+                            "+Inf".to_string()
+                        } else {
+                            format!("{bound:e}")
+                        };
+                        out.push_str(&format!(
+                            "{full}_bucket{} {cum}\n",
+                            labels_text(labels, Some(("le", &le)))
+                        ));
+                    }
+                    let lt = labels_text(labels, None);
+                    out.push_str(&format!("{full}_sum{lt} {}\n", h.sum()));
+                    out.push_str(&format!("{full}_count{lt} {}\n", h.count()));
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(7);
+        g.set_max(3);
+        assert_eq!(g.get(), 7);
+        g.set_max(11);
+        assert_eq!(g.get(), 11);
+    }
+
+    #[test]
+    fn atomic_running_matches_sequential() {
+        let a = AtomicRunning::new();
+        let mut r = Running::new();
+        for i in 1..=100 {
+            let x = i as f64;
+            a.push(x);
+            r.push(x);
+        }
+        let s = a.snapshot();
+        assert_eq!(s.count(), r.count());
+        assert!((s.mean() - r.mean()).abs() < 1e-9);
+        assert!((s.var() - r.var()).abs() < 1e-6);
+        assert_eq!(s.min(), r.min());
+        assert_eq!(s.max(), r.max());
+    }
+
+    #[test]
+    fn hist_matches_latency_hist_buckets() {
+        let h = Hist::new();
+        let mut oracle = LatencyHist::new();
+        for i in 1..=500 {
+            let x = i as f64 * 2e-5;
+            h.record(x);
+            oracle.record(x);
+        }
+        assert_eq!(h.count(), 500);
+        assert_eq!(h.bucket_counts(), oracle.bucket_counts());
+        assert!((h.sum() - 500.0 * 501.0 / 2.0 * 2e-5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_is_idempotent_and_renders() {
+        let reg = Registry::new();
+        reg.counter("requests").add(3);
+        reg.counter("requests").add(2); // same handle
+        reg.counter_with("by_format", &[("format", "int8")]).inc();
+        reg.gauge("depth").set(4);
+        reg.hist("lat").record(1e-3);
+        reg.running("batch").push(2.0);
+        assert_eq!(reg.counter("requests").get(), 5);
+
+        let json = reg.snapshot_json();
+        assert_eq!(json.get("requests").and_then(|j| j.as_f64()), Some(5.0));
+        assert!(json.get("by_format{format=\"int8\"}").is_some());
+
+        let prom = reg.prometheus("mfqat");
+        assert!(prom.contains("# TYPE mfqat_requests_total counter"), "{prom}");
+        assert!(prom.contains("mfqat_requests_total 5"), "{prom}");
+        assert!(prom.contains("mfqat_by_format_total{format=\"int8\"} 1"), "{prom}");
+        assert!(prom.contains("mfqat_lat_bucket"), "{prom}");
+        assert!(prom.contains("le=\"+Inf\"} 1"), "{prom}");
+        assert!(prom.contains("mfqat_lat_count 1"), "{prom}");
+        assert!(prom.contains("mfqat_batch_mean 2"), "{prom}");
+    }
+}

@@ -1,0 +1,249 @@
+//! Chrome-trace-event recording and export.
+//!
+//! [`TraceSink`] collects request-lifecycle events from the serving stack
+//! and renders them as Chrome trace-event JSON (the `traceEvents` object
+//! form), loadable in Perfetto / `chrome://tracing`. The serving runtime
+//! maps **`pid` = worker index** and **`tid` = decode-session row slot**,
+//! so the viewer shows one track per worker with one lane per row: a
+//! `queue_wait` span (enqueue → admit), then `prefill`/`decode`/
+//! `reprefill` spans per step, a whole-request `request` span and a
+//! `complete` instant at retire. Instant events also mark admission
+//! deferrals and policy downshifts.
+//!
+//! The sink is only constructed when tracing is requested
+//! (`serve --trace-out` / [`crate::server::ServerConfig::trace`]); with it
+//! absent the hot path pays a single `Option` check. Event storage is an
+//! append-only vector behind a mutex with a hard cap — beyond the cap,
+//! events are counted as dropped rather than growing without bound.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One trace event (Chrome trace-event format).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Event name (`queue_wait`, `prefill`, `decode`, ...).
+    pub name: &'static str,
+    /// Phase: `'X'` (complete, with duration) or `'i'` (instant).
+    pub ph: char,
+    /// Start timestamp, microseconds since the sink was created.
+    pub ts_us: u64,
+    /// Duration in microseconds (`'X'` events only).
+    pub dur_us: u64,
+    /// Track: worker index.
+    pub pid: u64,
+    /// Lane within the track: decode-session row slot.
+    pub tid: u64,
+    /// Extra key/value payload (`format`, `token`, ...).
+    pub args: Vec<(&'static str, Json)>,
+}
+
+/// Collects trace events; renders Chrome trace-event JSON.
+#[derive(Debug)]
+pub struct TraceSink {
+    start: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+    dropped: AtomicU64,
+    cap: usize,
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceSink {
+    /// Empty sink; timestamps are relative to this call.
+    pub fn new() -> TraceSink {
+        TraceSink {
+            start: Instant::now(),
+            events: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+            cap: 1 << 20,
+        }
+    }
+
+    /// Microseconds from sink creation to `t` (0 for instants before it).
+    pub fn ts_us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.start).as_micros() as u64
+    }
+
+    /// Microseconds from sink creation to now.
+    pub fn now_us(&self) -> u64 {
+        self.ts_us(Instant::now())
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut events = self.events.lock().unwrap();
+        if events.len() >= self.cap {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        events.push(ev);
+    }
+
+    /// Record a complete (`'X'`) span.
+    pub fn complete(
+        &self,
+        name: &'static str,
+        pid: u64,
+        tid: u64,
+        ts_us: u64,
+        dur_us: u64,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.push(TraceEvent {
+            name,
+            ph: 'X',
+            ts_us,
+            dur_us,
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// Record an instant (`'i'`) event at the current time.
+    pub fn instant(&self, name: &'static str, pid: u64, tid: u64, args: Vec<(&'static str, Json)>) {
+        self.push(TraceEvent {
+            name,
+            ph: 'i',
+            ts_us: self.now_us(),
+            dur_us: 0,
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// Events recorded so far.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    /// Whether no events have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events rejected by the storage cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Render the Chrome trace-event JSON object (`{"traceEvents": [...]}`).
+    ///
+    /// Events are sorted by timestamp, and `'M'` metadata events name each
+    /// worker track (`worker-N`) and row lane (`row-N`) for the viewer.
+    pub fn to_json(&self) -> Json {
+        let mut events = self.events.lock().unwrap().clone();
+        events.sort_by_key(|e| (e.ts_us, e.pid, e.tid));
+        let mut arr: Vec<Json> = Vec::with_capacity(events.len() + 8);
+        // Track-naming metadata first.
+        let mut tracks: Vec<(u64, u64)> = events.iter().map(|e| (e.pid, e.tid)).collect();
+        tracks.sort_unstable();
+        tracks.dedup();
+        let mut pids: Vec<u64> = tracks.iter().map(|(p, _)| *p).collect();
+        pids.dedup();
+        for pid in pids {
+            let mut m = Json::obj();
+            m.set("name", Json::from("process_name"));
+            m.set("ph", Json::from("M"));
+            m.set("pid", Json::from(pid));
+            m.set("tid", Json::from(0u64));
+            let mut args = Json::obj();
+            args.set("name", Json::from(format!("worker-{pid}")));
+            m.set("args", args);
+            arr.push(m);
+        }
+        for (pid, tid) in tracks {
+            let mut m = Json::obj();
+            m.set("name", Json::from("thread_name"));
+            m.set("ph", Json::from("M"));
+            m.set("pid", Json::from(pid));
+            m.set("tid", Json::from(tid));
+            let mut args = Json::obj();
+            args.set("name", Json::from(format!("row-{tid}")));
+            m.set("args", args);
+            arr.push(m);
+        }
+        for e in events {
+            let mut o = Json::obj();
+            o.set("name", Json::from(e.name));
+            o.set("cat", Json::from("serve"));
+            o.set("ph", Json::from(e.ph.to_string()));
+            o.set("ts", Json::from(e.ts_us));
+            if e.ph == 'X' {
+                o.set("dur", Json::from(e.dur_us));
+            }
+            if e.ph == 'i' {
+                o.set("s", Json::from("t")); // thread-scoped instant
+            }
+            o.set("pid", Json::from(e.pid));
+            o.set("tid", Json::from(e.tid));
+            if !e.args.is_empty() {
+                let mut args = Json::obj();
+                for (k, v) in e.args {
+                    args.set(k, v);
+                }
+                o.set("args", args);
+            }
+            arr.push(o);
+        }
+        let mut out = Json::obj();
+        out.set("traceEvents", Json::Arr(arr));
+        out.set("displayTimeUnit", Json::from("ms"));
+        if self.dropped() > 0 {
+            out.set("droppedEvents", Json::from(self.dropped()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_render_sorted_with_metadata() {
+        let sink = TraceSink::new();
+        sink.complete("decode", 0, 1, 50, 10, vec![("token", Json::from(2u64))]);
+        sink.complete("prefill", 0, 1, 10, 30, Vec::new());
+        sink.instant("complete", 1, 0, Vec::new());
+        assert_eq!(sink.len(), 3);
+        let json = sink.to_json();
+        let events = json.get("traceEvents").and_then(|j| j.as_arr()).unwrap();
+        // 2 process_name + 3 thread_name metadata events precede the data.
+        let data: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) != Some("M"))
+            .collect();
+        assert_eq!(data.len(), 3);
+        let ts: Vec<f64> = data
+            .iter()
+            .map(|e| e.get("ts").and_then(|t| t.as_f64()).unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "sorted by ts: {ts:?}");
+        assert_eq!(data[0].get("name").and_then(|n| n.as_str()), Some("prefill"));
+        assert_eq!(data[0].get("dur").and_then(|d| d.as_f64()), Some(30.0));
+        // Instants carry a scope and no duration.
+        let inst = data
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i"))
+            .unwrap();
+        assert_eq!(inst.get("s").and_then(|s| s.as_str()), Some("t"));
+        assert!(inst.get("dur").is_none());
+    }
+
+    #[test]
+    fn round_trips_through_parser() {
+        let sink = TraceSink::new();
+        sink.instant("defer", 0, 0, vec![("reason", Json::from("kv_pages"))]);
+        let text = sink.to_json().pretty();
+        let parsed = Json::parse(&text).expect("valid JSON");
+        assert!(parsed.get("traceEvents").and_then(|j| j.as_arr()).is_some());
+    }
+}

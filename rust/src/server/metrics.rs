@@ -1,17 +1,36 @@
 //! Serving metrics: request counts per format and lane (scoring vs
 //! generation), latency distributions, batch-size and execution-time
-//! statistics, generated-token throughput, and weight-cache counters.
-//! One instance aggregates the whole worker pool (shared behind a mutex;
-//! each worker takes the lock once per executed sub-batch).
+//! statistics, generated-token throughput, weight-cache counters, paged-KV
+//! residency, and the request-lifecycle span histograms (queue-wait /
+//! TTFT / inter-token per element format).
+//!
+//! Two layers:
+//!
+//! * [`ServerObs`] — the pool's live recorder, built on the lock-free
+//!   [`crate::obs`] registry. Workers update counters/gauges/histograms
+//!   with plain atomics (the former once-per-batch metrics mutex is gone
+//!   from the hot path) and, when tracing is enabled, feed a
+//!   [`TraceSink`]. The recorder renders machine-readable exports (JSON
+//!   snapshot + Prometheus text) and collects a periodic time series of
+//!   KV residency / cache counters / queue depth.
+//! * [`Metrics`] — the point-in-time *view* those atomics snapshot into
+//!   ([`ServerObs::snapshot`]), with the one-line [`Metrics::summary`]
+//!   used by logs and the `serve` demo.
 
 use crate::backend::KvMemory;
 use crate::coordinator::CacheStats;
 use crate::formats::ElementFormat;
+use crate::obs::{AtomicRunning, Counter, Gauge, Hist, Metric, Registry, TraceSink};
+use crate::util::json::Json;
 use crate::util::stats::{LatencyHist, Running};
+use crate::util::timer::fmt_time;
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-/// Aggregated server metrics (guarded by a mutex in the server; workers
-/// take that lock once per executed batch).
+/// Aggregated server metrics: a point-in-time snapshot of the pool
+/// (produced by [`ServerObs::snapshot`]; also usable standalone as a plain
+/// accumulator in tests and tools).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     /// Requests served (both lanes).
@@ -37,18 +56,36 @@ pub struct Metrics {
     pub workers: usize,
     /// Weight-cache counter snapshot (hits/misses/evictions/bytes).
     pub cache: CacheStats,
-    /// Latest paged-KV accounting snapshot from a worker's decode session
-    /// (updated once per decode step; per-session numbers — the
-    /// resident-over-dense ratio is the pool-independent signal).
+    /// Paged-KV accounting aggregated across every worker's decode session
+    /// (resident/pool/dense bytes and page counts are summed;
+    /// `resident_peak_bytes` is the max of the per-session peaks).
     pub kv: KvMemory,
-    /// Highest resident paged-KV bytes observed — sourced from the cache's
-    /// own allocation-time high-water mark
+    /// Highest pool-wide resident paged-KV bytes observed: the running
+    /// peak of the *summed* per-worker residency, floored by the largest
+    /// per-session allocation-time high-water mark
     /// ([`KvMemory::resident_peak_bytes`], which registers rows that map
-    /// and retire within a single step) plus every snapshot's current
-    /// residency. The number to hold against
+    /// and retire within a single step). The number to hold against
     /// [`KvMemory::dense_equivalent_bytes`] (dense would sit at that
     /// ceiling the whole time).
     pub kv_resident_peak_bytes: usize,
+    /// Queue-wait (enqueue → admission) distribution, continuous generate
+    /// lane.
+    pub queue_wait: LatencyHist,
+    /// Time-to-first-token distribution per element format (continuous
+    /// generate lane; enqueue → first sampled token).
+    pub ttft: BTreeMap<String, LatencyHist>,
+    /// Inter-token gap distribution per element format (continuous
+    /// generate lane).
+    pub inter_token: BTreeMap<String, LatencyHist>,
+    /// Generation requests that had to wait because admission was
+    /// blocked (no free row, or the KV page pool could not fund another
+    /// worst-case row). Counted once per deferred request.
+    pub deferrals: u64,
+    /// Rows admitted at a lower-precision format than the policy's
+    /// unloaded (depth-0) pick — the policy shedding precision for load.
+    pub downshifts: u64,
+    /// Per-row overflow re-prefills inside the continuous decode.
+    pub reprefills: u64,
 }
 
 impl Metrics {
@@ -57,6 +94,7 @@ impl Metrics {
         Metrics {
             latency: LatencyHist::new(),
             gen_latency: LatencyHist::new(),
+            queue_wait: LatencyHist::new(),
             ..Default::default()
         }
     }
@@ -99,7 +137,9 @@ impl Metrics {
     }
 
     /// Refresh the paged-KV snapshot (once per decode step) and track the
-    /// resident peak.
+    /// resident peak. Standalone-accumulator path: a single session's
+    /// snapshots overwrite `kv` in place (the pool aggregates per worker
+    /// in [`ServerObs::set_kv`] instead).
     pub fn set_kv(&mut self, kv: KvMemory) {
         self.kv_resident_peak_bytes = self
             .kv_resident_peak_bytes
@@ -108,13 +148,13 @@ impl Metrics {
         self.kv = kv;
     }
 
-    /// Bytes of KV currently resident (mapped pages) in the last-reported
-    /// decode session — `0` until a continuous worker reports.
+    /// Bytes of KV currently resident (mapped pages) across the reported
+    /// decode sessions — `0` until a continuous worker reports.
     pub fn kv_resident_bytes(&self) -> usize {
         self.kv.resident_bytes
     }
 
-    /// Fraction of the last-reported session's KV page pool in use.
+    /// Fraction of the reported sessions' KV page pool in use.
     pub fn kv_pool_utilization(&self) -> f64 {
         self.kv.utilization()
     }
@@ -136,12 +176,27 @@ impl Metrics {
             .iter()
             .map(|(f, n)| format!("{f}:{n}"))
             .collect();
-        let gen = if self.gen_requests > 0 {
+        let exec = if self.exec_time.count() > 0 {
             format!(
-                " gen[{} reqs {} tok {}]",
+                " exec[score mean:{} n:{}]",
+                fmt_time(self.exec_time.mean()),
+                self.exec_time.count()
+            )
+        } else {
+            String::new()
+        };
+        let gen = if self.gen_requests > 0 {
+            let gexec = if self.gen_exec_time.count() > 0 {
+                format!(" exec mean:{}", fmt_time(self.gen_exec_time.mean()))
+            } else {
+                String::new()
+            };
+            format!(
+                " gen[{} reqs {} tok {}{}]",
                 self.gen_requests,
                 self.gen_tokens,
-                self.gen_latency.summary()
+                self.gen_latency.summary(),
+                gexec,
             )
         } else {
             String::new()
@@ -159,11 +214,12 @@ impl Metrics {
             String::new()
         };
         format!(
-            "workers={} requests={} latency[{}] mean_batch={:.2}{} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]{}",
+            "workers={} requests={} latency[{}] mean_batch={:.2}{}{} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]{}",
             self.workers.max(1),
             self.requests,
             self.latency.summary(),
             self.batch_size.mean(),
+            exec,
             gen,
             mix.join(" "),
             self.cache.hits,
@@ -172,6 +228,392 @@ impl Metrics {
             self.cache.used_bytes / 1024,
             kv,
         )
+    }
+}
+
+// ------------------------------------------------------------- ServerObs
+
+/// The lifecycle-span histograms for one element format, cached by workers
+/// so the per-step hot path touches only atomics (no registry lookup).
+#[derive(Clone)]
+pub struct FormatSpanHists {
+    /// Time-to-first-token (enqueue → first sampled token), seconds.
+    pub ttft: Arc<Hist>,
+    /// Gap between consecutive sampled tokens of one row, seconds.
+    pub inter_token: Arc<Hist>,
+}
+
+/// Per-worker KV gauges (each worker's decode session reports its own
+/// accounting; the pool view sums/maxes them — fixing the last-writer-wins
+/// overwrite a single shared snapshot had).
+struct KvWorkerGauges {
+    resident: Arc<Gauge>,
+    peak: Arc<Gauge>,
+    dense: Arc<Gauge>,
+    pool: Arc<Gauge>,
+    used_pages: Arc<Gauge>,
+    free_pages: Arc<Gauge>,
+    total_pages: Arc<Gauge>,
+    page_positions: Arc<Gauge>,
+}
+
+/// One point of the periodic telemetry time series.
+#[derive(Debug, Clone)]
+struct SeriesSample {
+    t_s: f64,
+    queue_depth: usize,
+    kv_resident_bytes: usize,
+    kv_pool_utilization: f64,
+    cache_hits: u64,
+    cache_misses: u64,
+    cache_used_bytes: u64,
+    requests: u64,
+    gen_tokens: u64,
+}
+
+/// Maximum retained time-series samples (~hours at the default interval;
+/// older samples are dropped from the front).
+const SERIES_CAP: usize = 65_536;
+
+/// Lock-free pool-wide metrics recorder plus optional trace sink.
+///
+/// All record paths are atomic ([`crate::obs::registry`]); the registry's
+/// `RwLock` is touched only at handle registration/lookup and the trace
+/// sink only exists when tracing was requested, so a server with
+/// everything disabled pays a handful of relaxed atomic ops per batch —
+/// no shared mutex on the hot path.
+pub struct ServerObs {
+    registry: Registry,
+    requests: Arc<Counter>,
+    gen_requests: Arc<Counter>,
+    gen_tokens: Arc<Counter>,
+    deferrals: Arc<Counter>,
+    downshifts: Arc<Counter>,
+    reprefills: Arc<Counter>,
+    latency: Arc<Hist>,
+    gen_latency: Arc<Hist>,
+    queue_wait: Arc<Hist>,
+    batch_size: Arc<AtomicRunning>,
+    exec_time: Arc<AtomicRunning>,
+    gen_exec_time: Arc<AtomicRunning>,
+    workers: Arc<Gauge>,
+    queue_depth: Arc<Gauge>,
+    cache_hits: Arc<Gauge>,
+    cache_misses: Arc<Gauge>,
+    cache_evictions: Arc<Gauge>,
+    cache_entries: Arc<Gauge>,
+    cache_used_bytes: Arc<Gauge>,
+    kv_pool_peak: Arc<Gauge>,
+    kv_workers: Vec<KvWorkerGauges>,
+    trace: Option<Arc<TraceSink>>,
+    series: Mutex<Vec<SeriesSample>>,
+    started: Instant,
+}
+
+impl ServerObs {
+    /// Recorder for a pool of `workers` worker threads. `trace` attaches a
+    /// [`TraceSink`] collecting request-lifecycle spans; without it the
+    /// tracing code paths reduce to an `Option` check.
+    pub fn new(workers: usize, trace: bool) -> ServerObs {
+        let registry = Registry::new();
+        let kv_workers = (0..workers.max(1))
+            .map(|w| {
+                let l = w.to_string();
+                let labels: [(&str, &str); 1] = [("worker", l.as_str())];
+                KvWorkerGauges {
+                    resident: registry.gauge_with("kv_resident_bytes", &labels),
+                    peak: registry.gauge_with("kv_resident_peak_bytes", &labels),
+                    dense: registry.gauge_with("kv_dense_equivalent_bytes", &labels),
+                    pool: registry.gauge_with("kv_pool_bytes", &labels),
+                    used_pages: registry.gauge_with("kv_used_pages", &labels),
+                    free_pages: registry.gauge_with("kv_free_pages", &labels),
+                    total_pages: registry.gauge_with("kv_total_pages", &labels),
+                    page_positions: registry.gauge_with("kv_page_positions", &labels),
+                }
+            })
+            .collect();
+        let obs = ServerObs {
+            requests: registry.counter("requests"),
+            gen_requests: registry.counter("gen_requests"),
+            gen_tokens: registry.counter("gen_tokens"),
+            deferrals: registry.counter("deferrals"),
+            downshifts: registry.counter("downshifts"),
+            reprefills: registry.counter("reprefills"),
+            latency: registry.hist("latency_seconds"),
+            gen_latency: registry.hist("gen_latency_seconds"),
+            queue_wait: registry.hist("queue_wait_seconds"),
+            batch_size: registry.running("batch_size"),
+            exec_time: registry.running("exec_time_seconds"),
+            gen_exec_time: registry.running("gen_exec_time_seconds"),
+            workers: registry.gauge("workers"),
+            queue_depth: registry.gauge("queue_depth"),
+            cache_hits: registry.gauge("cache_hits"),
+            cache_misses: registry.gauge("cache_misses"),
+            cache_evictions: registry.gauge("cache_evictions"),
+            cache_entries: registry.gauge("cache_entries"),
+            cache_used_bytes: registry.gauge("cache_used_bytes"),
+            kv_pool_peak: registry.gauge("kv_pool_resident_peak_bytes"),
+            kv_workers,
+            trace: trace.then(|| Arc::new(TraceSink::new())),
+            series: Mutex::new(Vec::new()),
+            started: Instant::now(),
+            registry,
+        };
+        obs.workers.set(workers.max(1) as u64);
+        obs
+    }
+
+    /// The trace sink, when tracing is enabled.
+    pub fn trace(&self) -> Option<&Arc<TraceSink>> {
+        self.trace.as_ref()
+    }
+
+    /// The underlying metric registry (exporters, tests).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Record one scoring request served in a batch of `batch` at `fmt`.
+    pub fn record_score(&self, fmt: ElementFormat, latency_s: f64, batch: usize, exec_s: f64) {
+        self.requests.inc();
+        self.registry
+            .counter_with("requests_by_format", &[("format", &fmt.name())])
+            .inc();
+        self.latency.record(latency_s);
+        self.batch_size.push(batch as f64);
+        self.exec_time.push(exec_s);
+    }
+
+    /// Record one generation-lane request (see [`Metrics::record_generate`]
+    /// for the field semantics).
+    pub fn record_generate(
+        &self,
+        fmt: ElementFormat,
+        latency_s: f64,
+        batch: usize,
+        exec_s: f64,
+        tokens: u64,
+    ) {
+        self.requests.inc();
+        self.gen_requests.inc();
+        self.registry
+            .counter_with("requests_by_format", &[("format", &fmt.name())])
+            .inc();
+        self.latency.record(latency_s);
+        self.gen_latency.record(latency_s);
+        self.batch_size.push(batch as f64);
+        self.gen_exec_time.push(exec_s);
+        self.gen_tokens.add(tokens);
+    }
+
+    /// Record one queue-wait span (enqueue → admission), seconds.
+    pub fn record_queue_wait(&self, secs: f64) {
+        self.queue_wait.record(secs);
+    }
+
+    /// Count one admission deferral (request waited on a full session or
+    /// an exhausted KV page budget).
+    pub fn record_deferral(&self) {
+        self.deferrals.inc();
+    }
+
+    /// Count one policy downshift (row admitted below the unloaded pick).
+    pub fn record_downshift(&self) {
+        self.downshifts.inc();
+    }
+
+    /// Count one per-row overflow re-prefill.
+    pub fn record_reprefill(&self) {
+        self.reprefills.inc();
+    }
+
+    /// TTFT / inter-token histogram handles for `fmt` — workers cache the
+    /// result so per-step recording stays registry-free.
+    pub fn span_hists(&self, fmt: ElementFormat) -> FormatSpanHists {
+        let name = fmt.name();
+        let labels: [(&str, &str); 1] = [("format", name.as_str())];
+        FormatSpanHists {
+            ttft: self.registry.hist_with("ttft_seconds", &labels),
+            inter_token: self.registry.hist_with("inter_token_seconds", &labels),
+        }
+    }
+
+    /// Refresh the weight-cache counter gauges.
+    pub fn set_cache(&self, stats: CacheStats) {
+        self.cache_hits.set(stats.hits);
+        self.cache_misses.set(stats.misses);
+        self.cache_evictions.set(stats.evictions);
+        self.cache_entries.set(stats.entries as u64);
+        self.cache_used_bytes.set(stats.used_bytes as u64);
+    }
+
+    /// Refresh worker `worker`'s paged-KV gauges from its decode session
+    /// and advance the pool-wide resident peak (the peak of the *summed*
+    /// per-worker residency — each worker owns its gauges, so no worker
+    /// overwrites another's report).
+    pub fn set_kv(&self, worker: usize, kv: KvMemory) {
+        let Some(w) = self.kv_workers.get(worker) else {
+            return;
+        };
+        w.resident.set(kv.resident_bytes as u64);
+        w.peak.set_max(kv.resident_peak_bytes as u64);
+        w.dense.set(kv.dense_equivalent_bytes as u64);
+        w.pool.set(kv.pool_bytes as u64);
+        w.used_pages.set(kv.used_pages as u64);
+        w.free_pages.set(kv.free_pages as u64);
+        w.total_pages.set(kv.total_pages as u64);
+        w.page_positions.set(kv.page_positions as u64);
+        let sum: u64 = self.kv_workers.iter().map(|g| g.resident.get()).sum();
+        self.kv_pool_peak.set_max(sum);
+    }
+
+    /// Aggregate the per-worker KV gauges into one pool view: bytes and
+    /// page counts are summed, `resident_peak_bytes` is the max of the
+    /// per-session peaks. The second value is the pool-wide resident peak
+    /// (peak of summed residency, floored by the per-session max).
+    pub fn kv_aggregate(&self) -> (KvMemory, usize) {
+        let mut kv = KvMemory::default();
+        let mut max_peak = 0usize;
+        for w in &self.kv_workers {
+            kv.resident_bytes += w.resident.get() as usize;
+            kv.dense_equivalent_bytes += w.dense.get() as usize;
+            kv.pool_bytes += w.pool.get() as usize;
+            kv.used_pages += w.used_pages.get() as usize;
+            kv.free_pages += w.free_pages.get() as usize;
+            kv.total_pages += w.total_pages.get() as usize;
+            kv.page_positions = kv.page_positions.max(w.page_positions.get() as usize);
+            max_peak = max_peak.max(w.peak.get() as usize);
+        }
+        kv.resident_peak_bytes = max_peak;
+        let pool_peak = (self.kv_pool_peak.get() as usize).max(max_peak);
+        (kv, pool_peak)
+    }
+
+    /// Snapshot every atomic into a point-in-time [`Metrics`] view.
+    /// Histogram quantiles in the snapshot answer from bucket midpoints
+    /// (the lock-free histograms keep no reservoir).
+    pub fn snapshot(&self) -> Metrics {
+        let mut per_format = BTreeMap::new();
+        let mut ttft = BTreeMap::new();
+        let mut inter_token = BTreeMap::new();
+        self.registry.visit(|_, name, labels, m| {
+            let fmt = labels
+                .iter()
+                .find(|(k, _)| k == "format")
+                .map(|(_, v)| v.clone());
+            match (name, m) {
+                ("requests_by_format", Metric::Counter(c)) => {
+                    if let Some(f) = fmt {
+                        per_format.insert(f, c.get());
+                    }
+                }
+                ("ttft_seconds", Metric::Hist(h)) => {
+                    if let Some(f) = fmt {
+                        ttft.insert(f, h.snapshot());
+                    }
+                }
+                ("inter_token_seconds", Metric::Hist(h)) => {
+                    if let Some(f) = fmt {
+                        inter_token.insert(f, h.snapshot());
+                    }
+                }
+                _ => {}
+            }
+        });
+        let (kv, pool_peak) = self.kv_aggregate();
+        Metrics {
+            requests: self.requests.get(),
+            per_format,
+            latency: self.latency.snapshot(),
+            batch_size: self.batch_size.snapshot(),
+            exec_time: self.exec_time.snapshot(),
+            gen_requests: self.gen_requests.get(),
+            gen_latency: self.gen_latency.snapshot(),
+            gen_tokens: self.gen_tokens.get(),
+            gen_exec_time: self.gen_exec_time.snapshot(),
+            workers: self.workers.get() as usize,
+            cache: CacheStats {
+                hits: self.cache_hits.get(),
+                misses: self.cache_misses.get(),
+                evictions: self.cache_evictions.get(),
+                entries: self.cache_entries.get() as usize,
+                used_bytes: self.cache_used_bytes.get() as usize,
+            },
+            kv,
+            kv_resident_peak_bytes: pool_peak,
+            queue_wait: self.queue_wait.snapshot(),
+            ttft,
+            inter_token,
+            deferrals: self.deferrals.get(),
+            downshifts: self.downshifts.get(),
+            reprefills: self.reprefills.get(),
+        }
+    }
+
+    /// Append one time-series sample (KV residency, cache counters, queue
+    /// depth, request totals) — called by the server's sampler thread.
+    pub fn sample(&self, queue_depth: usize) {
+        self.queue_depth.set(queue_depth as u64);
+        let (kv, _) = self.kv_aggregate();
+        let s = SeriesSample {
+            t_s: self.started.elapsed().as_secs_f64(),
+            queue_depth,
+            kv_resident_bytes: kv.resident_bytes,
+            kv_pool_utilization: kv.utilization(),
+            cache_hits: self.cache_hits.get(),
+            cache_misses: self.cache_misses.get(),
+            cache_used_bytes: self.cache_used_bytes.get(),
+            requests: self.requests.get(),
+            gen_tokens: self.gen_tokens.get(),
+        };
+        let mut series = self.series.lock().unwrap();
+        if series.len() >= SERIES_CAP {
+            series.remove(0);
+        }
+        series.push(s);
+    }
+
+    /// Machine-readable JSON export: `{"summary": {metric id: value},
+    /// "kv": {aggregated pool view}, "series": [samples]}`.
+    pub fn export_json(&self) -> Json {
+        let mut out = Json::obj();
+        out.set("summary", self.registry.snapshot_json());
+        let (kv, pool_peak) = self.kv_aggregate();
+        let mut k = Json::obj();
+        k.set("resident_bytes", Json::from(kv.resident_bytes));
+        k.set("resident_peak_bytes", Json::from(pool_peak));
+        k.set("dense_equivalent_bytes", Json::from(kv.dense_equivalent_bytes));
+        k.set("pool_bytes", Json::from(kv.pool_bytes));
+        k.set("pool_utilization", Json::from(kv.utilization()));
+        k.set("page_positions", Json::from(kv.page_positions));
+        out.set("kv", k);
+        let series: Vec<Json> = self
+            .series
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("t_s", Json::from(s.t_s));
+                o.set("queue_depth", Json::from(s.queue_depth));
+                o.set("kv_resident_bytes", Json::from(s.kv_resident_bytes));
+                o.set("kv_pool_utilization", Json::from(s.kv_pool_utilization));
+                o.set("cache_hits", Json::from(s.cache_hits));
+                o.set("cache_misses", Json::from(s.cache_misses));
+                o.set("cache_used_bytes", Json::from(s.cache_used_bytes));
+                o.set("requests", Json::from(s.requests));
+                o.set("gen_tokens", Json::from(s.gen_tokens));
+                o
+            })
+            .collect();
+        out.set("series", Json::Arr(series));
+        out
+    }
+
+    /// Prometheus text exposition of every registered metric (`mfqat_`
+    /// prefix).
+    pub fn prometheus(&self) -> String {
+        self.registry.prometheus("mfqat")
     }
 }
 
@@ -213,6 +655,24 @@ mod tests {
         let s2 = m2.summary();
         assert!(!s2.contains("gen["), "{s2}");
         assert!(s2.contains("workers=4"), "{s2}");
+    }
+
+    #[test]
+    fn summary_surfaces_exec_time_aggregates() {
+        // Scoring lane: exec stats were collected but never printed.
+        let mut m = Metrics::new();
+        m.record(ElementFormat::int(8), 0.010, 4, 0.008);
+        m.record(ElementFormat::int(8), 0.020, 4, 0.016);
+        let s = m.summary();
+        assert!(s.contains("exec[score mean:"), "{s}");
+        assert!(s.contains("n:2]"), "{s}");
+        // Gen lane: the gen section now carries its exec mean too.
+        m.record_generate(ElementFormat::int(4), 0.200, 2, 0.180, 32);
+        let s = m.summary();
+        assert!(s.contains("exec mean:"), "{s}");
+        // No exec section before anything executed.
+        let empty = Metrics::new().summary();
+        assert!(!empty.contains("exec["), "{empty}");
     }
 
     #[test]
@@ -266,5 +726,129 @@ mod tests {
         assert!(s.contains("hit:7"), "{s}");
         assert!(s.contains("miss:3"), "{s}");
         assert!(s.contains("evict:2"), "{s}");
+    }
+
+    #[test]
+    fn server_obs_aggregates_kv_across_workers() {
+        let obs = ServerObs::new(2, false);
+        obs.set_kv(
+            0,
+            KvMemory {
+                resident_bytes: 4096,
+                resident_peak_bytes: 6144,
+                dense_equivalent_bytes: 16384,
+                pool_bytes: 8192,
+                used_pages: 2,
+                free_pages: 2,
+                total_pages: 4,
+                page_positions: 8,
+            },
+        );
+        obs.set_kv(
+            1,
+            KvMemory {
+                resident_bytes: 2048,
+                resident_peak_bytes: 2048,
+                dense_equivalent_bytes: 16384,
+                pool_bytes: 8192,
+                used_pages: 1,
+                free_pages: 3,
+                total_pages: 4,
+                page_positions: 8,
+            },
+        );
+        let m = obs.snapshot();
+        // Sums, not last-writer-wins.
+        assert_eq!(m.kv.resident_bytes, 6144);
+        assert_eq!(m.kv.dense_equivalent_bytes, 32768);
+        assert_eq!(m.kv.pool_bytes, 16384);
+        assert_eq!(m.kv.used_pages, 3);
+        assert_eq!(m.kv.total_pages, 8);
+        // Max of per-session peaks; pool peak covers the summed residency.
+        assert_eq!(m.kv.resident_peak_bytes, 6144);
+        assert_eq!(m.kv_resident_peak_bytes, 6144);
+        // A worker dropping back does not erase its peer's report.
+        obs.set_kv(
+            1,
+            KvMemory {
+                resident_bytes: 0,
+                resident_peak_bytes: 2048,
+                dense_equivalent_bytes: 16384,
+                pool_bytes: 8192,
+                used_pages: 0,
+                free_pages: 4,
+                total_pages: 4,
+                page_positions: 8,
+            },
+        );
+        let m = obs.snapshot();
+        assert_eq!(m.kv.resident_bytes, 4096);
+        assert_eq!(m.kv_resident_peak_bytes, 6144, "peak is sticky");
+    }
+
+    #[test]
+    fn server_obs_snapshot_matches_records() {
+        let obs = ServerObs::new(1, false);
+        obs.record_score(ElementFormat::int(8), 0.010, 4, 0.008);
+        obs.record_generate(ElementFormat::int(4), 0.100, 2, 0.090, 16);
+        obs.record_queue_wait(0.002);
+        obs.record_deferral();
+        obs.record_downshift();
+        obs.record_reprefill();
+        let spans = obs.span_hists(ElementFormat::int(4));
+        spans.ttft.record(0.015);
+        spans.inter_token.record(0.005);
+        obs.set_cache(CacheStats {
+            hits: 5,
+            misses: 2,
+            evictions: 0,
+            entries: 2,
+            used_bytes: 1024,
+        });
+        let m = obs.snapshot();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.gen_requests, 1);
+        assert_eq!(m.gen_tokens, 16);
+        assert_eq!(m.format_counts()["int8"], 1);
+        assert_eq!(m.format_counts()["int4"], 1);
+        assert_eq!(m.latency.count(), 2);
+        assert_eq!(m.queue_wait.count(), 1);
+        assert_eq!(m.deferrals, 1);
+        assert_eq!(m.downshifts, 1);
+        assert_eq!(m.reprefills, 1);
+        assert_eq!(m.ttft["int4"].count(), 1);
+        assert_eq!(m.inter_token["int4"].count(), 1);
+        assert_eq!(m.cache.hits, 5);
+        assert!((m.batch_size.mean() - 3.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("requests=2"), "{s}");
+        assert!(s.contains("exec[score mean:"), "{s}");
+    }
+
+    #[test]
+    fn exports_parse_and_carry_series() {
+        let obs = ServerObs::new(1, false);
+        obs.record_score(ElementFormat::int(8), 0.010, 4, 0.008);
+        obs.sample(3);
+        obs.sample(1);
+        let text = obs.export_json().pretty();
+        let parsed = Json::parse(&text).expect("valid JSON export");
+        assert_eq!(
+            parsed
+                .get("summary")
+                .and_then(|s| s.get("requests"))
+                .and_then(|r| r.as_f64()),
+            Some(1.0)
+        );
+        let series = parsed.get("series").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(
+            series[0].get("queue_depth").and_then(|d| d.as_f64()),
+            Some(3.0)
+        );
+        let prom = obs.prometheus();
+        assert!(prom.contains("mfqat_requests_total 1"), "{prom}");
+        assert!(prom.contains("mfqat_latency_seconds_bucket"), "{prom}");
+        assert!(prom.contains("mfqat_workers 1"), "{prom}");
     }
 }

@@ -28,21 +28,32 @@
 //!   an incremental-decode surface.
 //!
 //! The [`policy`] maps queue depth (a shared atomic counter — exact under
-//! concurrent workers) to the serving format; [`metrics`] aggregates
-//! latency/throughput/format mix across the whole pool behind one mutex.
+//! concurrent workers) to the serving format. Telemetry flows through
+//! [`metrics::ServerObs`], a lock-free recorder over the [`crate::obs`]
+//! registry: workers feed atomic counters/gauges/histograms per request and
+//! per decode step (no shared mutex on the hot path), per-request lifecycle
+//! spans — queue-wait, TTFT, inter-token gap, each per element format —
+//! land in labelled histograms, and when tracing is enabled
+//! ([`ServerConfig::trace`] / [`ServerConfig::trace_out`]) every lifecycle
+//! edge also lands in a Chrome-trace [`crate::obs::TraceSink`] (one track
+//! per worker, one lane per row). [`ServerConfig::metrics_out`] adds a
+//! periodic JSON + Prometheus snapshot written by a sampler thread;
+//! [`Server::metrics`] / [`Client::metrics_snapshot`] expose the same state
+//! as a point-in-time [`Metrics`] view.
 
 pub mod costmodel;
 pub mod metrics;
 pub mod policy;
 
 pub use costmodel::HwModel;
-pub use metrics::Metrics;
+pub use metrics::{FormatSpanHists, Metrics, ServerObs};
 pub use policy::{Policy, SloState};
 
 use crate::backend::DecodeSession;
 use crate::coordinator::ElasticEngine;
-use crate::eval::generate::SampleCfg;
+use crate::eval::generate::{RowStepKind, SampleCfg};
 use crate::formats::ElementFormat;
+use crate::util::json::Json;
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -181,6 +192,23 @@ pub struct ServerConfig {
     /// pool cannot fund another worst-case row, instead of claiming a slot
     /// the memory cannot back.
     pub kv_page: crate::backend::KvPageCfg,
+    /// Collect request-lifecycle trace events even without a
+    /// [`ServerConfig::trace_out`] path (the sink is then read through
+    /// [`ServerObs::trace`] — tests and benches). Tracing off means the
+    /// hot path pays one `Option` check.
+    pub trace: bool,
+    /// Write a Chrome-trace-event JSON file (Perfetto-loadable; one track
+    /// per worker, one lane per decode row) here at shutdown. Implies
+    /// trace collection.
+    pub trace_out: Option<std::path::PathBuf>,
+    /// Write a machine-readable metrics snapshot here periodically and at
+    /// shutdown: JSON at the given path, Prometheus text exposition at the
+    /// same path with a `.prom` extension.
+    pub metrics_out: Option<std::path::PathBuf>,
+    /// Telemetry sampling interval: queue depth / KV residency / cache
+    /// counter time-series points, and [`ServerConfig::metrics_out`]
+    /// rewrites.
+    pub metrics_every: Duration,
 }
 
 impl Default for ServerConfig {
@@ -192,6 +220,10 @@ impl Default for ServerConfig {
             batching: GenBatching::Continuous,
             decode_slots: 0,
             kv_page: crate::backend::KvPageCfg::from_env(),
+            trace: false,
+            trace_out: None,
+            metrics_out: None,
+            metrics_every: Duration::from_millis(250),
         }
     }
 }
@@ -199,10 +231,13 @@ impl Default for ServerConfig {
 /// Handle to a running server.
 pub struct Server {
     tx: Sender<Request>,
-    /// Pool-wide serving metrics (shared with every worker).
-    pub metrics: Arc<Mutex<Metrics>>,
+    obs: Arc<ServerObs>,
+    config: ServerConfig,
     workers: Vec<std::thread::JoinHandle<()>>,
+    sampler: Option<std::thread::JoinHandle<()>>,
+    sampler_tx: Option<Sender<()>>,
     alive: Arc<AtomicBool>,
+    stopped: bool,
 }
 
 /// Client handle (cheap to clone).
@@ -211,6 +246,7 @@ pub struct Client {
     tx: Sender<Request>,
     width: usize,
     depth: Arc<AtomicUsize>,
+    obs: Arc<ServerObs>,
     /// Cleared on shutdown — a live client must not enqueue into a queue
     /// nobody drains (its own `tx` clone keeps the channel open).
     alive: Arc<AtomicBool>,
@@ -281,6 +317,13 @@ impl Client {
         Ok(rx)
     }
 
+    /// Point-in-time snapshot of the pool's serving metrics — request
+    /// counts, latency/TTFT/inter-token distributions, KV residency,
+    /// cache counters — without stopping the server.
+    pub fn metrics_snapshot(&self) -> Metrics {
+        self.obs.snapshot()
+    }
+
     fn send(&self, req: Request) -> Result<()> {
         if !self.alive.load(Ordering::Acquire) {
             anyhow::bail!("server is shut down");
@@ -290,6 +333,18 @@ impl Client {
             self.depth.fetch_sub(1, Ordering::AcqRel);
             anyhow::anyhow!("server is shut down")
         })
+    }
+}
+
+/// Write the JSON metrics snapshot to `path` and the Prometheus text
+/// exposition next to it (`.prom` extension).
+fn write_metrics_files(obs: &ServerObs, path: &std::path::Path) {
+    if let Err(e) = std::fs::write(path, obs.export_json().pretty()) {
+        log::warn!("could not write metrics snapshot {}: {e:#}", path.display());
+    }
+    let prom = path.with_extension("prom");
+    if let Err(e) = std::fs::write(&prom, obs.prometheus()) {
+        log::warn!("could not write Prometheus snapshot {}: {e:#}", prom.display());
     }
 }
 
@@ -311,7 +366,8 @@ impl Server {
         }
         let (tx, rx) = mpsc::channel::<Request>();
         let queue = Arc::new(Mutex::new(rx));
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let trace = config.trace || config.trace_out.is_some();
+        let obs = Arc::new(ServerObs::new(config.workers, trace));
         let depth = Arc::new(AtomicUsize::new(0));
         let alive = Arc::new(AtomicBool::new(true));
         let slo = Arc::new(Mutex::new(SloState::default()));
@@ -322,9 +378,9 @@ impl Server {
         type Ready = std::result::Result<Arc<ElasticEngine>, String>;
         let (ready_tx, ready_rx) = mpsc::channel::<Ready>();
         {
-            let (queue, metrics, depth, alive, slo, config) = (
+            let (queue, obs, depth, alive, slo, config) = (
                 queue.clone(),
-                metrics.clone(),
+                obs.clone(),
                 depth.clone(),
                 alive.clone(),
                 slo.clone(),
@@ -346,7 +402,7 @@ impl Server {
                                 return;
                             }
                         };
-                        worker_loop(&engine, &config, &queue, &metrics, &depth, &alive, &slo);
+                        worker_loop(0, &engine, &config, &queue, &obs, &depth, &alive, &slo);
                     })
                     .expect("spawn server worker"),
             );
@@ -357,9 +413,9 @@ impl Server {
             .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
         for i in 1..config.workers {
             let engine = engine.clone();
-            let (queue, metrics, depth, alive, slo, config) = (
+            let (queue, obs, depth, alive, slo, config) = (
                 queue.clone(),
-                metrics.clone(),
+                obs.clone(),
                 depth.clone(),
                 alive.clone(),
                 slo.clone(),
@@ -369,27 +425,63 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("mfqat-worker-{i}"))
                     .spawn(move || {
-                        worker_loop(&engine, &config, &queue, &metrics, &depth, &alive, &slo);
+                        worker_loop(i, &engine, &config, &queue, &obs, &depth, &alive, &slo);
                     })
                     .expect("spawn server worker"),
             );
         }
-        metrics.lock().unwrap().workers = config.workers;
+        // Telemetry sampler: a periodic time-series point (queue depth, KV
+        // residency, cache counters) and the `metrics_out` file rewrite.
+        // Dropping `sampler_tx` wakes it immediately at shutdown.
+        let (sampler_tx, sampler_rx) = mpsc::channel::<()>();
+        let sampler = {
+            let obs = obs.clone();
+            let depth = depth.clone();
+            let every = config.metrics_every.max(Duration::from_millis(10));
+            let metrics_out = config.metrics_out.clone();
+            std::thread::Builder::new()
+                .name("mfqat-obs-sampler".into())
+                .spawn(move || {
+                    while let Err(RecvTimeoutError::Timeout) = sampler_rx.recv_timeout(every) {
+                        obs.sample(depth.load(Ordering::Acquire));
+                        if let Some(path) = &metrics_out {
+                            write_metrics_files(&obs, path);
+                        }
+                    }
+                })
+                .expect("spawn obs sampler")
+        };
         let client = Client {
             tx: tx.clone(),
             width,
             depth,
+            obs: obs.clone(),
             alive: alive.clone(),
         };
         Ok((
             Server {
                 tx,
-                metrics,
+                obs,
+                config,
                 workers,
+                sampler: Some(sampler),
+                sampler_tx: Some(sampler_tx),
                 alive,
+                stopped: false,
             },
             client,
         ))
+    }
+
+    /// Point-in-time snapshot of the pool's serving metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.obs.snapshot()
+    }
+
+    /// The pool's live telemetry recorder (registry, exporters, trace
+    /// sink).
+    pub fn obs(&self) -> Arc<ServerObs> {
+        self.obs.clone()
     }
 
     /// Graceful shutdown: close the queue and join the pool.
@@ -398,12 +490,32 @@ impl Server {
     }
 
     fn stop(&mut self) {
+        if self.stopped {
+            return;
+        }
+        self.stopped = true;
         // Mark dead first so live clients stop enqueueing (their tx clones
         // keep the channel open), then drop our sender and join.
         self.alive.store(false, Ordering::Release);
         drop(std::mem::replace(&mut self.tx, mpsc::channel().0));
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        self.sampler_tx.take();
+        if let Some(s) = self.sampler.take() {
+            let _ = s.join();
+        }
+        // Final time-series point and exports now that the pool is quiet.
+        self.obs.sample(0);
+        if let Some(path) = &self.config.metrics_out {
+            write_metrics_files(&self.obs, path);
+        }
+        if let Some(path) = &self.config.trace_out {
+            if let Some(sink) = self.obs.trace() {
+                if let Err(e) = std::fs::write(path, sink.to_json().pretty()) {
+                    log::warn!("could not write trace {}: {e:#}", path.display());
+                }
+            }
         }
     }
 }
@@ -499,12 +611,21 @@ fn group_scores(
     groups
 }
 
+/// Trace lane for scoring batches (not tied to a decode row).
+const SCORE_TID: u64 = 1000;
+/// Trace lane for legacy gather-mode generation batches.
+const GATHER_TID: u64 = 1001;
+/// Trace lane for queue-side events (admission deferrals).
+const QUEUE_TID: u64 = 1002;
+
 /// Execute one per-format scoring sub-batch and respond to every request
 /// in it (shared by both worker-loop flavours).
+#[allow(clippy::too_many_arguments)]
 fn execute_score_group(
+    worker: usize,
     engine: &ElasticEngine,
     config: &ServerConfig,
-    metrics: &Mutex<Metrics>,
+    obs: &ServerObs,
     slo: &Mutex<SloState>,
     queue_depth: usize,
     fmt: ElementFormat,
@@ -521,19 +642,28 @@ fn execute_score_group(
     let result = engine.score_batch(&flat, fmt);
     let elapsed = t0.elapsed();
     slo.lock().unwrap().observe(&config.policy, elapsed.as_secs_f64());
+    if let Some(sink) = obs.trace() {
+        sink.complete(
+            "score_batch",
+            worker as u64,
+            SCORE_TID,
+            sink.ts_us(t0),
+            elapsed.as_micros() as u64,
+            vec![
+                ("format", Json::from(fmt.name())),
+                ("batch", Json::from(group.len())),
+            ],
+        );
+    }
 
     match result {
         Ok(nlls) => {
             let bs = group.len();
             let latencies: Vec<Duration> = group.iter().map(|r| r.enqueued.elapsed()).collect();
-            // One metrics lock per executed sub-batch.
-            {
-                let mut m = metrics.lock().unwrap();
-                for latency in &latencies {
-                    m.record(fmt, latency.as_secs_f64(), bs, elapsed.as_secs_f64());
-                }
-                m.set_cache(engine.cache_stats());
+            for latency in &latencies {
+                obs.record_score(fmt, latency.as_secs_f64(), bs, elapsed.as_secs_f64());
             }
+            obs.set_cache(engine.cache_stats());
             for ((j, req), latency) in group.into_iter().enumerate().zip(latencies) {
                 let _ = req.respond.send(Ok(ScoreResponse {
                     nll: nlls[j],
@@ -558,9 +688,10 @@ fn execute_score_group(
 /// shared format/budget/cfg) and respond to every request in it.
 #[allow(clippy::too_many_arguments)]
 fn execute_gen_group(
+    worker: usize,
     engine: &ElasticEngine,
     config: &ServerConfig,
-    metrics: &Mutex<Metrics>,
+    obs: &ServerObs,
     slo: &Mutex<SloState>,
     queue_depth: usize,
     fmt: ElementFormat,
@@ -582,24 +713,35 @@ fn execute_gen_group(
     slo.lock()
         .unwrap()
         .observe(&config.policy, elapsed.as_secs_f64() / n_tokens.max(1) as f64);
+    if let Some(sink) = obs.trace() {
+        sink.complete(
+            "gen_batch",
+            worker as u64,
+            GATHER_TID,
+            sink.ts_us(t0),
+            elapsed.as_micros() as u64,
+            vec![
+                ("format", Json::from(fmt.name())),
+                ("batch", Json::from(group.len())),
+                ("n_tokens", Json::from(n_tokens)),
+            ],
+        );
+    }
 
     match result {
         Ok(texts) => {
             let bs = group.len();
             let latencies: Vec<Duration> = group.iter().map(|r| r.enqueued.elapsed()).collect();
-            {
-                let mut m = metrics.lock().unwrap();
-                for latency in &latencies {
-                    m.record_generate(
-                        fmt,
-                        latency.as_secs_f64(),
-                        bs,
-                        elapsed.as_secs_f64(),
-                        n_tokens as u64,
-                    );
-                }
-                m.set_cache(engine.cache_stats());
+            for latency in &latencies {
+                obs.record_generate(
+                    fmt,
+                    latency.as_secs_f64(),
+                    bs,
+                    elapsed.as_secs_f64(),
+                    n_tokens as u64,
+                );
             }
+            obs.set_cache(engine.cache_stats());
             for ((req, text), latency) in group.into_iter().zip(texts).zip(latencies) {
                 let _ = req.respond.send(Ok(GenerateResponse {
                     text,
@@ -622,10 +764,11 @@ fn execute_gen_group(
 
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
+    worker: usize,
     engine: &ElasticEngine,
     config: &ServerConfig,
     queue: &Mutex<Receiver<Request>>,
-    metrics: &Mutex<Metrics>,
+    obs: &ServerObs,
     depth: &AtomicUsize,
     alive: &AtomicBool,
     slo: &Mutex<SloState>,
@@ -638,11 +781,8 @@ fn worker_loop(
         };
         match engine.decode_session_cfg(slots, config.kv_page) {
             Ok(session) => {
-                continuous_loop(engine, config, queue, metrics, depth, alive, slo, session);
-                log::info!(
-                    "server worker exiting; {}",
-                    metrics.lock().unwrap().summary()
-                );
+                continuous_loop(worker, engine, config, queue, obs, depth, alive, slo, session);
+                log::info!("server worker exiting; {}", obs.snapshot().summary());
                 return;
             }
             Err(e) => log::warn!(
@@ -652,21 +792,19 @@ fn worker_loop(
             ),
         }
     }
-    gather_loop(engine, config, queue, metrics, depth, alive, slo);
-    log::info!(
-        "server worker exiting; {}",
-        metrics.lock().unwrap().summary()
-    );
+    gather_loop(worker, engine, config, queue, obs, depth, alive, slo);
+    log::info!("server worker exiting; {}", obs.snapshot().summary());
 }
 
 /// Legacy batching loop: gather → split into per-format (and, for
 /// generation, per-budget/cfg) groups → execute each group to completion.
 #[allow(clippy::too_many_arguments)]
 fn gather_loop(
+    worker: usize,
     engine: &ElasticEngine,
     config: &ServerConfig,
     queue: &Mutex<Receiver<Request>>,
-    metrics: &Mutex<Metrics>,
+    obs: &ServerObs,
     depth: &AtomicUsize,
     alive: &AtomicBool,
     slo: &Mutex<SloState>,
@@ -701,11 +839,20 @@ fn gather_loop(
             }
         }
         for (fmt, group) in group_scores(scores, policy_fmt) {
-            execute_score_group(engine, config, metrics, slo, queue_depth, fmt, group);
+            execute_score_group(worker, engine, config, obs, slo, queue_depth, fmt, group);
         }
         for (fmt, n_tokens, cfg, group) in gen_groups {
             execute_gen_group(
-                engine, config, metrics, slo, queue_depth, fmt, n_tokens, cfg, group,
+                worker,
+                engine,
+                config,
+                obs,
+                slo,
+                queue_depth,
+                fmt,
+                n_tokens,
+                cfg,
+                group,
             );
         }
     }
@@ -720,6 +867,26 @@ struct GenRow {
     fmt: ElementFormat,
     n_tokens: usize,
     queue_depth: usize,
+    /// When this row's most recent token landed (TTFT vs inter-token gap).
+    last_token: Option<Instant>,
+    /// Tokens sampled so far (trace annotation).
+    emitted: usize,
+}
+
+/// Look up (or register and cache) the TTFT/inter-token histograms for
+/// `fmt` — the per-step path touches only the cached atomic handles.
+fn spans_for<'c>(
+    cache: &'c mut Vec<(ElementFormat, FormatSpanHists)>,
+    obs: &ServerObs,
+    fmt: ElementFormat,
+) -> &'c FormatSpanHists {
+    match cache.iter().position(|(f, _)| *f == fmt) {
+        Some(i) => &cache[i].1,
+        None => {
+            cache.push((fmt, obs.span_hists(fmt)));
+            &cache.last().unwrap().1
+        }
+    }
 }
 
 /// Continuous-batching loop: one persistent in-flight decode per worker.
@@ -731,20 +898,36 @@ struct GenRow {
 /// decode by **one step**, responding to rows that completed. Queue
 /// latency for a new prompt is therefore one decode step, not one whole
 /// batched decode.
+///
+/// Observability: admission records queue-wait (and deferral/downshift
+/// counts), each step's [`crate::eval::generate::RowStepEvent`]s attribute
+/// prefill vs decode vs overflow re-prefill per row and feed the
+/// per-format TTFT / inter-token histograms, and — when tracing is on —
+/// every edge lands in the trace sink as a span on `pid = worker`,
+/// `tid = row slot`. None of this perturbs decode state: events are
+/// bookkeeping emitted by the same step the session already ran.
 #[allow(clippy::too_many_arguments)]
 fn continuous_loop<'e>(
+    worker: usize,
     engine: &'e ElasticEngine,
     config: &ServerConfig,
     queue: &Mutex<Receiver<Request>>,
-    metrics: &Mutex<Metrics>,
+    obs: &ServerObs,
     depth: &AtomicUsize,
     alive: &AtomicBool,
     slo: &Mutex<SloState>,
     mut session: Box<dyn DecodeSession + 'e>,
 ) {
     let b = engine.dims().train_batch;
-    let mut backlog: VecDeque<GenerateRequest> = VecDeque::new();
+    let wid = worker as u64;
+    // Backlogged requests carry a "deferral already counted" flag so a
+    // request deferred across many steps counts once.
+    let mut backlog: VecDeque<(GenerateRequest, bool)> = VecDeque::new();
     let mut rows: Vec<Option<GenRow>> = (0..session.capacity()).map(|_| None).collect();
+    let mut span_cache: Vec<(ElementFormat, FormatSpanHists)> = Vec::new();
+    // The policy's unloaded pick — the yardstick for counting downshifts
+    // (rows admitted below it because of queue depth / SLO pressure).
+    let baseline_fmt = config.policy.choose_with(0, &SloState::default());
     loop {
         // (a) Take work from the shared queue. Idle workers block exactly
         // like the gather loop (so shutdown and wakeup semantics match);
@@ -765,7 +948,7 @@ fn continuous_loop<'e>(
                     let _ = row.respond.send(Err(msg.clone()));
                 }
             }
-            for r in backlog.drain(..) {
+            for (r, _) in backlog.drain(..) {
                 let _ = r.respond.send(Err(msg.clone()));
             }
             break;
@@ -790,7 +973,7 @@ fn continuous_loop<'e>(
         for req in batch {
             match req {
                 Request::Score(r) => scores.push(r),
-                Request::Generate(r) => backlog.push_back(r),
+                Request::Generate(r) => backlog.push_back((r, false)),
             }
         }
 
@@ -798,7 +981,7 @@ fn continuous_loop<'e>(
         if !scores.is_empty() {
             let policy_fmt = config.policy.choose_with(queue_depth, &slo.lock().unwrap());
             for (fmt, group) in group_scores(scores, policy_fmt) {
-                execute_score_group(engine, config, metrics, slo, queue_depth, fmt, group);
+                execute_score_group(worker, engine, config, obs, slo, queue_depth, fmt, group);
             }
         }
 
@@ -811,27 +994,71 @@ fn continuous_loop<'e>(
         // queued prompts *defer* (stay backlogged) until a live row retires
         // and returns its pages, instead of failing.
         while session.can_admit() {
-            let Some(r) = backlog.pop_front() else { break };
+            let Some((r, _)) = backlog.pop_front() else { break };
             let d = depth.load(Ordering::Acquire) + backlog.len();
             let fmt = match r.format {
                 Some(f) => f,
                 None => config.policy.choose_with(d, &slo.lock().unwrap()),
             };
+            if r.format.is_none() && fmt != baseline_fmt {
+                obs.record_downshift();
+            }
             match session.join(&r.prompt, fmt, r.n_tokens, &r.cfg) {
                 Ok(slot) => {
+                    let admitted = Instant::now();
+                    let wait = admitted.saturating_duration_since(r.enqueued);
+                    obs.record_queue_wait(wait.as_secs_f64());
+                    if let Some(sink) = obs.trace() {
+                        sink.complete(
+                            "queue_wait",
+                            wid,
+                            slot as u64,
+                            sink.ts_us(r.enqueued),
+                            wait.as_micros() as u64,
+                            vec![("format", Json::from(fmt.name()))],
+                        );
+                        let mut args = vec![
+                            ("format", Json::from(fmt.name())),
+                            ("queue_depth", Json::from(d)),
+                        ];
+                        if r.format.is_none() && fmt != baseline_fmt {
+                            args.push(("downshift_from", Json::from(baseline_fmt.name())));
+                        }
+                        sink.instant("admit", wid, slot as u64, args);
+                    }
                     rows[slot] = Some(GenRow {
                         respond: r.respond,
                         enqueued: r.enqueued,
-                        joined: Instant::now(),
+                        joined: admitted,
                         fmt,
                         n_tokens: r.n_tokens,
                         queue_depth: d,
+                        last_token: None,
+                        emitted: 0,
                     });
                 }
                 Err(e) => {
                     let msg = format!("generation admission failed: {e:#}");
                     log::error!("{msg}");
                     let _ = r.respond.send(Err(msg));
+                }
+            }
+        }
+        // Whatever is still backlogged was deferred by a full session or an
+        // exhausted KV page budget — count each request's deferral once.
+        if !backlog.is_empty() && !session.can_admit() {
+            let reason = if session.active() >= session.capacity() {
+                "slots"
+            } else {
+                "kv_pages"
+            };
+            for (_, counted) in backlog.iter_mut() {
+                if !*counted {
+                    *counted = true;
+                    obs.record_deferral();
+                    if let Some(sink) = obs.trace() {
+                        sink.instant("defer", wid, QUEUE_TID, vec![("reason", Json::from(reason))]);
+                    }
                 }
             }
         }
@@ -842,21 +1069,70 @@ fn continuous_loop<'e>(
             continue;
         }
         let bs = session.active();
-        match session.step() {
-            Ok(finished) => {
+        let t_step = Instant::now();
+        match session.step_with_events() {
+            Ok((finished, events)) => {
+                let step_end = Instant::now();
+                let dur_us = step_end.saturating_duration_since(t_step).as_micros() as u64;
+                // Per-row lifecycle accounting *before* finished rows are
+                // taken: a row that completes this step still attributes
+                // its final token. Every fed row sampled one token, so the
+                // first event after admission closes the TTFT span and
+                // later ones measure inter-token gaps.
+                for ev in &events {
+                    let Some(row) = rows.get_mut(ev.slot).and_then(|s| s.as_mut()) else {
+                        continue;
+                    };
+                    let spans = spans_for(&mut span_cache, obs, row.fmt);
+                    match row.last_token {
+                        None => {
+                            let ttft = step_end.saturating_duration_since(row.enqueued);
+                            spans.ttft.record(ttft.as_secs_f64());
+                        }
+                        Some(prev) => {
+                            let gap = step_end.saturating_duration_since(prev);
+                            spans.inter_token.record(gap.as_secs_f64());
+                        }
+                    }
+                    row.last_token = Some(step_end);
+                    row.emitted += 1;
+                    if ev.kind == RowStepKind::Reprefill {
+                        obs.record_reprefill();
+                    }
+                    if let Some(sink) = obs.trace() {
+                        let name = match ev.kind {
+                            RowStepKind::Prefill => "prefill",
+                            RowStepKind::Decode => "decode",
+                            RowStepKind::Reprefill => "reprefill",
+                        };
+                        sink.complete(
+                            name,
+                            wid,
+                            ev.slot as u64,
+                            sink.ts_us(t_step),
+                            dur_us,
+                            vec![
+                                ("format", Json::from(row.fmt.name())),
+                                ("fed", Json::from(ev.fed_tokens)),
+                                ("token", Json::from(row.emitted)),
+                            ],
+                        );
+                    }
+                }
                 let mut done = Vec::with_capacity(finished.len());
                 for f in finished {
                     if let Some(row) = rows[f.slot].take() {
                         let latency = row.enqueued.elapsed();
                         let service = row.joined.elapsed();
-                        done.push((row, f.text, latency, service));
+                        done.push((row, f.slot, f.text, latency, service));
                     }
                 }
-                // Snapshot paged-KV residency after the step. The snapshot
-                // carries the cache's allocation-time high-water mark, so
-                // rows that mapped pages and retired *within* this step
-                // still register in the peak `Metrics` reports.
-                metrics.lock().unwrap().set_kv(session.kv_memory());
+                // Snapshot paged-KV residency after the step (per-worker
+                // gauges — the pool view aggregates across workers). The
+                // snapshot carries the cache's allocation-time high-water
+                // mark, so rows that mapped pages and retired *within* this
+                // step still register in the peak reports.
+                obs.set_kv(worker, session.kv_memory());
                 if done.is_empty() {
                     continue;
                 }
@@ -865,27 +1141,43 @@ fn continuous_loop<'e>(
                     // service time (see `execute_gen_group`): a row's
                     // service spans `n_tokens` step-synchronized passes.
                     let mut s = slo.lock().unwrap();
-                    for (row, _, _, service) in &done {
+                    for (row, _, _, _, service) in &done {
                         s.observe(
                             &config.policy,
                             service.as_secs_f64() / row.n_tokens.max(1) as f64,
                         );
                     }
                 }
-                {
-                    let mut m = metrics.lock().unwrap();
-                    for (row, _, latency, service) in &done {
-                        m.record_generate(
-                            row.fmt,
-                            latency.as_secs_f64(),
-                            bs,
-                            service.as_secs_f64(),
-                            row.n_tokens as u64,
+                for (row, slot, _, latency, service) in &done {
+                    obs.record_generate(
+                        row.fmt,
+                        latency.as_secs_f64(),
+                        bs,
+                        service.as_secs_f64(),
+                        row.n_tokens as u64,
+                    );
+                    if let Some(sink) = obs.trace() {
+                        sink.complete(
+                            "request",
+                            wid,
+                            *slot as u64,
+                            sink.ts_us(row.enqueued),
+                            latency.as_micros() as u64,
+                            vec![
+                                ("format", Json::from(row.fmt.name())),
+                                ("tokens", Json::from(row.n_tokens)),
+                            ],
+                        );
+                        sink.instant(
+                            "complete",
+                            wid,
+                            *slot as u64,
+                            vec![("format", Json::from(row.fmt.name()))],
                         );
                     }
-                    m.set_cache(engine.cache_stats());
                 }
-                for (row, text, latency, _) in done {
+                obs.set_cache(engine.cache_stats());
+                for (row, _, text, latency, _) in done {
                     let _ = row.respond.send(Ok(GenerateResponse {
                         text,
                         format: row.fmt,

@@ -18,11 +18,14 @@
 //! | `--batching` | `continuous` (default) \| `gather` | Generate-lane batching for `serve`: continuous batching admits prompts into the in-flight decode every step with per-row formats; `gather` restores the legacy grouped batched decode. |
 //! | `--slots` | integer (default `0` = model `train_batch`) | Sequence rows in each serve worker's continuous decode session. |
 //! | `--kv-page` | integer ≥ 1 (default: `MFQAT_KV_PAGE`, else 64) | Positions per KV page for `serve`/`generate` decode caches (also pins `MFQAT_KV_PAGE` for the process). Resident KV memory tracks live context in pages of this size; tiny values (e.g. 8) force page boundaries mid-prompt/mid-decode, which CI uses to stress the paged walk. |
+//! | `--trace-out` | file path (`serve` only) | Collect per-request lifecycle spans (queue-wait, prefill, each decode step, completion) and write them as Chrome-trace-event JSON at shutdown — loadable in Perfetto / `chrome://tracing`, one track per worker with one lane per decode row. Tracing is off (and costs one `Option` check) without this flag. |
+//! | `--metrics-out` | file path (`serve` only) | Write a machine-readable metrics snapshot periodically and at shutdown: JSON (counters, latency/TTFT/inter-token percentiles per format, KV/cache/queue time series) at the path, Prometheus text exposition next to it with a `.prom` extension. |
 //!
 //! **Environment variables** (read at each cache/engine construction):
 //!
 //! | variable | values | effect |
 //! |----------|--------|--------|
+//! | `MFQAT_LOG` | `off` \| `error` \| `warn` \| `info` (default) \| `debug` \| `trace` | Stderr log level ([`crate::util::logging`]). Unrecognized values fall back to `info` with a one-time warning. Read once at logger install. |
 //! | `MFQAT_THREADS` | integer ≥ 1 | Pins the kernel worker-thread count (default: detected cores). Benches pin to 1 so pool scaling is not confounded by kernel fan-out. Read once per process. |
 //! | `MFQAT_SIMD` | `off`/`0`/`false`/`portable`/`none` | Forces the integer-MAC tile kernels onto the portable scalar loop (the differential-test oracle); any other value, or unset, keeps the runtime-detected AVX2/NEON dispatch. Read once per process. |
 //! | `MFQAT_KV_PAGE` | integer ≥ 1 (default 64) | Positions per KV-cache page wherever a sizing is not passed explicitly (`KvPageCfg::from_env`). Paging is bit-invisible to decode output — only residency granularity changes. CI runs a `MFQAT_KV_PAGE=8` test leg so page boundaries land mid-prompt and mid-decode. |

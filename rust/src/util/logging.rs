@@ -1,9 +1,12 @@
 //! Tiny stderr logger wired to the `log` facade.
 //!
-//! Level is controlled by `MFQAT_LOG` (error|warn|info|debug|trace),
-//! defaulting to `info`.
+//! Level is controlled by `MFQAT_LOG` (`off`|`error`|`warn`|`info`|`debug`|
+//! `trace`, defaulting to `info`; see the env table in [`crate::util::cli`]).
+//! An unrecognized value falls back to `info` with a one-time warning
+//! instead of being silently swallowed.
 
 use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::Once;
 use std::time::Instant;
 
 struct StderrLogger {
@@ -32,29 +35,77 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
+/// Map an `MFQAT_LOG` value to a level filter. Returns the filter plus a
+/// warning message when the value was not recognized (caller decides how
+/// to surface it — [`init`] logs it once).
+fn parse_level(value: Option<&str>) -> (LevelFilter, Option<String>) {
+    let Some(v) = value else {
+        return (LevelFilter::Info, None);
+    };
+    match v.trim().to_ascii_lowercase().as_str() {
+        "off" | "none" => (LevelFilter::Off, None),
+        "error" => (LevelFilter::Error, None),
+        "warn" | "warning" => (LevelFilter::Warn, None),
+        "info" | "" => (LevelFilter::Info, None),
+        "debug" => (LevelFilter::Debug, None),
+        "trace" => (LevelFilter::Trace, None),
+        other => (
+            LevelFilter::Info,
+            Some(format!(
+                "unrecognized MFQAT_LOG value '{other}' \
+                 (accepted: off|error|warn|info|debug|trace); defaulting to info"
+            )),
+        ),
+    }
+}
+
 /// Install the logger (idempotent).
 pub fn init() {
-    let level = match std::env::var("MFQAT_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
-    };
+    let env = std::env::var("MFQAT_LOG").ok();
+    let (level, warning) = parse_level(env.as_deref());
     let logger = Box::new(StderrLogger {
         start: Instant::now(),
     });
     if log::set_boxed_logger(logger).is_ok() {
         log::set_max_level(level);
     }
+    if let Some(msg) = warning {
+        static WARN_ONCE: Once = Once::new();
+        WARN_ONCE.call_once(|| log::warn!("{msg}"));
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn parse_level_accepts_documented_set() {
+        assert_eq!(parse_level(None), (LevelFilter::Info, None));
+        assert_eq!(parse_level(Some("off")), (LevelFilter::Off, None));
+        assert_eq!(parse_level(Some("none")), (LevelFilter::Off, None));
+        assert_eq!(parse_level(Some("error")), (LevelFilter::Error, None));
+        assert_eq!(parse_level(Some("warn")), (LevelFilter::Warn, None));
+        assert_eq!(parse_level(Some("warning")), (LevelFilter::Warn, None));
+        assert_eq!(parse_level(Some("info")), (LevelFilter::Info, None));
+        assert_eq!(parse_level(Some("debug")), (LevelFilter::Debug, None));
+        assert_eq!(parse_level(Some("TRACE")), (LevelFilter::Trace, None));
+        assert_eq!(parse_level(Some(" warn ")), (LevelFilter::Warn, None));
+    }
+
+    #[test]
+    fn parse_level_warns_on_unrecognized_values() {
+        let (level, warning) = parse_level(Some("verbose"));
+        assert_eq!(level, LevelFilter::Info, "unknown values fall back to info");
+        let msg = warning.expect("unknown values produce a warning");
+        assert!(msg.contains("verbose"), "{msg}");
+        assert!(msg.contains("off|error|warn|info|debug|trace"), "{msg}");
     }
 }

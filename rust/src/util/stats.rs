@@ -25,6 +25,23 @@ impl Running {
         }
     }
 
+    /// Rebuild an accumulator from aggregate parts — the bridge from the
+    /// lock-free [`crate::obs::AtomicRunning`] (which accumulates
+    /// `sum`/`sumsq` atomically) back to this snapshot type. `m2` is the
+    /// sum of squared deviations (`sumsq - sum²/n`).
+    pub fn from_parts(n: u64, mean: f64, m2: f64, min: f64, max: f64) -> Running {
+        if n == 0 {
+            return Running::new();
+        }
+        Running {
+            n,
+            mean,
+            m2: m2.max(0.0),
+            min,
+            max,
+        }
+    }
+
     /// Push one sample.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
@@ -91,10 +108,17 @@ impl Default for LatencyHist {
 }
 
 impl LatencyHist {
+    /// Number of buckets in the fixed log-scaled layout: one underflow
+    /// bucket (≤ 1µs), [`Self::N_BUCKETS`]` - 2` log buckets covering
+    /// 1µs..100s at 10 per decade, and one overflow bucket. Shared with the
+    /// lock-free [`crate::obs::Hist`] so atomic bucket counts round-trip
+    /// through [`Self::from_bucket_counts`] losslessly.
+    pub const N_BUCKETS: usize = BUCKETS_PER_DECADE * DECADES + 2;
+
     /// Empty histogram.
     pub fn new() -> LatencyHist {
         LatencyHist {
-            buckets: vec![0; BUCKETS_PER_DECADE * DECADES + 2],
+            buckets: vec![0; Self::N_BUCKETS],
             reservoir: Vec::new(),
             cap: 4096,
             seen: 0,
@@ -102,13 +126,53 @@ impl LatencyHist {
         }
     }
 
-    fn bucket_index(secs: f64) -> usize {
+    /// Rebuild a histogram from raw per-bucket counts (layout of
+    /// [`Self::bucket_index`]). The reservoir is empty, so
+    /// [`Self::quantile`] answers from bucket midpoints — exact to within
+    /// one bucket width (~26% at 10 buckets/decade).
+    pub fn from_bucket_counts(counts: &[u64]) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        let n = counts.len().min(h.buckets.len());
+        h.buckets[..n].copy_from_slice(&counts[..n]);
+        h.seen = h.buckets.iter().sum();
+        h
+    }
+
+    /// Bucket index for a latency sample (seconds) in the fixed layout.
+    pub fn bucket_index(secs: f64) -> usize {
         if secs <= 1e-6 {
             return 0;
         }
         let log = (secs / 1e-6).log10(); // decades above 1µs
         let idx = 1 + (log * BUCKETS_PER_DECADE as f64) as usize;
-        idx.min(BUCKETS_PER_DECADE * DECADES + 1)
+        idx.min(Self::N_BUCKETS - 1)
+    }
+
+    /// Upper bound (seconds) of bucket `idx`; `f64::INFINITY` for the
+    /// overflow bucket. Used by the Prometheus exposition's `le` labels.
+    pub fn bucket_bound(idx: usize) -> f64 {
+        if idx >= Self::N_BUCKETS - 1 {
+            return f64::INFINITY;
+        }
+        1e-6 * 10f64.powf(idx as f64 / BUCKETS_PER_DECADE as f64)
+    }
+
+    /// Representative value (seconds) for bucket `idx`: the lower edge for
+    /// the underflow bucket, the geometric midpoint for log buckets, and
+    /// the lower bound for the overflow bucket.
+    fn bucket_value(idx: usize) -> f64 {
+        if idx == 0 {
+            return 1e-6;
+        }
+        if idx >= Self::N_BUCKETS - 1 {
+            return 1e-6 * 10f64.powf((Self::N_BUCKETS - 2) as f64 / BUCKETS_PER_DECADE as f64);
+        }
+        1e-6 * 10f64.powf((idx as f64 - 0.5) / BUCKETS_PER_DECADE as f64)
+    }
+
+    /// Raw per-bucket counts (layout of [`Self::bucket_index`]).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
     }
 
     /// Record one latency sample (seconds).
@@ -135,10 +199,23 @@ impl LatencyHist {
         self.seen
     }
 
-    /// Quantile over the reservoir (exact for <= cap samples).
+    /// Quantile over the reservoir (exact for <= cap samples). A histogram
+    /// rebuilt from bucket counts alone ([`Self::from_bucket_counts`]) has
+    /// no reservoir and answers from bucket midpoints instead.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.reservoir.is_empty() {
-            return 0.0;
+            if self.seen == 0 {
+                return 0.0;
+            }
+            let target = ((self.seen - 1) as f64 * q).round() as u64;
+            let mut cum = 0u64;
+            for (i, &c) in self.buckets.iter().enumerate() {
+                cum += c;
+                if cum > target {
+                    return Self::bucket_value(i);
+                }
+            }
+            return Self::bucket_value(Self::N_BUCKETS - 1);
         }
         let mut v = self.reservoir.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -223,6 +300,61 @@ mod tests {
         }
         assert_eq!(h.count(), 10_000);
         assert!(h.quantile(0.99) <= 1e-2 + 1e-9);
+    }
+
+    #[test]
+    fn bucket_rebuild_quantiles_approximate_reservoir() {
+        let mut h = LatencyHist::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5);
+        }
+        let rebuilt = LatencyHist::from_bucket_counts(h.bucket_counts());
+        assert_eq!(rebuilt.count(), h.count());
+        for q in [0.5, 0.95, 0.99] {
+            let exact = h.quantile(q);
+            let approx = rebuilt.quantile(q);
+            // Bucket midpoints are within one log bucket (~26%) of truth.
+            assert!(
+                (approx / exact).log10().abs() < 0.2,
+                "q{q}: exact {exact} vs bucketed {approx}"
+            );
+        }
+    }
+
+    #[test]
+    fn bucket_layout_is_consistent() {
+        assert_eq!(LatencyHist::bucket_index(0.0), 0);
+        assert_eq!(LatencyHist::bucket_index(1e9), LatencyHist::N_BUCKETS - 1);
+        for idx in [0usize, 1, 40, LatencyHist::N_BUCKETS - 2] {
+            let bound = LatencyHist::bucket_bound(idx);
+            assert_eq!(
+                LatencyHist::bucket_index(bound * 0.99),
+                idx,
+                "sample just under the bound lands in its bucket"
+            );
+        }
+        assert!(LatencyHist::bucket_bound(LatencyHist::N_BUCKETS - 1).is_infinite());
+    }
+
+    #[test]
+    fn running_from_parts_round_trips() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut r = Running::new();
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for &x in &xs {
+            r.push(x);
+            sum += x;
+            sumsq += x * x;
+        }
+        let n = xs.len() as u64;
+        let mean = sum / n as f64;
+        let rebuilt = Running::from_parts(n, mean, sumsq - sum * sum / n as f64, 1.0, 10.0);
+        assert_eq!(rebuilt.count(), r.count());
+        assert!((rebuilt.mean() - r.mean()).abs() < 1e-12);
+        assert!((rebuilt.var() - r.var()).abs() < 1e-9);
+        assert_eq!(rebuilt.min(), 1.0);
+        assert_eq!(rebuilt.max(), 10.0);
+        assert_eq!(Running::from_parts(0, 0.0, 0.0, 0.0, 0.0).count(), 0);
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! Observability subsystem behaviour: the lock-free metrics registry under
+//! multithreaded hammering (checked against a mutex-protected oracle), and
+//! end-to-end request-lifecycle tracing through the continuous serving
+//! lane — the exported Chrome trace must be valid trace-event JSON
+//! (monotonic timestamps, complete `X` events carrying `dur`) and cover
+//! the whole lifecycle: enqueue → admit → prefill → per-step decode →
+//! complete. Exporter surfaces (JSON snapshot, Prometheus text) are
+//! exercised on live serving data.
+//!
+//! Runs everywhere — the native backend needs no AOT artifacts and no XLA.
+
+use mfqat::coordinator::ElasticEngine;
+use mfqat::eval::generate::SampleCfg;
+use mfqat::formats::ElementFormat;
+use mfqat::model::{ModelDims, ParamSet};
+use mfqat::obs::{AtomicRunning, Counter, Hist, Registry, TraceSink};
+use mfqat::server::{GenBatching, Policy, Server, ServerConfig};
+use mfqat::util::json::Json;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+// ------------------------------------------------ registry hammer (oracle)
+
+/// Mutex-protected reference accumulator the atomic registry must agree
+/// with exactly. All samples are small integers, so the CAS f64
+/// accumulation in `Hist`/`AtomicRunning` is exact regardless of thread
+/// interleaving and the comparison can be `==`, not approximate.
+#[derive(Default)]
+struct Oracle {
+    count: u64,
+    sum: f64,
+    hist_n: u64,
+    hist_sum: f64,
+    run_n: u64,
+    run_sum: f64,
+    run_min: f64,
+    run_max: f64,
+}
+
+#[test]
+fn hammer_atomic_registry_matches_mutexed_oracle() {
+    const THREADS: usize = 8;
+    const OPS: usize = 20_000;
+
+    let reg = Arc::new(Registry::new());
+    let oracle = Arc::new(Mutex::new(Oracle {
+        run_min: f64::INFINITY,
+        run_max: f64::NEG_INFINITY,
+        ..Default::default()
+    }));
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let reg = Arc::clone(&reg);
+            let oracle = Arc::clone(&oracle);
+            std::thread::spawn(move || {
+                // Handles are cached once per thread, the hot-path pattern.
+                let counter: Arc<Counter> = reg.counter("hammer_requests");
+                let hist: Arc<Hist> = reg.hist("hammer_latency_seconds");
+                let running: Arc<AtomicRunning> = reg.running("hammer_batch");
+                let gauge = reg.gauge("hammer_peak");
+                for i in 0..OPS {
+                    let add = (i % 7 + 1) as u64;
+                    let secs = (i % 5 + 1) as f64; // integer seconds: exact sums
+                    let sample = ((t * 31 + i) % 11) as f64;
+                    counter.add(add);
+                    hist.record(secs);
+                    running.push(sample);
+                    gauge.set_max((t * OPS + i) as u64);
+                    let mut o = oracle.lock().unwrap();
+                    o.count += add;
+                    o.sum += add as f64;
+                    o.hist_n += 1;
+                    o.hist_sum += secs;
+                    o.run_n += 1;
+                    o.run_sum += sample;
+                    o.run_min = o.run_min.min(sample);
+                    o.run_max = o.run_max.max(sample);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let o = oracle.lock().unwrap();
+    let counter = reg.counter("hammer_requests");
+    assert_eq!(counter.get(), o.count, "atomic counter lost updates");
+
+    let hist = reg.hist("hammer_latency_seconds");
+    assert_eq!(hist.count(), o.hist_n, "sharded histogram lost samples");
+    assert_eq!(hist.sum(), o.hist_sum, "CAS f64 sum must be exact for integer samples");
+    let buckets = hist.bucket_counts();
+    assert_eq!(buckets.iter().sum::<u64>(), o.hist_n, "bucket counts must sum to the count");
+
+    let running = reg.running("hammer_batch");
+    assert_eq!(running.count(), o.run_n);
+    assert_eq!(running.sum(), o.run_sum, "CAS f64 sum must be exact for integer samples");
+    let snap = running.snapshot();
+    assert_eq!(snap.min(), o.run_min);
+    assert_eq!(snap.max(), o.run_max);
+
+    let gauge = reg.gauge("hammer_peak");
+    assert_eq!(gauge.get(), (THREADS * OPS - 1) as u64, "set_max must keep the global max");
+}
+
+#[test]
+fn registry_returns_shared_handles_and_distinguishes_labels() {
+    let reg = Registry::new();
+    let a = reg.counter("shared");
+    let b = reg.counter("shared");
+    assert!(Arc::ptr_eq(&a, &b), "same name must return the same handle");
+    let l1 = reg.counter_with("labelled", &[("format", "int8")]);
+    let l2 = reg.counter_with("labelled", &[("format", "int4")]);
+    l1.inc();
+    assert_eq!(l2.get(), 0, "different label sets must be distinct metrics");
+}
+
+// --------------------------------------------------- end-to-end lifecycle
+
+fn test_dims() -> ModelDims {
+    let mut dims = ModelDims::new("obs", 256, 32, 2, 2, 16);
+    dims.train_batch = 4;
+    dims
+}
+
+fn start_traced_server() -> (Server, mfqat::server::Client) {
+    let dims = test_dims();
+    let width = dims.seq_len + 1;
+    let (server, client) = Server::start(
+        width,
+        move || {
+            let manifest = dims.to_manifest();
+            let params = ParamSet::init(&manifest, 23);
+            let ck = params.to_anchor_checkpoint(&manifest, ElementFormat::int(8))?;
+            ElasticEngine::native(dims, ck, 64 << 20)
+        },
+        ServerConfig {
+            policy: Policy::Fixed(ElementFormat::int(8)),
+            gather_window: Duration::from_millis(1),
+            workers: 1,
+            batching: GenBatching::Continuous,
+            trace: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    (server, client)
+}
+
+/// Validate one exported Chrome trace document; returns the set of event
+/// names seen (data events only, metadata excluded).
+fn validate_trace(doc: &Json) -> Vec<String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("trace document must carry a traceEvents array");
+    assert!(!events.is_empty(), "trace must not be empty");
+    let mut names = Vec::new();
+    let mut last_ts = f64::NEG_INFINITY;
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).expect("every event has a phase");
+        let name = ev.get("name").and_then(|n| n.as_str()).expect("every event has a name");
+        assert!(ev.get("pid").is_some() && ev.get("tid").is_some(), "track ids on {name}");
+        match ph {
+            "M" => continue, // metadata: names tracks, carries no timestamp
+            "X" => {
+                let dur = ev.get("dur").and_then(|d| d.as_f64());
+                assert!(dur.is_some(), "complete event '{name}' must carry dur");
+                assert!(dur.unwrap() >= 0.0, "negative duration on '{name}'");
+            }
+            "i" => {
+                assert_eq!(
+                    ev.get("s").and_then(|s| s.as_str()),
+                    Some("t"),
+                    "instant '{name}' must be thread-scoped"
+                );
+            }
+            other => panic!("unexpected phase '{other}' on '{name}'"),
+        }
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).expect("data events carry ts");
+        assert!(ts >= last_ts, "timestamps must be monotonic ('{name}' went backwards)");
+        last_ts = ts;
+        names.push(name.to_string());
+    }
+    names
+}
+
+#[test]
+fn traced_serving_emits_a_valid_request_lifecycle() {
+    let (server, client) = start_traced_server();
+    let cfg = SampleCfg {
+        temperature: 0.7,
+        top_k: 6,
+        seed: 5,
+    };
+    // Mixed-format continuous run: pinned int4/int8 rows plus policy rows.
+    let pins = [
+        Some(ElementFormat::int(4)),
+        Some(ElementFormat::int(8)),
+        None,
+        Some(ElementFormat::int(4)),
+    ];
+    let rxs: Vec<_> = pins
+        .iter()
+        .enumerate()
+        .map(|(i, pin)| {
+            client
+                .submit_generate(&format!("prompt-{i}"), 6, *pin, cfg.clone())
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    // One scoring request so the score lane shows up in the trace too.
+    client.score(&[1, 2, 3], None).unwrap();
+
+    // Live snapshot through the client, before shutdown.
+    let m = client.metrics_snapshot();
+    assert_eq!(m.gen_requests, 4);
+    assert_eq!(m.requests, 5, "headline counter covers both lanes (4 gen + 1 score)");
+    for fmt in ["int4", "int8"] {
+        let ttft = m.ttft.get(fmt).unwrap_or_else(|| panic!("missing TTFT hist for {fmt}"));
+        assert!(ttft.count() >= 1, "TTFT must be recorded per format ({fmt})");
+        let it = m
+            .inter_token
+            .get(fmt)
+            .unwrap_or_else(|| panic!("missing inter-token hist for {fmt}"));
+        assert!(it.count() >= 1, "inter-token gaps must be recorded per format ({fmt})");
+    }
+    assert!(m.queue_wait.count() >= 4, "every admitted row records queue wait");
+
+    let obs = server.obs();
+    let sink: Arc<TraceSink> = obs.trace().cloned().expect("trace sink present when trace: true");
+    drop(client);
+    server.shutdown();
+
+    // The exported trace must round-trip through the JSON parser and pass
+    // structural validation.
+    let doc = Json::parse(&sink.to_json().pretty()).expect("trace must be parseable JSON");
+    let names = validate_trace(&doc);
+    for required in ["queue_wait", "admit", "prefill", "decode", "request", "complete"] {
+        assert!(
+            names.iter().any(|n| n == required),
+            "lifecycle event '{required}' missing from trace (saw: {names:?})"
+        );
+    }
+    assert!(names.iter().any(|n| n == "score_batch"), "score lane must be traced");
+    // Decode steps outnumber prefills: each row prefills once then decodes.
+    let prefills = names.iter().filter(|n| *n == "prefill").count();
+    let decodes = names.iter().filter(|n| *n == "decode").count();
+    assert!(prefills >= 4, "each admitted row prefills (saw {prefills})");
+    assert!(decodes > prefills, "multi-token rows must emit decode steps");
+    assert_eq!(sink.dropped(), 0, "small run must not hit the event cap");
+}
+
+#[test]
+fn exporters_serve_live_data() {
+    let (server, client) = start_traced_server();
+    let cfg = SampleCfg::default();
+    client.generate("kova", 4, Some(ElementFormat::int(8)), cfg).unwrap();
+
+    let obs = server.obs();
+    obs.sample(0);
+    let json = obs.export_json();
+    let parsed = Json::parse(&json.pretty()).expect("metrics JSON must round-trip");
+    let summary = parsed.get("summary").expect("snapshot carries a summary object");
+    assert_eq!(summary.get("gen_requests").and_then(|v| v.as_f64()), Some(1.0));
+    assert!(parsed.get("series").and_then(|s| s.as_arr()).is_some_and(|s| !s.is_empty()));
+
+    let prom = obs.prometheus();
+    assert!(prom.contains("mfqat_gen_requests_total 1"), "{prom}");
+    assert!(prom.contains("mfqat_ttft_seconds_bucket"), "{prom}");
+    assert!(prom.contains("format=\"int8\""), "per-format labels must export\n{prom}");
+
+    drop(client);
+    server.shutdown();
+}

@@ -86,7 +86,7 @@ fn requests_are_scored_and_batched() {
         max_batch = max_batch.max(resp.batch_size);
     }
     assert!(max_batch > 1, "burst must be batched (got {max_batch})");
-    let m = server.metrics.lock().unwrap().clone();
+    let m = server.metrics();
     assert_eq!(m.requests, 16);
     assert!(m.cache.misses >= 1, "int8 derivation is a cache miss");
     assert_eq!(m.cache.entries, 1, "one format resident after a fixed-format run");
@@ -165,7 +165,7 @@ fn ladder_policy_degrades_under_load() {
         formats.iter().any(|&b| b < 8),
         "burst must trigger lower precisions, saw {formats:?}"
     );
-    let metrics = server.metrics.lock().unwrap().clone();
+    let metrics = server.metrics();
     assert!(metrics.conversions() >= formats.len() as u64);
     let s = metrics.summary();
     assert!(s.contains("cache["), "summary surfaces cache counters: {s}");
@@ -211,7 +211,7 @@ fn generate_lane_serves_batched_continuations() {
     // Batched-vs-solo token identity through the serving path.
     let solo = client.generate("kova", 8, None, cfg.clone()).unwrap();
     assert_eq!(solo.text, texts[0], "batched decode diverged from solo");
-    let m = server.metrics.lock().unwrap().clone();
+    let m = server.metrics();
     assert_eq!(m.gen_requests, 5);
     assert_eq!(m.gen_tokens, 5 * 8);
     assert!(m.summary().contains("gen["), "{}", m.summary());
@@ -257,7 +257,7 @@ fn continuous_lane_serves_mixed_formats_and_budgets_in_flight() {
         let solo = client.generate(p, *n, *pin, cfg.clone()).unwrap();
         assert_eq!(&solo.text, text, "{p:?} at {pin:?} diverged from solo");
     }
-    let m = server.metrics.lock().unwrap().clone();
+    let m = server.metrics();
     assert_eq!(m.gen_requests, 10, "burst + solo checks");
     assert_eq!(
         m.gen_tokens,
@@ -354,7 +354,7 @@ fn worker_pool_serves_concurrent_load_from_one_engine() {
             });
         }
     });
-    let m = server.metrics.lock().unwrap().clone();
+    let m = server.metrics();
     assert_eq!(m.requests, (n_threads * per_thread) as u64);
     assert_eq!(m.workers, 4);
     // One shared cache: 3 distinct formats ⇒ at most a derivation or two
