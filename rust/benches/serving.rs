@@ -29,6 +29,13 @@
 //!   observability/*         lifecycle-tracing overhead: the same closed-
 //!                           loop mixed-format load with the trace sink off
 //!                           vs on, min-of-3 walls each
+//!   degradation/*           graceful degradation under overload: open-loop
+//!                           Poisson generation arrivals at 1×/2×/4× the
+//!                           pool's measured closed-loop service rate, with
+//!                           the shed ladder enabled (bounded ingress
+//!                           queue) vs disabled — p99 latency of served
+//!                           requests plus rejection / downshift / deferral
+//!                           counts per overload point
 //!
 //! Writes a machine-readable summary to `BENCH_serving.json` (CI archives
 //! it; the acceptance numbers — tokens/sec scaling with worker count,
@@ -479,6 +486,119 @@ fn main() {
     ov.set("tracing_overhead_pct", Json::from(overhead_pct));
     ov.set("trace_events", Json::from(trace_events));
     summary.set("observability", ov);
+
+    // ----------------------------------- graceful degradation under overload
+    //
+    // Overload the pool at multiples of its own measured service rate and
+    // read what the shed ladder buys: with a bounded ingress queue the
+    // server turns excess traffic away (cheap, typed, with a retry hint)
+    // and keeps the served-request p99 bounded; without it the backlog —
+    // and the tail — grows with the overload. Downshifts (ladder drops
+    // precision with depth) and deferrals (backlog waits for a decode row)
+    // are the earlier rungs of the same ladder and are reported alongside.
+    let deg_requests = 24usize;
+    let deg_tokens = 8usize;
+    let start_deg = |queue_cap: usize| {
+        let dims = bench_dims();
+        let (server, client) = Server::start(
+            dims.seq_len + 1,
+            move || {
+                let manifest = dims.to_manifest();
+                let params = ParamSet::init(&manifest, 5);
+                let ck = params.to_anchor_checkpoint(&manifest, ElementFormat::int(8))?;
+                ElasticEngine::native(dims, ck, 256 << 20)
+            },
+            ServerConfig {
+                policy: Policy::default_ladder(),
+                gather_window: Duration::from_millis(1),
+                workers: 1,
+                decode_slots: 2,
+                kv_page: KvPageCfg::with_page(8),
+                queue_cap,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        (server, client)
+    };
+    let warm_deg = |client: &mfqat::server::Client| {
+        for fmt in mix {
+            client.score(&rows[0], Some(fmt)).unwrap();
+        }
+    };
+    // Base service rate: one closed-loop burst drained flat out.
+    let base_rate = {
+        let (server, client) = start_deg(0);
+        warm_deg(&client);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..12usize)
+            .map(|i| {
+                client
+                    .submit_generate(prompts[i % prompts.len()], deg_tokens, None, cfg.clone())
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let rate = 12.0 / t0.elapsed().as_secs_f64();
+        drop(client);
+        server.shutdown();
+        rate
+    };
+    let mut deg_json = Json::obj();
+    deg_json.set("base_service_rate_rps", Json::from(base_rate));
+    for (mode, queue_cap) in [("shed", 6usize), ("noshed", 0usize)] {
+        let mut mode_json = Json::obj();
+        for over in [1usize, 2, 4] {
+            let (server, client) = start_deg(queue_cap);
+            warm_deg(&client);
+            let mean_gap_s = 1.0 / (base_rate * over as f64);
+            let mut rng = Rng::new(0xDE6 + over as u64);
+            let mut rxs = Vec::with_capacity(deg_requests);
+            let mut rejected = 0usize;
+            for i in 0..deg_requests {
+                match client.submit_generate(
+                    prompts[i % prompts.len()],
+                    deg_tokens,
+                    None,
+                    cfg.clone(),
+                ) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(_) => rejected += 1, // typed Rejected at the queue boundary
+                }
+                let gap = -(rng.f64().max(1e-9)).ln() * mean_gap_s;
+                std::thread::sleep(Duration::from_secs_f64(gap.min(0.02)));
+            }
+            let mut lats: Vec<f64> = rxs
+                .into_iter()
+                .map(|rx| rx.recv().unwrap().unwrap().latency.as_secs_f64())
+                .collect();
+            let served = lats.len();
+            let p99 = if lats.is_empty() { 0.0 } else { quantiles(&mut lats).1 };
+            let m = server.metrics();
+            println!(
+                "degradation/{mode}/x{over}: served {served}/{deg_requests}  \
+                 p99 {:.1}ms  reject {}  downshift {}  defer {}",
+                p99 * 1e3,
+                m.rejections,
+                m.downshifts,
+                m.deferrals
+            );
+            let mut e = Json::obj();
+            e.set("p99_ms", Json::from(p99 * 1e3));
+            e.set("served", Json::from(served));
+            e.set("rejected", Json::from(rejected));
+            e.set("rejections", Json::from(m.rejections));
+            e.set("downshifts", Json::from(m.downshifts));
+            e.set("deferrals", Json::from(m.deferrals));
+            mode_json.set(&format!("x{over}"), e);
+            drop(client);
+            server.shutdown();
+        }
+        deg_json.set(mode, mode_json);
+    }
+    summary.set("degradation", deg_json);
 
     // ------------------------------ raw batched decode (no server) by rows
     let manifest = dims.to_manifest();

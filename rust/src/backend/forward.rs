@@ -686,6 +686,18 @@ impl KvCache {
         self.pool.free_pages() >= self.committed_pages() + self.pages_per_row
     }
 
+    /// Shrink the page budget mid-run by quarantining up to `pages` free
+    /// pages (they leave service permanently; mapped pages are untouched).
+    /// The shrink is clamped so the pool keeps `free ≥ committed`: every
+    /// *already admitted* row can still grow to its full window, preserving
+    /// the [`Self::can_fund_row`] guarantee that an admitted row never hits
+    /// pool exhaustion mid-decode — only future admissions feel the
+    /// squeeze. Returns how many pages actually left the pool.
+    pub fn shrink_budget(&mut self, pages: usize) -> usize {
+        let spare = self.pool.free_pages().saturating_sub(self.committed_pages());
+        self.pool.shrink(pages.min(spare))
+    }
+
     /// Paged-KV accounting snapshot (resident vs dense-equivalent bytes,
     /// pool utilization).
     pub fn kv_memory(&self) -> KvMemory {

@@ -145,6 +145,10 @@ pub struct KvPagePool {
     k: Vec<f32>,
     v: Vec<f32>,
     free: Vec<usize>,
+    /// Pages removed from service by [`Self::shrink`]: still part of the
+    /// arena (so release-time range asserts stay valid) but never handed
+    /// out again and excluded from every capacity report.
+    quarantined: Vec<usize>,
 }
 
 impl KvPagePool {
@@ -157,7 +161,27 @@ impl KvPagePool {
             v: vec![0.0; total * floats_per_page],
             // LIFO so recently-hot pages are remapped first.
             free: (0..total).rev().collect(),
+            quarantined: Vec::new(),
         }
+    }
+
+    /// Permanently remove up to `want` **free** pages from service
+    /// (mid-run budget shrink — the fault-injection harness and elastic
+    /// memory pressure both use this). Mapped pages are never touched, so
+    /// live rows keep every page they hold; the pool simply gets smaller.
+    /// Returns how many pages were actually quarantined.
+    pub fn shrink(&mut self, want: usize) -> usize {
+        let take = want.min(self.free.len());
+        for _ in 0..take {
+            let p = self.free.pop().expect("free list length checked above");
+            self.quarantined.push(p);
+        }
+        take
+    }
+
+    /// Pages removed from service by [`Self::shrink`].
+    pub fn quarantined_pages(&self) -> usize {
+        self.quarantined.len()
     }
 
     /// Claim a page; `None` when the pool is exhausted. Handed-out pages
@@ -207,12 +231,13 @@ impl KvPagePool {
 
     /// Pages currently handed out.
     pub fn used_pages(&self) -> usize {
-        self.total - self.free.len()
+        self.total - self.free.len() - self.quarantined.len()
     }
 
-    /// Pool size in pages.
+    /// Pool size in pages (excluding pages quarantined by
+    /// [`Self::shrink`]).
     pub fn total_pages(&self) -> usize {
-        self.total
+        self.total - self.quarantined.len()
     }
 
     /// f32s per page per arena.
@@ -225,9 +250,10 @@ impl KvPagePool {
         2 * self.floats_per_page * std::mem::size_of::<f32>()
     }
 
-    /// Total arena bytes (all pages, free or mapped).
+    /// Total in-service arena bytes (all pages, free or mapped; pages
+    /// quarantined by [`Self::shrink`] no longer count).
     pub fn pool_bytes(&self) -> usize {
-        self.total * self.page_bytes()
+        self.total_pages() * self.page_bytes()
     }
 }
 
@@ -269,6 +295,24 @@ mod tests {
         assert_eq!(q, p, "LIFO hands the same page back");
         assert!(pool.k(q).iter().all(|&x| x == 0.0), "stale K leaked");
         assert!(pool.v(q).iter().all(|&x| x == 0.0), "stale V leaked");
+    }
+
+    #[test]
+    fn shrink_quarantines_free_pages_only() {
+        let mut pool = KvPagePool::new(4, 2);
+        let a = pool.alloc().unwrap();
+        assert_eq!(pool.shrink(10), 3, "only the free pages can go");
+        assert_eq!(pool.quarantined_pages(), 3);
+        assert_eq!(pool.total_pages(), 1);
+        assert_eq!(pool.used_pages(), 1);
+        assert_eq!(pool.free_pages(), 0);
+        assert_eq!(pool.alloc(), None, "quarantined pages never come back");
+        assert_eq!(pool.pool_bytes(), 2 * 2 * 4, "one page in service");
+        // The mapped page still releases normally into the shrunken pool.
+        pool.release(a);
+        assert_eq!(pool.free_pages(), 1);
+        assert_eq!(pool.used_pages(), 0);
+        assert_eq!(pool.alloc(), Some(a));
     }
 
     #[test]

@@ -199,4 +199,15 @@ pub trait DecodeSession {
     fn kv_memory(&self) -> KvMemory {
         KvMemory::default()
     }
+
+    /// Shrink this session's KV page budget mid-run by up to `pages` free
+    /// pages (the fault-injection harness's memory-pressure lever). Paged
+    /// backends clamp the shrink so **live rows keep their guaranteed
+    /// growth room** — only future admissions feel the squeeze; backends
+    /// without paged storage ignore the request. Returns the pages
+    /// actually removed from service.
+    fn shrink_kv_budget(&mut self, pages: usize) -> usize {
+        let _ = pages;
+        0
+    }
 }

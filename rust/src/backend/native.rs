@@ -14,9 +14,10 @@ use crate::coordinator::format_cache::{CacheStats, FormatCache};
 use crate::eval::generate::{ContinuousBatch, FinishedRow, RowStepEvent, SampleCfg};
 use crate::formats::ElementFormat;
 use crate::model::ModelDims;
+use crate::util::sync::RobustMutex;
 use anyhow::{anyhow, Result};
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Native packed-MX inference engine.
 ///
@@ -46,7 +47,9 @@ pub struct NativeBackend {
     anchor_fmt: ElementFormat,
     act: ActMode,
     shared: Arc<SharedParams>,
-    cache: Mutex<FormatCache<NativeWeights>>,
+    /// Poison-proof: a server worker that panics while deriving weights
+    /// must not wedge every other worker's cache lookups.
+    cache: RobustMutex<FormatCache<NativeWeights>>,
 }
 
 impl NativeBackend {
@@ -68,7 +71,7 @@ impl NativeBackend {
             anchor_fmt,
             act: ActMode::F32,
             shared,
-            cache: Mutex::new(FormatCache::new(cache_bytes)),
+            cache: RobustMutex::new(FormatCache::new(cache_bytes)),
         })
     }
 
@@ -99,7 +102,7 @@ impl NativeBackend {
     /// Slice-and-Scale + block-major repack (cached, LRU; the shared f32
     /// set rides along by `Arc`).
     pub fn weights(&self, fmt: ElementFormat) -> Result<Arc<NativeWeights>> {
-        if let Some(w) = self.cache.lock().unwrap().get(fmt) {
+        if let Some(w) = self.cache.lock().get(fmt) {
             return Ok(w);
         }
         let t = std::time::Instant::now();
@@ -123,7 +126,7 @@ impl NativeBackend {
             self.shared.storage_bytes() as f64 / 1e6,
             self.act.name()
         );
-        self.cache.lock().unwrap().put(fmt, w.clone(), bytes);
+        self.cache.lock().put(fmt, w.clone(), bytes);
         Ok(w)
     }
 
@@ -242,6 +245,10 @@ impl DecodeSession for NativeDecodeSession<'_> {
     fn kv_memory(&self) -> KvMemory {
         self.inner.kv_memory()
     }
+
+    fn shrink_kv_budget(&mut self, pages: usize) -> usize {
+        self.inner.shrink_kv_budget(pages)
+    }
 }
 
 impl Backend for NativeBackend {
@@ -279,7 +286,7 @@ impl Backend for NativeBackend {
     }
 
     fn cache_stats(&self) -> CacheStats {
-        self.cache.lock().unwrap().stats()
+        self.cache.lock().stats()
     }
 
     fn generate(

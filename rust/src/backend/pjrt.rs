@@ -20,9 +20,10 @@ use crate::eval::ParamLiterals;
 use crate::formats::ElementFormat;
 use crate::model::{ModelDims, ParamSet};
 use crate::runtime::{self, ArtifactSet, Runtime};
+use crate::util::sync::RobustMutex;
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// PJRT-backed engine over one artifact directory + anchor checkpoint.
 pub struct PjrtBackend {
@@ -35,7 +36,7 @@ pub struct PjrtBackend {
     /// Precision the anchor checkpoint stores.
     pub anchor_fmt: ElementFormat,
     dims: ModelDims,
-    cache: Mutex<FormatCache<ParamLiterals>>,
+    cache: RobustMutex<FormatCache<ParamLiterals>>,
 }
 
 impl PjrtBackend {
@@ -65,14 +66,14 @@ impl PjrtBackend {
             anchor,
             anchor_fmt,
             dims,
-            cache: Mutex::new(FormatCache::new(cache_bytes)),
+            cache: RobustMutex::new(FormatCache::new(cache_bytes)),
         }
     }
 
     /// Serving weight literals for `fmt`, derived via Slice-and-Scale from
     /// the anchor (cached). `fmt == anchor` dequantizes the anchor directly.
     pub fn weights(&self, fmt: ElementFormat) -> Result<Arc<ParamLiterals>> {
-        if let Some(w) = self.cache.lock().unwrap().get(fmt) {
+        if let Some(w) = self.cache.lock().get(fmt) {
             return Ok(w);
         }
         let t = std::time::Instant::now();
@@ -87,7 +88,7 @@ impl PjrtBackend {
             t.elapsed().as_secs_f64() * 1e3,
             bytes as f64 / 1e6
         );
-        self.cache.lock().unwrap().put(fmt, lits.clone(), bytes);
+        self.cache.lock().put(fmt, lits.clone(), bytes);
         Ok(lits)
     }
 }
@@ -147,6 +148,6 @@ impl Backend for PjrtBackend {
     }
 
     fn cache_stats(&self) -> CacheStats {
-        self.cache.lock().unwrap().stats()
+        self.cache.lock().stats()
     }
 }

@@ -265,6 +265,14 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
         self.cache.kv_memory()
     }
 
+    /// Shrink this batch's KV page budget mid-run (see
+    /// [`KvCache::shrink_budget`]): up to `pages` free pages leave service,
+    /// clamped so every live row can still grow to its full window — only
+    /// future admissions feel the squeeze. Returns the pages removed.
+    pub fn shrink_kv_budget(&mut self, pages: usize) -> usize {
+        self.cache.shrink_budget(pages)
+    }
+
     /// Admit a prompt into the lowest free slot with weight set `w` (the
     /// row's own format + activation mode), to emit `n_tokens` tokens
     /// sampled under `cfg`. The prompt's trailing window prefills on the

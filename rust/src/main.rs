@@ -551,6 +551,8 @@ fn serve(args: &Args) -> Result<()> {
     let gen_tokens = args.usize("gen-tokens", 16)?;
     let batching = GenBatching::parse(args.get_or("batching", "continuous"))?;
     let decode_slots = args.usize("slots", 0)?;
+    let queue_cap = args.usize("queue-cap", 0)?;
+    let shutdown_grace = std::time::Duration::from_millis(args.u64("shutdown-grace-ms", 5000)?);
     let kv_page = kv_page_cfg(args)?;
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
@@ -588,6 +590,8 @@ fn serve(args: &Args) -> Result<()> {
             kv_page,
             trace_out: trace_out.clone(),
             metrics_out: metrics_out.clone(),
+            queue_cap,
+            shutdown_grace,
             ..ServerConfig::default()
         },
     )?;
@@ -614,47 +618,71 @@ fn serve(args: &Args) -> Result<()> {
     // generation workload (--requests 0) still drains through the loop.
     let bursts = n_requests.div_ceil(burst.max(1)).max(1);
     let gen_share = gen_requests.div_ceil(bursts).max(1);
+    // Per-request failures (a worker died mid-batch, a deadline passed, the
+    // bounded queue shed the request) are counted instead of aborting the
+    // demo — the same loop doubles as the fault-injection smoke workload.
+    let mut rejected = 0usize;
+    let mut failed = 0usize;
     while sent < n_requests || gen_sent < gen_requests {
         for _ in 0..burst.max(1).min(n_requests - sent) {
             let row = &corpus.val[sent % corpus.val.len()];
-            pending.push(client.submit(row, None)?);
+            match client.submit(row, None) {
+                Ok(rx) => pending.push(rx),
+                Err(e) => {
+                    log::warn!("score submit shed: {e:#}");
+                    rejected += 1;
+                }
+            }
             sent += 1;
         }
         for _ in 0..gen_share.min(gen_requests - gen_sent) {
             let prompt = gen_prompts[gen_sent % gen_prompts.len()];
-            pending_gen.push(client.submit_generate(
-                prompt,
-                gen_tokens,
-                None,
-                gen_cfg.clone(),
-            )?);
+            match client.submit_generate(prompt, gen_tokens, None, gen_cfg.clone()) {
+                Ok(rx) => pending_gen.push(rx),
+                Err(e) => {
+                    log::warn!("generate submit shed: {e:#}");
+                    rejected += 1;
+                }
+            }
             gen_sent += 1;
         }
         // Drain this burst.
         for rx in pending.drain(..) {
-            let resp = rx
-                .recv()
-                .map_err(|_| anyhow!("server dropped request"))?
-                .map_err(|e| anyhow!(e))?;
-            log::debug!(
-                "nll {:.3} fmt {} batch {} depth {}",
-                resp.nll,
-                resp.format,
-                resp.batch_size,
-                resp.queue_depth
-            );
+            match rx.recv() {
+                Ok(Ok(resp)) => log::debug!(
+                    "nll {:.3} fmt {} batch {} depth {}",
+                    resp.nll,
+                    resp.format,
+                    resp.batch_size,
+                    resp.queue_depth
+                ),
+                Ok(Err(e)) => {
+                    log::warn!("score request failed: {e}");
+                    failed += 1;
+                }
+                Err(_) => {
+                    log::warn!("score request dropped by server");
+                    failed += 1;
+                }
+            }
         }
         for rx in pending_gen.drain(..) {
-            let resp = rx
-                .recv()
-                .map_err(|_| anyhow!("server dropped request"))?
-                .map_err(|e| anyhow!(e))?;
-            log::debug!(
-                "gen {:?} fmt {} batch {}",
-                resp.text,
-                resp.format,
-                resp.batch_size
-            );
+            match rx.recv() {
+                Ok(Ok(resp)) => log::debug!(
+                    "gen {:?} fmt {} batch {}",
+                    resp.text,
+                    resp.format,
+                    resp.batch_size
+                ),
+                Ok(Err(e)) => {
+                    log::warn!("generate request failed: {e}");
+                    failed += 1;
+                }
+                Err(_) => {
+                    log::warn!("generate request dropped by server");
+                    failed += 1;
+                }
+            }
         }
     }
     let elapsed = t0.elapsed().as_secs_f64();
@@ -667,6 +695,9 @@ fn serve(args: &Args) -> Result<()> {
     );
     println!("  {}", metrics.summary());
     println!("  format conversions performed: {}", metrics.conversions());
+    if rejected + failed > 0 {
+        println!("  degraded service: {rejected} shed at submit, {failed} failed in flight");
+    }
     drop(client);
     server.shutdown();
     if let Some(p) = &trace_out {

@@ -17,8 +17,8 @@
 //! events are counted as dropped rather than growing without bound.
 
 use crate::util::json::Json;
+use crate::util::sync::RobustMutex;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 /// One trace event (Chrome trace-event format).
@@ -44,7 +44,7 @@ pub struct TraceEvent {
 #[derive(Debug)]
 pub struct TraceSink {
     start: Instant,
-    events: Mutex<Vec<TraceEvent>>,
+    events: RobustMutex<Vec<TraceEvent>>,
     dropped: AtomicU64,
     cap: usize,
 }
@@ -60,7 +60,7 @@ impl TraceSink {
     pub fn new() -> TraceSink {
         TraceSink {
             start: Instant::now(),
-            events: Mutex::new(Vec::new()),
+            events: RobustMutex::new(Vec::new()),
             dropped: AtomicU64::new(0),
             cap: 1 << 20,
         }
@@ -77,7 +77,7 @@ impl TraceSink {
     }
 
     fn push(&self, ev: TraceEvent) {
-        let mut events = self.events.lock().unwrap();
+        let mut events = self.events.lock();
         if events.len() >= self.cap {
             self.dropped.fetch_add(1, Ordering::Relaxed);
             return;
@@ -121,7 +121,7 @@ impl TraceSink {
 
     /// Events recorded so far.
     pub fn len(&self) -> usize {
-        self.events.lock().unwrap().len()
+        self.events.lock().len()
     }
 
     /// Whether no events have been recorded.
@@ -139,7 +139,7 @@ impl TraceSink {
     /// Events are sorted by timestamp, and `'M'` metadata events name each
     /// worker track (`worker-N`) and row lane (`row-N`) for the viewer.
     pub fn to_json(&self) -> Json {
-        let mut events = self.events.lock().unwrap().clone();
+        let mut events = self.events.lock().clone();
         events.sort_by_key(|e| (e.ts_us, e.pid, e.tid));
         let mut arr: Vec<Json> = Vec::with_capacity(events.len() + 8);
         // Track-naming metadata first.

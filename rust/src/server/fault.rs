@@ -1,0 +1,200 @@
+//! Deterministic fault injection for the serving runtime.
+//!
+//! A [`FaultPlan`] arms a set of one-shot faults, each pinned to a worker
+//! and a decode-step number, so tests and smoke runs can reproduce the
+//! exact failure interleavings the supervisor must survive:
+//!
+//! * [`FaultKind::Panic`] — the worker thread panics mid-loop, exercising
+//!   `catch_unwind` supervision, fail-fast of its in-flight rows, KV-pool
+//!   reclamation and respawn;
+//! * [`FaultKind::Stall`] — the worker sleeps before a step, exercising
+//!   deadline expiry and cancellation while a decode is wedged;
+//! * [`FaultKind::ShrinkPages`] — the worker's KV page budget shrinks
+//!   mid-run, exercising memory-aware admission under a collapsing pool.
+//!
+//! Plans come from the `MFQAT_FAULT` environment variable (picked up by
+//! [`crate::server::ServerConfig`]'s `Default`) or are built
+//! programmatically in tests. The grammar is `;`-separated specs:
+//!
+//! ```text
+//! panic:worker=0,step=12;stall:worker=1,step=3,ms=50;shrink:worker=0,step=5,pages=4
+//! ```
+//!
+//! Workers poll the plan once per loop iteration with their cumulative
+//! step count; each spec fires **at most once** (an atomic flag), at the
+//! first poll whose step reaches its trigger. The poll is two relaxed
+//! atomic loads per armed spec and servers without a plan pay one `Option`
+//! check, so the hook is safe to leave compiled into release builds.
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What an armed fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic the worker thread (the supervisor must fail its in-flight
+    /// rows, reclaim its KV pages and respawn it).
+    Panic,
+    /// Sleep the worker for the given duration before its next step.
+    Stall(Duration),
+    /// Shrink the worker's KV page budget by the given number of pages
+    /// (never below what live rows are guaranteed).
+    ShrinkPages(usize),
+}
+
+/// One armed fault: fires on `worker` at the first poll whose cumulative
+/// step count reaches `step`, then never again.
+#[derive(Debug)]
+pub struct FaultSpec {
+    /// Worker index the fault targets.
+    pub worker: usize,
+    /// Cumulative loop-iteration count that triggers the fault (the
+    /// worker's counter starts at 1 on its first iteration).
+    pub step: u64,
+    /// What happens when it fires.
+    pub kind: FaultKind,
+    fired: AtomicBool,
+}
+
+/// A set of armed one-shot faults, shared read-only by every worker.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Plan from the `MFQAT_FAULT` environment variable; `None` when unset
+    /// or empty. A malformed value aborts loudly (a silently ignored fault
+    /// plan would make a CI fault leg vacuous) — panicking here is fine,
+    /// the server has not started yet.
+    pub fn from_env() -> Option<Arc<FaultPlan>> {
+        let raw = std::env::var("MFQAT_FAULT").ok()?;
+        if raw.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&raw) {
+            Ok(plan) => Some(Arc::new(plan)),
+            Err(e) => panic!("bad MFQAT_FAULT '{raw}': {e:#}"),
+        }
+    }
+
+    /// Parse the `;`-separated spec grammar (see the module docs).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut specs = Vec::new();
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind_name, rest) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("fault spec '{part}' wants '<kind>:<params>'"))?;
+            let mut worker = None;
+            let mut step = None;
+            let mut ms = None;
+            let mut pages = None;
+            for kv in rest.split(',') {
+                let (k, v) = kv
+                    .trim()
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("fault param '{kv}' wants 'key=value'"))?;
+                let n: u64 = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault param '{kv}' wants an integer value"))?;
+                match k.trim() {
+                    "worker" => worker = Some(n as usize),
+                    "step" => step = Some(n),
+                    "ms" => ms = Some(n),
+                    "pages" => pages = Some(n as usize),
+                    other => anyhow::bail!("unknown fault param '{other}' in '{part}'"),
+                }
+            }
+            let worker = worker.ok_or_else(|| anyhow::anyhow!("'{part}' wants worker=<n>"))?;
+            let step = step.ok_or_else(|| anyhow::anyhow!("'{part}' wants step=<n>"))?;
+            let kind = match kind_name.trim() {
+                "panic" => FaultKind::Panic,
+                "stall" => FaultKind::Stall(Duration::from_millis(
+                    ms.ok_or_else(|| anyhow::anyhow!("'{part}' wants ms=<n>"))?,
+                )),
+                "shrink" => FaultKind::ShrinkPages(
+                    pages.ok_or_else(|| anyhow::anyhow!("'{part}' wants pages=<n>"))?,
+                ),
+                other => anyhow::bail!("unknown fault kind '{other}' (panic|stall|shrink)"),
+            };
+            specs.push(FaultSpec { worker, step, kind, fired: AtomicBool::new(false) });
+        }
+        if specs.is_empty() {
+            anyhow::bail!("fault plan is empty");
+        }
+        Ok(FaultPlan { specs })
+    }
+
+    /// Plan with a single armed fault (test builder).
+    pub fn single(worker: usize, step: u64, kind: FaultKind) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            specs: vec![FaultSpec { worker, step, kind, fired: AtomicBool::new(false) }],
+        })
+    }
+
+    /// Armed specs (inspection/tests).
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    /// Called by worker `worker` with its cumulative loop-iteration count;
+    /// returns the kind of the first matching unfired spec (marking it
+    /// fired), or `None`. `>=` rather than `==` so a spec armed for a step
+    /// the counter skips (e.g. the worker respawned) still fires once.
+    pub fn poll(&self, worker: usize, step: u64) -> Option<FaultKind> {
+        for spec in &self.specs {
+            if spec.worker == worker
+                && step >= spec.step
+                && !spec.fired.swap(true, Ordering::AcqRel)
+            {
+                return Some(spec.kind);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let spec = "panic:worker=0,step=12;stall:worker=1,step=3,ms=50;\
+                    shrink:worker=0,step=5,pages=4";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.specs().len(), 3);
+        assert_eq!(plan.specs()[0].kind, FaultKind::Panic);
+        assert_eq!(plan.specs()[1].kind, FaultKind::Stall(Duration::from_millis(50)));
+        assert_eq!(plan.specs()[2].kind, FaultKind::ShrinkPages(4));
+        assert_eq!(plan.specs()[1].worker, 1);
+        assert_eq!(plan.specs()[2].step, 5);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("panic").is_err());
+        assert!(FaultPlan::parse("panic:worker=0").is_err(), "missing step");
+        assert!(FaultPlan::parse("stall:worker=0,step=1").is_err(), "missing ms");
+        assert!(FaultPlan::parse("shrink:worker=0,step=1").is_err(), "missing pages");
+        assert!(FaultPlan::parse("explode:worker=0,step=1").is_err());
+        assert!(FaultPlan::parse("panic:worker=a,step=1").is_err());
+    }
+
+    #[test]
+    fn faults_fire_once_at_or_after_their_step() {
+        let plan = FaultPlan::single(0, 5, FaultKind::Panic);
+        assert_eq!(plan.poll(1, 10), None, "wrong worker");
+        assert_eq!(plan.poll(0, 4), None, "too early");
+        assert_eq!(plan.poll(0, 7), Some(FaultKind::Panic), "fires late too");
+        assert_eq!(plan.poll(0, 8), None, "one-shot");
+    }
+}

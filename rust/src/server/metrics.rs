@@ -23,10 +23,11 @@ use crate::formats::ElementFormat;
 use crate::obs::{AtomicRunning, Counter, Gauge, Hist, Metric, Registry, TraceSink};
 use crate::util::json::Json;
 use crate::util::stats::{LatencyHist, Running};
+use crate::util::sync::RobustMutex;
 use crate::util::timer::fmt_time;
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Aggregated server metrics: a point-in-time snapshot of the pool
 /// (produced by [`ServerObs::snapshot`]; also usable standalone as a plain
@@ -86,6 +87,20 @@ pub struct Metrics {
     pub downshifts: u64,
     /// Per-row overflow re-prefills inside the continuous decode.
     pub reprefills: u64,
+    /// Requests turned away at the bounded ingress queue (backpressure's
+    /// last tier — the client saw `Rejected { retry_after }`).
+    pub rejections: u64,
+    /// Requests retired early because their cancel token fired.
+    pub cancellations: u64,
+    /// Requests retired early because their deadline expired (at admission
+    /// or mid-decode).
+    pub deadline_misses: u64,
+    /// Worker bodies that panicked and were caught by the supervisor.
+    pub worker_panics: u64,
+    /// Supervisor respawns: crashed workers restarted with a fresh decode
+    /// session (always `<= worker_panics`; the difference died during
+    /// shutdown).
+    pub worker_restarts: u64,
 }
 
 impl Metrics {
@@ -201,6 +216,23 @@ impl Metrics {
         } else {
             String::new()
         };
+        let faults = if self.rejections
+            + self.cancellations
+            + self.deadline_misses
+            + self.worker_panics
+            > 0
+        {
+            format!(
+                " faults[reject:{} cancel:{} deadline:{} panic:{} restart:{}]",
+                self.rejections,
+                self.cancellations,
+                self.deadline_misses,
+                self.worker_panics,
+                self.worker_restarts,
+            )
+        } else {
+            String::new()
+        };
         let kv = if self.kv.total_pages > 0 {
             format!(
                 " kv[resident:{}KB peak:{}KB dense:{}KB util:{:.0}% page:{}]",
@@ -214,7 +246,7 @@ impl Metrics {
             String::new()
         };
         format!(
-            "workers={} requests={} latency[{}] mean_batch={:.2}{}{} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]{}",
+            "workers={} requests={} latency[{}] mean_batch={:.2}{}{} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]{}{}",
             self.workers.max(1),
             self.requests,
             self.latency.summary(),
@@ -227,6 +259,7 @@ impl Metrics {
             self.cache.evictions,
             self.cache.used_bytes / 1024,
             kv,
+            faults,
         )
     }
 }
@@ -290,6 +323,11 @@ pub struct ServerObs {
     deferrals: Arc<Counter>,
     downshifts: Arc<Counter>,
     reprefills: Arc<Counter>,
+    rejections: Arc<Counter>,
+    cancellations: Arc<Counter>,
+    deadline_misses: Arc<Counter>,
+    worker_panics: Arc<Counter>,
+    worker_restarts: Arc<Counter>,
     latency: Arc<Hist>,
     gen_latency: Arc<Hist>,
     queue_wait: Arc<Hist>,
@@ -306,7 +344,7 @@ pub struct ServerObs {
     kv_pool_peak: Arc<Gauge>,
     kv_workers: Vec<KvWorkerGauges>,
     trace: Option<Arc<TraceSink>>,
-    series: Mutex<Vec<SeriesSample>>,
+    series: RobustMutex<Vec<SeriesSample>>,
     started: Instant,
 }
 
@@ -339,6 +377,11 @@ impl ServerObs {
             deferrals: registry.counter("deferrals"),
             downshifts: registry.counter("downshifts"),
             reprefills: registry.counter("reprefills"),
+            rejections: registry.counter("rejections"),
+            cancellations: registry.counter("cancellations"),
+            deadline_misses: registry.counter("deadline_misses"),
+            worker_panics: registry.counter("worker_panics"),
+            worker_restarts: registry.counter("worker_restarts"),
             latency: registry.hist("latency_seconds"),
             gen_latency: registry.hist("gen_latency_seconds"),
             queue_wait: registry.hist("queue_wait_seconds"),
@@ -355,7 +398,7 @@ impl ServerObs {
             kv_pool_peak: registry.gauge("kv_pool_resident_peak_bytes"),
             kv_workers,
             trace: trace.then(|| Arc::new(TraceSink::new())),
-            series: Mutex::new(Vec::new()),
+            series: RobustMutex::new(Vec::new()),
             started: Instant::now(),
             registry,
         };
@@ -425,6 +468,47 @@ impl ServerObs {
     /// Count one per-row overflow re-prefill.
     pub fn record_reprefill(&self) {
         self.reprefills.inc();
+    }
+
+    /// Count one request turned away at the bounded ingress queue.
+    pub fn record_rejection(&self) {
+        self.rejections.inc();
+    }
+
+    /// Count one request retired because its cancel token fired.
+    pub fn record_cancellation(&self) {
+        self.cancellations.inc();
+    }
+
+    /// Count one request retired because its deadline expired.
+    pub fn record_deadline_miss(&self) {
+        self.deadline_misses.inc();
+    }
+
+    /// Count one worker panic caught by the supervisor.
+    pub fn record_worker_panic(&self) {
+        self.worker_panics.inc();
+    }
+
+    /// Count one supervisor respawn of a crashed worker.
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.inc();
+    }
+
+    /// Crude retry-after hint for a rejected request: roughly one queue's
+    /// worth of work at recently observed batch execution speeds, spread
+    /// over the worker pool, clamped to `[5ms, 2s]`. Reads only atomics —
+    /// safe on the rejection fast path.
+    pub fn retry_after_hint(&self, queue_depth: usize) -> Duration {
+        let score = self.exec_time.snapshot();
+        let gen = self.gen_exec_time.snapshot();
+        let mut per_batch = score.mean().max(gen.mean());
+        if per_batch <= 0.0 || !per_batch.is_finite() {
+            per_batch = 0.01; // nothing executed yet: assume 10ms batches
+        }
+        let workers = (self.workers.get() as usize).max(1);
+        let secs = per_batch * (queue_depth as f64 + 1.0) / workers as f64;
+        Duration::from_secs_f64(secs.clamp(0.005, 2.0))
     }
 
     /// TTFT / inter-token histogram handles for `fmt` — workers cache the
@@ -547,6 +631,11 @@ impl ServerObs {
             deferrals: self.deferrals.get(),
             downshifts: self.downshifts.get(),
             reprefills: self.reprefills.get(),
+            rejections: self.rejections.get(),
+            cancellations: self.cancellations.get(),
+            deadline_misses: self.deadline_misses.get(),
+            worker_panics: self.worker_panics.get(),
+            worker_restarts: self.worker_restarts.get(),
         }
     }
 
@@ -566,7 +655,7 @@ impl ServerObs {
             requests: self.requests.get(),
             gen_tokens: self.gen_tokens.get(),
         };
-        let mut series = self.series.lock().unwrap();
+        let mut series = self.series.lock();
         if series.len() >= SERIES_CAP {
             series.remove(0);
         }
@@ -590,7 +679,6 @@ impl ServerObs {
         let series: Vec<Json> = self
             .series
             .lock()
-            .unwrap()
             .iter()
             .map(|s| {
                 let mut o = Json::obj();
@@ -823,6 +911,42 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests=2"), "{s}");
         assert!(s.contains("exec[score mean:"), "{s}");
+    }
+
+    #[test]
+    fn fault_counters_flow_into_snapshot_and_summary() {
+        let obs = ServerObs::new(2, false);
+        obs.record_rejection();
+        obs.record_cancellation();
+        obs.record_cancellation();
+        obs.record_deadline_miss();
+        obs.record_worker_panic();
+        obs.record_worker_restart();
+        let m = obs.snapshot();
+        assert_eq!(m.rejections, 1);
+        assert_eq!(m.cancellations, 2);
+        assert_eq!(m.deadline_misses, 1);
+        assert_eq!(m.worker_panics, 1);
+        assert_eq!(m.worker_restarts, 1);
+        let s = m.summary();
+        let want = "faults[reject:1 cancel:2 deadline:1 panic:1 restart:1]";
+        assert!(s.contains(want), "{s}");
+        // A clean run prints no fault section.
+        assert!(!Metrics::new().summary().contains("faults["));
+    }
+
+    #[test]
+    fn retry_after_scales_with_depth_and_clamps() {
+        let obs = ServerObs::new(2, false);
+        let bounds = Duration::from_millis(5)..=Duration::from_secs(2);
+        // Nothing executed yet: the hint still lands inside the clamp.
+        assert!(bounds.contains(&obs.retry_after_hint(0)));
+        obs.record_score(ElementFormat::int(8), 0.020, 4, 0.020);
+        let shallow = obs.retry_after_hint(1);
+        let deep = obs.retry_after_hint(1_000_000);
+        assert!(deep >= shallow);
+        assert_eq!(deep, Duration::from_secs(2), "clamped at 2s");
+        assert!(bounds.contains(&shallow));
     }
 
     #[test]

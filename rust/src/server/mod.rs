@@ -40,26 +40,132 @@
 //! periodic JSON + Prometheus snapshot written by a sampler thread;
 //! [`Server::metrics`] / [`Client::metrics_snapshot`] expose the same state
 //! as a point-in-time [`Metrics`] view.
+//!
+//! **Fault tolerance.** Requests carry an optional deadline and a
+//! [`CancelToken`] ([`SubmitOpts`], [`Client::cancel`]); both are enforced
+//! at admission *and* per decode step, so a cancelled or expired row
+//! retires mid-flight and returns its KV pages immediately. Admission is
+//! backpressured: with [`ServerConfig::queue_cap`] set, requests beyond
+//! the bound are turned away with a typed [`Rejected`] error carrying a
+//! retry hint, after the cheaper tiers of the degradation ladder
+//! ([`policy::ShedTier`]: format downshift, then deferral) have done what
+//! they can. Worker bodies run under a supervisor
+//! (`catch_unwind`): a panicking worker fails its in-flight rows fast
+//! (clients get an error, never a hang), drops its decode session — which
+//! returns every KV page — and is respawned with a fresh session while
+//! the rest of the pool keeps serving. [`Server::shutdown`] drains with a
+//! deadline ([`ServerConfig::shutdown_grace`]). The [`fault`] module's
+//! injection harness (`MFQAT_FAULT` / [`ServerConfig::faults`]) drives
+//! deterministic panics, stalls and KV-budget shrinks for tests.
 
 pub mod costmodel;
+pub mod fault;
 pub mod metrics;
 pub mod policy;
 
 pub use costmodel::HwModel;
+pub use fault::{FaultKind, FaultPlan};
 pub use metrics::{FormatSpanHists, Metrics, ServerObs};
-pub use policy::{Policy, SloState};
+pub use policy::{Policy, ShedTier, SloState};
 
 use crate::backend::DecodeSession;
 use crate::coordinator::ElasticEngine;
 use crate::eval::generate::{RowStepKind, SampleCfg};
 use crate::formats::ElementFormat;
 use crate::util::json::Json;
+use crate::util::sync::RobustMutex;
 use anyhow::Result;
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
+
+/// Cooperative cancellation handle for one (or several) requests.
+///
+/// Cheap to clone; every clone observes the same flag. The server checks
+/// the token at admission and once per decode step, so a cancelled row
+/// frees its slot and KV pages within one step.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, uncancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Flip the flag; every request carrying this token retires with a
+    /// `"cancelled"` error at its next admission / step check.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    /// Whether [`CancelToken::cancel`] has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+
+    fn weak(&self) -> Weak<AtomicBool> {
+        Arc::downgrade(&self.0)
+    }
+}
+
+/// Per-request submission options (deadline + cancellation).
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOpts {
+    /// Complete within this budget or fail with `"deadline exceeded"` —
+    /// enforced at admission and per decode step. `None` = no deadline.
+    pub deadline: Option<Duration>,
+    /// Attach an external cancel token (one token may gate several
+    /// requests). `None` = a fresh token, returned in [`Pending`].
+    pub cancel: Option<CancelToken>,
+}
+
+/// An accepted, in-flight submission: the response channel plus the
+/// cancellation handles ([`Pending::cancel`] directly, or
+/// [`Client::cancel`] with [`Pending::id`]).
+pub struct Pending<T> {
+    /// Request id, usable with [`Client::cancel`].
+    pub id: u64,
+    /// The cancel token attached to the request.
+    pub cancel: CancelToken,
+    /// Response channel (delivers exactly one result).
+    pub rx: Receiver<std::result::Result<T, String>>,
+}
+
+impl<T> Pending<T> {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<T> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped the request"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+/// Typed backpressure error: the bounded ingress queue
+/// ([`ServerConfig::queue_cap`]) is full and the request was not enqueued.
+/// Surfaced through `anyhow` — `err.downcast_ref::<Rejected>()` recovers
+/// the retry hint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rejected {
+    /// Suggested client-side wait before retrying: roughly one queue's
+    /// worth of work at recently observed execution speeds.
+    pub retry_after: Duration,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "server over capacity; retry after {:.0}ms",
+            self.retry_after.as_secs_f64() * 1e3
+        )
+    }
+}
+
+impl std::error::Error for Rejected {}
 
 /// A scoring request: one token window of width `seq_len + 1` (shorter
 /// windows are right-padded by the caller). `format` pins a precision;
@@ -73,6 +179,11 @@ pub struct ScoreRequest {
     pub respond: Sender<Result<ScoreResponse, String>>,
     /// Enqueue timestamp (latency accounting).
     pub enqueued: Instant,
+    /// Optional completion deadline; past it the request fails with
+    /// `"deadline exceeded"` instead of executing.
+    pub deadline: Option<Instant>,
+    /// Cooperative cancel token (checked before execution).
+    pub cancel: CancelToken,
 }
 
 /// The scoring response: per-sequence mean NLL plus serving telemetry.
@@ -109,6 +220,12 @@ pub struct GenerateRequest {
     pub respond: Sender<Result<GenerateResponse, String>>,
     /// Enqueue timestamp (latency accounting).
     pub enqueued: Instant,
+    /// Optional completion deadline; past it the request fails with
+    /// `"deadline exceeded"` — at admission or mid-decode (the row is
+    /// cancelled and its KV pages return immediately).
+    pub deadline: Option<Instant>,
+    /// Cooperative cancel token (checked at admission and per step).
+    pub cancel: CancelToken,
 }
 
 /// The generation response: continuation text plus serving telemetry.
@@ -209,6 +326,19 @@ pub struct ServerConfig {
     /// counter time-series points, and [`ServerConfig::metrics_out`]
     /// rewrites.
     pub metrics_every: Duration,
+    /// Bounded ingress queue: submissions beyond this many pending
+    /// requests are turned away with [`Rejected`] (the shed ladder's last
+    /// tier). `0` = unbounded (default).
+    pub queue_cap: usize,
+    /// Grace budget for [`Server::shutdown`]: in-flight rows and queued
+    /// requests may finish within it; past it live rows are failed fast
+    /// so shutdown never waits out a client-controlled token budget.
+    pub shutdown_grace: Duration,
+    /// Deterministic fault-injection plan for tests
+    /// ([`fault::FaultPlan`]). Defaults from the `MFQAT_FAULT`
+    /// environment variable; `None` (the production case) injects
+    /// nothing.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServerConfig {
@@ -224,7 +354,65 @@ impl Default for ServerConfig {
             trace_out: None,
             metrics_out: None,
             metrics_every: Duration::from_millis(250),
+            queue_cap: 0,
+            shutdown_grace: Duration::from_secs(5),
+            faults: FaultPlan::from_env(),
         }
+    }
+}
+
+/// Server lifecycle state machine shared by clients and workers:
+/// `RUNNING` (accepting) → `DRAINING` (shutdown requested; in-flight and
+/// queued work may finish until the drain deadline) → `HALTED`.
+struct Lifecycle {
+    state: AtomicU8,
+    drain_deadline: RobustMutex<Option<Instant>>,
+}
+
+const RUNNING: u8 = 0;
+const DRAINING: u8 = 1;
+const HALTED: u8 = 2;
+
+impl Lifecycle {
+    fn new() -> Lifecycle {
+        Lifecycle {
+            state: AtomicU8::new(RUNNING),
+            drain_deadline: RobustMutex::new(None),
+        }
+    }
+
+    /// Clients may enqueue; idle workers keep waiting for work.
+    fn accepting(&self) -> bool {
+        self.state.load(Ordering::Acquire) == RUNNING
+    }
+
+    /// Shutdown requested: stop accepting, give in-flight + queued work
+    /// until `grace` from now.
+    fn begin_drain(&self, grace: Duration) {
+        *self.drain_deadline.lock() = Some(Instant::now() + grace);
+        self.state.store(DRAINING, Ordering::Release);
+    }
+
+    fn halt(&self) {
+        self.state.store(HALTED, Ordering::Release);
+    }
+
+    /// Busy workers fail their remaining rows fast once this is true.
+    fn drain_expired(&self) -> bool {
+        match self.state.load(Ordering::Acquire) {
+            RUNNING => false,
+            DRAINING => match *self.drain_deadline.lock() {
+                Some(d) => Instant::now() >= d,
+                None => false,
+            },
+            _ => true,
+        }
+    }
+
+    /// Whether a crashed worker should be respawned (not during
+    /// shutdown — its remaining work is failed instead).
+    fn should_respawn(&self) -> bool {
+        self.state.load(Ordering::Acquire) == RUNNING
     }
 }
 
@@ -236,7 +424,11 @@ pub struct Server {
     workers: Vec<std::thread::JoinHandle<()>>,
     sampler: Option<std::thread::JoinHandle<()>>,
     sampler_tx: Option<Sender<()>>,
-    alive: Arc<AtomicBool>,
+    lifecycle: Arc<Lifecycle>,
+    /// Kept so shutdown can fail requests stranded in the queue after the
+    /// workers have exited (a submit racing shutdown must not hang its
+    /// client).
+    queue: Arc<RobustMutex<Receiver<Request>>>,
     stopped: bool,
 }
 
@@ -247,19 +439,35 @@ pub struct Client {
     width: usize,
     depth: Arc<AtomicUsize>,
     obs: Arc<ServerObs>,
-    /// Cleared on shutdown — a live client must not enqueue into a queue
+    /// Shared lifecycle — a live client must not enqueue into a queue
     /// nobody drains (its own `tx` clone keeps the channel open).
-    alive: Arc<AtomicBool>,
+    lifecycle: Arc<Lifecycle>,
+    /// Bounded-queue backpressure threshold (`0` = unbounded).
+    queue_cap: usize,
+    next_id: Arc<AtomicU64>,
+    /// Request id → cancel flag, for [`Client::cancel`]. Weak entries die
+    /// with their request and are pruned on insert past a threshold.
+    cancels: Arc<RobustMutex<HashMap<u64, Weak<AtomicBool>>>>,
 }
+
+/// Prune the cancel registry once it holds this many entries.
+const CANCEL_PRUNE_AT: usize = 1024;
 
 impl Client {
     /// Submit a scoring request and wait. `tokens` is truncated /
     /// right-padded to the window.
     pub fn score(&self, tokens: &[i32], format: Option<ElementFormat>) -> Result<ScoreResponse> {
-        let rx = self.submit(tokens, format)?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("server dropped the request"))?
-            .map_err(|e| anyhow::anyhow!(e))
+        self.submit_opts(tokens, format, &SubmitOpts::default())?.wait()
+    }
+
+    /// [`Client::score`] with a deadline / cancel token attached.
+    pub fn score_opts(
+        &self,
+        tokens: &[i32],
+        format: Option<ElementFormat>,
+        opts: &SubmitOpts,
+    ) -> Result<ScoreResponse> {
+        self.submit_opts(tokens, format, opts)?.wait()
     }
 
     /// Submit a scoring request without waiting; returns the response
@@ -269,17 +477,31 @@ impl Client {
         tokens: &[i32],
         format: Option<ElementFormat>,
     ) -> Result<Receiver<Result<ScoreResponse, String>>> {
+        Ok(self.submit_opts(tokens, format, &SubmitOpts::default())?.rx)
+    }
+
+    /// Submit a scoring request with options; returns the in-flight
+    /// handle (response channel + cancellation).
+    pub fn submit_opts(
+        &self,
+        tokens: &[i32],
+        format: Option<ElementFormat>,
+        opts: &SubmitOpts,
+    ) -> Result<Pending<ScoreResponse>> {
         let mut t = tokens.to_vec();
         t.truncate(self.width);
         t.resize(self.width, crate::data::PAD as i32);
         let (tx, rx) = mpsc::channel();
+        let (id, cancel) = self.register(opts);
         self.send(Request::Score(ScoreRequest {
             tokens: t,
             format,
             respond: tx,
             enqueued: Instant::now(),
+            deadline: opts.deadline.map(|d| Instant::now() + d),
+            cancel: cancel.clone(),
         }))?;
-        Ok(rx)
+        Ok(Pending { id, cancel, rx })
     }
 
     /// Submit a generation request and wait.
@@ -290,10 +512,20 @@ impl Client {
         format: Option<ElementFormat>,
         cfg: SampleCfg,
     ) -> Result<GenerateResponse> {
-        let rx = self.submit_generate(prompt, n_tokens, format, cfg)?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("server dropped the request"))?
-            .map_err(|e| anyhow::anyhow!(e))
+        self.submit_generate_opts(prompt, n_tokens, format, cfg, &SubmitOpts::default())?
+            .wait()
+    }
+
+    /// [`Client::generate`] with a deadline / cancel token attached.
+    pub fn generate_opts(
+        &self,
+        prompt: &str,
+        n_tokens: usize,
+        format: Option<ElementFormat>,
+        cfg: SampleCfg,
+        opts: &SubmitOpts,
+    ) -> Result<GenerateResponse> {
+        self.submit_generate_opts(prompt, n_tokens, format, cfg, opts)?.wait()
     }
 
     /// Submit a generation request without waiting; returns the response
@@ -305,7 +537,23 @@ impl Client {
         format: Option<ElementFormat>,
         cfg: SampleCfg,
     ) -> Result<Receiver<Result<GenerateResponse, String>>> {
+        Ok(self
+            .submit_generate_opts(prompt, n_tokens, format, cfg, &SubmitOpts::default())?
+            .rx)
+    }
+
+    /// Submit a generation request with options; returns the in-flight
+    /// handle (response channel + cancellation).
+    pub fn submit_generate_opts(
+        &self,
+        prompt: &str,
+        n_tokens: usize,
+        format: Option<ElementFormat>,
+        cfg: SampleCfg,
+        opts: &SubmitOpts,
+    ) -> Result<Pending<GenerateResponse>> {
         let (tx, rx) = mpsc::channel();
+        let (id, cancel) = self.register(opts);
         self.send(Request::Generate(GenerateRequest {
             prompt: prompt.to_string(),
             n_tokens,
@@ -313,8 +561,26 @@ impl Client {
             cfg,
             respond: tx,
             enqueued: Instant::now(),
+            deadline: opts.deadline.map(|d| Instant::now() + d),
+            cancel: cancel.clone(),
         }))?;
-        Ok(rx)
+        Ok(Pending { id, cancel, rx })
+    }
+
+    /// Cancel an in-flight request by id (from [`Pending::id`]). Returns
+    /// `true` if the request's token was still live and has been flipped;
+    /// `false` if the request already completed. The request itself
+    /// responds with a `"cancelled"` error at its next admission / step
+    /// check.
+    pub fn cancel(&self, id: u64) -> bool {
+        let flag = self.cancels.lock().get(&id).and_then(Weak::upgrade);
+        match flag {
+            Some(f) => {
+                f.store(true, Ordering::Release);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Point-in-time snapshot of the pool's serving metrics — request
@@ -324,9 +590,30 @@ impl Client {
         self.obs.snapshot()
     }
 
+    /// Allocate a request id and its cancel token (caller-provided or
+    /// fresh), and register the token for [`Client::cancel`].
+    fn register(&self, opts: &SubmitOpts) -> (u64, CancelToken) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let token = opts.cancel.clone().unwrap_or_default();
+        let mut map = self.cancels.lock();
+        if map.len() >= CANCEL_PRUNE_AT {
+            map.retain(|_, w| w.strong_count() > 0);
+        }
+        map.insert(id, token.weak());
+        (id, token)
+    }
+
     fn send(&self, req: Request) -> Result<()> {
-        if !self.alive.load(Ordering::Acquire) {
+        if !self.lifecycle.accepting() {
             anyhow::bail!("server is shut down");
+        }
+        if self.queue_cap > 0 {
+            let d = self.depth.load(Ordering::Acquire);
+            if d >= self.queue_cap {
+                self.obs.record_rejection();
+                let retry_after = self.obs.retry_after_hint(d);
+                return Err(anyhow::Error::new(Rejected { retry_after }));
+            }
         }
         self.depth.fetch_add(1, Ordering::AcqRel);
         self.tx.send(req).map_err(|_| {
@@ -365,12 +652,12 @@ impl Server {
             anyhow::bail!("server wants at least one worker (got workers=0)");
         }
         let (tx, rx) = mpsc::channel::<Request>();
-        let queue = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(RobustMutex::new(rx));
         let trace = config.trace || config.trace_out.is_some();
         let obs = Arc::new(ServerObs::new(config.workers, trace));
         let depth = Arc::new(AtomicUsize::new(0));
-        let alive = Arc::new(AtomicBool::new(true));
-        let slo = Arc::new(Mutex::new(SloState::default()));
+        let lifecycle = Arc::new(Lifecycle::new());
+        let slo = Arc::new(RobustMutex::new(SloState::default()));
         let mut workers = Vec::with_capacity(config.workers);
 
         // Worker 0 builds the engine and hands an Arc back for the rest of
@@ -378,11 +665,11 @@ impl Server {
         type Ready = std::result::Result<Arc<ElasticEngine>, String>;
         let (ready_tx, ready_rx) = mpsc::channel::<Ready>();
         {
-            let (queue, obs, depth, alive, slo, config) = (
+            let (queue, obs, depth, lifecycle, slo, config) = (
                 queue.clone(),
                 obs.clone(),
                 depth.clone(),
-                alive.clone(),
+                lifecycle.clone(),
                 slo.clone(),
                 config.clone(),
             );
@@ -398,11 +685,13 @@ impl Server {
                             }
                             Err(e) => {
                                 let _ = ready_tx.send(Err(format!("{e:#}")));
-                                alive.store(false, Ordering::Release);
+                                lifecycle.halt();
                                 return;
                             }
                         };
-                        worker_loop(0, &engine, &config, &queue, &obs, &depth, &alive, &slo);
+                        supervised_worker(
+                            0, &engine, &config, &queue, &obs, &depth, &lifecycle, &slo,
+                        );
                     })
                     .expect("spawn server worker"),
             );
@@ -413,11 +702,11 @@ impl Server {
             .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
         for i in 1..config.workers {
             let engine = engine.clone();
-            let (queue, obs, depth, alive, slo, config) = (
+            let (queue, obs, depth, lifecycle, slo, config) = (
                 queue.clone(),
                 obs.clone(),
                 depth.clone(),
-                alive.clone(),
+                lifecycle.clone(),
                 slo.clone(),
                 config.clone(),
             );
@@ -425,7 +714,9 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("mfqat-worker-{i}"))
                     .spawn(move || {
-                        worker_loop(i, &engine, &config, &queue, &obs, &depth, &alive, &slo);
+                        supervised_worker(
+                            i, &engine, &config, &queue, &obs, &depth, &lifecycle, &slo,
+                        );
                     })
                     .expect("spawn server worker"),
             );
@@ -456,7 +747,10 @@ impl Server {
             width,
             depth,
             obs: obs.clone(),
-            alive: alive.clone(),
+            lifecycle: lifecycle.clone(),
+            queue_cap: config.queue_cap,
+            next_id: Arc::new(AtomicU64::new(1)),
+            cancels: Arc::new(RobustMutex::new(HashMap::new())),
         };
         Ok((
             Server {
@@ -466,7 +760,8 @@ impl Server {
                 workers,
                 sampler: Some(sampler),
                 sampler_tx: Some(sampler_tx),
-                alive,
+                lifecycle,
+                queue,
                 stopped: false,
             },
             client,
@@ -484,7 +779,10 @@ impl Server {
         self.obs.clone()
     }
 
-    /// Graceful shutdown: close the queue and join the pool.
+    /// Graceful shutdown: stop accepting, drain in-flight and queued work
+    /// within [`ServerConfig::shutdown_grace`], then join the pool.
+    /// Requests that cannot finish inside the grace budget are failed
+    /// fast — no client is left hanging — and the sampler always stops.
     pub fn shutdown(mut self) {
         self.stop();
     }
@@ -494,12 +792,24 @@ impl Server {
             return;
         }
         self.stopped = true;
-        // Mark dead first so live clients stop enqueueing (their tx clones
-        // keep the channel open), then drop our sender and join.
-        self.alive.store(false, Ordering::Release);
+        // Stop accepting first (live clients' tx clones keep the channel
+        // open), give workers the grace budget, then drop our sender and
+        // join. Workers exit when idle with an empty queue, or fail their
+        // remaining rows once the drain deadline passes.
+        self.lifecycle.begin_drain(self.config.shutdown_grace);
         drop(std::mem::replace(&mut self.tx, mpsc::channel().0));
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        self.lifecycle.halt();
+        // Fail anything stranded in the queue (a submit that raced past
+        // the accepting() check into a queue nobody drains anymore) —
+        // its client would otherwise block forever.
+        {
+            let rx = self.queue.lock();
+            while let Ok(req) = rx.try_recv() {
+                fail_request(req, "server is shut down");
+            }
         }
         self.sampler_tx.take();
         if let Some(s) = self.sampler.take() {
@@ -526,18 +836,48 @@ impl Drop for Server {
     }
 }
 
+/// Fail one queued request with `msg`, either lane.
+fn fail_request(req: Request, msg: &str) {
+    match req {
+        Request::Score(r) => {
+            let _ = r.respond.send(Err(msg.to_string()));
+        }
+        Request::Generate(r) => {
+            let _ = r.respond.send(Err(msg.to_string()));
+        }
+    }
+}
+
+/// `true` when `deadline` is set and has passed.
+fn expired(deadline: Option<Instant>) -> bool {
+    deadline.is_some_and(|d| Instant::now() >= d)
+}
+
+/// Human-readable panic payload (`&str` / `String` payloads; the common
+/// cases for `panic!` and `assert!`).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
 /// Gathered batch: at most `cap` requests, first one waited for (poll loop
 /// honours shutdown), the rest collected inside the gather window. Anything
 /// beyond `cap` stays queued for the other workers. Returns `None` on
-/// shutdown/disconnect.
+/// shutdown/disconnect — during a drain the worker keeps serving whatever
+/// is still queued and only exits once the queue runs empty.
 fn gather(
-    queue: &Mutex<Receiver<Request>>,
+    queue: &RobustMutex<Receiver<Request>>,
     cap: usize,
     window: Duration,
-    alive: &AtomicBool,
+    lifecycle: &Lifecycle,
 ) -> Option<Vec<Request>> {
     let mut batch = Vec::new();
-    let rx = queue.lock().unwrap();
+    let rx = queue.lock();
     loop {
         match rx.recv_timeout(Duration::from_millis(50)) {
             Ok(r) => {
@@ -545,10 +885,10 @@ fn gather(
                 break;
             }
             Err(RecvTimeoutError::Timeout) => {
-                if alive.load(Ordering::Acquire) {
+                if lifecycle.accepting() {
                     continue;
                 }
-                return None; // shutdown requested
+                return None; // draining with an empty queue, or halted
             }
             Err(RecvTimeoutError::Disconnected) => return None, // all senders gone
         }
@@ -579,9 +919,9 @@ fn gather(
 /// queue lock only if it is free (an idle worker may be blocked inside
 /// [`gather`] holding it — it will pick those requests up itself) and pop
 /// whatever is already queued, up to `cap`.
-fn drain_ready(queue: &Mutex<Receiver<Request>>, cap: usize) -> Vec<Request> {
+fn drain_ready(queue: &RobustMutex<Receiver<Request>>, cap: usize) -> Vec<Request> {
     let mut batch = Vec::new();
-    if let Ok(rx) = queue.try_lock() {
+    if let Some(rx) = queue.try_lock() {
         while batch.len() < cap {
             match rx.try_recv() {
                 Ok(r) => batch.push(r),
@@ -626,7 +966,7 @@ fn execute_score_group(
     engine: &ElasticEngine,
     config: &ServerConfig,
     obs: &ServerObs,
-    slo: &Mutex<SloState>,
+    slo: &RobustMutex<SloState>,
     queue_depth: usize,
     fmt: ElementFormat,
     group: Vec<ScoreRequest>,
@@ -641,7 +981,7 @@ fn execute_score_group(
     }
     let result = engine.score_batch(&flat, fmt);
     let elapsed = t0.elapsed();
-    slo.lock().unwrap().observe(&config.policy, elapsed.as_secs_f64());
+    slo.lock().observe(&config.policy, elapsed.as_secs_f64());
     if let Some(sink) = obs.trace() {
         sink.complete(
             "score_batch",
@@ -692,7 +1032,7 @@ fn execute_gen_group(
     engine: &ElasticEngine,
     config: &ServerConfig,
     obs: &ServerObs,
-    slo: &Mutex<SloState>,
+    slo: &RobustMutex<SloState>,
     queue_depth: usize,
     fmt: ElementFormat,
     n_tokens: usize,
@@ -711,7 +1051,6 @@ fn execute_gen_group(
     // blow the EWMA past any scoring-scale target and pin the ladder at
     // the bottom rung.
     slo.lock()
-        .unwrap()
         .observe(&config.policy, elapsed.as_secs_f64() / n_tokens.max(1) as f64);
     if let Some(sink) = obs.trace() {
         sink.complete(
@@ -762,16 +1101,85 @@ fn execute_gen_group(
     }
 }
 
+/// Retire cancelled / expired requests from a freshly drained score list
+/// before execution.
+fn reap_scores(scores: &mut Vec<ScoreRequest>, obs: &ServerObs) {
+    scores.retain(|r| {
+        if r.cancel.is_cancelled() {
+            obs.record_cancellation();
+            let _ = r.respond.send(Err("cancelled".to_string()));
+            false
+        } else if expired(r.deadline) {
+            obs.record_deadline_miss();
+            let _ = r.respond.send(Err("deadline exceeded".to_string()));
+            false
+        } else {
+            true
+        }
+    });
+}
+
+/// Supervisor wrapper around one worker thread: the worker body runs
+/// under `catch_unwind`. A panic fails the in-flight rows fast — the
+/// ledger lives out here, beyond the unwind boundary, so their clients
+/// get a `"worker N panicked"` error instead of a hang — and drops the
+/// decode session, returning every KV page to a pool that dies with it.
+/// Unless the server is shutting down, the body is then respawned with a
+/// fresh session; backlogged (accepted but never admitted) requests
+/// survive the crash and are served by the new incarnation.
+#[allow(clippy::too_many_arguments)]
+fn supervised_worker(
+    worker: usize,
+    engine: &ElasticEngine,
+    config: &ServerConfig,
+    queue: &RobustMutex<Receiver<Request>>,
+    obs: &ServerObs,
+    depth: &AtomicUsize,
+    lifecycle: &Lifecycle,
+    slo: &RobustMutex<SloState>,
+) {
+    let mut ledger = GenLedger::default();
+    let mut restarts = 0usize;
+    loop {
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            worker_loop(
+                worker, engine, config, queue, obs, depth, lifecycle, slo, &mut ledger,
+            );
+        }));
+        match run {
+            Ok(()) => break, // clean exit (shutdown)
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                obs.record_worker_panic();
+                log::error!("server worker {worker} panicked: {msg}");
+                ledger.fail_rows(&format!("worker {worker} panicked: {msg}"));
+                // The unwound session is gone: stop reporting pages the
+                // dropped pool already reclaimed.
+                obs.set_kv(worker, crate::backend::KvMemory::default());
+                if !lifecycle.should_respawn() {
+                    ledger.fail_all("server is shutting down");
+                    break;
+                }
+                obs.record_worker_restart();
+                restarts += 1;
+                log::warn!("supervisor respawning worker {worker} (restart #{restarts})");
+            }
+        }
+    }
+    log::info!("server worker exiting; {}", obs.snapshot().summary());
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker: usize,
     engine: &ElasticEngine,
     config: &ServerConfig,
-    queue: &Mutex<Receiver<Request>>,
+    queue: &RobustMutex<Receiver<Request>>,
     obs: &ServerObs,
     depth: &AtomicUsize,
-    alive: &AtomicBool,
-    slo: &Mutex<SloState>,
+    lifecycle: &Lifecycle,
+    slo: &RobustMutex<SloState>,
+    ledger: &mut GenLedger,
 ) {
     if config.batching == GenBatching::Continuous {
         let slots = if config.decode_slots == 0 {
@@ -781,8 +1189,9 @@ fn worker_loop(
         };
         match engine.decode_session_cfg(slots, config.kv_page) {
             Ok(session) => {
-                continuous_loop(worker, engine, config, queue, obs, depth, alive, slo, session);
-                log::info!("server worker exiting; {}", obs.snapshot().summary());
+                continuous_loop(
+                    worker, engine, config, queue, obs, depth, lifecycle, slo, ledger, session,
+                );
                 return;
             }
             Err(e) => log::warn!(
@@ -792,26 +1201,29 @@ fn worker_loop(
             ),
         }
     }
-    gather_loop(worker, engine, config, queue, obs, depth, alive, slo);
-    log::info!("server worker exiting; {}", obs.snapshot().summary());
+    gather_loop(worker, engine, config, queue, obs, depth, lifecycle, slo);
 }
 
 /// Legacy batching loop: gather → split into per-format (and, for
 /// generation, per-budget/cfg) groups → execute each group to completion.
+/// Deadlines and cancellation are enforced at gather time only: a
+/// gathered decode has fixed membership, so mid-decode retirement needs
+/// [`GenBatching::Continuous`].
 #[allow(clippy::too_many_arguments)]
 fn gather_loop(
     worker: usize,
     engine: &ElasticEngine,
     config: &ServerConfig,
-    queue: &Mutex<Receiver<Request>>,
+    queue: &RobustMutex<Receiver<Request>>,
     obs: &ServerObs,
     depth: &AtomicUsize,
-    alive: &AtomicBool,
-    slo: &Mutex<SloState>,
+    lifecycle: &Lifecycle,
+    slo: &RobustMutex<SloState>,
 ) {
     let b = engine.dims().train_batch;
+    let mut batch_no: u64 = 0;
     loop {
-        let Some(batch) = gather(queue, b, config.gather_window, alive) else {
+        let Some(batch) = gather(queue, b, config.gather_window, lifecycle) else {
             break;
         };
         // Depth *before* this worker hands its gathered requests to the
@@ -819,7 +1231,23 @@ fn gather_loop(
         let queue_depth = depth.load(Ordering::Acquire);
         depth.fetch_sub(batch.len(), Ordering::AcqRel);
 
-        let policy_fmt = config.policy.choose_with(queue_depth, &slo.lock().unwrap());
+        // Deterministic fault injection (tests), keyed to this worker's
+        // gathered-batch counter (gather mode has no decode steps).
+        if let Some(plan) = config.faults.as_deref() {
+            match plan.poll(worker, batch_no) {
+                Some(FaultKind::Panic) => {
+                    panic!("injected fault: worker {worker} at batch {batch_no}")
+                }
+                Some(FaultKind::Stall(d)) => std::thread::sleep(d),
+                Some(FaultKind::ShrinkPages(_)) => {
+                    log::warn!("injected shrink fault ignored (gather mode has no paged session)");
+                }
+                None => {}
+            }
+        }
+        batch_no += 1;
+
+        let policy_fmt = config.policy.choose_with(queue_depth, &slo.lock());
         let mut scores: Vec<ScoreRequest> = Vec::new();
         let mut gen_groups: Vec<(ElementFormat, usize, SampleCfg, Vec<GenerateRequest>)> =
             Vec::new();
@@ -827,6 +1255,16 @@ fn gather_loop(
             match req {
                 Request::Score(r) => scores.push(r),
                 Request::Generate(r) => {
+                    if r.cancel.is_cancelled() {
+                        obs.record_cancellation();
+                        let _ = r.respond.send(Err("cancelled".to_string()));
+                        continue;
+                    }
+                    if expired(r.deadline) {
+                        obs.record_deadline_miss();
+                        let _ = r.respond.send(Err("deadline exceeded".to_string()));
+                        continue;
+                    }
                     let fmt = r.format.unwrap_or(policy_fmt);
                     match gen_groups
                         .iter_mut()
@@ -838,6 +1276,7 @@ fn gather_loop(
                 }
             }
         }
+        reap_scores(&mut scores, obs);
         for (fmt, group) in group_scores(scores, policy_fmt) {
             execute_score_group(worker, engine, config, obs, slo, queue_depth, fmt, group);
         }
@@ -867,10 +1306,46 @@ struct GenRow {
     fmt: ElementFormat,
     n_tokens: usize,
     queue_depth: usize,
+    /// Completion deadline, enforced once per decode step.
+    deadline: Option<Instant>,
+    /// Cancel token, checked once per decode step.
+    cancel: CancelToken,
     /// When this row's most recent token landed (TTFT vs inter-token gap).
     last_token: Option<Instant>,
     /// Tokens sampled so far (trace annotation).
     emitted: usize,
+}
+
+/// A worker's generation-lane state, owned by the supervisor *outside*
+/// the `catch_unwind` boundary so a panicking worker body can never
+/// strand a client.
+#[derive(Default)]
+struct GenLedger {
+    /// Per-slot bookkeeping mirroring the decode session's rows.
+    rows: Vec<Option<GenRow>>,
+    /// Accepted generation requests waiting for admission; the flag marks
+    /// "deferral already counted".
+    backlog: VecDeque<(GenerateRequest, bool)>,
+}
+
+impl GenLedger {
+    /// Fail every live row with `msg` (the session they rode is gone or
+    /// being torn down); backlogged requests are kept.
+    fn fail_rows(&mut self, msg: &str) {
+        for slot in self.rows.iter_mut() {
+            if let Some(row) = slot.take() {
+                let _ = row.respond.send(Err(msg.to_string()));
+            }
+        }
+    }
+
+    /// Fail every live row *and* backlogged request with `msg`.
+    fn fail_all(&mut self, msg: &str) {
+        self.fail_rows(msg);
+        for (r, _) in self.backlog.drain(..) {
+            let _ = r.respond.send(Err(msg.to_string()));
+        }
+    }
 }
 
 /// Look up (or register and cache) the TTFT/inter-token histograms for
@@ -911,23 +1386,28 @@ fn continuous_loop<'e>(
     worker: usize,
     engine: &'e ElasticEngine,
     config: &ServerConfig,
-    queue: &Mutex<Receiver<Request>>,
+    queue: &RobustMutex<Receiver<Request>>,
     obs: &ServerObs,
     depth: &AtomicUsize,
-    alive: &AtomicBool,
-    slo: &Mutex<SloState>,
+    lifecycle: &Lifecycle,
+    slo: &RobustMutex<SloState>,
+    ledger: &mut GenLedger,
     mut session: Box<dyn DecodeSession + 'e>,
 ) {
     let b = engine.dims().train_batch;
     let wid = worker as u64;
-    // Backlogged requests carry a "deferral already counted" flag so a
-    // request deferred across many steps counts once.
-    let mut backlog: VecDeque<(GenerateRequest, bool)> = VecDeque::new();
-    let mut rows: Vec<Option<GenRow>> = (0..session.capacity()).map(|_| None).collect();
+    // The ledger survives panics (it lives in the supervisor); a fresh
+    // incarnation just re-sizes the (all-free) row table to its session.
+    if ledger.rows.len() != session.capacity() {
+        ledger.rows.clear();
+        ledger.rows.resize_with(session.capacity(), || None);
+    }
     let mut span_cache: Vec<(ElementFormat, FormatSpanHists)> = Vec::new();
     // The policy's unloaded pick — the yardstick for counting downshifts
     // (rows admitted below it because of queue depth / SLO pressure).
     let baseline_fmt = config.policy.choose_with(0, &SloState::default());
+    // Decode steps this incarnation has run (fault-injection key).
+    let mut step_no: u64 = 0;
     loop {
         // (a) Take work from the shared queue. Idle workers block exactly
         // like the gather loop (so shutdown and wakeup semantics match);
@@ -938,19 +1418,13 @@ fn continuous_loop<'e>(
         // peer could serve it now (a lone worker keeps draining — there is
         // nobody else, and interleaving score batches between steps beats
         // letting them wait for a row to finish).
-        let busy = session.active() > 0 || !backlog.is_empty();
+        let busy = session.active() > 0 || !ledger.backlog.is_empty();
         // Shutdown must not wait out arbitrarily long in-flight budgets
-        // (n_tokens is client-controlled): fail the live rows and exit.
-        if busy && !alive.load(Ordering::Acquire) {
-            let msg = "server is shutting down".to_string();
-            for slot in rows.iter_mut() {
-                if let Some(row) = slot.take() {
-                    let _ = row.respond.send(Err(msg.clone()));
-                }
-            }
-            for (r, _) in backlog.drain(..) {
-                let _ = r.respond.send(Err(msg.clone()));
-            }
+        // (n_tokens is client-controlled): in-flight work gets the drain
+        // grace budget ([`ServerConfig::shutdown_grace`]), then the
+        // remaining rows fail fast.
+        if busy && lifecycle.drain_expired() {
+            ledger.fail_all("server is shutting down");
             break;
         }
         let batch = if busy {
@@ -960,7 +1434,7 @@ fn continuous_loop<'e>(
                 drain_ready(queue, b)
             }
         } else {
-            match gather(queue, b, config.gather_window, alive) {
+            match gather(queue, b, config.gather_window, lifecycle) {
                 Some(batch) => batch,
                 None => break,
             }
@@ -973,17 +1447,37 @@ fn continuous_loop<'e>(
         for req in batch {
             match req {
                 Request::Score(r) => scores.push(r),
-                Request::Generate(r) => backlog.push_back((r, false)),
+                Request::Generate(r) => ledger.backlog.push_back((r, false)),
             }
         }
 
-        // (b) Scoring executes between decode steps, exactly as before.
+        // (b) Scoring executes between decode steps, exactly as before —
+        // minus any request whose cancel token or deadline fired while it
+        // queued.
+        reap_scores(&mut scores, obs);
         if !scores.is_empty() {
-            let policy_fmt = config.policy.choose_with(queue_depth, &slo.lock().unwrap());
+            let policy_fmt = config.policy.choose_with(queue_depth, &slo.lock());
             for (fmt, group) in group_scores(scores, policy_fmt) {
                 execute_score_group(worker, engine, config, obs, slo, queue_depth, fmt, group);
             }
         }
+
+        // Cancelled / expired requests leave the backlog before admission
+        // — a deferred request must not claim a row after its client gave
+        // up on it.
+        ledger.backlog.retain(|(r, _)| {
+            if r.cancel.is_cancelled() {
+                obs.record_cancellation();
+                let _ = r.respond.send(Err("cancelled".to_string()));
+                false
+            } else if expired(r.deadline) {
+                obs.record_deadline_miss();
+                let _ = r.respond.send(Err("deadline exceeded".to_string()));
+                false
+            } else {
+                true
+            }
+        });
 
         // (c) Admit queued prompts into free rows: they prefill on the very
         // next step while their neighbours keep decoding. The precision
@@ -994,13 +1488,14 @@ fn continuous_loop<'e>(
         // queued prompts *defer* (stay backlogged) until a live row retires
         // and returns its pages, instead of failing.
         while session.can_admit() {
-            let Some((r, _)) = backlog.pop_front() else { break };
-            let d = depth.load(Ordering::Acquire) + backlog.len();
+            let Some((r, _)) = ledger.backlog.pop_front() else { break };
+            let d = depth.load(Ordering::Acquire) + ledger.backlog.len();
             let fmt = match r.format {
                 Some(f) => f,
-                None => config.policy.choose_with(d, &slo.lock().unwrap()),
+                None => config.policy.choose_with(d, &slo.lock()),
             };
-            if r.format.is_none() && fmt != baseline_fmt {
+            let shed = ShedTier::classify(baseline_fmt, fmt);
+            if r.format.is_none() && shed == ShedTier::Downshift {
                 obs.record_downshift();
             }
             match session.join(&r.prompt, fmt, r.n_tokens, &r.cfg) {
@@ -1026,13 +1521,15 @@ fn continuous_loop<'e>(
                         }
                         sink.instant("admit", wid, slot as u64, args);
                     }
-                    rows[slot] = Some(GenRow {
+                    ledger.rows[slot] = Some(GenRow {
                         respond: r.respond,
                         enqueued: r.enqueued,
                         joined: admitted,
                         fmt,
                         n_tokens: r.n_tokens,
                         queue_depth: d,
+                        deadline: r.deadline,
+                        cancel: r.cancel,
                         last_token: None,
                         emitted: 0,
                     });
@@ -1046,13 +1543,13 @@ fn continuous_loop<'e>(
         }
         // Whatever is still backlogged was deferred by a full session or an
         // exhausted KV page budget — count each request's deferral once.
-        if !backlog.is_empty() && !session.can_admit() {
+        if !ledger.backlog.is_empty() && !session.can_admit() {
             let reason = if session.active() >= session.capacity() {
                 "slots"
             } else {
                 "kv_pages"
             };
-            for (_, counted) in backlog.iter_mut() {
+            for (_, counted) in ledger.backlog.iter_mut() {
                 if !*counted {
                     *counted = true;
                     obs.record_deferral();
@@ -1060,6 +1557,61 @@ fn continuous_loop<'e>(
                         sink.instant("defer", wid, QUEUE_TID, vec![("reason", Json::from(reason))]);
                     }
                 }
+            }
+        }
+
+        // Per-step cancellation / deadline enforcement: a cancelled or
+        // expired row retires *now*, mid-flight — its slot and KV pages
+        // return before the next step runs, and surviving rows are
+        // untouched.
+        let mut reaped = false;
+        for slot in 0..ledger.rows.len() {
+            let verdict = match ledger.rows[slot].as_ref() {
+                Some(row) if row.cancel.is_cancelled() => Some("cancelled"),
+                Some(row) if expired(row.deadline) => Some("deadline exceeded"),
+                _ => None,
+            };
+            let Some(msg) = verdict else { continue };
+            let row = ledger.rows[slot].take().expect("verdict implies a live row");
+            if let Err(e) = session.cancel(slot) {
+                log::warn!("cancelling decode row {slot} failed: {e:#}");
+            }
+            if msg == "cancelled" {
+                obs.record_cancellation();
+            } else {
+                obs.record_deadline_miss();
+            }
+            if let Some(sink) = obs.trace() {
+                sink.instant(
+                    if msg == "cancelled" { "cancel" } else { "deadline" },
+                    wid,
+                    slot as u64,
+                    vec![("format", Json::from(row.fmt.name()))],
+                );
+            }
+            let _ = row.respond.send(Err(msg.to_string()));
+            reaped = true;
+        }
+        if reaped {
+            obs.set_kv(worker, session.kv_memory());
+        }
+
+        // Deterministic fault injection (tests / MFQAT_FAULT smoke): panic
+        // / stall / shrink, keyed to this incarnation's loop-iteration
+        // counter — polled every iteration, so a fault armed on a worker
+        // currently serving only score traffic still fires.
+        step_no += 1;
+        if let Some(plan) = config.faults.as_deref() {
+            match plan.poll(worker, step_no) {
+                Some(FaultKind::Panic) => {
+                    panic!("injected fault: worker {worker} at step {step_no}")
+                }
+                Some(FaultKind::Stall(d)) => std::thread::sleep(d),
+                Some(FaultKind::ShrinkPages(n)) => {
+                    let got = session.shrink_kv_budget(n);
+                    log::warn!("injected fault: worker {worker} KV budget shrank by {got} pages");
+                }
+                None => {}
             }
         }
 
@@ -1080,7 +1632,7 @@ fn continuous_loop<'e>(
                 // first event after admission closes the TTFT span and
                 // later ones measure inter-token gaps.
                 for ev in &events {
-                    let Some(row) = rows.get_mut(ev.slot).and_then(|s| s.as_mut()) else {
+                    let Some(row) = ledger.rows.get_mut(ev.slot).and_then(|s| s.as_mut()) else {
                         continue;
                     };
                     let spans = spans_for(&mut span_cache, obs, row.fmt);
@@ -1121,7 +1673,7 @@ fn continuous_loop<'e>(
                 }
                 let mut done = Vec::with_capacity(finished.len());
                 for f in finished {
-                    if let Some(row) = rows[f.slot].take() {
+                    if let Some(row) = ledger.rows[f.slot].take() {
                         let latency = row.enqueued.elapsed();
                         let service = row.joined.elapsed();
                         done.push((row, f.slot, f.text, latency, service));
@@ -1140,7 +1692,7 @@ fn continuous_loop<'e>(
                     // Feed the SLO per-step time, not the whole decode's
                     // service time (see `execute_gen_group`): a row's
                     // service spans `n_tokens` step-synchronized passes.
-                    let mut s = slo.lock().unwrap();
+                    let mut s = slo.lock();
                     for (row, _, _, _, service) in &done {
                         s.observe(
                             &config.policy,
@@ -1192,11 +1744,7 @@ fn continuous_loop<'e>(
                 // every live row and restart from a fresh session.
                 let msg = format!("continuous decode step failed: {e:#}");
                 log::error!("{msg}");
-                for slot in rows.iter_mut() {
-                    if let Some(row) = slot.take() {
-                        let _ = row.respond.send(Err(msg.clone()));
-                    }
-                }
+                ledger.fail_rows(&msg);
                 match engine.decode_session_cfg(session.capacity(), config.kv_page) {
                     Ok(s) => session = s,
                     Err(e) => {

@@ -63,6 +63,47 @@ impl SloState {
     }
 }
 
+/// Which load-shedding tier an admission decision landed in.
+///
+/// The server degrades in a fixed order before giving up on a request:
+/// serve at a cheaper format than light load would pick
+/// ([`ShedTier::Downshift`]), hold the request in the backlog until a row
+/// and its KV pages free up ([`ShedTier::Defer`]), and only turn traffic
+/// away once the bounded ingress queue is full ([`ShedTier::Reject`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedTier {
+    /// Admitted at the baseline (zero-depth) format — no shedding.
+    Admit,
+    /// Admitted, but at a cheaper format than the baseline.
+    Downshift,
+    /// Held in the backlog: no free decode row or KV pages right now.
+    Defer,
+    /// Rejected at the queue boundary with a retry-after hint.
+    Reject,
+}
+
+impl ShedTier {
+    /// Stable lower-case name for logs and metrics labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedTier::Admit => "admit",
+            ShedTier::Downshift => "downshift",
+            ShedTier::Defer => "defer",
+            ShedTier::Reject => "reject",
+        }
+    }
+
+    /// Classify an admission: the tier a request landed in given the
+    /// format the policy chose against the baseline (zero-depth) format.
+    pub fn classify(baseline: ElementFormat, chosen: ElementFormat) -> ShedTier {
+        if chosen == baseline {
+            ShedTier::Admit
+        } else {
+            ShedTier::Downshift
+        }
+    }
+}
+
 impl Policy {
     /// The default MXINT ladder: light load serves the anchor precision,
     /// heavy load degrades gracefully (8 → 6 → 4 bits).
@@ -169,6 +210,18 @@ mod tests {
         assert!(matches!(Policy::parse("slo:20").unwrap(), Policy::Slo { .. }));
         assert!(Policy::parse("bogus").is_err());
         assert!(Policy::parse("slo:abc").is_err());
+    }
+
+    #[test]
+    fn shed_tier_names_and_classification() {
+        assert_eq!(ShedTier::Admit.name(), "admit");
+        assert_eq!(ShedTier::Downshift.name(), "downshift");
+        assert_eq!(ShedTier::Defer.name(), "defer");
+        assert_eq!(ShedTier::Reject.name(), "reject");
+        let p = Policy::default_ladder();
+        let base = p.choose(0);
+        assert_eq!(ShedTier::classify(base, p.choose(0)), ShedTier::Admit);
+        assert_eq!(ShedTier::classify(base, p.choose(100)), ShedTier::Downshift);
     }
 
     #[test]

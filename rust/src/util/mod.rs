@@ -5,8 +5,9 @@
 //! or `proptest`. This module supplies the minimal replacements the rest of
 //! the crate needs: a seeded PRNG ([`rng`]), a tiny JSON value/parser/writer
 //! ([`json`]), a CLI argument parser ([`cli`]), logging ([`logging`]),
-//! streaming statistics ([`stats`]), a wall-clock timer ([`timer`]), and a
-//! seeded property-testing helper ([`props`]).
+//! streaming statistics ([`stats`]), a wall-clock timer ([`timer`]), a
+//! seeded property-testing helper ([`props`]), and poison-proof locking
+//! ([`sync`]).
 
 pub mod cli;
 pub mod json;
@@ -14,6 +15,7 @@ pub mod logging;
 pub mod props;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod timer;
 
 pub use rng::Rng;

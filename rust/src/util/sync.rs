@@ -1,0 +1,91 @@
+//! Poison-proof synchronization primitives.
+//!
+//! `std::sync::Mutex` poisons itself when a holder panics, and every
+//! subsequent `lock().unwrap()` then panics too — so one crashed server
+//! worker used to wedge the whole pool (the shared `SloState`, the request
+//! queue, the trace sink and the weight cache all sat behind poisonable
+//! locks). [`RobustMutex`] recovers the guard from a poisoned lock instead
+//! of propagating: every state it protects in this crate is either plain
+//! data that stays internally consistent under any interleaving of its
+//! mutations (counters, EWMA scalars, append-only vectors, an mpsc
+//! receiver) or state the worker supervisor rebuilds wholesale after a
+//! panic (decode sessions), so observing a value mid-update is safe and
+//! strictly better than a pool-wide hang.
+
+use std::sync::{Mutex, MutexGuard, TryLockError};
+
+/// A mutex whose `lock` never fails: a poisoned lock (the previous holder
+/// panicked) recovers the inner guard instead of propagating the poison.
+///
+/// Use this for state that must outlive a panicking holder — the server's
+/// worker supervisor depends on every cross-worker lock being acquirable
+/// after a `catch_unwind`.
+#[derive(Debug, Default)]
+pub struct RobustMutex<T>(Mutex<T>);
+
+impl<T> RobustMutex<T> {
+    /// Wrap `value` in a poison-proof mutex.
+    pub fn new(value: T) -> RobustMutex<T> {
+        RobustMutex(Mutex::new(value))
+    }
+
+    /// Acquire the lock, recovering from poison if a previous holder
+    /// panicked (the guard is returned either way).
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        match self.0.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Try to acquire the lock without blocking. `None` only when another
+    /// thread currently holds it — poison recovers like [`Self::lock`].
+    pub fn try_lock(&self) -> Option<MutexGuard<'_, T>> {
+        match self.0.try_lock() {
+            Ok(g) => Some(g),
+            Err(TryLockError::Poisoned(poisoned)) => Some(poisoned.into_inner()),
+            Err(TryLockError::WouldBlock) => None,
+        }
+    }
+
+    /// Consume the mutex and return the inner value (poison recovered).
+    pub fn into_inner(self) -> T {
+        match self.0.into_inner() {
+            Ok(v) => v,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_survives_a_panicking_holder() {
+        let m = Arc::new(RobustMutex::new(7u32));
+        let m2 = m.clone();
+        let result = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("holder dies with the lock held");
+        })
+        .join();
+        assert!(result.is_err(), "the holder thread must have panicked");
+        // A std Mutex would now be poisoned; RobustMutex recovers.
+        assert_eq!(*m.lock(), 7);
+        *m.lock() = 9;
+        assert_eq!(*m.lock(), 9);
+    }
+
+    #[test]
+    fn try_lock_contended_and_poisoned() {
+        let m = RobustMutex::new(1u32);
+        {
+            let _g = m.lock();
+            assert!(m.try_lock().is_none(), "held elsewhere");
+        }
+        assert!(m.try_lock().is_some(), "free again");
+        assert_eq!(RobustMutex::new(5u32).into_inner(), 5);
+    }
+}

@@ -1,0 +1,290 @@
+//! Fault-injection suite for the serving runtime: deterministic worker
+//! panics, stalls, and KV-budget shrinks driven through
+//! [`mfqat::server::FaultPlan`], plus deadline / cancellation /
+//! backpressure behaviour under those faults.
+//!
+//! The invariants proved here are the serving robustness contract:
+//!
+//! * a worker panic mid-decode fails its in-flight rows fast (no hangs),
+//!   leaves every surviving row **bit-identical** to an unfaulted run,
+//!   returns the KV free list to baseline, and the respawned worker
+//!   serves new traffic;
+//! * a stalled worker trips request deadlines instead of wedging the
+//!   server;
+//! * a shrinking KV page budget degrades admission, never decode output;
+//! * cancellation retires rows mid-flight; the bounded queue rejects with
+//!   a typed retry hint.
+//!
+//! Runs everywhere — the native backend needs no AOT artifacts.
+
+use mfqat::coordinator::ElasticEngine;
+use mfqat::eval::generate::SampleCfg;
+use mfqat::formats::ElementFormat;
+use mfqat::model::{ModelDims, ParamSet};
+use mfqat::server::{FaultKind, FaultPlan, Policy, Rejected, Server, ServerConfig, SubmitOpts};
+use std::time::Duration;
+
+/// Small dims so the suite stays fast; vocab 256 so the generation lane
+/// can encode byte prompts.
+fn test_dims() -> ModelDims {
+    let mut dims = ModelDims::new("flt", 256, 32, 2, 2, 16);
+    dims.train_batch = 4;
+    dims
+}
+
+fn base_config() -> ServerConfig {
+    ServerConfig {
+        policy: Policy::Fixed(ElementFormat::int(8)),
+        gather_window: Duration::from_millis(1),
+        // Explicit `None` so a stray MFQAT_FAULT in the environment can
+        // never leak into tests that arm their own plans.
+        faults: None,
+        ..ServerConfig::default()
+    }
+}
+
+fn start(seed: u64, config: ServerConfig) -> (Server, mfqat::server::Client) {
+    let dims = test_dims();
+    let (server, client) = Server::start(
+        dims.seq_len + 1,
+        move || {
+            let manifest = dims.to_manifest();
+            let params = ParamSet::init(&manifest, seed);
+            let ck = params.to_anchor_checkpoint(&manifest, ElementFormat::int(8))?;
+            ElasticEngine::native(dims, ck, 64 << 20)
+        },
+        config,
+    )
+    .unwrap();
+    (server, client)
+}
+
+fn sample_cfg() -> SampleCfg {
+    SampleCfg {
+        temperature: 0.7,
+        top_k: 6,
+        seed: 11,
+    }
+}
+
+/// The generation workload every fault run is compared against.
+const JOBS: &[(&str, usize)] = &[
+    ("kova", 8),
+    ("blue", 8),
+    ("the color", 8),
+    ("q", 8),
+    ("kovaq", 8),
+    ("mixed", 8),
+];
+
+/// Ground truth from an unfaulted server: per-row determinism guarantees
+/// each (prompt, cfg, budget) samples identically however it is batched,
+/// so solo runs are a valid reference for faulted bursts.
+fn reference_texts(seed: u64) -> Vec<String> {
+    let (server, client) = start(seed, base_config());
+    let texts = JOBS
+        .iter()
+        .map(|(p, n)| client.generate(p, *n, None, sample_cfg()).unwrap().text)
+        .collect();
+    drop(client);
+    server.shutdown();
+    texts
+}
+
+#[test]
+fn worker_panic_fails_fast_and_respawn_serves_identically() {
+    let seed = 31;
+    let reference = reference_texts(seed);
+    let mut cfg = base_config();
+    cfg.faults = Some(FaultPlan::single(0, 3, FaultKind::Panic));
+    let (server, client) = start(seed, cfg);
+
+    // Burst all jobs so rows are in flight when the panic fires at decode
+    // step 3 (each row wants 8 steps, so the window cannot be missed).
+    let rxs: Vec<_> = JOBS
+        .iter()
+        .map(|(p, n)| client.submit_generate(p, *n, None, sample_cfg()).unwrap())
+        .collect();
+    let mut failed = 0usize;
+    for (rx, ((prompt, _), want)) in rxs.into_iter().zip(JOBS.iter().zip(&reference)) {
+        // Every request must resolve promptly — a hang here is the bug.
+        let res = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("request hung after worker panic");
+        match res {
+            Ok(resp) => assert_eq!(&resp.text, want, "surviving row {prompt:?} diverged"),
+            Err(e) => {
+                assert!(e.contains("panicked"), "row {prompt:?}: unexpected error {e:?}");
+                failed += 1;
+            }
+        }
+    }
+    assert!(failed >= 1, "the injected panic must fail at least one in-flight row");
+
+    // The respawned incarnation serves fresh traffic, bit-identically.
+    let again = client.generate(JOBS[0].0, JOBS[0].1, None, sample_cfg()).unwrap();
+    assert_eq!(again.text, reference[0], "post-respawn traffic diverged");
+
+    let m = client.metrics_snapshot();
+    assert_eq!(m.worker_panics, 1, "exactly the injected panic");
+    assert_eq!(m.worker_restarts, 1, "supervisor respawned the worker");
+
+    let obs = server.obs();
+    drop(client);
+    server.shutdown();
+    let m = obs.snapshot();
+    assert_eq!(m.kv.used_pages, 0, "KV pages leaked across the panic: {:?}", m.kv);
+}
+
+#[test]
+fn stall_fault_trips_deadlines_without_wedging_the_server() {
+    let mut cfg = base_config();
+    cfg.faults = Some(FaultPlan::single(0, 1, FaultKind::Stall(Duration::from_millis(250))));
+    let (server, client) = start(33, cfg);
+
+    // The 40ms deadline expires inside the 250ms stall; the next row sweep
+    // must retire the request instead of letting it ride the wedged step.
+    let opts = SubmitOpts {
+        deadline: Some(Duration::from_millis(40)),
+        cancel: None,
+    };
+    let pending = client
+        .submit_generate_opts("kova", 16, None, sample_cfg(), &opts)
+        .unwrap();
+    let err = pending
+        .rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("request hung through the stall")
+        .expect_err("deadline must trip during the stall");
+    assert!(err.contains("deadline exceeded"), "unexpected error: {err:?}");
+
+    // The stalled worker recovers and serves later traffic normally.
+    let ok = client.generate("kova", 4, None, sample_cfg()).unwrap();
+    assert_eq!(ok.text.chars().count(), 4);
+
+    let m = client.metrics_snapshot();
+    assert!(m.deadline_misses >= 1, "miss must be counted");
+    assert_eq!(m.worker_panics, 0, "a stall is not a crash");
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn shrink_fault_degrades_admission_never_decode_output() {
+    let seed = 35;
+    let reference = reference_texts(seed);
+    let mut cfg = base_config();
+    // Tiny pages so the shrink quarantine moves a meaningful fraction of
+    // the pool while committed (live-row) pages stay protected.
+    cfg.kv_page = mfqat::backend::KvPageCfg {
+        page_positions: 4,
+        budget_pages: 0,
+    };
+    cfg.faults = Some(FaultPlan::single(0, 2, FaultKind::ShrinkPages(8)));
+    let (server, client) = start(seed, cfg);
+
+    let rxs: Vec<_> = JOBS
+        .iter()
+        .map(|(p, n)| client.submit_generate(p, *n, None, sample_cfg()).unwrap())
+        .collect();
+    for (rx, ((prompt, _), want)) in rxs.into_iter().zip(JOBS.iter().zip(&reference)) {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("request hung under a shrunk pool")
+            .unwrap_or_else(|e| panic!("row {prompt:?} failed under shrink: {e:?}"));
+        assert_eq!(&resp.text, want, "shrink changed decode output for {prompt:?}");
+    }
+    let obs = server.obs();
+    drop(client);
+    server.shutdown();
+    assert_eq!(obs.snapshot().kv.used_pages, 0, "pages leaked under shrink");
+}
+
+#[test]
+fn cancellation_retires_rows_mid_flight() {
+    let mut cfg = base_config();
+    // Wedge the first decode step so the cancel provably lands while the
+    // row is mid-flight, not before admission.
+    cfg.faults = Some(FaultPlan::single(0, 1, FaultKind::Stall(Duration::from_millis(300))));
+    let (server, client) = start(37, cfg);
+
+    // Token-based cancel through the Pending handle.
+    let p1 = client
+        .submit_generate_opts("kova", 16, None, sample_cfg(), &SubmitOpts::default())
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(60));
+    p1.cancel.cancel();
+    let err = p1
+        .rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("cancelled request hung")
+        .expect_err("cancelled request must error");
+    assert!(err.contains("cancelled"), "unexpected error: {err:?}");
+
+    // Id-based cancel through the client registry.
+    let p2 = client
+        .submit_generate_opts("blue", 16, None, sample_cfg(), &SubmitOpts::default())
+        .unwrap();
+    assert!(client.cancel(p2.id), "token must still be live");
+    let err = p2
+        .rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("cancelled request hung")
+        .expect_err("cancelled request must error");
+    assert!(err.contains("cancelled"), "unexpected error: {err:?}");
+    assert!(!client.cancel(u64::MAX), "unknown id is a no-op");
+
+    let m = client.metrics_snapshot();
+    assert!(m.cancellations >= 2, "both cancels counted, got {}", m.cancellations);
+
+    let obs = server.obs();
+    drop(client);
+    server.shutdown();
+    assert_eq!(obs.snapshot().kv.used_pages, 0, "cancelled rows must return their pages");
+}
+
+#[test]
+fn bounded_queue_rejects_with_typed_retry_hint() {
+    let mut cfg = base_config();
+    cfg.queue_cap = 2;
+    cfg.faults = Some(FaultPlan::single(0, 1, FaultKind::Stall(Duration::from_millis(400))));
+    let (server, client) = start(39, cfg);
+    let row = vec![7i32; test_dims().seq_len + 1];
+
+    // Wedge the worker on a generation, then flood the bounded queue: the
+    // first `queue_cap` submissions park, the rest are turned away with a
+    // typed [`Rejected`] carrying a clamped retry hint.
+    let busy = client.submit_generate("kova", 4, None, sample_cfg()).unwrap();
+    std::thread::sleep(Duration::from_millis(80));
+    let mut accepted = Vec::new();
+    let mut rejections = 0usize;
+    let hint_bounds = Duration::from_millis(5)..=Duration::from_secs(2);
+    for _ in 0..8 {
+        match client.submit(&row, None) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                let r = e
+                    .downcast_ref::<Rejected>()
+                    .expect("backpressure error is typed");
+                assert!(hint_bounds.contains(&r.retry_after), "bad hint {:?}", r.retry_after);
+                rejections += 1;
+            }
+        }
+    }
+    assert!(rejections >= 1, "an 8-burst against queue_cap=2 must shed");
+    assert!(!accepted.is_empty(), "the queue still admits up to its cap");
+
+    // Shedding is load protection, not an outage: everything admitted
+    // completes once the stall clears.
+    for rx in accepted {
+        rx.recv_timeout(Duration::from_secs(10))
+            .expect("accepted request hung")
+            .expect("accepted request must complete");
+    }
+    busy.recv_timeout(Duration::from_secs(10))
+        .expect("generation hung")
+        .expect("generation must complete");
+    assert!(client.metrics_snapshot().rejections >= 1, "rejections counted");
+    drop(client);
+    server.shutdown();
+}

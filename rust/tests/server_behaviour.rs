@@ -11,7 +11,7 @@ use mfqat::coordinator::ElasticEngine;
 use mfqat::eval::generate::SampleCfg;
 use mfqat::formats::ElementFormat;
 use mfqat::model::{ModelDims, ParamSet};
-use mfqat::server::{GenBatching, Policy, Server, ServerConfig};
+use mfqat::server::{CancelToken, GenBatching, Policy, Server, ServerConfig, SubmitOpts};
 use std::time::Duration;
 
 /// Small dims so the whole suite stays fast on one core. Vocab 256 so the
@@ -369,6 +369,92 @@ fn worker_pool_serves_concurrent_load_from_one_engine() {
     assert!(m.cache.hits > 0, "steady state must hit the shared cache");
     drop(client);
     server.shutdown();
+}
+
+#[test]
+fn gather_mode_enforces_deadlines_and_cancellation_at_admission() {
+    // Gather batches have fixed membership, so deadline / cancellation are
+    // checked when the batch forms: a dead request never costs a forward.
+    let (server, client, width) =
+        start_pool_mode(Policy::Fixed(ElementFormat::int(8)), 41, 1, GenBatching::Gather);
+    let rows = test_corpus(width, 40, 64);
+
+    // Pre-cancelled token → the score dies at gather time.
+    let token = CancelToken::new();
+    token.cancel();
+    let opts = SubmitOpts {
+        deadline: None,
+        cancel: Some(token),
+    };
+    let p = client.submit_opts(&rows[0], None, &opts).unwrap();
+    let err = p
+        .rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("cancelled score hung")
+        .expect_err("cancelled score must error");
+    assert!(err.contains("cancelled"), "unexpected error: {err:?}");
+
+    // Zero deadline → the generation is expired before its batch forms.
+    let cfg = SampleCfg {
+        temperature: 0.5,
+        top_k: 4,
+        seed: 2,
+    };
+    let opts = SubmitOpts {
+        deadline: Some(Duration::ZERO),
+        cancel: None,
+    };
+    let p = client.submit_generate_opts("kova", 6, None, cfg, &opts).unwrap();
+    let err = p
+        .rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("expired generation hung")
+        .expect_err("expired generation must error");
+    assert!(err.contains("deadline exceeded"), "unexpected error: {err:?}");
+
+    // Untouched requests keep serving around the retired ones.
+    assert!(client.score(&rows[1], None).unwrap().nll.is_finite());
+    let m = client.metrics_snapshot();
+    assert!(m.cancellations >= 1, "cancel counted");
+    assert!(m.deadline_misses >= 1, "miss counted");
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn clients_racing_shutdown_never_hang() {
+    // Submitting threads race `Server::shutdown`: every submission must
+    // resolve — a response, an in-flight shutdown error, or a refusal at
+    // the door — and every thread must return. A hang is the failure.
+    let (server, client, width) = start_server(Policy::Fixed(ElementFormat::int(8)), 42);
+    let rows = test_corpus(width, 41, 64);
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for t in 0..3usize {
+            let client = client.clone();
+            let (rows, stop) = (&rows, &stop);
+            s.spawn(move || {
+                let mut i = t;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    match client.submit(&rows[i % rows.len()], None) {
+                        Ok(rx) => match rx.recv_timeout(Duration::from_secs(30)) {
+                            Ok(Ok(resp)) => assert!(resp.nll.is_finite()),
+                            Ok(Err(e)) => {
+                                assert!(e.contains("shut"), "unexpected in-flight error: {e:?}")
+                            }
+                            Err(_) => panic!("response channel hung or died with no error"),
+                        },
+                        Err(_) => {} // refused at the door during/after shutdown
+                    }
+                    i += 1;
+                }
+            });
+        }
+        // Let the load ramp, then yank the server out from under it.
+        std::thread::sleep(Duration::from_millis(50));
+        server.shutdown();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
 }
 
 #[test]
