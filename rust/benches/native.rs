@@ -197,6 +197,130 @@ fn main() {
     }
     summary.set("generate", gen_json);
 
+    // ------------------------------------- self-speculative decoding
+    // Draft k tokens at a cheap format of the *same* anchor parameters,
+    // verify them in one multi-position pass at the serving format, roll
+    // the KV back past rejected drafts. Greedy policy: the output is
+    // asserted token-identical to the plain decode it is racing.
+    println!("\n== self-speculative decode: cheap drafts, anchor verify, KV rollback ==");
+    use mfqat::eval::generate::{ContinuousBatch, SampleCfg, SpecPolicy};
+    fn median(mut xs: Vec<f64>) -> f64 {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[xs.len() / 2]
+    }
+    let verify8 = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let shared = verify8.shared.clone();
+    let verify_fp8 = NativeWeights::packed_with_shared(
+        &dims,
+        &ck,
+        ElementFormat::fp_from_bits(8),
+        shared.clone(),
+        ActMode::F32,
+    )
+    .unwrap();
+    let draft4 = NativeWeights::packed_with_shared(
+        &dims,
+        &ck,
+        ElementFormat::int(4),
+        shared.clone(),
+        ActMode::F32,
+    )
+    .unwrap();
+    let draft6 =
+        NativeWeights::packed_with_shared(&dims, &ck, ElementFormat::int(6), shared, ActMode::F32)
+            .unwrap();
+    let greedy = SampleCfg {
+        temperature: 0.0,
+        top_k: 0,
+        seed: 11,
+    };
+    let spec_prompt = "the color of kova is";
+    let spec_tokens = 48usize;
+    let reps = 5usize;
+    let mut spec_json = Json::obj();
+    for (dname, draft, vname, verify) in [
+        ("int4", &draft4, "int8", &verify8),
+        ("int4", &draft4, "fp8", &verify_fp8),
+        ("int6", &draft6, "int8", &verify8),
+    ] {
+        // Plain decode at the verify format — the baseline being raced.
+        let mut plain_times = Vec::with_capacity(reps);
+        let mut plain_text = String::new();
+        for _ in 0..reps {
+            let t = std::time::Instant::now();
+            let mut b: ContinuousBatch<&NativeWeights> = ContinuousBatch::new(&dims, 1);
+            b.join(verify, spec_prompt, spec_tokens, &greedy).unwrap();
+            let mut out = Vec::new();
+            while b.active() > 0 {
+                out.extend(b.step().unwrap());
+            }
+            plain_times.push(t.elapsed().as_secs_f64());
+            plain_text = out.pop().expect("one finished row").text;
+        }
+        let p50_plain = median(plain_times);
+        for k in [2usize, 4, 8] {
+            let mut times = Vec::with_capacity(reps);
+            let (mut drafted, mut accepted) = (0u64, 0u64);
+            let mut decode_steps = 0usize;
+            let mut text = String::new();
+            for _ in 0..reps {
+                let t = std::time::Instant::now();
+                let mut b: ContinuousBatch<&NativeWeights> = ContinuousBatch::new(&dims, 1);
+                b.join_spec(
+                    verify,
+                    draft,
+                    spec_prompt,
+                    spec_tokens,
+                    &greedy,
+                    k,
+                    SpecPolicy::Greedy,
+                )
+                .unwrap();
+                let mut out = Vec::new();
+                let mut steps = 0usize;
+                while b.active() > 0 {
+                    out.extend(b.step().unwrap());
+                    steps += 1;
+                }
+                times.push(t.elapsed().as_secs_f64());
+                decode_steps = steps.saturating_sub(1); // first step prefills
+                let f = out.pop().expect("one finished row");
+                drafted = f.spec_drafted;
+                accepted = f.spec_accepted;
+                text = f.text;
+            }
+            assert_eq!(
+                text, plain_text,
+                "speculative {dname}->{vname} k={k} diverged from plain decode"
+            );
+            let p50_spec = median(times);
+            let accept_rate = if drafted > 0 {
+                accepted as f64 / drafted as f64
+            } else {
+                0.0
+            };
+            let per_step = accepted as f64 / decode_steps.max(1) as f64;
+            let tok_step = spec_tokens as f64 / decode_steps.max(1) as f64;
+            println!(
+                "speculative/{dname}->{vname}/k{k}  accept {:.2}  tok/step {tok_step:.2}  \
+                 p50 {:.2}ms vs {:.2}ms  speedup {:.2}x",
+                accept_rate,
+                p50_spec * 1e3,
+                p50_plain * 1e3,
+                p50_plain / p50_spec,
+            );
+            let mut e = Json::obj();
+            e.set("accept_rate", Json::from(accept_rate));
+            e.set("accepted_per_step", Json::from(per_step));
+            e.set("tokens_per_step", Json::from(tok_step));
+            e.set("p50_plain_ms", Json::from(p50_plain * 1e3));
+            e.set("p50_spec_ms", Json::from(p50_spec * 1e3));
+            e.set("p50_speedup_x", Json::from(p50_plain / p50_spec));
+            spec_json.set(&format!("{dname}_to_{vname}_k{k}"), e);
+        }
+    }
+    summary.set("speculative", spec_json);
+
     // ---------------------------------------------- format-switch (cold)
     println!("\n== format-switch cost: anchor -> packed target (SS + repack), cold ==");
     let mut derive_json = Json::obj();

@@ -827,14 +827,34 @@ impl KvCache {
     /// the next decode re-maps them on append — used by the bench to
     /// re-decode at a fixed context length without re-prefilling.
     pub fn truncate(&mut self, pos: usize) {
-        assert_eq!(self.rows, 1, "truncate is a single-sequence helper");
-        assert!(pos <= self.lens[0], "cannot truncate {} to {pos}", self.lens[0]);
+        assert_eq!(
+            self.rows, 1,
+            "truncate is a single-sequence helper; use truncate_row"
+        );
+        self.truncate_row(0, pos);
+    }
+
+    /// Roll row `r` back to `pos` filled positions (`pos ≤` the row's
+    /// current length), valid at any row count. Pages wholly past the
+    /// truncation point return to the pool **immediately** (zeroed on
+    /// release); the next append re-maps them. Other rows are untouched.
+    /// This is the speculative-decode rollback primitive: positions the
+    /// verify pass wrote for rejected draft tokens are discarded in
+    /// O(pages freed), and the freed pages can fund other rows' growth
+    /// before the next step.
+    pub fn truncate_row(&mut self, r: usize, pos: usize) {
+        assert!(r < self.rows, "row {r} out of range ({} rows)", self.rows);
+        assert!(
+            pos <= self.lens[r],
+            "cannot truncate row {r} from {} to {pos}",
+            self.lens[r]
+        );
         let keep = pos.div_ceil(self.page_positions);
-        while self.tables[0].len() > keep {
-            let page = self.tables[0].pop().expect("len checked above");
+        while self.tables[r].len() > keep {
+            let page = self.tables[r].pop().expect("len checked above");
             self.pool.release(page);
         }
-        self.lens[0] = pos;
+        self.lens[r] = pos;
     }
 
     /// Grow row `r`'s page table to cover `new_len` positions, claiming

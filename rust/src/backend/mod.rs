@@ -161,6 +161,27 @@ pub trait DecodeSession {
         cfg: &crate::eval::generate::SampleCfg,
     ) -> Result<usize>;
 
+    /// [`Self::join`] with self-speculative decoding: the row drafts up to
+    /// `spec.k` tokens per step at `spec.draft_format` (same anchor
+    /// parameters, cheaper format) and verifies them in one multi-position
+    /// pass at `fmt`, rolling its KV back past rejected drafts — emitted
+    /// tokens are unchanged under the greedy policy, only throughput
+    /// improves (see [`crate::eval::generate::SpecCfg`]). The default
+    /// implementation ignores `spec` and decodes plainly, so backends
+    /// without a speculative surface keep working; the native session
+    /// drafts for real.
+    fn join_spec(
+        &mut self,
+        prompt: &str,
+        fmt: ElementFormat,
+        spec: &crate::eval::generate::SpecCfg,
+        n_tokens: usize,
+        cfg: &crate::eval::generate::SampleCfg,
+    ) -> Result<usize> {
+        let _ = spec;
+        self.join(prompt, fmt, n_tokens, cfg)
+    }
+
     /// Cancel the sequence in `slot` without a result; the row frees
     /// immediately and surviving rows are unaffected.
     fn cancel(&mut self, slot: usize) -> Result<()>;

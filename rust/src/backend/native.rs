@@ -206,6 +206,21 @@ pub struct NativeDecodeSession<'a> {
     inner: ContinuousBatch<Arc<NativeWeights>>,
 }
 
+impl NativeDecodeSession<'_> {
+    /// Batch-pressure threshold for speculative rows (see
+    /// [`ContinuousBatch::set_spec_pressure`]): on steps with more live
+    /// rows than this, speculative rows skip drafting and decode plainly.
+    pub fn set_spec_pressure(&mut self, rows: usize) {
+        self.inner.set_spec_pressure(rows);
+    }
+
+    /// Lifetime `(drafted, accepted)` draft-token counts for the
+    /// speculative row in `slot` (see [`ContinuousBatch::spec_stats`]).
+    pub fn spec_stats(&self, slot: usize) -> Option<(u64, u64)> {
+        self.inner.spec_stats(slot)
+    }
+}
+
 impl DecodeSession for NativeDecodeSession<'_> {
     fn capacity(&self) -> usize {
         self.inner.capacity()
@@ -224,6 +239,26 @@ impl DecodeSession for NativeDecodeSession<'_> {
     ) -> Result<usize> {
         let w = self.backend.weights(fmt)?;
         self.inner.join(w, prompt, n_tokens, cfg)
+    }
+
+    fn join_spec(
+        &mut self,
+        prompt: &str,
+        fmt: ElementFormat,
+        spec: &crate::eval::generate::SpecCfg,
+        n_tokens: usize,
+        cfg: &SampleCfg,
+    ) -> Result<usize> {
+        if fmt == spec.draft_format {
+            // Drafting with the verify weights buys nothing — decode
+            // plainly rather than erroring (the server picks `fmt` per
+            // request; a request *at* the draft format is legitimate).
+            return self.join(prompt, fmt, n_tokens, cfg);
+        }
+        let w = self.backend.weights(fmt)?;
+        let draft = self.backend.weights(spec.draft_format)?;
+        self.inner
+            .join_spec(w, draft, prompt, n_tokens, cfg, spec.k, spec.policy)
     }
 
     fn cancel(&mut self, slot: usize) -> Result<()> {

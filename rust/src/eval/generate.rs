@@ -23,15 +23,31 @@
 //! * [`generate`] (feature `pjrt`) — the AOT `forward_b1` graph with
 //!   full-sequence recompute per emitted token (quality/debug surface for
 //!   the compiled path).
+//!
+//! **Self-speculative decoding** ([`SpecCfg`] / [`ContinuousBatch::join_spec`])
+//! rides the same state machine: a row drafts `k` tokens autoregressively
+//! through a *low-precision* weight set derived from the same anchor (MF-QAT's
+//! elastic-format property makes the draft model free — same parameters,
+//! cheaper format), then verifies all `k` in the row's ordinary slice of the
+//! next step-synchronized batched forward (the verify pass feeds `1 + k`
+//! positions instead of 1), accepts the longest correct prefix, and rolls the
+//! KV cache back to the accepted position
+//! ([`crate::backend::forward::KvCache::truncate_row`] returns rejected
+//! positions' pages to the pool immediately). Under the default
+//! [`SpecPolicy::Greedy`] the emitted tokens are **token-identical** to a
+//! plain decode with the verify weights (enforced by
+//! `rust/tests/spec_decode.rs`).
 
-use crate::backend::forward::{forward_cached_batch_mixed, KvCache, RowTag};
+use crate::backend::forward::{forward_cached, forward_cached_batch_mixed, KvCache, RowTag};
 use crate::backend::kvpool::{KvMemory, KvPageCfg};
 use crate::backend::NativeWeights;
 use crate::data::{decode, encode, PAD};
+use crate::formats::ElementFormat;
 use crate::model::ModelDims;
 use crate::util::Rng;
 use anyhow::Result;
 use std::ops::Deref;
+use std::sync::Arc;
 
 #[cfg(feature = "pjrt")]
 use crate::eval::ParamLiterals;
@@ -59,6 +75,132 @@ impl Default for SampleCfg {
             top_k: 8,
             seed: 0,
         }
+    }
+}
+
+/// Acceptance policy for self-speculative decoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpecPolicy {
+    /// Lockstep target matching: each verify position samples the row's
+    /// *actual* next token from the verify logits (lazily, stopping at the
+    /// first draft mismatch), and a draft token is accepted iff it equals
+    /// that target. Because the verify logits are bit-identical to a plain
+    /// decode's and the row RNG advances once per emitted token either
+    /// way, the emitted sequence is **token-identical** to a
+    /// non-speculative decode with the verify weights — under greedy
+    /// sampling *and* under temperature sampling.
+    #[default]
+    Greedy,
+    /// Standard speculative rejection sampling: draft token `d ~ q` is
+    /// accepted with probability `min(1, p(d)/q(d))` against the verify
+    /// distribution `p`; on rejection the replacement samples from the
+    /// residual `max(p − q, 0)`. Distribution-preserving (each emitted
+    /// token is distributed as a plain verify-format sample) but not
+    /// bitwise reproducible against a plain decode — trades that for a
+    /// higher accept rate when `q ≈ p`.
+    Stochastic,
+}
+
+impl SpecPolicy {
+    /// Parse `greedy|exact` / `stochastic|rejection`.
+    pub fn parse(s: &str) -> Result<SpecPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "greedy" | "exact" => Ok(SpecPolicy::Greedy),
+            "stochastic" | "rejection" => Ok(SpecPolicy::Stochastic),
+            other => anyhow::bail!("unknown spec policy '{other}' (greedy|stochastic)"),
+        }
+    }
+
+    /// Stable identifier for logs and bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecPolicy::Greedy => "greedy",
+            SpecPolicy::Stochastic => "stochastic",
+        }
+    }
+}
+
+/// Self-speculative decoding configuration: draft `k` tokens at a cheap
+/// format derived from the same anchor, verify them in one multi-position
+/// pass at the row's serving format, accept a prefix and roll the KV back
+/// (see [`ContinuousBatch::join_spec`]). No extra network — the draft
+/// model *is* the serving model at lower precision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecCfg {
+    /// Format the draft pass runs at (the fast path — typically `mxint4`
+    /// on the integer-MAC pipeline).
+    pub draft_format: ElementFormat,
+    /// Format the verify pass runs at when no per-row format overrides it
+    /// (standalone decodes; the server verifies at each row's admission
+    /// format instead).
+    pub verify_format: ElementFormat,
+    /// Draft tokens proposed per verify pass (the *ceiling*: the in-flight
+    /// draft length adapts downward on low accept rates and back up on
+    /// full acceptance).
+    pub k: usize,
+    /// Acceptance policy.
+    pub policy: SpecPolicy,
+}
+
+impl SpecCfg {
+    /// Draft at `draft`, verify at `verify`, with `k = 4` greedy
+    /// acceptance.
+    pub fn new(draft: ElementFormat, verify: ElementFormat) -> SpecCfg {
+        SpecCfg {
+            draft_format: draft,
+            verify_format: verify,
+            k: 4,
+            policy: SpecPolicy::Greedy,
+        }
+    }
+
+    /// Parse a `key=value` list: `k=4,draft=mxint4,verify=mxint8,policy=greedy`
+    /// (any subset, any order; the omitted keys take those defaults).
+    pub fn parse(s: &str) -> Result<SpecCfg> {
+        let mut cfg = SpecCfg::new(ElementFormat::int(4), ElementFormat::int(8));
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("spec option '{part}' wants 'key=value'"))?;
+            match key.trim().to_ascii_lowercase().as_str() {
+                "k" => {
+                    cfg.k = value
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad spec k '{value}'"))?;
+                    if cfg.k == 0 {
+                        anyhow::bail!("spec k must be >= 1");
+                    }
+                }
+                "draft" => cfg.draft_format = ElementFormat::parse(value)?,
+                "verify" => cfg.verify_format = ElementFormat::parse(value)?,
+                "policy" => cfg.policy = SpecPolicy::parse(value)?,
+                other => anyhow::bail!("unknown spec option '{other}' (k|draft|verify|policy)"),
+            }
+        }
+        if cfg.draft_format == cfg.verify_format {
+            anyhow::bail!(
+                "spec draft and verify formats are both {} — drafting with the verify \
+                 weights cannot speed anything up",
+                cfg.draft_format.name()
+            );
+        }
+        Ok(cfg)
+    }
+
+    /// Compact identifier (`int4->int8.k4.greedy`) for logs and bench JSON.
+    pub fn label(&self) -> String {
+        format!(
+            "{}->{}.k{}.{}",
+            self.draft_format.name(),
+            self.verify_format.name(),
+            self.k,
+            self.policy.name()
+        )
     }
 }
 
@@ -131,6 +273,12 @@ pub struct FinishedRow {
     pub slot: usize,
     /// The decoded continuation text (prompt excluded).
     pub text: String,
+    /// Draft tokens this row proposed over its lifetime (`0` for
+    /// non-speculative rows).
+    pub spec_drafted: u64,
+    /// Draft tokens the verify passes accepted (`spec_accepted ≤
+    /// spec_drafted`; the ratio is the row's accept rate).
+    pub spec_accepted: u64,
 }
 
 /// What one live row's pending chunk was in a single
@@ -156,8 +304,17 @@ pub struct RowStepEvent {
     /// What the row's pending chunk was.
     pub kind: RowStepKind,
     /// Tokens the row fed this pass (window length for prefills, 1 for
-    /// decode).
+    /// plain decode, `1 + drafted` for a speculative verify pass).
     pub fed_tokens: usize,
+    /// Tokens the row emitted this step: 1 on ordinary steps, up to
+    /// `drafted + 1` when a speculative verify pass accepted a draft
+    /// prefix, 0 for a zero-budget row.
+    pub emitted: usize,
+    /// Draft tokens verified in this pass (0 on non-speculative steps).
+    pub drafted: usize,
+    /// Draft tokens accepted (`accepted ≤ drafted`; `drafted − accepted`
+    /// positions were rolled back out of the KV cache).
+    pub accepted: usize,
 }
 
 /// Per-slot decode state: the sequence's weight set, sampler, token
@@ -180,6 +337,47 @@ struct Slot<W> {
     /// What `pending` is (prefill window / decode token / re-prefill
     /// window) — reported by [`ContinuousBatch::step_with_events`].
     pending_kind: RowStepKind,
+    /// Speculative-decode state when this row was admitted via
+    /// [`ContinuousBatch::join_spec`].
+    spec: Option<SpecState<W>>,
+}
+
+/// Seed perturbation for the draft sampler's private RNG: the row RNG must
+/// stay byte-for-byte on the plain decode's stream (that is what makes
+/// [`SpecPolicy::Greedy`] token-identical), so draft-side sampling under
+/// temperature draws from an independent stream.
+const SPEC_DRAFT_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Per-slot speculative-decode state: the draft weight set, a private
+/// single-row KV cache mirroring the row's context at draft precision, the
+/// adaptive draft length, and lifetime accept statistics.
+struct SpecState<W> {
+    /// Draft weights (same anchor parameters as the row's verify weights,
+    /// cheaper format).
+    w: W,
+    /// Single-row draft-format mirror of the row's KV. The verify cache
+    /// cannot host draft positions (rows are format-tagged), so the draft
+    /// pass keeps its own pages — same page geometry, same absolute
+    /// positions, rolled back in lockstep with the verify cache.
+    cache: KvCache,
+    /// Draft-side sampler stream (see [`SPEC_DRAFT_SEED`]).
+    rng: Rng,
+    policy: SpecPolicy,
+    /// Configured draft-length ceiling.
+    k_max: usize,
+    /// Adaptive in-flight draft length: grows back toward `k_max` on full
+    /// acceptance, shrinks (floor 1) when under half the drafts land.
+    k_cur: usize,
+    /// Drafts proposed for the step in flight (0 ⇒ this step is a plain
+    /// decode for the row).
+    round: usize,
+    /// Draft distributions for the in-flight round
+    /// ([`SpecPolicy::Stochastic`] only).
+    qs: Vec<Vec<(usize, f64)>>,
+    /// Lifetime draft tokens proposed.
+    drafted: u64,
+    /// Lifetime draft tokens accepted.
+    accepted: u64,
 }
 
 /// A continuously batched, step-synchronized decode over `capacity` slots
@@ -211,6 +409,12 @@ pub struct ContinuousBatch<W: Deref<Target = NativeWeights>> {
     dims: ModelDims,
     cache: KvCache,
     slots: Vec<Option<Slot<W>>>,
+    /// Page geometry the cache was built with — speculative rows build
+    /// their draft mirrors with the same sizing.
+    kv_cfg: KvPageCfg,
+    /// Speculative rows stop drafting on steps with more than this many
+    /// live rows (see [`Self::set_spec_pressure`]).
+    spec_pressure: usize,
 }
 
 impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
@@ -232,7 +436,28 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
             dims: dims.clone(),
             cache: KvCache::with_slots_cfg(dims, capacity, kv),
             slots: (0..capacity).map(|_| None).collect(),
+            kv_cfg: kv,
+            spec_pressure: (capacity / 2).max(1),
         }
+    }
+
+    /// Set the batch-pressure threshold for speculative rows: on steps
+    /// with more than `rows` live rows, speculative rows skip drafting and
+    /// decode plainly (the shared verify pass is already batching that
+    /// many rows per weight-streaming pass, so drafting buys little and
+    /// costs draft forwards). Defaults to half the slot count (min 1).
+    /// Output tokens are unaffected either way — drafting only changes
+    /// *when* tokens are verified, never what they are.
+    pub fn set_spec_pressure(&mut self, rows: usize) {
+        self.spec_pressure = rows.max(1);
+    }
+
+    /// Lifetime `(drafted, accepted)` draft-token counts for the
+    /// speculative row in `slot` (`None` for free or non-speculative
+    /// rows).
+    pub fn spec_stats(&self, slot: usize) -> Option<(u64, u64)> {
+        let spec = self.slots.get(slot)?.as_ref()?.spec.as_ref()?;
+        Some((spec.drafted, spec.accepted))
     }
 
     /// Total slots (live + free).
@@ -260,9 +485,26 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
     }
 
     /// Paged-KV accounting snapshot (resident vs dense-equivalent bytes,
-    /// pool utilization) for this batch's cache.
+    /// pool utilization) for this batch's cache, **plus** every live
+    /// speculative row's draft mirror (bytes and page counts summed; the
+    /// peak sums the per-cache high-water marks, an upper bound on the
+    /// true combined peak). Speculative rows therefore report the real
+    /// memory they hold — roughly 2× a plain row while live.
     pub fn kv_memory(&self) -> KvMemory {
-        self.cache.kv_memory()
+        let mut m = self.cache.kv_memory();
+        for s in self.slots.iter().flatten() {
+            if let Some(spec) = &s.spec {
+                let d = spec.cache.kv_memory();
+                m.resident_bytes += d.resident_bytes;
+                m.resident_peak_bytes += d.resident_peak_bytes;
+                m.dense_equivalent_bytes += d.dense_equivalent_bytes;
+                m.pool_bytes += d.pool_bytes;
+                m.used_pages += d.used_pages;
+                m.free_pages += d.free_pages;
+                m.total_pages += d.total_pages;
+            }
+        }
+        m
     }
 
     /// Shrink this batch's KV page budget mid-run (see
@@ -280,16 +522,7 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
     /// Returns the claimed slot index; errors when the batch is full or
     /// `w` was built for a different model.
     pub fn join(&mut self, w: W, prompt: &str, n_tokens: usize, cfg: &SampleCfg) -> Result<usize> {
-        let wd = &w.dims;
-        if wd.d_model != self.dims.d_model
-            || wd.n_layers != self.dims.n_layers
-            || wd.seq_len != self.dims.seq_len
-            || wd.vocab != self.dims.vocab
-            || wd.d_ff != self.dims.d_ff
-            || wd.n_heads != self.dims.n_heads
-        {
-            anyhow::bail!("joining weight set was built for different model dims");
-        }
+        self.check_dims(&w)?;
         let slot = self.cache.join_row(RowTag::of(&w))?;
         let mut tokens = encode(prompt);
         if tokens.is_empty() {
@@ -308,8 +541,74 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
             emitted: 0,
             pending,
             pending_kind: RowStepKind::Prefill,
+            spec: None,
         });
         Ok(slot)
+    }
+
+    /// [`Self::join`] with self-speculative decoding: the row decodes by
+    /// drafting up to `k` tokens per step through `draft` (a cheaper
+    /// format of the *same* anchor parameters — enforced by `Arc`
+    /// identity) and verifying them in its slice of the shared batched
+    /// forward at `w`, rolling the KV back past rejected drafts. Under
+    /// [`SpecPolicy::Greedy`] the emitted tokens are identical to a plain
+    /// [`Self::join`] with `w`; the speedup comes from emitting up to
+    /// `k + 1` tokens per verify pass when drafts land.
+    #[allow(clippy::too_many_arguments)]
+    pub fn join_spec(
+        &mut self,
+        w: W,
+        draft: W,
+        prompt: &str,
+        n_tokens: usize,
+        cfg: &SampleCfg,
+        k: usize,
+        policy: SpecPolicy,
+    ) -> Result<usize> {
+        if k == 0 {
+            anyhow::bail!("speculative draft length k must be >= 1");
+        }
+        self.check_dims(&draft)?;
+        if !Arc::ptr_eq(&w.shared, &draft.shared) {
+            anyhow::bail!(
+                "speculative draft weights must share the verify anchor's f32 parameters \
+                 (derive both formats from one backend / FormatCache)"
+            );
+        }
+        let slot = self.join(w, prompt, n_tokens, cfg)?;
+        let mut cache = KvCache::with_slots_cfg(&self.dims, 1, self.kv_cfg);
+        cache
+            .join_row(RowTag::of(&draft))
+            .expect("a fresh single-row cache can always admit its row");
+        let s = self.slots[slot].as_mut().expect("slot was just joined");
+        s.spec = Some(SpecState {
+            w: draft,
+            cache,
+            rng: Rng::new(cfg.seed ^ SPEC_DRAFT_SEED),
+            policy,
+            k_max: k,
+            k_cur: k,
+            round: 0,
+            qs: Vec::new(),
+            drafted: 0,
+            accepted: 0,
+        });
+        Ok(slot)
+    }
+
+    /// Bail unless `w` was built for this batch's model dims.
+    fn check_dims(&self, w: &NativeWeights) -> Result<()> {
+        let wd = &w.dims;
+        if wd.d_model != self.dims.d_model
+            || wd.n_layers != self.dims.n_layers
+            || wd.seq_len != self.dims.seq_len
+            || wd.vocab != self.dims.vocab
+            || wd.d_ff != self.dims.d_ff
+            || wd.n_heads != self.dims.n_heads
+        {
+            anyhow::bail!("joining weight set was built for different model dims");
+        }
+        Ok(())
     }
 
     /// Cancel the sequence in `slot` (no result is emitted); the slot and
@@ -335,17 +634,85 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
     }
 
     /// [`Self::step`] plus one [`RowStepEvent`] per fed row, attributing
-    /// what each row's chunk was (prefill / decode / overflow re-prefill).
-    /// The events are pure bookkeeping read off state [`Self::step`]
-    /// already tracks — decode numerics and sampling are untouched, so
-    /// per-row bit-identity to solo decode is preserved.
+    /// what each row's chunk was (prefill / decode / overflow re-prefill)
+    /// and how many tokens it emitted (speculative rows emit up to
+    /// `drafted + 1` per step). The events are pure bookkeeping read off
+    /// state [`Self::step`] already tracks — decode numerics and sampling
+    /// are untouched, so per-row bit-identity to solo decode is preserved.
     pub fn step_with_events(&mut self) -> Result<(Vec<FinishedRow>, Vec<RowStepEvent>)> {
         let rows = self.cache.rows();
         let Some(filler) = self.slots.iter().position(|s| s.is_some()) else {
             return Ok((Vec::new(), Vec::new()));
         };
-        // Per-row weight/chunk views; free rows ride along with empty
-        // chunks (their weight entry is ignored by the forward).
+        let vocab = self.dims.vocab;
+        let seq_len = self.dims.seq_len;
+
+        // Phase A — speculative rows draft ahead of the shared verify
+        // pass: catch the draft mirror up to the row's context (one
+        // multi-position pass over whatever the last rollback discarded,
+        // ending with the pending token), then propose up to `k_cur`
+        // tokens autoregressively at draft precision. The drafts ride
+        // `pending`, so phase B stays the one batched forward every row
+        // shares — a speculative row simply feeds `1 + k` positions.
+        let active = self.active();
+        for r in 0..self.slots.len() {
+            let Some(s) = self.slots[r].as_mut() else {
+                continue;
+            };
+            let Some(spec) = s.spec.as_mut() else {
+                continue;
+            };
+            spec.round = 0;
+            spec.qs.clear();
+            if s.pending_kind != RowStepKind::Decode || s.pending.len() != 1 {
+                continue; // prefill / re-prefill windows verify nothing
+            }
+            if active > self.spec_pressure {
+                continue; // verify batching already fills the pass
+            }
+            let l = self.cache.len_of(r);
+            let remaining = s.n_tokens.saturating_sub(s.emitted);
+            // The verify pass feeds `1 + k` positions into the row's
+            // window (`l + 1 + k ≤ seq_len`) and can emit at most `k + 1`
+            // tokens (`≤ remaining`); a cap of 0 means drafting cannot
+            // pay this step — decode plainly.
+            let k = spec
+                .k_cur
+                .min(remaining.saturating_sub(1))
+                .min(seq_len.saturating_sub(l + 1));
+            if k == 0 {
+                continue;
+            }
+            let d = spec.cache.len_of(0);
+            let base = s.tokens.len() - 1 - l;
+            let feed: Vec<i32> = s.tokens[base + d..].to_vec();
+            let mut logits = forward_cached(&spec.w, &mut spec.cache, &feed)?;
+            let mut at = (feed.len() - 1) * vocab;
+            for i in 0..k {
+                let row = &logits[at..at + vocab];
+                let t = match spec.policy {
+                    // The row RNG must stay on the plain decode's stream,
+                    // so drafts sample from a private one (argmax under a
+                    // greedy config — no draw at all).
+                    SpecPolicy::Greedy => sample(row, &s.cfg, &mut spec.rng) as i32,
+                    SpecPolicy::Stochastic => {
+                        let q = dist(row, &s.cfg);
+                        let t = sample_from(&q, &mut spec.rng) as i32;
+                        spec.qs.push(q);
+                        t
+                    }
+                };
+                s.pending.push(t);
+                if i + 1 < k {
+                    logits = forward_cached(&spec.w, &mut spec.cache, &[t])?;
+                    at = 0;
+                }
+            }
+            spec.round = k;
+        }
+
+        // Phase B — per-row weight/chunk views; free rows ride along with
+        // empty chunks (their weight entry is ignored by the forward).
         let filler_w: &NativeWeights = &self.slots[filler].as_ref().unwrap().w;
         let mut ws: Vec<&NativeWeights> = Vec::with_capacity(rows);
         let mut chunks: Vec<&[i32]> = Vec::with_capacity(rows);
@@ -364,8 +731,8 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
         let counts: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
         let logits = forward_cached_batch_mixed(&ws, &mut self.cache, &chunks)?;
 
-        let vocab = self.dims.vocab;
-        let seq_len = self.dims.seq_len;
+        // Phase C — per-row sampling (plain) or accept/rollback
+        // (speculative), completion, and overflow re-prefill.
         let mut finished = Vec::new();
         let mut events = Vec::new();
         let mut off = 0usize;
@@ -374,20 +741,25 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
             if count == 0 {
                 continue;
             }
-            let last = &logits[(off + count - 1) * vocab..(off + count) * vocab];
+            let row_logits = &logits[off * vocab..(off + count) * vocab];
             off += count;
             let s = self.slots[r].as_mut().expect("fed row holds a sequence");
-            events.push(RowStepEvent {
-                slot: r,
-                kind: s.pending_kind,
-                fed_tokens: count,
-            });
-            s.pending.clear();
+            let fed_kind = s.pending_kind;
+            let (round, policy) = s
+                .spec
+                .as_ref()
+                .map_or((0, SpecPolicy::Greedy), |sp| (sp.round, sp.policy));
+            let mut emitted_now = 0usize;
+            let mut accepted_now = 0usize;
             let mut done = s.n_tokens == 0;
-            if !done {
+            if !done && round == 0 {
+                // Plain path: sample one token from the last fed position.
+                s.pending.clear();
+                let last = &row_logits[(count - 1) * vocab..];
                 let next = sample(last, &s.cfg, &mut s.rng) as i32;
                 s.tokens.push(next);
                 s.emitted += 1;
+                emitted_now = 1;
                 if s.emitted == s.n_tokens {
                     done = true;
                 } else if self.cache.len_of(r) >= seq_len {
@@ -399,17 +771,144 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
                     s.pending = s.tokens[s.tokens.len() - keep..].to_vec();
                     s.pending_kind = RowStepKind::Reprefill;
                     self.cache.reset_row(r);
+                    if let Some(spec) = s.spec.as_mut() {
+                        // The mirror's absolute positions die with the
+                        // window; it re-syncs after the re-prefill.
+                        spec.cache.reset_row(0);
+                    }
                 } else {
                     s.pending.push(next);
                     s.pending_kind = RowStepKind::Decode;
                 }
+            } else if !done {
+                // Speculative verify: `count = 1 + round` positions were
+                // fed, so logits row `i` scores the token *after*
+                // `pending[i]` — row 0 judges the first draft, row
+                // `round` supplies the bonus token when every draft
+                // lands.
+                let l_before = self.cache.len_of(r) - count;
+                let drafts: Vec<i32> = s.pending[1..].to_vec();
+                s.pending.clear();
+                let mut out: Vec<i32> = Vec::with_capacity(round + 1);
+                let mut a = 0usize;
+                match policy {
+                    SpecPolicy::Greedy => {
+                        // Lazy target matching: sample the row's *actual*
+                        // next token at each position with the row RNG
+                        // (one draw per emitted token — a plain decode's
+                        // exact consumption), accept drafts that guessed
+                        // it. The first miss ends the round with its
+                        // correction token.
+                        for i in 0..=round {
+                            let row = &row_logits[i * vocab..(i + 1) * vocab];
+                            let v = sample(row, &s.cfg, &mut s.rng) as i32;
+                            out.push(v);
+                            if i < round && v == drafts[i] {
+                                a += 1;
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    SpecPolicy::Stochastic => {
+                        let spec = s.spec.as_ref().expect("round > 0 implies spec state");
+                        for i in 0..round {
+                            let p = dist(&row_logits[i * vocab..(i + 1) * vocab], &s.cfg);
+                            let d = drafts[i];
+                            let pd = prob_of(&p, d);
+                            let qd = prob_of(&spec.qs[i], d);
+                            if qd > 0.0 && s.rng.f64() < (pd / qd).min(1.0) {
+                                out.push(d);
+                                a += 1;
+                                continue;
+                            }
+                            // Rejected: the replacement samples from the
+                            // residual max(p − q, 0), falling back to `p`
+                            // when the draft distribution covers it
+                            // entirely.
+                            let resid: Vec<f64> = p
+                                .iter()
+                                .map(|&(t, w)| (w - prob_of(&spec.qs[i], t as i32)).max(0.0))
+                                .collect();
+                            let t = if resid.iter().sum::<f64>() > 0.0 {
+                                p[s.rng.weighted(&resid)].0
+                            } else {
+                                sample_from(&p, &mut s.rng)
+                            };
+                            out.push(t as i32);
+                            break;
+                        }
+                        if a == round {
+                            let row = &row_logits[round * vocab..(round + 1) * vocab];
+                            out.push(sample(row, &s.cfg, &mut s.rng) as i32);
+                        }
+                    }
+                }
+                accepted_now = a;
+                emitted_now = out.len();
+                s.tokens.extend_from_slice(&out);
+                s.emitted += out.len();
+                // Rollback: the verify cache keeps the fed token plus the
+                // accepted prefix; the last emitted token is *not* fed
+                // yet — it becomes the next pending decode token, exactly
+                // as in a plain step. Pages past the cut return to the
+                // pool now. The mirror rolls back in lockstep (it never
+                // holds the bonus token, hence the extra clamp).
+                let new_len = l_before + out.len();
+                self.cache.truncate_row(r, new_len);
+                {
+                    let spec = s.spec.as_mut().expect("round > 0 implies spec state");
+                    spec.cache.truncate_row(0, new_len.min(l_before + round));
+                    spec.drafted += round as u64;
+                    spec.accepted += a as u64;
+                    // Adaptive draft length: full acceptance earns a
+                    // longer draft (up to the ceiling); under half
+                    // landing pays for one fewer.
+                    if a == round {
+                        spec.k_cur = (spec.k_cur + 1).min(spec.k_max);
+                    } else if a * 2 < round {
+                        spec.k_cur = spec.k_cur.saturating_sub(1).max(1);
+                    }
+                }
+                if s.emitted == s.n_tokens {
+                    done = true;
+                } else if self.cache.len_of(r) >= seq_len {
+                    let keep = (seq_len / 2).max(1);
+                    s.pending = s.tokens[s.tokens.len() - keep..].to_vec();
+                    s.pending_kind = RowStepKind::Reprefill;
+                    self.cache.reset_row(r);
+                    s.spec
+                        .as_mut()
+                        .expect("round > 0 implies spec state")
+                        .cache
+                        .reset_row(0);
+                } else {
+                    s.pending.push(*out.last().expect("a verify round emits"));
+                    s.pending_kind = RowStepKind::Decode;
+                }
+            } else {
+                s.pending.clear();
             }
+            events.push(RowStepEvent {
+                slot: r,
+                kind: fed_kind,
+                fed_tokens: count,
+                emitted: emitted_now,
+                drafted: round,
+                accepted: accepted_now,
+            });
             if done {
                 let s = self.slots[r].take().expect("fed row holds a sequence");
                 self.cache.retire_row(r);
+                let (sd, sa) = s
+                    .spec
+                    .as_ref()
+                    .map_or((0, 0), |sp| (sp.drafted, sp.accepted));
                 finished.push(FinishedRow {
                     slot: r,
                     text: decode(&s.tokens[s.start_len..]),
+                    spec_drafted: sd,
+                    spec_accepted: sa,
                 });
             }
         }
@@ -458,8 +957,13 @@ pub fn generate(
 }
 
 /// Sample one token id from a logits row.
+///
+/// A deterministic configuration (`temperature == 0.0` or `top_k == 1`)
+/// resolves to a plain argmax *without touching the RNG stream* — the
+/// guarantee speculative draft-vs-verify token comparison (and any test
+/// that replays a seed) relies on.
 pub fn sample(logits: &[f32], cfg: &SampleCfg, rng: &mut Rng) -> usize {
-    if cfg.temperature <= 0.0 {
+    if cfg.temperature <= 0.0 || cfg.top_k == 1 {
         return argmax(logits);
     }
     // Top-k + temperature softmax in f64.
@@ -474,6 +978,50 @@ pub fn sample(logits: &[f32], cfg: &SampleCfg, rng: &mut Rng) -> usize {
         .map(|&i| ((logits[i] as f64 - max) / cfg.temperature as f64).exp())
         .collect();
     idx[rng.weighted(&weights)]
+}
+
+/// The *normalized* distribution [`sample`] draws from, as sparse
+/// `(token, prob)` pairs over the top-k support. Deterministic configs
+/// yield a point mass. Rejection-sampling acceptance (the `Stochastic`
+/// speculative policy) needs the explicit densities of both the draft and
+/// verify distributions, not just a draw.
+fn dist(logits: &[f32], cfg: &SampleCfg) -> Vec<(usize, f64)> {
+    if cfg.temperature <= 0.0 || cfg.top_k == 1 {
+        return vec![(argmax(logits), 1.0)];
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if cfg.top_k > 0 && cfg.top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(cfg.top_k);
+    }
+    let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max) as f64;
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| ((logits[i] as f64 - max) / cfg.temperature as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    idx.into_iter()
+        .zip(weights)
+        .map(|(i, w)| (i, w / total))
+        .collect()
+}
+
+/// Draw a token from a sparse distribution produced by [`dist`]. A point
+/// mass returns without consuming randomness, mirroring [`sample`]'s
+/// deterministic fast path.
+fn sample_from(d: &[(usize, f64)], rng: &mut Rng) -> usize {
+    if d.len() == 1 {
+        return d[0].0;
+    }
+    let weights: Vec<f64> = d.iter().map(|&(_, w)| w).collect();
+    d[rng.weighted(&weights)].0
+}
+
+/// Probability of token `t` under a sparse distribution (0 off-support).
+fn prob_of(d: &[(usize, f64)], t: i32) -> f64 {
+    d.iter()
+        .find(|&&(x, _)| x as i32 == t)
+        .map_or(0.0, |&(_, w)| w)
 }
 
 fn argmax(xs: &[f32]) -> usize {
@@ -500,6 +1048,53 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(sample(&logits, &cfg, &mut rng), 1);
         }
+    }
+
+    #[test]
+    fn deterministic_configs_leave_rng_untouched() {
+        let logits = vec![0.3f32, 2.0, 1.9, -1.0];
+        for cfg in [
+            SampleCfg {
+                temperature: 0.0,
+                top_k: 0,
+                seed: 0,
+            },
+            SampleCfg {
+                temperature: 0.9,
+                top_k: 1,
+                seed: 0,
+            },
+        ] {
+            let mut used = Rng::new(7);
+            let mut fresh = Rng::new(7);
+            for _ in 0..5 {
+                assert_eq!(sample(&logits, &cfg, &mut used), 1);
+            }
+            assert_eq!(
+                used.next_u64(),
+                fresh.next_u64(),
+                "deterministic sampling ({cfg:?}) must not consume randomness"
+            );
+        }
+    }
+
+    #[test]
+    fn spec_cfg_parses_key_value_pairs() {
+        let sp = SpecCfg::parse("k=8,draft=mxint4,verify=mxfp8,policy=stochastic").unwrap();
+        assert_eq!(sp.k, 8);
+        assert_eq!(sp.draft_format, ElementFormat::int(4));
+        assert_eq!(sp.verify_format, ElementFormat::fp_from_bits(8));
+        assert_eq!(sp.policy, SpecPolicy::Stochastic);
+        let d = SpecCfg::parse("").unwrap();
+        assert_eq!(d.k, 4);
+        assert_eq!(d.policy, SpecPolicy::Greedy);
+        assert_eq!(d.label(), "int4->int8.k4.greedy");
+        assert!(SpecCfg::parse("k=0").is_err(), "k=0 must be rejected");
+        assert!(SpecCfg::parse("bogus=1").is_err(), "unknown key must be rejected");
+        assert!(
+            SpecCfg::parse("draft=mxint8,verify=mxint8").is_err(),
+            "draft == verify must be rejected"
+        );
     }
 
     #[test]

@@ -119,6 +119,7 @@ COMMANDS:
         [--checkpoint P] [--cache-mb N] [--act f32|int8] [--workers N]
         [--gen-requests N] [--gen-tokens N]
         [--batching continuous|gather] [--slots N] [--kv-page N]
+        [--spec k=4,draft=mxint4[,policy=greedy|stochastic]]
         [--trace-out PATH] [--metrics-out PATH]
                                     run the elastic serving demo workload:
                                     N workers share one engine; scoring and
@@ -128,7 +129,11 @@ COMMANDS:
                                     joins into --slots decode rows; KV paged
                                     at --kv-page positions per page);
                                     --batching gather restores the legacy
-                                    grouped batched decode. --trace-out
+                                    grouped batched decode. --spec turns on
+                                    self-speculative decoding: rows draft k
+                                    tokens at the cheap format and verify
+                                    at their own serving format, emitting
+                                    up to k+1 tokens/step. --trace-out
                                     writes a Chrome-trace JSON of every
                                     request lifecycle (Perfetto-loadable);
                                     --metrics-out writes a JSON metrics
@@ -554,6 +559,10 @@ fn serve(args: &Args) -> Result<()> {
     let queue_cap = args.usize("queue-cap", 0)?;
     let shutdown_grace = std::time::Duration::from_millis(args.u64("shutdown-grace-ms", 5000)?);
     let kv_page = kv_page_cfg(args)?;
+    let spec = args
+        .get("spec")
+        .map(mfqat::eval::generate::SpecCfg::parse)
+        .transpose()?;
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
     let act = ActMode::parse(args.get_or("act", "f32"))?;
@@ -592,6 +601,7 @@ fn serve(args: &Args) -> Result<()> {
             metrics_out: metrics_out.clone(),
             queue_cap,
             shutdown_grace,
+            spec,
             ..ServerConfig::default()
         },
     )?;

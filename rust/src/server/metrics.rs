@@ -101,6 +101,16 @@ pub struct Metrics {
     /// session (always `<= worker_panics`; the difference died during
     /// shutdown).
     pub worker_restarts: u64,
+    /// Draft tokens proposed by speculative rows (self-speculative
+    /// decoding's low-precision draft pass).
+    pub spec_drafted: u64,
+    /// Draft tokens the verify passes accepted (`≤ spec_drafted`; the
+    /// ratio is the fleet accept rate).
+    pub spec_accepted: u64,
+    /// KV positions rolled back out of verify caches for rejected drafts
+    /// (`spec_drafted − spec_accepted` — the price of misses, paid in
+    /// immediately recycled pages).
+    pub spec_rollback_tokens: u64,
 }
 
 impl Metrics {
@@ -144,6 +154,24 @@ impl Metrics {
         self.batch_size.push(batch as f64);
         self.gen_exec_time.push(exec_s);
         self.gen_tokens += tokens;
+    }
+
+    /// Record one speculative verify pass: `drafted` tokens proposed,
+    /// `accepted` of them kept (the difference was rolled back out of the
+    /// KV cache). Standalone-accumulator twin of [`ServerObs::record_spec`].
+    pub fn record_spec(&mut self, drafted: u64, accepted: u64) {
+        self.spec_drafted += drafted;
+        self.spec_accepted += accepted;
+        self.spec_rollback_tokens += drafted.saturating_sub(accepted);
+    }
+
+    /// Fleet-wide speculative accept rate (`0.0` before any draft).
+    pub fn spec_accept_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        }
     }
 
     /// Refresh the weight-cache counter snapshot (once per batch).
@@ -245,8 +273,19 @@ impl Metrics {
         } else {
             String::new()
         };
+        let spec = if self.spec_drafted > 0 {
+            format!(
+                " spec[drafted:{} accepted:{} rolled:{} accept:{:.0}%]",
+                self.spec_drafted,
+                self.spec_accepted,
+                self.spec_rollback_tokens,
+                self.spec_accept_rate() * 100.0,
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "workers={} requests={} latency[{}] mean_batch={:.2}{}{} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]{}{}",
+            "workers={} requests={} latency[{}] mean_batch={:.2}{}{} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]{}{}{}",
             self.workers.max(1),
             self.requests,
             self.latency.summary(),
@@ -259,6 +298,7 @@ impl Metrics {
             self.cache.evictions,
             self.cache.used_bytes / 1024,
             kv,
+            spec,
             faults,
         )
     }
@@ -328,6 +368,9 @@ pub struct ServerObs {
     deadline_misses: Arc<Counter>,
     worker_panics: Arc<Counter>,
     worker_restarts: Arc<Counter>,
+    spec_drafted: Arc<Counter>,
+    spec_accepted: Arc<Counter>,
+    spec_rollback_tokens: Arc<Counter>,
     latency: Arc<Hist>,
     gen_latency: Arc<Hist>,
     queue_wait: Arc<Hist>,
@@ -382,6 +425,9 @@ impl ServerObs {
             deadline_misses: registry.counter("deadline_misses"),
             worker_panics: registry.counter("worker_panics"),
             worker_restarts: registry.counter("worker_restarts"),
+            spec_drafted: registry.counter("spec_drafted"),
+            spec_accepted: registry.counter("spec_accepted"),
+            spec_rollback_tokens: registry.counter("spec_rollback_tokens"),
             latency: registry.hist("latency_seconds"),
             gen_latency: registry.hist("gen_latency_seconds"),
             queue_wait: registry.hist("queue_wait_seconds"),
@@ -493,6 +539,30 @@ impl ServerObs {
     /// Count one supervisor respawn of a crashed worker.
     pub fn record_worker_restart(&self) {
         self.worker_restarts.inc();
+    }
+
+    /// Record one speculative verify pass: `drafted` tokens proposed,
+    /// `accepted` kept, the difference rolled back out of the KV cache.
+    pub fn record_spec(&self, drafted: u64, accepted: u64) {
+        self.spec_drafted.add(drafted);
+        self.spec_accepted.add(accepted);
+        self.spec_rollback_tokens.add(drafted.saturating_sub(accepted));
+    }
+
+    /// Publish one speculative row's lifetime accept rate as a labeled
+    /// gauge (`spec_accept_rate_permille{worker,slot}`, 0..=1000 — gauges
+    /// are integer, so the rate ships in permille). Workers refresh this
+    /// per step for their live speculative rows.
+    pub fn set_spec_accept_rate(&self, worker: usize, slot: usize, drafted: u64, accepted: u64) {
+        if drafted == 0 {
+            return;
+        }
+        let w = worker.to_string();
+        let s = slot.to_string();
+        let labels: [(&str, &str); 2] = [("worker", w.as_str()), ("slot", s.as_str())];
+        self.registry
+            .gauge_with("spec_accept_rate_permille", &labels)
+            .set(accepted * 1000 / drafted);
     }
 
     /// Crude retry-after hint for a rejected request: roughly one queue's
@@ -636,6 +706,9 @@ impl ServerObs {
             deadline_misses: self.deadline_misses.get(),
             worker_panics: self.worker_panics.get(),
             worker_restarts: self.worker_restarts.get(),
+            spec_drafted: self.spec_drafted.get(),
+            spec_accepted: self.spec_accepted.get(),
+            spec_rollback_tokens: self.spec_rollback_tokens.get(),
         }
     }
 
@@ -933,6 +1006,33 @@ mod tests {
         assert!(s.contains(want), "{s}");
         // A clean run prints no fault section.
         assert!(!Metrics::new().summary().contains("faults["));
+    }
+
+    #[test]
+    fn spec_counters_flow_into_snapshot_summary_and_prometheus() {
+        let obs = ServerObs::new(1, false);
+        obs.record_spec(4, 3);
+        obs.record_spec(4, 1);
+        obs.set_spec_accept_rate(0, 2, 8, 4);
+        let m = obs.snapshot();
+        assert_eq!(m.spec_drafted, 8);
+        assert_eq!(m.spec_accepted, 4);
+        assert_eq!(m.spec_rollback_tokens, 4);
+        assert!((m.spec_accept_rate() - 0.5).abs() < 1e-12);
+        let s = m.summary();
+        assert!(
+            s.contains("spec[drafted:8 accepted:4 rolled:4 accept:50%]"),
+            "{s}"
+        );
+        let prom = obs.prometheus();
+        assert!(prom.contains("mfqat_spec_drafted_total 8"), "{prom}");
+        assert!(prom.contains("mfqat_spec_accept_rate_permille"), "{prom}");
+        assert!(prom.contains("500"), "{prom}");
+        // Non-speculative runs print no spec section and skip the gauge.
+        assert!(!Metrics::new().summary().contains("spec["));
+        let quiet = ServerObs::new(1, false);
+        quiet.set_spec_accept_rate(0, 0, 0, 0);
+        assert!(!quiet.prometheus().contains("spec_accept_rate"), "no gauge before drafts");
     }
 
     #[test]

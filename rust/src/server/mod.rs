@@ -339,6 +339,14 @@ pub struct ServerConfig {
     /// environment variable; `None` (the production case) injects
     /// nothing.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Self-speculative decoding for the continuous generate lane
+    /// (`--spec k=4,draft=mxint4`): rows admitted at a format other than
+    /// `spec.draft_format` draft ahead at that cheap format and verify in
+    /// their own serving format, emitting up to `k + 1` tokens per step
+    /// (see [`crate::eval::generate::SpecCfg`]; the `verify_format` field
+    /// is ignored here — each row verifies at its admission format).
+    /// `None` (the default) decodes plainly.
+    pub spec: Option<crate::eval::generate::SpecCfg>,
 }
 
 impl Default for ServerConfig {
@@ -357,6 +365,7 @@ impl Default for ServerConfig {
             queue_cap: 0,
             shutdown_grace: Duration::from_secs(5),
             faults: FaultPlan::from_env(),
+            spec: None,
         }
     }
 }
@@ -1314,6 +1323,10 @@ struct GenRow {
     last_token: Option<Instant>,
     /// Tokens sampled so far (trace annotation).
     emitted: usize,
+    /// Draft tokens this row proposed (speculative rows only).
+    drafted: u64,
+    /// Draft tokens the verify passes accepted for this row.
+    accepted: u64,
 }
 
 /// A worker's generation-lane state, owned by the supervisor *outside*
@@ -1498,7 +1511,15 @@ fn continuous_loop<'e>(
             if r.format.is_none() && shed == ShedTier::Downshift {
                 obs.record_downshift();
             }
-            match session.join(&r.prompt, fmt, r.n_tokens, &r.cfg) {
+            // Speculative lane: when configured, the row drafts ahead at
+            // the cheap format and verifies at its own admission format
+            // (the session falls back to a plain join for rows admitted
+            // *at* the draft format — nothing to speed up there).
+            let joined = match config.spec.as_ref() {
+                Some(sp) => session.join_spec(&r.prompt, fmt, sp, r.n_tokens, &r.cfg),
+                None => session.join(&r.prompt, fmt, r.n_tokens, &r.cfg),
+            };
+            match joined {
                 Ok(slot) => {
                     let admitted = Instant::now();
                     let wait = admitted.saturating_duration_since(r.enqueued);
@@ -1532,6 +1553,8 @@ fn continuous_loop<'e>(
                         cancel: r.cancel,
                         last_token: None,
                         emitted: 0,
+                        drafted: 0,
+                        accepted: 0,
                     });
                 }
                 Err(e) => {
@@ -1647,9 +1670,15 @@ fn continuous_loop<'e>(
                         }
                     }
                     row.last_token = Some(step_end);
-                    row.emitted += 1;
+                    row.emitted += ev.emitted;
                     if ev.kind == RowStepKind::Reprefill {
                         obs.record_reprefill();
+                    }
+                    if ev.drafted > 0 {
+                        obs.record_spec(ev.drafted as u64, ev.accepted as u64);
+                        row.drafted += ev.drafted as u64;
+                        row.accepted += ev.accepted as u64;
+                        obs.set_spec_accept_rate(worker, ev.slot, row.drafted, row.accepted);
                     }
                     if let Some(sink) = obs.trace() {
                         let name = match ev.kind {

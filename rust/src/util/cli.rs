@@ -21,6 +21,7 @@
 //! | `--trace-out` | file path (`serve` only) | Collect per-request lifecycle spans (queue-wait, prefill, each decode step, completion) and write them as Chrome-trace-event JSON at shutdown — loadable in Perfetto / `chrome://tracing`, one track per worker with one lane per decode row. Tracing is off (and costs one `Option` check) without this flag. |
 //! | `--metrics-out` | file path (`serve` only) | Write a machine-readable metrics snapshot periodically and at shutdown: JSON (counters, latency/TTFT/inter-token percentiles per format, KV/cache/queue time series) at the path, Prometheus text exposition next to it with a `.prom` extension. |
 //! | `--queue-cap` | integer (default `0` = unbounded, `serve` only) | Bound on queued-but-unstarted requests. When full, new submissions are rejected at the client with a typed `Rejected { retry_after }` error instead of growing the backlog — the last rung of the shed ladder (downshift → defer → reject). |
+//! | `--spec` | `k=4,draft=mxint4[,policy=greedy\|stochastic]` (`serve` only) | Self-speculative decoding for the continuous generate lane: each row drafts up to `k` tokens autoregressively at the cheap `draft` format (same anchor parameters — the draft model is free) and verifies them in one multi-position pass at its own serving format, rolling its paged KV back past rejected drafts. `policy=greedy` (default) keeps outputs token-identical to plain decode; `policy=stochastic` is distribution-preserving rejection sampling. Off without this flag. |
 //! | `--shutdown-grace-ms` | integer (default `5000`, `serve` only) | Drain grace period for `Server::shutdown`: workers stop taking new work immediately, finish in-flight decode rows until the grace deadline, then fail whatever remains. Workers are joined (even if panicked) and the metrics sampler always stops. |
 //!
 //! **Environment variables** (read at each cache/engine construction):

@@ -201,6 +201,103 @@ fn prop_kv_churn_never_leaks_pages() {
 }
 
 #[test]
+fn prop_truncate_row_rollback_is_exact_and_leak_free() {
+    // Property over the speculative-rollback primitive: `truncate_row`
+    // at **any** row count keeps the free list exactly consistent with
+    // the per-row lengths (`used == Σ ceil(len/page)`), truncate-to-zero
+    // returns the pool to baseline, and a rolled-back row re-decodes
+    // bit-identically to a cache that never held the discarded positions.
+    let dims = fwd_dims();
+    let ck = anchor(&dims, 56, ElementFormat::int(8));
+    let ws = shared_weight_sets(
+        &dims,
+        &ck,
+        &[ElementFormat::int(8), ElementFormat::int(4)],
+        ActMode::F32,
+    );
+    mfqat::util::props::run_cases("truncate_row_rollback", 8, |g| {
+        let pp = 1 + g.rng.below(4); // 1..=4 positions per page
+        let rows = 2 + g.rng.below(3); // 2..=4 rows — never the 1-row special case
+        let mut cache = KvCache::with_rows_cfg(&dims, rows, KvPageCfg::with_page(pp));
+        let total = cache.kv_memory().total_pages;
+        // Row r runs in format r mod 2 — truncation must respect mixed
+        // formats exactly like uniform ones.
+        let wrefs: Vec<&NativeWeights> = (0..rows).map(|r| &ws[r % ws.len()]).collect();
+        // Per-row token history mirroring what the cache should hold.
+        let mut hist: Vec<Vec<i32>> = Vec::new();
+        let mut feeds: Vec<Vec<i32>> = Vec::new();
+        for _ in 0..rows {
+            let n = 1 + g.rng.below(4);
+            let t: Vec<i32> = (0..n).map(|_| g.rng.below(dims.vocab) as i32).collect();
+            hist.push(t.clone());
+            feeds.push(t);
+        }
+        let slices: Vec<&[i32]> = feeds.iter().map(|t| t.as_slice()).collect();
+        forward_cached_batch_mixed(&wrefs, &mut cache, &slices).map_err(|e| e.to_string())?;
+        for _ in 0..g.rng.range(4, 10) {
+            let r = g.rng.below(rows);
+            if g.rng.chance(0.5) && hist[r].len() + 1 < dims.seq_len {
+                // Append one token to row r alone (other rows idle).
+                let t = g.rng.below(dims.vocab) as i32;
+                hist[r].push(t);
+                let one = [t];
+                let mut slices: Vec<&[i32]> = vec![&[]; rows];
+                slices[r] = &one;
+                forward_cached_batch_mixed(&wrefs, &mut cache, &slices)
+                    .map_err(|e| e.to_string())?;
+            } else {
+                // Roll row r back to an arbitrary kept prefix.
+                let keep = g.rng.below(hist[r].len() + 1);
+                cache.truncate_row(r, keep);
+                hist[r].truncate(keep);
+            }
+            let m = cache.kv_memory();
+            let mapped: usize = hist.iter().map(|h| h.len().div_ceil(pp)).sum();
+            if m.used_pages != mapped || m.used_pages + m.free_pages != total {
+                return Err(format!(
+                    "free list drifted: {} used (want {mapped}), {} free of {total}",
+                    m.used_pages, m.free_pages
+                ));
+            }
+            for (i, h) in hist.iter().enumerate() {
+                if cache.len_of(i) != h.len() {
+                    return Err(format!(
+                        "row {i} length {} != mirrored history {}",
+                        cache.len_of(i),
+                        h.len()
+                    ));
+                }
+            }
+        }
+        // Truncate-to-zero on every row returns the pool to baseline…
+        for r in 0..rows {
+            cache.truncate_row(r, 0);
+        }
+        let m = cache.kv_memory();
+        if m.used_pages != 0 || m.free_pages != total {
+            return Err(format!(
+                "truncate-to-zero leaked: {} used, {} free of {total}",
+                m.used_pages, m.free_pages
+            ));
+        }
+        // …and a re-fed row is bit-identical to a fresh never-truncated
+        // cache — the discarded positions left no trace.
+        let probe: Vec<i32> = (0..5).map(|i| ((i * 13 + 2) % dims.vocab) as i32).collect();
+        let r = g.rng.below(rows);
+        let mut slices: Vec<&[i32]> = vec![&[]; rows];
+        slices[r] = &probe;
+        let replay =
+            forward_cached_batch_mixed(&wrefs, &mut cache, &slices).map_err(|e| e.to_string())?;
+        let mut fresh = KvCache::with_rows_cfg(&dims, 1, KvPageCfg::with_page(pp));
+        let solo = forward_cached(wrefs[r], &mut fresh, &probe).map_err(|e| e.to_string())?;
+        if replay != solo {
+            return Err("post-truncate decode diverged from a fresh cache".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn retired_row_leaves_no_stale_kv_or_tag() {
     // Regression for the retire-row audit: after a row retires, its slot
     // must expose nothing of the previous occupant — not its RowTag (a new

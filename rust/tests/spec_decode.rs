@@ -1,0 +1,458 @@
+//! Self-speculative decoding: under the **greedy** acceptance policy the
+//! whole draft/verify/rollback machinery must be *token-invisible* — a row
+//! drafting k tokens at a cheap format and verifying at its serving format
+//! emits exactly the tokens a plain decode at the serving format would
+//! have, for every draft×verify pair, both activation pipelines, any KV
+//! page size, and any token budget (including ones smaller than k). The
+//! rollback path must also return every KV page it maps: the draft mirror
+//! and the truncated verify pages all flow back to their pools when rows
+//! finish or retire.
+
+use mfqat::backend::{ActMode, KvPageCfg, NativeWeights, SharedParams};
+use mfqat::eval::generate::{ContinuousBatch, FinishedRow, SampleCfg, SpecPolicy};
+use mfqat::formats::ElementFormat;
+use mfqat::model::{ModelDims, ParamSet};
+use std::sync::Arc;
+
+/// Byte-level prompts need the full 256-token vocab; tiny window so spec
+/// rounds cross page boundaries and overflow re-prefills quickly.
+fn gen_dims() -> ModelDims {
+    let mut dims = ModelDims::new("specdec", 256, 32, 1, 2, 12);
+    dims.train_batch = 4;
+    dims
+}
+
+fn anchor(dims: &ModelDims, seed: u64, fmt: ElementFormat) -> mfqat::checkpoint::Checkpoint {
+    let m = dims.to_manifest();
+    ParamSet::init(&m, seed).to_anchor_checkpoint(&m, fmt).unwrap()
+}
+
+/// One weight set per format over a single `Arc`'d f32 parameter set —
+/// `join_spec` demands draft and verify share their anchor parameters.
+fn shared_weight_sets(
+    dims: &ModelDims,
+    ck: &mfqat::checkpoint::Checkpoint,
+    formats: &[ElementFormat],
+    act: ActMode,
+) -> Vec<NativeWeights> {
+    let shared = Arc::new(SharedParams::from_checkpoint(dims, ck).unwrap());
+    formats
+        .iter()
+        .map(|&fmt| NativeWeights::packed_with_shared(dims, ck, fmt, shared.clone(), act).unwrap())
+        .collect()
+}
+
+/// Step a batch until every row finishes, asserting convergence.
+fn drain(cb: &mut ContinuousBatch<&NativeWeights>) -> Vec<FinishedRow> {
+    let mut done = Vec::new();
+    let mut steps = 0usize;
+    while cb.active() > 0 {
+        done.extend(cb.step().unwrap());
+        steps += 1;
+        assert!(steps < 1000, "decode did not converge");
+    }
+    done
+}
+
+/// Plain single-row decode through the continuous-batch path.
+fn run_plain(
+    dims: &ModelDims,
+    w: &NativeWeights,
+    prompt: &str,
+    kv: KvPageCfg,
+    n_tokens: usize,
+    cfg: &SampleCfg,
+) -> String {
+    let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(dims, 1, kv);
+    cb.join(w, prompt, n_tokens, cfg).unwrap();
+    let mut done = drain(&mut cb);
+    assert_eq!(done.len(), 1);
+    done.pop().unwrap().text
+}
+
+/// Speculative single-row decode; returns the finished row (text +
+/// lifetime draft counters).
+#[allow(clippy::too_many_arguments)]
+fn run_spec(
+    dims: &ModelDims,
+    verify: &NativeWeights,
+    draft: &NativeWeights,
+    prompt: &str,
+    kv: KvPageCfg,
+    n_tokens: usize,
+    cfg: &SampleCfg,
+    k: usize,
+    policy: SpecPolicy,
+) -> FinishedRow {
+    let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(dims, 1, kv);
+    cb.join_spec(verify, draft, prompt, n_tokens, cfg, k, policy)
+        .unwrap();
+    let mut done = drain(&mut cb);
+    assert_eq!(done.len(), 1);
+    done.pop().unwrap()
+}
+
+#[test]
+fn greedy_spec_token_identical_across_pairs_acts_and_pages() {
+    // The acceptance criterion: speculative decode under the greedy policy
+    // is bit-for-bit the plain verify-format decode — across MXINT8/MXFP8
+    // verify anchors, MXINT4/MXINT6 drafts, both activation pipelines and
+    // KV page sizes from degenerate (1 position) to dense (whole window),
+    // through overflow re-prefills (`n_tokens` is twice the window).
+    let dims = gen_dims();
+    let ck = anchor(&dims, 71, ElementFormat::int(8));
+    let cfg = SampleCfg {
+        temperature: 0.0,
+        top_k: 0,
+        seed: 7,
+    };
+    let prompt = "the color of kova is";
+    let n_tokens = 2 * dims.seq_len;
+    for act in [ActMode::F32, ActMode::Int8] {
+        let ws = shared_weight_sets(
+            &dims,
+            &ck,
+            &[
+                ElementFormat::int(8),
+                ElementFormat::fp_from_bits(8),
+                ElementFormat::int(4),
+                ElementFormat::int(6),
+            ],
+            act,
+        );
+        for (vi, vname) in [(0usize, "int8"), (1, "fp8")] {
+            for pp in [1usize, 3, dims.seq_len] {
+                let kv = KvPageCfg::with_page(pp);
+                let plain = run_plain(&dims, &ws[vi], prompt, kv, n_tokens, &cfg);
+                for (di, dname) in [(2usize, "int4"), (3, "int6")] {
+                    let f = run_spec(
+                        &dims,
+                        &ws[vi],
+                        &ws[di],
+                        prompt,
+                        kv,
+                        n_tokens,
+                        &cfg,
+                        4,
+                        SpecPolicy::Greedy,
+                    );
+                    assert_eq!(
+                        f.text,
+                        plain,
+                        "{dname}->{vname} act={} page={pp}: speculative decode diverged",
+                        act.name()
+                    );
+                    assert!(
+                        f.spec_drafted > 0,
+                        "{dname}->{vname} act={} page={pp}: row never drafted",
+                        act.name()
+                    );
+                    assert!(
+                        f.spec_accepted <= f.spec_drafted,
+                        "accepted {} cannot exceed drafted {}",
+                        f.spec_accepted,
+                        f.spec_drafted
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn greedy_policy_preserves_sampled_decode_exactly() {
+    // Lazy target matching means the identity is not a greedy-argmax
+    // special case: with temperature sampling the verify pass draws the
+    // row's *actual* next token from its own RNG — one draw per emitted
+    // token, exactly like plain decode — so the sampled trajectory is
+    // reproduced token for token.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 72, ElementFormat::int(8));
+    let ws = shared_weight_sets(
+        &dims,
+        &ck,
+        &[ElementFormat::int(8), ElementFormat::int(4)],
+        ActMode::F32,
+    );
+    let cfg = SampleCfg {
+        temperature: 0.9,
+        top_k: 5,
+        seed: 13,
+    };
+    let n_tokens = 2 * dims.seq_len;
+    for prompt in ["kova", "the color of kova is violet", "q"] {
+        for pp in [2usize, dims.seq_len] {
+            let kv = KvPageCfg::with_page(pp);
+            let plain = run_plain(&dims, &ws[0], prompt, kv, n_tokens, &cfg);
+            let f = run_spec(
+                &dims,
+                &ws[0],
+                &ws[1],
+                prompt,
+                kv,
+                n_tokens,
+                &cfg,
+                4,
+                SpecPolicy::Greedy,
+            );
+            assert_eq!(
+                f.text, plain,
+                "sampled decode diverged under speculation (prompt {prompt:?}, page {pp})"
+            );
+        }
+    }
+}
+
+#[test]
+fn spec_k_caps_to_token_budget() {
+    // k far above the remaining budget must cap, never overshoot: the row
+    // still emits exactly its plain-decode text (same length, same
+    // tokens), even for budgets of 1-2 tokens where drafting is pointless.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 73, ElementFormat::int(8));
+    let ws = shared_weight_sets(
+        &dims,
+        &ck,
+        &[ElementFormat::int(8), ElementFormat::int(4)],
+        ActMode::F32,
+    );
+    let cfg = SampleCfg {
+        temperature: 0.0,
+        top_k: 0,
+        seed: 3,
+    };
+    let kv = KvPageCfg::with_page(3);
+    for n_tokens in [1usize, 2, 3, 7] {
+        let plain = run_plain(&dims, &ws[0], "kova", kv, n_tokens, &cfg);
+        let f = run_spec(
+            &dims,
+            &ws[0],
+            &ws[1],
+            "kova",
+            kv,
+            n_tokens,
+            &cfg,
+            8,
+            SpecPolicy::Greedy,
+        );
+        assert_eq!(f.text, plain, "n_tokens={n_tokens}: capped-k decode diverged");
+    }
+}
+
+#[test]
+fn mixed_spec_and_plain_rows_coexist() {
+    // Speculative and plain rows share one continuous batch: each row's
+    // output equals its solo run, the plain row reports zero draft
+    // activity, and the spec rows' counters are live mid-flight via
+    // `spec_stats`.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 74, ElementFormat::int(8));
+    let ws = shared_weight_sets(
+        &dims,
+        &ck,
+        &[
+            ElementFormat::int(8),
+            ElementFormat::fp_from_bits(8),
+            ElementFormat::int(4),
+            ElementFormat::int(6),
+        ],
+        ActMode::F32,
+    );
+    let cfg = SampleCfg {
+        temperature: 0.0,
+        top_k: 0,
+        seed: 5,
+    };
+    let kv = KvPageCfg::with_page(3);
+    let n_tokens = dims.seq_len;
+    let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(&dims, 3, kv);
+    cb.set_spec_pressure(3); // keep drafting on with every slot live
+    let s0 = cb
+        .join_spec(&ws[0], &ws[2], "the color of kova", n_tokens, &cfg, 4, SpecPolicy::Greedy)
+        .unwrap();
+    let s1 = cb.join(&ws[0], "kova blue", n_tokens, &cfg).unwrap();
+    let s2 = cb
+        .join_spec(&ws[1], &ws[3], "q", n_tokens, &cfg, 2, SpecPolicy::Greedy)
+        .unwrap();
+    // A couple of steps in, the spec rows have live counters.
+    for _ in 0..3 {
+        assert!(cb.step().unwrap().is_empty(), "rows finished too early");
+    }
+    let (d0, a0) = cb.spec_stats(s0).expect("row 0 is speculative");
+    assert!(d0 > 0 && a0 <= d0);
+    assert!(cb.spec_stats(s1).is_none(), "plain row has no spec state");
+    let mut texts = vec![String::new(); 3];
+    let finished = drain(&mut cb);
+    assert_eq!(finished.len(), 3);
+    for f in finished {
+        if f.slot == s1 {
+            assert_eq!(f.spec_drafted, 0, "plain row must not draft");
+        } else {
+            assert!(f.spec_drafted > 0, "spec row {} never drafted", f.slot);
+        }
+        texts[f.slot] = f.text;
+    }
+    assert_eq!(texts[s0], run_plain(&dims, &ws[0], "the color of kova", kv, n_tokens, &cfg));
+    assert_eq!(texts[s1], run_plain(&dims, &ws[0], "kova blue", kv, n_tokens, &cfg));
+    assert_eq!(texts[s2], run_plain(&dims, &ws[1], "q", kv, n_tokens, &cfg));
+}
+
+#[test]
+fn batch_pressure_disables_drafting_without_changing_output() {
+    // Default pressure threshold for a 3-slot batch is 1 live row: with
+    // all three slots full, speculative rows fall back to plain stepping
+    // (drafted stays 0) and still emit their exact plain-decode text.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 75, ElementFormat::int(8));
+    let ws = shared_weight_sets(
+        &dims,
+        &ck,
+        &[ElementFormat::int(8), ElementFormat::int(4)],
+        ActMode::F32,
+    );
+    let cfg = SampleCfg {
+        temperature: 0.0,
+        top_k: 0,
+        seed: 17,
+    };
+    let kv = KvPageCfg::with_page(4);
+    let n_tokens = dims.seq_len;
+    let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(&dims, 3, kv);
+    let prompts = ["kova", "the color of kova", "kova blue"];
+    let mut slots = Vec::new();
+    for p in prompts {
+        slots.push(
+            cb.join_spec(&ws[0], &ws[1], p, n_tokens, &cfg, 4, SpecPolicy::Greedy)
+                .unwrap(),
+        );
+    }
+    let finished = drain(&mut cb);
+    assert_eq!(finished.len(), 3);
+    for f in finished {
+        assert_eq!(
+            f.spec_drafted, 0,
+            "slot {}: drafting must pause above the pressure threshold",
+            f.slot
+        );
+        let i = slots.iter().position(|&s| s == f.slot).unwrap();
+        assert_eq!(f.text, run_plain(&dims, &ws[0], prompts[i], kv, n_tokens, &cfg));
+    }
+}
+
+#[test]
+fn spec_rollback_and_retire_leak_no_pages() {
+    // Every page the speculative machinery maps — verify pages rolled back
+    // past rejected drafts, and the draft mirror's own pool — must return:
+    // page accounting stays consistent on every step (the snapshot sums
+    // live mirrors into used/free/total), and once rows finish or retire
+    // the pool is back to its fresh baseline with zero resident bytes.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 76, ElementFormat::int(8));
+    let ws = shared_weight_sets(
+        &dims,
+        &ck,
+        &[ElementFormat::int(8), ElementFormat::int(4)],
+        ActMode::F32,
+    );
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 4,
+        seed: 29,
+    };
+    let kv = KvPageCfg::with_page(1); // 1 position/page: every rollback frees pages
+    let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(&dims, 2, kv);
+    cb.set_spec_pressure(2);
+    let base = cb.kv_memory();
+    assert_eq!(base.used_pages, 0);
+    assert_eq!(base.free_pages, base.total_pages);
+    cb.join_spec(&ws[0], &ws[1], "the color of kova", 2 * dims.seq_len, &cfg, 4, SpecPolicy::Greedy)
+        .unwrap();
+    cb.join(&ws[0], "kova", dims.seq_len, &cfg).unwrap();
+    let mut steps = 0usize;
+    while cb.active() > 0 {
+        cb.step().unwrap();
+        let m = cb.kv_memory();
+        assert_eq!(
+            m.used_pages + m.free_pages,
+            m.total_pages,
+            "page accounting broke mid-decode at step {steps}"
+        );
+        steps += 1;
+        assert!(steps < 1000, "decode did not converge");
+    }
+    let m = cb.kv_memory();
+    assert_eq!(m.used_pages, 0, "pages leaked after rows finished");
+    assert_eq!(m.free_pages, base.total_pages);
+    assert_eq!(m.total_pages, base.total_pages, "draft mirror pool outlived its row");
+    assert_eq!(m.resident_bytes, 0);
+
+    // Retiring a live speculative row mid-flight drops its mirror too.
+    let s = cb
+        .join_spec(&ws[0], &ws[1], "kova blue", dims.seq_len, &cfg, 4, SpecPolicy::Greedy)
+        .unwrap();
+    cb.step().unwrap();
+    cb.step().unwrap();
+    assert!(cb.kv_memory().total_pages > base.total_pages, "live mirror adds its pool");
+    cb.retire(s).unwrap();
+    let m = cb.kv_memory();
+    assert_eq!((m.used_pages, m.free_pages, m.total_pages), (0, base.total_pages, base.total_pages));
+}
+
+#[test]
+fn stochastic_policy_decodes_cleanly() {
+    // The stochastic policy is distribution-preserving, not
+    // token-identical — but it must still run to completion with sane
+    // counters, and a deterministic sampling config (argmax target ==
+    // point-mass draft distribution) collapses it back to exact identity.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 77, ElementFormat::int(8));
+    let ws = shared_weight_sets(
+        &dims,
+        &ck,
+        &[ElementFormat::int(8), ElementFormat::int(4)],
+        ActMode::F32,
+    );
+    let kv = KvPageCfg::with_page(3);
+    let n_tokens = 2 * dims.seq_len;
+    let sampled = SampleCfg {
+        temperature: 0.9,
+        top_k: 6,
+        seed: 41,
+    };
+    let f = run_spec(
+        &dims,
+        &ws[0],
+        &ws[1],
+        "the color of kova is",
+        kv,
+        n_tokens,
+        &sampled,
+        4,
+        SpecPolicy::Stochastic,
+    );
+    assert!(f.spec_drafted > 0);
+    assert!(f.spec_accepted <= f.spec_drafted);
+    assert!(!f.text.is_empty());
+
+    let greedy = SampleCfg {
+        temperature: 0.0,
+        top_k: 0,
+        seed: 41,
+    };
+    let plain = run_plain(&dims, &ws[0], "kova", kv, n_tokens, &greedy);
+    let f = run_spec(
+        &dims,
+        &ws[0],
+        &ws[1],
+        "kova",
+        kv,
+        n_tokens,
+        &greedy,
+        4,
+        SpecPolicy::Stochastic,
+    );
+    assert_eq!(
+        f.text, plain,
+        "deterministic stochastic-policy decode must equal plain argmax decode"
+    );
+}
