@@ -23,6 +23,12 @@
 //!                           dense-equivalent `slots × seq_len` allocation
 //!                           (8-position pages so residency tracks the
 //!                           short mixed contexts), plus pool utilization
+//!   prefix_sharing/*        multi-turn conversational trace (each turn
+//!                           re-sends its conversation's head plus a new
+//!                           tail) served with KV prefix sharing off vs
+//!                           on: prefill tokens saved, prefix hits,
+//!                           retained/shared pages, and TTFT p50 per
+//!                           mode, plus the shared-vs-unshared TTFT ratio
 //!   ttft / inter_token      per-format time-to-first-token and inter-token
 //!                           gap percentiles from the continuous mixed run
 //!                           (the lock-free span histograms)
@@ -41,8 +47,9 @@
 //! it; the acceptance numbers — tokens/sec scaling with worker count,
 //! continuous-vs-gather queue-latency reduction, batched-decode speedup
 //! over rows=1, paged-KV peak residency ≤ the dense-equivalent bytes,
-//! per-format TTFT/inter-token percentiles, `tracing_overhead_pct` ≤ 3 —
-//! live there).
+//! per-format TTFT/inter-token percentiles, `tracing_overhead_pct` ≤ 3,
+//! `prefix_sharing.shared.prefill_tokens_saved` > 0 on the conversational
+//! trace — live there).
 //!
 //! Inner GEMM threading is pinned to 1 unless `MFQAT_THREADS` is set, so
 //! worker-pool scaling is not confounded by kernel-level parallelism.
@@ -431,6 +438,86 @@ fn main() {
         );
     }
     summary.set("continuous_batching", cb_json);
+
+    // ------------------------- prefix sharing: multi-turn conversation trace
+    //
+    // Four conversations, four turns each; every turn re-sends its
+    // conversation's 16-char head plus a short new tail — the serving
+    // shape prefix sharing exists for. The same trace runs with sharing
+    // off and on (one worker, so every turn after a conversation's first
+    // can hit that worker's index): prefill positions skipped, prefix
+    // hits, retained pages, and TTFT p50 (enqueue → first token, so the
+    // skipped prefill shows up here) per mode, plus the headline shared
+    // vs unshared TTFT ratio.
+    let conv_heads = [
+        "the color of kova is",
+        "deep in the blue sky",
+        "kovaq speaks the old",
+        "a quiet machine hums",
+    ];
+    let turn_tails = ["", " now", " here", " again"];
+    let mut px_json = Json::obj();
+    let mut px_ttft: Vec<(bool, f64)> = Vec::new();
+    for share in [false, true] {
+        let kv = if share {
+            KvPageCfg::with_page(8).share(true)
+        } else {
+            KvPageCfg::with_page(8)
+        };
+        let (server, client, _) = start_pool_kv(1, GenBatching::Continuous, 4, kv);
+        client.score(&rows[0], Some(ElementFormat::int(8))).unwrap(); // warm cache
+        let t0 = Instant::now();
+        for head in conv_heads {
+            // Clip every conversation head to exactly 16 chars (2 full
+            // 8-position pages) so each follow-up turn shares its head
+            // pages whatever tail it appends, and the longest turn
+            // (16 + 6-char tail + 6 decoded) stays inside seq_len.
+            let head16: String = head.chars().take(16).collect();
+            for tail in turn_tails {
+                let prompt = format!("{head16}{tail}");
+                client.generate(&prompt, 6, None, cfg.clone()).unwrap();
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.metrics();
+        let mut ttft_p50 = 0.0f64;
+        for (_, h) in m.ttft.iter() {
+            ttft_p50 = h.quantile(0.5); // one fixed format in this trace
+        }
+        let mode = if share { "shared" } else { "unshared" };
+        println!(
+            "prefix_sharing/{mode}: {} turns in {wall:.2}s  ttft p50 {:.1}ms  \
+             hits {}  prefill saved {} tok  shared {} B  retained {} pages",
+            conv_heads.len() * turn_tails.len(),
+            ttft_p50 * 1e3,
+            m.kv.prefix_hits,
+            m.kv.prefill_tokens_saved,
+            m.kv.shared_bytes,
+            m.kv.retained_pages
+        );
+        let mut e = Json::obj();
+        e.set("wall_s", Json::from(wall));
+        e.set("ttft_p50_ms", Json::from(ttft_p50 * 1e3));
+        e.set("prefix_hits", Json::from(m.kv.prefix_hits));
+        e.set("prefill_tokens_saved", Json::from(m.kv.prefill_tokens_saved));
+        e.set("kv_shared_bytes", Json::from(m.kv.shared_bytes));
+        e.set("retained_pages", Json::from(m.kv.retained_pages));
+        e.set("prefix_evictions", Json::from(m.kv.prefix_evictions));
+        px_json.set(mode, e);
+        px_ttft.push((share, ttft_p50));
+        drop(client);
+        server.shutdown();
+    }
+    if let (Some((_, off)), Some((_, on))) = (
+        px_ttft.iter().find(|(s, _)| !*s),
+        px_ttft.iter().find(|(s, _)| *s),
+    ) {
+        // > 1.0 ⇒ skipping shared-prefix prefill cut the median TTFT on
+        // the conversational trace (decode tokens are identical either
+        // way — the sharing battery proves bit-identity).
+        px_json.set("ttft_p50_speedup_shared", Json::from(off / on.max(1e-9)));
+    }
+    summary.set("prefix_sharing", px_json);
 
     // ------------------------------------------- lifecycle-tracing overhead
     //

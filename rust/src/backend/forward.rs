@@ -34,7 +34,7 @@
 //! proves any page size reproduces the single-page dense layout exactly).
 
 use super::kernels;
-use super::kvpool::{KvMemory, KvPageCfg, KvPagePool};
+use super::kvpool::{KvMemory, KvPageCfg, KvPagePool, LedgerShare, PageLedger, PrefixIndex};
 use super::repack::RepackedMx;
 use crate::checkpoint::Checkpoint;
 use crate::formats::{ElementFormat, MxFormat};
@@ -44,7 +44,7 @@ use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
 
 /// How packed linears consume activations.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum ActMode {
     /// Exact f32 activations (weight-only quantization — the paper's
     /// setting and the default; keeps parity with the dequantize oracle at
@@ -502,7 +502,7 @@ pub fn score_rows(w: &NativeWeights, tokens: &[i32], rows: usize) -> Result<Vec<
 /// pipeline. [`forward_cached_batch_mixed`] checks every fed row's weights
 /// against its tag, so a scheduler bug that decodes a row against the wrong
 /// format's planes fails loudly instead of silently corrupting tokens.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct RowTag {
     /// Element format of the row's packed linears (`None` = dense oracle).
     pub fmt: Option<ElementFormat>,
@@ -579,6 +579,27 @@ pub struct KvCache {
     /// High-water mark of mapped pages, recorded at allocation time (so a
     /// row that maps and retires within one step still registers).
     resident_peak_pages: usize,
+    /// Prefix sharing enabled ([`KvPageCfg::prefix_share`]): joins map
+    /// indexed prefix pages and skip their prefill; registrations retain
+    /// pages past retire for later turns.
+    prefix_share: bool,
+    /// Cap on pages the prefix index may retain (`0` = evict only under
+    /// pool pressure).
+    retain_pages: usize,
+    /// Content-addressed index of immutable full prefix pages
+    /// (`(token span, RowTag)` → page). Holds one page reference per
+    /// entry.
+    prefix: PrefixIndex<RowTag>,
+    /// Claim against the cross-worker admission ledger (`None` = local
+    /// pool funding only). Dropping the cache — panic unwinding
+    /// included — returns every outstanding claim.
+    ledger: Option<LedgerShare>,
+    /// Joins that mapped at least one shared prefix page.
+    prefix_hits: u64,
+    /// Prompt positions whose prefill was skipped via shared pages.
+    prefill_tokens_saved: u64,
+    /// Prefix-index entries dropped by LRU eviction.
+    prefix_evictions: u64,
 }
 
 impl KvCache {
@@ -640,6 +661,13 @@ impl KvCache {
             pool: KvPagePool::new(total_pages, floats_per_page),
             tables: vec![Vec::new(); rows],
             resident_peak_pages: 0,
+            prefix_share: cfg.prefix_share,
+            retain_pages: cfg.retain_pages,
+            prefix: PrefixIndex::new(),
+            ledger: None,
+            prefix_hits: 0,
+            prefill_tokens_saved: 0,
+            prefix_evictions: 0,
         }
     }
 
@@ -669,21 +697,43 @@ impl KvCache {
     }
 
     /// Pages the pool still owes live rows if every one of them grows to
-    /// full `capacity` (their worst case minus what they already hold).
+    /// full `capacity` (their worst case minus what they already **own**).
+    /// Only pages a row holds exclusively (refcount 1) count as owned:
+    /// shared prefix pages would be replaced by fresh copies if the row
+    /// fully diverged, so the worst case budgets as if the row still had
+    /// to allocate them — conservative, which keeps the admission
+    /// invariant sound under sharing.
     fn committed_pages(&self) -> usize {
         (0..self.rows)
             .filter(|&r| self.occupied[r])
-            .map(|r| self.pages_per_row.saturating_sub(self.tables[r].len()))
+            .map(|r| {
+                let owned = self.tables[r]
+                    .iter()
+                    .filter(|&&p| self.pool.ref_count(p) == 1)
+                    .count();
+                self.pages_per_row.saturating_sub(owned)
+            })
             .sum()
     }
 
+    /// Pages the prefix index could hand back on demand: entries whose
+    /// page has no other holder (refcount 1 — the idle retained prefixes
+    /// of retired sessions).
+    fn evictable_pages(&self) -> usize {
+        let pool = &self.pool;
+        self.prefix.evictable(|p| pool.ref_count(p) == 1)
+    }
+
     /// Whether the pool can fund **one more worst-case row** on top of
-    /// what every live row might still grow to. [`Self::join_row`] admits
-    /// only under this invariant, which guarantees an admitted row never
-    /// hits pool exhaustion mid-decode — the server's memory-aware
-    /// admission signal.
+    /// what every live row might still grow to. Idle prefix-index pages
+    /// count toward supply — they are evicted (LRU-first) the moment an
+    /// allocation would otherwise fail. [`Self::join_row`] admits only
+    /// under this invariant, which guarantees an admitted row never hits
+    /// pool exhaustion mid-decode — the server's memory-aware admission
+    /// signal.
     pub fn can_fund_row(&self) -> bool {
-        self.pool.free_pages() >= self.committed_pages() + self.pages_per_row
+        self.pool.free_pages() + self.evictable_pages()
+            >= self.committed_pages() + self.pages_per_row
     }
 
     /// Shrink the page budget mid-run by quarantining up to `pages` free
@@ -715,15 +765,34 @@ impl KvCache {
             free_pages: self.pool.free_pages(),
             total_pages: self.pool.total_pages(),
             page_positions: self.page_positions,
+            shared_bytes: self.pool.shared_bytes(),
+            retained_pages: self.prefix.len(),
+            prefix_hits: self.prefix_hits,
+            prefill_tokens_saved: self.prefill_tokens_saved,
+            prefix_evictions: self.prefix_evictions,
         }
     }
 
     /// Claim the lowest free slot for a joining sequence: marks it occupied
     /// at length 0 and records `tag` as the weight set it must be decoded
     /// with. Errors when every slot is occupied **or** the page pool cannot
-    /// fund another worst-case row ([`Self::can_fund_row`]) — the caller
-    /// should defer the join until a live row retires.
+    /// fund another worst-case row ([`Self::can_fund_row`]) **or** an
+    /// attached cross-worker ledger is out of pages — in every case the
+    /// caller should defer the join until a live row retires.
     pub fn join_row(&mut self, tag: RowTag) -> Result<usize> {
+        self.join_row_prefix(tag, &[]).map(|(r, _)| r)
+    }
+
+    /// [`Self::join_row`] with prefix sharing: `window` is the joining
+    /// sequence's prompt window (the tokens it would prefill). When
+    /// sharing is enabled and the prefix index holds full pages whose
+    /// `(token span, tag)` exactly matches the window's head, the new row
+    /// maps those immutable pages directly — adding references, never
+    /// copying — and starts at their length, so the caller only prefills
+    /// `window[shared..]`. Returns `(slot, shared positions)`. The shared
+    /// span is capped below the window length so at least one position
+    /// always prefills (the join's first forward must produce logits).
+    pub fn join_row_prefix(&mut self, tag: RowTag, window: &[i32]) -> Result<(usize, usize)> {
         let Some(r) = self.occupied.iter().position(|&o| !o) else {
             bail!("KV cache has no free slot ({} rows all occupied)", self.rows);
         };
@@ -738,10 +807,105 @@ impl KvCache {
                 self.pages_per_row
             );
         }
+        if let Some(share) = &mut self.ledger {
+            if !share.try_claim(self.pages_per_row) {
+                bail!(
+                    "cross-worker KV ledger cannot fund another worst-case row \
+                     ({} of {} ledger pages claimed, {} per row); \
+                     defer the join until a row retires",
+                    share.ledger().claimed(),
+                    share.ledger().total(),
+                    self.pages_per_row
+                );
+            }
+        }
         self.occupied[r] = true;
         self.tags[r] = Some(tag);
         self.lens[r] = 0;
-        Ok(r)
+        debug_assert!(self.tables[r].is_empty(), "free slot held pages");
+        let mut shared = 0usize;
+        if self.prefix_share && window.len() > 1 {
+            let max_pages = (window.len() - 1) / self.page_positions;
+            let pages = self
+                .prefix
+                .lookup(tag, window, self.page_positions, max_pages);
+            for &page in &pages {
+                self.pool.retain(page);
+                self.tables[r].push(page);
+            }
+            shared = pages.len() * self.page_positions;
+            self.lens[r] = shared;
+            if shared > 0 {
+                self.prefix_hits += 1;
+                self.prefill_tokens_saved += shared as u64;
+                self.resident_peak_pages =
+                    self.resident_peak_pages.max(self.pool.used_pages());
+            }
+        }
+        Ok((r, shared))
+    }
+
+    /// Attach a cross-worker admission ledger: every subsequent
+    /// [`Self::join_row`] claims [`Self::pages_per_row`] from it, returned
+    /// at [`Self::retire_row`] — or when this cache drops, panic unwinding
+    /// included, so a crashed worker can never strand its share. Workers
+    /// that attach a ledger should run their local pool fully funded
+    /// (`budget_pages == 0`) and let the ledger be the single admission
+    /// gate.
+    pub fn attach_ledger(&mut self, ledger: Arc<PageLedger>) {
+        self.ledger = Some(LedgerShare::new(ledger));
+    }
+
+    /// Whether the attached cross-worker ledger (if any) can fund one more
+    /// worst-case row; vacuously true without a ledger.
+    pub fn ledger_can_fund(&self) -> bool {
+        self.ledger
+            .as_ref()
+            .is_none_or(|s| s.ledger().available() >= self.pages_per_row)
+    }
+
+    /// Register row `r`'s **full** pages in the prefix index under its
+    /// tagged token window (`window` must be exactly the row's cached
+    /// tokens — `len_of(r)` positions — or the call is a no-op; the K/V
+    /// bytes in those pages are a pure function of that window and the
+    /// row's tag, which is what makes them shareable). The index retains
+    /// each newly registered page, so the prefix survives the row's
+    /// retirement for later turns; already-indexed spans deduplicate in
+    /// favor of the existing entry. A retain cap ([`KvPageCfg::retain`])
+    /// is enforced here, LRU-first, counting [`KvMemory::prefix_evictions`].
+    pub fn register_prefix(&mut self, r: usize, window: &[i32]) {
+        if !self.prefix_share || !self.occupied[r] || window.len() != self.lens[r] {
+            return;
+        }
+        let Some(tag) = self.tags[r] else { return };
+        let win: Arc<Vec<i32>> = Arc::new(window.to_vec());
+        let pool = &mut self.pool;
+        self.prefix.register(
+            tag,
+            &win,
+            self.page_positions,
+            &self.tables[r],
+            |p| pool.retain(p),
+        );
+        if self.retain_pages > 0 {
+            while self.prefix.len() > self.retain_pages {
+                let pool = &self.pool;
+                let Some(page) = self.prefix.evict_lru(|q| pool.ref_count(q) == 1) else {
+                    break;
+                };
+                self.pool.release(page);
+                self.prefix_evictions += 1;
+            }
+        }
+    }
+
+    /// Drop every prefix-index entry and release its page references; the
+    /// retained pages of retired sessions return to the free list (zeroed)
+    /// unless a live row still shares them.
+    pub fn clear_prefix_index(&mut self) {
+        for page in self.prefix.drain_pages() {
+            self.pool.release(page);
+        }
     }
 
     /// Return every page row `r` maps to the pool (zeroed) and clear its
@@ -752,11 +916,20 @@ impl KvCache {
         }
     }
 
-    /// Release slot `r` (sequence finished or cancelled): its pages return
-    /// to the pool zeroed, the slot becomes free for the next
-    /// [`Self::join_row`], its tag and length cleared — the next occupant
-    /// can observe nothing of this one (see `rust/tests/kv_paging.rs`).
+    /// Release slot `r` (sequence finished or cancelled): the row's page
+    /// references drop — a page returns to the pool (zeroed) only when its
+    /// **last** holder is gone, so pages shared with the prefix index or
+    /// other rows survive intact — the slot becomes free for the next
+    /// [`Self::join_row`], its tag and length cleared, and any ledger
+    /// claim is returned. The next occupant can observe nothing of this
+    /// one (see `rust/tests/kv_paging.rs` and
+    /// `rust/tests/prefix_sharing.rs`).
     pub fn retire_row(&mut self, r: usize) {
+        if self.occupied[r] {
+            if let Some(share) = &mut self.ledger {
+                share.release(self.pages_per_row);
+            }
+        }
         self.release_row_pages(r);
         self.occupied[r] = false;
         self.tags[r] = None;
@@ -804,12 +977,14 @@ impl KvCache {
         self.capacity
     }
 
-    /// Forget everything (restart every sequence): every row's pages return
-    /// to the pool, occupancy and tags are untouched.
+    /// Forget everything (restart every sequence): every row's pages and
+    /// every retained prefix-index page return to the pool, occupancy and
+    /// tags are untouched.
     pub fn reset(&mut self) {
         for r in 0..self.rows {
             self.release_row_pages(r);
         }
+        self.clear_prefix_index();
         self.lens.fill(0);
     }
 
@@ -857,12 +1032,73 @@ impl KvCache {
         self.lens[r] = pos;
     }
 
+    /// Claim a page, evicting idle prefix-index pages (LRU-first) when the
+    /// free list is dry. `None` only when nothing is free **and** nothing
+    /// is evictable.
+    fn alloc_page(&mut self) -> Option<usize> {
+        loop {
+            if let Some(page) = self.pool.alloc() {
+                self.resident_peak_pages = self.resident_peak_pages.max(self.pool.used_pages());
+                return Some(page);
+            }
+            let pool = &self.pool;
+            let victim = self.prefix.evict_lru(|p| pool.ref_count(p) == 1)?;
+            self.pool.release(victim);
+            self.prefix_evictions += 1;
+        }
+    }
+
+    /// Copy-on-write guard before appending `n` positions to row `r`: any
+    /// already-mapped page overlapping the append range that another
+    /// holder can still see (refcount > 1 — a sharing row or the prefix
+    /// index) is replaced by a private copy of just its retained positions
+    /// (partial-page divergence: positions below the row's current length;
+    /// the rest of the fresh page stays zero). The shared original keeps
+    /// its content for the remaining holders. Reached only when a
+    /// truncation cut back into a shared span — a prefix-joined row's
+    /// first divergent append otherwise lands on a page boundary, because
+    /// only full pages are ever shared.
+    fn cow_for_append(&mut self, r: usize, n: usize) -> Result<()> {
+        if n == 0 {
+            return Ok(());
+        }
+        let (pp, d) = (self.page_positions, self.d_model);
+        let len = self.lens[r];
+        let first = len / pp;
+        let last = (len + n - 1) / pp;
+        for idx in first..=last {
+            if idx >= self.tables[r].len() {
+                break;
+            }
+            let old = self.tables[r][idx];
+            if self.pool.ref_count(old) <= 1 {
+                continue;
+            }
+            let Some(fresh) = self.alloc_page() else {
+                bail!(
+                    "KV page pool exhausted copying shared page for row {r}'s \
+                     divergent append ({} pages mapped, pool of {})",
+                    self.tables[r].len(),
+                    self.pool.total_pages()
+                );
+            };
+            let valid = len.saturating_sub(idx * pp).min(pp);
+            for l in 0..self.n_layers {
+                self.pool.copy_span(old, fresh, l * pp * d, valid * d);
+            }
+            self.tables[r][idx] = fresh;
+            self.pool.release(old);
+        }
+        Ok(())
+    }
+
     /// Grow row `r`'s page table to cover `new_len` positions, claiming
-    /// pages from the pool. Errors on pool exhaustion (unreachable for rows
-    /// admitted under [`Self::can_fund_row`] or fully-funded caches).
+    /// pages from the pool (evicting idle prefix pages under pressure).
+    /// Errors on pool exhaustion (unreachable for rows admitted under
+    /// [`Self::can_fund_row`] or fully-funded caches).
     fn ensure_row_pages(&mut self, r: usize, new_len: usize) -> Result<()> {
         while self.tables[r].len() * self.page_positions < new_len {
-            let Some(page) = self.pool.alloc() else {
+            let Some(page) = self.alloc_page() else {
                 bail!(
                     "KV page pool exhausted growing row {r} to {new_len} positions \
                      ({} pages mapped, pool of {})",
@@ -872,7 +1108,6 @@ impl KvCache {
             };
             self.tables[r].push(page);
         }
-        self.resident_peak_pages = self.resident_peak_pages.max(self.pool.used_pages());
         Ok(())
     }
 
@@ -1045,11 +1280,14 @@ pub fn forward_cached_batch_mixed(
         }
     }
     // Map pages for every fed row's new positions up front (pages span all
-    // layers, so allocation happens once per row per step, not per layer).
-    // Admitted rows can never fail here — `join_row` only admits what the
-    // pool can fund at full capacity — so an error means a scheduler bug.
+    // layers, so allocation happens once per row per step, not per layer),
+    // copy-on-writing any shared page the append range touches so a write
+    // can never be seen by another holder of the page. Admitted rows can
+    // never fail here — `join_row` only admits what the pool can fund at
+    // full capacity — so an error means a scheduler bug.
     for (r, row) in tokens.iter().enumerate() {
         if !row.is_empty() {
+            cache.cow_for_append(r, row.len())?;
             cache.ensure_row_pages(r, cache.lens[r] + row.len())?;
         }
     }

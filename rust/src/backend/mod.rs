@@ -39,7 +39,7 @@ pub mod simd;
 pub mod pjrt;
 
 pub use forward::{ActMode, KvCache, LayerWeights, Mat, NativeWeights, RowTag, SharedParams};
-pub use kvpool::{KvMemory, KvPageCfg, KvPagePool};
+pub use kvpool::{KvMemory, KvPageCfg, KvPagePool, PageLedger, PrefixIndex};
 pub use native::{NativeBackend, NativeDecodeSession};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
@@ -230,5 +230,16 @@ pub trait DecodeSession {
     fn shrink_kv_budget(&mut self, pages: usize) -> usize {
         let _ = pages;
         0
+    }
+
+    /// Attach a cross-worker KV page ledger: [`Self::can_admit`] and
+    /// [`Self::join`] then claim each admitted row's worst-case page count
+    /// from the shared [`PageLedger`] instead of (only) the local pool
+    /// budget, so admission trades memory between workers under skewed
+    /// load. Claims return at retire or when the session drops — panic
+    /// unwinding included. Backends without paged storage ignore the
+    /// ledger.
+    fn attach_kv_ledger(&mut self, ledger: std::sync::Arc<PageLedger>) {
+        let _ = ledger;
     }
 }

@@ -284,6 +284,10 @@ impl DecodeSession for NativeDecodeSession<'_> {
     fn shrink_kv_budget(&mut self, pages: usize) -> usize {
         self.inner.shrink_kv_budget(pages)
     }
+
+    fn attach_kv_ledger(&mut self, ledger: std::sync::Arc<crate::backend::PageLedger>) {
+        self.inner.attach_kv_ledger(ledger);
+    }
 }
 
 impl Backend for NativeBackend {

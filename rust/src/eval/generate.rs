@@ -39,7 +39,7 @@
 //! `rust/tests/spec_decode.rs`).
 
 use crate::backend::forward::{forward_cached, forward_cached_batch_mixed, KvCache, RowTag};
-use crate::backend::kvpool::{KvMemory, KvPageCfg};
+use crate::backend::kvpool::{KvMemory, KvPageCfg, PageLedger};
 use crate::backend::NativeWeights;
 use crate::data::{decode, encode, PAD};
 use crate::formats::ElementFormat;
@@ -478,10 +478,22 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
     /// Whether [`Self::join`] can admit another sequence right now: a free
     /// slot **and** a page pool that can still fund a worst-case
     /// (`seq_len`-position) row on top of every live row's potential
-    /// growth. On a fully-funded pool (the default) this equals
+    /// growth **and** — when a cross-worker ledger is attached — enough
+    /// unclaimed ledger pages for one more worst-case row. On a
+    /// fully-funded pool with no ledger (the default) this equals
     /// [`Self::has_free_slot`].
     pub fn can_admit(&self) -> bool {
-        self.has_free_slot() && self.cache.can_fund_row()
+        self.has_free_slot() && self.cache.can_fund_row() && self.cache.ledger_can_fund()
+    }
+
+    /// Attach a cross-worker page ledger to this batch's cache (see
+    /// [`KvCache::attach_ledger`]): [`Self::can_admit`] and [`Self::join`]
+    /// then draw admission funding from the shared ledger, so one hot
+    /// batch can borrow the headroom an idle one is not using. Claims are
+    /// returned at retire or when the batch drops (panic unwinding
+    /// included).
+    pub fn attach_kv_ledger(&mut self, ledger: Arc<PageLedger>) {
+        self.cache.attach_ledger(ledger);
     }
 
     /// Paged-KV accounting snapshot (resident vs dense-equivalent bytes,
@@ -515,6 +527,14 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
         self.cache.shrink_budget(pages)
     }
 
+    /// Drop every retained prefix-index entry (see
+    /// [`KvCache::clear_prefix_index`]): pages held only by the index
+    /// return to the pool zeroed; pages still mapped by live rows survive
+    /// until those rows release them. A no-op without prefix sharing.
+    pub fn clear_prefix_index(&mut self) {
+        self.cache.clear_prefix_index();
+    }
+
     /// Admit a prompt into the lowest free slot with weight set `w` (the
     /// row's own format + activation mode), to emit `n_tokens` tokens
     /// sampled under `cfg`. The prompt's trailing window prefills on the
@@ -523,14 +543,21 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
     /// `w` was built for a different model.
     pub fn join(&mut self, w: W, prompt: &str, n_tokens: usize, cfg: &SampleCfg) -> Result<usize> {
         self.check_dims(&w)?;
-        let slot = self.cache.join_row(RowTag::of(&w))?;
         let mut tokens = encode(prompt);
         if tokens.is_empty() {
             tokens.push(PAD as i32);
         }
         let start_len = tokens.len();
-        // Prefill chunk: the trailing prompt window (same as a solo call).
-        let pending = tokens[tokens.len().saturating_sub(self.dims.seq_len)..].to_vec();
+        let win_start = tokens.len().saturating_sub(self.dims.seq_len);
+        // Prefix sharing: the join maps any indexed full pages whose
+        // tagged token span exactly matches the window's head, so the
+        // prefill chunk shrinks to the trailing unshared remainder (the
+        // shared span's K/V is already resident — bit-identical to what
+        // prefill would write, so the row's tokens are unchanged).
+        let (slot, shared) = self
+            .cache
+            .join_row_prefix(RowTag::of(&w), &tokens[win_start..])?;
+        let pending = tokens[win_start + shared..].to_vec();
         self.slots[slot] = Some(Slot {
             w,
             cfg: cfg.clone(),
@@ -576,7 +603,9 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
             );
         }
         let slot = self.join(w, prompt, n_tokens, cfg)?;
-        let mut cache = KvCache::with_slots_cfg(&self.dims, 1, self.kv_cfg);
+        // The draft mirror is private to this row — prefix sharing stays
+        // off so mirror pages are never retained past the row's life.
+        let mut cache = KvCache::with_slots_cfg(&self.dims, 1, self.kv_cfg.share(false));
         cache
             .join_row(RowTag::of(&draft))
             .expect("a fresh single-row cache can always admit its row");
@@ -618,7 +647,19 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
         if slot >= self.slots.len() || self.slots[slot].is_none() {
             anyhow::bail!("slot {slot} holds no live sequence");
         }
-        self.slots[slot] = None;
+        let s = self.slots[slot].take().expect("checked above");
+        // Leave the cancelled row's context in the prefix index (sharing
+        // on): a mid-decode row's pending token rides `tokens` without
+        // having been fed, so the cached window is the last `len` tokens
+        // *before* it. Rows still pending a prefill window hold only
+        // pages the index already has (the shared span they joined with).
+        if s.pending_kind == RowStepKind::Decode {
+            let fed = s.tokens.len().saturating_sub(1);
+            let wlen = self.cache.len_of(slot);
+            if wlen > 0 && wlen <= fed {
+                self.cache.register_prefix(slot, &s.tokens[fed - wlen..fed]);
+            }
+        }
         self.cache.retire_row(slot);
         Ok(())
     }
@@ -745,6 +786,16 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
             off += count;
             let s = self.slots[r].as_mut().expect("fed row holds a sequence");
             let fed_kind = s.pending_kind;
+            // A freshly fed (re-)prefill window is exactly the row's
+            // cached context — register its full pages so later joins
+            // with the same tagged prompt head can skip their prefill.
+            if matches!(fed_kind, RowStepKind::Prefill | RowStepKind::Reprefill) {
+                let wlen = self.cache.len_of(r);
+                if wlen <= s.tokens.len() {
+                    let win_start = s.tokens.len() - wlen;
+                    self.cache.register_prefix(r, &s.tokens[win_start..]);
+                }
+            }
             let (round, policy) = s
                 .spec
                 .as_ref()
@@ -899,6 +950,17 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
             });
             if done {
                 let s = self.slots[r].take().expect("fed row holds a sequence");
+                // Multi-turn reuse: leave the completed row's full context
+                // (prompt + generated tokens) behind in the prefix index,
+                // so a follow-up turn whose prompt extends this
+                // conversation joins against it and skips the re-prefill.
+                // The final emitted token was never fed, so the cached
+                // window ends one before it.
+                let fed = s.tokens.len() - usize::from(emitted_now > 0);
+                let wlen = self.cache.len_of(r);
+                if wlen > 0 && wlen <= fed {
+                    self.cache.register_prefix(r, &s.tokens[fed - wlen..fed]);
+                }
                 self.cache.retire_row(r);
                 let (sd, sa) = s
                     .spec

@@ -332,9 +332,14 @@ fn eval_pjrt(_args: &Args) -> Result<()> {
 /// KV page-pool sizing from `--kv-page` (positions per page; falls back to
 /// the `MFQAT_KV_PAGE` env pin, then the 64-position default). `--kv-page`
 /// also pins the env var so engine paths that size their own caches (e.g.
-/// `generate`'s solo decode) see the same page size.
+/// `generate`'s solo decode) see the same page size. `--prefix-share` turns
+/// on content-addressed prefix reuse (and pins `MFQAT_PREFIX_SHARE` for the
+/// same reason), `--kv-retain` caps the prefix index's retained pages
+/// (pins `MFQAT_KV_RETAIN`), and `--kv-budget` caps each worker's
+/// worst-case page claims — under multiple continuous workers the server
+/// pools those budgets into one cross-worker page ledger.
 fn kv_page_cfg(args: &Args) -> Result<mfqat::backend::KvPageCfg> {
-    match args.get("kv-page") {
+    let mut cfg = match args.get("kv-page") {
         Some(v) => {
             let n: usize = v
                 .parse()
@@ -343,10 +348,28 @@ fn kv_page_cfg(args: &Args) -> Result<mfqat::backend::KvPageCfg> {
                 anyhow::bail!("--kv-page expects at least 1 position per page");
             }
             std::env::set_var("MFQAT_KV_PAGE", v);
-            Ok(mfqat::backend::KvPageCfg::with_page(n))
+            mfqat::backend::KvPageCfg::with_page(n)
         }
-        None => Ok(mfqat::backend::KvPageCfg::from_env()),
+        None => mfqat::backend::KvPageCfg::from_env(),
+    };
+    if args.flag("prefix-share") {
+        std::env::set_var("MFQAT_PREFIX_SHARE", "1");
+        cfg = cfg.share(true);
     }
+    if let Some(v) = args.get("kv-retain") {
+        let n: usize = v
+            .parse()
+            .map_err(|_| anyhow!("--kv-retain expects an integer, got '{v}'"))?;
+        std::env::set_var("MFQAT_KV_RETAIN", v);
+        cfg = cfg.retain(n);
+    }
+    if let Some(v) = args.get("kv-budget") {
+        let n: usize = v
+            .parse()
+            .map_err(|_| anyhow!("--kv-budget expects an integer, got '{v}'"))?;
+        cfg = cfg.budget(n);
+    }
+    Ok(cfg)
 }
 
 /// Shared sampling knobs for both generation backends.

@@ -273,6 +273,20 @@ impl Metrics {
         } else {
             String::new()
         };
+        let share = if self.kv.prefix_hits + self.kv.prefix_evictions > 0
+            || self.kv.shared_bytes + self.kv.retained_pages > 0
+        {
+            format!(
+                " share[hits:{} saved:{}tok shared:{}KB retained:{}pg evict:{}]",
+                self.kv.prefix_hits,
+                self.kv.prefill_tokens_saved,
+                self.kv.shared_bytes / 1024,
+                self.kv.retained_pages,
+                self.kv.prefix_evictions,
+            )
+        } else {
+            String::new()
+        };
         let spec = if self.spec_drafted > 0 {
             format!(
                 " spec[drafted:{} accepted:{} rolled:{} accept:{:.0}%]",
@@ -285,7 +299,7 @@ impl Metrics {
             String::new()
         };
         format!(
-            "workers={} requests={} latency[{}] mean_batch={:.2}{}{} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]{}{}{}",
+            "workers={} requests={} latency[{}] mean_batch={:.2}{}{} mix=[{}] cache[hit:{} miss:{} evict:{} {}KB]{}{}{}{}",
             self.workers.max(1),
             self.requests,
             self.latency.summary(),
@@ -298,6 +312,7 @@ impl Metrics {
             self.cache.evictions,
             self.cache.used_bytes / 1024,
             kv,
+            share,
             spec,
             faults,
         )
@@ -328,6 +343,11 @@ struct KvWorkerGauges {
     free_pages: Arc<Gauge>,
     total_pages: Arc<Gauge>,
     page_positions: Arc<Gauge>,
+    shared_bytes: Arc<Gauge>,
+    retained_pages: Arc<Gauge>,
+    prefix_hits: Arc<Gauge>,
+    prefill_tokens_saved: Arc<Gauge>,
+    prefix_evictions: Arc<Gauge>,
 }
 
 /// One point of the periodic telemetry time series.
@@ -410,6 +430,12 @@ impl ServerObs {
                     free_pages: registry.gauge_with("kv_free_pages", &labels),
                     total_pages: registry.gauge_with("kv_total_pages", &labels),
                     page_positions: registry.gauge_with("kv_page_positions", &labels),
+                    shared_bytes: registry.gauge_with("kv_shared_bytes", &labels),
+                    retained_pages: registry.gauge_with("kv_retained_pages", &labels),
+                    prefix_hits: registry.gauge_with("kv_prefix_hits", &labels),
+                    prefill_tokens_saved: registry
+                        .gauge_with("kv_prefill_tokens_saved", &labels),
+                    prefix_evictions: registry.gauge_with("kv_prefix_evictions", &labels),
                 }
             })
             .collect();
@@ -617,6 +643,14 @@ impl ServerObs {
         w.free_pages.set(kv.free_pages as u64);
         w.total_pages.set(kv.total_pages as u64);
         w.page_positions.set(kv.page_positions as u64);
+        w.shared_bytes.set(kv.shared_bytes as u64);
+        w.retained_pages.set(kv.retained_pages as u64);
+        // Cumulative session counters, reported via `set_max`: a supervisor
+        // respawn hands the worker a fresh session whose counters restart
+        // at zero, and the pool totals must never march backwards.
+        w.prefix_hits.set_max(kv.prefix_hits);
+        w.prefill_tokens_saved.set_max(kv.prefill_tokens_saved);
+        w.prefix_evictions.set_max(kv.prefix_evictions);
         let sum: u64 = self.kv_workers.iter().map(|g| g.resident.get()).sum();
         self.kv_pool_peak.set_max(sum);
     }
@@ -636,6 +670,11 @@ impl ServerObs {
             kv.free_pages += w.free_pages.get() as usize;
             kv.total_pages += w.total_pages.get() as usize;
             kv.page_positions = kv.page_positions.max(w.page_positions.get() as usize);
+            kv.shared_bytes += w.shared_bytes.get() as usize;
+            kv.retained_pages += w.retained_pages.get() as usize;
+            kv.prefix_hits += w.prefix_hits.get();
+            kv.prefill_tokens_saved += w.prefill_tokens_saved.get();
+            kv.prefix_evictions += w.prefix_evictions.get();
             max_peak = max_peak.max(w.peak.get() as usize);
         }
         kv.resident_peak_bytes = max_peak;
@@ -748,6 +787,11 @@ impl ServerObs {
         k.set("pool_bytes", Json::from(kv.pool_bytes));
         k.set("pool_utilization", Json::from(kv.utilization()));
         k.set("page_positions", Json::from(kv.page_positions));
+        k.set("shared_bytes", Json::from(kv.shared_bytes));
+        k.set("retained_pages", Json::from(kv.retained_pages));
+        k.set("prefix_hits", Json::from(kv.prefix_hits));
+        k.set("prefill_tokens_saved", Json::from(kv.prefill_tokens_saved));
+        k.set("prefix_evictions", Json::from(kv.prefix_evictions));
         out.set("kv", k);
         let series: Vec<Json> = self
             .series
@@ -849,6 +893,7 @@ mod tests {
             free_pages: 4,
             total_pages: 8,
             page_positions: 16,
+            ..Default::default()
         });
         assert_eq!(m.kv_resident_bytes(), 8192);
         assert!((m.kv_pool_utilization() - 0.5).abs() < 1e-12);
@@ -864,6 +909,7 @@ mod tests {
             page_positions: 16,
             dense_equivalent_bytes: 32768,
             pool_bytes: 16384,
+            ..Default::default()
         });
         assert_eq!(m.kv_resident_peak_bytes, 10240);
         let s = m.summary();
@@ -903,6 +949,7 @@ mod tests {
                 free_pages: 2,
                 total_pages: 4,
                 page_positions: 8,
+                ..Default::default()
             },
         );
         obs.set_kv(
@@ -916,6 +963,7 @@ mod tests {
                 free_pages: 3,
                 total_pages: 4,
                 page_positions: 8,
+                ..Default::default()
             },
         );
         let m = obs.snapshot();
@@ -940,11 +988,70 @@ mod tests {
                 free_pages: 4,
                 total_pages: 4,
                 page_positions: 8,
+                ..Default::default()
             },
         );
         let m = obs.snapshot();
         assert_eq!(m.kv.resident_bytes, 4096);
         assert_eq!(m.kv_resident_peak_bytes, 6144, "peak is sticky");
+    }
+
+    #[test]
+    fn prefix_sharing_gauges_aggregate_and_survive_respawn() {
+        let obs = ServerObs::new(2, false);
+        obs.set_kv(
+            0,
+            KvMemory {
+                total_pages: 4,
+                page_positions: 8,
+                shared_bytes: 4096,
+                retained_pages: 2,
+                prefix_hits: 3,
+                prefill_tokens_saved: 24,
+                prefix_evictions: 1,
+                ..Default::default()
+            },
+        );
+        obs.set_kv(
+            1,
+            KvMemory {
+                total_pages: 4,
+                page_positions: 8,
+                shared_bytes: 2048,
+                retained_pages: 1,
+                prefix_hits: 1,
+                prefill_tokens_saved: 8,
+                ..Default::default()
+            },
+        );
+        let m = obs.snapshot();
+        assert_eq!(m.kv.shared_bytes, 6144, "shared bytes sum across workers");
+        assert_eq!(m.kv.retained_pages, 3);
+        assert_eq!(m.kv.prefix_hits, 4);
+        assert_eq!(m.kv.prefill_tokens_saved, 32);
+        assert_eq!(m.kv.prefix_evictions, 1);
+        let s = m.summary();
+        assert!(s.contains("share[hits:4 saved:32tok"), "{s}");
+        // A supervisor respawn reports the fresh (all-zero) session: the
+        // live gauges drop back, the cumulative counters must not.
+        obs.set_kv(0, KvMemory::default());
+        let m = obs.snapshot();
+        assert_eq!(m.kv.shared_bytes, 2048, "live gauge follows the report");
+        assert_eq!(m.kv.prefix_hits, 4, "cumulative counter is sticky");
+        assert_eq!(m.kv.prefill_tokens_saved, 32);
+        // The JSON export carries the aggregated pool view.
+        let j = obs.export_json();
+        let kv = j.get("kv").expect("kv object");
+        assert_eq!(
+            kv.get("prefix_hits").and_then(|v| v.as_f64()),
+            Some(4.0),
+            "{j:?}"
+        );
+        assert_eq!(
+            kv.get("prefill_tokens_saved").and_then(|v| v.as_f64()),
+            Some(32.0)
+        );
+        assert_eq!(kv.get("shared_bytes").and_then(|v| v.as_f64()), Some(2048.0));
     }
 
     #[test]

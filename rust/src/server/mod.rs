@@ -667,6 +667,20 @@ impl Server {
         let depth = Arc::new(AtomicUsize::new(0));
         let lifecycle = Arc::new(Lifecycle::new());
         let slo = Arc::new(RobustMutex::new(SloState::default()));
+        // Cross-worker page economy: a budgeted continuous-batching pool
+        // pools `workers × budget_pages` into one shared ledger instead of
+        // fencing each worker behind its own slice — a worker under skewed
+        // load can fund rows from pages its idle peers are not using. Each
+        // session is then opened with an *uncapped* local pool (the ledger
+        // is the binding constraint) and claims/releases per admitted row.
+        let kv_ledger: Option<Arc<crate::backend::PageLedger>> =
+            if config.batching == GenBatching::Continuous && config.kv_page.budget_pages > 0 {
+                Some(Arc::new(crate::backend::PageLedger::new(
+                    config.workers * config.kv_page.budget_pages,
+                )))
+            } else {
+                None
+            };
         let mut workers = Vec::with_capacity(config.workers);
 
         // Worker 0 builds the engine and hands an Arc back for the rest of
@@ -674,13 +688,14 @@ impl Server {
         type Ready = std::result::Result<Arc<ElasticEngine>, String>;
         let (ready_tx, ready_rx) = mpsc::channel::<Ready>();
         {
-            let (queue, obs, depth, lifecycle, slo, config) = (
+            let (queue, obs, depth, lifecycle, slo, config, kv_ledger) = (
                 queue.clone(),
                 obs.clone(),
                 depth.clone(),
                 lifecycle.clone(),
                 slo.clone(),
                 config.clone(),
+                kv_ledger.clone(),
             );
             workers.push(
                 std::thread::Builder::new()
@@ -699,7 +714,15 @@ impl Server {
                             }
                         };
                         supervised_worker(
-                            0, &engine, &config, &queue, &obs, &depth, &lifecycle, &slo,
+                            0,
+                            &engine,
+                            &config,
+                            &queue,
+                            &obs,
+                            &depth,
+                            &lifecycle,
+                            &slo,
+                            kv_ledger.as_ref(),
                         );
                     })
                     .expect("spawn server worker"),
@@ -711,20 +734,29 @@ impl Server {
             .map_err(|e| anyhow::anyhow!("engine init failed: {e}"))?;
         for i in 1..config.workers {
             let engine = engine.clone();
-            let (queue, obs, depth, lifecycle, slo, config) = (
+            let (queue, obs, depth, lifecycle, slo, config, kv_ledger) = (
                 queue.clone(),
                 obs.clone(),
                 depth.clone(),
                 lifecycle.clone(),
                 slo.clone(),
                 config.clone(),
+                kv_ledger.clone(),
             );
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("mfqat-worker-{i}"))
                     .spawn(move || {
                         supervised_worker(
-                            i, &engine, &config, &queue, &obs, &depth, &lifecycle, &slo,
+                            i,
+                            &engine,
+                            &config,
+                            &queue,
+                            &obs,
+                            &depth,
+                            &lifecycle,
+                            &slo,
+                            kv_ledger.as_ref(),
                         );
                     })
                     .expect("spawn server worker"),
@@ -1132,7 +1164,11 @@ fn reap_scores(scores: &mut Vec<ScoreRequest>, obs: &ServerObs) {
 /// under `catch_unwind`. A panic fails the in-flight rows fast — the
 /// ledger lives out here, beyond the unwind boundary, so their clients
 /// get a `"worker N panicked"` error instead of a hang — and drops the
-/// decode session, returning every KV page to a pool that dies with it.
+/// decode session, returning every KV page to a pool that dies with it
+/// (and, under the cross-worker page economy, releasing the session's
+/// remaining [`crate::backend::PageLedger`] claims through the unwound
+/// share's `Drop`, so a crash never strands pages the surviving workers
+/// could be admitting against).
 /// Unless the server is shutting down, the body is then respawned with a
 /// fresh session; backlogged (accepted but never admitted) requests
 /// survive the crash and are served by the new incarnation.
@@ -1146,13 +1182,14 @@ fn supervised_worker(
     depth: &AtomicUsize,
     lifecycle: &Lifecycle,
     slo: &RobustMutex<SloState>,
+    kv_ledger: Option<&Arc<crate::backend::PageLedger>>,
 ) {
     let mut ledger = GenLedger::default();
     let mut restarts = 0usize;
     loop {
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             worker_loop(
-                worker, engine, config, queue, obs, depth, lifecycle, slo, &mut ledger,
+                worker, engine, config, queue, obs, depth, lifecycle, slo, &mut ledger, kv_ledger,
             );
         }));
         match run {
@@ -1178,6 +1215,29 @@ fn supervised_worker(
     log::info!("server worker exiting; {}", obs.snapshot().summary());
 }
 
+/// Open one worker's continuous-decode session. Under the cross-worker
+/// page economy the session's *local* pool is opened uncapped (budget 0:
+/// the shared [`crate::backend::PageLedger`] is the binding constraint —
+/// a per-worker cap would re-fence exactly the pages the economy exists
+/// to trade) and the ledger is attached so admission claims worst-case
+/// rows from the pool-wide balance.
+fn open_decode_session<'e>(
+    engine: &'e ElasticEngine,
+    slots: usize,
+    config: &ServerConfig,
+    kv_ledger: Option<&Arc<crate::backend::PageLedger>>,
+) -> Result<Box<dyn DecodeSession + 'e>> {
+    let kv = match kv_ledger {
+        Some(_) => config.kv_page.budget(0),
+        None => config.kv_page,
+    };
+    let mut session = engine.decode_session_cfg(slots, kv)?;
+    if let Some(l) = kv_ledger {
+        session.attach_kv_ledger(Arc::clone(l));
+    }
+    Ok(session)
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker: usize,
@@ -1189,6 +1249,7 @@ fn worker_loop(
     lifecycle: &Lifecycle,
     slo: &RobustMutex<SloState>,
     ledger: &mut GenLedger,
+    kv_ledger: Option<&Arc<crate::backend::PageLedger>>,
 ) {
     if config.batching == GenBatching::Continuous {
         let slots = if config.decode_slots == 0 {
@@ -1196,10 +1257,11 @@ fn worker_loop(
         } else {
             config.decode_slots
         };
-        match engine.decode_session_cfg(slots, config.kv_page) {
+        match open_decode_session(engine, slots, config, kv_ledger) {
             Ok(session) => {
                 continuous_loop(
-                    worker, engine, config, queue, obs, depth, lifecycle, slo, ledger, session,
+                    worker, engine, config, queue, obs, depth, lifecycle, slo, ledger, kv_ledger,
+                    session,
                 );
                 return;
             }
@@ -1405,6 +1467,7 @@ fn continuous_loop<'e>(
     lifecycle: &Lifecycle,
     slo: &RobustMutex<SloState>,
     ledger: &mut GenLedger,
+    kv_ledger: Option<&Arc<crate::backend::PageLedger>>,
     mut session: Box<dyn DecodeSession + 'e>,
 ) {
     let b = engine.dims().train_batch;
@@ -1501,7 +1564,7 @@ fn continuous_loop<'e>(
         // queued prompts *defer* (stay backlogged) until a live row retires
         // and returns its pages, instead of failing.
         while session.can_admit() {
-            let Some((r, _)) = ledger.backlog.pop_front() else { break };
+            let Some((r, counted)) = ledger.backlog.pop_front() else { break };
             let d = depth.load(Ordering::Acquire) + ledger.backlog.len();
             let fmt = match r.format {
                 Some(f) => f,
@@ -1558,7 +1621,20 @@ fn continuous_loop<'e>(
                     });
                 }
                 Err(e) => {
-                    let msg = format!("generation admission failed: {e:#}");
+                    let msg = format!("{e:#}");
+                    // `can_admit` raced a peer: between the check and the
+                    // join, another worker claimed the last fundable pages
+                    // from the shared ledger (or this pool's own headroom
+                    // moved under a concurrent snapshot). The request is
+                    // still perfectly serviceable — put it back at the
+                    // *front* of the backlog and let it defer like any
+                    // other memory-starved prompt instead of failing it.
+                    if msg.contains("defer the join") {
+                        log::debug!("admission deferred on worker {worker}: {msg}");
+                        ledger.backlog.push_front((r, counted));
+                        break;
+                    }
+                    let msg = format!("generation admission failed: {msg}");
                     log::error!("{msg}");
                     let _ = r.respond.send(Err(msg));
                 }
@@ -1774,7 +1850,13 @@ fn continuous_loop<'e>(
                 let msg = format!("continuous decode step failed: {e:#}");
                 log::error!("{msg}");
                 ledger.fail_rows(&msg);
-                match engine.decode_session_cfg(session.capacity(), config.kv_page) {
+                // Drop the poisoned session *before* opening its
+                // replacement: its `LedgerShare` returns the failed rows'
+                // cross-worker page claims on drop, so the fresh session
+                // starts against an honest ledger balance.
+                let cap = session.capacity();
+                drop(session);
+                match open_decode_session(engine, cap, config, kv_ledger) {
                     Ok(s) => session = s,
                     Err(e) => {
                         log::error!("could not reopen the decode session: {e:#}");

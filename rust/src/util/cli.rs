@@ -18,6 +18,9 @@
 //! | `--batching` | `continuous` (default) \| `gather` | Generate-lane batching for `serve`: continuous batching admits prompts into the in-flight decode every step with per-row formats; `gather` restores the legacy grouped batched decode. |
 //! | `--slots` | integer (default `0` = model `train_batch`) | Sequence rows in each serve worker's continuous decode session. |
 //! | `--kv-page` | integer ≥ 1 (default: `MFQAT_KV_PAGE`, else 64) | Positions per KV page for `serve`/`generate` decode caches (also pins `MFQAT_KV_PAGE` for the process). Resident KV memory tracks live context in pages of this size; tiny values (e.g. 8) force page boundaries mid-prompt/mid-decode, which CI uses to stress the paged walk. |
+//! | `--prefix-share` | bare flag (default off) | Content-addressed KV prefix sharing for `serve`/`generate` decode caches (pins `MFQAT_PREFIX_SHARE=1`): a row admitted with a prompt whose full-page prefix is already cached maps those pages read-only (refcounted) and skips their prefill; divergence copies-on-write. Sharing is bit-invisible — decoded tokens are identical with it on or off. |
+//! | `--kv-retain` | integer (default `0` = uncapped; pins `MFQAT_KV_RETAIN`) | Cap on pages the prefix index may retain for retired rows. Above the cap (or under pool pressure) the least-recently-used unshared entry is evicted; a later request for that prefix recomputes via prefill. Only meaningful with `--prefix-share`. |
+//! | `--kv-budget` | integer (default `0` = uncapped, `serve` only) | Worst-case KV page claims each worker may hold below its dense-equivalent pool. With several continuous workers the server pools `workers × budget` into one cross-worker page ledger: admission claims from the shared balance, so a worker under skewed load can fund rows from pages its idle peers are not using. |
 //! | `--trace-out` | file path (`serve` only) | Collect per-request lifecycle spans (queue-wait, prefill, each decode step, completion) and write them as Chrome-trace-event JSON at shutdown — loadable in Perfetto / `chrome://tracing`, one track per worker with one lane per decode row. Tracing is off (and costs one `Option` check) without this flag. |
 //! | `--metrics-out` | file path (`serve` only) | Write a machine-readable metrics snapshot periodically and at shutdown: JSON (counters, latency/TTFT/inter-token percentiles per format, KV/cache/queue time series) at the path, Prometheus text exposition next to it with a `.prom` extension. |
 //! | `--queue-cap` | integer (default `0` = unbounded, `serve` only) | Bound on queued-but-unstarted requests. When full, new submissions are rejected at the client with a typed `Rejected { retry_after }` error instead of growing the backlog — the last rung of the shed ladder (downshift → defer → reject). |
@@ -32,6 +35,8 @@
 //! | `MFQAT_THREADS` | integer ≥ 1 | Pins the kernel worker-thread count (default: detected cores). Benches pin to 1 so pool scaling is not confounded by kernel fan-out. Read once per process. |
 //! | `MFQAT_SIMD` | `off`/`0`/`false`/`portable`/`none` | Forces the integer-MAC tile kernels onto the portable scalar loop (the differential-test oracle); any other value, or unset, keeps the runtime-detected AVX2/NEON dispatch. Read once per process. |
 //! | `MFQAT_KV_PAGE` | integer ≥ 1 (default 64) | Positions per KV-cache page wherever a sizing is not passed explicitly (`KvPageCfg::from_env`). Paging is bit-invisible to decode output — only residency granularity changes. CI runs a `MFQAT_KV_PAGE=8` test leg so page boundaries land mid-prompt and mid-decode. |
+//! | `MFQAT_PREFIX_SHARE` | `1`/`true`/`on` (default off) | Turns on content-addressed KV prefix sharing wherever a `KvPageCfg` is built from the environment — same semantics as `--prefix-share`. Off by default: a non-sharing pool frees (and zeroes) every page the instant its row retires. |
+//! | `MFQAT_KV_RETAIN` | integer (default 0 = uncapped) | Retained-page cap for the prefix index (`KvPageCfg::from_env`) — same semantics as `--kv-retain`. |
 //! | `MFQAT_FAULT` | `;`-separated specs: `panic:worker=W,step=S` \| `stall:worker=W,step=S,ms=M` \| `shrink:worker=W,step=S,pages=P` | Deterministic fault injection for `serve` workers ([`crate::server::FaultPlan`]). Each spec fires at most once, at the first decode step / gather batch `>= S` on worker `W`: `panic` kills the worker body (the supervisor respawns it), `stall` sleeps the worker for `M` ms, `shrink` quarantines up to `P` free KV pages. Unset ⇒ no faults; parse errors are reported at server start. |
 
 use std::collections::BTreeMap;

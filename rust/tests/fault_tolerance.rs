@@ -13,7 +13,10 @@
 //!   server;
 //! * a shrinking KV page budget degrades admission, never decode output;
 //! * cancellation retires rows mid-flight; the bounded queue rejects with
-//!   a typed retry hint.
+//!   a typed retry hint;
+//! * a worker that dies holding cross-worker page-ledger claims returns
+//!   them through unwinding — a crash never strands the page economy, and
+//!   shared-prefix pages on surviving workers stay intact.
 //!
 //! Runs everywhere — the native backend needs no AOT artifacts.
 
@@ -176,10 +179,7 @@ fn shrink_fault_degrades_admission_never_decode_output() {
     let mut cfg = base_config();
     // Tiny pages so the shrink quarantine moves a meaningful fraction of
     // the pool while committed (live-row) pages stay protected.
-    cfg.kv_page = mfqat::backend::KvPageCfg {
-        page_positions: 4,
-        budget_pages: 0,
-    };
+    cfg.kv_page = mfqat::backend::KvPageCfg::with_page(4);
     cfg.faults = Some(FaultPlan::single(0, 2, FaultKind::ShrinkPages(8)));
     let (server, client) = start(seed, cfg);
 
@@ -287,4 +287,124 @@ fn bounded_queue_rejects_with_typed_retry_hint() {
     assert!(client.metrics_snapshot().rejections >= 1, "rejections counted");
     drop(client);
     server.shutdown();
+}
+
+#[test]
+fn worker_panic_releases_ledger_claims_and_shared_pages() {
+    // The page economy's crash contract, deterministically: a "worker"
+    // (a continuous batch drawing on the shared ledger) that panics
+    // mid-decode returns every outstanding claim through unwinding — the
+    // survivor keeps its claim, its shared-prefix pages, and its exact
+    // decode; nothing is stranded and nothing is double-released.
+    use mfqat::backend::{KvPageCfg, NativeWeights, PageLedger};
+    use mfqat::eval::generate::{generate_native, ContinuousBatch};
+    use std::sync::Arc;
+
+    let dims = test_dims();
+    let manifest = dims.to_manifest();
+    let ck = ParamSet::init(&manifest, 41)
+        .to_anchor_checkpoint(&manifest, ElementFormat::int(8))
+        .unwrap();
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let cfg = sample_cfg();
+    let ppr = dims.seq_len.div_ceil(4);
+    let ledger = Arc::new(PageLedger::new(2 * ppr));
+
+    let kv = KvPageCfg::with_page(4).share(true);
+    let mut survivor: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(&dims, 2, kv);
+    survivor.attach_kv_ledger(Arc::clone(&ledger));
+    survivor.join(&w, "the colo", 2, &cfg).unwrap();
+    assert_eq!(ledger.claimed(), ppr);
+
+    // The doomed worker claims the rest, prefills (indexing its prefix
+    // pages), then its body panics mid-decode.
+    std::thread::scope(|s| {
+        let h = s.spawn(|| {
+            let mut cb: ContinuousBatch<&NativeWeights> =
+                ContinuousBatch::with_kv(&dims, 2, KvPageCfg::with_page(4).share(true));
+            cb.attach_kv_ledger(Arc::clone(&ledger));
+            cb.join(&w, "kovaq blue", 8, &cfg).unwrap();
+            cb.step().unwrap();
+            assert_eq!(ledger.claimed(), 2 * ppr, "both workers hold claims");
+            panic!("injected worker crash");
+        });
+        assert!(h.join().is_err(), "the worker must crash");
+    });
+
+    // Unwinding released exactly the dead worker's claims — retained
+    // prefix-index pages and all — and only those.
+    assert_eq!(ledger.claimed(), ppr, "a crash must not strand (or over-release) claims");
+
+    // The survivor's rows and shared pages are untouched.
+    let mut steps = 0usize;
+    let mut done = Vec::new();
+    while survivor.active() > 0 {
+        done.extend(survivor.step().unwrap());
+        steps += 1;
+        assert!(steps < 1000, "decode did not converge");
+    }
+    assert_eq!(done.len(), 1);
+    assert_eq!(
+        done[0].text,
+        generate_native(&w, "the colo", 2, &cfg).unwrap(),
+        "the peer's crash corrupted the survivor's decode"
+    );
+    assert_eq!(ledger.claimed(), 0, "drained survivor must hold no claims");
+    drop(survivor);
+    assert_eq!(ledger.claimed(), 0, "drop must not double-release");
+}
+
+#[test]
+fn panic_under_page_ledger_respawns_and_readmits() {
+    // End-to-end: a 2-worker continuous server pooling its KV budgets
+    // into one cross-worker ledger (with prefix sharing on) takes a
+    // worker panic mid-burst. Every request resolves — survivors
+    // bit-identical, victims with a typed panic error — and the respawned
+    // worker re-admits a full second burst, which it could not do if the
+    // crash had stranded ledger claims.
+    let seed = 43;
+    let reference = reference_texts(seed);
+    let mut cfg = base_config();
+    cfg.workers = 2;
+    cfg.kv_page = mfqat::backend::KvPageCfg::with_page(4).budget(8).share(true);
+    cfg.faults = Some(FaultPlan::single(0, 2, FaultKind::Panic));
+    let (server, client) = start(seed, cfg);
+
+    let rxs: Vec<_> = JOBS
+        .iter()
+        .map(|(p, n)| client.submit_generate(p, *n, None, sample_cfg()).unwrap())
+        .collect();
+    for (rx, ((prompt, _), want)) in rxs.into_iter().zip(JOBS.iter().zip(&reference)) {
+        let res = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("request hung after worker panic under the ledger");
+        match res {
+            Ok(resp) => assert_eq!(&resp.text, want, "surviving row {prompt:?} diverged"),
+            Err(e) => assert!(e.contains("panicked"), "row {prompt:?}: unexpected error {e:?}"),
+        }
+    }
+
+    // A stranded ledger would leave this burst deferred forever; the
+    // 30s timeout is the tripwire.
+    let rxs: Vec<_> = JOBS
+        .iter()
+        .map(|(p, n)| client.submit_generate(p, *n, None, sample_cfg()).unwrap())
+        .collect();
+    for (rx, ((prompt, _), want)) in rxs.into_iter().zip(JOBS.iter().zip(&reference)) {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("post-respawn request hung: ledger claims were stranded")
+            .unwrap_or_else(|e| panic!("post-respawn row {prompt:?} failed: {e:?}"));
+        assert_eq!(&resp.text, want, "post-respawn row {prompt:?} diverged");
+    }
+    // The queue race decides whether worker 0 saw enough decode steps to
+    // trip its fault; whenever it did, the supervisor must have respawned
+    // it (claim release on unwind is proven deterministically above).
+    let m = client.metrics_snapshot();
+    assert_eq!(m.worker_restarts, m.worker_panics, "every panic must respawn its worker");
+
+    let obs = server.obs();
+    drop(client);
+    server.shutdown();
+    assert_eq!(obs.snapshot().kv.used_pages, 0, "pages leaked across the ledger panic");
 }

@@ -1,0 +1,597 @@
+//! Prefix-sharing paged KV: sharing must be **bit-invisible** (a row joined
+//! onto shared prefix pages decodes exactly the tokens of a solo decode,
+//! across formats, activation modes and page sizes), refcounts must make
+//! page reuse safe (no page freed while any row or the index can see it,
+//! zero-on-release only at the last drop, copy-on-write never mutates a
+//! page another holder reads), and the pool must return to baseline once
+//! every row retires and the index is cleared — whatever the churn history.
+
+use mfqat::backend::forward::{forward_cached, forward_cached_batch_mixed, KvCache, RowTag};
+use mfqat::backend::{ActMode, KvPageCfg, NativeWeights, SharedParams};
+use mfqat::eval::generate::{generate_native, ContinuousBatch, FinishedRow, SampleCfg, SpecPolicy};
+use mfqat::formats::ElementFormat;
+use mfqat::model::{ModelDims, ParamSet};
+use std::sync::Arc;
+
+/// Byte-level prompts need the full 256-token vocab; tiny window so shared
+/// spans, page boundaries and overflow re-prefills all land fast.
+fn gen_dims() -> ModelDims {
+    let mut dims = ModelDims::new("kvshare", 256, 32, 1, 2, 10);
+    dims.train_batch = 4;
+    dims
+}
+
+/// Small forward-level model (no text decode, vocab can stay tiny).
+fn fwd_dims() -> ModelDims {
+    let mut dims = ModelDims::new("kvsharefwd", 64, 32, 2, 2, 12);
+    dims.train_batch = 2;
+    dims
+}
+
+fn anchor(dims: &ModelDims, seed: u64, fmt: ElementFormat) -> mfqat::checkpoint::Checkpoint {
+    let m = dims.to_manifest();
+    ParamSet::init(&m, seed).to_anchor_checkpoint(&m, fmt).unwrap()
+}
+
+/// One weight set per format over a single `Arc`'d f32 parameter set.
+fn shared_weight_sets(
+    dims: &ModelDims,
+    ck: &mfqat::checkpoint::Checkpoint,
+    formats: &[ElementFormat],
+    act: ActMode,
+) -> Vec<NativeWeights> {
+    let shared = Arc::new(SharedParams::from_checkpoint(dims, ck).unwrap());
+    formats
+        .iter()
+        .map(|&fmt| NativeWeights::packed_with_shared(dims, ck, fmt, shared.clone(), act).unwrap())
+        .collect()
+}
+
+/// Step a batch until every live row finishes, collecting completions.
+fn drain(cb: &mut ContinuousBatch<&NativeWeights>) -> Vec<FinishedRow> {
+    let mut done = Vec::new();
+    let mut steps = 0usize;
+    while cb.active() > 0 {
+        done.extend(cb.step().unwrap());
+        steps += 1;
+        assert!(steps < 1000, "decode did not converge");
+    }
+    done
+}
+
+/// Decode `providers` to completion first (seeding the prefix index when
+/// sharing is on), then all `targets` together; returns the target
+/// continuations in prompt order plus the final memory snapshot.
+fn run_shared_batch(
+    dims: &ModelDims,
+    w: &NativeWeights,
+    providers: &[&str],
+    targets: &[&str],
+    kv: KvPageCfg,
+    cfg: &SampleCfg,
+) -> (Vec<String>, mfqat::backend::KvMemory) {
+    let cap = providers.len().max(targets.len());
+    let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(dims, cap, kv);
+    for p in providers {
+        cb.join(w, p, 3, cfg).unwrap();
+    }
+    drain(&mut cb);
+    let mut slot_of = Vec::new();
+    for t in targets {
+        slot_of.push(cb.join(w, t, 6, cfg).unwrap());
+    }
+    let mut out: Vec<Option<String>> = vec![None; targets.len()];
+    for f in drain(&mut cb) {
+        let i = slot_of.iter().position(|&s| s == f.slot).unwrap();
+        out[i] = Some(f.text);
+    }
+    (out.into_iter().map(|t| t.unwrap()).collect(), cb.kv_memory())
+}
+
+#[test]
+fn shared_prefix_decode_is_bit_identical_across_formats() {
+    // The sharing oracle: rows joined onto indexed prefix pages must emit
+    // exactly the tokens of a solo decode that never shared anything —
+    // across MXINT8/MXINT4/MXFP8, both activation pipelines, and page
+    // sizes where the shared span ends on a page boundary (pp=4 against
+    // an 8-token provider) or mid-window (pp=3, and the 7-token target).
+    let dims = gen_dims();
+    let ck = anchor(&dims, 61, ElementFormat::int(8));
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 6,
+        seed: 9,
+    };
+    let providers = ["the colo", "kovaq"];
+    // Targets share the providers' heads ("the colo…", "kovaq…") except
+    // the last, a no-share control.
+    let targets = ["the colors", "the col", "kovaq blue", "q"];
+    for fmt in [
+        ElementFormat::int(8),
+        ElementFormat::int(4),
+        ElementFormat::fp_from_bits(8),
+    ] {
+        for act in [ActMode::F32, ActMode::Int8] {
+            let mut w = NativeWeights::packed_from_checkpoint(&dims, &ck, fmt).unwrap();
+            w.act = act;
+            let solo: Vec<String> = targets
+                .iter()
+                .map(|t| generate_native(&w, t, 6, &cfg).unwrap())
+                .collect();
+            for pp in [1usize, 3, 4] {
+                let kv = KvPageCfg::with_page(pp);
+                let (on, m_on) =
+                    run_shared_batch(&dims, &w, &providers, &targets, kv.share(true), &cfg);
+                let (off, m_off) = run_shared_batch(&dims, &w, &providers, &targets, kv, &cfg);
+                assert_eq!(
+                    on,
+                    solo,
+                    "{} act={} pp={pp}: sharing changed decode output",
+                    fmt.long_name(),
+                    act.name()
+                );
+                assert_eq!(
+                    off,
+                    solo,
+                    "{} act={} pp={pp}: non-sharing baseline drifted",
+                    fmt.long_name(),
+                    act.name()
+                );
+                // Sharing actually fired: all three prefix-sharing targets
+                // joined onto indexed pages and skipped prefill positions.
+                assert!(
+                    m_on.prefix_hits >= 3,
+                    "pp={pp}: expected >=3 prefix hits, got {}",
+                    m_on.prefix_hits
+                );
+                assert!(
+                    m_on.prefill_tokens_saved >= 15,
+                    "pp={pp}: expected >=15 prefill tokens saved, got {}",
+                    m_on.prefill_tokens_saved
+                );
+                assert!(m_on.retained_pages > 0, "index retained nothing");
+                // …and with sharing off the index never exists.
+                assert_eq!((m_off.prefix_hits, m_off.prefill_tokens_saved), (0, 0));
+                assert_eq!((m_off.retained_pages, m_off.shared_bytes), (0, 0));
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_turn_rejoin_saves_prefill_deterministically() {
+    // One conversation, three turns, exact accounting: the first turn
+    // seeds the index with its 2 full pages; the second turn maps both
+    // (8 of its 9 prompt positions skip prefill — the unshared tail ends
+    // mid-page) and the K/V bytes those rows now share are visible in
+    // `shared_bytes`; a third identical turn hits again. Clearing the
+    // index returns the pool to baseline.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 62, ElementFormat::int(8));
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let cfg = SampleCfg {
+        temperature: 0.7,
+        top_k: 4,
+        seed: 3,
+    };
+    let kv = KvPageCfg::with_page(4).share(true);
+    let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(&dims, 2, kv);
+    let total = cb.kv_memory().total_pages;
+    let page_bytes = 2 * dims.n_layers * 4 * dims.d_model * std::mem::size_of::<f32>();
+
+    // Turn 1: "the colo" (8 tokens = 2 full pages at pp=4), one sampled
+    // token. Prefill and completion both register the same chain.
+    cb.join(&w, "the colo", 1, &cfg).unwrap();
+    drain(&mut cb);
+    let m = cb.kv_memory();
+    assert_eq!(m.retained_pages, 2, "provider leaves 2 indexed pages");
+    assert_eq!(m.used_pages, 2, "index pages stay mapped after retire");
+    assert_eq!(m.free_pages, total - 2);
+    assert_eq!((m.prefix_hits, m.shared_bytes), (0, 0));
+
+    // Turn 2: "the color" (9 tokens) — the join itself maps both indexed
+    // pages before any step runs.
+    let s = cb.join(&w, "the color", 2, &cfg).unwrap();
+    let m = cb.kv_memory();
+    assert_eq!(m.prefix_hits, 1, "second turn hit the prefix index");
+    assert_eq!(m.prefill_tokens_saved, 8, "2 shared pages x 4 positions");
+    assert_eq!(
+        m.shared_bytes,
+        2 * page_bytes,
+        "both pages carry one extra reference (index + row)"
+    );
+    assert_eq!(m.used_pages, 2, "no new pages were prefilled yet");
+    let done = drain(&mut cb);
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].slot, s);
+    assert_eq!(
+        done[0].text,
+        generate_native(&w, "the color", 2, &cfg).unwrap(),
+        "prefix-shared decode must equal the solo decode"
+    );
+
+    // Turn 3: the identical prompt hits again.
+    cb.join(&w, "the color", 2, &cfg).unwrap();
+    let m = cb.kv_memory();
+    assert_eq!(m.prefix_hits, 2);
+    assert_eq!(m.prefill_tokens_saved, 16);
+    drain(&mut cb);
+
+    // Dropping the retained prefixes returns the pool to baseline.
+    cb.clear_prefix_index();
+    let m = cb.kv_memory();
+    assert_eq!((m.used_pages, m.free_pages), (0, total), "pages leaked");
+    assert_eq!((m.retained_pages, m.shared_bytes), (0, 0));
+}
+
+#[test]
+fn cow_preserves_shared_pages_for_other_holders() {
+    // Copy-on-write at the forward level, with exact refcount accounting:
+    // a row that truncates back *into* a shared page and appends divergent
+    // tokens gets a private partial-page copy, while the original page —
+    // still visible to the other row and the index — is never touched
+    // (both holders keep decoding bit-identically to fresh caches).
+    let dims = fwd_dims();
+    let ck = anchor(&dims, 63, ElementFormat::int(8));
+    let ws = shared_weight_sets(&dims, &ck, &[ElementFormat::int(8)], ActMode::F32);
+    let w = &ws[0];
+    let vocab = dims.vocab;
+    let page_bytes = 2 * dims.n_layers * 4 * dims.d_model * std::mem::size_of::<f32>();
+    let mut cache = KvCache::with_slots_cfg(&dims, 2, KvPageCfg::with_page(4).share(true));
+    let total = cache.total_pages();
+
+    // Row 0 prefills an 8-token window (2 full pages) and indexes it.
+    let win: Vec<i32> = (0..8).map(|i| ((i * 5 + 3) % 64) as i32).collect();
+    let (r0, sh0) = cache.join_row_prefix(RowTag::of(w), &win).unwrap();
+    assert_eq!((r0, sh0), (0, 0), "empty index shares nothing");
+    let l0 = forward_cached_batch_mixed(&[w, w], &mut cache, &[&win, &[]]).unwrap();
+    cache.register_prefix(0, &win);
+    assert_eq!(cache.kv_memory().retained_pages, 2);
+
+    // Row 1 joins the same window: one full page is shareable (the walk
+    // stops one token short of the window so the last position always
+    // prefills), and its prefilled tail logits equal row 0's — the shared
+    // page's K/V is bit-identical to what prefill would have written.
+    let (r1, sh1) = cache.join_row_prefix(RowTag::of(w), &win).unwrap();
+    assert_eq!((r1, sh1), (1, 4), "one of two pages is shareable");
+    let m = cache.kv_memory();
+    // Page 0: row0 + index + row1 = 3 refs (2 extra); page 1: row0 +
+    // index = 2 refs (1 extra).
+    assert_eq!(m.shared_bytes, 3 * page_bytes);
+    let l1 = forward_cached_batch_mixed(&[w, w], &mut cache, &[&[], &win[4..]]).unwrap();
+    assert_eq!(
+        l1,
+        l0[4 * vocab..].to_vec(),
+        "decoding over a shared page diverged from the prefilled original"
+    );
+
+    // Row 1 rolls back into the shared page and appends divergent tokens:
+    // the mid-page copy-on-write gives it a private page holding just the
+    // 2 retained positions.
+    cache.truncate_row(r1, 2);
+    let div: Vec<i32> = vec![(win[2] + 1) % 64, 7, 9];
+    let l1b = forward_cached_batch_mixed(&[w, w], &mut cache, &[&[], &div]).unwrap();
+    let mut hist = win[..2].to_vec();
+    hist.extend_from_slice(&div);
+    let mut fresh = KvCache::with_rows_cfg(&dims, 1, KvPageCfg::with_page(4));
+    let oracle = forward_cached(w, &mut fresh, &hist).unwrap();
+    assert_eq!(
+        l1b,
+        oracle[2 * vocab..].to_vec(),
+        "post-divergence decode must match a cache that never shared"
+    );
+    // The COW dropped row 1's reference to page 0 (2 refs left: 1 extra)
+    // while page 1 keeps its 2 (1 extra).
+    assert_eq!(cache.kv_memory().shared_bytes, 2 * page_bytes);
+
+    // Row 0 still sees pristine pages: its next decode equals a fresh
+    // replay of its full history.
+    let probe = [11i32];
+    let l0b = forward_cached_batch_mixed(&[w, w], &mut cache, &[&probe, &[]]).unwrap();
+    let mut h0 = win.clone();
+    h0.push(probe[0]);
+    let mut fresh0 = KvCache::with_rows_cfg(&dims, 1, KvPageCfg::with_page(4));
+    let o0 = forward_cached(w, &mut fresh0, &h0).unwrap();
+    assert_eq!(
+        l0b,
+        o0[8 * vocab..].to_vec(),
+        "COW mutated a page another row could see"
+    );
+
+    cache.retire_row(r0);
+    cache.retire_row(r1);
+    cache.clear_prefix_index();
+    let m = cache.kv_memory();
+    assert_eq!((m.used_pages, m.free_pages), (0, total), "pages leaked");
+    assert_eq!(m.shared_bytes, 0);
+}
+
+#[test]
+fn freed_then_reshared_page_leaks_nothing_and_zeroes_once() {
+    // Release is keyed to the refcount drop: a page outlives both the row
+    // that wrote it and the index entry that retained it for as long as
+    // *any* holder remains, is scrubbed exactly at the last drop, and a
+    // later occupant of the recycled page sees none of the prior K/V.
+    let dims = fwd_dims();
+    let ck = anchor(&dims, 64, ElementFormat::int(8));
+    let ws = shared_weight_sets(&dims, &ck, &[ElementFormat::int(8)], ActMode::F32);
+    let w = &ws[0];
+    let vocab = dims.vocab;
+    let mut cache = KvCache::with_slots_cfg(&dims, 2, KvPageCfg::with_page(4).share(true));
+    let total = cache.total_pages();
+
+    let win_a: Vec<i32> = (0..8).map(|i| ((i * 7 + 2) % 64) as i32).collect();
+    let (r0, _) = cache.join_row_prefix(RowTag::of(w), &win_a).unwrap();
+    forward_cached_batch_mixed(&[w, w], &mut cache, &[&win_a, &[]]).unwrap();
+    cache.register_prefix(r0, &win_a);
+    let (r1, sh1) = cache.join_row_prefix(RowTag::of(w), &win_a).unwrap();
+    assert_eq!(sh1, 4);
+    forward_cached_batch_mixed(&[w, w], &mut cache, &[&[], &win_a[4..]]).unwrap();
+
+    // Retiring the writer must not free (or zero) pages row 1 still maps.
+    cache.retire_row(r0);
+    let probe = [5i32];
+    let got = forward_cached_batch_mixed(&[w, w], &mut cache, &[&[], &probe]).unwrap();
+    let mut h = win_a.clone();
+    h.push(probe[0]);
+    let mut fresh = KvCache::with_rows_cfg(&dims, 1, KvPageCfg::with_page(4));
+    let oracle = forward_cached(w, &mut fresh, &h).unwrap();
+    assert_eq!(
+        got,
+        oracle[8 * vocab..].to_vec(),
+        "retiring the page's writer corrupted a sharing reader"
+    );
+
+    // Dropping the index keeps row 1's shared page alive (refcount 1 now)
+    // — still not zeroed under it.
+    cache.clear_prefix_index();
+    let probe2 = [9i32];
+    let got = forward_cached_batch_mixed(&[w, w], &mut cache, &[&[], &probe2]).unwrap();
+    h.push(probe2[0]);
+    let mut fresh = KvCache::with_rows_cfg(&dims, 1, KvPageCfg::with_page(4));
+    let oracle = forward_cached(w, &mut fresh, &h).unwrap();
+    assert_eq!(
+        got,
+        oracle[9 * vocab..].to_vec(),
+        "clearing the index zeroed a page a live row still maps"
+    );
+
+    // Last drop: everything returns to the free list…
+    cache.retire_row(r1);
+    let m = cache.kv_memory();
+    assert_eq!((m.used_pages, m.free_pages), (0, total));
+
+    // …and the recycled pages carry nothing of the prior occupant.
+    let win_b: Vec<i32> = (0..9).map(|i| ((i * 11 + 1) % 64) as i32).collect();
+    let (r2, sh2) = cache.join_row_prefix(RowTag::of(w), &win_b).unwrap();
+    assert_eq!(sh2, 0, "cleared index must not share");
+    let got = forward_cached_batch_mixed(&[w, w], &mut cache, &[&win_b, &[]]).unwrap();
+    let mut fresh = KvCache::with_rows_cfg(&dims, 1, KvPageCfg::with_page(4));
+    let oracle = forward_cached(w, &mut fresh, &win_b).unwrap();
+    assert_eq!(got, oracle, "freed-then-reshared page leaked prior K/V");
+    cache.retire_row(r2);
+}
+
+#[test]
+fn spec_row_drafting_against_shared_prefix_is_token_identical() {
+    // A self-speculative row admitted onto shared prefix pages: the draft
+    // mirror (private, non-sharing) lazily prefills its own full context,
+    // verification rolls the shared-pool row back without ever cutting
+    // into the shared span, and greedy outputs stay identical to a plain
+    // solo decode.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 65, ElementFormat::int(8));
+    let ws = shared_weight_sets(
+        &dims,
+        &ck,
+        &[ElementFormat::int(8), ElementFormat::int(4)],
+        ActMode::F32,
+    );
+    let (verify, draft) = (&ws[0], &ws[1]);
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 6,
+        seed: 9,
+    };
+    let mut cb: ContinuousBatch<&NativeWeights> =
+        ContinuousBatch::with_kv(&dims, 2, KvPageCfg::with_page(4).share(true));
+    let total = cb.kv_memory().total_pages;
+    cb.join(verify, "the colo", 2, &cfg).unwrap();
+    drain(&mut cb);
+    let s = cb
+        .join_spec(verify, draft, "the colors", 8, &cfg, 3, SpecPolicy::Greedy)
+        .unwrap();
+    assert!(
+        cb.kv_memory().prefix_hits >= 1,
+        "speculative join missed the indexed prefix"
+    );
+    let done = drain(&mut cb);
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].slot, s);
+    assert!(done[0].spec_drafted > 0, "the row never drafted");
+    assert_eq!(
+        done[0].text,
+        generate_native(verify, "the colors", 8, &cfg).unwrap(),
+        "greedy speculative decode over a shared prefix changed tokens"
+    );
+    cb.clear_prefix_index();
+    let m = cb.kv_memory();
+    assert_eq!((m.used_pages, m.free_pages), (0, total), "pages leaked");
+}
+
+#[test]
+fn retain_cap_evicts_lru_and_recomputes_on_miss() {
+    // The page economy's idle-prefix bound: a retain cap of 2 pages holds
+    // the two most recently used indexed pages, evicting LRU-first (4
+    // evictions across the churn below), and a prompt whose prefix was
+    // evicted simply recomputes via prefill — correctness never depends
+    // on the cache's hit/miss history.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 66, ElementFormat::int(8));
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let cfg = SampleCfg {
+        temperature: 0.7,
+        top_k: 4,
+        seed: 5,
+    };
+    let kv = KvPageCfg::with_page(4).share(true).retain(2);
+    let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(&dims, 2, kv);
+
+    // "the colo" seeds 2 pages; "kovaq blu" registers 2 more, evicting
+    // both of the first conversation's (LRU) pages to honour the cap.
+    cb.join(&w, "the colo", 1, &cfg).unwrap();
+    drain(&mut cb);
+    let m = cb.kv_memory();
+    assert_eq!((m.retained_pages, m.prefix_evictions), (2, 0));
+    cb.join(&w, "kovaq blu", 1, &cfg).unwrap();
+    drain(&mut cb);
+    let m = cb.kv_memory();
+    assert_eq!(m.retained_pages, 2, "retain cap exceeded");
+    assert_eq!(m.prefix_evictions, 2, "LRU entries were not evicted");
+
+    // The surviving prefix still hits…
+    cb.join(&w, "kovaq blue", 1, &cfg).unwrap();
+    let m = cb.kv_memory();
+    assert_eq!((m.prefix_hits, m.prefill_tokens_saved), (1, 8));
+    drain(&mut cb);
+
+    // …and the evicted one recomputes: no hit, identical output.
+    let s = cb.join(&w, "the colors", 1, &cfg).unwrap();
+    assert_eq!(cb.kv_memory().prefix_hits, 1, "evicted prefix must miss");
+    let done = drain(&mut cb);
+    assert_eq!(done[0].slot, s);
+    assert_eq!(
+        done[0].text,
+        generate_native(&w, "the colors", 1, &cfg).unwrap(),
+        "recompute-on-miss changed decode output"
+    );
+}
+
+#[test]
+fn prop_prefix_churn_preserves_refcount_invariants() {
+    // Property: arbitrary churn of prefix-sharing joins (plain and
+    // speculative), decodes, cancellations and completions keeps the page
+    // accounting exact at every step (`used + free == total`), finishes
+    // every row with the exact tokens of its solo decode (so no COW or
+    // release ever mutated a page another row could see), leaves only
+    // index-retained pages mapped after the batch drains, and returns the
+    // free list to baseline once the index is cleared — no page freed
+    // while referenced, none leaked after the last drop.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 67, ElementFormat::int(8));
+    let formats = [
+        ElementFormat::int(8),
+        ElementFormat::int(4),
+        ElementFormat::fp_from_bits(8),
+    ];
+    let weights = shared_weight_sets(&dims, &ck, &formats, ActMode::F32);
+    // Prompts deliberately share heads so joins keep landing on indexed
+    // spans (and diverging past them).
+    let prompts = [
+        "the colo",
+        "the colors",
+        "the col",
+        "kovaq",
+        "kovaq blue",
+        "q",
+    ];
+    let cfg = SampleCfg {
+        temperature: 0.9,
+        top_k: 5,
+        seed: 27,
+    };
+    mfqat::util::props::run_cases("prefix_share_churn", 8, |g| {
+        let pp = 1 + g.rng.below(4); // 1..=4 positions per page
+        let mut kv = KvPageCfg::with_page(pp).share(true);
+        if g.rng.chance(0.5) {
+            kv = kv.retain([2, 4][g.rng.below(2)]); // sometimes capped
+        }
+        if g.rng.chance(0.3) {
+            // Sometimes a constrained pool: admission, COW and eviction
+            // must stay exact under page pressure too.
+            kv = kv.budget(2 * dims.seq_len.div_ceil(pp));
+        }
+        let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(&dims, 3, kv);
+        // Let speculative rows draft even at full occupancy — rollback
+        // against shared pages is exactly the churn this property hunts.
+        cb.set_spec_pressure(3);
+        let base_total = cb.kv_memory().total_pages;
+        // Live slots with the inputs needed to replay each row solo.
+        let mut live: Vec<(usize, usize, &str, usize)> = Vec::new();
+        let mut check = |f: &FinishedRow, live: &mut Vec<(usize, usize, &str, usize)>| {
+            let i = live
+                .iter()
+                .position(|x| x.0 == f.slot)
+                .ok_or("finished row was never joined")?;
+            let (_, wi, p, n) = live.remove(i);
+            let solo = generate_native(&weights[wi], p, n, &cfg).map_err(|e| e.to_string())?;
+            if f.text != solo {
+                return Err(format!("churned decode of '{p}' diverged from solo"));
+            }
+            Ok::<(), String>(())
+        };
+        for _ in 0..g.rng.range(6, 14) {
+            if cb.can_admit() && g.rng.chance(0.6) {
+                let wi = g.rng.below(weights.len());
+                let p = prompts[g.rng.below(prompts.len())];
+                let n = g.rng.range(1, 2 * dims.seq_len);
+                let slot = if g.rng.chance(0.25) {
+                    let di = g.rng.below(weights.len());
+                    let k = 1 + g.rng.below(3);
+                    cb.join_spec(&weights[wi], &weights[di], p, n, &cfg, k, SpecPolicy::Greedy)
+                } else {
+                    cb.join(&weights[wi], p, n, &cfg)
+                }
+                .map_err(|e| e.to_string())?;
+                live.push((slot, wi, p, n));
+            }
+            if cb.active() > 0 {
+                for f in cb.step().map_err(|e| e.to_string())? {
+                    check(&f, &mut live)?;
+                }
+            }
+            if !live.is_empty() && g.rng.chance(0.25) {
+                let i = g.rng.below(live.len());
+                cb.retire(live[i].0).map_err(|e| e.to_string())?;
+                live.remove(i);
+            }
+            // `total_pages` includes live draft mirrors, so compare
+            // against the snapshot's own total.
+            let m = cb.kv_memory();
+            if m.used_pages + m.free_pages != m.total_pages {
+                return Err(format!(
+                    "page accounting broke mid-churn: {} used + {} free != {}",
+                    m.used_pages, m.free_pages, m.total_pages
+                ));
+            }
+        }
+        let mut steps = 0usize;
+        while cb.active() > 0 {
+            for f in cb.step().map_err(|e| e.to_string())? {
+                check(&f, &mut live)?;
+            }
+            steps += 1;
+            if steps > 1000 {
+                return Err("decode did not converge".into());
+            }
+        }
+        // Drained: only the prefix index may still hold pages…
+        let m = cb.kv_memory();
+        if m.used_pages != m.retained_pages {
+            return Err(format!(
+                "{} pages mapped but only {} retained by the index",
+                m.used_pages, m.retained_pages
+            ));
+        }
+        // …and clearing it returns the pool to baseline.
+        cb.clear_prefix_index();
+        let m = cb.kv_memory();
+        if m.used_pages != 0 || m.free_pages != base_total || m.shared_bytes != 0 {
+            return Err(format!(
+                "pages leaked after drain + index clear: {} used, {} free of {base_total}",
+                m.used_pages, m.free_pages
+            ));
+        }
+        Ok(())
+    });
+}

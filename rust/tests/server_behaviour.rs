@@ -483,3 +483,81 @@ fn worker_pool_generate_lane_is_deterministic_under_concurrency() {
     drop(client);
     server.shutdown();
 }
+
+#[test]
+fn shared_page_ledger_funds_skewed_load_across_workers() {
+    // The cross-worker page economy: two workers' worth of KV budget pool
+    // into one ledger, so a worker under skewed load admits rows from
+    // pages its idle peer is not using — rows the old per-worker budget
+    // would have deferred — while the pool-wide bound still holds (the
+    // idle worker's admission defers until a claim returns).
+    use mfqat::backend::{KvPageCfg, NativeWeights, PageLedger};
+    use mfqat::eval::generate::ContinuousBatch;
+    use std::sync::Arc;
+
+    let dims = test_dims();
+    let manifest = dims.to_manifest();
+    let ck = ParamSet::init(&manifest, 23)
+        .to_anchor_checkpoint(&manifest, ElementFormat::int(8))
+        .unwrap();
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 5,
+        seed: 7,
+    };
+    let ppr = dims.seq_len.div_ceil(4); // worst-case pages per row
+
+    // Baseline (the old regime): a per-worker budget of one row defers
+    // the worker's own second join even though a slot is free.
+    let mut solo: ContinuousBatch<&NativeWeights> =
+        ContinuousBatch::with_kv(&dims, 2, KvPageCfg::with_page(4).budget(ppr));
+    solo.join(&w, "kova", 3, &cfg).unwrap();
+    assert!(solo.has_free_slot() && !solo.can_admit(), "per-worker budget caps at one row");
+
+    // The economy: the same two-row budget, pooled across two workers.
+    let ledger = Arc::new(PageLedger::new(2 * ppr));
+    let mut busy: ContinuousBatch<&NativeWeights> =
+        ContinuousBatch::with_kv(&dims, 3, KvPageCfg::with_page(4));
+    busy.attach_kv_ledger(Arc::clone(&ledger));
+    let mut idle: ContinuousBatch<&NativeWeights> =
+        ContinuousBatch::with_kv(&dims, 3, KvPageCfg::with_page(4));
+    idle.attach_kv_ledger(Arc::clone(&ledger));
+
+    // Skewed load: both rows land on one worker — the ledger funds what
+    // a per-worker split would have deferred.
+    let s0 = busy.join(&w, "kova", 3, &cfg).unwrap();
+    assert_eq!(ledger.claimed(), ppr);
+    assert!(busy.can_admit(), "the peer's idle share funds this worker");
+    busy.join(&w, "kovaq blue", 3, &cfg).unwrap();
+    assert_eq!(ledger.claimed(), 2 * ppr);
+
+    // The pool-wide bound holds: the other worker now defers.
+    assert!(!idle.can_admit(), "an exhausted ledger must defer admission");
+    let err = idle.join(&w, "q", 3, &cfg).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("defer the join"),
+        "ledger exhaustion must read as a deferral, got: {err:#}"
+    );
+
+    // A retirement returns its claim and reopens admission pool-wide.
+    busy.retire(s0).unwrap();
+    assert_eq!(ledger.claimed(), ppr);
+    assert!(idle.can_admit(), "released claims re-fund the peer");
+    idle.join(&w, "q", 3, &cfg).unwrap();
+    assert_eq!(ledger.claimed(), 2 * ppr);
+
+    // Drain both workers: every claim goes home, none double-released.
+    for cb in [&mut busy, &mut idle] {
+        let mut steps = 0usize;
+        while cb.active() > 0 {
+            cb.step().unwrap();
+            steps += 1;
+            assert!(steps < 1000, "decode did not converge");
+        }
+    }
+    assert_eq!(ledger.claimed(), 0, "drained workers must hold no claims");
+    drop(busy);
+    drop(idle);
+    assert_eq!(ledger.claimed(), 0, "drop released claims twice");
+}
