@@ -18,6 +18,12 @@
 //!                           p50 speedup of continuous over gather
 //!   batched_decode/rowsN    raw `generate_native_batch` tokens/sec by
 //!                           batch width (no server) — the KV-batching win
+//!   kv_quant/<fmt>          quantized KV pages under a fixed 128 KiB page
+//!                           budget: rows admitted, peak resident bytes
+//!                           and next-token NLL per KV storage format
+//!                           (f32 / mxint8 / mxfp8 / mxint4), plus each
+//!                           packed format's admit/peak ratios and NLL
+//!                           delta vs the f32 arenas
 //!   kv_memory/*             paged-KV residency under the Poisson
 //!                           mixed-format load: peak resident bytes vs the
 //!                           dense-equivalent `slots × seq_len` allocation
@@ -49,12 +55,14 @@
 //! over rows=1, paged-KV peak residency ≤ the dense-equivalent bytes,
 //! per-format TTFT/inter-token percentiles, `tracing_overhead_pct` ≤ 3,
 //! `prefix_sharing.shared.prefill_tokens_saved` > 0 on the conversational
-//! trace — live there).
+//! trace, `kv_quant.mxint8_vs_f32.admit_ratio_vs_f32` ≥ 3 with a finite
+//! NLL delta — live there).
 //!
 //! Inner GEMM threading is pinned to 1 unless `MFQAT_THREADS` is set, so
 //! worker-pool scaling is not confounded by kernel-level parallelism.
 
-use mfqat::backend::{KvPageCfg, NativeWeights};
+use mfqat::backend::forward::{forward_cached, KvCache, RowTag};
+use mfqat::backend::{KvFormat, KvPageCfg, NativeWeights};
 use mfqat::coordinator::ElasticEngine;
 use mfqat::eval::generate::{generate_native_batch, SampleCfg};
 use mfqat::formats::ElementFormat;
@@ -721,6 +729,81 @@ fn main() {
         batch_json.set("batch_speedup_8v1", Json::from(t8 / t1));
     }
     summary.set("batched_decode", batch_json);
+
+    // --------------------------- quantized KV pages: budget, memory, NLL
+    //
+    // Same engine, same 24-token decode, four KV storage formats. Three
+    // readings per format: how many worst-case rows a fixed 128 KiB page
+    // budget admits (the concurrency a serving pool buys by packing its
+    // KV), the peak resident bytes of the decode itself, and the
+    // next-token NLL of a fixed sequence — so the fidelity price of the
+    // packed codes sits on the record next to the memory win. Acceptance:
+    // `mxint8_vs_f32.admit_ratio_vs_f32` >= 3, peak ratios < 1, every
+    // `nll_delta_vs_f32` finite.
+    let kv_budget_bytes = 128usize << 10;
+    let kv_pp = 16usize;
+    let w8 = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let kv_toks: Vec<i32> = (0..24u64).map(|i| ((i * 31 + 7) % 256) as i32).collect();
+    let mut kvq_json = Json::obj();
+    kvq_json.set("budget_bytes", Json::from(kv_budget_bytes));
+    kvq_json.set("page_positions", Json::from(kv_pp));
+    let mut kv_stats: Vec<(&'static str, usize, usize, f64)> = Vec::new();
+    for fmt in [KvFormat::F32, KvFormat::MxInt8, KvFormat::MxFp8, KvFormat::MxInt4] {
+        let page_bytes = dims.n_layers * kv_pp * fmt.bytes_per_position(dims.d_model);
+        let kv = KvPageCfg::with_page(kv_pp).format(fmt);
+        // Admission: worst-case rows the byte budget funds, measured by
+        // joining rows until the pool itself refuses.
+        let budget_pages = kv_budget_bytes / page_bytes;
+        let mut gate = KvCache::with_slots_cfg(&dims, 64, kv.budget(budget_pages));
+        let mut admitted = 0usize;
+        while gate.join_row(RowTag::of(&w8)).is_ok() {
+            admitted += 1;
+        }
+        // Fidelity + residency: one cached decode of the fixed sequence,
+        // scoring each next token from the logits the stored KV produced.
+        let mut cache = KvCache::with_rows_cfg(&dims, 1, kv);
+        let mut logits = forward_cached(&w8, &mut cache, &kv_toks[..1]).unwrap();
+        let mut nll = 0.0f64;
+        for i in 1..kv_toks.len() {
+            let last = &logits[logits.len() - dims.vocab..];
+            let max = last.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)) as f64;
+            let z: f64 = last.iter().map(|&v| (v as f64 - max).exp()).sum();
+            nll += max + z.ln() - last[kv_toks[i] as usize] as f64;
+            logits = forward_cached(&w8, &mut cache, &kv_toks[i..i + 1]).unwrap();
+        }
+        nll /= (kv_toks.len() - 1) as f64;
+        let m = cache.kv_memory();
+        println!(
+            "kv_quant/{}: page {page_bytes} B  admitted {admitted} rows  \
+             peak {} B  nll {nll:.4}",
+            fmt.name(),
+            m.resident_peak_bytes
+        );
+        let mut e = Json::obj();
+        e.set("page_bytes", Json::from(page_bytes));
+        e.set("admitted_rows", Json::from(admitted));
+        e.set("resident_peak_bytes", Json::from(m.resident_peak_bytes));
+        e.set("compression_x", Json::from(m.compression_ratio()));
+        e.set("nll", Json::from(nll));
+        kvq_json.set(fmt.name(), e);
+        kv_stats.push((fmt.name(), admitted, m.resident_peak_bytes, nll));
+    }
+    if let Some(&(_, f32_rows, f32_peak, f32_nll)) = kv_stats.iter().find(|s| s.0 == "f32") {
+        for (name, rows_q, peak_q, nll_q) in kv_stats.iter().filter(|s| s.0 != "f32") {
+            let mut d = Json::obj();
+            d.set("admit_ratio_vs_f32", Json::from(*rows_q as f64 / f32_rows as f64));
+            d.set("peak_ratio_vs_f32", Json::from(*peak_q as f64 / f32_peak as f64));
+            d.set("nll_delta_vs_f32", Json::from(nll_q - f32_nll));
+            println!(
+                "kv_quant/{name}_vs_f32: admit x{:.2}  peak x{:.3}  nll {:+.4}",
+                *rows_q as f64 / f32_rows as f64,
+                *peak_q as f64 / f32_peak as f64,
+                nll_q - f32_nll
+            );
+            kvq_json.set(&format!("{name}_vs_f32"), d);
+        }
+    }
+    summary.set("kv_quant", kvq_json);
 
     // ------------------------------------------------------------ summary
     let path = "BENCH_serving.json";

@@ -34,7 +34,9 @@
 //! proves any page size reproduces the single-page dense layout exactly).
 
 use super::kernels;
-use super::kvpool::{KvMemory, KvPageCfg, KvPagePool, LedgerShare, PageLedger, PrefixIndex};
+use super::kvpool::{
+    KvMemory, KvPageCfg, KvPageLayout, KvPagePool, LedgerShare, PageLedger, PrefixIndex,
+};
 use super::repack::RepackedMx;
 use crate::checkpoint::Checkpoint;
 use crate::formats::{ElementFormat, MxFormat};
@@ -621,7 +623,11 @@ impl KvCache {
     /// funded (`cfg.budget_pages` is ignored) — a budget below the
     /// worst case would make construction itself an admission decision.
     pub fn with_rows_cfg(dims: &ModelDims, rows: usize, cfg: KvPageCfg) -> KvCache {
-        let mut c = KvCache::with_slots_cfg(dims, rows, KvPageCfg::with_page(cfg.page_positions));
+        let mut c = KvCache::with_slots_cfg(
+            dims,
+            rows,
+            KvPageCfg::with_page(cfg.page_positions).format(cfg.kv_format),
+        );
         c.occupied.fill(true);
         c
     }
@@ -647,7 +653,12 @@ impl KvCache {
         } else {
             cfg.budget_pages.clamp(pages_per_row, rows * pages_per_row)
         };
-        let floats_per_page = dims.n_layers * page_positions * dims.d_model;
+        let layout = KvPageLayout {
+            n_layers: dims.n_layers,
+            page_positions,
+            d_model: dims.d_model,
+            format: cfg.kv_format,
+        };
         KvCache {
             n_layers: dims.n_layers,
             d_model: dims.d_model,
@@ -658,7 +669,7 @@ impl KvCache {
             tags: vec![None; rows],
             page_positions,
             pages_per_row,
-            pool: KvPagePool::new(total_pages, floats_per_page),
+            pool: KvPagePool::with_layout(total_pages, layout),
             tables: vec![Vec::new(); rows],
             resident_peak_pages: 0,
             prefix_share: cfg.prefix_share,
@@ -754,6 +765,8 @@ impl KvCache {
         KvMemory {
             resident_bytes: self.pool.used_pages() * self.pool.page_bytes(),
             resident_peak_bytes: self.resident_peak_pages * self.pool.page_bytes(),
+            resident_f32_equiv_bytes: self.pool.used_pages() * self.pool.dense_page_bytes(),
+            kv_format: self.pool.format().name(),
             dense_equivalent_bytes: self.rows
                 * self.n_layers
                 * self.capacity
@@ -1062,7 +1075,7 @@ impl KvCache {
         if n == 0 {
             return Ok(());
         }
-        let (pp, d) = (self.page_positions, self.d_model);
+        let pp = self.page_positions;
         let len = self.lens[r];
         let first = len / pp;
         let last = (len + n - 1) / pp;
@@ -1083,9 +1096,7 @@ impl KvCache {
                 );
             };
             let valid = len.saturating_sub(idx * pp).min(pp);
-            for l in 0..self.n_layers {
-                self.pool.copy_span(old, fresh, l * pp * d, valid * d);
-            }
+            self.pool.copy_prefix(old, fresh, valid);
             self.tables[r][idx] = fresh;
             self.pool.release(old);
         }
@@ -1115,11 +1126,9 @@ impl KvCache {
     /// of K and V). The backing page must already be mapped
     /// ([`Self::ensure_row_pages`]).
     fn write_kv(&mut self, l: usize, r: usize, pos: usize, k_src: &[f32], v_src: &[f32]) {
-        let (pp, d) = (self.page_positions, self.d_model);
+        let pp = self.page_positions;
         let page = self.tables[r][pos / pp];
-        let off = l * pp * d + (pos % pp) * d;
-        self.pool.k_mut(page)[off..off + d].copy_from_slice(k_src);
-        self.pool.v_mut(page)[off..off + d].copy_from_slice(v_src);
+        self.pool.write_pos(page, l, pos % pp, k_src, v_src);
     }
 
     /// Contiguous K/V chunk of row `r`, layer `l`, starting at position
@@ -1137,6 +1146,41 @@ impl KvCache {
         let k = &self.pool.k(page)[base..base + avail * d];
         let v = &self.pool.v(page)[base..base + avail * d];
         (k, v, avail)
+    }
+
+    /// Dequantize the first `span` cached positions of row `r`, layer `l`
+    /// into contiguous dense f32 K/V staging buffers (`k_out`/`v_out` are
+    /// resized to `span × d_model`). Walks the row's page table in position
+    /// order and hands each page-resident run to the SIMD-dispatched dequant
+    /// kernels ([`crate::backend::simd`]) — the quantized gather's staging
+    /// step. Works on any format (the f32 path degenerates to a copy), but
+    /// the gather only routes through here when the pool is quantized.
+    fn dequant_span(
+        &self,
+        l: usize,
+        r: usize,
+        span: usize,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) {
+        let (pp, d) = (self.page_positions, self.d_model);
+        k_out.resize(span * d, 0.0);
+        v_out.resize(span * d, 0.0);
+        let mut j = 0usize;
+        while j < span {
+            let page = self.tables[r][j / pp];
+            let in_page = j % pp;
+            let take = (pp - in_page).min(span - j);
+            self.pool.dequant_positions(
+                page,
+                l,
+                in_page,
+                take,
+                &mut k_out[j * d..(j + take) * d],
+                &mut v_out[j * d..(j + take) * d],
+            );
+            j += take;
+        }
     }
 }
 
@@ -1348,6 +1392,12 @@ pub fn forward_cached_batch_mixed(
     let mut delta = vec![0.0f32; total * d];
     let mut hidden = vec![0.0f32; total * dims.d_ff];
     let mut probs = vec![0.0f32; max_span];
+    // Quantized pools stage each row's K/V prefix through dense f32 scratch
+    // (dequantized once per (layer, row), reused across heads and queries);
+    // f32 pools keep the borrowed zero-copy page-chunk walk.
+    let kv_quantized = cache.pool.format().is_quantized();
+    let mut kq: Vec<f32> = Vec::new();
+    let mut vq: Vec<f32> = Vec::new();
     for (l, norms) in sh.norms.iter().enumerate() {
         kernels::rmsnorm(&x, &norms.ln1, &mut xn);
         for &(wr, t0, tn) in &runs {
@@ -1387,12 +1437,17 @@ pub fn forward_cached_batch_mixed(
             // index straight into contiguous slices instead of re-deriving
             // the page lookup (the pre-paging code's one-slice shape).
             let mut chunks: Vec<(&[f32], &[f32], usize, usize)> = Vec::new();
-            let mut j0 = 0usize;
-            while j0 < full_span {
-                let (kl, vl, avail) = cache.kv_chunk(l, r, j0);
-                let take = avail.min(full_span - j0);
-                chunks.push((&kl[..take * d], &vl[..take * d], j0, take));
-                j0 += take;
+            if kv_quantized {
+                cache.dequant_span(l, r, full_span, &mut kq, &mut vq);
+                chunks.push((&kq[..full_span * d], &vq[..full_span * d], 0, full_span));
+            } else {
+                let mut j0 = 0usize;
+                while j0 < full_span {
+                    let (kl, vl, avail) = cache.kv_chunk(l, r, j0);
+                    let take = avail.min(full_span - j0);
+                    chunks.push((&kl[..take * d], &vl[..take * d], j0, take));
+                    j0 += take;
+                }
             }
             for h in 0..dims.n_heads {
                 let qo = h * hd;

@@ -42,11 +42,28 @@
 //!   its share), letting admission trade memory between workers under
 //!   skewed load instead of capping each worker independently.
 //!
+//! Pages themselves store K/V in a selectable element format
+//! ([`KvFormat`], `--kv-format` / `MFQAT_KV_FORMAT`): dense f32 (the
+//! default, bit-identical to the pre-quantization pool) or MX-coded blocks
+//! — packed integer/minifloat codes plus one E8M0 scale per
+//! [`KV_SCALE_BLOCK`] channels, encoded with the same edge-hardening rules
+//! as weight blocks ([`crate::formats::mxblock::shared_exponent`]). The
+//! allocator, refcounting, prefix index, and ledger are format-agnostic —
+//! they deal in whole pages — while [`KvPagePool::write_pos`] /
+//! [`KvPagePool::dequant_positions`] / [`KvPagePool::copy_prefix`] move
+//! the actual bytes, so sharing, copy-on-write, speculative rollback, and
+//! zero-on-release all work unchanged on quantized pages.
+//!
 //! [`KvMemory`] is the accounting snapshot surfaced through
 //! [`crate::backend::DecodeSession::kv_memory`] and
 //! `server::Metrics::summary()`; `benches/serving.rs` records it as the
 //! `kv_memory.*` and `prefix_sharing.*` sections of `BENCH_serving.json`.
 
+use crate::backend::simd;
+use crate::formats::int::quantize_int;
+use crate::formats::mxblock::shared_exponent;
+use crate::formats::pack::{pack_into, packed_len};
+use crate::formats::{exp2i, ElementFormat, FpSpec, RoundMode};
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -54,6 +71,117 @@ use std::sync::Arc;
 
 /// Default page size in positions when `MFQAT_KV_PAGE` is unset.
 pub const DEFAULT_PAGE_POSITIONS: usize = 64;
+
+/// Channels per shared E8M0 scale in quantized KV pages: each run of
+/// `KV_SCALE_BLOCK` channels within one position's K (or V) row shares one
+/// power-of-two exponent, mirroring the MX block size used for weights.
+/// Fixed (not a knob) so the per-position byte cost is a pure function of
+/// [`KvFormat`] and `d_model`.
+pub const KV_SCALE_BLOCK: usize = 32;
+
+/// Element format of the K/V pages held by a [`KvPagePool`].
+///
+/// `F32` is the dense default and is bit-identical to the pre-quantization
+/// pool. The MX variants store packed per-position codes plus one E8M0
+/// scale per [`KV_SCALE_BLOCK`] channels, encoded with the same
+/// edge-hardening rules as weight blocks (NaN-ignoring amax, all-zero
+/// blocks pin the minimum exponent, infinities saturate — see
+/// [`crate::formats::mxblock::shared_exponent`]), cutting resident KV
+/// bytes roughly 3.9× (8-bit codes) to 7.3× (4-bit codes) versus dense
+/// f32 at `d_model = 64`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KvFormat {
+    /// Dense f32 K/V (the default; bit-identical to the unquantized pool).
+    #[default]
+    F32,
+    /// MXINT8 codes: one signed byte per channel + block scales.
+    MxInt8,
+    /// MXFP8 (OCP E4M3) codes: one minifloat byte per channel + block
+    /// scales.
+    MxFp8,
+    /// MXINT4 codes: two channels per byte + block scales.
+    MxInt4,
+}
+
+impl KvFormat {
+    /// Parse a CLI/env spelling (`f32`|`dense`, `mxint8`|`int8`,
+    /// `mxfp8`|`fp8`, `mxint4`|`int4`); `None` when unrecognised.
+    pub fn parse(s: &str) -> Option<KvFormat> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "dense" => Some(KvFormat::F32),
+            "mxint8" | "int8" => Some(KvFormat::MxInt8),
+            "mxfp8" | "fp8" => Some(KvFormat::MxFp8),
+            "mxint4" | "int4" => Some(KvFormat::MxInt4),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (round-trips through [`Self::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            KvFormat::F32 => "f32",
+            KvFormat::MxInt8 => "mxint8",
+            KvFormat::MxFp8 => "mxfp8",
+            KvFormat::MxInt4 => "mxint4",
+        }
+    }
+
+    /// The MX element format of the stored codes; `None` for dense f32.
+    pub fn elem(self) -> Option<ElementFormat> {
+        match self {
+            KvFormat::F32 => None,
+            KvFormat::MxInt8 => Some(ElementFormat::int(8)),
+            KvFormat::MxFp8 => Some(ElementFormat::fp(4, 3)),
+            KvFormat::MxInt4 => Some(ElementFormat::int(4)),
+        }
+    }
+
+    /// True for the MX-coded variants.
+    pub fn is_quantized(self) -> bool {
+        !matches!(self, KvFormat::F32)
+    }
+
+    /// Stored code bytes for one position's K (or V) row of `d_model`
+    /// channels (f32 rows count their dense bytes).
+    fn code_bytes_per_row(self, d_model: usize) -> usize {
+        match self.elem() {
+            None => d_model * std::mem::size_of::<f32>(),
+            Some(e) => packed_len(d_model, e.bits()),
+        }
+    }
+
+    /// Scale bytes (one E8M0 exponent per [`KV_SCALE_BLOCK`] channels) for
+    /// one position's K (or V) row; `0` for dense f32.
+    fn scale_bytes_per_row(self, d_model: usize) -> usize {
+        if self.is_quantized() {
+            d_model.div_ceil(KV_SCALE_BLOCK)
+        } else {
+            0
+        }
+    }
+
+    /// Stored bytes for one position of one layer across both arenas
+    /// (K + V): the per-position cost accounting and admission see.
+    pub fn bytes_per_position(self, d_model: usize) -> usize {
+        2 * (self.code_bytes_per_row(d_model) + self.scale_bytes_per_row(d_model))
+    }
+}
+
+/// Position layout of a [`KvPagePool`]'s pages: each page holds
+/// `page_positions` positions across all `n_layers` layers of `d_model`
+/// channels, stored as [`KvFormat`] elements. Within a page, one layer's
+/// positions are contiguous (`[layer][position][channel]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPageLayout {
+    /// Transformer layers spanned by each page.
+    pub n_layers: usize,
+    /// Positions per page.
+    pub page_positions: usize,
+    /// Channels per position (per layer, per arena).
+    pub d_model: usize,
+    /// Element format of the stored K/V.
+    pub format: KvFormat,
+}
 
 /// Page-pool sizing for a [`crate::backend::forward::KvCache`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -81,6 +209,11 @@ pub struct KvPageCfg {
     /// (LRU-evicted past the cap); `0` means no cap — index pages are
     /// evicted only under pool pressure (`MFQAT_KV_RETAIN` / `--kv-retain`).
     pub retain_pages: usize,
+    /// Element format of the K/V pages (`--kv-format` /
+    /// `MFQAT_KV_FORMAT`). Dense f32 by default — bit-identical to the
+    /// pre-quantization cache; the MX variants trade a bounded per-format
+    /// decode error for several-fold more admitted rows per page budget.
+    pub kv_format: KvFormat,
 }
 
 impl Default for KvPageCfg {
@@ -100,9 +233,19 @@ fn env_flag(name: &str) -> bool {
 impl KvPageCfg {
     /// Page size from the `MFQAT_KV_PAGE` environment pin (positions per
     /// page; see `util/cli.rs` for the env-var table), full funding.
-    /// Prefix sharing follows `MFQAT_PREFIX_SHARE` and the retain cap
-    /// follows `MFQAT_KV_RETAIN` (both optional).
+    /// Prefix sharing follows `MFQAT_PREFIX_SHARE`, the retain cap
+    /// follows `MFQAT_KV_RETAIN`, and the page element format follows
+    /// `MFQAT_KV_FORMAT` (all optional).
     pub fn from_env() -> KvPageCfg {
+        let kv_format = match std::env::var("MFQAT_KV_FORMAT") {
+            Ok(v) => KvFormat::parse(&v).unwrap_or_else(|| {
+                log::warn!(
+                    "MFQAT_KV_FORMAT='{v}' is not f32|mxint8|mxfp8|mxint4; using dense f32"
+                );
+                KvFormat::F32
+            }),
+            Err(_) => KvFormat::F32,
+        };
         let page_positions = match std::env::var("MFQAT_KV_PAGE") {
             Ok(v) => match v.trim().parse::<usize>() {
                 Ok(n) if n >= 1 => n,
@@ -128,16 +271,18 @@ impl KvPageCfg {
             budget_pages: 0,
             prefix_share: env_flag("MFQAT_PREFIX_SHARE"),
             retain_pages,
+            kv_format,
         }
     }
 
-    /// Explicit page size, full funding, sharing off.
+    /// Explicit page size, full funding, sharing off, dense f32 pages.
     pub fn with_page(page_positions: usize) -> KvPageCfg {
         KvPageCfg {
             page_positions: page_positions.max(1),
             budget_pages: 0,
             prefix_share: false,
             retain_pages: 0,
+            kv_format: KvFormat::F32,
         }
     }
 
@@ -158,6 +303,12 @@ impl KvPageCfg {
         self.retain_pages = retain_pages;
         self
     }
+
+    /// Select the K/V page element format (builder-style).
+    pub fn format(mut self, kv_format: KvFormat) -> KvPageCfg {
+        self.kv_format = kv_format;
+        self
+    }
 }
 
 /// A snapshot of paged-KV accounting: what is resident now versus what the
@@ -172,7 +323,11 @@ pub struct KvMemory {
     /// retires within one decode step still registers its footprint (a
     /// snapshot taken between steps would miss it).
     pub resident_peak_bytes: usize,
-    /// Bytes the dense layout would preallocate for the same cache
+    /// Dense-f32 bytes the currently mapped pages would occupy if stored
+    /// unquantized; equals `resident_bytes` for `kv_format = "f32"`, and
+    /// `resident_bytes × compression` for MX-coded pages.
+    pub resident_f32_equiv_bytes: usize,
+    /// Bytes the dense f32 layout would preallocate for the same cache
     /// (`rows × n_layers × seq_len × d_model × 2 × 4`).
     pub dense_equivalent_bytes: usize,
     /// Total arena bytes backing the pool (all pages, free or mapped).
@@ -200,6 +355,9 @@ pub struct KvMemory {
     /// Prefix-index entries dropped by LRU eviction (pool pressure or the
     /// retain cap); a later lookup for that span recomputes via prefill.
     pub prefix_evictions: u64,
+    /// Canonical [`KvFormat`] name of the pool's pages (empty when the
+    /// snapshot was aggregated across pools without format information).
+    pub kv_format: &'static str,
 }
 
 impl KvMemory {
@@ -222,24 +380,59 @@ impl KvMemory {
             self.resident_bytes as f64 / self.dense_equivalent_bytes as f64
         }
     }
+
+    /// Dense-f32 bytes per stored byte for the mapped pages (the
+    /// quantization win; `1.0` for dense f32 pools or when nothing is
+    /// resident).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.resident_bytes == 0 || self.resident_f32_equiv_bytes == 0 {
+            1.0
+        } else {
+            self.resident_f32_equiv_bytes as f64 / self.resident_bytes as f64
+        }
+    }
 }
 
-/// Fixed-size page arenas (one for K, one for V) plus a LIFO free list and
-/// per-page reference counts.
+/// Fixed-size page arenas (one set for K, one for V) plus a LIFO free
+/// list and per-page reference counts.
 ///
-/// The pool is position-layout-agnostic: it deals in pages of
-/// `floats_per_page` f32s per arena and leaves the
-/// `[layer, position-in-page, d_model]` indexing to the cache that owns it.
+/// Dense f32 pools keep K/V in two `Vec<f32>` arenas; quantized pools
+/// ([`KvFormat::is_quantized`]) keep packed code-byte arenas plus i8
+/// E8M0-scale arenas instead, with one code row + scale row per
+/// `(layer, position)` of each page. Position addressing follows
+/// [`KvPageLayout`]; the allocator itself (alloc/retain/release/shrink)
+/// deals only in whole pages.
 #[derive(Debug, Clone)]
 pub struct KvPagePool {
+    layout: KvPageLayout,
+    /// Dense-equivalent f32 count per arena-page
+    /// (`n_layers × page_positions × d_model`): the f32 arenas' page
+    /// stride, and the compression baseline for quantized pools.
     floats_per_page: usize,
+    /// Packed code bytes per arena-page (quantized formats; `0` for f32).
+    codes_per_page: usize,
+    /// Scale bytes per arena-page (quantized formats; `0` for f32).
+    scales_per_page: usize,
     total: usize,
     k: Vec<f32>,
     v: Vec<f32>,
+    k_codes: Vec<u8>,
+    v_codes: Vec<u8>,
+    k_scales: Vec<i8>,
+    v_scales: Vec<i8>,
+    /// 256-entry minifloat decode table ([`KvFormat::MxFp8`] only).
+    fp_lut: Vec<f32>,
+    /// Per-row i8 code scratch for the sub-byte quantized write path.
+    scratch: Vec<i8>,
     free: Vec<usize>,
     /// Reference count per page: `0` = free, `1` = one holder (a single
     /// row's table, or the prefix index alone), `> 1` = shared.
     refs: Vec<u32>,
+    /// Per-page high-water mark: highest written in-page position + 1.
+    /// Zero-on-release wipes only this occupied span instead of the whole
+    /// page, so a page that held two positions of a 64-position layout
+    /// memsets 2/64ths of its arenas.
+    hiwater: Vec<u32>,
     /// Pages removed from service by [`Self::shrink`]: still part of the
     /// arena (so release-time range asserts stay valid) but never handed
     /// out again and excluded from every capacity report.
@@ -247,16 +440,60 @@ pub struct KvPagePool {
 }
 
 impl KvPagePool {
-    /// Pool of `total` pages of `floats_per_page` f32s per arena, all free.
+    /// Pool of `total` dense-f32 pages of `floats_per_page` f32s per
+    /// arena, all free — the layout-agnostic constructor, kept for callers
+    /// that index pages by raw [`Self::k_mut`] spans (each page is treated
+    /// as one position of `floats_per_page` channels).
     pub fn new(total: usize, floats_per_page: usize) -> KvPagePool {
-        KvPagePool {
-            floats_per_page,
+        KvPagePool::with_layout(
             total,
-            k: vec![0.0; total * floats_per_page],
-            v: vec![0.0; total * floats_per_page],
+            KvPageLayout {
+                n_layers: 1,
+                page_positions: 1,
+                d_model: floats_per_page,
+                format: KvFormat::F32,
+            },
+        )
+    }
+
+    /// Pool of `total` pages with an explicit position [`KvPageLayout`]
+    /// (quantized formats need the layout to place per-position code and
+    /// scale rows), all free.
+    pub fn with_layout(total: usize, layout: KvPageLayout) -> KvPagePool {
+        let floats_per_page = layout.n_layers * layout.page_positions * layout.d_model;
+        let rows_per_page = layout.n_layers * layout.page_positions;
+        let quant = layout.format.is_quantized();
+        let codes_per_page = if quant {
+            rows_per_page * layout.format.code_bytes_per_row(layout.d_model)
+        } else {
+            0
+        };
+        let scales_per_page = rows_per_page * layout.format.scale_bytes_per_row(layout.d_model);
+        let dense_floats = if quant { 0 } else { total * floats_per_page };
+        let fp_lut = if layout.format == KvFormat::MxFp8 {
+            let spec = FpSpec::new(4, 3);
+            (0..=255u8).map(|b| spec.decode(b)).collect()
+        } else {
+            Vec::new()
+        };
+        KvPagePool {
+            layout,
+            floats_per_page,
+            codes_per_page,
+            scales_per_page,
+            total,
+            k: vec![0.0; dense_floats],
+            v: vec![0.0; dense_floats],
+            k_codes: vec![0; total * codes_per_page],
+            v_codes: vec![0; total * codes_per_page],
+            k_scales: vec![0; total * scales_per_page],
+            v_scales: vec![0; total * scales_per_page],
+            fp_lut,
+            scratch: Vec::new(),
             // LIFO so recently-hot pages are remapped first.
             free: (0..total).rev().collect(),
             refs: vec![0; total],
+            hiwater: vec![0; total],
             quarantined: Vec::new(),
         }
     }
@@ -286,6 +523,7 @@ impl KvPagePool {
     pub fn alloc(&mut self) -> Option<usize> {
         let p = self.free.pop()?;
         debug_assert_eq!(self.refs[p], 0, "free page {p} had live references");
+        debug_assert_eq!(self.hiwater[p], 0, "free page {p} had an occupied span");
         self.refs[p] = 1;
         Some(p)
     }
@@ -307,56 +545,232 @@ impl KvPagePool {
     }
 
     /// Drop one reference to `page`. The page is returned to the free
-    /// list — **with its K and V spans zeroed** so no stale keys/values
-    /// survive into the next mapping — only when the **last** reference
-    /// drops; earlier drops leave the content untouched for the remaining
-    /// holders. This keys zeroing to the refcount reaching zero rather
-    /// than to any particular call site (`retire_row` / `truncate_row` /
-    /// `reset_row` all funnel here), which is what makes those paths safe
-    /// to run against shared pages.
+    /// list — **with its occupied K and V spans zeroed** so no stale
+    /// keys/values survive into the next mapping — only when the **last**
+    /// reference drops; earlier drops leave the content untouched for the
+    /// remaining holders. This keys zeroing to the refcount reaching zero
+    /// rather than to any particular call site (`retire_row` /
+    /// `truncate_row` / `reset_row` all funnel here), which is what makes
+    /// those paths safe to run against shared pages. Only the span up to
+    /// the per-page high-water mark is memset (positions above it were
+    /// never written and are still zero from the previous release).
     pub fn release(&mut self, page: usize) {
         debug_assert!(page < self.total, "released page {page} out of range");
         debug_assert!(!self.free.contains(&page), "double free of KV page {page}");
         assert!(self.refs[page] > 0, "release of free KV page {page}");
         self.refs[page] -= 1;
         if self.refs[page] == 0 {
-            let s = page * self.floats_per_page;
-            self.k[s..s + self.floats_per_page].fill(0.0);
-            self.v[s..s + self.floats_per_page].fill(0.0);
+            self.zero_occupied(page);
             self.free.push(page);
         }
     }
 
-    /// K-arena span of `page`.
+    /// Zero `page`'s occupied span (positions `0..high_water`) in every
+    /// arena and reset the mark.
+    fn zero_occupied(&mut self, page: usize) {
+        let hw = std::mem::take(&mut self.hiwater[page]) as usize;
+        if hw == 0 {
+            return;
+        }
+        let KvPageLayout {
+            n_layers,
+            page_positions: pp,
+            d_model: d,
+            format,
+        } = self.layout;
+        if format.is_quantized() {
+            let cbr = format.code_bytes_per_row(d);
+            let sbr = format.scale_bytes_per_row(d);
+            for l in 0..n_layers {
+                let row0 = (page * n_layers + l) * pp;
+                self.k_codes[row0 * cbr..(row0 + hw) * cbr].fill(0);
+                self.v_codes[row0 * cbr..(row0 + hw) * cbr].fill(0);
+                self.k_scales[row0 * sbr..(row0 + hw) * sbr].fill(0);
+                self.v_scales[row0 * sbr..(row0 + hw) * sbr].fill(0);
+            }
+        } else {
+            for l in 0..n_layers {
+                let s = page * self.floats_per_page + l * pp * d;
+                self.k[s..s + hw * d].fill(0.0);
+                self.v[s..s + hw * d].fill(0.0);
+            }
+        }
+    }
+
+    /// K-arena span of `page` (dense f32 pools only).
     pub fn k(&self, page: usize) -> &[f32] {
+        debug_assert!(!self.layout.format.is_quantized(), "raw span on quantized pool");
         &self.k[page * self.floats_per_page..(page + 1) * self.floats_per_page]
     }
 
-    /// V-arena span of `page`.
+    /// V-arena span of `page` (dense f32 pools only).
     pub fn v(&self, page: usize) -> &[f32] {
+        debug_assert!(!self.layout.format.is_quantized(), "raw span on quantized pool");
         &self.v[page * self.floats_per_page..(page + 1) * self.floats_per_page]
     }
 
-    /// Mutable K-arena span of `page`.
+    /// Mutable K-arena span of `page` (dense f32 pools only). A raw-span
+    /// writer may touch any position, so the whole page counts as occupied
+    /// for zero-on-release.
     pub fn k_mut(&mut self, page: usize) -> &mut [f32] {
+        debug_assert!(!self.layout.format.is_quantized(), "raw span on quantized pool");
+        self.hiwater[page] = self.layout.page_positions as u32;
         &mut self.k[page * self.floats_per_page..(page + 1) * self.floats_per_page]
     }
 
-    /// Mutable V-arena span of `page`.
+    /// Mutable V-arena span of `page` (dense f32 pools only; see
+    /// [`Self::k_mut`] for the high-water effect).
     pub fn v_mut(&mut self, page: usize) -> &mut [f32] {
+        debug_assert!(!self.layout.format.is_quantized(), "raw span on quantized pool");
+        self.hiwater[page] = self.layout.page_positions as u32;
         &mut self.v[page * self.floats_per_page..(page + 1) * self.floats_per_page]
     }
 
-    /// Copy `floats` f32s at offset `off` within both arenas from page
-    /// `src` to page `dst` (the copy-on-write primitive: the owner of
-    /// `dst` gets a private copy of `src`'s span while `src` stays intact
-    /// for its remaining holders).
-    pub fn copy_span(&mut self, src: usize, dst: usize, off: usize, floats: usize) {
-        debug_assert!(off + floats <= self.floats_per_page, "span exceeds page");
-        let s = src * self.floats_per_page + off;
-        let d = dst * self.floats_per_page + off;
-        self.k.copy_within(s..s + floats, d);
-        self.v.copy_within(s..s + floats, d);
+    /// Write one position's K and V channel rows (layer `layer`, in-page
+    /// position `pos`) in the pool's element format. Quantized formats
+    /// encode each [`KV_SCALE_BLOCK`]-channel run into one shared E8M0
+    /// exponent plus packed codes; the position's full code + scale rows
+    /// are overwritten, so re-writing a position (speculative-rollback
+    /// replay) is deterministic regardless of prior content.
+    pub fn write_pos(
+        &mut self,
+        page: usize,
+        layer: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        let KvPageLayout {
+            n_layers,
+            page_positions: pp,
+            d_model: d,
+            format,
+        } = self.layout;
+        debug_assert!(layer < n_layers && pos < pp, "write_pos outside page layout");
+        debug_assert_eq!(k_row.len(), d);
+        debug_assert_eq!(v_row.len(), d);
+        debug_assert!(self.refs[page] > 0, "write to unmapped page {page}");
+        if let Some(elem) = format.elem() {
+            let cbr = format.code_bytes_per_row(d);
+            let sbr = format.scale_bytes_per_row(d);
+            let row = (page * n_layers + layer) * pp + pos;
+            let mut scratch = std::mem::take(&mut self.scratch);
+            encode_row(
+                elem,
+                k_row,
+                &mut scratch,
+                &mut self.k_codes[row * cbr..(row + 1) * cbr],
+                &mut self.k_scales[row * sbr..(row + 1) * sbr],
+            );
+            encode_row(
+                elem,
+                v_row,
+                &mut scratch,
+                &mut self.v_codes[row * cbr..(row + 1) * cbr],
+                &mut self.v_scales[row * sbr..(row + 1) * sbr],
+            );
+            self.scratch = scratch;
+        } else {
+            let off = page * self.floats_per_page + (layer * pp + pos) * d;
+            self.k[off..off + d].copy_from_slice(k_row);
+            self.v[off..off + d].copy_from_slice(v_row);
+        }
+        let hw = (pos + 1) as u32;
+        if self.hiwater[page] < hw {
+            self.hiwater[page] = hw;
+        }
+    }
+
+    /// Decode `n` consecutive positions of layer `layer` starting at
+    /// in-page position `pos` into dense f32 rows (`n × d_model` floats
+    /// each for K and V). Dense pools copy; quantized pools dispatch the
+    /// SIMD dequant kernels in [`crate::backend::simd`] (bit-identical to
+    /// their portable oracles, so decode output is independent of the
+    /// dispatch level).
+    pub fn dequant_positions(
+        &self,
+        page: usize,
+        layer: usize,
+        pos: usize,
+        n: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let KvPageLayout {
+            n_layers,
+            page_positions: pp,
+            d_model: d,
+            format,
+        } = self.layout;
+        debug_assert!(layer < n_layers && pos + n <= pp, "span outside page layout");
+        debug_assert_eq!(k_out.len(), n * d);
+        debug_assert_eq!(v_out.len(), n * d);
+        if format.is_quantized() {
+            let cbr = format.code_bytes_per_row(d);
+            let sbr = format.scale_bytes_per_row(d);
+            let row0 = (page * n_layers + layer) * pp + pos;
+            let kc = &self.k_codes[row0 * cbr..(row0 + n) * cbr];
+            let vc = &self.v_codes[row0 * cbr..(row0 + n) * cbr];
+            let ks = &self.k_scales[row0 * sbr..(row0 + n) * sbr];
+            let vs = &self.v_scales[row0 * sbr..(row0 + n) * sbr];
+            match format {
+                KvFormat::MxInt8 => {
+                    simd::kv_dequant_i8(kc, ks, d, KV_SCALE_BLOCK, k_out);
+                    simd::kv_dequant_i8(vc, vs, d, KV_SCALE_BLOCK, v_out);
+                }
+                KvFormat::MxFp8 => {
+                    simd::kv_dequant_fp8(kc, ks, &self.fp_lut, d, KV_SCALE_BLOCK, k_out);
+                    simd::kv_dequant_fp8(vc, vs, &self.fp_lut, d, KV_SCALE_BLOCK, v_out);
+                }
+                KvFormat::MxInt4 => {
+                    simd::kv_dequant_i4(kc, ks, d, KV_SCALE_BLOCK, k_out);
+                    simd::kv_dequant_i4(vc, vs, d, KV_SCALE_BLOCK, v_out);
+                }
+                KvFormat::F32 => unreachable!("quantized match arm"),
+            }
+        } else {
+            let off = page * self.floats_per_page + (layer * pp + pos) * d;
+            k_out.copy_from_slice(&self.k[off..off + n * d]);
+            v_out.copy_from_slice(&self.v[off..off + n * d]);
+        }
+    }
+
+    /// Copy the first `positions` positions of **every** layer from page
+    /// `src` to page `dst`, in whatever representation the pool stores
+    /// (the copy-on-write primitive: the owner of `dst` gets a private
+    /// copy of `src`'s prefix while `src` stays intact for its remaining
+    /// holders). Raises `dst`'s high-water mark to cover the copy.
+    pub fn copy_prefix(&mut self, src: usize, dst: usize, positions: usize) {
+        let KvPageLayout {
+            n_layers,
+            page_positions: pp,
+            d_model: d,
+            format,
+        } = self.layout;
+        debug_assert!(positions <= pp, "span exceeds page");
+        if format.is_quantized() {
+            let cbr = format.code_bytes_per_row(d);
+            let sbr = format.scale_bytes_per_row(d);
+            for l in 0..n_layers {
+                let s = (src * n_layers + l) * pp;
+                let t = (dst * n_layers + l) * pp;
+                self.k_codes.copy_within(s * cbr..(s + positions) * cbr, t * cbr);
+                self.v_codes.copy_within(s * cbr..(s + positions) * cbr, t * cbr);
+                self.k_scales.copy_within(s * sbr..(s + positions) * sbr, t * sbr);
+                self.v_scales.copy_within(s * sbr..(s + positions) * sbr, t * sbr);
+            }
+        } else {
+            for l in 0..n_layers {
+                let s = src * self.floats_per_page + l * pp * d;
+                let t = dst * self.floats_per_page + l * pp * d;
+                self.k.copy_within(s..s + positions * d, t);
+                self.v.copy_within(s..s + positions * d, t);
+            }
+        }
+        let hw = positions as u32;
+        if self.hiwater[dst] < hw {
+            self.hiwater[dst] = hw;
+        }
     }
 
     /// Pages on the free list.
@@ -376,13 +790,41 @@ impl KvPagePool {
         self.total - self.quarantined.len()
     }
 
-    /// f32s per page per arena.
+    /// Dense-equivalent f32s per page per arena.
     pub fn floats_per_page(&self) -> usize {
         self.floats_per_page
     }
 
-    /// Bytes one mapped page holds across both arenas (K + V).
+    /// Position layout of the pool's pages.
+    pub fn layout(&self) -> KvPageLayout {
+        self.layout
+    }
+
+    /// Element format of the stored pages.
+    pub fn format(&self) -> KvFormat {
+        self.layout.format
+    }
+
+    /// Highest written in-page position + 1 on `page` (the span
+    /// zero-on-release wipes); `0` for a never-written page.
+    pub fn page_high_water(&self, page: usize) -> usize {
+        self.hiwater[page] as usize
+    }
+
+    /// Bytes one mapped page actually stores across both arenas (K + V):
+    /// dense f32 bytes for [`KvFormat::F32`], packed codes + scales for
+    /// the MX formats.
     pub fn page_bytes(&self) -> usize {
+        if self.layout.format.is_quantized() {
+            2 * (self.codes_per_page + self.scales_per_page)
+        } else {
+            2 * self.floats_per_page * std::mem::size_of::<f32>()
+        }
+    }
+
+    /// Bytes the same page would occupy stored as dense f32 (the
+    /// compression baseline; equals [`Self::page_bytes`] for f32 pools).
+    pub fn dense_page_bytes(&self) -> usize {
         2 * self.floats_per_page * std::mem::size_of::<f32>()
     }
 
@@ -400,6 +842,55 @@ impl KvPagePool {
             .map(|&r| (r as usize).saturating_sub(1))
             .sum();
         extra * self.page_bytes()
+    }
+}
+
+/// Encode one position's channel row into MX codes + per-block E8M0
+/// scales, with the same edge rules as weight blocks: the shared exponent
+/// is the NaN-ignoring amax exponent minus the element's `emax`, all-zero
+/// blocks pin the minimum exponent, infinities saturate the exponent, and
+/// element quantization is saturating round-to-nearest-even (NaN → 0).
+/// `scratch` is a reusable code buffer for the sub-byte bit-packing path.
+fn encode_row(
+    elem: ElementFormat,
+    x: &[f32],
+    scratch: &mut Vec<i8>,
+    codes: &mut [u8],
+    scales: &mut [i8],
+) {
+    let bits = elem.bits();
+    if let Some(spec) = elem.fp_spec() {
+        for (b, chunk) in x.chunks(KV_SCALE_BLOCK).enumerate() {
+            let e = shared_exponent(chunk, elem);
+            scales[b] = e as i8;
+            let inv = exp2i(-e);
+            for (c, &v) in codes[b * KV_SCALE_BLOCK..].iter_mut().zip(chunk.iter()) {
+                *c = spec.quantize_code(v * inv);
+            }
+        }
+    } else if bits == 8 {
+        for (b, chunk) in x.chunks(KV_SCALE_BLOCK).enumerate() {
+            let e = shared_exponent(chunk, elem);
+            scales[b] = e as i8;
+            let inv = exp2i(-e);
+            for (c, &v) in codes[b * KV_SCALE_BLOCK..].iter_mut().zip(chunk.iter()) {
+                *c = quantize_int(v * inv, 8, RoundMode::HalfEven) as u8;
+            }
+        }
+    } else {
+        // Sub-byte integer codes quantize into the scratch row, then
+        // bit-pack in one pass (pack_into zero-fills `codes` first, so the
+        // row is fully overwritten).
+        scratch.resize(x.len(), 0);
+        for (b, chunk) in x.chunks(KV_SCALE_BLOCK).enumerate() {
+            let e = shared_exponent(chunk, elem);
+            scales[b] = e as i8;
+            let inv = exp2i(-e);
+            for (s, &v) in scratch[b * KV_SCALE_BLOCK..].iter_mut().zip(chunk.iter()) {
+                *s = quantize_int(v * inv, bits, RoundMode::HalfEven);
+            }
+        }
+        pack_into(&scratch[..x.len()], bits, codes);
     }
 }
 
@@ -807,13 +1298,172 @@ mod tests {
 
     #[test]
     fn cfg_env_pin_and_builders() {
-        let c = KvPageCfg::with_page(16).budget(5).share(true).retain(7);
+        let c = KvPageCfg::with_page(16)
+            .budget(5)
+            .share(true)
+            .retain(7)
+            .format(KvFormat::MxInt8);
         assert_eq!(c.page_positions, 16);
         assert_eq!(c.budget_pages, 5);
         assert!(c.prefix_share);
         assert_eq!(c.retain_pages, 7);
+        assert_eq!(c.kv_format, KvFormat::MxInt8);
         assert_eq!(KvPageCfg::with_page(0).page_positions, 1, "clamped");
         assert!(!KvPageCfg::with_page(4).prefix_share, "sharing is opt-in");
+        assert_eq!(
+            KvPageCfg::with_page(4).kv_format,
+            KvFormat::F32,
+            "dense f32 is the default"
+        );
+    }
+
+    #[test]
+    fn kv_format_parse_names_and_bytes() {
+        for f in [
+            KvFormat::F32,
+            KvFormat::MxInt8,
+            KvFormat::MxFp8,
+            KvFormat::MxInt4,
+        ] {
+            assert_eq!(KvFormat::parse(f.name()), Some(f), "name round-trips");
+        }
+        assert_eq!(KvFormat::parse("dense"), Some(KvFormat::F32));
+        assert_eq!(KvFormat::parse("INT8"), Some(KvFormat::MxInt8));
+        assert_eq!(KvFormat::parse("fp8"), Some(KvFormat::MxFp8));
+        assert_eq!(KvFormat::parse("int4"), Some(KvFormat::MxInt4));
+        assert_eq!(KvFormat::parse("mxfp4"), None);
+        // Per-position bytes at d_model = 64 (K + V, one layer): dense
+        // 512B; mxint8/mxfp8 64 codes + 2 scales per arena; mxint4 packs
+        // two channels per byte.
+        assert_eq!(KvFormat::F32.bytes_per_position(64), 512);
+        assert_eq!(KvFormat::MxInt8.bytes_per_position(64), 2 * (64 + 2));
+        assert_eq!(KvFormat::MxFp8.bytes_per_position(64), 2 * (64 + 2));
+        assert_eq!(KvFormat::MxInt4.bytes_per_position(64), 2 * (32 + 2));
+        // Remainder blocks still get a scale.
+        assert_eq!(KvFormat::MxInt8.bytes_per_position(40), 2 * (40 + 2));
+    }
+
+    #[test]
+    fn partial_fill_zero_on_release_spans_high_water() {
+        // Zero-on-release memsets only the occupied span: write two of
+        // four positions, release, and the whole page must still read as
+        // zero afterwards (the unwritten tail was never dirtied).
+        let layout = KvPageLayout {
+            n_layers: 2,
+            page_positions: 4,
+            d_model: 8,
+            format: KvFormat::F32,
+        };
+        let mut pool = KvPagePool::with_layout(1, layout);
+        let p = pool.alloc().unwrap();
+        assert_eq!(pool.page_high_water(p), 0);
+        let row = [3.0f32; 8];
+        pool.write_pos(p, 0, 0, &row, &row);
+        pool.write_pos(p, 1, 1, &row, &row);
+        assert_eq!(pool.page_high_water(p), 2, "high water tracks max position");
+        pool.release(p);
+        assert_eq!(pool.page_high_water(p), 0, "release resets the mark");
+        let q = pool.alloc().unwrap();
+        assert_eq!(q, p, "LIFO hands the same page back");
+        let (mut k, mut v) = (vec![f32::NAN; 4 * 8], vec![f32::NAN; 4 * 8]);
+        for l in 0..2 {
+            pool.dequant_positions(q, l, 0, 4, &mut k, &mut v);
+            assert!(
+                k.iter().chain(v.iter()).all(|&x| x == 0.0),
+                "stale KV leaked in layer {l}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_pages_round_trip_and_account_packed_bytes() {
+        for (fmt, tol_frac) in [
+            (KvFormat::MxInt8, 1.0 / 64.0),
+            (KvFormat::MxFp8, 1.0 / 8.0),
+            (KvFormat::MxInt4, 1.0 / 4.0),
+        ] {
+            let d = 40usize; // exercises the remainder scale block
+            let layout = KvPageLayout {
+                n_layers: 1,
+                page_positions: 2,
+                d_model: d,
+                format: fmt,
+            };
+            let mut pool = KvPagePool::with_layout(2, layout);
+            let elem = fmt.elem().unwrap();
+            let cbr = packed_len(d, elem.bits());
+            let sbr = d.div_ceil(KV_SCALE_BLOCK);
+            assert_eq!(pool.page_bytes(), 2 * 2 * (cbr + sbr), "{fmt:?} packed bytes");
+            assert_eq!(pool.dense_page_bytes(), 2 * 2 * d * 4);
+            assert!(pool.page_bytes() < pool.dense_page_bytes() / 3, "{fmt:?} compresses");
+
+            let p = pool.alloc().unwrap();
+            let x: Vec<f32> = (0..d).map(|i| (i as f32 - 20.0) * 0.37).collect();
+            pool.write_pos(p, 0, 1, &x, &x);
+            let (mut k, mut v) = (vec![0.0f32; d], vec![0.0f32; d]);
+            pool.dequant_positions(p, 0, 1, 1, &mut k, &mut v);
+            assert_eq!(k, v, "K and V rows encode identically");
+            let max_abs = x.iter().fold(0.0f32, |m, &a| m.max(a.abs()));
+            let tol = max_abs * tol_frac as f32;
+            for (i, (&got, &want)) in k.iter().zip(x.iter()).enumerate() {
+                assert!(
+                    (got - want).abs() <= tol,
+                    "{fmt:?} channel {i}: {got} vs {want} (tol {tol})"
+                );
+            }
+            // Zero-on-release covers the code + scale arenas too.
+            pool.release(p);
+            let q = pool.alloc().unwrap();
+            assert_eq!(q, p);
+            let (mut k, mut v) = (vec![f32::NAN; 2 * d], vec![f32::NAN; 2 * d]);
+            pool.dequant_positions(q, 0, 0, 2, &mut k, &mut v);
+            assert!(k.iter().chain(v.iter()).all(|&z| z == 0.0), "{fmt:?} leaked");
+        }
+    }
+
+    #[test]
+    fn copy_prefix_cow_preserves_co_holder_on_packed_pages() {
+        // The COW primitive on a quantized pool: copy a one-position
+        // prefix to a fresh page, diverge the copy, and the source's
+        // content must be untouched for its co-holder.
+        let layout = KvPageLayout {
+            n_layers: 2,
+            page_positions: 2,
+            d_model: 32,
+            format: KvFormat::MxInt8,
+        };
+        let mut pool = KvPagePool::with_layout(2, layout);
+        let src = pool.alloc().unwrap();
+        let a: Vec<f32> = (0..32).map(|i| i as f32 * 0.5 - 8.0).collect();
+        let b: Vec<f32> = (0..32).map(|i| 16.0 - i as f32).collect();
+        for l in 0..2 {
+            pool.write_pos(src, l, 0, &a, &b);
+            pool.write_pos(src, l, 1, &b, &a);
+        }
+        pool.retain(src); // co-holder
+        let dst = pool.alloc().unwrap();
+        pool.copy_prefix(src, dst, 1);
+        assert_eq!(pool.page_high_water(dst), 1);
+
+        let (mut ks, mut vs) = (vec![0.0f32; 32], vec![0.0f32; 32]);
+        let (mut kd, mut vd) = (vec![0.0f32; 32], vec![0.0f32; 32]);
+        for l in 0..2 {
+            pool.dequant_positions(src, l, 0, 1, &mut ks, &mut vs);
+            pool.dequant_positions(dst, l, 0, 1, &mut kd, &mut vd);
+            assert_eq!(ks, kd, "layer {l}: copied K prefix is bit-identical");
+            assert_eq!(vs, vd, "layer {l}: copied V prefix is bit-identical");
+        }
+        // Diverge the copy at position 1; the source co-holder's view of
+        // position 1 must not move.
+        pool.dequant_positions(src, 0, 1, 1, &mut ks, &mut vs);
+        pool.write_pos(dst, 0, 1, &a, &a);
+        let (mut ks2, mut vs2) = (vec![0.0f32; 32], vec![0.0f32; 32]);
+        pool.dequant_positions(src, 0, 1, 1, &mut ks2, &mut vs2);
+        assert_eq!(ks, ks2, "source K untouched by the diverged copy");
+        assert_eq!(vs, vs2, "source V untouched by the diverged copy");
+        pool.release(src);
+        pool.dequant_positions(src, 0, 1, 1, &mut ks2, &mut vs2);
+        assert_eq!(ks, ks2, "first release leaves content for the co-holder");
     }
 
     #[test]

@@ -39,7 +39,10 @@ pub mod simd;
 pub mod pjrt;
 
 pub use forward::{ActMode, KvCache, LayerWeights, Mat, NativeWeights, RowTag, SharedParams};
-pub use kvpool::{KvMemory, KvPageCfg, KvPagePool, PageLedger, PrefixIndex};
+pub use kvpool::{
+    KvFormat, KvMemory, KvPageCfg, KvPageLayout, KvPagePool, PageLedger, PrefixIndex,
+    KV_SCALE_BLOCK,
+};
 pub use native::{NativeBackend, NativeDecodeSession};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;

@@ -27,6 +27,12 @@
 //! `MFQAT_SIMD=off` forces the portable path (the forced-fallback leg of
 //! CI's differential run); the env-var surface is documented once in
 //! [`crate::util::cli`].
+//!
+//! The same dispatch + differential-oracle contract covers the
+//! quantized-KV dequant kernels ([`kv_dequant_i8`] / [`kv_dequant_i4`] /
+//! [`kv_dequant_fp8`]) the paged attention gather decodes MX-coded K/V
+//! pages through — power-of-two scale multiplies and i8→f32 conversions
+//! are exact, so every arm is bit-identical to its portable oracle.
 
 use std::sync::OnceLock;
 
@@ -332,6 +338,284 @@ unsafe fn tile_mac_i32_neon(acc: &mut [i32], m: &[i32], w: &[i32], stride: usize
     }
 }
 
+// --------------------------------------------------------------------------
+// Quantized-KV dequantization (MX-block K/V pages).
+// --------------------------------------------------------------------------
+//
+// The paged KV cache stores quantized pages as per-position code rows plus
+// one E8M0 exponent per `block` channels (`kvpool::KV_SCALE_BLOCK`). The
+// attention gather decodes whole position runs through these kernels:
+// `out[r*d + i] = code[r][i] as f32 * 2^scale[r][i/block]`. Multiplying by
+// a power of two is exact in IEEE f32, and so is the i8→f32 conversion, so
+// every SIMD arm is bit-identical to its scalar oracle — the same
+// differential-harness contract as the tile MACs above.
+
+/// Reinterpret packed code bytes as two's-complement `i8` lanes.
+#[inline]
+fn as_i8(bytes: &[u8]) -> &[i8] {
+    // SAFETY: u8 and i8 have identical size and alignment; reinterpreting
+    // each byte as two's-complement is exactly the stored code semantics.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
+}
+
+#[inline]
+fn check_kv(
+    codes_len: usize,
+    row_bytes: usize,
+    scales_len: usize,
+    d: usize,
+    block: usize,
+    out_len: usize,
+) {
+    assert!(d > 0 && block > 0, "empty KV row layout");
+    assert_eq!(out_len % d, 0, "output is not a whole number of {d}-channel rows");
+    let rows = out_len / d;
+    assert_eq!(codes_len, rows * row_bytes, "code bytes disagree with {rows} rows");
+    assert_eq!(
+        scales_len,
+        rows * d.div_ceil(block),
+        "one scale per {block}-channel block per row"
+    );
+}
+
+/// Dequantize rows of MXINT8 KV codes: one signed byte per channel,
+/// `out[i] = code[i] × 2^scale[i / block]` per row. Dispatched to the
+/// active [`SimdLevel`]; bit-identical to [`kv_dequant_i8_portable`].
+#[inline]
+pub fn kv_dequant_i8(codes: &[u8], scales: &[i8], d: usize, block: usize, out: &mut [f32]) {
+    check_kv(codes.len(), d, scales.len(), d, block, out.len());
+    kv_scale_i8_dispatch(as_i8(codes), scales, d, block, out);
+}
+
+/// The portable reference for [`kv_dequant_i8`] (public for differential
+/// tests and the `MFQAT_SIMD=off` CI leg).
+pub fn kv_dequant_i8_portable(
+    codes: &[u8],
+    scales: &[i8],
+    d: usize,
+    block: usize,
+    out: &mut [f32],
+) {
+    check_kv(codes.len(), d, scales.len(), d, block, out.len());
+    kv_scale_i8_scalar(as_i8(codes), scales, d, block, out);
+}
+
+/// Dequantize rows of MXINT4 KV codes: two signed nibbles per byte
+/// (row-aligned, `packed_len(d, 4)` bytes per row), then the same
+/// block-scale multiply as [`kv_dequant_i8`]. Bit-identical to
+/// [`kv_dequant_i4_portable`].
+pub fn kv_dequant_i4(packed: &[u8], scales: &[i8], d: usize, block: usize, out: &mut [f32]) {
+    let row_bytes = crate::formats::pack::packed_len(d, 4);
+    check_kv(packed.len(), row_bytes, scales.len(), d, block, out.len());
+    let mut codes = vec![0i8; out.len()];
+    for (crow, prow) in codes.chunks_exact_mut(d).zip(packed.chunks_exact(row_bytes)) {
+        crate::formats::pack::unpack_signed_into(prow, 4, crow);
+    }
+    kv_scale_i8_dispatch(&codes, scales, d, block, out);
+}
+
+/// The portable reference for [`kv_dequant_i4`]: scalar nibble unpack +
+/// scalar scale loop.
+pub fn kv_dequant_i4_portable(
+    packed: &[u8],
+    scales: &[i8],
+    d: usize,
+    block: usize,
+    out: &mut [f32],
+) {
+    let row_bytes = crate::formats::pack::packed_len(d, 4);
+    check_kv(packed.len(), row_bytes, scales.len(), d, block, out.len());
+    let mut codes = vec![0i8; out.len()];
+    for (crow, prow) in codes.chunks_exact_mut(d).zip(packed.chunks_exact(row_bytes)) {
+        crate::formats::pack::unpack_signed_into(prow, 4, crow);
+    }
+    kv_scale_i8_scalar(&codes, scales, d, block, out);
+}
+
+/// Dequantize rows of MXFP8 (E4M3) KV codes through a 256-entry decode
+/// table: `out[i] = lut[code[i]] × 2^scale[i / block]` per row. AVX2 uses
+/// a gathered table load; other levels run the scalar loop (the LUT fits
+/// in L1, so the scalar path is already load-bound). Bit-identical to
+/// [`kv_dequant_fp8_portable`].
+pub fn kv_dequant_fp8(
+    codes: &[u8],
+    scales: &[i8],
+    lut: &[f32],
+    d: usize,
+    block: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(lut.len(), 256, "fp8 decode LUT must cover every byte");
+    check_kv(codes.len(), d, scales.len(), d, block, out.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: bounds checked above; AVX2 presence runtime-verified.
+        SimdLevel::Avx2 => unsafe { kv_lut_f32_avx2(codes, scales, lut, d, block, out) },
+        _ => kv_lut_f32_scalar(codes, scales, lut, d, block, out),
+    }
+}
+
+/// The portable reference for [`kv_dequant_fp8`].
+pub fn kv_dequant_fp8_portable(
+    codes: &[u8],
+    scales: &[i8],
+    lut: &[f32],
+    d: usize,
+    block: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(lut.len(), 256, "fp8 decode LUT must cover every byte");
+    check_kv(codes.len(), d, scales.len(), d, block, out.len());
+    kv_lut_f32_scalar(codes, scales, lut, d, block, out);
+}
+
+/// Level-dispatched `code × 2^scale` over unpacked i8 rows.
+#[inline]
+fn kv_scale_i8_dispatch(codes: &[i8], scales: &[i8], d: usize, block: usize, out: &mut [f32]) {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: lengths validated by the public entry points.
+        SimdLevel::Avx2 => unsafe { kv_scale_i8_avx2(codes, scales, d, block, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: lengths validated by the public entry points.
+        SimdLevel::Neon => unsafe { kv_scale_i8_neon(codes, scales, d, block, out) },
+        _ => kv_scale_i8_scalar(codes, scales, d, block, out),
+    }
+}
+
+/// Scalar core (also the differential oracle): per row, per scale block,
+/// `out = code as f32 × 2^e`.
+fn kv_scale_i8_scalar(codes: &[i8], scales: &[i8], d: usize, block: usize, out: &mut [f32]) {
+    let sbr = d.div_ceil(block);
+    for (r, (orow, crow)) in out.chunks_exact_mut(d).zip(codes.chunks_exact(d)).enumerate() {
+        let srow = &scales[r * sbr..(r + 1) * sbr];
+        for (b, (ob, cb)) in orow.chunks_mut(block).zip(crow.chunks(block)).enumerate() {
+            let scale = crate::formats::exp2i(srow[b] as i32);
+            for (o, &c) in ob.iter_mut().zip(cb.iter()) {
+                *o = c as f32 * scale;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn kv_scale_i8_avx2(codes: &[i8], scales: &[i8], d: usize, block: usize, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let sbr = d.div_ceil(block);
+    let rows = out.len() / d;
+    for r in 0..rows {
+        let crow = codes.as_ptr().add(r * d);
+        let orow = out.as_mut_ptr().add(r * d);
+        for b in 0..sbr {
+            let scale = crate::formats::exp2i(*scales.get_unchecked(r * sbr + b) as i32);
+            let sv = _mm256_set1_ps(scale);
+            let end = d.min((b + 1) * block);
+            let mut i = b * block;
+            // 8 lanes: sign-extend i8 → i32, convert, multiply — each step
+            // exact, so vector and scalar results are bit-identical.
+            while i + 8 <= end {
+                let bytes = _mm_loadl_epi64(crow.add(i) as *const __m128i);
+                let f = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes));
+                _mm256_storeu_ps(orow.add(i), _mm256_mul_ps(f, sv));
+                i += 8;
+            }
+            while i < end {
+                *orow.add(i) = *crow.add(i) as f32 * scale;
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn kv_scale_i8_neon(codes: &[i8], scales: &[i8], d: usize, block: usize, out: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let sbr = d.div_ceil(block);
+    let rows = out.len() / d;
+    for r in 0..rows {
+        let crow = codes.as_ptr().add(r * d);
+        let orow = out.as_mut_ptr().add(r * d);
+        for b in 0..sbr {
+            let scale = crate::formats::exp2i(*scales.get_unchecked(r * sbr + b) as i32);
+            let end = d.min((b + 1) * block);
+            let mut i = b * block;
+            while i + 8 <= end {
+                let w = vmovl_s8(vld1_s8(crow.add(i)));
+                let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w)));
+                let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w)));
+                vst1q_f32(orow.add(i), vmulq_n_f32(lo, scale));
+                vst1q_f32(orow.add(i + 4), vmulq_n_f32(hi, scale));
+                i += 8;
+            }
+            while i < end {
+                *orow.add(i) = *crow.add(i) as f32 * scale;
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Scalar LUT core for minifloat codes.
+fn kv_lut_f32_scalar(
+    codes: &[u8],
+    scales: &[i8],
+    lut: &[f32],
+    d: usize,
+    block: usize,
+    out: &mut [f32],
+) {
+    let sbr = d.div_ceil(block);
+    for (r, (orow, crow)) in out.chunks_exact_mut(d).zip(codes.chunks_exact(d)).enumerate() {
+        let srow = &scales[r * sbr..(r + 1) * sbr];
+        for (b, (ob, cb)) in orow.chunks_mut(block).zip(crow.chunks(block)).enumerate() {
+            let scale = crate::formats::exp2i(srow[b] as i32);
+            for (o, &c) in ob.iter_mut().zip(cb.iter()) {
+                *o = lut[c as usize] * scale;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn kv_lut_f32_avx2(
+    codes: &[u8],
+    scales: &[i8],
+    lut: &[f32],
+    d: usize,
+    block: usize,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let sbr = d.div_ceil(block);
+    let rows = out.len() / d;
+    for r in 0..rows {
+        let crow = codes.as_ptr().add(r * d);
+        let orow = out.as_mut_ptr().add(r * d);
+        for b in 0..sbr {
+            let scale = crate::formats::exp2i(*scales.get_unchecked(r * sbr + b) as i32);
+            let sv = _mm256_set1_ps(scale);
+            let end = d.min((b + 1) * block);
+            let mut i = b * block;
+            // Gathered table loads fetch the identical f32 entries the
+            // scalar loop indexes, so the multiply stays bit-identical.
+            while i + 8 <= end {
+                let bytes = _mm_loadl_epi64(crow.add(i) as *const __m128i);
+                let idx = _mm256_cvtepu8_epi32(bytes);
+                let vals = _mm256_i32gather_ps::<4>(lut.as_ptr(), idx);
+                _mm256_storeu_ps(orow.add(i), _mm256_mul_ps(vals, sv));
+                i += 8;
+            }
+            while i < end {
+                *orow.add(i) = *lut.get_unchecked(*crow.add(i) as usize) * scale;
+                i += 1;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -435,5 +719,111 @@ mod tests {
         let mut acc16 = vec![10i16; 5];
         tile_mac_i16(&mut acc16, &[2, 3], &w16, 6);
         assert_eq!(acc16, vec![9, 8, 7, 6, 5]);
+    }
+
+    /// Random `rows × ceil(d/block)` scale rows spanning the full E8M0-ish
+    /// exponent range the KV encoder emits.
+    fn gen_scales(g: &mut Gen, rows: usize, d: usize, block: usize) -> Vec<i8> {
+        (0..rows * d.div_ceil(block))
+            .map(|_| (g.rng.range(0, 61) as i32 - 30) as i8)
+            .collect()
+    }
+
+    #[test]
+    fn prop_kv_dequant_i8_matches_portable_bit_exact() {
+        // The dispatched dequant (whatever this host runs) must produce
+        // bit-identical f32 rows to the scalar oracle at every row shape,
+        // including ragged final scale blocks and sub-lane widths.
+        run_cases("kv_dequant_i8 == portable", 48, |g: &mut Gen| {
+            let d = g.len(1, 80);
+            let block = g.len(1, 40);
+            let rows = g.len(1, 5);
+            let codes: Vec<u8> = (0..rows * d).map(|_| g.rng.range(0, 256) as u8).collect();
+            let scales = gen_scales(g, rows, d, block);
+            let mut fast = vec![0.0f32; rows * d];
+            let mut slow = vec![f32::NAN; rows * d];
+            kv_dequant_i8(&codes, &scales, d, block, &mut fast);
+            kv_dequant_i8_portable(&codes, &scales, d, block, &mut slow);
+            if fast.iter().zip(&slow).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("i8 mismatch (d={d} block={block} rows={rows})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_kv_dequant_i4_matches_portable_bit_exact() {
+        run_cases("kv_dequant_i4 == portable", 48, |g: &mut Gen| {
+            let d = g.len(1, 80);
+            let block = g.len(1, 40);
+            let rows = g.len(1, 5);
+            let row_bytes = crate::formats::pack::packed_len(d, 4);
+            let packed: Vec<u8> = (0..rows * row_bytes)
+                .map(|_| g.rng.range(0, 256) as u8)
+                .collect();
+            let scales = gen_scales(g, rows, d, block);
+            let mut fast = vec![0.0f32; rows * d];
+            let mut slow = vec![f32::NAN; rows * d];
+            kv_dequant_i4(&packed, &scales, d, block, &mut fast);
+            kv_dequant_i4_portable(&packed, &scales, d, block, &mut slow);
+            if fast.iter().zip(&slow).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("i4 mismatch (d={d} block={block} rows={rows})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_kv_dequant_fp8_matches_portable_bit_exact() {
+        let spec = crate::formats::FpSpec::new(4, 3);
+        let lut: Vec<f32> = (0..=255u8).map(|b| spec.decode(b)).collect();
+        run_cases("kv_dequant_fp8 == portable", 48, |g: &mut Gen| {
+            let d = g.len(1, 80);
+            let block = g.len(1, 40);
+            let rows = g.len(1, 5);
+            // Codes stay off the E4M3 NaN encodings (S.1111.111) the way
+            // the KV encoder guarantees, so bit-compare is meaningful.
+            let codes: Vec<u8> = (0..rows * d)
+                .map(|_| loop {
+                    let c = g.rng.range(0, 256) as u8;
+                    if c & 0x7f != 0x7f {
+                        break c;
+                    }
+                })
+                .collect();
+            let scales = gen_scales(g, rows, d, block);
+            let mut fast = vec![0.0f32; rows * d];
+            let mut slow = vec![f32::NAN; rows * d];
+            kv_dequant_fp8(&codes, &scales, &lut, d, block, &mut fast);
+            kv_dequant_fp8_portable(&codes, &scales, &lut, d, block, &mut slow);
+            if fast.iter().zip(&slow).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err(format!("fp8 mismatch (d={d} block={block} rows={rows})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kv_dequant_known_values() {
+        // d=4, block=2, one row: codes scale per 2-channel block.
+        let codes: Vec<u8> = [1i8, -2, 3, 127].iter().map(|&c| c as u8).collect();
+        let scales = [1i8, -1];
+        let mut out = [0.0f32; 4];
+        kv_dequant_i8(&codes, &scales, 4, 2, &mut out);
+        assert_eq!(out, [2.0, -4.0, 1.5, 63.5]);
+
+        // Nibble path: pack [-8, 7] into one byte, unit scale.
+        let packed = crate::formats::pack::pack(&[-8, 7], 4);
+        let mut out4 = [0.0f32; 2];
+        kv_dequant_i4(&packed, &[0i8], 2, 32, &mut out4);
+        assert_eq!(out4, [-8.0, 7.0]);
+
+        // LUT path: fp8 code 0 decodes to +0 regardless of scale.
+        let spec = crate::formats::FpSpec::new(4, 3);
+        let lut: Vec<f32> = (0..=255u8).map(|b| spec.decode(b)).collect();
+        let one = spec.quantize_code(1.0);
+        let mut outf = [9.0f32; 2];
+        kv_dequant_fp8(&[0u8, one], &[3i8], &lut, 2, 32, &mut outf);
+        assert_eq!(outf, [0.0, 8.0]);
     }
 }

@@ -509,6 +509,7 @@ impl<W: Deref<Target = NativeWeights>> ContinuousBatch<W> {
                 let d = spec.cache.kv_memory();
                 m.resident_bytes += d.resident_bytes;
                 m.resident_peak_bytes += d.resident_peak_bytes;
+                m.resident_f32_equiv_bytes += d.resident_f32_equiv_bytes;
                 m.dense_equivalent_bytes += d.dense_equivalent_bytes;
                 m.pool_bytes += d.pool_bytes;
                 m.used_pages += d.used_pages;

@@ -113,12 +113,14 @@ COMMANDS:
                                     (default) decodes through the paged KV
                                     cache [--backend native|pjrt]
                                     [--act f32|int8] [--kv-page N]
+                                    [--kv-format f32|mxint8|mxfp8|mxint4]
   convert --in P --format F --out Q Slice-and-Scale convert an anchor checkpoint
   inspect --checkpoint P            dump checkpoint metadata
   serve [--policy ladder] [--requests N] [--burst N] [--backend native|pjrt]
         [--checkpoint P] [--cache-mb N] [--act f32|int8] [--workers N]
         [--gen-requests N] [--gen-tokens N]
         [--batching continuous|gather] [--slots N] [--kv-page N]
+        [--kv-format f32|mxint8|mxfp8|mxint4]
         [--spec k=4,draft=mxint4[,policy=greedy|stochastic]]
         [--trace-out PATH] [--metrics-out PATH]
                                     run the elastic serving demo workload:
@@ -127,7 +129,10 @@ COMMANDS:
                                     generate lane defaults to continuous
                                     batching (per-row formats, mid-flight
                                     joins into --slots decode rows; KV paged
-                                    at --kv-page positions per page);
+                                    at --kv-page positions per page, stored
+                                    at --kv-format: f32 dense by default or
+                                    MX-coded int8/fp8/int4 pages that cut
+                                    resident KV ~4-8x);
                                     --batching gather restores the legacy
                                     grouped batched decode. --spec turns on
                                     self-speculative decoding: rows draft k
@@ -335,9 +340,11 @@ fn eval_pjrt(_args: &Args) -> Result<()> {
 /// `generate`'s solo decode) see the same page size. `--prefix-share` turns
 /// on content-addressed prefix reuse (and pins `MFQAT_PREFIX_SHARE` for the
 /// same reason), `--kv-retain` caps the prefix index's retained pages
-/// (pins `MFQAT_KV_RETAIN`), and `--kv-budget` caps each worker's
+/// (pins `MFQAT_KV_RETAIN`), `--kv-budget` caps each worker's
 /// worst-case page claims — under multiple continuous workers the server
-/// pools those budgets into one cross-worker page ledger.
+/// pools those budgets into one cross-worker page ledger — and
+/// `--kv-format` selects the K/V page storage format (f32 dense default,
+/// or MX-coded `mxint8`/`mxfp8`/`mxint4`; pins `MFQAT_KV_FORMAT`).
 fn kv_page_cfg(args: &Args) -> Result<mfqat::backend::KvPageCfg> {
     let mut cfg = match args.get("kv-page") {
         Some(v) => {
@@ -368,6 +375,12 @@ fn kv_page_cfg(args: &Args) -> Result<mfqat::backend::KvPageCfg> {
             .parse()
             .map_err(|_| anyhow!("--kv-budget expects an integer, got '{v}'"))?;
         cfg = cfg.budget(n);
+    }
+    if let Some(v) = args.get("kv-format") {
+        let f = mfqat::backend::KvFormat::parse(v)
+            .ok_or_else(|| anyhow!("--kv-format expects f32|mxint8|mxfp8|mxint4, got '{v}'"))?;
+        std::env::set_var("MFQAT_KV_FORMAT", f.name());
+        cfg = cfg.format(f);
     }
     Ok(cfg)
 }

@@ -262,13 +262,21 @@ impl Metrics {
             String::new()
         };
         let kv = if self.kv.total_pages > 0 {
+            // Quantized pools report true packed bytes; surface the format
+            // and the packed-vs-f32 compression so "resident" reads right.
+            let quant = if !self.kv.kv_format.is_empty() && self.kv.kv_format != "f32" {
+                format!(" fmt:{} x{:.1}", self.kv.kv_format, self.kv.compression_ratio())
+            } else {
+                String::new()
+            };
             format!(
-                " kv[resident:{}KB peak:{}KB dense:{}KB util:{:.0}% page:{}]",
+                " kv[resident:{}KB peak:{}KB dense:{}KB util:{:.0}% page:{}{}]",
                 self.kv_resident_bytes() / 1024,
                 self.kv_resident_peak_bytes / 1024,
                 self.kv.dense_equivalent_bytes / 1024,
                 self.kv_pool_utilization() * 100.0,
                 self.kv.page_positions,
+                quant,
             )
         } else {
             String::new()
@@ -337,6 +345,7 @@ pub struct FormatSpanHists {
 struct KvWorkerGauges {
     resident: Arc<Gauge>,
     peak: Arc<Gauge>,
+    f32_equiv: Arc<Gauge>,
     dense: Arc<Gauge>,
     pool: Arc<Gauge>,
     used_pages: Arc<Gauge>,
@@ -406,6 +415,10 @@ pub struct ServerObs {
     cache_used_bytes: Arc<Gauge>,
     kv_pool_peak: Arc<Gauge>,
     kv_workers: Vec<KvWorkerGauges>,
+    /// KV page format name last reported by any worker (every session in a
+    /// pool shares one `--kv-format`, so last-writer-wins is exact). Kept
+    /// outside the numeric gauge registry — it is a string label.
+    kv_format: RobustMutex<&'static str>,
     trace: Option<Arc<TraceSink>>,
     series: RobustMutex<Vec<SeriesSample>>,
     started: Instant,
@@ -424,6 +437,7 @@ impl ServerObs {
                 KvWorkerGauges {
                     resident: registry.gauge_with("kv_resident_bytes", &labels),
                     peak: registry.gauge_with("kv_resident_peak_bytes", &labels),
+                    f32_equiv: registry.gauge_with("kv_f32_equiv_bytes", &labels),
                     dense: registry.gauge_with("kv_dense_equivalent_bytes", &labels),
                     pool: registry.gauge_with("kv_pool_bytes", &labels),
                     used_pages: registry.gauge_with("kv_used_pages", &labels),
@@ -470,6 +484,7 @@ impl ServerObs {
             kv_pool_peak: registry.gauge("kv_pool_resident_peak_bytes"),
             kv_workers,
             trace: trace.then(|| Arc::new(TraceSink::new())),
+            kv_format: RobustMutex::new(""),
             series: RobustMutex::new(Vec::new()),
             started: Instant::now(),
             registry,
@@ -637,6 +652,7 @@ impl ServerObs {
         };
         w.resident.set(kv.resident_bytes as u64);
         w.peak.set_max(kv.resident_peak_bytes as u64);
+        w.f32_equiv.set(kv.resident_f32_equiv_bytes as u64);
         w.dense.set(kv.dense_equivalent_bytes as u64);
         w.pool.set(kv.pool_bytes as u64);
         w.used_pages.set(kv.used_pages as u64);
@@ -651,6 +667,9 @@ impl ServerObs {
         w.prefix_hits.set_max(kv.prefix_hits);
         w.prefill_tokens_saved.set_max(kv.prefill_tokens_saved);
         w.prefix_evictions.set_max(kv.prefix_evictions);
+        if !kv.kv_format.is_empty() {
+            *self.kv_format.lock() = kv.kv_format;
+        }
         let sum: u64 = self.kv_workers.iter().map(|g| g.resident.get()).sum();
         self.kv_pool_peak.set_max(sum);
     }
@@ -664,6 +683,7 @@ impl ServerObs {
         let mut max_peak = 0usize;
         for w in &self.kv_workers {
             kv.resident_bytes += w.resident.get() as usize;
+            kv.resident_f32_equiv_bytes += w.f32_equiv.get() as usize;
             kv.dense_equivalent_bytes += w.dense.get() as usize;
             kv.pool_bytes += w.pool.get() as usize;
             kv.used_pages += w.used_pages.get() as usize;
@@ -678,6 +698,7 @@ impl ServerObs {
             max_peak = max_peak.max(w.peak.get() as usize);
         }
         kv.resident_peak_bytes = max_peak;
+        kv.kv_format = *self.kv_format.lock();
         let pool_peak = (self.kv_pool_peak.get() as usize).max(max_peak);
         (kv, pool_peak)
     }
@@ -783,6 +804,9 @@ impl ServerObs {
         let mut k = Json::obj();
         k.set("resident_bytes", Json::from(kv.resident_bytes));
         k.set("resident_peak_bytes", Json::from(pool_peak));
+        k.set("resident_f32_equiv_bytes", Json::from(kv.resident_f32_equiv_bytes));
+        k.set("kv_format", Json::from(kv.kv_format));
+        k.set("compression_x", Json::from(kv.compression_ratio()));
         k.set("dense_equivalent_bytes", Json::from(kv.dense_equivalent_bytes));
         k.set("pool_bytes", Json::from(kv.pool_bytes));
         k.set("pool_utilization", Json::from(kv.utilization()));
@@ -916,6 +940,58 @@ mod tests {
         assert!(s.contains("kv[resident:2KB"), "{s}");
         assert!(s.contains("peak:10KB"), "{s}");
         assert!(s.contains("dense:32KB"), "{s}");
+    }
+
+    #[test]
+    fn quantized_kv_surfaces_format_and_compression() {
+        let mut m = Metrics::new();
+        m.set_kv(KvMemory {
+            resident_bytes: 2048,
+            resident_f32_equiv_bytes: 8192,
+            kv_format: "mxint8",
+            dense_equivalent_bytes: 32768,
+            used_pages: 2,
+            free_pages: 6,
+            total_pages: 8,
+            page_positions: 16,
+            ..Default::default()
+        });
+        let s = m.summary();
+        assert!(s.contains("fmt:mxint8"), "{s}");
+        assert!(s.contains("x4.0"), "{s}");
+        // f32 pools keep the pre-quantization line shape.
+        let mut m2 = Metrics::new();
+        m2.set_kv(KvMemory {
+            resident_bytes: 2048,
+            resident_f32_equiv_bytes: 2048,
+            kv_format: "f32",
+            total_pages: 8,
+            page_positions: 16,
+            ..Default::default()
+        });
+        assert!(!m2.summary().contains("fmt:"), "{}", m2.summary());
+    }
+
+    #[test]
+    fn server_obs_propagates_kv_format_and_f32_equiv() {
+        let obs = ServerObs::new(2, false);
+        obs.set_kv(
+            0,
+            KvMemory {
+                resident_bytes: 1024,
+                resident_f32_equiv_bytes: 4096,
+                kv_format: "mxint8",
+                used_pages: 1,
+                free_pages: 3,
+                total_pages: 4,
+                page_positions: 8,
+                ..Default::default()
+            },
+        );
+        let (kv, _) = obs.kv_aggregate();
+        assert_eq!(kv.resident_f32_equiv_bytes, 4096);
+        assert_eq!(kv.kv_format, "mxint8");
+        assert!((kv.compression_ratio() - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! | `--batching` | `continuous` (default) \| `gather` | Generate-lane batching for `serve`: continuous batching admits prompts into the in-flight decode every step with per-row formats; `gather` restores the legacy grouped batched decode. |
 //! | `--slots` | integer (default `0` = model `train_batch`) | Sequence rows in each serve worker's continuous decode session. |
 //! | `--kv-page` | integer ≥ 1 (default: `MFQAT_KV_PAGE`, else 64) | Positions per KV page for `serve`/`generate` decode caches (also pins `MFQAT_KV_PAGE` for the process). Resident KV memory tracks live context in pages of this size; tiny values (e.g. 8) force page boundaries mid-prompt/mid-decode, which CI uses to stress the paged walk. |
+//! | `--kv-format` | `f32` (default) \| `mxint8` \| `mxfp8` \| `mxint4` (also pins `MFQAT_KV_FORMAT`) | Storage format for `serve`/`generate` KV pages. `f32` keeps the dense arenas and stays bit-identical to pre-quantization behavior; the MX formats store packed codes plus one E8M0 scale per 32 channels (~3.9x / ~3.9x / ~7.3x smaller resident pages), dequantized through SIMD-dispatched kernels at the attention gather. Decode output then differs from f32-KV within the per-format parity tolerance (`rust/tests/kv_quant.rs`); page size stays bit-invisible at any fixed format. |
 //! | `--prefix-share` | bare flag (default off) | Content-addressed KV prefix sharing for `serve`/`generate` decode caches (pins `MFQAT_PREFIX_SHARE=1`): a row admitted with a prompt whose full-page prefix is already cached maps those pages read-only (refcounted) and skips their prefill; divergence copies-on-write. Sharing is bit-invisible — decoded tokens are identical with it on or off. |
 //! | `--kv-retain` | integer (default `0` = uncapped; pins `MFQAT_KV_RETAIN`) | Cap on pages the prefix index may retain for retired rows. Above the cap (or under pool pressure) the least-recently-used unshared entry is evicted; a later request for that prefix recomputes via prefill. Only meaningful with `--prefix-share`. |
 //! | `--kv-budget` | integer (default `0` = uncapped, `serve` only) | Worst-case KV page claims each worker may hold below its dense-equivalent pool. With several continuous workers the server pools `workers × budget` into one cross-worker page ledger: admission claims from the shared balance, so a worker under skewed load can fund rows from pages its idle peers are not using. |
@@ -35,6 +36,7 @@
 //! | `MFQAT_THREADS` | integer ≥ 1 | Pins the kernel worker-thread count (default: detected cores). Benches pin to 1 so pool scaling is not confounded by kernel fan-out. Read once per process. |
 //! | `MFQAT_SIMD` | `off`/`0`/`false`/`portable`/`none` | Forces the integer-MAC tile kernels onto the portable scalar loop (the differential-test oracle); any other value, or unset, keeps the runtime-detected AVX2/NEON dispatch. Read once per process. |
 //! | `MFQAT_KV_PAGE` | integer ≥ 1 (default 64) | Positions per KV-cache page wherever a sizing is not passed explicitly (`KvPageCfg::from_env`). Paging is bit-invisible to decode output — only residency granularity changes. CI runs a `MFQAT_KV_PAGE=8` test leg so page boundaries land mid-prompt and mid-decode. |
+//! | `MFQAT_KV_FORMAT` | `f32` (default) \| `mxint8` \| `mxfp8` \| `mxint4` | KV page storage format wherever a `KvPageCfg` is built from the environment (`KvPageCfg::from_env`) — same semantics as `--kv-format`. Unparsable values warn once and fall back to `f32`. |
 //! | `MFQAT_PREFIX_SHARE` | `1`/`true`/`on` (default off) | Turns on content-addressed KV prefix sharing wherever a `KvPageCfg` is built from the environment — same semantics as `--prefix-share`. Off by default: a non-sharing pool frees (and zeroes) every page the instant its row retires. |
 //! | `MFQAT_KV_RETAIN` | integer (default 0 = uncapped) | Retained-page cap for the prefix index (`KvPageCfg::from_env`) — same semantics as `--kv-retain`. |
 //! | `MFQAT_FAULT` | `;`-separated specs: `panic:worker=W,step=S` \| `stall:worker=W,step=S,ms=M` \| `shrink:worker=W,step=S,pages=P` | Deterministic fault injection for `serve` workers ([`crate::server::FaultPlan`]). Each spec fires at most once, at the first decode step / gather batch `>= S` on worker `W`: `panic` kills the worker body (the supervisor respawns it), `stall` sleeps the worker for `M` ms, `shrink` quarantines up to `P` free KV pages. Unset ⇒ no faults; parse errors are reported at server start. |

@@ -1,0 +1,472 @@
+//! Quantized KV pages: `--kv-format f32` must be **bit-identical** to the
+//! pre-quantization dense arenas, the MX formats must track the f32-KV
+//! decode within a per-format parity tolerance (int8 tightest, int4
+//! loosest), page size must stay **bit-invisible** at any fixed format
+//! (quantization is per position and 32-channel block, never per page),
+//! resident accounting must report true packed bytes, and every pool
+//! behavior built on page identity — prefix-share copy-on-write, the
+//! speculative `truncate_row` rollback, zero-on-release — must operate on
+//! code bytes exactly as it did on floats.
+
+use mfqat::backend::forward::{forward_cached, forward_cached_batch_mixed, KvCache, RowTag};
+use mfqat::backend::{ActMode, KvFormat, KvPageCfg, NativeWeights, SharedParams};
+use mfqat::eval::generate::{ContinuousBatch, FinishedRow, SampleCfg, SpecPolicy};
+use mfqat::formats::ElementFormat;
+use mfqat::model::{ModelDims, ParamSet};
+use std::sync::Arc;
+
+/// Byte-level prompts need the full 256-token vocab; tiny window so page
+/// boundaries and overflow re-prefills land fast.
+fn gen_dims() -> ModelDims {
+    let mut dims = ModelDims::new("kvqgen", 256, 32, 1, 2, 10);
+    dims.train_batch = 4;
+    dims
+}
+
+/// Small forward-level model (no text decode, vocab can stay tiny).
+fn fwd_dims() -> ModelDims {
+    let mut dims = ModelDims::new("kvqfwd", 64, 32, 2, 2, 12);
+    dims.train_batch = 2;
+    dims
+}
+
+fn anchor(dims: &ModelDims, seed: u64, fmt: ElementFormat) -> mfqat::checkpoint::Checkpoint {
+    let m = dims.to_manifest();
+    ParamSet::init(&m, seed).to_anchor_checkpoint(&m, fmt).unwrap()
+}
+
+/// One weight set per format over a single `Arc`'d f32 parameter set.
+fn shared_weight_sets(
+    dims: &ModelDims,
+    ck: &mfqat::checkpoint::Checkpoint,
+    formats: &[ElementFormat],
+    act: ActMode,
+) -> Vec<NativeWeights> {
+    let shared = Arc::new(SharedParams::from_checkpoint(dims, ck).unwrap());
+    formats
+        .iter()
+        .map(|&fmt| NativeWeights::packed_with_shared(dims, ck, fmt, shared.clone(), act).unwrap())
+        .collect()
+}
+
+/// Step a batch until every live row finishes, collecting completions.
+fn drain(cb: &mut ContinuousBatch<&NativeWeights>) -> Vec<FinishedRow> {
+    let mut done = Vec::new();
+    let mut steps = 0usize;
+    while cb.active() > 0 {
+        done.extend(cb.step().unwrap());
+        steps += 1;
+        assert!(steps < 1000, "decode did not converge");
+    }
+    done
+}
+
+/// Decode every prompt to completion through a `ContinuousBatch` over the
+/// given KV paging, returning the continuations in prompt order.
+fn run_batch(
+    dims: &ModelDims,
+    w: &NativeWeights,
+    prompts: &[&str],
+    kv: KvPageCfg,
+    n_tokens: usize,
+    cfg: &SampleCfg,
+) -> Vec<String> {
+    let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(dims, prompts.len(), kv);
+    let mut slot_of = Vec::new();
+    for p in prompts {
+        slot_of.push(cb.join(w, p, n_tokens, cfg).unwrap());
+    }
+    let mut out: Vec<Option<String>> = vec![None; prompts.len()];
+    for f in drain(&mut cb) {
+        let i = slot_of.iter().position(|&s| s == f.slot).unwrap();
+        out[i] = Some(f.text);
+    }
+    out.into_iter().map(|t| t.unwrap()).collect()
+}
+
+/// Prefill `prefix` then append `appends` one token at a time, returning
+/// every logit row the cache emitted (prefill rows first, then one row per
+/// append) — the multi-step cached-decode trace the parity oracles compare.
+fn decode_trace(w: &NativeWeights, kv: KvPageCfg, prefix: &[i32], appends: &[i32]) -> Vec<f32> {
+    let mut cache = KvCache::with_rows_cfg(&w.dims, 1, kv);
+    let mut out = forward_cached(w, &mut cache, prefix).unwrap();
+    for &t in appends {
+        out.extend(forward_cached(w, &mut cache, &[t]).unwrap());
+    }
+    out
+}
+
+/// Relative L2 distance `||a - b|| / ||b||` over a full logit trace.
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        num += (x as f64 - y as f64) * (x as f64 - y as f64);
+        den += y as f64 * y as f64;
+    }
+    (num / den.max(1e-12)).sqrt()
+}
+
+#[test]
+fn explicit_f32_kv_format_is_the_default_dense_path() {
+    // The compatibility oracle: `--kv-format f32` is not a near-miss of the
+    // pre-quantization pool, it IS that pool — logits bit-identical to a
+    // cfg that never mentions a format, 1.0x compression, and the packed
+    // arenas never engage.
+    let dims = fwd_dims();
+    let ck = anchor(&dims, 71, ElementFormat::int(8));
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let prefix: Vec<i32> = (0..7).map(|i| ((i * 5 + 3) % 64) as i32).collect();
+    let appends: Vec<i32> = (0..4).map(|i| ((i * 11 + 2) % 64) as i32).collect();
+    let default_trace = decode_trace(&w, KvPageCfg::with_page(4), &prefix, &appends);
+    let explicit = decode_trace(
+        &w,
+        KvPageCfg::with_page(4).format(KvFormat::F32),
+        &prefix,
+        &appends,
+    );
+    assert_eq!(explicit, default_trace, "explicit f32 kv-format drifted from the default");
+
+    let mut cache = KvCache::with_rows_cfg(&dims, 1, KvPageCfg::with_page(4).format(KvFormat::F32));
+    forward_cached(&w, &mut cache, &prefix).unwrap();
+    let m = cache.kv_memory();
+    assert_eq!(m.kv_format, "f32");
+    assert_eq!(m.resident_bytes, m.resident_f32_equiv_bytes, "f32 pages are their own dense size");
+    assert_eq!(m.compression_ratio(), 1.0);
+}
+
+#[test]
+fn quantized_decode_tracks_f32_within_per_format_tolerance() {
+    // The parity-tolerance oracle the tentpole promises: a multi-step
+    // cached decode over MX-coded pages lands within a per-format bound of
+    // the f32-KV trace — int8 tightest, fp8 mid, int4 loosest — and never
+    // produces a non-finite logit. Bounds are deliberately generous (the
+    // per-element code error is amplified through two attention layers);
+    // what they rule out is wrong-scale/wrong-block decode, not noise.
+    let dims = fwd_dims();
+    let ck = anchor(&dims, 72, ElementFormat::int(8));
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let prefix: Vec<i32> = (0..7).map(|i| ((i * 7 + 1) % 64) as i32).collect();
+    let appends: Vec<i32> = (0..4).map(|i| ((i * 13 + 5) % 64) as i32).collect();
+    let dense = decode_trace(&w, KvPageCfg::with_page(4), &prefix, &appends);
+    for (fmt, tol) in [
+        (KvFormat::MxInt8, 0.12),
+        (KvFormat::MxFp8, 0.35),
+        (KvFormat::MxInt4, 0.75),
+    ] {
+        let quant = decode_trace(&w, KvPageCfg::with_page(4).format(fmt), &prefix, &appends);
+        assert!(quant.iter().all(|v| v.is_finite()), "{}: non-finite logit", fmt.name());
+        let err = rel_l2(&quant, &dense);
+        assert!(
+            err <= tol,
+            "{}: quantized decode drifted {err:.4} from f32 KV (tolerance {tol})",
+            fmt.name()
+        );
+    }
+}
+
+#[test]
+fn quantized_pages_account_packed_bytes_and_compression() {
+    // `kv_resident_bytes` must report what the packed arenas actually hold:
+    // pages × (code bytes + one E8M0 scale byte per 32 channels), with the
+    // dense-equivalent mirrored in `resident_f32_equiv_bytes` so the
+    // compression ratio is exact — ~3.9x for the 8-bit codes, ~7.3x for
+    // int4 at d=32 (one scale byte per 32-channel block).
+    let dims = fwd_dims();
+    let ck = anchor(&dims, 73, ElementFormat::int(8));
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let toks: Vec<i32> = (0..6).map(|i| ((i * 3 + 1) % 64) as i32).collect();
+    let pp = 4usize;
+    let f32_page = 2 * dims.n_layers * pp * dims.d_model * std::mem::size_of::<f32>();
+    for (fmt, min_ratio) in [
+        (KvFormat::MxInt8, 3.5),
+        (KvFormat::MxFp8, 3.5),
+        (KvFormat::MxInt4, 7.0),
+    ] {
+        let mut cache = KvCache::with_rows_cfg(&dims, 1, KvPageCfg::with_page(pp).format(fmt));
+        forward_cached(&w, &mut cache, &toks).unwrap();
+        let m = cache.kv_memory();
+        assert_eq!(m.used_pages, 2, "6 positions at 4/page map 2 pages");
+        let quant_page = dims.n_layers * pp * fmt.bytes_per_position(dims.d_model);
+        assert_eq!(
+            m.resident_bytes,
+            2 * quant_page,
+            "{}: resident bytes must be the packed page size",
+            fmt.name()
+        );
+        assert_eq!(m.resident_f32_equiv_bytes, 2 * f32_page, "{}", fmt.name());
+        assert_eq!(m.kv_format, fmt.name());
+        assert!(
+            m.compression_ratio() >= min_ratio,
+            "{}: compression {:.2} below {min_ratio}",
+            fmt.name(),
+            m.compression_ratio()
+        );
+        // Truncate-to-zero drops residency like the dense pool does.
+        cache.truncate(0);
+        assert_eq!(cache.kv_memory().resident_bytes, 0);
+    }
+}
+
+#[test]
+fn quantized_page_size_is_bit_invisible_at_fixed_format() {
+    // Quantization is per (position, 32-channel block) — page boundaries
+    // never land inside a scale group — so at any fixed kv-format the page
+    // size must stay exactly as invisible as it is for f32: bit-identical
+    // logit traces at the forward level, identical tokens through the
+    // continuous-batching text decode (overflow re-prefills included).
+    let dims = fwd_dims();
+    let ck = anchor(&dims, 74, ElementFormat::int(8));
+    let w = NativeWeights::packed_from_checkpoint(&dims, &ck, ElementFormat::int(8)).unwrap();
+    let prefix: Vec<i32> = (0..7).map(|i| ((i * 9 + 4) % 64) as i32).collect();
+    let appends: Vec<i32> = (0..4).map(|i| ((i * 5 + 2) % 64) as i32).collect();
+    for fmt in [KvFormat::MxInt8, KvFormat::MxFp8, KvFormat::MxInt4] {
+        let dense =
+            decode_trace(&w, KvPageCfg::with_page(dims.seq_len).format(fmt), &prefix, &appends);
+        for pp in [1usize, 3, 4] {
+            let paged = decode_trace(&w, KvPageCfg::with_page(pp).format(fmt), &prefix, &appends);
+            assert_eq!(paged, dense, "{} pp={pp}: page size leaked into logits", fmt.name());
+        }
+    }
+
+    // Text-level: the full serve decode path over quantized pages.
+    let gdims = gen_dims();
+    let gck = anchor(&gdims, 75, ElementFormat::int(8));
+    let gw = NativeWeights::packed_from_checkpoint(&gdims, &gck, ElementFormat::int(8)).unwrap();
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 6,
+        seed: 9,
+    };
+    let prompts = ["kova", "the color of kova is violet"];
+    let n_tokens = 2 * gdims.seq_len; // past the window: forced overflow
+    let dense = run_batch(
+        &gdims,
+        &gw,
+        &prompts,
+        KvPageCfg::with_page(gdims.seq_len).format(KvFormat::MxInt8),
+        n_tokens,
+        &cfg,
+    );
+    for pp in [3usize, 4] {
+        let paged = run_batch(
+            &gdims,
+            &gw,
+            &prompts,
+            KvPageCfg::with_page(pp).format(KvFormat::MxInt8),
+            n_tokens,
+            &cfg,
+        );
+        assert_eq!(paged, dense, "mxint8 pp={pp} changed decode output");
+    }
+}
+
+#[test]
+fn cow_on_packed_pages_preserves_co_holders() {
+    // Copy-on-write over code bytes, with exact packed refcount accounting:
+    // a row that truncates back *into* a shared quantized page and appends
+    // divergent tokens gets a private partial-page copy of the codes and
+    // scales, while the original page — still visible to the other row and
+    // the index — is never touched. Oracles are fresh caches at the SAME
+    // kv-format: sharing must be bit-invisible within the quantized world.
+    let dims = fwd_dims();
+    let ck = anchor(&dims, 76, ElementFormat::int(8));
+    let ws = shared_weight_sets(&dims, &ck, &[ElementFormat::int(8)], ActMode::F32);
+    let w = &ws[0];
+    let vocab = dims.vocab;
+    let kv = KvPageCfg::with_page(4).format(KvFormat::MxInt8);
+    let page_bytes = dims.n_layers * 4 * KvFormat::MxInt8.bytes_per_position(dims.d_model);
+    let mut cache = KvCache::with_slots_cfg(&dims, 2, kv.share(true));
+    let total = cache.total_pages();
+
+    // Row 0 prefills an 8-token window (2 full pages) and indexes it.
+    let win: Vec<i32> = (0..8).map(|i| ((i * 5 + 3) % 64) as i32).collect();
+    let (r0, sh0) = cache.join_row_prefix(RowTag::of(w), &win).unwrap();
+    assert_eq!((r0, sh0), (0, 0), "empty index shares nothing");
+    let l0 = forward_cached_batch_mixed(&[w, w], &mut cache, &[&win, &[]]).unwrap();
+    cache.register_prefix(0, &win);
+    assert_eq!(cache.kv_memory().retained_pages, 2);
+
+    // Row 1 joins the same window: one full page is shareable, and its
+    // prefilled tail logits equal row 0's — the shared page's packed codes
+    // dequantize to exactly what prefill would have written.
+    let (r1, sh1) = cache.join_row_prefix(RowTag::of(w), &win).unwrap();
+    assert_eq!((r1, sh1), (1, 4), "one of two pages is shareable");
+    // Page 0: row0 + index + row1 = 3 refs (2 extra); page 1: row0 +
+    // index = 2 refs (1 extra) — counted at the PACKED page size.
+    assert_eq!(cache.kv_memory().shared_bytes, 3 * page_bytes);
+    let l1 = forward_cached_batch_mixed(&[w, w], &mut cache, &[&[], &win[4..]]).unwrap();
+    assert_eq!(
+        l1,
+        l0[4 * vocab..].to_vec(),
+        "decoding over a shared packed page diverged from the prefilled original"
+    );
+
+    // Row 1 rolls back into the shared page and appends divergent tokens:
+    // the mid-page copy-on-write gives it a private page holding just the
+    // 2 retained positions' codes.
+    cache.truncate_row(r1, 2);
+    let div: Vec<i32> = vec![(win[2] + 1) % 64, 7, 9];
+    let l1b = forward_cached_batch_mixed(&[w, w], &mut cache, &[&[], &div]).unwrap();
+    let mut hist = win[..2].to_vec();
+    hist.extend_from_slice(&div);
+    let mut fresh = KvCache::with_rows_cfg(&dims, 1, kv);
+    let oracle = forward_cached(w, &mut fresh, &hist).unwrap();
+    assert_eq!(
+        l1b,
+        oracle[2 * vocab..].to_vec(),
+        "post-divergence decode must match a quantized cache that never shared"
+    );
+    assert_eq!(cache.kv_memory().shared_bytes, 2 * page_bytes);
+
+    // Row 0 still sees pristine codes: its next decode equals a fresh
+    // replay of its full history.
+    let probe = [11i32];
+    let l0b = forward_cached_batch_mixed(&[w, w], &mut cache, &[&probe, &[]]).unwrap();
+    let mut h0 = win.clone();
+    h0.push(probe[0]);
+    let mut fresh0 = KvCache::with_rows_cfg(&dims, 1, kv);
+    let o0 = forward_cached(w, &mut fresh0, &h0).unwrap();
+    assert_eq!(l0b, o0[8 * vocab..].to_vec(), "COW mutated a packed page another row could see");
+
+    cache.retire_row(r0);
+    cache.retire_row(r1);
+    cache.clear_prefix_index();
+    let m = cache.kv_memory();
+    assert_eq!((m.used_pages, m.free_pages), (0, total), "pages leaked");
+    assert_eq!(m.shared_bytes, 0);
+}
+
+#[test]
+fn prop_truncate_rollback_replays_exactly_on_quantized_pages() {
+    // Property over the speculative-rollback primitive on packed pages:
+    // `truncate_row` at any row count keeps the free list consistent with
+    // the per-row lengths, truncate-to-zero returns the pool to baseline,
+    // and a rolled-back row re-decodes bit-identically to a same-format
+    // cache that never held the discarded positions — quantization is
+    // per-position, so overwriting a row's codes leaves no trace of what
+    // the block previously encoded.
+    let dims = fwd_dims();
+    let ck = anchor(&dims, 77, ElementFormat::int(8));
+    let ws = shared_weight_sets(&dims, &ck, &[ElementFormat::int(8)], ActMode::F32);
+    let w = &ws[0];
+    let formats = [KvFormat::MxInt8, KvFormat::MxFp8, KvFormat::MxInt4];
+    mfqat::util::props::run_cases("kv_quant_rollback", 6, |g| {
+        let pp = 1 + g.rng.below(4); // 1..=4 positions per page
+        let fmt = formats[g.rng.below(formats.len())];
+        let rows = 2 + g.rng.below(2); // 2..=3 rows
+        let kv = KvPageCfg::with_page(pp).format(fmt);
+        let mut cache = KvCache::with_rows_cfg(&dims, rows, kv);
+        let total = cache.kv_memory().total_pages;
+        let wrefs: Vec<&NativeWeights> = (0..rows).map(|_| w).collect();
+        let mut hist: Vec<Vec<i32>> = Vec::new();
+        for _ in 0..rows {
+            let n = 1 + g.rng.below(4);
+            hist.push((0..n).map(|_| g.rng.below(dims.vocab) as i32).collect());
+        }
+        let feeds: Vec<Vec<i32>> = hist.clone();
+        let slices: Vec<&[i32]> = feeds.iter().map(|t| t.as_slice()).collect();
+        forward_cached_batch_mixed(&wrefs, &mut cache, &slices).map_err(|e| e.to_string())?;
+        for _ in 0..g.rng.range(4, 10) {
+            let r = g.rng.below(rows);
+            if g.rng.chance(0.5) && hist[r].len() + 1 < dims.seq_len {
+                let t = g.rng.below(dims.vocab) as i32;
+                hist[r].push(t);
+                let one = [t];
+                let mut slices: Vec<&[i32]> = vec![&[]; rows];
+                slices[r] = &one;
+                forward_cached_batch_mixed(&wrefs, &mut cache, &slices)
+                    .map_err(|e| e.to_string())?;
+            } else {
+                let keep = g.rng.below(hist[r].len() + 1);
+                cache.truncate_row(r, keep);
+                hist[r].truncate(keep);
+            }
+            let m = cache.kv_memory();
+            let mapped: usize = hist.iter().map(|h| h.len().div_ceil(pp)).sum();
+            if m.used_pages != mapped || m.used_pages + m.free_pages != total {
+                return Err(format!(
+                    "{} pp={pp}: free list drifted: {} used (want {mapped}), {} free of {total}",
+                    fmt.name(),
+                    m.used_pages,
+                    m.free_pages
+                ));
+            }
+        }
+        // Truncate-to-zero on every row returns the pool to baseline…
+        for r in 0..rows {
+            cache.truncate_row(r, 0);
+        }
+        let m = cache.kv_memory();
+        if m.used_pages != 0 || m.free_pages != total || m.resident_bytes != 0 {
+            return Err(format!(
+                "{} pp={pp}: truncate-to-zero leaked: {} used, {} free of {total}",
+                fmt.name(),
+                m.used_pages,
+                m.free_pages
+            ));
+        }
+        // …and a re-fed row is bit-identical to a fresh never-truncated
+        // same-format cache — the discarded codes left no trace.
+        let probe: Vec<i32> = (0..5).map(|i| ((i * 13 + 2) % dims.vocab) as i32).collect();
+        let r = g.rng.below(rows);
+        let mut slices: Vec<&[i32]> = vec![&[]; rows];
+        slices[r] = &probe;
+        let replay =
+            forward_cached_batch_mixed(&wrefs, &mut cache, &slices).map_err(|e| e.to_string())?;
+        let mut fresh = KvCache::with_rows_cfg(&dims, 1, kv);
+        let solo = forward_cached(w, &mut fresh, &probe).map_err(|e| e.to_string())?;
+        if replay != solo {
+            return Err(format!(
+                "{} pp={pp}: post-truncate decode diverged from a fresh cache",
+                fmt.name()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spec_decode_rollback_is_token_identical_on_quantized_kv() {
+    // Self-speculative decoding over quantized pages: the verify pass
+    // writes each drafted position's codes before any query reads them, so
+    // multi-position verification sees exactly the quantized rows a plain
+    // one-token-at-a-time decode would — greedy speculation must therefore
+    // stay token-identical to the plain decode AT THE SAME kv-format, with
+    // rejected drafts rolled back through `truncate_row` on packed pages.
+    let dims = gen_dims();
+    let ck = anchor(&dims, 78, ElementFormat::int(8));
+    let ws = shared_weight_sets(
+        &dims,
+        &ck,
+        &[ElementFormat::int(8), ElementFormat::int(4)],
+        ActMode::F32,
+    );
+    let (verify, draft) = (&ws[0], &ws[1]);
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 6,
+        seed: 9,
+    };
+    for fmt in [KvFormat::MxInt8, KvFormat::MxInt4] {
+        let kv = KvPageCfg::with_page(4).format(fmt);
+        let plain = run_batch(&dims, verify, &["the colors"], kv, 8, &cfg);
+        let mut cb: ContinuousBatch<&NativeWeights> = ContinuousBatch::with_kv(&dims, 1, kv);
+        let s = cb
+            .join_spec(verify, draft, "the colors", 8, &cfg, 3, SpecPolicy::Greedy)
+            .unwrap();
+        let done = drain(&mut cb);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].slot, s);
+        assert!(done[0].spec_drafted > 0, "{}: the row never drafted", fmt.name());
+        assert_eq!(
+            done[0].text,
+            plain[0],
+            "{}: greedy speculation changed tokens on quantized KV",
+            fmt.name()
+        );
+        let m = cb.kv_memory();
+        assert_eq!((m.used_pages, m.free_pages), (0, m.total_pages), "pages leaked");
+    }
+}
